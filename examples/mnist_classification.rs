@@ -1,0 +1,42 @@
+//! Fig. 3 workload in miniature: digit classification (784×10 dense +
+//! softmax) under Mem-AOP-GD, via the AOT/PJRT path, on a reduced
+//! synthetic-digit corpus.
+//!
+//! Exercises the two-phase HLO protocol end-to-end: `fwd_score` artifact
+//! → Rust policy decision → `apply` artifact, plus chunked validation.
+
+use anyhow::Result;
+use mem_aop_gd::aop::Policy;
+use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig};
+use mem_aop_gd::coordinator::experiment;
+
+fn main() -> Result<()> {
+    let scale = 0.05; // 3000 train / 500 val synthetic digits
+    for (policy, k, memory, label) in [
+        (Policy::Exact, 64, false, "baseline (exact)"),
+        (Policy::TopK, 16, true, "topK,   K=16/64, memory"),
+        (Policy::TopK, 16, false, "topK,   K=16/64, no mem"),
+        (Policy::RandK, 16, true, "randK,  K=16/64, memory"),
+        (Policy::WeightedK, 16, true, "wgtK,   K=16/64, memory"),
+    ] {
+        let mut cfg = ExperimentConfig::mnist_preset();
+        cfg.backend = Backend::Hlo;
+        cfg.policy = policy;
+        cfg.k = k;
+        cfg.memory = memory;
+        cfg.epochs = 8;
+        cfg.data_scale = scale;
+        let r = experiment::run(&cfg)?;
+        println!(
+            "{label:28} val CCE {:.4}  val acc {:.3}  backward FLOPs {:.2e}",
+            r.final_val_loss(),
+            r.curve.final_val_acc(),
+            r.curve.total_backward_flops() as f64
+        );
+    }
+    println!(
+        "\n(paper shape: the K=16 Mem-AOP-GD variants track the baseline\n\
+         closely at a quarter of the weight-gradient cost — Fig. 3, middle)"
+    );
+    Ok(())
+}

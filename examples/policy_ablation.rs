@@ -1,0 +1,107 @@
+//! Ablation: how the pieces of Mem-AOP-GD contribute (DESIGN.md's design
+//! choices, exercised as an experiment):
+//!
+//! 1. selection policy (topK vs randK vs weightedK vs weightedK-with-
+//!    replacement + unbiased scaling),
+//! 2. error-feedback memory on/off,
+//! 3. compression level K,
+//! 4. seed sensitivity (3 seeds per cell).
+//!
+//! Runs on the native backend for speed; prints a tail-mean val-loss grid.
+
+use anyhow::Result;
+use mem_aop_gd::aop::Policy;
+use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig};
+use mem_aop_gd::coordinator::sweep;
+use mem_aop_gd::metrics::print_table;
+
+fn main() -> Result<()> {
+    let policies = [
+        Policy::TopK,
+        Policy::RandK,
+        Policy::WeightedK,
+        Policy::WeightedKReplacement,
+    ];
+    let seeds = [0u64, 1, 2];
+
+    let mut configs = Vec::new();
+    for &k in &[18usize, 9, 3] {
+        for &p in &policies {
+            for &mem in &[true, false] {
+                for &seed in &seeds {
+                    let mut c = ExperimentConfig::energy_preset();
+                    c.backend = Backend::Native;
+                    c.epochs = 60;
+                    c.policy = p;
+                    c.k = k;
+                    c.memory = mem;
+                    c.seed = seed;
+                    configs.push(c);
+                }
+            }
+        }
+    }
+    // plus the baseline per seed
+    for &seed in &seeds {
+        let mut c = ExperimentConfig::energy_preset();
+        c.backend = Backend::Native;
+        c.epochs = 60;
+        c.seed = seed;
+        configs.push(c);
+    }
+
+    eprintln!("running {} experiments...", configs.len());
+    let results = sweep::run_sweep(&configs, 0usize.max(8));
+
+    // aggregate: mean tail loss over seeds per (k, policy, mem)
+    let mut rows = Vec::new();
+    let cell = |k: usize, p: Option<Policy>, mem: bool| -> String {
+        let vals: Vec<f32> = results
+            .iter()
+            .filter_map(|r| r.as_ref().ok())
+            .filter(|r| match p {
+                Some(p) => {
+                    r.config.policy == p && r.config.k == k && r.config.memory == mem
+                }
+                None => r.config.policy == Policy::Exact,
+            })
+            .map(|r| r.curve.tail_mean_val_loss(5))
+            .collect();
+        if vals.is_empty() {
+            return "--".into();
+        }
+        let mean = vals.iter().sum::<f32>() / vals.len() as f32;
+        let sd = (vals.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / vals.len() as f32)
+            .sqrt();
+        format!("{mean:.4}±{sd:.4}")
+    };
+
+    for &k in &[18usize, 9, 3] {
+        rows.push(vec![
+            format!("K={k}"),
+            cell(k, Some(Policy::TopK), true),
+            cell(k, Some(Policy::TopK), false),
+            cell(k, Some(Policy::RandK), true),
+            cell(k, Some(Policy::RandK), false),
+            cell(k, Some(Policy::WeightedK), true),
+            cell(k, Some(Policy::WeightedKReplacement), true),
+        ]);
+    }
+    rows.push(vec![
+        "baseline".into(),
+        cell(0, None, false),
+        "".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+    ]);
+    print_table(
+        &[
+            "", "topk+mem", "topk", "randk+mem", "randk", "wgtk+mem", "wgtk-repl+mem",
+        ],
+        &rows,
+    );
+    println!("\n(tail-mean val MSE over the last 5 epochs, mean±sd over 3 seeds)");
+    Ok(())
+}

@@ -1,0 +1,202 @@
+"""AOT compiler: lower every Layer-2 graph to HLO *text* + manifest.json.
+
+Run once by ``make artifacts``; the Rust binary is self-contained afterwards.
+
+HLO text (NOT ``lowered.compiler_ir(...).serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+The manifest records, for every artifact, the positional input and output
+specs (name/shape/dtype) so the Rust runtime can validate literals before
+execution and size its buffers without parsing HLO.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, name):
+    return {"name": name, "shape": list(shape), "dtype": "f32"}
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def lower_artifact(fn, in_specs, out_names, out_dir, name):
+    """Lower ``fn`` against ``in_specs`` and write ``<name>.hlo.txt``.
+
+    Returns the manifest entry for the artifact.
+    """
+    args = [f32(s["shape"]) for s in in_specs]
+    # keep_unused: variants that ignore e.g. their noise inputs must still
+    # expose them positionally — the Rust runtime feeds every manifest input
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    # output shapes from the jax lowering itself (authoritative)
+    out_avals = lowered.out_info
+    flat, _ = jax.tree_util.tree_flatten(out_avals)
+    outs = [spec(a.shape, n) for a, n in zip(flat, out_names)]
+    assert len(flat) == len(out_names), (name, len(flat), len(out_names))
+    return {
+        "file": fname,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "inputs": in_specs,
+        "outputs": outs,
+    }
+
+
+def task_artifacts(task, out_dir):
+    cfg = model.TASKS[task]
+    m, n, p = cfg["batch"], cfg["n_in"], cfg["n_out"]
+    arts = {}
+
+    arts[f"{task}_fwd_score"] = lower_artifact(
+        model.fwd_score(task),
+        [
+            spec((m, n), "x"),
+            spec((m, p), "y"),
+            spec((n, p), "w"),
+            spec((p,), "b"),
+            spec((m, n), "mem_x"),
+            spec((m, p), "mem_g"),
+            spec((), "eta"),
+        ],
+        ["loss", "xhat", "ghat", "db", "scores"],
+        out_dir,
+        f"{task}_fwd_score",
+    )
+    arts[f"{task}_apply"] = lower_artifact(
+        model.apply_update(task),
+        [
+            spec((m, n), "xhat"),
+            spec((m, p), "ghat"),
+            spec((n, p), "w"),
+            spec((p,), "b"),
+            spec((p,), "db"),
+            spec((m,), "sel_scale"),
+            spec((m,), "keep"),
+        ],
+        ["w_new", "b_new", "mem_x_new", "mem_g_new", "wstar_fro"],
+        out_dir,
+        f"{task}_apply",
+    )
+    # fused single-dispatch deployment step (topK + memory, the paper's
+    # strongest configuration) — §Perf dispatch-count ablation
+    k_fused = {"energy": 18, "mnist": 32}[task]
+    arts[f"{task}_fused_topk_mem"] = lower_artifact(
+        model.fused_step(task, "topk", True, k_fused),
+        [
+            spec((m, n), "x"),
+            spec((m, p), "y"),
+            spec((n, p), "w"),
+            spec((p,), "b"),
+            spec((m, n), "mem_x"),
+            spec((m, p), "mem_g"),
+            spec((m,), "noise"),
+            spec((), "eta"),
+        ],
+        ["loss", "w_new", "b_new", "mem_x_new", "mem_g_new"],
+        out_dir,
+        f"{task}_fused_topk_mem",
+    )
+    eb = cfg["eval_batch"]
+    arts[f"{task}_eval"] = lower_artifact(
+        model.evaluate(task),
+        [spec((eb, n), "x"), spec((eb, p), "y"), spec((n, p), "w"), spec((p,), "b")],
+        ["loss", "acc"],
+        out_dir,
+        f"{task}_eval",
+    )
+    return arts
+
+
+def mlp_artifacts(out_dir):
+    arts = {}
+    variants = [
+        ("mlp_exact", "exact", False),
+        ("mlp_topk_mem", "topk", True),
+        ("mlp_topk_nomem", "topk", False),
+        ("mlp_randk_mem", "randk", True),
+        ("mlp_weightedk_mem", "weightedk", True),
+    ]
+    for name, policy, memory in variants:
+        fn, layers, batch, nl = model.mlp_train_step(policy, memory)
+        ins = [spec((batch, layers[0]), "x"), spec((batch, layers[-1]), "y")]
+        ins += [spec((layers[i], layers[i + 1]), f"w{i}") for i in range(nl)]
+        ins += [spec((layers[i + 1],), f"b{i}") for i in range(nl)]
+        ins += [spec((batch, layers[i]), f"mx{i}") for i in range(nl)]
+        ins += [spec((batch, layers[i + 1]), f"mg{i}") for i in range(nl)]
+        ins += [spec((batch,), f"noise{i}") for i in range(nl)]
+        ins += [spec((), "eta")]
+        outs = ["loss", "acc"]
+        outs += [f"w{i}_new" for i in range(nl)]
+        outs += [f"b{i}_new" for i in range(nl)]
+        outs += [f"mx{i}_new" for i in range(nl)]
+        outs += [f"mg{i}_new" for i in range(nl)]
+        arts[name] = lower_artifact(fn, ins, outs, out_dir, name)
+
+    fn, layers, batch, nl = model.mlp_eval()
+    ins = [spec((batch, layers[0]), "x"), spec((batch, layers[-1]), "y")]
+    ins += [spec((layers[i], layers[i + 1]), f"w{i}") for i in range(nl)]
+    ins += [spec((layers[i + 1],), f"b{i}") for i in range(nl)]
+    arts["mlp_eval"] = lower_artifact(fn, ins, ["loss", "acc"], out_dir, "mlp_eval")
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts go to its directory")
+    args = ap.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+
+    arts = {}
+    for task in model.TASKS:
+        arts.update(task_artifacts(task, out_dir))
+        print(f"lowered task '{task}' ({len(arts)} artifacts so far)")
+    arts.update(mlp_artifacts(out_dir))
+    print(f"lowered mlp variants ({len(arts)} artifacts total)")
+
+    manifest = {
+        "version": 1,
+        "tasks": model.TASKS,
+        "mlp": {
+            "layers": model.MLP_LAYERS,
+            "batch": model.MLP_BATCH,
+            "k": model.MLP_K,
+        },
+        "artifacts": arts,
+    }
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(arts)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Layer-1 Pallas kernel: masked scaled outer-product accumulation (AOP).
+
+This is the computational hot-spot of Mem-AOP-GD (alg. line 6):
+
+    Ŵ*[n, p] = sum_m  s[m] * X[m, n] * G[m, p]
+
+i.e. the sum of the K *selected* rank-1 outer products of eq. (4)/(5), with
+selection and the optional unbiased ``1/(p_k K)`` weighting folded into the
+per-row scale vector ``s`` (``s[m] = 0`` for unselected rows).
+
+TPU mapping (DESIGN.md §8 Hardware-Adaptation): the output (N, P) tile is
+*stationary* in VMEM while the M (batch/outer-product) axis is streamed
+through the MXU as a contraction — ``(X * s)^T @ G`` on each block triple.
+On a real TPU the selected rows would first be *compacted* into dense
+(K, bn)/(K, bp) VMEM tiles so the contraction length is K, realising the
+paper's K/M FLOP reduction; under ``interpret=True`` (mandatory on CPU
+PJRT) we keep mask semantics, which is bit-identical numerically.
+
+The kernel tiles the output over a (N/bn, P/bp, M/bm) grid with the M axis
+innermost and accumulates into the stationary output block — the classic
+double-buffered reduction schedule Pallas emits for ``BlockSpec`` grids.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _divisor_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``target`` (>= 1).
+
+    Pallas grids are cleanest when block shapes divide the array shape; our
+    shapes are static at trace time so we simply pick a dividing block.
+    """
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _aop_kernel(x_ref, g_ref, s_ref, o_ref):
+    """One (bn, bp) output block: accumulate ``(x * s)^T @ g`` over M blocks."""
+    m_idx = pl.program_id(2)
+
+    @pl.when(m_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (bm, bn)
+    g = g_ref[...]  # (bm, bp)
+    s = s_ref[...]  # (bm, 1)
+    # Row-scale then contract over the bm axis on the MXU.
+    o_ref[...] += jnp.dot(
+        (x * s).T, g, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bp"))
+def aop_outer(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    s: jnp.ndarray,
+    *,
+    bm: int = 512,
+    bn: int = 1024,
+    bp: int = 1024,
+) -> jnp.ndarray:
+    """Masked scaled outer-product sum via Pallas.
+
+    Args:
+      x: ``(M, N)`` float32 — memory-folded activations ``X̂``.
+      g: ``(M, P)`` float32 — memory-folded output gradients ``Ĝ``.
+      s: ``(M,)`` float32 — per-row selection scale (0 = row not selected).
+      bm/bn/bp: target block sizes (clamped to dividing blocks).
+
+    Returns:
+      ``(N, P)`` float32 approximate weight gradient.
+    """
+    m, n = x.shape
+    m2, p = g.shape
+    assert m == m2 and s.shape == (m,), (x.shape, g.shape, s.shape)
+    bm = _divisor_block(m, bm)
+    bn = _divisor_block(n, bn)
+    bp = _divisor_block(p, bp)
+    s2 = s.reshape(m, 1).astype(jnp.float32)
+
+    grid = (n // bn, p // bp, m // bm)
+    return pl.pallas_call(
+        _aop_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bm, bp), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bp), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, p), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x.astype(jnp.float32), g.astype(jnp.float32), s2)

@@ -1,0 +1,60 @@
+"""Layer-1 Pallas kernel: error-feedback memory update (alg. lines 8-9).
+
+    m_{t+1,(k)} = X̂_{t,(k)}   for k not selected,
+    m_{t+1,(k)} = 0            for k selected,
+
+expressed as a per-row rescale ``out[m, :] = keep[m] * a[m, :]`` with
+``keep = 1 - selected``. Purely bandwidth-bound; blocks stream row tiles
+through VMEM once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _divisor_block(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _row_scale_kernel(a_ref, k_ref, o_ref):
+    o_ref[...] = a_ref[...] * k_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def row_scale(
+    a: jnp.ndarray, keep: jnp.ndarray, *, bm: int = 512, bn: int = 1024
+) -> jnp.ndarray:
+    """Per-row rescale ``out[m,:] = keep[m] * a[m,:]`` via Pallas.
+
+    Args:
+      a: ``(M, N)`` float32 — memory-folded matrix (X̂ or Ĝ).
+      keep: ``(M,)`` float32 — 1 for rows to retain in memory, 0 for rows
+        consumed by the update.
+
+    Returns:
+      ``(M, N)`` float32 new memory matrix.
+    """
+    m, n = a.shape
+    assert keep.shape == (m,), (a.shape, keep.shape)
+    bm = _divisor_block(m, bm)
+    bn = _divisor_block(n, bn)
+    k2 = keep.reshape(m, 1).astype(jnp.float32)
+    return pl.pallas_call(
+        _row_scale_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a.astype(jnp.float32), k2)

@@ -1,0 +1,47 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal for Layer 1: every Pallas kernel in
+this package must match its oracle to float32 tolerance across the shape /
+mask / scale sweeps in ``python/tests/``.
+
+All oracles operate on float32 and mirror the math of Sec. II-B / III of the
+paper (Mem-AOP-GD):
+
+  * ``aop_outer_ref``  — masked, per-row-scaled outer-product accumulation
+                         ``C = sum_m s_m * X[m,:]^T G[m,:]``  (eq. (4)/(5)).
+  * ``scores_ref``     — selection-policy scores
+                         ``s_m = ||X_(m)||_2 * ||G_(m)||_2`` (Sec. II-B).
+  * ``row_scale_ref``  — per-row rescaling ``out[m,:] = keep[m] * A[m,:]``
+                         (memory update, alg. lines 8-9).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def aop_outer_ref(x: jnp.ndarray, g: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """Masked scaled outer-product sum: ``C[n,p] = sum_m s[m] x[m,n] g[m,p]``.
+
+    Args:
+      x: ``(M, N)`` activations (rows are the outer-product columns of X^T).
+      g: ``(M, P)`` output gradients.
+      s: ``(M,)`` per-row scale; 0 for unselected rows, 1 (or the unbiased
+         ``1/(p_k K)`` weight) for selected rows.
+
+    Returns:
+      ``(N, P)`` approximate weight gradient ``Ŵ*``.
+    """
+    return (x * s[:, None]).T @ g
+
+
+def scores_ref(x: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Row-norm-product policy scores ``s_m = ||x[m,:]|| * ||g[m,:]||``."""
+    xn = jnp.sqrt(jnp.sum(x * x, axis=1))
+    gn = jnp.sqrt(jnp.sum(g * g, axis=1))
+    return xn * gn
+
+
+def row_scale_ref(a: jnp.ndarray, keep: jnp.ndarray) -> jnp.ndarray:
+    """Per-row rescale: ``out[m,:] = keep[m] * a[m,:]`` (memory update)."""
+    return a * keep[:, None]

@@ -1,0 +1,63 @@
+"""Layer-1 Pallas kernel: selection-policy scores (Sec. II-B).
+
+Computes, for every outer-product index m, the row-norm product
+
+    s_m = ||X̂_(m)||_2 * ||Ĝ_(m)||_2
+
+which is the ranking statistic of topK and the (unnormalised) sampling
+weight of weightedK. The kernel fuses both squared-row-norm reductions and
+the sqrt/product into one pass over each M block, so X̂/Ĝ stream through
+VMEM exactly once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _divisor_block(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _scores_kernel(x_ref, g_ref, s_ref):
+    x = x_ref[...]  # (bm, N)
+    g = g_ref[...]  # (bm, P)
+    xn = jnp.sum(x * x, axis=1, keepdims=True)  # (bm, 1)
+    gn = jnp.sum(g * g, axis=1, keepdims=True)
+    s_ref[...] = jnp.sqrt(xn) * jnp.sqrt(gn)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def scores(x: jnp.ndarray, g: jnp.ndarray, *, bm: int = 512) -> jnp.ndarray:
+    """Row-norm-product scores ``s_m = ||x[m,:]|| * ||g[m,:]||``.
+
+    Args:
+      x: ``(M, N)`` float32.
+      g: ``(M, P)`` float32.
+
+    Returns:
+      ``(M,)`` float32 scores.
+    """
+    m, n = x.shape
+    m2, p = g.shape
+    assert m == m2, (x.shape, g.shape)
+    bm = _divisor_block(m, bm)
+    out = pl.pallas_call(
+        _scores_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, p), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), g.astype(jnp.float32))
+    return out.reshape(m)

@@ -1,0 +1,324 @@
+"""Layer-2 JAX compute graphs for Mem-AOP-GD (build-time only).
+
+Every public function here is lowered once by ``aot.py`` into an HLO-text
+artifact executed from the Rust coordinator; Python never runs on the
+training path.
+
+Two-phase split (DESIGN.md §2): the per-task train step is split into
+
+  ``*_fwd_score``  forward + loss + output-gradient + memory folding +
+                   selection scores, and
+  ``*_apply``      Pallas-AOP weight update + memory update,
+
+with the *selection policy itself* (topK / randK / weightedK, any K, with or
+without memory) living in the Rust coordinator between the two phases. One
+artifact pair therefore serves every policy and every K at runtime.
+
+A monolithic multi-layer MLP train step (selection baked in-graph) is also
+provided for the end-to-end example.
+
+Conventions:
+  * all tensors float32;
+  * batch rows are the outer-product index m in eq. (3);
+  * the learning rate enters as ``sqrt(eta)`` on both X and G (alg. lines
+    3-4) so the weight update is simply ``W - Ŵ*`` (line 7);
+  * the bias gradient is exact (the paper approximates only eq. (2b)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.aop_outer import aop_outer
+from compile.kernels.memupd import row_scale
+from compile.kernels.scores import scores as scores_kernel
+
+# ---------------------------------------------------------------------------
+# task definitions (Tab. I)
+# ---------------------------------------------------------------------------
+
+#: (batch M, input N, output P) per task — Tab. I of the paper.
+#: ``eval_batch`` sizes the `*_eval` artifact: the whole 192-row validation
+#: split for energy; 64-row chunks (drop-tail) for mnist.
+TASKS = {
+    "energy": dict(batch=144, n_in=16, n_out=1, loss="mse", eval_batch=192),
+    "mnist": dict(batch=64, n_in=784, n_out=10, loss="cce", eval_batch=64),
+}
+
+#: End-to-end MLP used by ``examples/e2e_train.rs`` (extension beyond the
+#: paper's single-layer models): 784-1024-1024-10 ≈ 1.9M parameters.
+MLP_LAYERS = [784, 1024, 1024, 10]
+MLP_BATCH = 128
+MLP_K = 32  # outer products kept per layer (M = MLP_BATCH)
+
+
+# ---------------------------------------------------------------------------
+# losses and output gradients
+# ---------------------------------------------------------------------------
+
+
+def _mse(o, y):
+    """Mean-squared error and its gradient w.r.t. o."""
+    b = o.shape[0] * o.shape[1]
+    loss = jnp.mean((o - y) ** 2)
+    g = 2.0 * (o - y) / b
+    return loss, g
+
+
+def _softmax_cce(o, y):
+    """Categorical cross-entropy over softmax(o) and its gradient w.r.t. o."""
+    logp = jax.nn.log_softmax(o, axis=1)
+    loss = -jnp.mean(jnp.sum(y * logp, axis=1))
+    g = (jax.nn.softmax(o, axis=1) - y) / o.shape[0]
+    return loss, g
+
+
+def _loss_and_grad(kind, o, y):
+    return _mse(o, y) if kind == "mse" else _softmax_cce(o, y)
+
+
+# ---------------------------------------------------------------------------
+# two-phase single-dense-layer graphs (the paper's models)
+# ---------------------------------------------------------------------------
+
+
+def fwd_score(task: str):
+    """Phase 1: forward, loss, memory folding, policy scores.
+
+    Signature (positional, fixed order — mirrored in the manifest):
+      (x, y, w, b, mem_x, mem_g, eta) ->
+      (loss, xhat, ghat, db, scores)
+    """
+    cfg = TASKS[task]
+
+    def fn(x, y, w, b, mem_x, mem_g, eta):
+        o = x @ w + b
+        loss, g = _loss_and_grad(cfg["loss"], o, y)
+        se = jnp.sqrt(eta)
+        xhat = mem_x + se * x
+        ghat = mem_g + se * g
+        s = scores_kernel(xhat, ghat)
+        db = eta * jnp.sum(g, axis=0)
+        return loss, xhat, ghat, db, s
+
+    return fn
+
+
+def apply_update(task: str):
+    """Phase 2: Pallas-AOP weight update + exact bias + memory update.
+
+    Signature:
+      (xhat, ghat, w, b, db, sel_scale, keep) ->
+      (w_new, b_new, mem_x_new, mem_g_new, wstar_fro)
+
+    ``sel_scale[m]`` is 0 for unselected rows and the policy weight for
+    selected ones; ``keep[m]`` is 1 for rows retained in memory (0 for the
+    no-memory variant and for selected rows). ``wstar_fro`` (||Ŵ*||_F) is a
+    free diagnostic for the metrics sink.
+    """
+    del task  # shapes are baked from the tracer args; math is task-agnostic
+
+    def fn(xhat, ghat, w, b, db, sel_scale, keep):
+        wstar = aop_outer(xhat, ghat, sel_scale)
+        w_new = w - wstar
+        b_new = b - db
+        mem_x_new = row_scale(xhat, keep)
+        mem_g_new = row_scale(ghat, keep)
+        wstar_fro = jnp.sqrt(jnp.sum(wstar * wstar))
+        return w_new, b_new, mem_x_new, mem_g_new, wstar_fro
+
+    return fn
+
+
+def evaluate(task: str):
+    """Validation graph: (x, y, w, b) -> (loss, accuracy).
+
+    Accuracy is argmax agreement (meaningful for mnist; for the regression
+    task it degenerates to 1.0 and is ignored by the coordinator).
+    """
+    cfg = TASKS[task]
+
+    def fn(x, y, w, b):
+        o = x @ w + b
+        loss, _ = _loss_and_grad(cfg["loss"], o, y)
+        acc = jnp.mean(
+            (jnp.argmax(o, axis=1) == jnp.argmax(y, axis=1)).astype(jnp.float32)
+        )
+        return loss, acc
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# in-graph selection (for the monolithic MLP step)
+# ---------------------------------------------------------------------------
+
+
+def _select_mask(policy: str, s, noise, k: int):
+    """Build the 0/1 selection mask for one layer, in-graph.
+
+    topK      — K largest scores (Sec. II-B).
+    randK     — K uniform rows: top-K of the uniform noise.
+    weightedK — without-replacement sampling ∝ scores via the Gumbel-top-k
+                trick: keys = log s + Gumbel(noise).
+    exact     — all rows.
+
+    NOTE: implemented with ``lax.sort`` (+ index tie-break) rather than
+    ``lax.top_k`` — the xla_extension 0.5.1 HLO parser the Rust runtime
+    links against predates the dedicated `topk` HLO op, while `sort` (with
+    a multi-operand comparator) round-trips fine.
+    """
+    m = s.shape[0]
+    if policy == "exact":
+        return jnp.ones((m,), jnp.float32)
+    if policy == "topk":
+        keys = s
+    elif policy == "randk":
+        keys = noise
+    elif policy == "weightedk":
+        gumbel = -jnp.log(-jnp.log(noise + 1e-12) + 1e-12)
+        keys = jnp.log(s + 1e-12) + gumbel
+    else:  # pragma: no cover - guarded by aot.py
+        raise ValueError(policy)
+    iota = jnp.arange(m, dtype=jnp.int32)
+    # ascending sort of -keys == descending sort of keys; iota rides along
+    _, perm = jax.lax.sort((-keys, iota), dimension=0, num_keys=1)
+    idx = perm[:k]
+    return jnp.zeros((m,), jnp.float32).at[idx].set(1.0)
+
+
+# ---------------------------------------------------------------------------
+# fused single-dispatch train step (deployment-mode ablation, §Perf)
+# ---------------------------------------------------------------------------
+
+
+def fused_step(task: str, policy: str, memory: bool, k: int):
+    """One-dispatch Mem-AOP-GD step with the selection baked in-graph.
+
+    The two-phase split (fwd_score → Rust policy → apply) costs two PJRT
+    dispatches and a host round-trip of X̂/Ĝ per step; this fused variant
+    trades the runtime policy/K flexibility for a single dispatch — the
+    deployment configuration once a policy is chosen. Semantics match the
+    two-phase path exactly for deterministic policies (topK / exact).
+
+    Signature:
+      (x, y, w, b, mem_x, mem_g, noise, eta) ->
+      (loss, w_new, b_new, mem_x_new, mem_g_new)
+    """
+    cfg = TASKS[task]
+
+    def fn(x, y, w, b, mem_x, mem_g, noise, eta):
+        o = x @ w + b
+        loss, g = _loss_and_grad(cfg["loss"], o, y)
+        se = jnp.sqrt(eta)
+        xhat = mem_x + se * x
+        ghat = mem_g + se * g
+        s = scores_kernel(xhat, ghat)
+        mask = _select_mask(policy, s, noise, k)
+        keep = (1.0 - mask) if memory else jnp.zeros_like(mask)
+        wstar = aop_outer(xhat, ghat, mask)
+        w_new = w - wstar
+        b_new = b - eta * jnp.sum(g, axis=0)
+        return loss, w_new, b_new, row_scale(xhat, keep), row_scale(ghat, keep)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# monolithic multi-layer MLP train step (e2e example / extension)
+# ---------------------------------------------------------------------------
+
+
+def mlp_train_step(policy: str, memory: bool, layers=None, batch=None, k=None):
+    """Full Mem-AOP-GD train step for an L-layer relu MLP with softmax head.
+
+    Flat positional signature (L = len(layers) - 1 dense layers):
+      (x, y, w_1..w_L, b_1..b_L, mx_1..mx_L, mg_1..mg_L,
+       noise_1..noise_L, eta) ->
+      (loss, acc, w'_1..w'_L, b'_1..b'_L, mx'_1..mx'_L, mg'_1..mg'_L)
+
+    Every dense weight gradient goes through the Pallas AOP kernel with the
+    baked ``policy``/``k``; bias gradients stay exact; ``memory=False``
+    zeroes the kept rows so the memories remain 0.
+    """
+    layers = layers or MLP_LAYERS
+    batch = batch or MLP_BATCH
+    k = k or MLP_K
+    n_layers = len(layers) - 1
+
+    def fn(*args):
+        x, y = args[0], args[1]
+        off = 2
+        ws = list(args[off : off + n_layers])
+        bs = list(args[off + n_layers : off + 2 * n_layers])
+        mxs = list(args[off + 2 * n_layers : off + 3 * n_layers])
+        mgs = list(args[off + 3 * n_layers : off + 4 * n_layers])
+        noises = list(args[off + 4 * n_layers : off + 5 * n_layers])
+        eta = args[off + 5 * n_layers]
+
+        # forward, keeping layer inputs and pre-activations
+        acts = [x]
+        zs = []
+        h = x
+        for i in range(n_layers):
+            z = h @ ws[i] + bs[i]
+            zs.append(z)
+            h = jax.nn.relu(z) if i < n_layers - 1 else z
+            acts.append(h)
+
+        loss, g = _softmax_cce(acts[-1], y)
+        acc = jnp.mean(
+            (jnp.argmax(acts[-1], axis=1) == jnp.argmax(y, axis=1)).astype(
+                jnp.float32
+            )
+        )
+
+        se = jnp.sqrt(eta)
+        new_ws, new_bs, new_mxs, new_mgs = [], [], [], []
+        # backward with per-layer Mem-AOP-GD on the weight gradients
+        for i in reversed(range(n_layers)):
+            xin = acts[i]
+            xhat = mxs[i] + se * xin
+            ghat = mgs[i] + se * g
+            s = scores_kernel(xhat, ghat)
+            mask = _select_mask(policy, s, noises[i], k)
+            keep = (1.0 - mask) if memory else jnp.zeros_like(mask)
+            wstar = aop_outer(xhat, ghat, mask)
+            new_ws.append(ws[i] - wstar)
+            new_bs.append(bs[i] - eta * jnp.sum(g, axis=0))
+            new_mxs.append(row_scale(xhat, keep))
+            new_mgs.append(row_scale(ghat, keep))
+            if i > 0:
+                # eq. (2a): propagate through the *pre-update* weights
+                g = (g @ ws[i].T) * (zs[i - 1] > 0).astype(jnp.float32)
+        new_ws.reverse()
+        new_bs.reverse()
+        new_mxs.reverse()
+        new_mgs.reverse()
+        return (loss, acc, *new_ws, *new_bs, *new_mxs, *new_mgs)
+
+    return fn, layers, batch, n_layers
+
+
+def mlp_eval(layers=None, batch=None):
+    """MLP validation graph: (x, y, w_1..w_L, b_1..b_L) -> (loss, acc)."""
+    layers = layers or MLP_LAYERS
+    batch = batch or MLP_BATCH
+    n_layers = len(layers) - 1
+
+    def fn(*args):
+        x, y = args[0], args[1]
+        ws = list(args[2 : 2 + n_layers])
+        bs = list(args[2 + n_layers : 2 + 2 * n_layers])
+        h = x
+        for i in range(n_layers):
+            z = h @ ws[i] + bs[i]
+            h = jax.nn.relu(z) if i < n_layers - 1 else z
+        loss, _ = _softmax_cce(h, y)
+        acc = jnp.mean(
+            (jnp.argmax(h, axis=1) == jnp.argmax(y, axis=1)).astype(jnp.float32)
+        )
+        return loss, acc
+
+    return fn, layers, batch, n_layers

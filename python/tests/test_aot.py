@@ -1,0 +1,92 @@
+"""AOT pipeline integrity: manifest ⇄ artifacts ⇄ lowering agree.
+
+These tests exercise ``compile.aot`` itself (lowering into a temp dir) so
+they do not depend on ``make artifacts`` having been run; a separate
+(skippable) section validates the checked-out ``artifacts/`` directory when
+present, which is what the Rust runtime will consume.
+"""
+
+import hashlib
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrip_simple(tmp_path):
+    import jax
+    import jax.numpy as jnp
+
+    lowered = jax.jit(lambda a, b: (a @ b + 2.0,)).lower(
+        jax.ShapeDtypeStruct((2, 2), jnp.float32),
+        jax.ShapeDtypeStruct((2, 2), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "f32[2,2]" in text
+
+
+@pytest.mark.parametrize("task", ["energy", "mnist"])
+def test_task_artifacts_lower_and_declare_shapes(tmp_path, task):
+    arts = aot.task_artifacts(task, str(tmp_path))
+    cfg = model.TASKS[task]
+    m, n, p = cfg["batch"], cfg["n_in"], cfg["n_out"]
+    fs = arts[f"{task}_fwd_score"]
+    assert [i["shape"] for i in fs["inputs"]] == [
+        [m, n], [m, p], [n, p], [p], [m, n], [m, p], [],
+    ]
+    assert [o["name"] for o in fs["outputs"]] == [
+        "loss", "xhat", "ghat", "db", "scores",
+    ]
+    assert fs["outputs"][4]["shape"] == [m]
+    ap = arts[f"{task}_apply"]
+    assert ap["outputs"][0]["shape"] == [n, p]
+    for a in arts.values():
+        text = open(tmp_path / a["file"]).read()
+        assert "ENTRY" in text
+        assert hashlib.sha256(text.encode()).hexdigest() == a["sha256"]
+
+
+def test_mlp_artifact_signature(tmp_path):
+    arts = aot.mlp_artifacts(str(tmp_path))
+    nl = len(model.MLP_LAYERS) - 1
+    tr = arts["mlp_topk_mem"]
+    assert len(tr["inputs"]) == 2 + 5 * nl + 1
+    assert len(tr["outputs"]) == 2 + 4 * nl
+    ev = arts["mlp_eval"]
+    assert len(ev["inputs"]) == 2 + 2 * nl
+    assert [o["name"] for o in ev["outputs"]] == ["loss", "acc"]
+
+
+# ---------------------------------------------------------------------------
+# validation of the built artifacts/ directory (if present)
+# ---------------------------------------------------------------------------
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+def test_built_manifest_files_exist_and_hash():
+    manifest = json.load(open(os.path.join(ART_DIR, "manifest.json")))
+    assert manifest["version"] == 1
+    assert set(manifest["tasks"]) == {"energy", "mnist"}
+    for name, a in manifest["artifacts"].items():
+        path = os.path.join(ART_DIR, a["file"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert hashlib.sha256(text.encode()).hexdigest() == a["sha256"], name
+        assert "ENTRY" in text
+
+
+@needs_artifacts
+def test_built_manifest_matches_current_model_config():
+    manifest = json.load(open(os.path.join(ART_DIR, "manifest.json")))
+    for task, cfg in model.TASKS.items():
+        assert manifest["tasks"][task]["batch"] == cfg["batch"]
+    assert manifest["mlp"]["layers"] == model.MLP_LAYERS

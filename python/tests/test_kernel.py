@@ -1,0 +1,208 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+The hypothesis sweeps randomize shapes, masks, scales and block sizes; a
+kernel is correct only if it matches ``ref.py`` to float32 tolerance on all
+of them. This is the core correctness signal for the AOT path — the same
+kernels are baked into every HLO artifact the Rust coordinator executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.aop_outer import aop_outer, _divisor_block
+from compile.kernels.memupd import row_scale
+from compile.kernels.scores import scores
+
+DIM = st.integers(min_value=1, max_value=96)
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# aop_outer
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=DIM, n=DIM, p=DIM, seed=st.integers(0, 2**31 - 1))
+def test_aop_outer_matches_ref(m, n, p, seed):
+    kx, kg, km = keys(seed, 3)
+    x, g = rand(kx, (m, n)), rand(kg, (m, p))
+    s = (jax.random.uniform(km, (m,)) > 0.5).astype(jnp.float32)
+    np.testing.assert_allclose(
+        aop_outer(x, g, s), ref.aop_outer_ref(x, g, s), rtol=3e-5, atol=3e-5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=DIM,
+    n=DIM,
+    p=DIM,
+    seed=st.integers(0, 2**31 - 1),
+    bm=st.integers(1, 64),
+    bn=st.integers(1, 64),
+    bp=st.integers(1, 64),
+)
+def test_aop_outer_block_size_invariance(m, n, p, seed, bm, bn, bp):
+    """The result must not depend on the BlockSpec tiling."""
+    kx, kg, km = keys(seed, 3)
+    x, g = rand(kx, (m, n)), rand(kg, (m, p))
+    s = jax.random.uniform(km, (m,))
+    a = aop_outer(x, g, s, bm=bm, bn=bn, bp=bp)
+    b = ref.aop_outer_ref(x, g, s)
+    np.testing.assert_allclose(a, b, rtol=3e-5, atol=3e-5)
+
+
+def test_aop_outer_zero_mask_is_zero():
+    kx, kg, _ = keys(0, 3)
+    x, g = rand(kx, (32, 7)), rand(kg, (32, 5))
+    out = aop_outer(x, g, jnp.zeros((32,)))
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_aop_outer_full_mask_is_exact_matmul():
+    kx, kg, _ = keys(1, 3)
+    x, g = rand(kx, (64, 16)), rand(kg, (64, 10))
+    np.testing.assert_allclose(
+        aop_outer(x, g, jnp.ones((64,))), x.T @ g, rtol=3e-5, atol=3e-5
+    )
+
+
+def test_aop_outer_single_row_is_rank_one():
+    """One selected row == one outer product (Fig. 1 of the paper)."""
+    kx, kg, _ = keys(2, 3)
+    x, g = rand(kx, (16, 8)), rand(kg, (16, 4))
+    s = jnp.zeros((16,)).at[5].set(1.0)
+    expect = jnp.outer(x[5], g[5])
+    np.testing.assert_allclose(aop_outer(x, g, s), expect, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIM, seed=st.integers(0, 2**31 - 1))
+def test_aop_outer_mask_complement_decomposition(m, seed):
+    """masked(C, s) + masked(C, 1-s) == full matmul — the eq. (7) identity."""
+    kx, kg, km = keys(seed, 3)
+    x, g = rand(kx, (m, 12)), rand(kg, (m, 6))
+    s = (jax.random.uniform(km, (m,)) > 0.4).astype(jnp.float32)
+    both = aop_outer(x, g, s) + aop_outer(x, g, 1.0 - s)
+    np.testing.assert_allclose(both, x.T @ g, rtol=1e-4, atol=1e-4)
+
+
+def test_aop_outer_paper_shapes():
+    """The exact shapes of Fig. 2 (energy) and Fig. 3 (mnist)."""
+    for (m, n, p) in [(144, 16, 1), (64, 784, 10)]:
+        kx, kg, km = keys(m, 3)
+        x, g = rand(kx, (m, n)), rand(kg, (m, p))
+        s = (jax.random.uniform(km, (m,)) > 0.75).astype(jnp.float32)
+        np.testing.assert_allclose(
+            aop_outer(x, g, s), ref.aop_outer_ref(x, g, s), rtol=3e-5, atol=3e-5
+        )
+
+
+def test_aop_outer_unbiased_scaling():
+    """With-replacement weightedK scaling (eq. (5)) averages to the true C."""
+    rng = np.random.default_rng(0)
+    m, n, p, k = 24, 6, 4, 6
+    x = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(m, p)), jnp.float32)
+    sc = np.asarray(ref.scores_ref(x, g))
+    prob = sc / sc.sum()
+    xn, gn = np.asarray(x, np.float64), np.asarray(g, np.float64)
+    true = xn.T @ gn
+
+    def mc_error(trials):
+        # vectorized: counts[t, i] = how often row i was drawn in trial t
+        idx = rng.choice(m, size=(trials, k), p=prob, replace=True)
+        counts = np.zeros((trials, m))
+        np.add.at(counts, (np.arange(trials)[:, None], idx), 1.0)
+        scales = counts / (prob[None, :] * k)  # eq. (5) weights
+        mean_scale = scales.mean(axis=0)
+        est = (xn * mean_scale[:, None]).T @ gn
+        return np.abs(est - true).max()
+
+    e_small, e_big = mc_error(500), mc_error(32000)
+    # the eq. (5) estimator is unbiased: error must decay with trials and
+    # be small in absolute terms at 32k trials (std-err ~ 1/sqrt(T))
+    assert e_big < 0.25, (e_small, e_big)
+    assert e_big < e_small, (e_small, e_big)
+
+
+# ---------------------------------------------------------------------------
+# scores
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=DIM, n=DIM, p=DIM, seed=st.integers(0, 2**31 - 1))
+def test_scores_matches_ref(m, n, p, seed):
+    kx, kg, _ = keys(seed, 3)
+    x, g = rand(kx, (m, n)), rand(kg, (m, p))
+    np.testing.assert_allclose(
+        scores(x, g), ref.scores_ref(x, g), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_scores_nonnegative_and_zero_rows():
+    x = jnp.zeros((8, 5)).at[3].set(1.0)
+    g = jnp.ones((8, 2))
+    s = np.asarray(scores(x, g))
+    assert (s >= 0).all()
+    assert s[0] == 0.0 and s[3] > 0.0
+
+
+def test_scores_scale_homogeneity():
+    """s(aX, bG) = |ab| s(X, G) — norms are absolutely homogeneous."""
+    kx, kg, _ = keys(7, 3)
+    x, g = rand(kx, (16, 9)), rand(kg, (16, 3))
+    np.testing.assert_allclose(
+        scores(2.0 * x, -3.0 * g), 6.0 * scores(x, g), rtol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# row_scale (memory update)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=DIM, n=DIM, seed=st.integers(0, 2**31 - 1))
+def test_row_scale_matches_ref(m, n, seed):
+    ka, km, _ = keys(seed, 3)
+    a = rand(ka, (m, n))
+    keep = (jax.random.uniform(km, (m,)) > 0.5).astype(jnp.float32)
+    np.testing.assert_allclose(row_scale(a, keep), ref.row_scale_ref(a, keep))
+
+
+def test_row_scale_partitions_rows():
+    """keep + (1-keep) reconstructs the input exactly (memory invariant)."""
+    ka, km, _ = keys(3, 3)
+    a = rand(ka, (32, 11))
+    keep = (jax.random.uniform(km, (32,)) > 0.5).astype(jnp.float32)
+    np.testing.assert_allclose(
+        row_scale(a, keep) + row_scale(a, 1.0 - keep), a, rtol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "dim,target,expect",
+    [(144, 128, 72), (64, 128, 64), (1, 128, 1), (97, 64, 1), (100, 64, 50)],
+)
+def test_divisor_block(dim, target, expect):
+    b = _divisor_block(dim, target)
+    assert b == expect and dim % b == 0 and b <= max(1, min(dim, target))

@@ -1,0 +1,216 @@
+"""Layer-2 correctness: graph semantics vs straight-line Algorithm 1.
+
+Verifies that (a) the two-phase fwd_score/apply split composes into exactly
+one step of the paper's Algorithm 1, (b) the exact variant reproduces the
+classic SGD step obtained by jax.grad, and (c) the monolithic MLP step is
+consistent with autodiff in its exact configuration.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _data(task, seed=0):
+    cfg = model.TASKS[task]
+    m, n, p = cfg["batch"], cfg["n_in"], cfg["n_out"]
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (m, n), jnp.float32)
+    if cfg["loss"] == "mse":
+        y = jax.random.normal(ks[1], (m, p), jnp.float32)
+    else:
+        y = jax.nn.one_hot(
+            jax.random.randint(ks[1], (m,), 0, p), p, dtype=jnp.float32
+        )
+    w = 0.1 * jax.random.normal(ks[2], (n, p), jnp.float32)
+    b = jnp.zeros((p,), jnp.float32)
+    return cfg, x, y, w, b
+
+
+def _loss_fn(task):
+    cfg = model.TASKS[task]
+    if cfg["loss"] == "mse":
+        return lambda w, b, x, y: jnp.mean((x @ w + b - y) ** 2)
+    return lambda w, b, x, y: -jnp.mean(
+        jnp.sum(y * jax.nn.log_softmax(x @ w + b, axis=1), axis=1)
+    )
+
+
+@pytest.mark.parametrize("task", ["energy", "mnist"])
+def test_exact_two_phase_equals_sgd(task):
+    """mask=1, keep=0 ⇒ the two-phase path is one classic SGD step."""
+    cfg, x, y, w, b = _data(task)
+    m = cfg["batch"]
+    eta = jnp.float32(0.01)
+    mem_x = jnp.zeros_like(x)
+    mem_g = jnp.zeros((m, cfg["n_out"]), jnp.float32)
+
+    loss, xhat, ghat, db, s = model.fwd_score(task)(x, y, w, b, mem_x, mem_g, eta)
+    ones, zeros = jnp.ones((m,)), jnp.zeros((m,))
+    w_new, b_new, mx_new, mg_new, fro = model.apply_update(task)(
+        xhat, ghat, w, b, db, ones, zeros
+    )
+
+    lf = _loss_fn(task)
+    gw, gb = jax.grad(lf, argnums=(0, 1))(w, b, x, y)
+    np.testing.assert_allclose(loss, lf(w, b, x, y), rtol=1e-5)
+    np.testing.assert_allclose(w_new, w - eta * gw, rtol=2e-4, atol=1e-6)
+    np.testing.assert_allclose(b_new, b - eta * gb, rtol=2e-4, atol=1e-6)
+    assert np.all(np.asarray(mx_new) == 0) and np.all(np.asarray(mg_new) == 0)
+    assert float(fro) > 0
+
+
+@pytest.mark.parametrize("task", ["energy", "mnist"])
+def test_memory_retains_unselected_rows(task):
+    """Alg. lines 8-9: memories hold exactly the unselected rows of X̂/Ĝ."""
+    cfg, x, y, w, b = _data(task, seed=1)
+    m = cfg["batch"]
+    eta = jnp.float32(0.01)
+    mem_x = 0.01 * jnp.ones_like(x)
+    mem_g = jnp.zeros((m, cfg["n_out"]), jnp.float32)
+
+    _, xhat, ghat, db, s = model.fwd_score(task)(x, y, w, b, mem_x, mem_g, eta)
+    k = m // 4
+    idx = jnp.argsort(-s)[:k]
+    mask = jnp.zeros((m,)).at[idx].set(1.0)
+    _, _, mx_new, mg_new, _ = model.apply_update(task)(
+        xhat, ghat, w, b, db, mask, 1.0 - mask
+    )
+    mx_new, mg_new = np.asarray(mx_new), np.asarray(mg_new)
+    sel = np.asarray(idx)
+    assert np.all(mx_new[sel] == 0) and np.all(mg_new[sel] == 0)
+    unsel = np.setdiff1d(np.arange(m), sel)
+    np.testing.assert_allclose(mx_new[unsel], np.asarray(xhat)[unsel])
+    np.testing.assert_allclose(mg_new[unsel], np.asarray(ghat)[unsel])
+
+
+@pytest.mark.parametrize("task", ["energy", "mnist"])
+def test_memory_fold_matches_alg_lines_3_4(task):
+    cfg, x, y, w, b = _data(task, seed=2)
+    m = cfg["batch"]
+    eta = jnp.float32(0.04)
+    mem_x = jax.random.normal(jax.random.PRNGKey(9), x.shape) * 0.1
+    mem_g = jax.random.normal(jax.random.PRNGKey(10), (m, cfg["n_out"])) * 0.1
+    loss, xhat, ghat, db, s = model.fwd_score(task)(x, y, w, b, mem_x, mem_g, eta)
+    np.testing.assert_allclose(xhat, mem_x + jnp.sqrt(eta) * x, rtol=1e-6)
+    # ghat = mem_g + sqrt(eta) * dL/dO, recomputed from the loss definition
+    o = x @ w + b
+    if cfg["loss"] == "mse":
+        g = 2.0 * (o - y) / (o.shape[0] * o.shape[1])
+    else:
+        g = (jax.nn.softmax(o, axis=1) - y) / o.shape[0]
+    np.testing.assert_allclose(ghat, mem_g + jnp.sqrt(eta) * g, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(db, eta * jnp.sum(g, axis=0), rtol=1e-5, atol=1e-8)
+
+
+def test_eval_accuracy_mnist():
+    cfg, x, y, w, b = _data("mnist", seed=3)
+    loss, acc = model.evaluate("mnist")(x, y, w, b)
+    o = x @ w + b
+    expect = np.mean(np.argmax(np.asarray(o), 1) == np.argmax(np.asarray(y), 1))
+    np.testing.assert_allclose(acc, expect, rtol=1e-6)
+    assert float(loss) > 0
+
+
+def _mlp_args(policy_seed=0, layers=(20, 16, 10), batch=8):
+    layers = list(layers)
+    nl = len(layers) - 1
+    ks = jax.random.split(jax.random.PRNGKey(policy_seed), 3 + 2 * nl)
+    x = jax.random.normal(ks[0], (batch, layers[0]), jnp.float32)
+    y = jax.nn.one_hot(
+        jax.random.randint(ks[1], (batch,), 0, layers[-1]), layers[-1]
+    ).astype(jnp.float32)
+    ws = [
+        0.3 * jax.random.normal(ks[2 + i], (layers[i], layers[i + 1]), jnp.float32)
+        for i in range(nl)
+    ]
+    bs = [jnp.zeros((layers[i + 1],), jnp.float32) for i in range(nl)]
+    mxs = [jnp.zeros((batch, layers[i]), jnp.float32) for i in range(nl)]
+    mgs = [jnp.zeros((batch, layers[i + 1]), jnp.float32) for i in range(nl)]
+    noises = [
+        jax.random.uniform(ks[2 + nl + i], (batch,), jnp.float32)
+        for i in range(nl)
+    ]
+    return layers, nl, x, y, ws, bs, mxs, mgs, noises
+
+
+def test_mlp_exact_matches_autodiff():
+    """policy='exact' ⇒ the monolithic step is one plain SGD step."""
+    layers, nl, x, y, ws, bs, mxs, mgs, noises = _mlp_args()
+    eta = jnp.float32(0.05)
+    fn, _, _, _ = model.mlp_train_step("exact", False, layers, 8, 4)
+    out = fn(x, y, *ws, *bs, *mxs, *mgs, *noises, eta)
+    loss, acc = out[0], out[1]
+    new_ws = out[2 : 2 + nl]
+    new_bs = out[2 + nl : 2 + 2 * nl]
+
+    def lf(ws, bs):
+        h = x
+        for i in range(nl):
+            z = h @ ws[i] + bs[i]
+            h = jax.nn.relu(z) if i < nl - 1 else z
+        return -jnp.mean(jnp.sum(y * jax.nn.log_softmax(h, 1), 1))
+
+    gws, gbs = jax.grad(lf, argnums=(0, 1))(ws, bs)
+    np.testing.assert_allclose(loss, lf(ws, bs), rtol=1e-5)
+    for i in range(nl):
+        np.testing.assert_allclose(
+            new_ws[i], ws[i] - eta * gws[i], rtol=2e-4, atol=1e-6
+        )
+        np.testing.assert_allclose(
+            new_bs[i], bs[i] - eta * gbs[i], rtol=2e-4, atol=1e-6
+        )
+
+
+@pytest.mark.parametrize("policy", ["topk", "randk", "weightedk"])
+def test_mlp_selection_policies_run_and_keep_memory(policy):
+    layers, nl, x, y, ws, bs, mxs, mgs, noises = _mlp_args(policy_seed=4)
+    eta = jnp.float32(0.05)
+    k = 3
+    fn, _, _, _ = model.mlp_train_step(policy, True, layers, 8, k)
+    out = fn(x, y, *ws, *bs, *mxs, *mgs, *noises, eta)
+    new_mxs = out[2 + 2 * nl : 2 + 3 * nl]
+    for mx in new_mxs:
+        # exactly batch-k rows are retained (nonzero) in each memory
+        nz_rows = np.count_nonzero(np.abs(np.asarray(mx)).sum(1) > 0)
+        assert nz_rows == 8 - k, (policy, nz_rows)
+
+
+def test_mlp_nomem_keeps_memories_zero():
+    layers, nl, x, y, ws, bs, mxs, mgs, noises = _mlp_args(policy_seed=5)
+    fn, _, _, _ = model.mlp_train_step("topk", False, layers, 8, 3)
+    out = fn(x, y, *ws, *bs, *mxs, *mgs, *noises, jnp.float32(0.05))
+    for mx in out[2 + 2 * nl : 2 + 4 * nl]:
+        assert np.all(np.asarray(mx) == 0)
+
+
+def test_select_mask_topk_selects_largest():
+    s = jnp.asarray([0.1, 5.0, 0.2, 3.0, 0.05], jnp.float32)
+    mask = model._select_mask("topk", s, jnp.zeros(5), 2)
+    np.testing.assert_array_equal(np.asarray(mask), [0, 1, 0, 1, 0])
+
+
+def test_select_mask_exact_is_all_ones():
+    mask = model._select_mask("exact", jnp.ones(6), jnp.zeros(6), 2)
+    assert np.all(np.asarray(mask) == 1)
+
+
+def test_select_mask_randk_cardinality():
+    noise = jax.random.uniform(jax.random.PRNGKey(0), (31,))
+    mask = model._select_mask("randk", jnp.ones(31), noise, 7)
+    assert int(np.asarray(mask).sum()) == 7
+
+
+def test_select_mask_weightedk_prefers_high_scores():
+    """Gumbel-top-k: high-score rows must be selected far more often."""
+    s = jnp.asarray([10.0] * 4 + [0.01] * 12, jnp.float32)
+    hits = np.zeros(16)
+    for i in range(200):
+        noise = jax.random.uniform(jax.random.PRNGKey(i), (16,))
+        hits += np.asarray(model._select_mask("weightedk", s, noise, 4))
+    assert hits[:4].mean() > 5 * hits[4:].mean()

@@ -1,0 +1,78 @@
+//! The Sec. I computational-reduction claim, measured: exact weight
+//! gradient vs compaction-regime AOP across the paper's K sweeps, on the
+//! paper's shapes plus a large-layer shape where the asymptotics show.
+//!
+//! Also measures the end-to-end step (fwd + policy + apply) so the
+//! *system-level* saving — what Fig. 2/3's x-axis of "computational
+//! reduction" translates to in wall-clock — is on record next to the
+//! kernel-level ratio.
+
+use mem_aop_gd::aop::engine::AopEngine;
+use mem_aop_gd::aop::{flops, Policy};
+use mem_aop_gd::model::LossKind;
+use mem_aop_gd::tensor::{init, ops, rng::Rng, Matrix};
+use mem_aop_gd::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new("complexity");
+    let mut rng = Rng::new(0);
+
+    for (name, m, n, p) in [
+        ("energy", 144usize, 16usize, 1usize),
+        ("mnist", 64, 784, 10),
+        ("wide", 128, 1024, 1024), // where the reduction really pays
+    ] {
+        let x = Matrix::from_fn(m, n, |_, _| rng.normal());
+        let g = Matrix::from_fn(m, p, |_, _| rng.normal());
+
+        let exact = b.bench_with_work(
+            &format!("{name}/weight-grad/exact M={m}"),
+            Some(flops::exact_step(m, n, p).backward_only() as f64),
+            || {
+                black_box(ops::matmul_tn(&x, &g));
+            },
+        );
+
+        for frac in [8usize, 4, 2] {
+            let k = (m / frac).max(1);
+            let sel: Vec<(usize, f32)> = (0..k).map(|i| (i, 1.0)).collect();
+            let s = b.bench_with_work(
+                &format!("{name}/weight-grad/aop K=M/{frac}"),
+                Some(flops::aop_step(m, n, p, k).backward_only() as f64),
+                || {
+                    black_box(ops::masked_outer_compact(&x, &g, &sel));
+                },
+            );
+            eprintln!(
+                "    -> measured speedup {:.2}x (FLOP model predicts {:.2}x)",
+                exact.median_ns / s.median_ns,
+                m as f64 / k as f64
+            );
+        }
+
+        // end-to-end step: exact vs K=M/4 topK with memory
+        let y = Matrix::from_fn(m, p, |_, _| rng.normal());
+        let mk_engine = |policy: Policy, k: usize, mem: bool, rng: &mut Rng| {
+            AopEngine::new(
+                init::glorot_uniform(rng, n, p),
+                LossKind::Mse,
+                m,
+                policy,
+                k,
+                mem,
+            )
+        };
+        let mut e_exact = mk_engine(Policy::Exact, m, false, &mut rng);
+        let mut r1 = Rng::new(1);
+        b.bench(&format!("{name}/full-step/exact"), || {
+            black_box(e_exact.step(&x, &y, 0.01, &mut r1));
+        });
+        let mut e_aop = mk_engine(Policy::TopK, (m / 4).max(1), true, &mut rng);
+        let mut r2 = Rng::new(2);
+        b.bench(&format!("{name}/full-step/topk K=M/4 +mem"), || {
+            black_box(e_aop.step(&x, &y, 0.01, &mut r2));
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,65 @@
+//! Fig. 2 bench: per-training-step cost of every series in the energy
+//! panels (baseline + 3 policies × {mem, nomem} at K = 18, 9, 3), on both
+//! backends. The paper's Fig. 2 reports loss-vs-epoch; this bench reports
+//! the cost side of the trade-off (step time per series), which together
+//! with `repro figure --fig 2` (loss curves) regenerates the full story.
+
+use mem_aop_gd::aop::policy;
+use mem_aop_gd::coordinator::config::ExperimentConfig;
+use mem_aop_gd::coordinator::experiment::{self, Trainer};
+use mem_aop_gd::coordinator::hlo_trainer::HloTrainer;
+use mem_aop_gd::coordinator::native_trainer::NativeTrainer;
+use mem_aop_gd::coordinator::sweep;
+use mem_aop_gd::runtime::{Manifest, Runtime};
+use mem_aop_gd::tensor::rng::Rng;
+use mem_aop_gd::util::bench::{black_box, Bencher};
+
+fn bench_series<T: Trainer>(
+    b: &mut Bencher,
+    name: &str,
+    mut trainer: T,
+    cfg: &ExperimentConfig,
+) {
+    let (train, _) = experiment::load_data(cfg);
+    let idx: Vec<usize> = (0..cfg.m()).collect();
+    let batch = train.gather(&idx);
+    let mut rng = Rng::new(9);
+    b.bench(name, || {
+        let (_, scores, _) = trainer.fwd_score(&batch.x, &batch.y).unwrap();
+        let sel = policy::select(cfg.policy, &scores, cfg.k, cfg.memory, &mut rng);
+        black_box(trainer.apply(&sel).unwrap());
+    });
+}
+
+fn main() {
+    let mut b = Bencher::new("fig2_energy");
+    let base = ExperimentConfig::energy_preset();
+    let have_artifacts = Manifest::default_dir().join("manifest.json").exists();
+    let rt = if have_artifacts {
+        Some(Runtime::from_default_artifacts().expect("runtime"))
+    } else {
+        eprintln!("[fig2] artifacts missing — HLO series skipped");
+        None
+    };
+
+    for &k in &base.task.figure_ks() {
+        for cfg in sweep::panel_configs(&base, k) {
+            let label = format!("K={k}/{}", cfg.label());
+            bench_series(
+                &mut b,
+                &format!("native/{label}"),
+                NativeTrainer::new(&cfg).unwrap(),
+                &cfg,
+            );
+            if let Some(rt) = &rt {
+                bench_series(
+                    &mut b,
+                    &format!("hlo/{label}"),
+                    HloTrainer::new(&cfg, rt).unwrap(),
+                    &cfg,
+                );
+            }
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,56 @@
+//! Fig. 3 bench: per-training-step cost of every series in the MNIST
+//! panels (baseline + 3 policies × {mem, nomem} at K = 32, 16, 8), both
+//! backends. Complements `repro figure --fig 3` (the loss curves) with
+//! the cost axis. Shapes here are where the paper's reduction actually
+//! pays: N·P = 7840, so the weight gradient dominates the step.
+
+use mem_aop_gd::aop::policy;
+use mem_aop_gd::coordinator::config::ExperimentConfig;
+use mem_aop_gd::coordinator::experiment::Trainer;
+use mem_aop_gd::coordinator::hlo_trainer::HloTrainer;
+use mem_aop_gd::coordinator::native_trainer::NativeTrainer;
+use mem_aop_gd::coordinator::sweep;
+use mem_aop_gd::data::digits;
+use mem_aop_gd::runtime::{Manifest, Runtime};
+use mem_aop_gd::tensor::rng::Rng;
+use mem_aop_gd::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new("fig3_mnist");
+    let base = ExperimentConfig::mnist_preset();
+    let have_artifacts = Manifest::default_dir().join("manifest.json").exists();
+    let rt = if have_artifacts {
+        Some(Runtime::from_default_artifacts().expect("runtime"))
+    } else {
+        eprintln!("[fig3] artifacts missing — HLO series skipped");
+        None
+    };
+
+    // one fixed batch of synthetic digits for all series
+    let ds = digits::digits_dataset(base.m(), 0xF163);
+    let mut rng = Rng::new(5);
+
+    for &k in &base.task.figure_ks() {
+        for cfg in sweep::panel_configs(&base, k) {
+            let label = format!("K={k}/{}", cfg.label());
+
+            let mut nt = NativeTrainer::new(&cfg).unwrap();
+            b.bench(&format!("native/{label}"), || {
+                let (_, scores, _) = nt.fwd_score(&ds.x, &ds.y).unwrap();
+                let sel = policy::select(cfg.policy, &scores, cfg.k, cfg.memory, &mut rng);
+                black_box(nt.apply(&sel).unwrap());
+            });
+
+            if let Some(rt) = &rt {
+                let mut ht = HloTrainer::new(&cfg, rt).unwrap();
+                b.bench(&format!("hlo/{label}"), || {
+                    let (_, scores, _) = ht.fwd_score(&ds.x, &ds.y).unwrap();
+                    let sel =
+                        policy::select(cfg.policy, &scores, cfg.k, cfg.memory, &mut rng);
+                    black_box(ht.apply(&sel).unwrap());
+                });
+            }
+        }
+    }
+    b.finish();
+}

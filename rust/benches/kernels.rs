@@ -1,0 +1,117 @@
+//! Kernel-level benchmarks: the AOP weight-gradient computation in both
+//! execution regimes (mask vs compaction) against the exact outer-product
+//! sum, on the paper's exact shapes, for both the native path and the
+//! compiled HLO artifacts.
+//!
+//! Work metric = FLOPs of the compaction-regime cost model, so the
+//! reported work-rate is directly comparable across K (who computes the
+//! same gradient with fewer FLOPs/second wins).
+
+use mem_aop_gd::runtime::{Manifest, Runtime, Value};
+use mem_aop_gd::tensor::{ops, rng::Rng, Matrix};
+use mem_aop_gd::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new("kernels");
+    let mut rng = Rng::new(0);
+
+    for (task, m, n, p, ks) in [
+        ("energy", 144usize, 16usize, 1usize, vec![144usize, 18, 9, 3]),
+        ("mnist", 64, 784, 10, vec![64, 32, 16, 8]),
+    ] {
+        let x = Matrix::from_fn(m, n, |_, _| rng.normal());
+        let g = Matrix::from_fn(m, p, |_, _| rng.normal());
+
+        // exact baseline: full outer-product sum (eq. (3))
+        let work = 2.0 * (m * n * p) as f64;
+        b.bench_with_work(&format!("{task}/native/exact-matmul_tn"), Some(work), || {
+            black_box(ops::matmul_tn(&x, &g));
+        });
+
+        for &k in &ks {
+            let sel: Vec<(usize, f32)> = (0..k).map(|i| (i % m, 1.0)).collect();
+            let mut scale = vec![0.0f32; m];
+            for &(i, s) in &sel {
+                scale[i] = s;
+            }
+            let work_k = 2.0 * (k * n * p) as f64;
+            b.bench_with_work(
+                &format!("{task}/native/aop-compact K={k}"),
+                Some(work_k),
+                || {
+                    black_box(ops::masked_outer_compact(&x, &g, &sel));
+                },
+            );
+            b.bench_with_work(
+                &format!("{task}/native/aop-mask K={k}"),
+                Some(work_k),
+                || {
+                    black_box(ops::masked_outer(&x, &g, &scale));
+                },
+            );
+        }
+
+        // policy scores kernel
+        b.bench(&format!("{task}/native/scores"), || {
+            black_box(ops::norm_product_scores(&x, &g));
+        });
+    }
+
+    // HLO apply-phase (the Pallas aop_outer inside the compiled artifact)
+    // + the fused single-dispatch step (dispatch-count ablation, §Perf)
+    if Manifest::default_dir().join("manifest.json").exists() {
+        let rt = Runtime::from_default_artifacts().expect("runtime");
+        for (task, m, n, p) in [("energy", 144usize, 16usize, 1usize), ("mnist", 64, 784, 10)] {
+            use mem_aop_gd::runtime::ArgRef;
+            let fused = rt.load(&format!("{task}_fused_topk_mem")).unwrap();
+            let x = Matrix::from_fn(m, n, |_, _| rng.normal());
+            let y = Matrix::from_fn(m, p, |r, c| ((r % p.max(1)) == c) as u32 as f32);
+            let w = Matrix::zeros(n, p);
+            let bias = vec![0.0f32; p];
+            let mx = Matrix::zeros(m, n);
+            let mg = Matrix::zeros(m, p);
+            let noise = vec![0.5f32; m];
+            b.bench(&format!("{task}/hlo/fused-step topk-mem"), || {
+                let out = fused
+                    .run_ref(&[
+                        ArgRef::from(&x),
+                        ArgRef::from(&y),
+                        ArgRef::from(&w),
+                        ArgRef::from(&bias),
+                        ArgRef::from(&mx),
+                        ArgRef::from(&mg),
+                        ArgRef::from(&noise),
+                        ArgRef::Scalar(0.01),
+                    ])
+                    .unwrap();
+                black_box(out);
+            });
+        }
+        for (task, m, n, p) in [("energy", 144usize, 16usize, 1usize), ("mnist", 64, 784, 10)] {
+            let apply = rt.load(&format!("{task}_apply")).unwrap();
+            let xhat = Matrix::from_fn(m, n, |_, _| rng.normal());
+            let ghat = Matrix::from_fn(m, p, |_, _| rng.normal());
+            let w = Matrix::zeros(n, p);
+            let scale: Vec<f32> = (0..m).map(|i| (i % 4 == 0) as u32 as f32).collect();
+            let keep: Vec<f32> = scale.iter().map(|v| 1.0 - v).collect();
+            b.bench(&format!("{task}/hlo/apply-phase"), || {
+                let out = apply
+                    .run(&[
+                        Value::Matrix(xhat.clone()),
+                        Value::Matrix(ghat.clone()),
+                        Value::Matrix(w.clone()),
+                        Value::Vector(vec![0.0; p]),
+                        Value::Vector(vec![0.0; p]),
+                        Value::Vector(scale.clone()),
+                        Value::Vector(keep.clone()),
+                    ])
+                    .unwrap();
+                black_box(out);
+            });
+        }
+    } else {
+        eprintln!("[kernels] artifacts missing — HLO benches skipped");
+    }
+
+    b.finish();
+}

@@ -1,0 +1,54 @@
+//! Selection-policy cost on the per-step hot path: topK (partial
+//! selection vs full sort), randK and Gumbel weightedK, across batch
+//! sizes M. The policy must stay negligible next to the gradient matmul
+//! — these benches back the §Perf claim that L3 is not the bottleneck.
+
+use mem_aop_gd::aop::policy::{self, Policy};
+use mem_aop_gd::tensor::rng::Rng;
+use mem_aop_gd::util::bench::{black_box, Bencher};
+
+/// Reference full-sort topK for comparison with the select_nth path.
+fn top_k_via_sort(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+fn main() {
+    let mut b = Bencher::new("policies");
+    let mut rng = Rng::new(0);
+
+    for m in [64usize, 144, 1024, 8192] {
+        let scores: Vec<f32> = (0..m).map(|_| rng.uniform() + 0.01).collect();
+        let k = m / 8;
+
+        b.bench(&format!("topk-select_nth M={m}"), || {
+            black_box(policy::top_k_indices(&scores, k));
+        });
+        b.bench(&format!("topk-full-sort M={m}"), || {
+            black_box(top_k_via_sort(&scores, k));
+        });
+
+        let mut r2 = Rng::new(1);
+        b.bench(&format!("randk M={m}"), || {
+            black_box(r2.sample_without_replacement(m, k));
+        });
+        let mut r3 = Rng::new(2);
+        b.bench(&format!("weightedk-gumbel M={m}"), || {
+            black_box(r3.weighted_sample_without_replacement(&scores, k));
+        });
+        let mut r4 = Rng::new(3);
+        b.bench(&format!("weightedk-repl M={m}"), || {
+            black_box(r4.weighted_sample_with_replacement(&scores, k));
+        });
+
+        // the full select() wrapper including scale/keep vector builds
+        let mut r5 = Rng::new(4);
+        b.bench(&format!("select(topk,mem) M={m}"), || {
+            black_box(policy::select(Policy::TopK, &scores, k, true, &mut r5));
+        });
+    }
+
+    b.finish();
+}

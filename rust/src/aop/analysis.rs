@@ -1,0 +1,217 @@
+//! Empirical approximation-error analysis — the quantitative side of the
+//! theory the paper leaves as future work (Sec. V).
+//!
+//! Drineas-Kannan-Mahoney (ref. [8]) bound the AOP error as
+//! `E‖C − Ĉ‖_F = O(‖A‖_F ‖B‖_F / √c)` for weighted sampling with
+//! replacement. This module measures, for every policy:
+//!
+//!   * the one-shot relative error `‖Ŵ* − W*‖_F / ‖W*‖_F` as a function
+//!     of K (the √K decay, Fig.-style sweep via `repro approx-error`);
+//!   * the *effective* error under error feedback — how much deferred
+//!     gradient mass the memory recovers over a window of steps.
+
+use crate::aop::policy::{self, Policy};
+use crate::tensor::{ops, rng::Rng, Matrix};
+
+/// One measurement cell.
+#[derive(Debug, Clone)]
+pub struct ErrorPoint {
+    pub policy: Policy,
+    pub k: usize,
+    pub m: usize,
+    /// Mean relative Frobenius error over the trials.
+    pub rel_error: f64,
+    /// Standard deviation over trials.
+    pub sd: f64,
+}
+
+/// One-shot approximation error of `out_K` on fixed (X, G): mean ± sd of
+/// `‖Ŵ* − X^T G‖_F / ‖X^T G‖_F` over `trials` policy draws.
+pub fn one_shot_error(
+    x: &Matrix,
+    g: &Matrix,
+    policy: Policy,
+    k: usize,
+    trials: usize,
+    rng: &mut Rng,
+) -> ErrorPoint {
+    let exact = ops::matmul_tn(x, g);
+    let exact_fro = exact.frobenius() as f64;
+    let scores = ops::norm_product_scores(x, g);
+    let mut errs = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let sel = policy::select(policy, &scores, k, false, rng);
+        let approx = ops::masked_outer(x, g, &sel.sel_scale);
+        errs.push(approx.sub(&exact).frobenius() as f64 / exact_fro.max(1e-12));
+        if !policy.is_stochastic() {
+            break; // deterministic: one trial suffices
+        }
+    }
+    let n = errs.len() as f64;
+    let mean = errs.iter().sum::<f64>() / n;
+    let var = errs.iter().map(|e| (e - mean) * (e - mean)).sum::<f64>() / n;
+    ErrorPoint {
+        policy,
+        k,
+        m: x.rows(),
+        rel_error: mean,
+        sd: var.sqrt(),
+    }
+}
+
+/// Sweep all figure policies across a K grid on synthetic (X, G) with the
+/// given row-norm skew (`skew = 0` ⇒ iid rows; larger ⇒ a few heavy rows,
+/// the regime where topK/weightedK beat randK).
+pub fn error_sweep(
+    m: usize,
+    n: usize,
+    p: usize,
+    ks: &[usize],
+    skew: f32,
+    trials: usize,
+    seed: u64,
+) -> Vec<ErrorPoint> {
+    let mut rng = Rng::new(seed);
+    let x = Matrix::from_fn(m, n, |r, _| {
+        let scale = (1.0 + skew * r as f32 / m as f32).powi(2);
+        rng.normal() * scale
+    });
+    let g = Matrix::from_fn(m, p, |_, _| rng.normal());
+    let mut out = Vec::new();
+    for &k in ks {
+        for pol in [Policy::TopK, Policy::WeightedK, Policy::RandK, Policy::WeightedKReplacement] {
+            out.push(one_shot_error(&x, &g, pol, k, trials, &mut rng));
+        }
+    }
+    out
+}
+
+/// Deferred-flush identity: select K of M outer products of (X, G), stash
+/// the unselected rows in the memory (alg. lines 8-9), then *flush* the
+/// memory (one step with zero fresh data, full selection). Returns the
+/// relative error of `applied + flushed` vs the exact `X^T G`.
+///
+/// With memory this is exactly 0 (the unselected rows' outer products are
+/// recovered verbatim — the mask-complement identity behind eq. (7)'s
+/// `m^X,T m^G` term); without memory the unselected mass is lost and the
+/// error equals the one-shot approximation error. Note this is *sharper*
+/// than gradient-level error feedback can claim: over multiple fresh
+/// batches the factor-level memory also produces the `m^X,T G + X^T m^G`
+/// cross terms, which the paper conjectures act as useful stale gradients
+/// (Sec. III) — those are measured by the training curves, not here.
+pub fn deferred_flush_error(
+    x: &Matrix,
+    g: &Matrix,
+    policy: Policy,
+    k: usize,
+    memory: bool,
+    rng: &mut Rng,
+) -> f64 {
+    use crate::aop::memory::MemoryState;
+    let (m, n) = x.shape();
+    let p = g.cols();
+    let exact = ops::matmul_tn(x, g);
+    let mut mem = MemoryState::new(m, n, p, memory);
+
+    // step 1: approximate on the real batch
+    let (xhat, ghat) = mem.fold(x, g, 1.0);
+    let scores = ops::norm_product_scores(&xhat, &ghat);
+    let sel = policy::select(policy, &scores, k, memory, rng);
+    let mut applied = ops::masked_outer(&xhat, &ghat, &sel.sel_scale);
+    mem.update(&xhat, &ghat, &sel.keep);
+
+    // step 2: flush — zero fresh data, select everything
+    let zero_x = Matrix::zeros(m, n);
+    let zero_g = Matrix::zeros(m, p);
+    let (fx, fg) = mem.fold(&zero_x, &zero_g, 1.0);
+    let ones = vec![1.0f32; m];
+    applied.axpy(1.0, &ops::masked_outer(&fx, &fg, &ones));
+
+    applied.sub(&exact).frobenius() as f64 / (exact.frobenius() as f64).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data(m: usize, n: usize, p: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        (
+            Matrix::from_fn(m, n, |_, _| rng.normal()),
+            Matrix::from_fn(m, p, |_, _| rng.normal()),
+        )
+    }
+
+    #[test]
+    fn error_is_zero_at_full_k() {
+        let (x, g) = data(32, 8, 4, 0);
+        let mut rng = Rng::new(1);
+        for pol in [Policy::TopK, Policy::RandK, Policy::WeightedK] {
+            let e = one_shot_error(&x, &g, pol, 32, 5, &mut rng);
+            assert!(e.rel_error < 1e-6, "{pol:?}: {}", e.rel_error);
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_k() {
+        let (x, g) = data(64, 16, 4, 2);
+        let mut rng = Rng::new(3);
+        let mut prev = f64::INFINITY;
+        for k in [4usize, 16, 32, 56] {
+            let e = one_shot_error(&x, &g, Policy::RandK, k, 40, &mut rng);
+            assert!(e.rel_error < prev + 0.05, "K={k}: {} vs {prev}", e.rel_error);
+            prev = e.rel_error;
+        }
+    }
+
+    #[test]
+    fn topk_beats_randk_on_skewed_rows() {
+        // a few heavy rows carry most of the product: topK must capture
+        // far more of it than uniform sampling
+        let pts = error_sweep(64, 12, 6, &[8], 6.0, 40, 4);
+        let get = |p: Policy| pts.iter().find(|e| e.policy == p).unwrap().rel_error;
+        assert!(
+            get(Policy::TopK) < 0.85 * get(Policy::RandK),
+            "topk {} vs randk {}",
+            get(Policy::TopK),
+            get(Policy::RandK)
+        );
+        assert!(get(Policy::WeightedK) < get(Policy::RandK));
+    }
+
+    #[test]
+    fn replacement_scaling_trades_bias_for_variance() {
+        // eq. (5) is unbiased but high-variance: its sd must exceed the
+        // without-replacement policy's on the same draw count
+        let (x, g) = data(48, 10, 5, 5);
+        let mut rng = Rng::new(6);
+        let wo = one_shot_error(&x, &g, Policy::WeightedK, 8, 60, &mut rng);
+        let wr = one_shot_error(&x, &g, Policy::WeightedKReplacement, 8, 60, &mut rng);
+        assert!(wr.sd > wo.sd, "repl sd {} vs w/o sd {}", wr.sd, wo.sd);
+    }
+
+    #[test]
+    fn deferred_flush_completes_exact_product() {
+        let (x, g) = data(32, 8, 4, 7);
+        for pol in [Policy::TopK, Policy::RandK, Policy::WeightedK] {
+            let mut r1 = Rng::new(8);
+            let mut r2 = Rng::new(8);
+            let with_mem = deferred_flush_error(&x, &g, pol, 8, true, &mut r1);
+            let without = deferred_flush_error(&x, &g, pol, 8, false, &mut r2);
+            // memory recovers the unselected mass exactly (f32 tolerance);
+            // without memory the loss equals the one-shot error
+            assert!(with_mem < 1e-4, "{pol:?}: flush err {with_mem}");
+            assert!(without > 0.3, "{pol:?}: nomem err {without}");
+        }
+    }
+
+    #[test]
+    fn sweep_shapes_and_determinism() {
+        let a = error_sweep(32, 8, 2, &[4, 8], 2.0, 10, 9);
+        let b = error_sweep(32, 8, 2, &[4, 8], 2.0, 10, 9);
+        assert_eq!(a.len(), 8); // 2 Ks × 4 policies
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.rel_error, y.rel_error);
+        }
+    }
+}

@@ -1,0 +1,299 @@
+//! Native single-layer Mem-AOP-GD engine (Algorithm 1, pure Rust).
+//!
+//! Structured as the same two phases the HLO path executes —
+//! `fwd_score` then `apply` — so `rust/tests/native_vs_hlo.rs` can drive
+//! both with identical policy decisions and compare states step-by-step.
+//! This engine is also the baseline comparator for the criterion-style
+//! benches (native CPU vs PJRT-compiled artifacts).
+
+use crate::aop::memory::MemoryState;
+use crate::aop::policy::{self, Policy, Selection};
+use crate::model::loss::{accuracy, LossKind};
+use crate::tensor::rng::Rng;
+use crate::tensor::{ops, Matrix};
+
+/// Single dense layer `o = x W + b` trained with Mem-AOP-GD — the paper's
+/// experimental model for both tasks (16×1 energy, 784×10 mnist).
+pub struct AopEngine {
+    pub w: Matrix,
+    pub b: Vec<f32>,
+    pub loss: LossKind,
+    pub memory: MemoryState,
+    pub policy: Policy,
+    pub k: usize,
+    /// Use the compaction-regime kernel (K-row loop) instead of the
+    /// mask-regime one. Numerically identical for without-replacement
+    /// policies; this is the paper's complexity-reduction execution mode.
+    pub compact: bool,
+}
+
+/// Outputs of the fwd_score phase (mirrors the HLO artifact's outputs).
+pub struct FwdScore {
+    pub loss: f32,
+    pub xhat: Matrix,
+    pub ghat: Matrix,
+    pub db: Vec<f32>,
+    pub scores: Vec<f32>,
+}
+
+/// Per-step diagnostics.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub loss: f32,
+    /// ||Ŵ*||_F of the applied update.
+    pub wstar_fro: f32,
+    /// Distinct outer products evaluated.
+    pub k_effective: usize,
+}
+
+impl AopEngine {
+    pub fn new(
+        w: Matrix,
+        loss: LossKind,
+        batch: usize,
+        policy: Policy,
+        k: usize,
+        memory_enabled: bool,
+    ) -> Self {
+        let (n, p) = w.shape();
+        AopEngine {
+            b: vec![0.0; p],
+            w,
+            loss,
+            memory: MemoryState::new(batch, n, p, memory_enabled),
+            policy,
+            k,
+            compact: true,
+        }
+    }
+
+    /// Forward output `x W + b`.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        x.matmul(&self.w).add_row_broadcast(&self.b)
+    }
+
+    /// Phase 1 (mirrors the `*_fwd_score` artifact): forward, loss,
+    /// output-gradient, memory folding, policy scores, exact bias grad.
+    pub fn fwd_score(&self, x: &Matrix, y: &Matrix, eta: f32) -> FwdScore {
+        let o = self.forward(x);
+        let (loss, g) = self.loss.loss_and_grad(&o, y);
+        let (xhat, ghat) = self.memory.fold(x, &g, eta);
+        let scores = ops::norm_product_scores(&xhat, &ghat);
+        let db: Vec<f32> = g.col_sums().iter().map(|d| eta * d).collect();
+        FwdScore {
+            loss,
+            xhat,
+            ghat,
+            db,
+            scores,
+        }
+    }
+
+    /// Phase 2 (mirrors the `*_apply` artifact): AOP weight update, exact
+    /// bias update, memory update.
+    pub fn apply(&mut self, fs: &FwdScore, sel: &Selection) -> StepStats {
+        let wstar = if self.compact {
+            ops::masked_outer_compact(&fs.xhat, &fs.ghat, &sel.compact_pairs())
+        } else {
+            ops::masked_outer(&fs.xhat, &fs.ghat, &sel.sel_scale)
+        };
+        let wstar_fro = wstar.frobenius();
+        self.w.axpy(-1.0, &wstar);
+        for (b, d) in self.b.iter_mut().zip(fs.db.iter()) {
+            *b -= d;
+        }
+        self.memory.update(&fs.xhat, &fs.ghat, &sel.keep);
+        StepStats {
+            loss: fs.loss,
+            wstar_fro,
+            k_effective: sel.k_effective(),
+        }
+    }
+
+    /// Full Algorithm-1 step: fwd_score → out_K → apply.
+    pub fn step(&mut self, x: &Matrix, y: &Matrix, eta: f32, rng: &mut Rng) -> StepStats {
+        let fs = self.fwd_score(x, y, eta);
+        let sel = policy::select(
+            self.policy,
+            &fs.scores,
+            self.k.min(fs.scores.len()),
+            self.memory.enabled,
+            rng,
+        );
+        self.apply(&fs, &sel)
+    }
+
+    /// Validation loss and accuracy.
+    pub fn evaluate(&self, x: &Matrix, y: &Matrix) -> (f32, f32) {
+        let o = self.forward(x);
+        (self.loss.loss(&o, y), accuracy(&o, y))
+    }
+
+    /// Remark-1 step: produce the *raw* AOP gradient estimate (memory
+    /// folded with η = 1, so Ŵ* ≈ X^T G itself) and hand it to an
+    /// external optimizer (SGD / momentum / Adam) that owns the step
+    /// size. With `Optimizer::Sgd` this reduces to [`AopEngine::step`]
+    /// at the same lr.
+    pub fn step_with_optimizer(
+        &mut self,
+        x: &Matrix,
+        y: &Matrix,
+        opt: &crate::aop::optimizer::Optimizer,
+        state: &mut crate::aop::optimizer::OptState,
+        rng: &mut Rng,
+    ) -> StepStats {
+        let fs = self.fwd_score(x, y, 1.0);
+        let sel = policy::select(
+            self.policy,
+            &fs.scores,
+            self.k.min(fs.scores.len()),
+            self.memory.enabled,
+            rng,
+        );
+        let gw = if self.compact {
+            ops::masked_outer_compact(&fs.xhat, &fs.ghat, &sel.compact_pairs())
+        } else {
+            ops::masked_outer(&fs.xhat, &fs.ghat, &sel.sel_scale)
+        };
+        // fwd_score folded η=1, so db is the raw bias gradient
+        state.apply(opt, &mut self.w, &mut self.b, &gw, &fs.db);
+        self.memory.update(&fs.xhat, &fs.ghat, &sel.keep);
+        StepStats {
+            loss: fs.loss,
+            wstar_fro: gw.frobenius(),
+            k_effective: sel.k_effective(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::init;
+
+    fn regression_data(rng: &mut Rng, m: usize, n: usize) -> (Matrix, Matrix, Matrix) {
+        // linear teacher with noise
+        let teacher = Matrix::from_fn(n, 1, |_, _| rng.normal());
+        let x = Matrix::from_fn(m, n, |_, _| rng.normal());
+        let y = x.matmul(&teacher).map(|v| v); // noiseless: easy target
+        (x, y, teacher)
+    }
+
+    fn engine(rng: &mut Rng, n: usize, batch: usize, policy: Policy, k: usize, mem: bool) -> AopEngine {
+        AopEngine::new(
+            init::glorot_uniform(rng, n, 1),
+            LossKind::Mse,
+            batch,
+            policy,
+            k,
+            mem,
+        )
+    }
+
+    #[test]
+    fn exact_policy_converges_linear_regression() {
+        let mut rng = Rng::new(0);
+        let (x, y, _) = regression_data(&mut rng, 32, 8);
+        let mut e = engine(&mut rng, 8, 32, Policy::Exact, 32, false);
+        let before = e.evaluate(&x, &y).0;
+        for _ in 0..300 {
+            e.step(&x, &y, 0.05, &mut rng);
+        }
+        let after = e.evaluate(&x, &y).0;
+        assert!(after < before * 1e-2, "before={before} after={after}");
+    }
+
+    #[test]
+    fn topk_with_memory_converges() {
+        let mut rng = Rng::new(1);
+        let (x, y, _) = regression_data(&mut rng, 32, 8);
+        let mut e = engine(&mut rng, 8, 32, Policy::TopK, 8, true);
+        let before = e.evaluate(&x, &y).0;
+        for _ in 0..400 {
+            e.step(&x, &y, 0.05, &mut rng);
+        }
+        let after = e.evaluate(&x, &y).0;
+        assert!(after < before * 0.05, "before={before} after={after}");
+    }
+
+    #[test]
+    fn randk_policies_all_run() {
+        let mut rng = Rng::new(2);
+        let (x, y, _) = regression_data(&mut rng, 24, 6);
+        for policy in [
+            Policy::RandK,
+            Policy::WeightedK,
+            Policy::WeightedKReplacement,
+        ] {
+            let mut e = engine(&mut rng, 6, 24, policy, 6, true);
+            for _ in 0..20 {
+                let st = e.step(&x, &y, 0.02, &mut rng);
+                assert!(st.loss.is_finite(), "{policy:?}");
+            }
+            assert!(e.w.is_finite(), "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn compact_and_mask_regimes_agree() {
+        let mut rng = Rng::new(3);
+        let (x, y, _) = regression_data(&mut rng, 20, 5);
+        let mk = |compact: bool, rng: &mut Rng| {
+            let mut e = engine(rng, 5, 20, Policy::TopK, 5, true);
+            e.compact = compact;
+            e
+        };
+        // identical init via fresh seeded rngs
+        let mut ra = Rng::new(7);
+        let mut rb = Rng::new(7);
+        let mut a = mk(true, &mut ra);
+        let mut b = mk(false, &mut rb);
+        let mut rng_a = Rng::new(11);
+        let mut rng_b = Rng::new(11);
+        for _ in 0..25 {
+            a.step(&x, &y, 0.03, &mut rng_a);
+            b.step(&x, &y, 0.03, &mut rng_b);
+        }
+        assert!(a.w.max_abs_diff(&b.w) < 1e-5);
+    }
+
+    #[test]
+    fn memory_defers_and_recovers_gradient_mass() {
+        let mut rng = Rng::new(4);
+        let (x, y, _) = regression_data(&mut rng, 16, 4);
+        let mut e = engine(&mut rng, 4, 16, Policy::TopK, 4, true);
+        e.step(&x, &y, 0.05, &mut rng);
+        // 12 unselected rows must sit in memory
+        assert!(!e.memory.is_zero());
+        let nz = (0..16)
+            .filter(|&m| e.memory.mem_x.row(m).iter().any(|&v| v != 0.0))
+            .count();
+        assert_eq!(nz, 12);
+    }
+
+    #[test]
+    fn no_memory_never_accumulates() {
+        let mut rng = Rng::new(5);
+        let (x, y, _) = regression_data(&mut rng, 16, 4);
+        let mut e = engine(&mut rng, 4, 16, Policy::RandK, 4, false);
+        for _ in 0..10 {
+            e.step(&x, &y, 0.05, &mut rng);
+        }
+        assert!(e.memory.is_zero());
+    }
+
+    #[test]
+    fn bias_update_is_exact() {
+        let mut rng = Rng::new(6);
+        let (x, y, _) = regression_data(&mut rng, 12, 3);
+        let mut e = engine(&mut rng, 3, 12, Policy::TopK, 2, true);
+        let o = e.forward(&x);
+        let (_, g) = LossKind::Mse.loss_and_grad(&o, &y);
+        let db_expect: Vec<f32> = g.col_sums().iter().map(|d| 0.05 * d).collect();
+        let b0 = e.b.clone();
+        e.step(&x, &y, 0.05, &mut rng);
+        for i in 0..e.b.len() {
+            assert!((e.b[i] - (b0[i] - db_expect[i])).abs() < 1e-6);
+        }
+    }
+}

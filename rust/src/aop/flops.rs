@@ -1,0 +1,128 @@
+//! FLOP cost model for the computational-reduction claims (Sec. I/IV).
+//!
+//! The paper's saving is in eq. (2b): evaluating K of M outer products
+//! costs `2·K·N·P` FLOPs instead of `2·M·N·P`. The cost model reports the
+//! compaction-regime cost (DESIGN.md §8) — what a TPU with in-VMEM row
+//! gathering would execute — plus the policy overhead (scores) and the
+//! unchanged forward/backward terms, so the end-to-end reduction ratio
+//! `R = K/M` claims can be audited per configuration.
+
+/// FLOP breakdown of one Mem-AOP-GD training step on a single dense layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepFlops {
+    /// Forward `X W + b`: 2·M·N·P + M·P.
+    pub forward: u64,
+    /// Loss gradient `G`: ~3·M·P (elementwise).
+    pub loss_grad: u64,
+    /// Memory folding X̂/Ĝ (lines 3-4): 2·M·(N+P).
+    pub fold: u64,
+    /// Policy scores ‖X̂_(m)‖‖Ĝ_(m)‖: 2·M·(N+P) + M.
+    pub scores: u64,
+    /// The AOP weight gradient (eq. (4)): 2·K·N·P  (the headline term).
+    pub weight_grad: u64,
+    /// Weight/bias/memory updates: N·P + P + M·(N+P).
+    pub updates: u64,
+}
+
+impl StepFlops {
+    pub fn total(&self) -> u64 {
+        self.forward + self.loss_grad + self.fold + self.scores + self.weight_grad + self.updates
+    }
+
+    /// The paper's headline term alone (backward weight-gradient matmul).
+    pub fn backward_only(&self) -> u64 {
+        self.weight_grad
+    }
+}
+
+/// Cost of one step with batch `m`, input dim `n`, output dim `p`, and
+/// `k` selected outer products. `k = m` with zero fold/score overhead is
+/// the exact-SGD baseline (see [`exact_step`]).
+pub fn aop_step(m: usize, n: usize, p: usize, k: usize) -> StepFlops {
+    let (m64, n64, p64, k64) = (m as u64, n as u64, p as u64, k as u64);
+    StepFlops {
+        forward: 2 * m64 * n64 * p64 + m64 * p64,
+        loss_grad: 3 * m64 * p64,
+        fold: 2 * m64 * (n64 + p64),
+        scores: 2 * m64 * (n64 + p64) + m64,
+        weight_grad: 2 * k64 * n64 * p64,
+        updates: n64 * p64 + p64 + m64 * (n64 + p64),
+    }
+}
+
+/// Exact back-propagation baseline: full M-row weight gradient, no fold,
+/// no scores, no memory writes.
+pub fn exact_step(m: usize, n: usize, p: usize) -> StepFlops {
+    let (m64, n64, p64) = (m as u64, n as u64, p as u64);
+    StepFlops {
+        forward: 2 * m64 * n64 * p64 + m64 * p64,
+        loss_grad: 3 * m64 * p64,
+        fold: 0,
+        scores: 0,
+        weight_grad: 2 * m64 * n64 * p64,
+        updates: n64 * p64 + p64,
+    }
+}
+
+/// Reduction ratio of the *backward weight-gradient* term (the paper's
+/// R = K/M axis in Figs. 2-3).
+pub fn backward_reduction(m: usize, n: usize, p: usize, k: usize) -> f64 {
+    aop_step(m, n, p, k).backward_only() as f64 / exact_step(m, n, p).backward_only() as f64
+}
+
+/// End-to-end step reduction including all overheads (what a deployment
+/// actually saves).
+pub fn total_reduction(m: usize, n: usize, p: usize, k: usize) -> f64 {
+    aop_step(m, n, p, k).total() as f64 / exact_step(m, n, p).total() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backward_ratio_is_k_over_m() {
+        for (m, n, p, k) in [(144, 16, 1, 18), (64, 784, 10, 32), (64, 784, 10, 8)] {
+            let r = backward_reduction(m, n, p, k);
+            assert!((r - k as f64 / m as f64).abs() < 1e-12, "{r}");
+        }
+    }
+
+    #[test]
+    fn exact_equals_aop_with_k_eq_m_on_backward() {
+        let a = aop_step(64, 784, 10, 64);
+        let e = exact_step(64, 784, 10);
+        assert_eq!(a.weight_grad, e.weight_grad);
+        assert_eq!(a.forward, e.forward);
+    }
+
+    #[test]
+    fn total_reduction_below_one_for_small_k_large_np() {
+        // mnist shape: N·P = 7840 dominates ⇒ overheads are amortized
+        let r = total_reduction(64, 784, 10, 8);
+        assert!(r < 0.7, "r={r}");
+        // energy shape: N·P = 16 is tiny ⇒ overheads dominate; ratio can
+        // exceed the naive K/M but must stay bounded
+        let r2 = total_reduction(144, 16, 1, 18);
+        assert!(r2 > 0.125 && r2 < 2.0, "r2={r2}");
+    }
+
+    #[test]
+    fn totals_are_sums() {
+        let s = aop_step(10, 5, 3, 4);
+        assert_eq!(
+            s.total(),
+            s.forward + s.loss_grad + s.fold + s.scores + s.weight_grad + s.updates
+        );
+    }
+
+    #[test]
+    fn monotone_in_k() {
+        let mut prev = 0u64;
+        for k in [1usize, 8, 16, 32, 64] {
+            let t = aop_step(64, 784, 10, k).total();
+            assert!(t > prev);
+            prev = t;
+        }
+    }
+}

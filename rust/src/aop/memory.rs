@@ -1,0 +1,178 @@
+//! Error-feedback memory state (`m^X`, `m^G` of Algorithm 1).
+//!
+//! The memories store the *rows of X̂/Ĝ that were not selected* at the
+//! previous step (lines 8-9) and are folded back in at lines 3-4:
+//!
+//!   X̂_t = m^X_t + sqrt(η_t) X_t,   Ĝ_t = m^G_t + sqrt(η_t) G_t.
+//!
+//! Invariant maintained (and property-tested): after `update`, a row of
+//! memory is either exactly 0 (selected, consumed by the weight update) or
+//! exactly the corresponding row of X̂/Ĝ (unselected, deferred).
+
+use crate::tensor::{ops, Matrix};
+
+/// Per-layer error-feedback state.
+#[derive(Debug, Clone)]
+pub struct MemoryState {
+    pub mem_x: Matrix,
+    pub mem_g: Matrix,
+    /// When false this is the "without memory" ablation (dashed curves in
+    /// Figs. 2-3): the state stays identically zero.
+    pub enabled: bool,
+}
+
+impl MemoryState {
+    /// Fresh zero state for a batch of `m` rows, `n` input features and
+    /// `p` outputs.
+    pub fn new(m: usize, n: usize, p: usize, enabled: bool) -> Self {
+        MemoryState {
+            mem_x: Matrix::zeros(m, n),
+            mem_g: Matrix::zeros(m, p),
+            enabled,
+        }
+    }
+
+    /// Lines 3-4: fold the memory into the fresh batch,
+    /// returning `(X̂, Ĝ)`.
+    pub fn fold(&self, x: &Matrix, g: &Matrix, eta: f32) -> (Matrix, Matrix) {
+        let se = eta.sqrt();
+        let mut xhat = x.scale(se);
+        xhat.axpy(1.0, &self.mem_x);
+        let mut ghat = g.scale(se);
+        ghat.axpy(1.0, &self.mem_g);
+        (xhat, ghat)
+    }
+
+    /// Lines 8-9: retain the unselected rows (`keep[m] = 1`) of X̂/Ĝ.
+    /// A disabled memory ignores the keep vector and stays zero.
+    pub fn update(&mut self, xhat: &Matrix, ghat: &Matrix, keep: &[f32]) {
+        if !self.enabled {
+            return; // stays zero
+        }
+        self.mem_x = ops::row_scale(xhat, keep);
+        self.mem_g = ops::row_scale(ghat, keep);
+    }
+
+    /// Reset to zero (e.g. between experiments).
+    pub fn reset(&mut self) {
+        self.mem_x = Matrix::zeros(self.mem_x.rows(), self.mem_x.cols());
+        self.mem_g = Matrix::zeros(self.mem_g.rows(), self.mem_g.cols());
+    }
+
+    /// Frobenius norm of the deferred gradient mass (diagnostic; the
+    /// metrics sink logs this as `mem_fro`).
+    pub fn deferred_mass(&self) -> f32 {
+        (self.mem_x.frobenius().powi(2) + self.mem_g.frobenius().powi(2)).sqrt()
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.mem_x.data().iter().all(|&v| v == 0.0)
+            && self.mem_g.data().iter().all(|&v| v == 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    fn randm(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        Matrix::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn fresh_state_is_zero() {
+        let ms = MemoryState::new(8, 4, 2, true);
+        assert!(ms.is_zero());
+        assert_eq!(ms.deferred_mass(), 0.0);
+    }
+
+    #[test]
+    fn fold_lines_3_4() {
+        let mut rng = Rng::new(0);
+        let mut ms = MemoryState::new(6, 3, 2, true);
+        ms.mem_x = randm(&mut rng, 6, 3);
+        ms.mem_g = randm(&mut rng, 6, 2);
+        let x = randm(&mut rng, 6, 3);
+        let g = randm(&mut rng, 6, 2);
+        let eta = 0.04f32;
+        let (xhat, ghat) = ms.fold(&x, &g, eta);
+        let expect_x = ms.mem_x.add(&x.scale(eta.sqrt()));
+        let expect_g = ms.mem_g.add(&g.scale(eta.sqrt()));
+        assert!(xhat.max_abs_diff(&expect_x) < 1e-6);
+        assert!(ghat.max_abs_diff(&expect_g) < 1e-6);
+    }
+
+    #[test]
+    fn update_lines_8_9_partitions_rows() {
+        let mut rng = Rng::new(1);
+        let mut ms = MemoryState::new(10, 4, 3, true);
+        let xhat = randm(&mut rng, 10, 4);
+        let ghat = randm(&mut rng, 10, 3);
+        let keep: Vec<f32> = (0..10).map(|i| (i % 2) as f32).collect();
+        ms.update(&xhat, &ghat, &keep);
+        for m in 0..10 {
+            if keep[m] == 1.0 {
+                assert_eq!(ms.mem_x.row(m), xhat.row(m));
+                assert_eq!(ms.mem_g.row(m), ghat.row(m));
+            } else {
+                assert!(ms.mem_x.row(m).iter().all(|&v| v == 0.0));
+                assert!(ms.mem_g.row(m).iter().all(|&v| v == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn disabled_memory_stays_zero() {
+        let mut rng = Rng::new(2);
+        let mut ms = MemoryState::new(5, 3, 1, false);
+        let xhat = randm(&mut rng, 5, 3);
+        let ghat = randm(&mut rng, 5, 1);
+        ms.update(&xhat, &ghat, &vec![1.0; 5]);
+        assert!(ms.is_zero());
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut rng = Rng::new(3);
+        let mut ms = MemoryState::new(4, 2, 2, true);
+        ms.update(
+            &randm(&mut rng, 4, 2),
+            &randm(&mut rng, 4, 2),
+            &vec![1.0; 4],
+        );
+        assert!(!ms.is_zero());
+        ms.reset();
+        assert!(ms.is_zero());
+    }
+
+    #[test]
+    fn eq7_expansion_identity() {
+        // At t=2 with full selection, the applied gradient decomposes into
+        // the fresh term plus the three memory cross terms of eq. (7).
+        let mut rng = Rng::new(4);
+        let (m, n, p) = (12, 5, 3);
+        let eta = 1.0f32; // paper sets eta_t = 1 in the expansion
+        let mut ms = MemoryState::new(m, n, p, true);
+
+        // t=1: select half the rows, defer the rest
+        let x1 = randm(&mut rng, m, n);
+        let g1 = randm(&mut rng, m, p);
+        let (xh1, gh1) = ms.fold(&x1, &g1, eta);
+        let keep: Vec<f32> = (0..m).map(|i| (i < m / 2) as u32 as f32).collect();
+        ms.update(&xh1, &gh1, &keep);
+
+        // t=2: full selection ⇒ Ŵ*_2 = (m^X + X_2)^T (m^G + G_2)
+        let x2 = randm(&mut rng, m, n);
+        let g2 = randm(&mut rng, m, p);
+        let (xh2, gh2) = ms.fold(&x2, &g2, eta);
+        let w_full = ops::matmul_tn(&xh2, &gh2);
+
+        let t_fresh = ops::matmul_tn(&x2, &g2);
+        let t_mem = ops::matmul_tn(&ms.mem_x, &ms.mem_g);
+        let t_cross1 = ops::matmul_tn(&ms.mem_x, &g2);
+        let t_cross2 = ops::matmul_tn(&x2, &ms.mem_g);
+        let sum = t_fresh.add(&t_mem).add(&t_cross1).add(&t_cross2);
+        assert!(w_full.max_abs_diff(&sum) < 1e-4);
+    }
+}

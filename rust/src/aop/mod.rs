@@ -1,0 +1,25 @@
+//! Mem-AOP-GD core: selection policies, error-feedback memory, the native
+//! single-layer engine, and FLOP accounting.
+//!
+//! This module is the paper's contribution (Sec. III) as a library:
+//!
+//! * [`policy`] — `out_K` operators: topK / randK / weightedK (with and
+//!   without replacement) plus the exact baseline;
+//! * [`memory`] — the `m^X` / `m^G` error-feedback state (alg. lines 3-4,
+//!   8-9);
+//! * [`engine`] — a pure-Rust Mem-AOP-GD step, the oracle for the HLO path
+//!   and the baseline comparator for the benches;
+//! * [`flops`] — exact vs compaction-regime cost model backing the
+//!   computational-reduction claims.
+
+pub mod analysis;
+pub mod engine;
+pub mod flops;
+pub mod memory;
+pub mod optimizer;
+pub mod policy;
+
+pub use engine::{AopEngine, StepStats};
+pub use memory::MemoryState;
+pub use optimizer::{OptState, Optimizer};
+pub use policy::{Policy, Selection};

@@ -1,0 +1,239 @@
+//! Optimizers consuming the AOP-approximated gradient (paper Remark 1:
+//! "Mem-AOP-GD is independent from the optimizer, since it only aids the
+//! approximate computation of the gradient weight").
+//!
+//! Here the engine produces the *raw* approximate gradient (memory folded
+//! with η_t = 1, so Ŵ* estimates `X^T G` itself) and the optimizer owns
+//! the step size: plain SGD reproduces Algorithm 1 exactly; momentum and
+//! Adam exercise the Remark-1 claim that the approximation composes with
+//! stateful optimizers (Adam's second moment is driven by the same
+//! approximate gradient).
+
+use crate::tensor::Matrix;
+
+/// First-order optimizer over a single weight matrix + bias.
+#[derive(Debug, Clone)]
+pub enum Optimizer {
+    /// `W -= lr * g`.
+    Sgd { lr: f32 },
+    /// Heavy-ball: `v = beta v + g; W -= lr v`.
+    Momentum { lr: f32, beta: f32 },
+    /// Adam (Kingma & Ba, ref. [14] of the paper).
+    Adam { lr: f32, beta1: f32, beta2: f32, eps: f32 },
+}
+
+impl Optimizer {
+    pub fn adam(lr: f32) -> Optimizer {
+        Optimizer::Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Optimizer::Sgd { .. } => "sgd",
+            Optimizer::Momentum { .. } => "momentum",
+            Optimizer::Adam { .. } => "adam",
+        }
+    }
+
+    pub fn parse(s: &str, lr: f32) -> Option<Optimizer> {
+        Some(match s {
+            "sgd" => Optimizer::Sgd { lr },
+            "momentum" => Optimizer::Momentum { lr, beta: 0.9 },
+            "adam" => Optimizer::adam(lr),
+            _ => return None,
+        })
+    }
+}
+
+/// Mutable optimizer state for one (W, b) pair.
+#[derive(Debug, Clone)]
+pub struct OptState {
+    /// First moment / velocity for W (momentum, adam).
+    m_w: Option<Matrix>,
+    /// Second moment for W (adam).
+    v_w: Option<Matrix>,
+    m_b: Vec<f32>,
+    v_b: Vec<f32>,
+    /// Step counter (adam bias correction).
+    t: u32,
+}
+
+impl OptState {
+    pub fn new(n: usize, p: usize) -> OptState {
+        OptState {
+            m_w: Some(Matrix::zeros(n, p)),
+            v_w: Some(Matrix::zeros(n, p)),
+            m_b: vec![0.0; p],
+            v_b: vec![0.0; p],
+            t: 0,
+        }
+    }
+
+    /// Apply one update with gradient estimates `gw` (matrix) and `gb`
+    /// (vector), mutating `w` and `b` in place.
+    pub fn apply(
+        &mut self,
+        opt: &Optimizer,
+        w: &mut Matrix,
+        b: &mut [f32],
+        gw: &Matrix,
+        gb: &[f32],
+    ) {
+        self.t += 1;
+        match *opt {
+            Optimizer::Sgd { lr } => {
+                w.axpy(-lr, gw);
+                for (bv, &g) in b.iter_mut().zip(gb.iter()) {
+                    *bv -= lr * g;
+                }
+            }
+            Optimizer::Momentum { lr, beta } => {
+                let v = self.m_w.as_mut().unwrap();
+                for (vv, &g) in v.data_mut().iter_mut().zip(gw.data().iter()) {
+                    *vv = beta * *vv + g;
+                }
+                w.axpy(-lr, v);
+                for i in 0..b.len() {
+                    self.m_b[i] = beta * self.m_b[i] + gb[i];
+                    b[i] -= lr * self.m_b[i];
+                }
+            }
+            Optimizer::Adam { lr, beta1, beta2, eps } => {
+                let bc1 = 1.0 - beta1.powi(self.t as i32);
+                let bc2 = 1.0 - beta2.powi(self.t as i32);
+                let m = self.m_w.as_mut().unwrap();
+                let v = self.v_w.as_mut().unwrap();
+                for ((wv, &g), (mv, vv)) in w
+                    .data_mut()
+                    .iter_mut()
+                    .zip(gw.data().iter())
+                    .zip(m.data_mut().iter_mut().zip(v.data_mut().iter_mut()))
+                {
+                    *mv = beta1 * *mv + (1.0 - beta1) * g;
+                    *vv = beta2 * *vv + (1.0 - beta2) * g * g;
+                    let mhat = *mv / bc1;
+                    let vhat = *vv / bc2;
+                    *wv -= lr * mhat / (vhat.sqrt() + eps);
+                }
+                for i in 0..b.len() {
+                    self.m_b[i] = beta1 * self.m_b[i] + (1.0 - beta1) * gb[i];
+                    self.v_b[i] = beta2 * self.v_b[i] + (1.0 - beta2) * gb[i] * gb[i];
+                    let mhat = self.m_b[i] / bc1;
+                    let vhat = self.v_b[i] / bc2;
+                    b[i] -= lr * mhat / (vhat.sqrt() + eps);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    fn quad_grad(w: &Matrix, target: &Matrix) -> Matrix {
+        // grad of 0.5||w - target||^2
+        w.sub(target)
+    }
+
+    #[test]
+    fn sgd_matches_closed_form() {
+        let mut w = Matrix::full(2, 2, 1.0);
+        let mut b = vec![1.0f32];
+        let g = Matrix::full(2, 2, 0.5);
+        let mut st = OptState::new(2, 2);
+        st.apply(&Optimizer::Sgd { lr: 0.1 }, &mut w, &mut b, &g, &[0.5]);
+        assert!((w[(0, 0)] - 0.95).abs() < 1e-6);
+        assert!((b[0] - 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut w = Matrix::zeros(1, 1);
+        let mut b = vec![];
+        let g = Matrix::full(1, 1, 1.0);
+        let opt = Optimizer::Momentum { lr: 1.0, beta: 0.5 };
+        let mut st = OptState::new(1, 1);
+        st.apply(&opt, &mut w, &mut b, &g, &[]);
+        assert!((w[(0, 0)] + 1.0).abs() < 1e-6); // v=1
+        st.apply(&opt, &mut w, &mut b, &g, &[]);
+        assert!((w[(0, 0)] + 2.5).abs() < 1e-6); // v=1.5
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let target = Matrix::from_vec(2, 1, vec![3.0, -2.0]);
+        let mut w = Matrix::zeros(2, 1);
+        let mut b = vec![];
+        let opt = Optimizer::adam(0.1);
+        let mut st = OptState::new(2, 1);
+        for _ in 0..500 {
+            let g = quad_grad(&w, &target);
+            st.apply(&opt, &mut w, &mut b, &g, &[]);
+        }
+        assert!(w.max_abs_diff(&target) < 0.05, "{w:?}");
+    }
+
+    #[test]
+    fn adam_invariant_to_gradient_scale() {
+        // Adam's update direction is scale-free: scaled gradients give
+        // (nearly) the same trajectory — relevant because the AOP
+        // estimate rescales gradient magnitude per step.
+        let target = Matrix::from_vec(1, 1, vec![1.0]);
+        let run = |scale: f32| {
+            let mut w = Matrix::zeros(1, 1);
+            let mut b = vec![];
+            let opt = Optimizer::adam(0.05);
+            let mut st = OptState::new(1, 1);
+            for _ in 0..100 {
+                let g = quad_grad(&w, &target).scale(scale);
+                st.apply(&opt, &mut w, &mut b, &g, &[]);
+            }
+            w[(0, 0)]
+        };
+        assert!((run(1.0) - run(10.0)).abs() < 0.05);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Optimizer::parse("adam", 0.1).unwrap().name(), "adam");
+        assert_eq!(Optimizer::parse("sgd", 0.1).unwrap().name(), "sgd");
+        assert_eq!(Optimizer::parse("momentum", 0.1).unwrap().name(), "momentum");
+        assert!(Optimizer::parse("lbfgs", 0.1).is_none());
+    }
+
+    #[test]
+    fn aop_engine_with_adam_trains() {
+        // Remark 1 end-to-end: Adam fed by the Mem-AOP gradient estimate.
+        use crate::aop::engine::AopEngine;
+        use crate::aop::Policy;
+        use crate::model::LossKind;
+        use crate::tensor::init;
+        let mut rng = Rng::new(0);
+        let teacher = Matrix::from_fn(8, 1, |_, _| rng.normal());
+        let x = Matrix::from_fn(32, 8, |_, _| rng.normal());
+        let y = x.matmul(&teacher);
+        let mut e = AopEngine::new(
+            init::glorot_uniform(&mut rng, 8, 1),
+            LossKind::Mse,
+            32,
+            Policy::TopK,
+            8,
+            true,
+        );
+        let opt = Optimizer::adam(0.05);
+        let mut st = OptState::new(8, 1);
+        let before = e.evaluate(&x, &y).0;
+        for _ in 0..300 {
+            e.step_with_optimizer(&x, &y, &opt, &mut st, &mut rng);
+        }
+        let after = e.evaluate(&x, &y).0;
+        assert!(after < before * 0.05, "before={before} after={after}");
+    }
+}

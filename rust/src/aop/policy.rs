@@ -1,0 +1,300 @@
+//! Selection policies (`out_K` of alg. line 5 / Sec. II-B).
+//!
+//! Given the per-row scores `s_m = ||X̂_(m)|| · ||Ĝ_(m)||`, a policy picks
+//! the K outer products to evaluate and emits two vectors consumed by both
+//! the native and the HLO apply phase:
+//!
+//! * `sel_scale[m]` — 0 for unselected rows; for selected rows, 1 for
+//!   topK/randK/weightedK-without-replacement (the paper's experiments),
+//!   or the unbiased `count/(p_m K)` weight for with-replacement
+//!   weightedK (eq. (5));
+//! * `keep[m]` — `1 - selected`, masked to all-zero when memory is off.
+//!
+//! The policy decision lives in the Rust coordinator (Layer 3), which is
+//! what lets a single compiled HLO artifact serve every policy and every K.
+
+use crate::tensor::rng::Rng;
+
+/// The `out_K` operator choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Policy {
+    /// Exact back-propagation (all M outer products) — the paper's blue
+    /// baseline curves.
+    Exact,
+    /// K largest `||X̂_(m)|| ||Ĝ_(m)||` scores.
+    TopK,
+    /// K uniformly random rows, without replacement.
+    RandK,
+    /// K rows ∝ scores, without replacement (paper's sampling mode).
+    WeightedK,
+    /// K rows ∝ scores, with replacement + unbiased eq. (5) scaling.
+    WeightedKReplacement,
+}
+
+impl Policy {
+    /// Parse CLI / config names.
+    pub fn parse(s: &str) -> Option<Policy> {
+        Some(match s {
+            "exact" | "baseline" => Policy::Exact,
+            "topk" => Policy::TopK,
+            "randk" => Policy::RandK,
+            "weightedk" => Policy::WeightedK,
+            "weightedk-repl" | "weightedk_repl" => Policy::WeightedKReplacement,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Exact => "exact",
+            Policy::TopK => "topk",
+            Policy::RandK => "randk",
+            Policy::WeightedK => "weightedk",
+            Policy::WeightedKReplacement => "weightedk-repl",
+        }
+    }
+
+    /// All policies the figure harness sweeps (paper's legend order).
+    pub fn figure_set() -> [Policy; 3] {
+        [Policy::TopK, Policy::WeightedK, Policy::RandK]
+    }
+
+    /// Whether the policy uses randomness (determines RNG consumption —
+    /// relevant for native/HLO decision parity).
+    pub fn is_stochastic(&self) -> bool {
+        !matches!(self, Policy::Exact | Policy::TopK)
+    }
+}
+
+/// Result of one selection decision.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    /// Per-row AOP scale (0 = not computed). Length M.
+    pub sel_scale: Vec<f32>,
+    /// Per-row memory retention (1 = row goes to memory). Length M.
+    pub keep: Vec<f32>,
+    /// The selected indices (deduplicated, unordered).
+    pub indices: Vec<usize>,
+}
+
+impl Selection {
+    /// Compaction-regime pairs (row, scale) for `masked_outer_compact`.
+    pub fn compact_pairs(&self) -> Vec<(usize, f32)> {
+        self.indices
+            .iter()
+            .map(|&i| (i, self.sel_scale[i]))
+            .collect()
+    }
+
+    /// Number of *distinct* outer products evaluated.
+    pub fn k_effective(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+/// Apply `policy` to `scores`, selecting `k` of `m = scores.len()` rows.
+///
+/// `memory` toggles the error-feedback retention of unselected rows
+/// (continuous vs dashed curves in Figs. 2-3). `rng` is consumed only by
+/// stochastic policies.
+pub fn select(
+    policy: Policy,
+    scores: &[f32],
+    k: usize,
+    memory: bool,
+    rng: &mut Rng,
+) -> Selection {
+    let m = scores.len();
+    assert!(k <= m, "k={k} > m={m}");
+    let mut sel_scale = vec![0.0f32; m];
+    let indices: Vec<usize> = match policy {
+        Policy::Exact => (0..m).collect(),
+        Policy::TopK => top_k_indices(scores, k),
+        Policy::RandK => rng.sample_without_replacement(m, k),
+        Policy::WeightedK => rng.weighted_sample_without_replacement(scores, k),
+        Policy::WeightedKReplacement => {
+            let total: f64 = scores.iter().map(|&s| s.max(0.0) as f64).sum();
+            let draws = rng.weighted_sample_with_replacement(scores, k);
+            let mut counts = vec![0u32; m];
+            for &i in &draws {
+                counts[i] += 1;
+            }
+            let mut idx = Vec::new();
+            for (i, &c) in counts.iter().enumerate() {
+                if c > 0 {
+                    let p = (scores[i].max(0.0) as f64 / total).max(1e-30);
+                    sel_scale[i] = (c as f64 / (p * k as f64)) as f32;
+                    idx.push(i);
+                }
+            }
+            // scales already set; mark keep below and return
+            let keep = keep_vector(&idx, m, memory, policy);
+            return Selection {
+                sel_scale,
+                keep,
+                indices: idx,
+            };
+        }
+    };
+    for &i in &indices {
+        sel_scale[i] = 1.0;
+    }
+    let keep = keep_vector(&indices, m, memory, policy);
+    Selection {
+        sel_scale,
+        keep,
+        indices,
+    }
+}
+
+fn keep_vector(indices: &[usize], m: usize, memory: bool, policy: Policy) -> Vec<f32> {
+    if !memory || policy == Policy::Exact {
+        return vec![0.0; m];
+    }
+    let mut keep = vec![1.0f32; m];
+    for &i in indices {
+        keep[i] = 0.0;
+    }
+    keep
+}
+
+/// Indices of the K largest scores. Uses `select_nth_unstable` (O(m) on
+/// average) instead of a full sort — this sits on the per-step hot path.
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let m = scores.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    if k >= m {
+        return (0..m).collect();
+    }
+    let mut idx: Vec<usize> = (0..m).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            // tie-break on index for determinism across partition orders
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(42)
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in [
+            Policy::Exact,
+            Policy::TopK,
+            Policy::RandK,
+            Policy::WeightedK,
+            Policy::WeightedKReplacement,
+        ] {
+            assert_eq!(Policy::parse(p.name()), Some(p));
+        }
+        assert_eq!(Policy::parse("nope"), None);
+        assert_eq!(Policy::parse("baseline"), Some(Policy::Exact));
+    }
+
+    #[test]
+    fn top_k_selects_largest() {
+        let scores = [0.1, 5.0, 0.2, 3.0, 0.05, 4.0];
+        let mut idx = top_k_indices(&scores, 3);
+        idx.sort_unstable();
+        assert_eq!(idx, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn top_k_edge_cases() {
+        assert!(top_k_indices(&[1.0, 2.0], 0).is_empty());
+        assert_eq!(top_k_indices(&[1.0, 2.0], 2).len(), 2);
+        assert_eq!(top_k_indices(&[1.0, 2.0], 5).len(), 2);
+    }
+
+    #[test]
+    fn top_k_deterministic_under_ties() {
+        let scores = vec![1.0f32; 10];
+        let mut a = top_k_indices(&scores, 4);
+        let mut b = top_k_indices(&scores, 4);
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+        assert_eq!(a, vec![0, 1, 2, 3]); // index tie-break
+    }
+
+    #[test]
+    fn exact_selects_all_and_keeps_nothing() {
+        let s = select(Policy::Exact, &[1.0, 2.0, 3.0], 2, true, &mut rng());
+        assert_eq!(s.indices.len(), 3);
+        assert!(s.sel_scale.iter().all(|&v| v == 1.0));
+        assert!(s.keep.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn selection_partitions_rows_with_memory() {
+        let scores: Vec<f32> = (0..20).map(|i| (i as f32).sin().abs() + 0.1).collect();
+        for policy in [Policy::TopK, Policy::RandK, Policy::WeightedK] {
+            let s = select(policy, &scores, 7, true, &mut rng());
+            assert_eq!(s.k_effective(), 7, "{policy:?}");
+            for m in 0..20 {
+                let selected = s.sel_scale[m] != 0.0;
+                let kept = s.keep[m] != 0.0;
+                assert!(selected ^ kept, "{policy:?} row {m}: sel xor keep violated");
+            }
+        }
+    }
+
+    #[test]
+    fn no_memory_keeps_nothing() {
+        let scores = vec![1.0f32; 10];
+        let s = select(Policy::TopK, &scores, 3, false, &mut rng());
+        assert!(s.keep.iter().all(|&v| v == 0.0));
+        assert_eq!(s.k_effective(), 3);
+    }
+
+    #[test]
+    fn weighted_with_replacement_scales_unbiased() {
+        // mean of sel_scale over many draws ≈ 1 for each row
+        let scores = [1.0f32, 2.0, 3.0, 4.0];
+        let mut r = rng();
+        let mut acc = [0.0f64; 4];
+        let trials = 20000;
+        for _ in 0..trials {
+            let s = select(Policy::WeightedKReplacement, &scores, 2, false, &mut r);
+            for i in 0..4 {
+                acc[i] += s.sel_scale[i] as f64;
+            }
+        }
+        for (i, a) in acc.iter().enumerate() {
+            let mean = a / trials as f64;
+            assert!((mean - 1.0).abs() < 0.1, "row {i}: mean scale {mean}");
+        }
+    }
+
+    #[test]
+    fn compact_pairs_match_scales() {
+        let scores = [5.0f32, 1.0, 4.0, 2.0];
+        let s = select(Policy::TopK, &scores, 2, true, &mut rng());
+        let pairs = s.compact_pairs();
+        assert_eq!(pairs.len(), 2);
+        for (i, sc) in pairs {
+            assert_eq!(sc, s.sel_scale[i]);
+            assert!(sc == 1.0);
+        }
+    }
+
+    #[test]
+    fn stochastic_flag() {
+        assert!(!Policy::Exact.is_stochastic());
+        assert!(!Policy::TopK.is_stochastic());
+        assert!(Policy::RandK.is_stochastic());
+        assert!(Policy::WeightedK.is_stochastic());
+    }
+}

@@ -1,0 +1,269 @@
+//! Checkpointing: durable snapshots of training state (weights, bias,
+//! error-feedback memories, step counter) in a self-describing binary
+//! format, so long sweeps can be resumed and final models shipped.
+//!
+//! Format (`MAOP1`, little-endian):
+//!
+//! ```text
+//! magic  b"MAOP1\n"
+//! u32    number of named tensors
+//! per tensor:
+//!   u32        name length, then name bytes (utf-8)
+//!   u32 u32    rows, cols          (vectors: rows=len, cols=1 tagged 0?)
+//!   u8         rank (1 = vector, 2 = matrix)
+//!   f32 * n    row-major data
+//! ```
+//!
+//! Integrity: a trailing u64 FNV-1a checksum over everything before it.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Matrix;
+
+const MAGIC: &[u8; 6] = b"MAOP1\n";
+
+/// A named collection of tensors (weights, biases, memories).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Checkpoint {
+    entries: BTreeMap<String, Entry>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Entry {
+    Vector(Vec<f32>),
+    Matrix(Matrix),
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put_matrix(&mut self, name: &str, m: &Matrix) {
+        self.entries
+            .insert(name.to_string(), Entry::Matrix(m.clone()));
+    }
+
+    pub fn put_vector(&mut self, name: &str, v: &[f32]) {
+        self.entries
+            .insert(name.to_string(), Entry::Vector(v.to_vec()));
+    }
+
+    /// Scalars ride as 1-element vectors (e.g. the step counter).
+    pub fn put_scalar(&mut self, name: &str, v: f32) {
+        self.put_vector(name, &[v]);
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn matrix(&self, name: &str) -> Result<&Matrix> {
+        match self.entries.get(name) {
+            Some(Entry::Matrix(m)) => Ok(m),
+            Some(Entry::Vector(_)) => bail!("'{name}' is a vector, not a matrix"),
+            None => bail!("checkpoint has no entry '{name}'"),
+        }
+    }
+
+    pub fn vector(&self, name: &str) -> Result<&[f32]> {
+        match self.entries.get(name) {
+            Some(Entry::Vector(v)) => Ok(v),
+            Some(Entry::Matrix(_)) => bail!("'{name}' is a matrix, not a vector"),
+            None => bail!("checkpoint has no entry '{name}'"),
+        }
+    }
+
+    pub fn scalar(&self, name: &str) -> Result<f32> {
+        let v = self.vector(name)?;
+        anyhow::ensure!(v.len() == 1, "'{name}' is not a scalar");
+        Ok(v[0])
+    }
+
+    /// Serialize to bytes (MAOP1 + checksum).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for (name, e) in &self.entries {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            match e {
+                Entry::Vector(v) => {
+                    out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                    out.extend_from_slice(&1u32.to_le_bytes());
+                    out.push(1);
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                Entry::Matrix(m) => {
+                    out.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+                    out.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+                    out.push(2);
+                    for x in m.data() {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse from bytes, verifying magic and checksum.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        if bytes.len() < MAGIC.len() + 12 {
+            bail!("checkpoint truncated");
+        }
+        let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+        if fnv1a(body) != stored {
+            bail!("checkpoint checksum mismatch (corrupt file)");
+        }
+        let mut r = body;
+        let mut magic = [0u8; 6];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let mut u32buf = [0u8; 4];
+        let mut read_u32 = |r: &mut &[u8]| -> Result<u32> {
+            r.read_exact(&mut u32buf)?;
+            Ok(u32::from_le_bytes(u32buf))
+        };
+        let count = read_u32(&mut r)?;
+        let mut cp = Checkpoint::new();
+        for _ in 0..count {
+            let nlen = read_u32(&mut r)? as usize;
+            let mut nbuf = vec![0u8; nlen];
+            r.read_exact(&mut nbuf)?;
+            let name = String::from_utf8(nbuf).map_err(|e| anyhow!("bad name: {e}"))?;
+            let rows = read_u32(&mut r)? as usize;
+            let cols = read_u32(&mut r)? as usize;
+            let mut rank = [0u8; 1];
+            r.read_exact(&mut rank)?;
+            let n = rows
+                .checked_mul(cols)
+                .ok_or_else(|| anyhow!("tensor too large"))?;
+            let mut data = vec![0f32; n];
+            let mut fbuf = [0u8; 4];
+            for d in data.iter_mut() {
+                r.read_exact(&mut fbuf)?;
+                *d = f32::from_le_bytes(fbuf);
+            }
+            match rank[0] {
+                1 => {
+                    cp.entries.insert(name, Entry::Vector(data));
+                }
+                2 => {
+                    cp.entries
+                        .insert(name, Entry::Matrix(Matrix::from_vec(rows, cols, data)));
+                }
+                k => bail!("bad rank tag {k}"),
+            }
+        }
+        Ok(cp)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    fn sample() -> Checkpoint {
+        let mut rng = Rng::new(0);
+        let mut cp = Checkpoint::new();
+        cp.put_matrix("w", &Matrix::from_fn(16, 4, |_, _| rng.normal()));
+        cp.put_matrix("mem_x", &Matrix::from_fn(8, 16, |_, _| rng.normal()));
+        cp.put_vector("b", &[0.1, -0.2, 0.3, 0.0]);
+        cp.put_scalar("step", 1234.0);
+        cp
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let cp = sample();
+        let parsed = Checkpoint::from_bytes(&cp.to_bytes()).unwrap();
+        assert_eq!(cp, parsed);
+        assert_eq!(parsed.scalar("step").unwrap(), 1234.0);
+        assert_eq!(parsed.vector("b").unwrap().len(), 4);
+        assert_eq!(parsed.matrix("w").unwrap().shape(), (16, 4));
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let dir = std::env::temp_dir().join(format!("memaop_ckpt_{}", std::process::id()));
+        let path = dir.join("model.maop");
+        let cp = sample();
+        cp.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(cp, loaded);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let cp = sample();
+        let mut bytes = cp.to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("checksum"));
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let cp = sample();
+        let bytes = cp.to_bytes();
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        assert!(Checkpoint::from_bytes(&bytes[..4]).is_err());
+    }
+
+    #[test]
+    fn type_confusion_rejected() {
+        let cp = sample();
+        assert!(cp.matrix("b").is_err());
+        assert!(cp.vector("w").is_err());
+        assert!(cp.scalar("b").is_err());
+        assert!(cp.matrix("nope").is_err());
+    }
+
+    #[test]
+    fn empty_checkpoint_roundtrips() {
+        let cp = Checkpoint::new();
+        let parsed = Checkpoint::from_bytes(&cp.to_bytes()).unwrap();
+        assert!(parsed.names().is_empty());
+    }
+}

@@ -1,0 +1,436 @@
+//! Experiment configuration and the paper's Tab. I presets.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::aop::Policy;
+use crate::model::LossKind;
+use crate::util::json::{self, Json};
+
+/// Which of the paper's two workloads (plus dataset substitution scale).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    /// Building-energy regression (16 → 1, MSE). Tab. I column 1.
+    Energy,
+    /// Digit classification (784 → 10 + softmax, CCE). Tab. I column 2.
+    Mnist,
+}
+
+impl Task {
+    pub fn parse(s: &str) -> Option<Task> {
+        Some(match s {
+            "energy" => Task::Energy,
+            "mnist" => Task::Mnist,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Energy => "energy",
+            Task::Mnist => "mnist",
+        }
+    }
+
+    pub fn loss(&self) -> LossKind {
+        match self {
+            Task::Energy => LossKind::Mse,
+            Task::Mnist => LossKind::SoftmaxCrossEntropy,
+        }
+    }
+
+    /// (n_in, n_out) of the paper's single dense layer.
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            Task::Energy => (16, 1),
+            Task::Mnist => (784, 10),
+        }
+    }
+
+    /// Tab. I mini-batch size — this is the paper's M (outer products per
+    /// update).
+    pub fn batch(&self) -> usize {
+        match self {
+            Task::Energy => 144,
+            Task::Mnist => 64,
+        }
+    }
+
+    /// Tab. I epochs.
+    pub fn epochs(&self) -> usize {
+        match self {
+            Task::Energy => 100,
+            Task::Mnist => 30,
+        }
+    }
+
+    /// The K sweep of Figs. 2/3.
+    pub fn figure_ks(&self) -> [usize; 3] {
+        match self {
+            Task::Energy => [18, 9, 3],
+            Task::Mnist => [32, 16, 8],
+        }
+    }
+
+    /// Validation batch used by the `*_eval` artifacts.
+    pub fn eval_batch(&self) -> usize {
+        match self {
+            Task::Energy => 192, // the whole Tab. I validation split
+            Task::Mnist => 64,
+        }
+    }
+}
+
+/// Execution backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust reference implementation (oracle / comparator).
+    Native,
+    /// AOT HLO artifacts executed via PJRT (the production path).
+    Hlo,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        Some(match s {
+            "native" => Backend::Native,
+            "hlo" | "pjrt" => Backend::Hlo,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Hlo => "hlo",
+        }
+    }
+}
+
+/// Learning-rate schedule (extension beyond the paper's constant η; the
+/// algorithm natively supports time-varying η_t — it enters the memory
+/// folding as √η_t — and the HLO artifacts take η as a runtime input, so
+/// schedules need no recompilation).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    /// η_t = lr (the paper's setting).
+    Constant,
+    /// η_t = lr · gamma^(epoch / every)   (integer division).
+    StepDecay { every: usize, gamma: f32 },
+    /// Cosine anneal from lr to lr·min_frac over the run.
+    Cosine { min_frac: f32 },
+}
+
+impl LrSchedule {
+    /// η for a 1-based epoch index.
+    pub fn lr_at(&self, base: f32, epoch: usize, total_epochs: usize) -> f32 {
+        match self {
+            LrSchedule::Constant => base,
+            LrSchedule::StepDecay { every, gamma } => {
+                base * gamma.powi(((epoch - 1) / every.max(&1)) as i32)
+            }
+            LrSchedule::Cosine { min_frac } => {
+                let t = (epoch - 1) as f32 / (total_epochs.max(2) - 1) as f32;
+                let floor = base * min_frac;
+                floor + 0.5 * (base - floor) * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LrSchedule> {
+        if s == "constant" {
+            return Some(LrSchedule::Constant);
+        }
+        if let Some(rest) = s.strip_prefix("step:") {
+            // step:<every>:<gamma>
+            let mut it = rest.split(':');
+            let every = it.next()?.parse().ok()?;
+            let gamma = it.next()?.parse().ok()?;
+            return Some(LrSchedule::StepDecay { every, gamma });
+        }
+        if let Some(rest) = s.strip_prefix("cosine:") {
+            return Some(LrSchedule::Cosine {
+                min_frac: rest.parse().ok()?,
+            });
+        }
+        None
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            LrSchedule::Constant => "constant".into(),
+            LrSchedule::StepDecay { every, gamma } => format!("step:{every}:{gamma}"),
+            LrSchedule::Cosine { min_frac } => format!("cosine:{min_frac}"),
+        }
+    }
+}
+
+/// Full specification of one training run.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub task: Task,
+    pub policy: Policy,
+    /// Outer products kept per update (K ≤ M). Ignored by `Exact`.
+    pub k: usize,
+    /// Error-feedback memory on/off (continuous vs dashed curves).
+    pub memory: bool,
+    pub epochs: usize,
+    pub lr: f32,
+    /// Per-epoch η schedule (Constant reproduces the paper).
+    pub schedule: LrSchedule,
+    pub seed: u64,
+    pub backend: Backend,
+    /// Fraction of the Tab. I dataset size to generate (1.0 = paper
+    /// scale). Only affects mnist (60k/10k is expensive on CPU).
+    pub data_scale: f32,
+}
+
+impl ExperimentConfig {
+    /// Tab. I column 1: energy regression baseline configuration.
+    pub fn energy_preset() -> Self {
+        ExperimentConfig {
+            task: Task::Energy,
+            policy: Policy::Exact,
+            k: 144,
+            memory: false,
+            epochs: Task::Energy.epochs(),
+            lr: 0.01,
+            schedule: LrSchedule::Constant,
+            seed: 0,
+            backend: Backend::Native,
+            data_scale: 1.0,
+        }
+    }
+
+    /// Tab. I column 2: mnist classification baseline configuration.
+    pub fn mnist_preset() -> Self {
+        ExperimentConfig {
+            task: Task::Mnist,
+            policy: Policy::Exact,
+            k: 64,
+            memory: false,
+            epochs: Task::Mnist.epochs(),
+            lr: 0.01,
+            schedule: LrSchedule::Constant,
+            seed: 0,
+            backend: Backend::Native,
+            data_scale: 1.0,
+        }
+    }
+
+    /// Preset for a task name.
+    pub fn preset(task: Task) -> Self {
+        match task {
+            Task::Energy => Self::energy_preset(),
+            Task::Mnist => Self::mnist_preset(),
+        }
+    }
+
+    /// Series label in the paper's legend vocabulary, e.g. `baseline`,
+    /// `topk-mem`, `randk-nomem`.
+    pub fn label(&self) -> String {
+        if self.policy == Policy::Exact {
+            "baseline".to_string()
+        } else {
+            format!(
+                "{}-{}",
+                self.policy.name(),
+                if self.memory { "mem" } else { "nomem" }
+            )
+        }
+    }
+
+    /// M = mini-batch size (Tab. I).
+    pub fn m(&self) -> usize {
+        self.task.batch()
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.k == 0 || self.k > self.m() {
+            bail!("k={} out of range 1..={}", self.k, self.m());
+        }
+        if !(self.lr > 0.0 && self.lr.is_finite()) {
+            bail!("bad learning rate {}", self.lr);
+        }
+        if self.epochs == 0 {
+            bail!("epochs must be > 0");
+        }
+        if !(0.001..=1.0).contains(&self.data_scale) {
+            bail!("data_scale {} out of (0.001, 1.0]", self.data_scale);
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("task", json::s(self.task.name())),
+            ("policy", json::s(self.policy.name())),
+            ("k", json::num(self.k as f64)),
+            ("memory", Json::Bool(self.memory)),
+            ("epochs", json::num(self.epochs as f64)),
+            ("lr", json::num(self.lr as f64)),
+            ("schedule", json::s(&self.schedule.name())),
+            ("seed", json::num(self.seed as f64)),
+            ("backend", json::s(self.backend.name())),
+            ("data_scale", json::num(self.data_scale as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let gs = |k: &str| -> Result<&str> {
+            v.req(k)
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .ok_or_else(|| anyhow!("config: {k} not a string"))
+        };
+        let gn = |k: &str| -> Result<f64> {
+            v.req(k)
+                .map_err(|e| anyhow!("{e}"))?
+                .as_f64()
+                .ok_or_else(|| anyhow!("config: {k} not a number"))
+        };
+        let cfg = ExperimentConfig {
+            task: Task::parse(gs("task")?).ok_or_else(|| anyhow!("bad task"))?,
+            policy: Policy::parse(gs("policy")?).ok_or_else(|| anyhow!("bad policy"))?,
+            k: gn("k")? as usize,
+            memory: v
+                .req("memory")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_bool()
+                .ok_or_else(|| anyhow!("bad memory"))?,
+            epochs: gn("epochs")? as usize,
+            lr: gn("lr")? as f32,
+            schedule: match v.get("schedule").and_then(|s| s.as_str()) {
+                Some(s) => LrSchedule::parse(s).ok_or_else(|| anyhow!("bad schedule"))?,
+                None => LrSchedule::Constant,
+            },
+            seed: gn("seed")? as u64,
+            backend: Backend::parse(gs("backend")?).ok_or_else(|| anyhow!("bad backend"))?,
+            data_scale: gn("data_scale")? as f32,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Print Tab. I (the paper's hyperparameter table) from the presets.
+pub fn table_one_rows() -> Vec<Vec<String>> {
+    let e = ExperimentConfig::energy_preset();
+    let m = ExperimentConfig::mnist_preset();
+    let row = |name: &str, ev: String, mv: String| vec![name.to_string(), ev, mv];
+    vec![
+        row("Training Samples", "576".into(), "60k".into()),
+        row("Validation Samples", "192".into(), "10k".into()),
+        row("Optimizer", "SGD".into(), "SGD".into()),
+        row("Learning Rate", format!("{}", e.lr), format!("{}", m.lr)),
+        row("Loss", "MSE".into(), "Categorical Cross Entropy".into()),
+        row("Epochs", format!("{}", e.epochs), format!("{}", m.epochs)),
+        row("Mini-Batch Sizes", format!("{}", e.m()), format!("{}", m.m())),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_tab_1() {
+        let e = ExperimentConfig::energy_preset();
+        assert_eq!(e.m(), 144);
+        assert_eq!(e.epochs, 100);
+        assert_eq!(e.lr, 0.01);
+        assert_eq!(e.task.dims(), (16, 1));
+        let m = ExperimentConfig::mnist_preset();
+        assert_eq!(m.m(), 64);
+        assert_eq!(m.epochs, 30);
+        assert_eq!(m.task.dims(), (784, 10));
+        assert_eq!(m.task.figure_ks(), [32, 16, 8]);
+        assert_eq!(e.task.figure_ks(), [18, 9, 3]);
+    }
+
+    #[test]
+    fn labels() {
+        let mut c = ExperimentConfig::energy_preset();
+        assert_eq!(c.label(), "baseline");
+        c.policy = Policy::TopK;
+        c.memory = true;
+        assert_eq!(c.label(), "topk-mem");
+        c.memory = false;
+        assert_eq!(c.label(), "topk-nomem");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ExperimentConfig::mnist_preset();
+        c.policy = Policy::WeightedK;
+        c.k = 16;
+        c.memory = true;
+        c.seed = 42;
+        c.data_scale = 0.25;
+        let j = c.to_json();
+        let c2 = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c2.label(), c.label());
+        assert_eq!(c2.k, 16);
+        assert_eq!(c2.seed, 42);
+        assert_eq!(c2.data_scale, 0.25);
+        assert_eq!(c2.task, Task::Mnist);
+    }
+
+    #[test]
+    fn validation_rejects_bad() {
+        let mut c = ExperimentConfig::energy_preset();
+        c.k = 0;
+        assert!(c.validate().is_err());
+        c.k = 200; // > M=144
+        assert!(c.validate().is_err());
+        c.k = 18;
+        c.lr = -1.0;
+        assert!(c.validate().is_err());
+        c.lr = 0.01;
+        c.epochs = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn schedules() {
+        let c = LrSchedule::Constant;
+        assert_eq!(c.lr_at(0.01, 1, 100), 0.01);
+        assert_eq!(c.lr_at(0.01, 100, 100), 0.01);
+
+        let s = LrSchedule::StepDecay { every: 10, gamma: 0.5 };
+        assert_eq!(s.lr_at(1.0, 1, 100), 1.0);
+        assert_eq!(s.lr_at(1.0, 10, 100), 1.0);
+        assert_eq!(s.lr_at(1.0, 11, 100), 0.5);
+        assert_eq!(s.lr_at(1.0, 21, 100), 0.25);
+
+        let cos = LrSchedule::Cosine { min_frac: 0.1 };
+        assert!((cos.lr_at(1.0, 1, 50) - 1.0).abs() < 1e-6);
+        assert!((cos.lr_at(1.0, 50, 50) - 0.1).abs() < 1e-6);
+        let mid = cos.lr_at(1.0, 25, 50);
+        assert!(mid > 0.1 && mid < 1.0);
+
+        // parse round-trips
+        for sch in [c, s, cos] {
+            assert_eq!(LrSchedule::parse(&sch.name()), Some(sch));
+        }
+        assert_eq!(LrSchedule::parse("bogus"), None);
+        assert_eq!(LrSchedule::parse("step:10"), None);
+    }
+
+    #[test]
+    fn json_roundtrip_with_schedule() {
+        let mut c = ExperimentConfig::energy_preset();
+        c.schedule = LrSchedule::StepDecay { every: 25, gamma: 0.3 };
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.schedule, c.schedule);
+    }
+
+    #[test]
+    fn table_one_shape() {
+        let rows = table_one_rows();
+        assert_eq!(rows.len(), 7);
+        assert!(rows.iter().all(|r| r.len() == 3));
+        assert_eq!(rows[6][1], "144");
+        assert_eq!(rows[6][2], "64");
+    }
+}

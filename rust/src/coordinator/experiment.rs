@@ -1,0 +1,241 @@
+//! Run one configured experiment end-to-end and record its curve.
+//!
+//! Owns everything stochastic above the trainer so that the native and
+//! HLO backends make *identical* decisions for a given seed: dataset
+//! generation, epoch shuffling, and the selection-policy draws all come
+//! from seeded streams derived from `cfg.seed`. The backends then differ
+//! only in where the math runs — which is exactly what the
+//! `native_vs_hlo` cross-check integration test asserts.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::aop::{flops, policy};
+use crate::coordinator::config::{Backend, ExperimentConfig, Task};
+use crate::coordinator::hlo_trainer::HloTrainer;
+use crate::coordinator::native_trainer::NativeTrainer;
+use crate::data::{batcher::Batcher, digits, energy, Dataset};
+use crate::metrics::{EpochMetrics, RunCurve};
+use crate::runtime::Runtime;
+use crate::tensor::{rng::Rng, Matrix};
+
+/// Backend-agnostic single-layer training interface.
+///
+/// The step is split in two so the *caller* owns the policy decision
+/// (mirroring the two compiled phases of the HLO path).
+pub trait Trainer {
+    /// Update the learning rate (η_t enters the memory folding as √η_t;
+    /// on the HLO path η is a runtime input — no recompilation).
+    fn set_lr(&mut self, eta: f32);
+    /// Phase 1: returns (train loss, policy scores, bias-grad step).
+    fn fwd_score(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, Vec<f32>, Vec<f32>)>;
+    /// Phase 2: apply the selection; returns ||Ŵ*||_F.
+    fn apply(&mut self, sel: &policy::Selection) -> Result<f32>;
+    /// Validation loss and accuracy on one batch.
+    fn evaluate(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, f32)>;
+    /// Frobenius mass currently deferred in memory.
+    fn mem_fro(&self) -> f32;
+    /// Copy of (W, b) for cross-checks.
+    fn weight_snapshot(&self) -> (Matrix, Vec<f32>);
+}
+
+/// Result of one experiment.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub config: ExperimentConfig,
+    pub curve: RunCurve,
+    /// Final weights (for cross-checking backends).
+    pub final_w: Matrix,
+    pub final_b: Vec<f32>,
+}
+
+impl RunResult {
+    pub fn final_val_loss(&self) -> f32 {
+        self.curve.final_val_loss()
+    }
+}
+
+/// Generate the task's datasets (train, val) for a config.
+pub fn load_data(cfg: &ExperimentConfig) -> (Dataset, Dataset) {
+    match cfg.task {
+        Task::Energy => energy::energy_dataset(cfg.seed ^ 0xDA7A),
+        Task::Mnist => digits::mnist_like(cfg.data_scale, cfg.seed ^ 0xDA7A),
+    }
+}
+
+/// Run with the default backend resolution (creates a PJRT runtime if the
+/// config asks for the HLO backend).
+pub fn run(cfg: &ExperimentConfig) -> Result<RunResult> {
+    match cfg.backend {
+        Backend::Native => {
+            let trainer = NativeTrainer::new(cfg)?;
+            run_with_trainer(cfg, trainer)
+        }
+        Backend::Hlo => {
+            let rt = Runtime::from_default_artifacts()
+                .context("creating PJRT runtime (run `make artifacts`?)")?;
+            run_hlo(cfg, &rt)
+        }
+    }
+}
+
+/// Run on an existing runtime (lets callers share compiled artifacts
+/// across experiments).
+pub fn run_hlo(cfg: &ExperimentConfig, rt: &Runtime) -> Result<RunResult> {
+    let trainer = HloTrainer::new(cfg, rt)?;
+    run_with_trainer(cfg, trainer)
+}
+
+/// The epoch/step loop, generic over the backend.
+pub fn run_with_trainer<T: Trainer>(cfg: &ExperimentConfig, mut trainer: T) -> Result<RunResult> {
+    cfg.validate()?;
+    let (train, val) = load_data(cfg);
+    let m = cfg.m();
+    let (n, p) = cfg.task.dims();
+
+    let mut shuffle_rng = Rng::new(cfg.seed ^ 0x5A0FF);
+    let mut policy_rng = Rng::new(cfg.seed ^ 0x9011C4);
+    let mut batcher = Batcher::new(train.len(), m);
+    let mut curve = RunCurve::new(&cfg.label());
+    let mut cum_backward_flops: u64 = 0;
+
+    for epoch in 1..=cfg.epochs {
+        let t0 = Instant::now();
+        trainer.set_lr(cfg.schedule.lr_at(cfg.lr, epoch, cfg.epochs));
+        let batches = batcher.epoch_batches(&train, &mut shuffle_rng);
+        let mut loss_sum = 0.0f64;
+        let mut fro_sum = 0.0f64;
+        for b in &batches {
+            let (loss, scores, _db) = trainer.fwd_score(&b.x, &b.y)?;
+            let sel = policy::select(cfg.policy, &scores, cfg.k, cfg.memory, &mut policy_rng);
+            let fro = trainer.apply(&sel)?;
+            loss_sum += loss as f64;
+            fro_sum += fro as f64;
+            cum_backward_flops +=
+                flops::aop_step(m, n, p, sel.k_effective()).backward_only();
+        }
+        let (val_loss, val_acc) = evaluate_chunked(&mut trainer, &val, cfg.task.eval_batch())?;
+        curve.push(EpochMetrics {
+            epoch,
+            train_loss: (loss_sum / batches.len() as f64) as f32,
+            val_loss,
+            val_acc,
+            wstar_fro: (fro_sum / batches.len() as f64) as f32,
+            mem_fro: trainer.mem_fro(),
+            backward_flops: cum_backward_flops,
+            wall_s: t0.elapsed().as_secs_f64(),
+        });
+    }
+
+    let (final_w, final_b) = trainer.weight_snapshot();
+    Ok(RunResult {
+        config: cfg.clone(),
+        curve,
+        final_w,
+        final_b,
+    })
+}
+
+/// Validation in fixed-size chunks (drop-tail), matching the static batch
+/// dimension of the compiled `*_eval` artifacts. Returns sample-weighted
+/// mean loss/accuracy over the evaluated chunks.
+pub fn evaluate_chunked<T: Trainer>(
+    trainer: &mut T,
+    val: &Dataset,
+    chunk: usize,
+) -> Result<(f32, f32)> {
+    let n_chunks = val.len() / chunk;
+    anyhow::ensure!(n_chunks > 0, "validation set smaller than eval batch");
+    let mut loss = 0.0f64;
+    let mut acc = 0.0f64;
+    for c in 0..n_chunks {
+        let idx: Vec<usize> = (c * chunk..(c + 1) * chunk).collect();
+        let part = val.gather(&idx);
+        let (l, a) = trainer.evaluate(&part.x, &part.y)?;
+        loss += l as f64;
+        acc += a as f64;
+    }
+    Ok(((loss / n_chunks as f64) as f32, (acc / n_chunks as f64) as f32))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aop::Policy;
+
+    fn quick_energy(policy: Policy, memory: bool, k: usize) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::energy_preset();
+        cfg.policy = policy;
+        cfg.memory = memory;
+        cfg.k = k;
+        cfg.epochs = 12;
+        cfg
+    }
+
+    #[test]
+    fn native_energy_baseline_learns() {
+        let cfg = quick_energy(Policy::Exact, false, 144);
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.curve.epochs.len(), 12);
+        let first = r.curve.epochs[0].val_loss;
+        let last = r.final_val_loss();
+        assert!(last < first * 0.8, "first={first} last={last}");
+        assert!(r.final_w.is_finite());
+    }
+
+    #[test]
+    fn native_energy_topk_mem_learns() {
+        let cfg = quick_energy(Policy::TopK, true, 18);
+        let r = run(&cfg).unwrap();
+        assert!(r.final_val_loss() < r.curve.epochs[0].val_loss);
+        // memory must be holding deferred mass at the end of training
+        assert!(r.curve.epochs.last().unwrap().mem_fro > 0.0);
+    }
+
+    #[test]
+    fn flops_accounting_scales_with_k() {
+        let a = run(&quick_energy(Policy::TopK, true, 18)).unwrap();
+        let b = run(&quick_energy(Policy::Exact, false, 144)).unwrap();
+        let fa = a.curve.total_backward_flops();
+        let fb = b.curve.total_backward_flops();
+        // 18/144 = 1/8 of the backward cost
+        assert!((fa as f64 / fb as f64 - 0.125).abs() < 1e-9, "{fa} vs {fb}");
+    }
+
+    #[test]
+    fn same_seed_same_curve() {
+        let cfg = quick_energy(Policy::WeightedK, true, 9);
+        let a = run(&cfg).unwrap();
+        let b = run(&cfg).unwrap();
+        for (ma, mb) in a.curve.epochs.iter().zip(b.curve.epochs.iter()) {
+            assert_eq!(ma.val_loss, mb.val_loss);
+        }
+    }
+
+    #[test]
+    fn different_seed_different_curve() {
+        let mut cfg = quick_energy(Policy::RandK, true, 9);
+        let a = run(&cfg).unwrap();
+        cfg.seed = 1;
+        let b = run(&cfg).unwrap();
+        assert_ne!(
+            a.curve.final_val_loss(),
+            b.curve.final_val_loss()
+        );
+    }
+
+    #[test]
+    fn mnist_scaled_runs() {
+        let mut cfg = ExperimentConfig::mnist_preset();
+        cfg.data_scale = 0.02; // 1200 train / 200 val
+        cfg.epochs = 3;
+        cfg.policy = Policy::TopK;
+        cfg.k = 16;
+        cfg.memory = true;
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.curve.epochs.len(), 3);
+        let acc = r.curve.final_val_acc();
+        assert!(acc > 0.3, "acc={acc}"); // well above 10% chance
+    }
+}

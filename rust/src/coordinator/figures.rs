@@ -1,0 +1,262 @@
+//! Figure/table harness: regenerate every table and figure of the paper's
+//! evaluation section from scratch (DESIGN.md §4).
+//!
+//! * [`figure`] — Figs. 2/3: for each K of the task's sweep, run the 7
+//!   series, write `results/fig{2,3}_k{K}.csv` (wide CSV, one column per
+//!   series), append full records to `results/runs.jsonl`, and print a
+//!   paper-shape summary (who wins, memory-vs-no-memory gap);
+//! * [`table_one`] — print Tab. I from the config presets;
+//! * [`complexity`] — the Sec. I computational-reduction claim: FLOP
+//!   ratios and measured wall-clock of the AOP gradient vs K.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::aop::flops;
+use crate::coordinator::config::{Backend, ExperimentConfig, Task};
+use crate::coordinator::experiment::RunResult;
+use crate::coordinator::sweep;
+use crate::metrics::{self, print_table, RunCurve};
+
+/// Output locations for the harness.
+pub struct FigureOptions {
+    pub out_dir: PathBuf,
+    pub backend: Backend,
+    pub epochs: Option<usize>,
+    pub data_scale: f32,
+    pub seed: u64,
+    pub workers: usize,
+}
+
+impl Default for FigureOptions {
+    fn default() -> Self {
+        FigureOptions {
+            out_dir: PathBuf::from("results"),
+            backend: Backend::Native,
+            epochs: None,
+            data_scale: 1.0,
+            seed: 0,
+            workers: crate::util::pool::default_workers(),
+        }
+    }
+}
+
+/// Which paper figure a task regenerates.
+pub fn figure_number(task: Task) -> usize {
+    match task {
+        Task::Energy => 2,
+        Task::Mnist => 3,
+    }
+}
+
+/// Regenerate one paper figure (all three K panels). Returns the results
+/// grouped per K in sweep order.
+pub fn figure(task: Task, opts: &FigureOptions) -> Result<Vec<(usize, Vec<RunResult>)>> {
+    let fig = figure_number(task);
+    let mut base = ExperimentConfig::preset(task);
+    base.backend = opts.backend;
+    base.seed = opts.seed;
+    base.data_scale = opts.data_scale;
+    if let Some(e) = opts.epochs {
+        base.epochs = e;
+    }
+
+    let mut all = Vec::new();
+    for &k in &task.figure_ks() {
+        let configs = sweep::panel_configs(&base, k);
+        eprintln!(
+            "[fig{fig}] K={k} (M={}): running {} series on {} workers ({} backend)",
+            base.m(),
+            configs.len(),
+            opts.workers,
+            opts.backend.name()
+        );
+        let results = sweep::run_sweep(&configs, opts.workers);
+        let mut ok = Vec::new();
+        for r in results {
+            match r {
+                Ok(r) => ok.push(r),
+                Err(e) => eprintln!("[fig{fig}] series failed: {e:#}"),
+            }
+        }
+        // CSV panel
+        let curves: Vec<RunCurve> = ok.iter().map(|r| r.curve.clone()).collect();
+        let csv = opts.out_dir.join(format!("fig{fig}_k{k}.csv"));
+        metrics::write_curves_csv(&csv, &curves)?;
+        eprintln!("[fig{fig}] wrote {}", csv.display());
+        // JSONL full records
+        let jsonl = opts.out_dir.join("runs.jsonl");
+        for r in &ok {
+            let record = crate::util::json::obj(vec![
+                ("figure", crate::util::json::num(fig as f64)),
+                ("k", crate::util::json::num(k as f64)),
+                ("config", r.config.to_json()),
+                ("curve", r.curve.to_json()),
+            ]);
+            metrics::append_jsonl(&jsonl, &record)?;
+        }
+        print_panel_summary(fig, k, &ok);
+        all.push((k, ok));
+    }
+    Ok(all)
+}
+
+/// Console summary in the shape the paper's prose discusses a panel:
+/// final/tail losses per series and the memory-vs-no-memory contrast.
+pub fn print_panel_summary(fig: usize, k: usize, results: &[RunResult]) {
+    println!("\n=== Fig. {fig}, K = {k} (M = {}) ===", results.first().map(|r| r.config.m()).unwrap_or(0));
+    let tail = 5;
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let baseline_tail = results
+        .iter()
+        .find(|r| r.config.label() == "baseline")
+        .map(|r| r.curve.tail_mean_val_loss(tail))
+        .unwrap_or(f32::NAN);
+    for r in results {
+        let t = r.curve.tail_mean_val_loss(tail);
+        rows.push(vec![
+            r.config.label(),
+            format!("{:.5}", r.final_val_loss()),
+            format!("{:.5}", t),
+            format!("{:.5}", r.curve.best_val_loss()),
+            if r.config.label() == "baseline" {
+                "--".into()
+            } else {
+                format!("{:+.1}%", (t / baseline_tail - 1.0) * 100.0)
+            },
+            format!("{:.0}s", r.curve.total_wall_s()),
+        ]);
+    }
+    print_table(
+        &["series", "final", "tail-mean", "best", "vs baseline", "wall"],
+        &rows,
+    );
+    // who-wins line, mirroring the paper's reading of each panel
+    if let Some(best) = results
+        .iter()
+        .filter(|r| r.config.label() != "baseline")
+        .min_by(|a, b| {
+            a.curve
+                .tail_mean_val_loss(tail)
+                .partial_cmp(&b.curve.tail_mean_val_loss(tail))
+                .unwrap()
+        })
+    {
+        let bt = best.curve.tail_mean_val_loss(tail);
+        let verdict = if bt <= baseline_tail {
+            "Mem-AOP-GD beats exact back-propagation"
+        } else {
+            "exact back-propagation retains the lead"
+        };
+        println!(
+            "--> best approximate series: {} (tail {:.5} vs baseline {:.5}) — {}",
+            best.config.label(),
+            bt,
+            baseline_tail,
+            verdict
+        );
+    }
+}
+
+/// Print Tab. I.
+pub fn table_one() {
+    println!("Table I. Parameters and hyperparameters (from config presets)\n");
+    print_table(
+        &["", "Energy", "MNIST"],
+        &crate::coordinator::config::table_one_rows(),
+    );
+}
+
+/// The computational-complexity claim: FLOP model + measured native
+/// wall-clock of the weight-gradient computation across the paper's K
+/// sweep. Printed as a table; also written to `results/complexity.csv`.
+pub fn complexity(out_dir: &PathBuf) -> Result<()> {
+    use crate::tensor::{ops, rng::Rng, Matrix};
+    use std::time::Instant;
+
+    println!("Computational reduction of the AOP weight gradient (Sec. I claim)\n");
+    let mut rows = Vec::new();
+    let mut csv = String::from("task,m,n,p,k,ratio_flops,exact_us,aop_us,measured_ratio\n");
+    for (task, m, n, p) in [("energy", 144usize, 16usize, 1usize), ("mnist", 64, 784, 10)] {
+        let ks = if task == "energy" {
+            [144usize, 18, 9, 3]
+        } else {
+            [64usize, 32, 16, 8]
+        };
+        let mut rng = Rng::new(0);
+        let x = Matrix::from_fn(m, n, |_, _| rng.normal());
+        let g = Matrix::from_fn(m, p, |_, _| rng.normal());
+        // measured exact
+        let time_it = |f: &mut dyn FnMut()| -> f64 {
+            let reps = 200;
+            let t = Instant::now();
+            for _ in 0..reps {
+                f();
+            }
+            t.elapsed().as_secs_f64() * 1e6 / reps as f64
+        };
+        let exact_us = time_it(&mut || {
+            std::hint::black_box(ops::matmul_tn(&x, &g));
+        });
+        for &k in &ks {
+            let sel: Vec<(usize, f32)> = (0..k).map(|i| (i * (m / k.max(1)).max(1) % m, 1.0)).collect();
+            let aop_us = time_it(&mut || {
+                std::hint::black_box(ops::masked_outer_compact(&x, &g, &sel));
+            });
+            let ratio = flops::backward_reduction(m, n, p, k);
+            rows.push(vec![
+                task.to_string(),
+                format!("{k}/{m}"),
+                format!("{:.3}", ratio),
+                format!("{exact_us:.1}"),
+                format!("{aop_us:.1}"),
+                format!("{:.3}", aop_us / exact_us),
+            ]);
+            csv.push_str(&format!(
+                "{task},{m},{n},{p},{k},{ratio:.4},{exact_us:.2},{aop_us:.2},{:.4}\n",
+                aop_us / exact_us
+            ));
+        }
+    }
+    print_table(
+        &["task", "K/M", "FLOP ratio", "exact µs", "AOP µs", "measured ratio"],
+        &rows,
+    );
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(out_dir.join("complexity.csv"), csv)?;
+    println!("\nwrote {}", out_dir.join("complexity.csv").display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_numbers() {
+        assert_eq!(figure_number(Task::Energy), 2);
+        assert_eq!(figure_number(Task::Mnist), 3);
+    }
+
+    #[test]
+    fn tiny_figure_run_writes_csv() {
+        let dir = std::env::temp_dir().join(format!("memaop_fig_{}", std::process::id()));
+        let opts = FigureOptions {
+            out_dir: dir.clone(),
+            backend: Backend::Native,
+            epochs: Some(2),
+            data_scale: 1.0,
+            seed: 0,
+            workers: 4,
+        };
+        let res = figure(Task::Energy, &opts).unwrap();
+        assert_eq!(res.len(), 3); // three K panels
+        for (k, runs) in &res {
+            assert_eq!(runs.len(), 7, "K={k}");
+            assert!(dir.join(format!("fig2_k{k}.csv")).exists());
+        }
+        assert!(dir.join("runs.jsonl").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

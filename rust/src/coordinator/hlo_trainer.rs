@@ -1,0 +1,145 @@
+//! AOT/PJRT trainer: the production path.
+//!
+//! Drives the two-phase HLO artifacts of `python/compile/model.py`:
+//!
+//! 1. `"{task}_fwd_score"` — forward, loss, X̂/Ĝ memory folding, policy
+//!    scores, exact bias gradient (all computed on-device);
+//! 2. (Rust, between the phases) — the selection policy decides which
+//!    outer products to evaluate; this is the coordinator's contribution
+//!    and the reason one artifact serves every policy/K/memory setting;
+//! 3. `"{task}_apply"` — Pallas-AOP weight update + memory update.
+//!
+//! The model state (W, b, m^X, m^G) round-trips through host `Matrix`
+//! buffers each step. That is the honest cost model for a coordinator
+//! that owns state placement; see EXPERIMENTS.md §Perf for the measured
+//! overhead vs the native path.
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::aop::policy::Selection;
+use crate::coordinator::config::ExperimentConfig;
+use crate::coordinator::experiment::Trainer;
+use crate::runtime::{ArgRef, Executable, Runtime};
+use crate::tensor::{init, rng::Rng, Matrix};
+
+/// PJRT-backed single-dense-layer trainer.
+pub struct HloTrainer {
+    fwd: Rc<Executable>,
+    apply: Rc<Executable>,
+    eval: Rc<Executable>,
+    pub w: Matrix,
+    pub b: Vec<f32>,
+    mem_x: Matrix,
+    mem_g: Matrix,
+    eta: f32,
+    /// fwd_score outputs awaiting the policy decision.
+    pending: Option<(Matrix, Matrix, Vec<f32>)>, // xhat, ghat, db
+}
+
+impl HloTrainer {
+    /// Build against a runtime; compiles (or reuses cached) artifacts.
+    pub fn new(cfg: &ExperimentConfig, rt: &Runtime) -> Result<HloTrainer> {
+        let task = cfg.task.name();
+        let meta = rt.manifest.task(task)?;
+        let (n, p) = cfg.task.dims();
+        anyhow::ensure!(
+            meta.n_in == n && meta.n_out == p && meta.batch == cfg.m(),
+            "manifest/task mismatch: manifest {:?} vs config ({n},{p},{})",
+            meta,
+            cfg.m()
+        );
+        let mut wrng = Rng::new(cfg.seed ^ 0x57EED);
+        let w = init::glorot_uniform(&mut wrng, n, p);
+        Ok(HloTrainer {
+            fwd: rt
+                .load(&format!("{task}_fwd_score"))
+                .context("loading fwd_score artifact")?,
+            apply: rt
+                .load(&format!("{task}_apply"))
+                .context("loading apply artifact")?,
+            eval: rt
+                .load(&format!("{task}_eval"))
+                .context("loading eval artifact")?,
+            w,
+            b: vec![0.0; p],
+            mem_x: Matrix::zeros(cfg.m(), n),
+            mem_g: Matrix::zeros(cfg.m(), p),
+            eta: cfg.lr,
+            pending: None,
+        })
+    }
+}
+
+impl Trainer for HloTrainer {
+    fn set_lr(&mut self, eta: f32) {
+        self.eta = eta;
+    }
+
+    fn fwd_score(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, Vec<f32>, Vec<f32>)> {
+        let out = self.fwd.run_ref(&[
+            ArgRef::from(x),
+            ArgRef::from(y),
+            ArgRef::from(&self.w),
+            ArgRef::from(&self.b),
+            ArgRef::from(&self.mem_x),
+            ArgRef::from(&self.mem_g),
+            ArgRef::Scalar(self.eta),
+        ])?;
+        // outputs: loss, xhat, ghat, db, scores
+        let mut it = out.into_iter();
+        let loss = it.next().unwrap().as_scalar()?;
+        let xhat = it.next().unwrap().into_matrix()?;
+        let ghat = it.next().unwrap().into_matrix()?;
+        let db = it.next().unwrap().into_vector()?;
+        let scores = it.next().unwrap().into_vector()?;
+        self.pending = Some((xhat, ghat, db.clone()));
+        Ok((loss, scores, db))
+    }
+
+    fn apply(&mut self, sel: &Selection) -> Result<f32> {
+        let (xhat, ghat, db) = self
+            .pending
+            .take()
+            .expect("apply called without fwd_score");
+        let out = self.apply.run_ref(&[
+            ArgRef::from(&xhat),
+            ArgRef::from(&ghat),
+            ArgRef::from(&self.w),
+            ArgRef::from(&self.b),
+            ArgRef::from(&db),
+            ArgRef::from(&sel.sel_scale),
+            ArgRef::from(&sel.keep),
+        ])?;
+        // outputs: w_new, b_new, mem_x_new, mem_g_new, wstar_fro
+        let mut it = out.into_iter();
+        self.w = it.next().unwrap().into_matrix()?;
+        self.b = it.next().unwrap().into_vector()?;
+        self.mem_x = it.next().unwrap().into_matrix()?;
+        self.mem_g = it.next().unwrap().into_matrix()?;
+        it.next().unwrap().as_scalar()
+    }
+
+    fn evaluate(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, f32)> {
+        let out = self.eval.run_ref(&[
+            ArgRef::from(x),
+            ArgRef::from(y),
+            ArgRef::from(&self.w),
+            ArgRef::from(&self.b),
+        ])?;
+        Ok((out[0].as_scalar()?, out[1].as_scalar()?))
+    }
+
+    fn mem_fro(&self) -> f32 {
+        (self.mem_x.frobenius().powi(2) + self.mem_g.frobenius().powi(2)).sqrt()
+    }
+
+    fn weight_snapshot(&self) -> (Matrix, Vec<f32>) {
+        (self.w.clone(), self.b.clone())
+    }
+}
+
+// Execution-path tests live in rust/tests/native_vs_hlo.rs (they need the
+// built artifacts); nothing to unit-test here beyond what the compiler
+// already enforces.

@@ -1,0 +1,299 @@
+//! End-to-end multi-layer MLP training through the monolithic AOT
+//! artifacts (`mlp_exact`, `mlp_topk_mem`, ...).
+//!
+//! This is the extension beyond the paper's single-layer models: per-layer
+//! Mem-AOP-GD inside one compiled train-step graph (selection baked
+//! in-graph with the manifest's K), with the Rust coordinator supplying
+//! data, per-layer uniform noise (for the stochastic policies), the
+//! learning-rate schedule, and metric logging. Used by
+//! `examples/e2e_train.rs` and the e2e integration tests.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Dataset;
+use crate::metrics::{EpochMetrics, RunCurve};
+use crate::runtime::{ArgRef, Executable, Runtime};
+use crate::tensor::{init, rng::Rng, Matrix};
+
+/// Which compiled MLP variant to train.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MlpVariant {
+    Exact,
+    TopKMem,
+    TopKNoMem,
+    RandKMem,
+    WeightedKMem,
+}
+
+impl MlpVariant {
+    pub fn artifact(&self) -> &'static str {
+        match self {
+            MlpVariant::Exact => "mlp_exact",
+            MlpVariant::TopKMem => "mlp_topk_mem",
+            MlpVariant::TopKNoMem => "mlp_topk_nomem",
+            MlpVariant::RandKMem => "mlp_randk_mem",
+            MlpVariant::WeightedKMem => "mlp_weightedk_mem",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MlpVariant> {
+        Some(match s {
+            "exact" => MlpVariant::Exact,
+            "topk-mem" | "topk_mem" => MlpVariant::TopKMem,
+            "topk-nomem" | "topk_nomem" => MlpVariant::TopKNoMem,
+            "randk-mem" | "randk_mem" => MlpVariant::RandKMem,
+            "weightedk-mem" | "weightedk_mem" => MlpVariant::WeightedKMem,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            MlpVariant::Exact => "exact",
+            MlpVariant::TopKMem => "topk-mem",
+            MlpVariant::TopKNoMem => "topk-nomem",
+            MlpVariant::RandKMem => "randk-mem",
+            MlpVariant::WeightedKMem => "weightedk-mem",
+        }
+    }
+
+    pub fn all() -> [MlpVariant; 5] {
+        [
+            MlpVariant::Exact,
+            MlpVariant::TopKMem,
+            MlpVariant::TopKNoMem,
+            MlpVariant::RandKMem,
+            MlpVariant::WeightedKMem,
+        ]
+    }
+}
+
+/// Host-side MLP training state driven through the monolithic artifact.
+pub struct MlpDriver {
+    step_exe: Rc<Executable>,
+    eval_exe: Rc<Executable>,
+    pub layers: Vec<usize>,
+    pub batch: usize,
+    pub k: usize,
+    ws: Vec<Matrix>,
+    bs: Vec<Vec<f32>>,
+    mxs: Vec<Matrix>,
+    mgs: Vec<Matrix>,
+    noise_rng: Rng,
+    variant: MlpVariant,
+}
+
+/// One step's outputs.
+#[derive(Debug, Clone, Copy)]
+pub struct MlpStep {
+    pub loss: f32,
+    pub acc: f32,
+}
+
+impl MlpDriver {
+    pub fn new(rt: &Runtime, variant: MlpVariant, seed: u64) -> Result<MlpDriver> {
+        let meta = rt.manifest.mlp.clone();
+        let nl = meta.layers.len() - 1;
+        let mut wrng = Rng::new(seed ^ 0x317ED);
+        let ws: Vec<Matrix> = (0..nl)
+            .map(|i| init::glorot_uniform(&mut wrng, meta.layers[i], meta.layers[i + 1]))
+            .collect();
+        let bs: Vec<Vec<f32>> = (0..nl).map(|i| vec![0.0; meta.layers[i + 1]]).collect();
+        let mxs: Vec<Matrix> = (0..nl)
+            .map(|i| Matrix::zeros(meta.batch, meta.layers[i]))
+            .collect();
+        let mgs: Vec<Matrix> = (0..nl)
+            .map(|i| Matrix::zeros(meta.batch, meta.layers[i + 1]))
+            .collect();
+        Ok(MlpDriver {
+            step_exe: rt
+                .load(variant.artifact())
+                .with_context(|| format!("loading {}", variant.artifact()))?,
+            eval_exe: rt.load("mlp_eval")?,
+            layers: meta.layers,
+            batch: meta.batch,
+            k: meta.k,
+            ws,
+            bs,
+            mxs,
+            mgs,
+            noise_rng: Rng::new(seed ^ 0x90153),
+            variant,
+        })
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.ws
+            .iter()
+            .map(|w| w.rows() * w.cols())
+            .sum::<usize>()
+            + self.bs.iter().map(|b| b.len()).sum::<usize>()
+    }
+
+    pub fn variant(&self) -> MlpVariant {
+        self.variant
+    }
+
+    fn n_layers(&self) -> usize {
+        self.ws.len()
+    }
+
+    /// One compiled train step on a batch.
+    pub fn step(&mut self, x: &Matrix, y: &Matrix, eta: f32) -> Result<MlpStep> {
+        let nl = self.n_layers();
+        if x.rows() != self.batch {
+            bail!("batch {} != compiled batch {}", x.rows(), self.batch);
+        }
+        let noises: Vec<Vec<f32>> = (0..nl)
+            .map(|_| (0..self.batch).map(|_| self.noise_rng.uniform()).collect())
+            .collect();
+        let mut args: Vec<ArgRef<'_>> = Vec::with_capacity(2 + 5 * nl + 1);
+        args.push(ArgRef::from(x));
+        args.push(ArgRef::from(y));
+        for w in &self.ws {
+            args.push(ArgRef::from(w));
+        }
+        for b in &self.bs {
+            args.push(ArgRef::from(b));
+        }
+        for m in &self.mxs {
+            args.push(ArgRef::from(m));
+        }
+        for m in &self.mgs {
+            args.push(ArgRef::from(m));
+        }
+        for n in &noises {
+            args.push(ArgRef::from(n));
+        }
+        args.push(ArgRef::Scalar(eta));
+
+        let out = self.step_exe.run_ref(&args)?;
+        let mut it = out.into_iter();
+        let loss = it.next().unwrap().as_scalar()?;
+        let acc = it.next().unwrap().as_scalar()?;
+        for w in self.ws.iter_mut() {
+            *w = it.next().unwrap().into_matrix()?;
+        }
+        for b in self.bs.iter_mut() {
+            *b = it.next().unwrap().into_vector()?;
+        }
+        for m in self.mxs.iter_mut() {
+            *m = it.next().unwrap().into_matrix()?;
+        }
+        for m in self.mgs.iter_mut() {
+            *m = it.next().unwrap().into_matrix()?;
+        }
+        Ok(MlpStep { loss, acc })
+    }
+
+    /// Chunked validation over the compiled eval artifact.
+    pub fn evaluate(&self, val: &Dataset) -> Result<(f32, f32)> {
+        let n_chunks = val.len() / self.batch;
+        anyhow::ensure!(n_chunks > 0, "val set smaller than batch");
+        let (mut loss, mut acc) = (0.0f64, 0.0f64);
+        for c in 0..n_chunks {
+            let idx: Vec<usize> = (c * self.batch..(c + 1) * self.batch).collect();
+            let part = val.gather(&idx);
+            let mut args: Vec<ArgRef<'_>> = vec![ArgRef::from(&part.x), ArgRef::from(&part.y)];
+            for w in &self.ws {
+                args.push(ArgRef::from(w));
+            }
+            for b in &self.bs {
+                args.push(ArgRef::from(b));
+            }
+            let out = self.eval_exe.run_ref(&args)?;
+            loss += out[0].as_scalar()? as f64;
+            acc += out[1].as_scalar()? as f64;
+        }
+        Ok((
+            (loss / n_chunks as f64) as f32,
+            (acc / n_chunks as f64) as f32,
+        ))
+    }
+
+    /// Memory mass across layers (0 for no-mem variants).
+    pub fn mem_fro(&self) -> f32 {
+        let sq: f32 = self
+            .mxs
+            .iter()
+            .chain(self.mgs.iter())
+            .map(|m| m.frobenius().powi(2))
+            .sum();
+        sq.sqrt()
+    }
+}
+
+/// Train an MLP variant for `steps` steps over `train`, evaluating every
+/// `eval_every` steps; returns the recorded curve (one entry per eval).
+pub fn train_mlp(
+    rt: &Runtime,
+    variant: MlpVariant,
+    train: &Dataset,
+    val: &Dataset,
+    steps: usize,
+    eta: f32,
+    eval_every: usize,
+    seed: u64,
+) -> Result<(MlpDriver, RunCurve)> {
+    use crate::data::batcher::Batcher;
+    use std::time::Instant;
+
+    let mut driver = MlpDriver::new(rt, variant, seed)?;
+    let mut batcher = Batcher::new(train.len(), driver.batch);
+    let mut shuffle_rng = Rng::new(seed ^ 0x5A0FF);
+    let mut curve = RunCurve::new(variant.label());
+    let mut done = 0usize;
+    let mut t0 = Instant::now();
+    let mut loss_acc = 0.0f64;
+    let mut loss_n = 0usize;
+    'outer: loop {
+        let batches = batcher.epoch_batches(train, &mut shuffle_rng);
+        for b in &batches {
+            let st = driver.step(&b.x, &b.y, eta)?;
+            loss_acc += st.loss as f64;
+            loss_n += 1;
+            done += 1;
+            if done % eval_every == 0 || done == steps {
+                let (vl, va) = driver.evaluate(val)?;
+                curve.push(EpochMetrics {
+                    epoch: done,
+                    train_loss: (loss_acc / loss_n as f64) as f32,
+                    val_loss: vl,
+                    val_acc: va,
+                    wstar_fro: 0.0,
+                    mem_fro: driver.mem_fro(),
+                    backward_flops: 0,
+                    wall_s: t0.elapsed().as_secs_f64(),
+                });
+                t0 = Instant::now();
+                loss_acc = 0.0;
+                loss_n = 0;
+            }
+            if done >= steps {
+                break 'outer;
+            }
+        }
+    }
+    Ok((driver, curve))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for v in MlpVariant::all() {
+            assert_eq!(MlpVariant::parse(v.label()), Some(v));
+        }
+        assert!(MlpVariant::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn artifact_names_match_aot() {
+        assert_eq!(MlpVariant::Exact.artifact(), "mlp_exact");
+        assert_eq!(MlpVariant::WeightedKMem.artifact(), "mlp_weightedk_mem");
+    }
+}

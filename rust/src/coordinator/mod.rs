@@ -1,0 +1,22 @@
+//! Layer-3 coordinator: the training framework around the algorithm.
+//!
+//! * [`config`] — experiment configuration + Tab. I presets, JSON I/O;
+//! * [`experiment`] — run one configured experiment (native or HLO
+//!   backend) and produce a metrics curve;
+//! * [`hlo_trainer`] — the AOT path: drives the two-phase
+//!   `fwd_score`/`apply` artifacts with policy decisions made in Rust;
+//! * [`native_trainer`] — the pure-Rust oracle path (same math);
+//! * [`mlp_driver`] — end-to-end multi-layer MLP training through the
+//!   monolithic artifacts (e2e example backend);
+//! * [`sweep`] — parallel experiment fan-out;
+//! * [`figures`] — regenerate Fig. 2 / Fig. 3 / Tab. I / the complexity
+//!   claim from scratch, writing CSVs under `results/`.
+
+pub mod checkpoint;
+pub mod config;
+pub mod experiment;
+pub mod figures;
+pub mod hlo_trainer;
+pub mod mlp_driver;
+pub mod native_trainer;
+pub mod sweep;

@@ -1,0 +1,121 @@
+//! Pure-Rust trainer for the paper's single-layer tasks.
+//!
+//! The numerics oracle for the HLO path: identical math, identical policy
+//! decisions (both paths draw selections from the same seeded RNG stream
+//! in [`experiment`](crate::coordinator::experiment)), so curves must
+//! agree to f32 tolerance — enforced by `rust/tests/native_vs_hlo.rs`.
+
+use anyhow::Result;
+
+use crate::aop::engine::{AopEngine, FwdScore};
+use crate::aop::policy::Selection;
+use crate::coordinator::config::ExperimentConfig;
+use crate::coordinator::experiment::Trainer;
+use crate::tensor::{init, rng::Rng, Matrix};
+
+/// Native single-dense-layer trainer.
+pub struct NativeTrainer {
+    engine: AopEngine,
+    eta: f32,
+    /// Cached fwd_score output between `scores` and `apply` (the trait
+    /// splits the step so the caller owns the policy decision).
+    pending: Option<FwdScore>,
+}
+
+impl NativeTrainer {
+    pub fn new(cfg: &ExperimentConfig) -> Result<NativeTrainer> {
+        let (n, p) = cfg.task.dims();
+        // weight init stream is independent of the policy stream
+        let mut wrng = Rng::new(cfg.seed ^ 0x57EED);
+        let w = init::glorot_uniform(&mut wrng, n, p);
+        let engine = AopEngine::new(
+            w,
+            cfg.task.loss(),
+            cfg.m(),
+            cfg.policy,
+            cfg.k,
+            cfg.memory,
+        );
+        Ok(NativeTrainer {
+            engine,
+            eta: cfg.lr,
+            pending: None,
+        })
+    }
+}
+
+impl Trainer for NativeTrainer {
+    fn set_lr(&mut self, eta: f32) {
+        self.eta = eta;
+    }
+
+    fn fwd_score(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, Vec<f32>, Vec<f32>)> {
+        let fs = self.engine.fwd_score(x, y, self.eta);
+        let loss = fs.loss;
+        let scores = fs.scores.clone();
+        let db = fs.db.clone();
+        self.pending = Some(fs);
+        Ok((loss, scores, db))
+    }
+
+    fn apply(&mut self, sel: &Selection) -> Result<f32> {
+        let fs = self
+            .pending
+            .take()
+            .expect("apply called without fwd_score");
+        let stats = self.engine.apply(&fs, sel);
+        Ok(stats.wstar_fro)
+    }
+
+    fn evaluate(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, f32)> {
+        Ok(self.engine.evaluate(x, y))
+    }
+
+    fn mem_fro(&self) -> f32 {
+        self.engine.memory.deferred_mass()
+    }
+
+    fn weight_snapshot(&self) -> (Matrix, Vec<f32>) {
+        (self.engine.w.clone(), self.engine.b.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aop::policy::{self, Policy};
+
+    #[test]
+    fn trait_step_cycle_runs() {
+        let mut cfg = ExperimentConfig::energy_preset();
+        cfg.policy = Policy::TopK;
+        cfg.k = 18;
+        cfg.memory = true;
+        let mut t = NativeTrainer::new(&cfg).unwrap();
+        let mut rng = Rng::new(0);
+        let x = Matrix::from_fn(144, 16, |_, _| rng.normal());
+        let y = Matrix::from_fn(144, 1, |_, _| rng.normal());
+        let (loss, scores, _db) = t.fwd_score(&x, &y).unwrap();
+        assert!(loss.is_finite());
+        assert_eq!(scores.len(), 144);
+        let sel = policy::select(Policy::TopK, &scores, 18, true, &mut rng);
+        let fro = t.apply(&sel).unwrap();
+        assert!(fro > 0.0);
+        let (vl, _) = t.evaluate(&x, &y).unwrap();
+        assert!(vl.is_finite());
+        assert!(t.mem_fro() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "apply called without fwd_score")]
+    fn apply_without_fwd_panics() {
+        let cfg = ExperimentConfig::energy_preset();
+        let mut t = NativeTrainer::new(&cfg).unwrap();
+        let sel = Selection {
+            sel_scale: vec![1.0; 144],
+            keep: vec![0.0; 144],
+            indices: (0..144).collect(),
+        };
+        let _ = t.apply(&sel);
+    }
+}

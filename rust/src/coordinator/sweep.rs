@@ -1,0 +1,91 @@
+//! Experiment sweeps: fan a list of configurations out over worker
+//! threads and collect the curves.
+//!
+//! PJRT clients are not `Send`, so each worker owns its own `Runtime`
+//! (artifact compilation is per-thread; compile times are reported by
+//! `repro inspect-artifacts`). Native-backend sweeps have no such state
+//! and parallelize trivially.
+
+use anyhow::Result;
+
+use crate::coordinator::config::{Backend, ExperimentConfig};
+use crate::coordinator::experiment::{self, RunResult};
+use crate::util::pool;
+
+/// Run all configurations, up to `workers` at a time, preserving order.
+/// Errors are returned per-experiment (a failed run does not abort the
+/// sweep).
+pub fn run_sweep(configs: &[ExperimentConfig], workers: usize) -> Vec<Result<RunResult>> {
+    let items: Vec<ExperimentConfig> = configs.to_vec();
+    pool::run_parallel(items, workers, |cfg| match cfg.backend {
+        Backend::Native => experiment::run(cfg),
+        Backend::Hlo => {
+            // per-thread runtime: PJRT handles are not Send
+            let rt = crate::runtime::Runtime::from_default_artifacts()?;
+            experiment::run_hlo(cfg, &rt)
+        }
+    })
+}
+
+/// The 7 series of one paper-figure panel (one K): baseline + 3 policies
+/// × {mem, nomem}, in the paper's legend order.
+pub fn panel_configs(base: &ExperimentConfig, k: usize) -> Vec<ExperimentConfig> {
+    use crate::aop::Policy;
+    let mut out = Vec::with_capacity(7);
+    let mut push = |policy: Policy, memory: bool| {
+        let mut c = base.clone();
+        c.policy = policy;
+        c.memory = memory;
+        c.k = if policy == Policy::Exact { c.m() } else { k };
+        out.push(c);
+    };
+    push(Policy::Exact, false);
+    for p in Policy::figure_set() {
+        push(p, true);
+        push(p, false);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aop::Policy;
+
+    #[test]
+    fn panel_has_seven_series() {
+        let base = ExperimentConfig::energy_preset();
+        let cfgs = panel_configs(&base, 18);
+        assert_eq!(cfgs.len(), 7);
+        assert_eq!(cfgs[0].policy, Policy::Exact);
+        assert_eq!(cfgs[0].k, 144); // baseline uses all rows
+        let labels: Vec<String> = cfgs.iter().map(|c| c.label()).collect();
+        assert_eq!(
+            labels,
+            vec![
+                "baseline",
+                "topk-mem",
+                "topk-nomem",
+                "weightedk-mem",
+                "weightedk-nomem",
+                "randk-mem",
+                "randk-nomem"
+            ]
+        );
+        assert!(cfgs[1..].iter().all(|c| c.k == 18));
+    }
+
+    #[test]
+    fn native_sweep_runs_parallel() {
+        let mut base = ExperimentConfig::energy_preset();
+        base.epochs = 3;
+        let cfgs = panel_configs(&base, 18);
+        let results = run_sweep(&cfgs, 4);
+        assert_eq!(results.len(), 7);
+        for r in results {
+            let r = r.unwrap();
+            assert_eq!(r.curve.epochs.len(), 3);
+            assert!(r.final_val_loss().is_finite());
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Shuffling mini-batch iterator.
+//!
+//! Reproduces the reference Keras loop: reshuffle every epoch, fixed batch
+//! size, drop the trailing partial batch (the AOT artifacts are compiled
+//! for a static batch dimension, so partial batches cannot be fed to the
+//! HLO path anyway).
+
+use super::Dataset;
+use crate::tensor::rng::Rng;
+
+/// Epoch-wise batch plan: a shuffled index permutation cut into
+/// fixed-size batches.
+pub struct Batcher {
+    batch_size: usize,
+    indices: Vec<usize>,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch_size: usize) -> Self {
+        assert!(batch_size > 0 && batch_size <= n, "batch {batch_size} vs n {n}");
+        Batcher {
+            batch_size,
+            indices: (0..n).collect(),
+        }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    /// Number of full batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.indices.len() / self.batch_size
+    }
+
+    /// Reshuffle and return this epoch's batch index slices.
+    pub fn epoch(&mut self, rng: &mut Rng) -> Vec<Vec<usize>> {
+        rng.shuffle(&mut self.indices);
+        self.indices
+            .chunks_exact(self.batch_size)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+
+    /// Convenience: materialize this epoch's batches from a dataset.
+    pub fn epoch_batches(&mut self, ds: &Dataset, rng: &mut Rng) -> Vec<Dataset> {
+        self.epoch(rng).iter().map(|idx| ds.gather(idx)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+
+    #[test]
+    fn batch_counts() {
+        let b = Batcher::new(576, 144);
+        assert_eq!(b.batches_per_epoch(), 4);
+        let b2 = Batcher::new(60_000, 64);
+        assert_eq!(b2.batches_per_epoch(), 937); // drop-last
+    }
+
+    #[test]
+    fn epoch_partitions_without_duplicates() {
+        let mut b = Batcher::new(100, 10);
+        let mut rng = Rng::new(0);
+        let batches = b.epoch(&mut rng);
+        assert_eq!(batches.len(), 10);
+        let mut all: Vec<usize> = batches.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_last_partial() {
+        let mut b = Batcher::new(103, 10);
+        let mut rng = Rng::new(1);
+        let batches = b.epoch(&mut rng);
+        assert_eq!(batches.len(), 10);
+        let used: usize = batches.iter().map(|b| b.len()).sum();
+        assert_eq!(used, 100);
+    }
+
+    #[test]
+    fn reshuffles_between_epochs() {
+        let mut b = Batcher::new(50, 50);
+        let mut rng = Rng::new(2);
+        let e1 = b.epoch(&mut rng);
+        let e2 = b.epoch(&mut rng);
+        assert_ne!(e1[0], e2[0]);
+    }
+
+    #[test]
+    fn epoch_batches_gather_rows() {
+        let ds = Dataset::new(
+            Matrix::from_fn(9, 2, |r, _| r as f32),
+            Matrix::from_fn(9, 1, |r, _| r as f32),
+        );
+        let mut b = Batcher::new(9, 3);
+        let mut rng = Rng::new(3);
+        let batches = b.epoch_batches(&ds, &mut rng);
+        assert_eq!(batches.len(), 3);
+        for batch in &batches {
+            assert_eq!(batch.len(), 3);
+            for r in 0..3 {
+                assert_eq!(batch.x[(r, 0)], batch.y[(r, 0)]);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "batch")]
+    fn oversized_batch_rejected() {
+        Batcher::new(10, 11);
+    }
+}

@@ -1,0 +1,366 @@
+//! Procedural digit rasterizer — substitute for MNIST [19], which is
+//! unavailable offline.
+//!
+//! Each digit 0-9 is a stroke skeleton (polylines in the unit square)
+//! rendered to 28×28 with: random affine jitter (rotation, anisotropic
+//! scale, translation), random stroke thickness, smooth-falloff ink
+//! deposition (distance-to-segment), and pixel noise — giving the same
+//! input dimension (784), class count (10) and rough intra-class
+//! variability as MNIST. The paper's model (784×10 dense + softmax)
+//! reaches comparable separability on it, which is what the optimizer-
+//! dynamics claims of Figs. 3 need.
+
+use super::Dataset;
+use crate::tensor::rng::Rng;
+use crate::tensor::Matrix;
+
+pub const SIDE: usize = 28;
+pub const PIXELS: usize = SIDE * SIDE;
+pub const CLASSES: usize = 10;
+
+type Seg = ((f32, f32), (f32, f32));
+
+/// Stroke skeletons in [0,1]² (y grows downward). Hand-designed to be
+/// visually faithful, distinct, and to exercise curves via polyline
+/// approximation.
+fn skeleton(digit: usize) -> Vec<Seg> {
+    let poly = |pts: &[(f32, f32)]| -> Vec<Seg> {
+        pts.windows(2).map(|w| (w[0], w[1])).collect()
+    };
+    match digit {
+        0 => poly(&[
+            (0.50, 0.08),
+            (0.22, 0.25),
+            (0.20, 0.70),
+            (0.50, 0.92),
+            (0.78, 0.70),
+            (0.80, 0.25),
+            (0.50, 0.08),
+        ]),
+        1 => {
+            let mut v = poly(&[(0.35, 0.25), (0.55, 0.08), (0.55, 0.92)]);
+            v.extend(poly(&[(0.35, 0.92), (0.75, 0.92)]));
+            v
+        }
+        2 => poly(&[
+            (0.25, 0.25),
+            (0.45, 0.08),
+            (0.72, 0.18),
+            (0.74, 0.40),
+            (0.25, 0.92),
+            (0.78, 0.92),
+        ]),
+        3 => poly(&[
+            (0.25, 0.14),
+            (0.65, 0.10),
+            (0.75, 0.28),
+            (0.48, 0.48),
+            (0.78, 0.68),
+            (0.62, 0.90),
+            (0.24, 0.86),
+        ]),
+        4 => {
+            let mut v = poly(&[(0.60, 0.08), (0.22, 0.62), (0.80, 0.62)]);
+            v.extend(poly(&[(0.60, 0.08), (0.60, 0.92)]));
+            v
+        }
+        5 => poly(&[
+            (0.75, 0.10),
+            (0.28, 0.10),
+            (0.26, 0.45),
+            (0.60, 0.42),
+            (0.78, 0.62),
+            (0.66, 0.88),
+            (0.24, 0.86),
+        ]),
+        6 => poly(&[
+            (0.68, 0.10),
+            (0.34, 0.30),
+            (0.24, 0.62),
+            (0.40, 0.90),
+            (0.70, 0.82),
+            (0.74, 0.58),
+            (0.45, 0.50),
+            (0.26, 0.62),
+        ]),
+        7 => {
+            let mut v = poly(&[(0.22, 0.10), (0.78, 0.10), (0.42, 0.92)]);
+            v.extend(poly(&[(0.35, 0.50), (0.68, 0.50)]));
+            v
+        }
+        8 => poly(&[
+            (0.50, 0.08),
+            (0.28, 0.22),
+            (0.44, 0.46),
+            (0.24, 0.70),
+            (0.50, 0.92),
+            (0.76, 0.70),
+            (0.56, 0.46),
+            (0.72, 0.22),
+            (0.50, 0.08),
+        ]),
+        9 => poly(&[
+            (0.74, 0.38),
+            (0.52, 0.50),
+            (0.28, 0.40),
+            (0.30, 0.14),
+            (0.62, 0.08),
+            (0.74, 0.30),
+            (0.68, 0.70),
+            (0.50, 0.92),
+        ]),
+        _ => panic!("digit out of range: {digit}"),
+    }
+}
+
+/// Random affine sample parameters.
+struct Affine {
+    cos: f32,
+    sin: f32,
+    sx: f32,
+    sy: f32,
+    tx: f32,
+    ty: f32,
+}
+
+impl Affine {
+    fn sample(rng: &mut Rng) -> Affine {
+        let theta = (rng.uniform() * 2.0 - 1.0) * 0.26; // ±15°
+        Affine {
+            cos: theta.cos(),
+            sin: theta.sin(),
+            sx: 0.82 + rng.uniform() * 0.30,
+            sy: 0.82 + rng.uniform() * 0.30,
+            tx: (rng.uniform() * 2.0 - 1.0) * 0.08,
+            ty: (rng.uniform() * 2.0 - 1.0) * 0.08,
+        }
+    }
+
+    /// Map a skeleton point (about the glyph center) into [0,1]².
+    fn apply(&self, (x, y): (f32, f32)) -> (f32, f32) {
+        let (cx, cy) = (x - 0.5, y - 0.5);
+        let (rx, ry) = (
+            self.cos * cx * self.sx - self.sin * cy * self.sy,
+            self.sin * cx * self.sx + self.cos * cy * self.sy,
+        );
+        (rx + 0.5 + self.tx, ry + 0.5 + self.ty)
+    }
+}
+
+/// Squared distance from point `p` to segment `(a, b)`.
+fn dist2_to_seg(p: (f32, f32), a: (f32, f32), b: (f32, f32)) -> f32 {
+    let (px, py) = p;
+    let (ax, ay) = a;
+    let (bx, by) = b;
+    let (dx, dy) = (bx - ax, by - ay);
+    let len2 = dx * dx + dy * dy;
+    let t = if len2 > 0.0 {
+        (((px - ax) * dx + (py - ay) * dy) / len2).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    let (cx, cy) = (ax + t * dx, ay + t * dy);
+    (px - cx) * (px - cx) + (py - cy) * (py - cy)
+}
+
+/// Render one digit sample into a 784-length row (ink in [0,1]).
+pub fn render_digit(digit: usize, rng: &mut Rng, out: &mut [f32]) {
+    assert_eq!(out.len(), PIXELS);
+    out.fill(0.0);
+    let affine = Affine::sample(rng);
+    let thickness = 0.035 + rng.uniform() * 0.030; // stroke radius
+    let t2 = thickness * thickness;
+    let falloff = 2.2 * t2; // smooth edge width (squared)
+    let segs: Vec<Seg> = skeleton(digit)
+        .into_iter()
+        .map(|(a, b)| (affine.apply(a), affine.apply(b)))
+        .collect();
+
+    let inv = 1.0 / SIDE as f32;
+    for (si, &(a, b)) in segs.iter().enumerate() {
+        let _ = si;
+        // bounding box (in pixels) with margin
+        let margin = thickness + 0.08;
+        let x0 = ((a.0.min(b.0) - margin) * SIDE as f32).floor().max(0.0) as usize;
+        let x1 = ((a.0.max(b.0) + margin) * SIDE as f32).ceil().min(SIDE as f32) as usize;
+        let y0 = ((a.1.min(b.1) - margin) * SIDE as f32).floor().max(0.0) as usize;
+        let y1 = ((a.1.max(b.1) + margin) * SIDE as f32).ceil().min(SIDE as f32) as usize;
+        for py in y0..y1 {
+            for px in x0..x1 {
+                let p = ((px as f32 + 0.5) * inv, (py as f32 + 0.5) * inv);
+                let d2 = dist2_to_seg(p, a, b);
+                if d2 < t2 + falloff {
+                    // smooth ink: 1 inside the core, cosine falloff outside
+                    let ink = if d2 <= t2 {
+                        1.0
+                    } else {
+                        let u = (d2 - t2) / falloff;
+                        (1.0 - u).max(0.0)
+                    };
+                    let idx = py * SIDE + px;
+                    out[idx] = out[idx].max(ink);
+                }
+            }
+        }
+    }
+    // pixel noise + slight global intensity jitter (sensor-ish)
+    let gain = 0.9 + rng.uniform() * 0.2;
+    for v in out.iter_mut() {
+        let noise = 0.02 * rng.normal();
+        *v = (*v * gain + noise).clamp(0.0, 1.0);
+    }
+}
+
+/// Generate a dataset of `n` samples with balanced, shuffled classes.
+/// Targets are one-hot rows.
+pub fn digits_dataset(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut labels: Vec<usize> = (0..n).map(|i| i % CLASSES).collect();
+    rng.shuffle(&mut labels);
+    let mut x = Matrix::zeros(n, PIXELS);
+    for (r, &d) in labels.iter().enumerate() {
+        render_digit(d, &mut rng, x.row_mut(r));
+    }
+    let y = Matrix::from_fn(n, CLASSES, |r, c| (labels[r] == c) as u32 as f32);
+    Dataset::new(x, y)
+}
+
+/// Tab. I sizes: 60k train / 10k validation. `scale` shrinks both (the
+/// figure harness uses scale < 1.0 to keep CPU runtimes tractable; the
+/// substitution is recorded in EXPERIMENTS.md).
+pub fn mnist_like(scale: f32, seed: u64) -> (Dataset, Dataset) {
+    let ntr = ((60_000.0 * scale) as usize).max(CLASSES);
+    let nva = ((10_000.0 * scale) as usize).max(CLASSES);
+    (
+        digits_dataset(ntr, seed),
+        digits_dataset(nva, seed ^ 0xD161_7A11),
+    )
+}
+
+/// ASCII-art preview (debug / quickstart example).
+pub fn ascii_art(row: &[f32]) -> String {
+    let ramp = [' ', '.', ':', '+', '#'];
+    let mut s = String::with_capacity(PIXELS + SIDE);
+    for y in 0..SIDE {
+        for x in 0..SIDE {
+            let v = row[y * SIDE + x].clamp(0.0, 1.0);
+            s.push(ramp[((v * 4.0).round() as usize).min(4)]);
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = digits_dataset(50, 3);
+        let b = digits_dataset(50, 3);
+        assert_eq!(a.x, b.x);
+        let c = digits_dataset(50, 4);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn one_hot_targets_balanced() {
+        let d = digits_dataset(100, 0);
+        let counts = d.y.col_sums();
+        assert_eq!(counts.iter().sum::<f32>() as usize, 100);
+        for c in counts {
+            assert_eq!(c, 10.0); // 100 samples / 10 classes
+        }
+    }
+
+    #[test]
+    fn pixels_in_unit_range_with_ink() {
+        let d = digits_dataset(30, 1);
+        for r in 0..30 {
+            let row = d.x.row(r);
+            assert!(row.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            let ink: f32 = row.iter().sum();
+            assert!(ink > 10.0, "row {r} nearly blank: {ink}");
+            assert!(ink < 500.0, "row {r} nearly full: {ink}");
+        }
+    }
+
+    #[test]
+    fn all_digits_render_distinctly() {
+        // the mean images of different classes must differ substantially
+        let mut rng = Rng::new(5);
+        let mean_img = |d: usize, rng: &mut Rng| -> Vec<f32> {
+            let mut acc = vec![0.0f32; PIXELS];
+            let mut buf = vec![0.0f32; PIXELS];
+            for _ in 0..20 {
+                render_digit(d, rng, &mut buf);
+                for (a, &b) in acc.iter_mut().zip(buf.iter()) {
+                    *a += b / 20.0;
+                }
+            }
+            acc
+        };
+        let means: Vec<Vec<f32>> = (0..10).map(|d| mean_img(d, &mut rng)).collect();
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                let dist: f32 = means[i]
+                    .iter()
+                    .zip(means[j].iter())
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                assert!(dist > 3.0, "digits {i} and {j} too similar: {dist}");
+            }
+        }
+    }
+
+    #[test]
+    fn intra_class_variability_nonzero() {
+        let mut rng = Rng::new(6);
+        let mut a = vec![0.0f32; PIXELS];
+        let mut b = vec![0.0f32; PIXELS];
+        render_digit(3, &mut rng, &mut a);
+        render_digit(3, &mut rng, &mut b);
+        let dist: f32 = a.iter().zip(b.iter()).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!(dist > 0.5, "augmentation too weak: {dist}");
+    }
+
+    #[test]
+    fn linear_probe_separates_classes() {
+        // a linear softmax probe must beat chance by a wide margin,
+        // otherwise Fig. 3's learning dynamics wouldn't transfer
+        use crate::aop::{AopEngine, Policy};
+        use crate::model::LossKind;
+        use crate::tensor::init;
+        let tr = digits_dataset(600, 7);
+        let mut rng = Rng::new(8);
+        let mut e = AopEngine::new(
+            init::glorot_uniform(&mut rng, PIXELS, CLASSES),
+            LossKind::SoftmaxCrossEntropy,
+            600,
+            Policy::Exact,
+            600,
+            false,
+        );
+        for _ in 0..60 {
+            e.step(&tr.x, &tr.y, 0.5, &mut rng);
+        }
+        let (_, acc) = e.evaluate(&tr.x, &tr.y);
+        assert!(acc > 0.7, "linear probe acc={acc}");
+    }
+
+    #[test]
+    fn mnist_like_sizes() {
+        let (tr, va) = mnist_like(0.01, 0);
+        assert_eq!(tr.len(), 600);
+        assert_eq!(va.len(), 100);
+    }
+
+    #[test]
+    fn ascii_art_shape() {
+        let d = digits_dataset(1, 9);
+        let art = ascii_art(d.x.row(0));
+        assert_eq!(art.lines().count(), SIDE);
+        assert!(art.lines().all(|l| l.chars().count() == SIDE));
+    }
+}

@@ -1,0 +1,260 @@
+//! Building-thermal simulator — substitute for the UCI Energy-Efficiency
+//! dataset [18] (Tsanas & Xifara 2012), which is unavailable offline.
+//!
+//! The original dataset is itself *simulated* (Ecotect runs over 768
+//! building variants: 12 shapes × 4 orientations × 4 glazing areas × ...),
+//! so we rebuild the generative process: sample the same 8 design
+//! variables on the UCI grids, compute the heating load with a first-order
+//! thermal-envelope model (conduction through walls/roof/glazing + solar
+//! gain modulated by orientation and glazing distribution + ventilation),
+//! and add mild measurement noise.
+//!
+//! Preprocessing to the paper's 16 features: 6 continuous variables
+//! (relative compactness, surface area, wall area, roof area, height,
+//! glazing area) + one-hot orientation (4) + one-hot glazing distribution
+//! (6) = 16. Features and target are z-scored on the training split.
+
+use super::Dataset;
+use crate::tensor::rng::Rng;
+use crate::tensor::Matrix;
+
+/// One building design (the UCI X1..X8 grid).
+#[derive(Debug, Clone, Copy)]
+pub struct Building {
+    pub rel_compactness: f32, // X1: 0.62..0.98
+    pub surface_area: f32,    // X2: m^2
+    pub wall_area: f32,       // X3
+    pub roof_area: f32,       // X4
+    pub height: f32,          // X5: 3.5 or 7.0
+    pub orientation: usize,   // X6: 0..4 (N/E/S/W)
+    pub glazing_area: f32,    // X7: 0, .1, .25, .4 (fraction of floor area)
+    pub glazing_dist: usize,  // X8: 0..6 (uniform/N/E/S/W/none)
+}
+
+/// The 12 UCI base shapes: boxes of volume 771.75 m³ with varying
+/// footprint aspect; relative compactness spans 0.62..0.98.
+const VOLUME: f32 = 771.75;
+
+fn shape_from_compactness(rc: f32, height: f32) -> (f32, f32, f32) {
+    // For a square-footprint box of volume V and height h, footprint side
+    // s = sqrt(V / h). Lower compactness = more elongated footprint: keep
+    // the area, stretch one side by factor `e`, shrink the other.
+    let base = (VOLUME / height).sqrt();
+    // map rc∈[0.62,0.98] to elongation e∈[2.6,1.0]
+    let e = 1.0 + (0.98 - rc) / (0.98 - 0.62) * 1.6;
+    (base * e, base / e, height)
+}
+
+impl Building {
+    /// Envelope surface areas from the box geometry.
+    fn geometry(&self) -> (f32, f32, f32) {
+        shape_from_compactness(self.rel_compactness, self.height)
+    }
+
+    /// First-order steady-state heating load (kWh/m²-ish scale, matching
+    /// the UCI target's 6..43 range).
+    pub fn heating_load(&self, rng: &mut Rng) -> f32 {
+        let (lx, ly, h) = self.geometry();
+        let floor = lx * ly;
+        let wall = 2.0 * (lx + ly) * h;
+        let roof = floor;
+        let glazing = self.glazing_area * floor;
+
+        // U-values (W/m²K): wall 1.8, roof 0.9, window 5.7 (UCI-era
+        // constructions), ΔT winter design 20K, scaled to annual kWh/m².
+        let u_wall = 1.8f32;
+        let u_roof = 0.9f32;
+        let u_glass = 5.7f32;
+        let conduction = u_wall * wall + u_roof * roof + u_glass * glazing;
+
+        // Solar gain offsets heating; south-facing glazing (orientation 2)
+        // with south-weighted distribution (dist 3) gains most.
+        let orient_gain = [0.55f32, 0.75, 1.0, 0.75][self.orientation];
+        let dist_gain = [0.8f32, 0.7, 0.75, 1.0, 0.75, 0.0][self.glazing_dist];
+        let solar = 2.2 * glazing * orient_gain * dist_gain;
+
+        // Ventilation/infiltration scales with volume; taller buildings
+        // stratify (small superlinear term in height).
+        let ventilation = 0.35 * VOLUME * (1.0 + 0.04 * (h - 3.5));
+
+        // Normalize by floor area to the UCI target scale and add mild
+        // simulation noise (Ecotect outputs are deterministic; UCI noise
+        // comes from model discretization — 1% here).
+        let raw = (conduction + ventilation - solar) / floor;
+        let load = 0.55 * raw + 2.0;
+        load * (1.0 + 0.01 * rng.normal())
+    }
+
+    /// Expand to the 16-dim feature vector (DESIGN.md §3).
+    pub fn features(&self) -> [f32; 16] {
+        let mut f = [0.0f32; 16];
+        f[0] = self.rel_compactness;
+        f[1] = self.surface_area;
+        f[2] = self.wall_area;
+        f[3] = self.roof_area;
+        f[4] = self.height;
+        f[5] = self.glazing_area;
+        f[6 + self.orientation] = 1.0; // 4 slots
+        f[10 + self.glazing_dist] = 1.0; // 6 slots
+        f
+    }
+}
+
+/// UCI grids.
+const RC_GRID: [f32; 12] = [
+    0.62, 0.64, 0.66, 0.69, 0.71, 0.74, 0.76, 0.79, 0.82, 0.86, 0.90, 0.98,
+];
+const GLAZING_GRID: [f32; 4] = [0.0, 0.10, 0.25, 0.40];
+
+/// Generate `n` buildings by sampling the UCI grid uniformly (seeded).
+pub fn generate_buildings(n: usize, seed: u64) -> Vec<Building> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let rc = RC_GRID[rng.below(RC_GRID.len())];
+            let height = if rng.below(2) == 0 { 3.5 } else { 7.0 };
+            let (lx, ly, h) = shape_from_compactness(rc, height);
+            let floor = lx * ly;
+            let wall = 2.0 * (lx + ly) * h;
+            Building {
+                rel_compactness: rc,
+                surface_area: 2.0 * floor + wall,
+                wall_area: wall,
+                roof_area: floor,
+                height,
+                orientation: rng.below(4),
+                glazing_area: GLAZING_GRID[rng.below(GLAZING_GRID.len())],
+                glazing_dist: rng.below(6),
+            }
+        })
+        .collect()
+}
+
+/// Full dataset: 768 buildings (UCI size) → standardized 16-feature
+/// regression; split 576 train / 192 validation per Tab. I.
+pub fn energy_dataset(seed: u64) -> (Dataset, Dataset) {
+    energy_dataset_sized(768, 576, seed)
+}
+
+/// Sized variant for tests/benches.
+pub fn energy_dataset_sized(total: usize, train: usize, seed: u64) -> (Dataset, Dataset) {
+    assert!(train <= total);
+    let buildings = generate_buildings(total, seed);
+    let mut rng = Rng::new(seed ^ 0xE17A);
+    let x = Matrix::from_fn(total, 16, |r, c| buildings[r].features()[c]);
+    let y = Matrix::from_fn(total, 1, |r, _| buildings[r].heating_load(&mut rng));
+    let ds = Dataset::new(x, y);
+    let (mut tr, mut va) = ds.split_at(train);
+    let st = tr.standardize_fit(true);
+    st.transform(&mut va);
+    (tr, va)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let (a, _) = energy_dataset(7);
+        let (b, _) = energy_dataset(7);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let (c, _) = energy_dataset(8);
+        assert_ne!(a.y, c.y);
+    }
+
+    #[test]
+    fn tab1_sizes() {
+        let (tr, va) = energy_dataset(0);
+        assert_eq!(tr.len(), 576);
+        assert_eq!(va.len(), 192);
+        assert_eq!(tr.x.cols(), 16);
+        assert_eq!(tr.y.cols(), 1);
+    }
+
+    #[test]
+    fn loads_in_physical_range_before_standardization() {
+        let buildings = generate_buildings(768, 3);
+        let mut rng = Rng::new(9);
+        for b in &buildings {
+            let l = b.heating_load(&mut rng);
+            assert!(l > 2.0 && l < 60.0, "load={l} for {b:?}");
+        }
+    }
+
+    #[test]
+    fn one_hot_features_valid() {
+        for b in generate_buildings(200, 4) {
+            let f = b.features();
+            let orient: f32 = f[6..10].iter().sum();
+            let dist: f32 = f[10..16].iter().sum();
+            assert_eq!(orient, 1.0);
+            assert_eq!(dist, 1.0);
+        }
+    }
+
+    #[test]
+    fn target_is_learnable_by_linear_model() {
+        // ridge-free sanity: least-squares linear fit explains most of the
+        // variance (the paper trains a 16×1 linear layer on this).
+        use crate::tensor::ops;
+        let (tr, _) = energy_dataset(1);
+        // normal equations via Gauss-Seidel-ish gradient descent
+        let mut w = Matrix::zeros(16, 1);
+        for _ in 0..2000 {
+            let pred = tr.x.matmul(&w);
+            let g = ops::matmul_tn(&tr.x, &pred.sub(&tr.y)).scale(2.0 / tr.len() as f32);
+            w.axpy(-0.05, &g);
+        }
+        let pred = tr.x.matmul(&w);
+        let resid = pred.sub(&tr.y).frobenius().powi(2) / tr.len() as f32;
+        let var = tr.y.frobenius().powi(2) / tr.len() as f32; // y standardized
+        let r2 = 1.0 - resid / var;
+        assert!(r2 > 0.7, "R²={r2}");
+    }
+
+    #[test]
+    fn compactness_raises_efficiency() {
+        // more compact buildings (higher RC) lose less per floor area
+        let mut rng = Rng::new(5);
+        let mk = |rc: f32| Building {
+            rel_compactness: rc,
+            surface_area: 0.0,
+            wall_area: 0.0,
+            roof_area: 0.0,
+            height: 3.5,
+            orientation: 2,
+            glazing_area: 0.25,
+            glazing_dist: 0,
+        };
+        let lo: f32 = (0..50).map(|_| mk(0.62).heating_load(&mut rng)).sum::<f32>() / 50.0;
+        let hi: f32 = (0..50).map(|_| mk(0.98).heating_load(&mut rng)).sum::<f32>() / 50.0;
+        assert!(lo > hi, "elongated {lo} should exceed compact {hi}");
+    }
+
+    #[test]
+    fn glazing_and_height_effects() {
+        let mut rng = Rng::new(6);
+        let base = Building {
+            rel_compactness: 0.76,
+            surface_area: 0.0,
+            wall_area: 0.0,
+            roof_area: 0.0,
+            height: 3.5,
+            orientation: 0,
+            glazing_area: 0.0,
+            glazing_dist: 5,
+        };
+        let mut glazed = base;
+        glazed.glazing_area = 0.4;
+        let l0: f32 = (0..50).map(|_| base.heating_load(&mut rng)).sum::<f32>() / 50.0;
+        let l1: f32 = (0..50).map(|_| glazed.heating_load(&mut rng)).sum::<f32>() / 50.0;
+        assert!(l1 > l0, "glazing (north, no solar) adds loss: {l1} vs {l0}");
+
+        let mut tall = base;
+        tall.height = 7.0;
+        let l2: f32 = (0..50).map(|_| tall.heating_load(&mut rng)).sum::<f32>() / 50.0;
+        assert!(l2 != l0);
+    }
+}

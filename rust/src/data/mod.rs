@@ -1,0 +1,192 @@
+//! Dataset substrates.
+//!
+//! The paper evaluates on the UCI Energy-Efficiency dataset and MNIST;
+//! neither is available in this offline environment, so both are rebuilt
+//! as seeded simulators with the same learning-problem structure
+//! (DESIGN.md §3):
+//!
+//! * [`energy`] — parametric building-thermal simulator → 16-feature
+//!   regression, 576/192 split (Tab. I);
+//! * [`digits`] — procedural stroke-font digit rasterizer → 784-feature
+//!   10-class classification, 60k/10k split (Tab. I);
+//! * [`batcher`] — shuffling mini-batch iterator (drop-last, like the
+//!   reference Keras loop).
+
+pub mod batcher;
+pub mod digits;
+pub mod energy;
+
+use crate::tensor::Matrix;
+
+/// A supervised dataset: row-aligned features and targets.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: Matrix,
+    pub y: Matrix,
+}
+
+impl Dataset {
+    pub fn new(x: Matrix, y: Matrix) -> Self {
+        assert_eq!(x.rows(), y.rows(), "feature/target row mismatch");
+        Dataset { x, y }
+    }
+
+    pub fn len(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Split into (first `n`, rest).
+    pub fn split_at(&self, n: usize) -> (Dataset, Dataset) {
+        assert!(n <= self.len());
+        let head: Vec<usize> = (0..n).collect();
+        let tail: Vec<usize> = (n..self.len()).collect();
+        (self.gather(&head), self.gather(&tail))
+    }
+
+    /// Gather rows by index into a new dataset (the batcher's hot path —
+    /// row-wise `copy_from_slice`, not per-element indexing).
+    pub fn gather(&self, idx: &[usize]) -> Dataset {
+        let gather_m = |m: &Matrix| -> Matrix {
+            let cols = m.cols();
+            let mut out = Matrix::zeros(idx.len(), cols);
+            for (r, &src) in idx.iter().enumerate() {
+                out.row_mut(r).copy_from_slice(m.row(src));
+            }
+            out
+        };
+        Dataset::new(gather_m(&self.x), gather_m(&self.y))
+    }
+
+    /// Z-score standardize features (and optionally targets) using stats
+    /// computed on `self`; returns the stats so the validation split can be
+    /// transformed identically.
+    pub fn standardize_fit(&mut self, targets_too: bool) -> Standardizer2 {
+        let sx = Standardizer::fit(&self.x);
+        sx.apply(&mut self.x);
+        let sy = if targets_too {
+            let s = Standardizer::fit(&self.y);
+            s.apply(&mut self.y);
+            Some(s)
+        } else {
+            None
+        };
+        Standardizer2 { sx, sy }
+    }
+}
+
+/// Per-column mean/std transform.
+#[derive(Debug, Clone)]
+pub struct Standardizer {
+    pub mean: Vec<f32>,
+    pub std: Vec<f32>,
+}
+
+/// Combined feature/target standardizer returned by `standardize_fit`.
+#[derive(Debug, Clone)]
+pub struct Standardizer2 {
+    pub sx: Standardizer,
+    pub sy: Option<Standardizer>,
+}
+
+impl Standardizer2 {
+    /// Apply the fitted transform to another dataset (validation split).
+    pub fn transform(&self, ds: &mut Dataset) {
+        self.sx.apply(&mut ds.x);
+        if let Some(sy) = &self.sy {
+            sy.apply(&mut ds.y);
+        }
+    }
+}
+
+impl Standardizer {
+    pub fn fit(m: &Matrix) -> Standardizer {
+        let rows = m.rows() as f32;
+        let mut mean = vec![0.0f32; m.cols()];
+        for r in 0..m.rows() {
+            for (mu, &v) in mean.iter_mut().zip(m.row(r).iter()) {
+                *mu += v;
+            }
+        }
+        for mu in &mut mean {
+            *mu /= rows;
+        }
+        let mut var = vec![0.0f32; m.cols()];
+        for r in 0..m.rows() {
+            for c in 0..m.cols() {
+                let d = m[(r, c)] - mean[c];
+                var[c] += d * d;
+            }
+        }
+        let std: Vec<f32> = var
+            .iter()
+            .map(|v| (v / rows).sqrt().max(1e-6))
+            .collect();
+        Standardizer { mean, std }
+    }
+
+    pub fn apply(&self, m: &mut Matrix) {
+        for r in 0..m.rows() {
+            for c in 0..m.cols() {
+                m[(r, c)] = (m[(r, c)] - self.mean[c]) / self.std[c];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds(n: usize) -> Dataset {
+        Dataset::new(
+            Matrix::from_fn(n, 3, |r, c| (r * 3 + c) as f32),
+            Matrix::from_fn(n, 1, |r, _| r as f32),
+        )
+    }
+
+    #[test]
+    fn split_preserves_rows() {
+        let d = ds(10);
+        let (a, b) = d.split_at(7);
+        assert_eq!(a.len(), 7);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.x[(0, 0)], 21.0);
+        assert_eq!(b.y[(2, 0)], 9.0);
+    }
+
+    #[test]
+    fn gather_reorders() {
+        let d = ds(5);
+        let g = d.gather(&[4, 0, 2]);
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.y.col(0), vec![4.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_std() {
+        let mut d = ds(50);
+        let st = d.standardize_fit(true);
+        for c in 0..d.x.cols() {
+            let col = d.x.col(c);
+            let mean: f32 = col.iter().sum::<f32>() / 50.0;
+            let var: f32 = col.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 50.0;
+            assert!(mean.abs() < 1e-4, "mean={mean}");
+            assert!((var - 1.0).abs() < 1e-3, "var={var}");
+        }
+        // transform a second dataset with the same stats
+        let mut d2 = ds(10);
+        st.transform(&mut d2);
+        assert!(d2.x[(0, 0)].abs() > 0.0 || d2.x[(0, 0)] == 0.0); // finite
+        assert!(d2.x.is_finite());
+    }
+
+    #[test]
+    #[should_panic(expected = "feature/target row mismatch")]
+    fn mismatched_rows_rejected() {
+        Dataset::new(Matrix::zeros(3, 2), Matrix::zeros(4, 1));
+    }
+}

@@ -1,0 +1,30 @@
+//! # Mem-AOP-GD
+//!
+//! Production-quality reproduction of *"Speeding-Up Back-Propagation in
+//! DNN: Approximate Outer Product with Memory"* (Hernandez, Rini, Duman,
+//! 2021) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`): the masked
+//!   scaled outer-product accumulation (the AOP of eq. (4)/(5)), policy
+//!   scores, and memory updates;
+//! * **Layer 2** — JAX graphs (`python/compile/model.py`) AOT-lowered to
+//!   HLO-text artifacts consumed by the Rust runtime;
+//! * **Layer 3** — this crate: the training coordinator (config system,
+//!   dataset substrates, selection policies, error-feedback memory,
+//!   experiment scheduler, figure harness) plus a pure-Rust reference
+//!   implementation of the whole algorithm used as the numerics oracle
+//!   and baseline comparator.
+//!
+//! Python never runs on the training path: `make artifacts` lowers the
+//! graphs once, and the `repro` binary is self-contained afterwards.
+//!
+//! See `examples/` for end-to-end drivers and `repro --help` for the CLI.
+
+pub mod aop;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

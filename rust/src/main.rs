@@ -1,0 +1,339 @@
+//! `repro` — the Mem-AOP-GD coordinator CLI.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation section:
+//!
+//! * `train`              — one configured experiment (any policy/K/
+//!                          memory/backend), prints the loss curve;
+//! * `figure --fig 2|3`   — regenerate Fig. 2 / Fig. 3 (21 series each)
+//!                          into `results/`;
+//! * `table`              — print Tab. I from the config presets;
+//! * `complexity`         — the Sec. I computational-reduction claim;
+//! * `mlp`                — end-to-end multi-layer MLP training through
+//!                          the monolithic AOT artifacts;
+//! * `inspect-artifacts`  — compile every artifact and report compile
+//!                          times + manifest contract.
+
+use anyhow::{anyhow, bail, Result};
+
+use mem_aop_gd::aop::Policy;
+use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig, Task};
+use mem_aop_gd::coordinator::figures::{self, FigureOptions};
+use mem_aop_gd::coordinator::mlp_driver::{self, MlpVariant};
+use mem_aop_gd::coordinator::experiment;
+use mem_aop_gd::data::digits;
+use mem_aop_gd::metrics::print_table;
+use mem_aop_gd::runtime::Runtime;
+use mem_aop_gd::util::cli::{App, Args, Command};
+
+fn app() -> App {
+    App {
+        name: "repro",
+        about: "Mem-AOP-GD (Hernandez, Rini, Duman 2021) — training coordinator",
+        commands: vec![
+            Command::new("train", "run one experiment and print its curve")
+                .opt("task", "energy", "energy | mnist")
+                .opt("policy", "topk", "exact | topk | randk | weightedk | weightedk-repl")
+                .opt("k", "18", "outer products kept per update (K <= M)")
+                .opt("epochs", "0", "override Tab. I epochs (0 = preset)")
+                .opt("lr", "0.01", "learning rate")
+                .opt("schedule", "constant", "constant | step:<every>:<gamma> | cosine:<min-frac>")
+                .opt("seed", "0", "RNG seed")
+                .opt("backend", "hlo", "hlo (PJRT artifacts) | native (pure Rust)")
+                .opt("data-scale", "1.0", "fraction of Tab. I dataset size (mnist)")
+                .opt("save", "", "write final weights+memories to this checkpoint path")
+                .flag("no-memory", "disable error-feedback memory")
+                .flag("quiet", "suppress per-epoch output"),
+            Command::new("figure", "regenerate a paper figure into results/")
+                .opt("fig", "2", "2 (energy) | 3 (mnist)")
+                .opt("backend", "native", "native | hlo")
+                .opt("epochs", "0", "override epochs (0 = Tab. I)")
+                .opt("data-scale", "1.0", "dataset scale (mnist)")
+                .opt("seed", "0", "RNG seed")
+                .opt("workers", "0", "parallel workers (0 = auto)")
+                .opt("out", "results", "output directory"),
+            Command::new("table", "print Tab. I (hyperparameters)"),
+            Command::new("complexity", "FLOP/time reduction of the AOP gradient")
+                .opt("out", "results", "output directory"),
+            Command::new("mlp", "end-to-end multi-layer MLP via AOT artifacts")
+                .opt("variant", "topk-mem", "exact | topk-mem | topk-nomem | randk-mem | weightedk-mem")
+                .opt("steps", "300", "training steps")
+                .opt("lr", "0.05", "learning rate")
+                .opt("eval-every", "50", "steps between evaluations")
+                .opt("train-samples", "12800", "synthetic digit training samples")
+                .opt("val-samples", "1280", "synthetic digit validation samples")
+                .opt("seed", "0", "RNG seed"),
+            Command::new(
+                "approx-error",
+                "empirical AOP approximation-error analysis (DKM bound)",
+            )
+            .opt("m", "64", "batch rows (outer products)")
+            .opt("n", "784", "input dim")
+            .opt("p", "10", "output dim")
+            .opt("skew", "2.0", "row-norm skew of the synthetic (X, G)")
+            .opt("trials", "60", "policy draws per cell")
+            .opt("seed", "0", "RNG seed")
+            .opt("out", "results", "output directory"),
+            Command::new("inspect-artifacts", "compile all artifacts, report stats"),
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    let code = match app.parse(&argv) {
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
+        Ok((cmd, args)) => match dispatch(cmd.name, &args) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                1
+            }
+        },
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "train" => cmd_train(args),
+        "figure" => cmd_figure(args),
+        "table" => {
+            figures::table_one();
+            Ok(())
+        }
+        "complexity" => {
+            let out = std::path::PathBuf::from(args.get("out").unwrap_or("results"));
+            figures::complexity(&out)
+        }
+        "mlp" => cmd_mlp(args),
+        "approx-error" => cmd_approx_error(args),
+        "inspect-artifacts" => cmd_inspect(),
+        _ => bail!("unhandled command {cmd}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let task = Task::parse(args.get("task").unwrap_or("energy"))
+        .ok_or_else(|| anyhow!("bad --task"))?;
+    let mut cfg = ExperimentConfig::preset(task);
+    cfg.policy = Policy::parse(args.get("policy").unwrap_or("topk"))
+        .ok_or_else(|| anyhow!("bad --policy"))?;
+    cfg.k = args.get_parse("k")?;
+    if cfg.policy == Policy::Exact {
+        cfg.k = cfg.m();
+    }
+    let epochs: usize = args.get_parse("epochs")?;
+    if epochs > 0 {
+        cfg.epochs = epochs;
+    }
+    cfg.lr = args.get_parse("lr")?;
+    cfg.schedule =
+        mem_aop_gd::coordinator::config::LrSchedule::parse(args.get("schedule").unwrap_or("constant"))
+            .ok_or_else(|| anyhow!("bad --schedule"))?;
+    cfg.seed = args.get_parse("seed")?;
+    cfg.backend = Backend::parse(args.get("backend").unwrap_or("hlo"))
+        .ok_or_else(|| anyhow!("bad --backend"))?;
+    cfg.data_scale = args.get_parse("data-scale")?;
+    cfg.memory = !args.flag("no-memory");
+    if cfg.policy == Policy::Exact {
+        cfg.memory = false;
+    }
+    cfg.validate()?;
+
+    println!(
+        "training {} / {} (K={}/{}, backend={}, {} epochs, lr={}, seed={})",
+        cfg.task.name(),
+        cfg.label(),
+        cfg.k,
+        cfg.m(),
+        cfg.backend.name(),
+        cfg.epochs,
+        cfg.lr,
+        cfg.seed
+    );
+    let r = experiment::run(&cfg)?;
+    if !args.flag("quiet") {
+        let mut rows = Vec::new();
+        for m in &r.curve.epochs {
+            rows.push(vec![
+                format!("{}", m.epoch),
+                format!("{:.5}", m.train_loss),
+                format!("{:.5}", m.val_loss),
+                format!("{:.4}", m.val_acc),
+                format!("{:.4}", m.mem_fro),
+                format!("{:.2}", m.wall_s),
+            ]);
+        }
+        print_table(&["epoch", "train", "val", "acc", "mem_fro", "s"], &rows);
+    }
+    println!(
+        "final val loss {:.6} (best {:.6}); backward FLOPs {:.3e}",
+        r.final_val_loss(),
+        r.curve.best_val_loss(),
+        r.curve.total_backward_flops() as f64
+    );
+    if let Some(path) = args.get("save").filter(|s| !s.is_empty()) {
+        use mem_aop_gd::coordinator::checkpoint::Checkpoint;
+        let mut cp = Checkpoint::new();
+        cp.put_matrix("w", &r.final_w);
+        cp.put_vector("b", &r.final_b);
+        cp.put_scalar("epochs", cfg.epochs as f32);
+        cp.save(std::path::Path::new(path))?;
+        println!("checkpoint written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let fig: usize = args.get_parse("fig")?;
+    let task = match fig {
+        2 => Task::Energy,
+        3 => Task::Mnist,
+        _ => bail!("--fig must be 2 or 3"),
+    };
+    let epochs: usize = args.get_parse("epochs")?;
+    let workers: usize = args.get_parse("workers")?;
+    let opts = FigureOptions {
+        out_dir: args.get("out").unwrap_or("results").into(),
+        backend: Backend::parse(args.get("backend").unwrap_or("native"))
+            .ok_or_else(|| anyhow!("bad --backend"))?,
+        epochs: if epochs == 0 { None } else { Some(epochs) },
+        data_scale: args.get_parse("data-scale")?,
+        seed: args.get_parse("seed")?,
+        workers: if workers == 0 {
+            mem_aop_gd::util::pool::default_workers()
+        } else {
+            workers
+        },
+    };
+    figures::figure(task, &opts)?;
+    Ok(())
+}
+
+fn cmd_mlp(args: &Args) -> Result<()> {
+    let variant = MlpVariant::parse(args.get("variant").unwrap_or("topk-mem"))
+        .ok_or_else(|| anyhow!("bad --variant"))?;
+    let steps: usize = args.get_parse("steps")?;
+    let lr: f32 = args.get_parse("lr")?;
+    let eval_every: usize = args.get_parse("eval-every")?;
+    let ntr: usize = args.get_parse("train-samples")?;
+    let nva: usize = args.get_parse("val-samples")?;
+    let seed: u64 = args.get_parse("seed")?;
+
+    let rt = Runtime::from_default_artifacts()?;
+    let meta = rt.manifest.mlp.clone();
+    println!(
+        "MLP {} on {} (layers {:?}, batch {}, K {} per layer)",
+        variant.label(),
+        rt.platform(),
+        meta.layers,
+        meta.batch,
+        meta.k
+    );
+    let train = digits::digits_dataset(ntr, seed ^ 0xDA7A);
+    let val = digits::digits_dataset(nva, seed ^ 0xDA7A ^ 1);
+    let (driver, curve) =
+        mlp_driver::train_mlp(&rt, variant, &train, &val, steps, lr, eval_every, seed)?;
+    println!("{} parameters", driver.num_params());
+    let mut rows = Vec::new();
+    for m in &curve.epochs {
+        rows.push(vec![
+            format!("{}", m.epoch),
+            format!("{:.4}", m.train_loss),
+            format!("{:.4}", m.val_loss),
+            format!("{:.4}", m.val_acc),
+            format!("{:.1}", m.mem_fro),
+            format!("{:.2}", m.wall_s),
+        ]);
+    }
+    print_table(&["step", "train", "val", "acc", "mem_fro", "s"], &rows);
+    Ok(())
+}
+
+fn cmd_approx_error(args: &Args) -> Result<()> {
+    use mem_aop_gd::aop::analysis;
+    use mem_aop_gd::tensor::rng::Rng;
+    use mem_aop_gd::tensor::Matrix;
+
+    let m: usize = args.get_parse("m")?;
+    let n: usize = args.get_parse("n")?;
+    let p: usize = args.get_parse("p")?;
+    let skew: f32 = args.get_parse("skew")?;
+    let trials: usize = args.get_parse("trials")?;
+    let seed: u64 = args.get_parse("seed")?;
+    let out_dir = std::path::PathBuf::from(args.get("out").unwrap_or("results"));
+
+    let ks: Vec<usize> = [m / 16, m / 8, m / 4, m / 2, 3 * m / 4]
+        .iter()
+        .copied()
+        .filter(|&k| k >= 1)
+        .collect();
+    println!(
+        "one-shot relative error ‖Ŵ*−W*‖_F/‖W*‖_F  (M={m}, N={n}, P={p}, skew={skew})\n"
+    );
+    let pts = analysis::error_sweep(m, n, p, &ks, skew, trials, seed);
+    let mut rows = Vec::new();
+    let mut csv = String::from("policy,k,m,rel_error,sd\n");
+    for pt in &pts {
+        rows.push(vec![
+            pt.policy.name().to_string(),
+            format!("{}/{}", pt.k, pt.m),
+            format!("{:.4}", pt.rel_error),
+            format!("{:.4}", pt.sd),
+            format!("{:.3}", pt.rel_error * (pt.k as f64).sqrt()),
+        ]);
+        csv.push_str(&format!(
+            "{},{},{},{:.6},{:.6}\n",
+            pt.policy.name(),
+            pt.k,
+            pt.m,
+            pt.rel_error,
+            pt.sd
+        ));
+    }
+    print_table(&["policy", "K/M", "rel err", "sd", "err·√K"], &rows);
+    println!("\n(DKM ref.[8]: err·√K ≈ const for weighted sampling — check the last column)");
+
+    // deferred-flush identity demo on the same shapes
+    let mut rng = Rng::new(seed ^ 0xFEED);
+    let x = Matrix::from_fn(m, n, |_, _| rng.normal());
+    let g = Matrix::from_fn(m, p, |_, _| rng.normal());
+    let k = (m / 8).max(1);
+    let mut r1 = Rng::new(seed ^ 1);
+    let mut r2 = Rng::new(seed ^ 1);
+    let with_mem =
+        analysis::deferred_flush_error(&x, &g, mem_aop_gd::aop::Policy::TopK, k, true, &mut r1);
+    let without =
+        analysis::deferred_flush_error(&x, &g, mem_aop_gd::aop::Policy::TopK, k, false, &mut r2);
+    println!(
+        "\ndeferred-flush identity (topK, K={k}/{m}): select-then-flush vs exact\n  \
+         rel err WITH memory    {with_mem:.2e}  (memory recovers the unselected mass exactly)\n  \
+         rel err WITHOUT memory {without:.4}   (the one-shot approximation error persists)"
+    );
+    std::fs::create_dir_all(&out_dir)?;
+    std::fs::write(out_dir.join("approx_error.csv"), csv)?;
+    println!("\nwrote {}", out_dir.join("approx_error.csv").display());
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let rt = Runtime::from_default_artifacts()?;
+    println!("platform: {}", rt.platform());
+    let stats = rt.load_all()?;
+    let mut rows = Vec::new();
+    for (name, st) in &stats {
+        let spec = rt.manifest.artifact(name)?;
+        rows.push(vec![
+            name.clone(),
+            format!("{}", spec.inputs.len()),
+            format!("{}", spec.outputs.len()),
+            format!("{:.1} ms", st.compile_ns as f64 / 1e6),
+        ]);
+    }
+    print_table(&["artifact", "inputs", "outputs", "compile"], &rows);
+    Ok(())
+}

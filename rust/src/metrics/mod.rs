@@ -1,0 +1,241 @@
+//! Metrics: loss curves, per-epoch records, summary statistics, and
+//! CSV/JSONL sinks consumed by the figure harness and EXPERIMENTS.md.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+
+/// One epoch's record for a training run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpochMetrics {
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub val_loss: f32,
+    /// Classification accuracy on the validation split (0 for regression).
+    pub val_acc: f32,
+    /// Mean ||Ŵ*||_F over the epoch's steps (update magnitude diagnostic).
+    pub wstar_fro: f32,
+    /// Frobenius mass deferred in memory at epoch end.
+    pub mem_fro: f32,
+    /// Cumulative FLOPs spent on weight-gradient computation so far.
+    pub backward_flops: u64,
+    /// Wall-clock seconds spent training this epoch.
+    pub wall_s: f64,
+}
+
+/// A full training curve plus identification.
+#[derive(Debug, Clone)]
+pub struct RunCurve {
+    /// Series label, e.g. `topk-mem` / `baseline`.
+    pub label: String,
+    pub epochs: Vec<EpochMetrics>,
+}
+
+impl RunCurve {
+    pub fn new(label: &str) -> Self {
+        RunCurve {
+            label: label.to_string(),
+            epochs: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, m: EpochMetrics) {
+        self.epochs.push(m);
+    }
+
+    pub fn final_val_loss(&self) -> f32 {
+        self.epochs.last().map(|m| m.val_loss).unwrap_or(f32::NAN)
+    }
+
+    pub fn final_val_acc(&self) -> f32 {
+        self.epochs.last().map(|m| m.val_acc).unwrap_or(f32::NAN)
+    }
+
+    pub fn best_val_loss(&self) -> f32 {
+        self.epochs
+            .iter()
+            .map(|m| m.val_loss)
+            .fold(f32::INFINITY, f32::min)
+    }
+
+    /// Mean of the last `n` epochs' validation loss (smooths SGD noise
+    /// when comparing series, as the paper's curves visually do).
+    pub fn tail_mean_val_loss(&self, n: usize) -> f32 {
+        let len = self.epochs.len();
+        if len == 0 {
+            return f32::NAN;
+        }
+        let take = n.min(len);
+        self.epochs[len - take..]
+            .iter()
+            .map(|m| m.val_loss)
+            .sum::<f32>()
+            / take as f32
+    }
+
+    pub fn total_wall_s(&self) -> f64 {
+        self.epochs.iter().map(|m| m.wall_s).sum()
+    }
+
+    pub fn total_backward_flops(&self) -> u64 {
+        self.epochs.last().map(|m| m.backward_flops).unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("label", json::s(&self.label)),
+            (
+                "epochs",
+                Json::Arr(
+                    self.epochs
+                        .iter()
+                        .map(|m| {
+                            json::obj(vec![
+                                ("epoch", json::num(m.epoch as f64)),
+                                ("train_loss", json::num(m.train_loss as f64)),
+                                ("val_loss", json::num(m.val_loss as f64)),
+                                ("val_acc", json::num(m.val_acc as f64)),
+                                ("wstar_fro", json::num(m.wstar_fro as f64)),
+                                ("mem_fro", json::num(m.mem_fro as f64)),
+                                ("backward_flops", json::num(m.backward_flops as f64)),
+                                ("wall_s", json::num(m.wall_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Write a set of curves as a wide CSV: one `epoch` column plus one
+/// `val_loss` column per series — directly plottable as a paper figure
+/// panel.
+pub fn write_curves_csv(path: &Path, curves: &[RunCurve]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "epoch")?;
+    for c in curves {
+        write!(f, ",{}", c.label)?;
+    }
+    writeln!(f)?;
+    let max_epochs = curves.iter().map(|c| c.epochs.len()).max().unwrap_or(0);
+    for e in 0..max_epochs {
+        write!(f, "{}", e + 1)?;
+        for c in curves {
+            match c.epochs.get(e) {
+                Some(m) => write!(f, ",{}", m.val_loss)?,
+                None => write!(f, ",")?,
+            }
+        }
+        writeln!(f)?;
+    }
+    Ok(())
+}
+
+/// Append one run's full record to a JSONL log.
+pub fn append_jsonl(path: &Path, value: &Json) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "{}", value.dump())
+}
+
+/// Console table helper: fixed-width row printing for the `table` /
+/// `figure` subcommands.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:w$}  ", c, w = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(headers.iter().map(|h| h.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for row in rows {
+        line(row.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(epoch: usize, val: f32) -> EpochMetrics {
+        EpochMetrics {
+            epoch,
+            train_loss: val * 1.1,
+            val_loss: val,
+            val_acc: 0.5,
+            wstar_fro: 1.0,
+            mem_fro: 0.1,
+            backward_flops: (epoch as u64) * 100,
+            wall_s: 0.01,
+        }
+    }
+
+    #[test]
+    fn curve_summaries() {
+        let mut c = RunCurve::new("topk-mem");
+        for (e, v) in [(1, 3.0), (2, 2.0), (3, 2.5)] {
+            c.push(m(e, v));
+        }
+        assert_eq!(c.final_val_loss(), 2.5);
+        assert_eq!(c.best_val_loss(), 2.0);
+        assert!((c.tail_mean_val_loss(2) - 2.25).abs() < 1e-6);
+        assert_eq!(c.total_backward_flops(), 300);
+    }
+
+    #[test]
+    fn empty_curve_is_nan() {
+        let c = RunCurve::new("x");
+        assert!(c.final_val_loss().is_nan());
+        assert!(c.tail_mean_val_loss(5).is_nan());
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let dir = std::env::temp_dir().join(format!("memaop_csv_{}", std::process::id()));
+        let path = dir.join("curves.csv");
+        let mut a = RunCurve::new("baseline");
+        let mut b = RunCurve::new("topk");
+        a.push(m(1, 1.0));
+        a.push(m(2, 0.5));
+        b.push(m(1, 1.2));
+        write_curves_csv(&path, &[a, b]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "epoch,baseline,topk");
+        assert!(lines[1].starts_with("1,1,1.2"));
+        assert_eq!(lines[2], "2,0.5,");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn jsonl_appends() {
+        let dir = std::env::temp_dir().join(format!("memaop_jsonl_{}", std::process::id()));
+        let path = dir.join("runs.jsonl");
+        let mut c = RunCurve::new("x");
+        c.push(m(1, 2.0));
+        append_jsonl(&path, &c.to_json()).unwrap();
+        append_jsonl(&path, &c.to_json()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        let parsed = crate::util::json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(parsed.get("label").unwrap().as_str().unwrap(), "x");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

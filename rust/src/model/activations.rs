@@ -1,0 +1,88 @@
+//! Activations (numerically-stable, matching `jax.nn` semantics).
+
+use crate::tensor::Matrix;
+
+/// Elementwise relu.
+pub fn relu(m: &Matrix) -> Matrix {
+    m.map(|v| v.max(0.0))
+}
+
+/// relu'(z) as a 0/1 matrix (for the backward chain, eq. (2a)).
+pub fn relu_grad_mask(z: &Matrix) -> Matrix {
+    z.map(|v| (v > 0.0) as u32 as f32)
+}
+
+/// Row-wise softmax with max-subtraction (stable).
+pub fn softmax_rows(m: &Matrix) -> Matrix {
+    let mut out = m.clone();
+    for r in 0..out.rows() {
+        let row = out.row_mut(r);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    out
+}
+
+/// Row-wise log-softmax (stable: `z - max - log Σ exp(z - max)`).
+pub fn log_softmax_rows(m: &Matrix) -> Matrix {
+    let mut out = m.clone();
+    for r in 0..out.rows() {
+        let row = out.row_mut(r);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = row.iter().map(|v| (v - mx).exp()).sum::<f32>().ln();
+        for v in row.iter_mut() {
+            *v = *v - mx - lse;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    #[test]
+    fn relu_clamps() {
+        let m = Matrix::from_vec(1, 4, vec![-2.0, -0.0, 0.5, 3.0]);
+        assert_eq!(relu(&m).data(), &[0.0, 0.0, 0.5, 3.0]);
+        assert_eq!(relu_grad_mask(&m).data(), &[0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(0);
+        let m = Matrix::from_fn(6, 9, |_, _| rng.normal() * 3.0);
+        let s = softmax_rows(&m);
+        for r in 0..6 {
+            let sum: f32 = s.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(s.row(r).iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let m = Matrix::from_vec(1, 3, vec![1000.0, 1001.0, 999.0]);
+        let s = softmax_rows(&m);
+        assert!(s.is_finite());
+        assert!((s.row(0).iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(s[(0, 1)] > s[(0, 0)] && s[(0, 0)] > s[(0, 2)]);
+    }
+
+    #[test]
+    fn log_softmax_is_log_of_softmax() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::from_fn(4, 5, |_, _| rng.normal());
+        let a = log_softmax_rows(&m);
+        let b = softmax_rows(&m).map(|v| v.ln());
+        assert!(a.max_abs_diff(&b) < 1e-5);
+    }
+}

@@ -1,0 +1,160 @@
+//! Losses and their output gradients (`G_L` of Sec. II-A).
+//!
+//! The gradient definitions match `python/compile/model.py` exactly:
+//!
+//! * MSE:  `L = mean((O - Y)^2)`, `G = 2 (O - Y) / (B · P)`;
+//! * CCE:  `L = -mean(Σ_p Y log softmax(O))`, `G = (softmax(O) - Y) / B`.
+
+use crate::model::activations::{log_softmax_rows, softmax_rows};
+use crate::tensor::Matrix;
+
+/// Loss selector (Tab. I: MSE for energy, CCE for mnist).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LossKind {
+    /// Mean squared error over all entries.
+    Mse,
+    /// Categorical cross-entropy over softmax rows (one-hot targets).
+    SoftmaxCrossEntropy,
+}
+
+impl LossKind {
+    pub fn parse(s: &str) -> Option<LossKind> {
+        Some(match s {
+            "mse" => LossKind::Mse,
+            "cce" | "softmax_cce" => LossKind::SoftmaxCrossEntropy,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LossKind::Mse => "mse",
+            LossKind::SoftmaxCrossEntropy => "cce",
+        }
+    }
+
+    /// Loss value and gradient w.r.t. the pre-activation output `o`.
+    pub fn loss_and_grad(&self, o: &Matrix, y: &Matrix) -> (f32, Matrix) {
+        assert_eq!(o.shape(), y.shape());
+        match self {
+            LossKind::Mse => {
+                let n = (o.rows() * o.cols()) as f32;
+                let diff = o.sub(y);
+                let loss = diff.data().iter().map(|v| v * v).sum::<f32>() / n;
+                (loss, diff.scale(2.0 / n))
+            }
+            LossKind::SoftmaxCrossEntropy => {
+                let b = o.rows() as f32;
+                let logp = log_softmax_rows(o);
+                let loss = -y
+                    .data()
+                    .iter()
+                    .zip(logp.data().iter())
+                    .map(|(yv, lv)| yv * lv)
+                    .sum::<f32>()
+                    / b;
+                let mut g = softmax_rows(o);
+                g.axpy(-1.0, y);
+                (loss, g.scale(1.0 / b))
+            }
+        }
+    }
+
+    /// Loss value only (validation path).
+    pub fn loss(&self, o: &Matrix, y: &Matrix) -> f32 {
+        self.loss_and_grad(o, y).0
+    }
+}
+
+/// Argmax-agreement accuracy (classification diagnostics).
+pub fn accuracy(o: &Matrix, y: &Matrix) -> f32 {
+    assert_eq!(o.shape(), y.shape());
+    let mut correct = 0usize;
+    for r in 0..o.rows() {
+        let am = |row: &[f32]| -> usize {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        };
+        if am(o.row(r)) == am(y.row(r)) {
+            correct += 1;
+        }
+    }
+    correct as f32 / o.rows() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    #[test]
+    fn mse_value_and_grad() {
+        let o = Matrix::from_vec(2, 1, vec![1.0, 3.0]);
+        let y = Matrix::from_vec(2, 1, vec![0.0, 1.0]);
+        let (loss, g) = LossKind::Mse.loss_and_grad(&o, &y);
+        assert!((loss - 2.5).abs() < 1e-6); // (1 + 4)/2
+        assert!((g[(0, 0)] - 1.0).abs() < 1e-6); // 2*1/2
+        assert!((g[(1, 0)] - 2.0).abs() < 1e-6); // 2*2/2
+    }
+
+    #[test]
+    fn mse_grad_is_numeric_derivative() {
+        let mut rng = Rng::new(0);
+        let o = Matrix::from_fn(4, 3, |_, _| rng.normal());
+        let y = Matrix::from_fn(4, 3, |_, _| rng.normal());
+        let (_, g) = LossKind::Mse.loss_and_grad(&o, &y);
+        let eps = 1e-3f32;
+        for (r, c) in [(0, 0), (2, 1), (3, 2)] {
+            let mut op = o.clone();
+            op[(r, c)] += eps;
+            let mut om = o.clone();
+            om[(r, c)] -= eps;
+            let num = (LossKind::Mse.loss(&op, &y) - LossKind::Mse.loss(&om, &y)) / (2.0 * eps);
+            assert!((num - g[(r, c)]).abs() < 1e-3, "({r},{c})");
+        }
+    }
+
+    #[test]
+    fn cce_grad_is_numeric_derivative() {
+        let mut rng = Rng::new(1);
+        let o = Matrix::from_fn(5, 4, |_, _| rng.normal());
+        let y = Matrix::from_fn(5, 4, |r, c| ((r + 1) % 4 == c) as u32 as f32);
+        let kind = LossKind::SoftmaxCrossEntropy;
+        let (_, g) = kind.loss_and_grad(&o, &y);
+        let eps = 1e-2f32;
+        for (r, c) in [(0, 0), (1, 3), (4, 2)] {
+            let mut op = o.clone();
+            op[(r, c)] += eps;
+            let mut om = o.clone();
+            om[(r, c)] -= eps;
+            let num = (kind.loss(&op, &y) - kind.loss(&om, &y)) / (2.0 * eps);
+            assert!((num - g[(r, c)]).abs() < 1e-3, "({r},{c}): {num} vs {}", g[(r, c)]);
+        }
+    }
+
+    #[test]
+    fn cce_perfect_prediction_low_loss() {
+        // logits strongly favoring the true class
+        let y = Matrix::from_fn(3, 3, |r, c| (r == c) as u32 as f32);
+        let o = y.scale(20.0);
+        let loss = LossKind::SoftmaxCrossEntropy.loss(&o, &y);
+        assert!(loss < 1e-3, "loss={loss}");
+    }
+
+    #[test]
+    fn accuracy_counts_argmax_matches() {
+        let o = Matrix::from_vec(3, 2, vec![0.9, 0.1, 0.2, 0.8, 0.6, 0.4]);
+        let y = Matrix::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 0.0, 1.0]);
+        assert!((accuracy(&o, &y) - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(LossKind::parse("mse"), Some(LossKind::Mse));
+        assert_eq!(LossKind::parse("cce"), Some(LossKind::SoftmaxCrossEntropy));
+        assert_eq!(LossKind::parse("hinge"), None);
+    }
+}

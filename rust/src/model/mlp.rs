@@ -1,0 +1,335 @@
+//! Dense layers and the multi-layer perceptron used by the native trainer
+//! and the end-to-end example.
+//!
+//! The MLP applies Mem-AOP-GD *per layer*: each dense weight gradient
+//! `W_i* = X̂_i^T Ĝ_i` goes through the selection policy with its own
+//! error-feedback memory, while the backward chain (eq. (2a)) uses the
+//! exact pre-update weights — matching `python/compile/model.py`'s
+//! `mlp_train_step` operation-for-operation.
+
+use crate::aop::{policy, MemoryState, Policy};
+use crate::model::activations::{relu, relu_grad_mask};
+use crate::model::loss::{accuracy, LossKind};
+use crate::tensor::rng::Rng;
+use crate::tensor::{init, ops, Matrix};
+
+/// One dense layer `o = x W + b`.
+#[derive(Debug, Clone)]
+pub struct DenseLayer {
+    pub w: Matrix,
+    pub b: Vec<f32>,
+}
+
+impl DenseLayer {
+    /// Glorot-uniform weights, zero bias (Keras default).
+    pub fn glorot(rng: &mut Rng, fan_in: usize, fan_out: usize) -> Self {
+        DenseLayer {
+            w: init::glorot_uniform(rng, fan_in, fan_out),
+            b: init::zeros_bias(fan_out),
+        }
+    }
+
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        x.matmul(&self.w).add_row_broadcast(&self.b)
+    }
+
+    pub fn fan_in(&self) -> usize {
+        self.w.rows()
+    }
+
+    pub fn fan_out(&self) -> usize {
+        self.w.cols()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.w.rows() * self.w.cols() + self.b.len()
+    }
+}
+
+/// Multi-layer perceptron: relu hidden layers, linear head.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub layers: Vec<DenseLayer>,
+    pub loss: LossKind,
+}
+
+/// Per-layer AOP training state for an MLP.
+pub struct MlpAopState {
+    pub memories: Vec<MemoryState>,
+    pub policy: Policy,
+    pub k: usize,
+}
+
+/// Metrics from one MLP train step.
+#[derive(Debug, Clone, Copy)]
+pub struct MlpStepInfo {
+    pub loss: f32,
+    pub acc: f32,
+    /// Total distinct outer products evaluated across layers.
+    pub k_effective: usize,
+}
+
+impl Mlp {
+    /// Build with the given layer widths, e.g. `[784, 1024, 1024, 10]`.
+    pub fn new(rng: &mut Rng, widths: &[usize], loss: LossKind) -> Self {
+        assert!(widths.len() >= 2, "need at least input and output widths");
+        let layers = widths
+            .windows(2)
+            .map(|w| DenseLayer::glorot(rng, w[0], w[1]))
+            .collect();
+        Mlp { layers, loss }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.num_params()).sum()
+    }
+
+    pub fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.layers.iter().map(|l| l.fan_in()).collect();
+        w.push(self.layers.last().unwrap().fan_out());
+        w
+    }
+
+    /// Forward pass; returns per-layer inputs (`acts`, length L+1) and
+    /// pre-activations (`zs`, length L).
+    pub fn forward_trace(&self, x: &Matrix) -> (Vec<Matrix>, Vec<Matrix>) {
+        let n = self.layers.len();
+        let mut acts = Vec::with_capacity(n + 1);
+        let mut zs = Vec::with_capacity(n);
+        acts.push(x.clone());
+        let mut h = x.clone();
+        for (i, layer) in self.layers.iter().enumerate() {
+            let z = layer.forward(&h);
+            h = if i + 1 < n { relu(&z) } else { z.clone() };
+            zs.push(z);
+            acts.push(h.clone());
+        }
+        (acts, zs)
+    }
+
+    /// Plain forward (no trace).
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        let n = self.layers.len();
+        let mut h = x.clone();
+        for (i, layer) in self.layers.iter().enumerate() {
+            let z = layer.forward(&h);
+            h = if i + 1 < n { relu(&z) } else { z };
+        }
+        h
+    }
+
+    /// Validation loss + accuracy.
+    pub fn evaluate(&self, x: &Matrix, y: &Matrix) -> (f32, f32) {
+        let o = self.forward(x);
+        (self.loss.loss(&o, y), accuracy(&o, y))
+    }
+
+    /// One Mem-AOP-GD train step (Algorithm 1 applied per layer).
+    ///
+    /// `state.memories[i]` must match layer i's batch/input/output dims.
+    /// The RNG drives the stochastic selection policies.
+    pub fn train_step_aop(
+        &mut self,
+        x: &Matrix,
+        y: &Matrix,
+        eta: f32,
+        state: &mut MlpAopState,
+        rng: &mut Rng,
+    ) -> MlpStepInfo {
+        let n = self.layers.len();
+        assert_eq!(state.memories.len(), n);
+        let (acts, zs) = self.forward_trace(x);
+        let (loss, mut g) = self.loss.loss_and_grad(&acts[n], y);
+        let acc = accuracy(&acts[n], y);
+
+        let mut k_eff = 0usize;
+        // Backward: compute each layer's update from the *pre-update*
+        // weights, deferring weight writes until the chain is done.
+        let mut new_weights: Vec<(Matrix, Vec<f32>)> = Vec::with_capacity(n);
+        for i in (0..n).rev() {
+            let xin = &acts[i];
+            let mem = &mut state.memories[i];
+            let (xhat, ghat) = mem.fold(xin, &g, eta);
+            let scores = ops::norm_product_scores(&xhat, &ghat);
+            let sel = policy::select(
+                state.policy,
+                &scores,
+                state.k.min(scores.len()),
+                mem.enabled,
+                rng,
+            );
+            k_eff += sel.k_effective();
+            let wstar = ops::masked_outer_compact(&xhat, &ghat, &sel.compact_pairs());
+            let layer = &self.layers[i];
+            let w_new = layer.w.sub(&wstar);
+            let db = g.col_sums();
+            let b_new: Vec<f32> = layer
+                .b
+                .iter()
+                .zip(db.iter())
+                .map(|(b, d)| b - eta * d)
+                .collect();
+            mem.update(&xhat, &ghat, &sel.keep);
+            new_weights.push((w_new, b_new));
+
+            if i > 0 {
+                // eq. (2a): G_i = G_{i+1} W_i^T ⊙ relu'(z_{i-1})
+                let back = g.matmul(&layer.w.transpose());
+                let mask = relu_grad_mask(&zs[i - 1]);
+                g = Matrix::from_fn(back.rows(), back.cols(), |r, c| {
+                    back[(r, c)] * mask[(r, c)]
+                });
+            }
+        }
+        for (i, (w, b)) in new_weights.into_iter().enumerate() {
+            let layer_idx = n - 1 - i;
+            self.layers[layer_idx].w = w;
+            self.layers[layer_idx].b = b;
+        }
+        MlpStepInfo {
+            loss,
+            acc,
+            k_effective: k_eff,
+        }
+    }
+
+    /// Exact SGD step (baseline comparator).
+    pub fn train_step_sgd(&mut self, x: &Matrix, y: &Matrix, eta: f32) -> MlpStepInfo {
+        let mut memories: Vec<MemoryState> = self
+            .layers
+            .iter()
+            .map(|l| MemoryState::new(x.rows(), l.fan_in(), l.fan_out(), false))
+            .collect();
+        let mut state = MlpAopState {
+            memories: std::mem::take(&mut memories),
+            policy: Policy::Exact,
+            k: x.rows(),
+        };
+        let mut rng = Rng::new(0); // unused by Exact
+        self.train_step_aop(x, y, eta, &mut state, &mut rng)
+    }
+}
+
+/// Build per-layer memories for an MLP/batch pair.
+pub fn mlp_memories(mlp: &Mlp, batch: usize, enabled: bool) -> Vec<MemoryState> {
+    mlp.layers
+        .iter()
+        .map(|l| MemoryState::new(batch, l.fan_in(), l.fan_out(), enabled))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_data(rng: &mut Rng, b: usize, nin: usize, nout: usize) -> (Matrix, Matrix) {
+        let x = Matrix::from_fn(b, nin, |_, _| rng.normal());
+        let y = Matrix::from_fn(b, nout, |r, c| ((r % nout) == c) as u32 as f32);
+        (x, y)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(0);
+        let mlp = Mlp::new(&mut rng, &[8, 16, 4], LossKind::SoftmaxCrossEntropy);
+        let (x, _) = toy_data(&mut rng, 5, 8, 4);
+        assert_eq!(mlp.forward(&x).shape(), (5, 4));
+        let (acts, zs) = mlp.forward_trace(&x);
+        assert_eq!(acts.len(), 3);
+        assert_eq!(zs.len(), 2);
+        assert_eq!(acts[1].shape(), (5, 16));
+    }
+
+    #[test]
+    fn num_params() {
+        let mut rng = Rng::new(1);
+        let mlp = Mlp::new(&mut rng, &[10, 20, 5], LossKind::SoftmaxCrossEntropy);
+        assert_eq!(mlp.num_params(), 10 * 20 + 20 + 20 * 5 + 5);
+        assert_eq!(mlp.widths(), vec![10, 20, 5]);
+    }
+
+    #[test]
+    fn sgd_step_reduces_loss_on_fixed_batch() {
+        let mut rng = Rng::new(2);
+        let mut mlp = Mlp::new(&mut rng, &[6, 12, 3], LossKind::SoftmaxCrossEntropy);
+        let (x, y) = toy_data(&mut rng, 12, 6, 3);
+        let before = mlp.evaluate(&x, &y).0;
+        for _ in 0..30 {
+            mlp.train_step_sgd(&x, &y, 0.1);
+        }
+        let after = mlp.evaluate(&x, &y).0;
+        assert!(after < before * 0.7, "before={before} after={after}");
+    }
+
+    #[test]
+    fn aop_topk_step_reduces_loss() {
+        let mut rng = Rng::new(3);
+        let mut mlp = Mlp::new(&mut rng, &[6, 12, 3], LossKind::SoftmaxCrossEntropy);
+        let (x, y) = toy_data(&mut rng, 16, 6, 3);
+        let mut state = MlpAopState {
+            memories: mlp_memories(&mlp, 16, true),
+            policy: Policy::TopK,
+            k: 4,
+        };
+        let before = mlp.evaluate(&x, &y).0;
+        for _ in 0..60 {
+            mlp.train_step_aop(&x, &y, 0.1, &mut state, &mut rng);
+        }
+        let after = mlp.evaluate(&x, &y).0;
+        assert!(after < before * 0.8, "before={before} after={after}");
+    }
+
+    #[test]
+    fn exact_policy_is_sgd() {
+        // Exact AOP (all rows, no memory) must equal the plain SGD step.
+        let mut rng = Rng::new(4);
+        let mlp0 = Mlp::new(&mut rng, &[5, 8, 2], LossKind::SoftmaxCrossEntropy);
+        let (x, y) = toy_data(&mut rng, 10, 5, 2);
+
+        let mut a = mlp0.clone();
+        a.train_step_sgd(&x, &y, 0.05);
+
+        let mut b = mlp0.clone();
+        let mut state = MlpAopState {
+            memories: mlp_memories(&b, 10, false),
+            policy: Policy::Exact,
+            k: 10,
+        };
+        let mut r2 = Rng::new(99);
+        b.train_step_aop(&x, &y, 0.05, &mut state, &mut r2);
+
+        for (la, lb) in a.layers.iter().zip(b.layers.iter()) {
+            assert!(la.w.max_abs_diff(&lb.w) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn k_effective_counts_selected_products() {
+        let mut rng = Rng::new(5);
+        let mut mlp = Mlp::new(&mut rng, &[4, 6, 2], LossKind::SoftmaxCrossEntropy);
+        let (x, y) = toy_data(&mut rng, 8, 4, 2);
+        let mut state = MlpAopState {
+            memories: mlp_memories(&mlp, 8, true),
+            policy: Policy::TopK,
+            k: 3,
+        };
+        let info = mlp.train_step_aop(&x, &y, 0.05, &mut state, &mut rng);
+        assert_eq!(info.k_effective, 3 * 2); // k per layer × 2 layers
+    }
+
+    #[test]
+    fn single_layer_mse_matches_manual_gradient() {
+        // one linear layer + MSE: W* = X^T G exactly
+        let mut rng = Rng::new(6);
+        let mut mlp = Mlp::new(&mut rng, &[3, 2], LossKind::Mse);
+        let x = Matrix::from_fn(4, 3, |_, _| rng.normal());
+        let y = Matrix::from_fn(4, 2, |_, _| rng.normal());
+        let w0 = mlp.layers[0].w.clone();
+        let o = mlp.forward(&x);
+        let (_, g) = LossKind::Mse.loss_and_grad(&o, &y);
+        let eta = 0.1f32;
+        mlp.train_step_sgd(&x, &y, eta);
+        let expect = w0.sub(&ops::matmul_tn(&x, &g).scale(eta));
+        assert!(mlp.layers[0].w.max_abs_diff(&expect) < 1e-5);
+    }
+}

@@ -1,0 +1,12 @@
+//! Native model substrate: layers, activations, losses, and the MLP
+//! definition shared by the native trainer and the e2e example.
+//!
+//! Matches the Layer-2 JAX graphs operation-for-operation so the native
+//! and HLO training paths are interchangeable oracles of each other.
+
+pub mod activations;
+pub mod loss;
+pub mod mlp;
+
+pub use loss::LossKind;
+pub use mlp::{DenseLayer, Mlp};

@@ -1,0 +1,414 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many.
+//!
+//! [`Runtime`] owns one `PjRtClient` (CPU) and a lazily-populated cache of
+//! compiled executables keyed by artifact name. [`Executable::run`]
+//! validates argument shapes against the manifest, marshals `Matrix`/
+//! scalar values into `xla::Literal`s, executes, and unpacks the output
+//! tuple back into typed values, accumulating wall-clock stats per
+//! artifact (surfaced by `repro inspect-artifacts` and the §Perf pass).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::manifest::{ArtifactSpec, Manifest, TensorSpec};
+use crate::tensor::Matrix;
+
+/// A typed value crossing the Rust ⇄ PJRT boundary.
+#[derive(Debug, Clone)]
+pub enum Value {
+    Scalar(f32),
+    Vector(Vec<f32>),
+    Matrix(Matrix),
+}
+
+/// Borrowed argument for [`Executable::run_ref`] — lets the hot path feed
+/// model state without cloning matrices into [`Value`]s first (§Perf).
+#[derive(Debug, Clone, Copy)]
+pub enum ArgRef<'a> {
+    Scalar(f32),
+    Vector(&'a [f32]),
+    Matrix(&'a Matrix),
+}
+
+impl<'a> ArgRef<'a> {
+    fn shape(&self) -> Vec<usize> {
+        match self {
+            ArgRef::Scalar(_) => vec![],
+            ArgRef::Vector(v) => vec![v.len()],
+            ArgRef::Matrix(m) => vec![m.rows(), m.cols()],
+        }
+    }
+
+    fn data(&self) -> &[f32] {
+        match self {
+            ArgRef::Scalar(v) => std::slice::from_ref(v),
+            ArgRef::Vector(v) => v,
+            ArgRef::Matrix(m) => m.data(),
+        }
+    }
+}
+
+impl<'a> From<&'a Value> for ArgRef<'a> {
+    fn from(v: &'a Value) -> Self {
+        match v {
+            Value::Scalar(s) => ArgRef::Scalar(*s),
+            Value::Vector(v) => ArgRef::Vector(v),
+            Value::Matrix(m) => ArgRef::Matrix(m),
+        }
+    }
+}
+
+impl<'a> From<&'a Matrix> for ArgRef<'a> {
+    fn from(m: &'a Matrix) -> Self {
+        ArgRef::Matrix(m)
+    }
+}
+
+impl<'a> From<&'a [f32]> for ArgRef<'a> {
+    fn from(v: &'a [f32]) -> Self {
+        ArgRef::Vector(v)
+    }
+}
+
+impl<'a> From<&'a Vec<f32>> for ArgRef<'a> {
+    fn from(v: &'a Vec<f32>) -> Self {
+        ArgRef::Vector(v)
+    }
+}
+
+impl From<f32> for ArgRef<'static> {
+    fn from(v: f32) -> Self {
+        ArgRef::Scalar(v)
+    }
+}
+
+impl Value {
+    pub fn as_scalar(&self) -> Result<f32> {
+        match self {
+            Value::Scalar(v) => Ok(*v),
+            _ => bail!("expected scalar, got {self:?}"),
+        }
+    }
+
+    pub fn as_vector(&self) -> Result<&[f32]> {
+        match self {
+            Value::Vector(v) => Ok(v),
+            _ => bail!("expected vector"),
+        }
+    }
+
+    pub fn into_matrix(self) -> Result<Matrix> {
+        match self {
+            Value::Matrix(m) => Ok(m),
+            _ => bail!("expected matrix"),
+        }
+    }
+
+    pub fn into_vector(self) -> Result<Vec<f32>> {
+        match self {
+            Value::Vector(v) => Ok(v),
+            _ => bail!("expected vector"),
+        }
+    }
+
+    /// Build from a spec + flat data (output unmarshalling).
+    fn from_flat(spec: &TensorSpec, data: Vec<f32>) -> Result<Value> {
+        if data.len() != spec.num_elements() {
+            bail!(
+                "output '{}': got {} elements, expected {}",
+                spec.name,
+                data.len(),
+                spec.num_elements()
+            );
+        }
+        Ok(match spec.shape.len() {
+            0 => Value::Scalar(data[0]),
+            1 => Value::Vector(data),
+            2 => Value::Matrix(Matrix::from_vec(spec.shape[0], spec.shape[1], data)),
+            n => bail!("output '{}': rank {n} unsupported", spec.name),
+        })
+    }
+}
+
+impl From<f32> for Value {
+    fn from(v: f32) -> Self {
+        Value::Scalar(v)
+    }
+}
+
+impl From<Vec<f32>> for Value {
+    fn from(v: Vec<f32>) -> Self {
+        Value::Vector(v)
+    }
+}
+
+impl From<Matrix> for Value {
+    fn from(m: Matrix) -> Self {
+        Value::Matrix(m)
+    }
+}
+
+impl From<&Matrix> for Value {
+    fn from(m: &Matrix) -> Self {
+        Value::Matrix(m.clone())
+    }
+}
+
+/// Cumulative execution stats for one artifact.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_ns: u64,
+    pub compile_ns: u64,
+}
+
+impl ExecStats {
+    pub fn mean_us(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.calls as f64 / 1e3
+        }
+    }
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    stats: RefCell<ExecStats>,
+}
+
+impl Executable {
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.borrow()
+    }
+
+    /// Execute with positional arguments; validates shapes against the
+    /// manifest and returns outputs in manifest order.
+    pub fn run(&self, args: &[Value]) -> Result<Vec<Value>> {
+        let refs: Vec<ArgRef<'_>> = args.iter().map(ArgRef::from).collect();
+        self.run_ref(&refs)
+    }
+
+    /// Zero-clone variant of [`Executable::run`]: arguments are borrowed,
+    /// so model state crosses into PJRT with exactly one copy (the
+    /// literal construction) instead of two.
+    pub fn run_ref(&self, args: &[ArgRef<'_>]) -> Result<Vec<Value>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} args, expected {}",
+                self.spec.name,
+                args.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, spec) in args.iter().zip(self.spec.inputs.iter()) {
+            let shape = arg.shape();
+            if shape != spec.shape {
+                bail!(
+                    "{}: input '{}' shape {:?}, expected {:?}",
+                    self.spec.name,
+                    spec.name,
+                    shape,
+                    spec.shape
+                );
+            }
+            let lit = xla::Literal::vec1(arg.data());
+            let lit = if spec.is_scalar() {
+                lit.reshape(&[])
+                    .with_context(|| format!("reshaping scalar '{}'", spec.name))?
+            } else {
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims)
+                    .with_context(|| format!("reshaping '{}'", spec.name))?
+            };
+            literals.push(lit);
+        }
+
+        let t = Instant::now();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.spec.name))?;
+        // aot.py lowers with return_tuple=True ⇒ always a tuple
+        let parts = tuple
+            .to_tuple()
+            .with_context(|| format!("untupling result of {}", self.spec.name))?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.into_iter().zip(self.spec.outputs.iter()) {
+            let data = lit
+                .to_vec::<f32>()
+                .with_context(|| format!("reading output '{}'", ospec.name))?;
+            out.push(Value::from_flat(ospec, data)?);
+        }
+        let dt = t.elapsed().as_nanos() as u64;
+        let mut st = self.stats.borrow_mut();
+        st.calls += 1;
+        st.total_ns += dt;
+        Ok(out)
+    }
+}
+
+/// PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// CPU PJRT client over the given artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Like [`Runtime::new`] with the default artifacts location.
+    pub fn from_default_artifacts() -> Result<Runtime> {
+        Self::new(&Manifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Fetch (compiling on first use) the named artifact.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let t = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let compile_ns = t.elapsed().as_nanos() as u64;
+        let executable = Rc::new(Executable {
+            spec,
+            exe,
+            stats: RefCell::new(ExecStats {
+                compile_ns,
+                ..Default::default()
+            }),
+        });
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    /// Compile every artifact in the manifest (warm-up / smoke check).
+    pub fn load_all(&self) -> Result<Vec<(String, ExecStats)>> {
+        let names: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
+        let mut out = Vec::new();
+        for n in names {
+            let e = self.load(&n)?;
+            out.push((n, e.stats()));
+        }
+        Ok(out)
+    }
+
+    /// Stats snapshot for all loaded artifacts.
+    pub fn stats(&self) -> Vec<(String, ExecStats)> {
+        self.cache
+            .borrow()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.stats()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorSpec;
+
+    #[test]
+    fn argref_shape_data() {
+        let v = Value::Scalar(2.0);
+        let r = ArgRef::from(&v);
+        assert!(r.shape().is_empty());
+        assert_eq!(r.data(), &[2.0]);
+        let vec_val = vec![1.0f32, 2.0];
+        let r = ArgRef::from(&vec_val);
+        assert_eq!(r.shape(), vec![2]);
+        assert_eq!(r.data().len(), 2);
+        let m = Matrix::zeros(3, 4);
+        let r = ArgRef::from(&m);
+        assert_eq!(r.shape(), vec![3, 4]);
+        assert_eq!(r.data().len(), 12);
+    }
+
+    #[test]
+    fn value_from_flat_ranks() {
+        let sc = TensorSpec {
+            name: "a".into(),
+            shape: vec![],
+        };
+        assert!(matches!(
+            Value::from_flat(&sc, vec![1.0]).unwrap(),
+            Value::Scalar(_)
+        ));
+        let ve = TensorSpec {
+            name: "b".into(),
+            shape: vec![3],
+        };
+        assert!(matches!(
+            Value::from_flat(&ve, vec![1.0, 2.0, 3.0]).unwrap(),
+            Value::Vector(_)
+        ));
+        let ma = TensorSpec {
+            name: "c".into(),
+            shape: vec![2, 2],
+        };
+        let m = Value::from_flat(&ma, vec![1.0; 4]).unwrap();
+        assert_eq!(m.into_matrix().unwrap().shape(), (2, 2));
+        // wrong element count rejected
+        assert!(Value::from_flat(&ve, vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(Value::Scalar(3.0).as_scalar().unwrap(), 3.0);
+        assert!(Value::Vector(vec![]).as_scalar().is_err());
+        assert!(Value::Scalar(1.0).into_matrix().is_err());
+    }
+
+    // Execution against real artifacts is covered by rust/tests/ (needs
+    // `make artifacts`); unit scope here is marshalling only.
+}

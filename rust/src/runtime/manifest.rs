@@ -1,0 +1,333 @@
+//! Artifact manifest (`artifacts/manifest.json`).
+//!
+//! The AOT compiler records, for every lowered graph, the positional
+//! input and output tensor specs. The runtime validates every execution
+//! against these — a shape mismatch is caught with a readable error
+//! *before* PJRT sees it, and the coordinator sizes its buffers from the
+//! manifest instead of parsing HLO.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Shape + name of one graph input/output (always f32 in this project).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    /// Dimensions; empty = scalar.
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        self.shape.is_empty()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        let name = v
+            .req("name")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_str()
+            .ok_or_else(|| anyhow!("spec name not a string"))?
+            .to_string();
+        let shape = v
+            .req("shape")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("spec '{name}': bad shape"))?;
+        let dtype = v.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32");
+        if dtype != "f32" {
+            bail!("spec '{name}': unsupported dtype {dtype}");
+        }
+        Ok(TensorSpec { name, shape })
+    }
+}
+
+/// One artifact: HLO file + positional I/O contract.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Index of a named input.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|s| s.name == name)
+    }
+}
+
+/// Task metadata mirrored from `python/compile/model.py::TASKS`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskMeta {
+    pub batch: usize,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub loss: String,
+}
+
+/// MLP metadata for the monolithic e2e artifacts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MlpMeta {
+    pub layers: Vec<usize>,
+    pub batch: usize,
+    pub k: usize,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory containing the manifest (artifact paths are relative).
+    pub dir: PathBuf,
+    pub tasks: BTreeMap<String, TaskMeta>,
+    pub mlp: MlpMeta,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse from in-memory JSON (exposed for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = root
+            .get("version")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("manifest: missing version"))?;
+        if version != 1 {
+            bail!("manifest: unsupported version {version}");
+        }
+
+        let mut tasks = BTreeMap::new();
+        for (name, t) in root
+            .req("tasks")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest: tasks not an object"))?
+        {
+            let get = |k: &str| -> Result<usize> {
+                t.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("task {name}: missing {k}"))
+            };
+            tasks.insert(
+                name.clone(),
+                TaskMeta {
+                    batch: get("batch")?,
+                    n_in: get("n_in")?,
+                    n_out: get("n_out")?,
+                    loss: t
+                        .get("loss")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("mse")
+                        .to_string(),
+                },
+            );
+        }
+
+        let mlp_j = root.req("mlp").map_err(|e| anyhow!("{e}"))?;
+        let mlp = MlpMeta {
+            layers: mlp_j
+                .req("layers")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_usize_vec()
+                .ok_or_else(|| anyhow!("manifest: bad mlp.layers"))?,
+            batch: mlp_j
+                .get("batch")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest: bad mlp.batch"))?,
+            k: mlp_j
+                .get("k")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest: bad mlp.k"))?,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in root
+            .req("artifacts")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest: artifacts not an object"))?
+        {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.req(key)
+                    .map_err(|e| anyhow!("artifact {name}: {e}"))?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("artifact {name}: {key} not an array"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(
+                        a.req("file")
+                            .map_err(|e| anyhow!("{e}"))?
+                            .as_str()
+                            .ok_or_else(|| anyhow!("artifact {name}: bad file"))?,
+                    ),
+                    sha256: a
+                        .get("sha256")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            tasks,
+            mlp,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn task(&self, name: &str) -> Result<&TaskMeta> {
+        self.tasks
+            .get(name)
+            .ok_or_else(|| anyhow!("task '{name}' not in manifest"))
+    }
+
+    /// Verify every artifact file exists on disk.
+    pub fn check_files(&self) -> Result<()> {
+        for a in self.artifacts.values() {
+            if !a.file.exists() {
+                bail!("artifact file missing: {}", a.file.display());
+            }
+        }
+        Ok(())
+    }
+
+    /// Default artifacts directory: `$REPRO_ARTIFACTS` or `artifacts/`
+    /// relative to the workspace root (walking up from cwd).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("REPRO_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        // walk up from cwd looking for artifacts/manifest.json
+        let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        for _ in 0..5 {
+            let cand = dir.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return cand;
+            }
+            if !dir.pop() {
+                break;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "tasks": {"energy": {"batch": 144, "n_in": 16, "n_out": 1, "loss": "mse"}},
+      "mlp": {"layers": [784, 1024, 10], "batch": 128, "k": 32},
+      "artifacts": {
+        "energy_eval": {
+          "file": "energy_eval.hlo.txt",
+          "sha256": "abc",
+          "inputs": [
+            {"name": "x", "shape": [144, 16], "dtype": "f32"},
+            {"name": "eta", "shape": [], "dtype": "f32"}
+          ],
+          "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        assert_eq!(m.tasks["energy"].batch, 144);
+        assert_eq!(m.mlp.layers, vec![784, 1024, 10]);
+        let a = m.artifact("energy_eval").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![144, 16]);
+        assert!(a.inputs[1].is_scalar());
+        assert_eq!(a.input_index("eta"), Some(1));
+        assert_eq!(a.output_index("loss"), Some(0));
+        assert_eq!(a.file, Path::new("/tmp/arts/energy_eval.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(Path::new("."), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("\"dtype\": \"f32\"", "\"dtype\": \"f64\"");
+        assert!(Manifest::parse(Path::new("."), &bad).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_error() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.task("nope").is_err());
+    }
+
+    #[test]
+    fn num_elements() {
+        let t = TensorSpec {
+            name: "x".into(),
+            shape: vec![3, 4],
+        };
+        assert_eq!(t.num_elements(), 12);
+        let s = TensorSpec {
+            name: "eta".into(),
+            shape: vec![],
+        };
+        assert_eq!(s.num_elements(), 1);
+        assert!(s.is_scalar());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() >= 9);
+            m.check_files().unwrap();
+            // the paper's two tasks must be present
+            assert!(m.tasks.contains_key("energy"));
+            assert!(m.tasks.contains_key("mnist"));
+        }
+    }
+}

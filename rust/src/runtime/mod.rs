@@ -1,0 +1,19 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute many.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin) behind a typed,
+//! manifest-validated interface:
+//!
+//! * [`manifest`] — parse `artifacts/manifest.json` (input/output specs
+//!   emitted by `python/compile/aot.py`);
+//! * [`client`] — `Runtime`: PJRT client + per-artifact compiled
+//!   executable cache; [`client::Executable::run`] validates shapes
+//!   against the manifest before dispatch and returns `Matrix`/scalars.
+//!
+//! HLO *text* is the interchange format (see `aot.py` for why), parsed
+//! with `HloModuleProto::from_text_file` and compiled at first use.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{ArgRef, Executable, Runtime, Value};
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};

@@ -1,0 +1,74 @@
+//! Parameter initializers.
+//!
+//! Glorot/He schemes matching the Keras defaults the paper's reference
+//! implementation used (`glorot_uniform` for dense layers), so the native
+//! and HLO paths start from the same weight distribution family.
+
+use super::rng::Rng;
+use super::Matrix;
+
+/// Glorot (Xavier) uniform: U(-l, l), l = sqrt(6 / (fan_in + fan_out)).
+/// Keras's default dense initializer.
+pub fn glorot_uniform(rng: &mut Rng, fan_in: usize, fan_out: usize) -> Matrix {
+    let limit = (6.0 / (fan_in + fan_out) as f32).sqrt();
+    Matrix::from_fn(fan_in, fan_out, |_, _| {
+        (rng.uniform() * 2.0 - 1.0) * limit
+    })
+}
+
+/// Glorot normal: N(0, 2/(fan_in+fan_out)).
+pub fn glorot_normal(rng: &mut Rng, fan_in: usize, fan_out: usize) -> Matrix {
+    let std = (2.0 / (fan_in + fan_out) as f32).sqrt();
+    Matrix::from_fn(fan_in, fan_out, |_, _| rng.normal() * std)
+}
+
+/// He normal: N(0, 2/fan_in) — for relu hidden layers in the e2e MLP.
+pub fn he_normal(rng: &mut Rng, fan_in: usize, fan_out: usize) -> Matrix {
+    let std = (2.0 / fan_in as f32).sqrt();
+    Matrix::from_fn(fan_in, fan_out, |_, _| rng.normal() * std)
+}
+
+/// Zero bias vector.
+pub fn zeros_bias(n: usize) -> Vec<f32> {
+    vec![0.0; n]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glorot_uniform_bounds() {
+        let mut rng = Rng::new(0);
+        let w = glorot_uniform(&mut rng, 16, 1);
+        let limit = (6.0f32 / 17.0).sqrt();
+        assert!(w.data().iter().all(|v| v.abs() <= limit));
+        assert_eq!(w.shape(), (16, 1));
+    }
+
+    #[test]
+    fn glorot_uniform_not_degenerate() {
+        let mut rng = Rng::new(1);
+        let w = glorot_uniform(&mut rng, 784, 10);
+        let mean: f32 = w.data().iter().sum::<f32>() / w.data().len() as f32;
+        assert!(mean.abs() < 0.01);
+        assert!(w.frobenius() > 0.0);
+    }
+
+    #[test]
+    fn he_normal_std() {
+        let mut rng = Rng::new(2);
+        let w = he_normal(&mut rng, 1024, 1024);
+        let n = w.data().len() as f32;
+        let var: f32 = w.data().iter().map(|v| v * v).sum::<f32>() / n;
+        let expect = 2.0 / 1024.0;
+        assert!((var / expect - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = glorot_normal(&mut Rng::new(3), 8, 4);
+        let b = glorot_normal(&mut Rng::new(3), 8, 4);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,352 @@
+//! Compute kernels for the native path.
+//!
+//! `masked_outer` is the Rust twin of the Pallas `aop_outer` kernel — the
+//! paper's approximate matrix product (eq. (4)/(5)). Two execution
+//! regimes mirror DESIGN.md §8:
+//!
+//!   * **mask regime** — iterate all M rows with a per-row scale (used for
+//!     numerics cross-checks against the HLO path);
+//!   * **compaction regime** — iterate only the selected rows
+//!     ([`masked_outer_compact`]), realizing the K/M FLOP reduction the
+//!     paper claims; numerically identical for without-replacement
+//!     policies since unselected scales are exactly 0.
+//!
+//! `matmul`/`matmul_tn` are cache-blocked with an ikj loop order so the
+//! inner loop is a contiguous f32 AXPY the compiler auto-vectorizes.
+
+use super::Matrix;
+
+/// Cache-block edge (rows of A per block / rows of B per block).
+const BLOCK: usize = 64;
+
+/// Below this many B-columns the ikj inner loop is too narrow to
+/// vectorize; switch to the transposed-dot path (§Perf pass, see
+/// EXPERIMENTS.md — 3-4× on the paper's 784×10 shapes).
+const NARROW_N: usize = 24;
+
+/// Vectorizable dot product: 8 independent accumulators so the compiler
+/// can keep the reduction in SIMD lanes despite float non-associativity.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for c in 0..chunks {
+        let ai = &a[c * 8..c * 8 + 8];
+        let bi = &b[c * 8..c * 8 + 8];
+        for l in 0..8 {
+            acc[l] += ai[l] * bi[l];
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Contiguous `y += alpha * x` (auto-vectorizes).
+#[inline]
+fn axpy_slice(y: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yv, &xv) in y.iter_mut().zip(x.iter()) {
+        *yv += alpha * xv;
+    }
+}
+
+/// `A (m×k) @ B (k×n)` — blocked ikj matmul; narrow-B shapes (the paper's
+/// 16×1 and 784×10 heads) take a transposed-dot path instead.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "matmul inner dims: {ka} vs {kb}");
+    if n <= NARROW_N && ka >= 32 {
+        // transpose B once (k·n traffic), then every output element is a
+        // contiguous k-length dot that runs at SIMD width
+        let bt = b.transpose();
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let arow = a.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..n {
+                orow[j] = dot(arow, bt.row(j));
+            }
+        }
+        return out;
+    }
+    let mut out = Matrix::zeros(m, n);
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..ka).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(ka);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                let orow = out.row_mut(i);
+                for k in k0..k1 {
+                    let aik = arow[k];
+                    let brow = b.row(k);
+                    axpy_slice(orow, aik, brow);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `A^T (k×m)^T=(m? ) ...` — computes `A^T @ B` for `A (m×n)`, `B (m×p)`
+/// without materializing `A^T`: `out[n×p] = sum_m A[m,n] B[m,p]`.
+///
+/// This is exactly the all-rows outer-product sum of eq. (3) and the
+/// baseline the AOP approximates.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, n) = a.shape();
+    let (m2, p) = b.shape();
+    assert_eq!(m, m2, "matmul_tn leading dims: {m} vs {m2}");
+    if use_transposed_aop(n, p) {
+        let mut out_t = Matrix::zeros(p, n);
+        for r in 0..m {
+            accumulate_outer_t(&mut out_t, a.row(r), b.row(r), 1.0);
+        }
+        return out_t.transpose();
+    }
+    let mut out = Matrix::zeros(n, p);
+    for r in 0..m {
+        accumulate_outer(&mut out, a.row(r), b.row(r), 1.0);
+    }
+    out
+}
+
+/// Rank-1 update `out += s * x ⊗ g` with contiguous inner loop.
+#[inline]
+fn accumulate_outer(out: &mut Matrix, x: &[f32], g: &[f32], s: f32) {
+    debug_assert_eq!(out.shape(), (x.len(), g.len()));
+    if s == 0.0 {
+        return;
+    }
+    for (n, &xv) in x.iter().enumerate() {
+        let w = s * xv;
+        if w == 0.0 {
+            continue;
+        }
+        axpy_slice(out.row_mut(n), w, g);
+    }
+}
+
+/// Transposed rank-1 update: `out_t[p, n] += (s·g[p]) * x[n]` — the inner
+/// loop runs over the long N axis contiguously, which is what makes the
+/// paper's (N=784, P=10) head shape vectorize (§Perf pass).
+#[inline]
+fn accumulate_outer_t(out_t: &mut Matrix, x: &[f32], g: &[f32], s: f32) {
+    debug_assert_eq!(out_t.shape(), (g.len(), x.len()));
+    if s == 0.0 {
+        return;
+    }
+    for (p, &gv) in g.iter().enumerate() {
+        let w = s * gv;
+        if w == 0.0 {
+            continue;
+        }
+        axpy_slice(out_t.row_mut(p), w, x);
+    }
+}
+
+/// Whether the transposed accumulation layout pays for (n, p).
+#[inline]
+fn use_transposed_aop(n: usize, p: usize) -> bool {
+    p < n && p <= NARROW_N && n >= 64
+}
+
+/// Mask-regime AOP: `out[n,p] = sum_m scale[m] * x[m,n] * g[m,p]`.
+/// Mirrors the Pallas kernel (same reduction over m; the accumulation
+/// layout is an implementation detail below f32 tolerance).
+pub fn masked_outer(x: &Matrix, g: &Matrix, scale: &[f32]) -> Matrix {
+    let (m, n) = x.shape();
+    let (m2, p) = g.shape();
+    assert_eq!(m, m2);
+    assert_eq!(scale.len(), m);
+    if use_transposed_aop(n, p) {
+        let mut out_t = Matrix::zeros(p, n);
+        for r in 0..m {
+            accumulate_outer_t(&mut out_t, x.row(r), g.row(r), scale[r]);
+        }
+        return out_t.transpose();
+    }
+    let mut out = Matrix::zeros(n, p);
+    for r in 0..m {
+        accumulate_outer(&mut out, x.row(r), g.row(r), scale[r]);
+    }
+    out
+}
+
+/// Compaction-regime AOP: only the rows in `selected` (with their scales)
+/// are touched — cost `O(K·N·P)` instead of `O(M·N·P)`, the paper's
+/// computational-reduction claim.
+pub fn masked_outer_compact(
+    x: &Matrix,
+    g: &Matrix,
+    selected: &[(usize, f32)],
+) -> Matrix {
+    let (_, n) = x.shape();
+    let (_, p) = g.shape();
+    if use_transposed_aop(n, p) {
+        let mut out_t = Matrix::zeros(p, n);
+        for &(r, s) in selected {
+            accumulate_outer_t(&mut out_t, x.row(r), g.row(r), s);
+        }
+        return out_t.transpose();
+    }
+    let mut out = Matrix::zeros(n, p);
+    for &(r, s) in selected {
+        accumulate_outer(&mut out, x.row(r), g.row(r), s);
+    }
+    out
+}
+
+/// Per-row rescale (memory update; Rust twin of the Pallas `row_scale`).
+pub fn row_scale(a: &Matrix, keep: &[f32]) -> Matrix {
+    let (m, _) = a.shape();
+    assert_eq!(keep.len(), m);
+    let mut out = a.clone();
+    for r in 0..m {
+        let k = keep[r];
+        for v in out.row_mut(r) {
+            *v *= k;
+        }
+    }
+    out
+}
+
+/// Row-norm-product policy scores (Rust twin of the Pallas `scores`):
+/// `s_m = ||x[m,:]|| * ||g[m,:]||`.
+pub fn norm_product_scores(x: &Matrix, g: &Matrix) -> Vec<f32> {
+    assert_eq!(x.rows(), g.rows());
+    x.row_norms()
+        .into_iter()
+        .zip(g.row_norms())
+        .map(|(a, b)| a * b)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    fn randm(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        Matrix::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    /// O(mnk) naive reference.
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let (_, n) = b.shape();
+        Matrix::from_fn(m, n, |i, j| (0..k).map(|x| a[(i, x)] * b[(x, j)]).sum())
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(0);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (64, 64, 64), (100, 130, 70)] {
+            let a = randm(&mut rng, m, k);
+            let b = randm(&mut rng, k, n);
+            let d = matmul(&a, &b).max_abs_diff(&naive_matmul(&a, &b));
+            assert!(d < 1e-3, "({m},{k},{n}): {d}");
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = randm(&mut rng, 17, 17);
+        let eye = Matrix::from_fn(17, 17, |r, c| (r == c) as u32 as f32);
+        assert!(matmul(&a, &eye).max_abs_diff(&a) < 1e-6);
+        assert!(matmul(&eye, &a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_tn_equals_transpose_then_matmul() {
+        let mut rng = Rng::new(2);
+        for (m, n, p) in [(144, 16, 1), (64, 784, 10), (33, 20, 11)] {
+            let x = randm(&mut rng, m, n);
+            let g = randm(&mut rng, m, p);
+            let d = matmul_tn(&x, &g).max_abs_diff(&matmul(&x.transpose(), &g));
+            assert!(d < 1e-3, "({m},{n},{p}): {d}");
+        }
+    }
+
+    #[test]
+    fn masked_outer_full_mask_is_matmul_tn() {
+        let mut rng = Rng::new(3);
+        let x = randm(&mut rng, 48, 12);
+        let g = randm(&mut rng, 48, 7);
+        let ones = vec![1.0f32; 48];
+        assert!(masked_outer(&x, &g, &ones).max_abs_diff(&matmul_tn(&x, &g)) < 1e-4);
+    }
+
+    #[test]
+    fn masked_outer_zero_mask_is_zero() {
+        let mut rng = Rng::new(4);
+        let x = randm(&mut rng, 10, 4);
+        let g = randm(&mut rng, 10, 3);
+        let out = masked_outer(&x, &g, &vec![0.0; 10]);
+        assert_eq!(out, Matrix::zeros(4, 3));
+    }
+
+    #[test]
+    fn masked_outer_complement_decomposition() {
+        // eq. (7) identity: masked(s) + masked(1-s) == full product
+        let mut rng = Rng::new(5);
+        let x = randm(&mut rng, 30, 9);
+        let g = randm(&mut rng, 30, 5);
+        let mask: Vec<f32> = (0..30).map(|i| (i % 3 == 0) as u32 as f32).collect();
+        let inv: Vec<f32> = mask.iter().map(|v| 1.0 - v).collect();
+        let sum = masked_outer(&x, &g, &mask).add(&masked_outer(&x, &g, &inv));
+        assert!(sum.max_abs_diff(&matmul_tn(&x, &g)) < 1e-4);
+    }
+
+    #[test]
+    fn compact_equals_mask_regime() {
+        let mut rng = Rng::new(6);
+        let x = randm(&mut rng, 25, 8);
+        let g = randm(&mut rng, 25, 6);
+        let mut scale = vec![0.0f32; 25];
+        let selected: Vec<(usize, f32)> = [(3, 1.0), (7, 2.5), (24, 0.5)].to_vec();
+        for &(i, s) in &selected {
+            scale[i] = s;
+        }
+        let a = masked_outer(&x, &g, &scale);
+        let b = masked_outer_compact(&x, &g, &selected);
+        assert!(a.max_abs_diff(&b) < 1e-5);
+    }
+
+    #[test]
+    fn single_row_outer_is_rank_one() {
+        let x = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let g = Matrix::from_vec(2, 2, vec![10.0, 20.0, 30.0, 40.0]);
+        let out = masked_outer_compact(&x, &g, &[(1, 1.0)]);
+        let expect = Matrix::from_vec(3, 2, vec![120.0, 160.0, 150.0, 200.0, 180.0, 240.0]);
+        assert!(out.max_abs_diff(&expect) < 1e-6);
+    }
+
+    #[test]
+    fn row_scale_semantics() {
+        let a = Matrix::from_fn(3, 2, |r, c| (r * 2 + c + 1) as f32);
+        let out = row_scale(&a, &[1.0, 0.0, 2.0]);
+        assert_eq!(out.row(0), a.row(0));
+        assert_eq!(out.row(1), &[0.0, 0.0]);
+        assert_eq!(out.row(2), &[10.0, 12.0]);
+    }
+
+    #[test]
+    fn scores_match_definition() {
+        let mut rng = Rng::new(7);
+        let x = randm(&mut rng, 12, 5);
+        let g = randm(&mut rng, 12, 3);
+        let s = norm_product_scores(&x, &g);
+        for m in 0..12 {
+            let xn: f32 = x.row(m).iter().map(|v| v * v).sum::<f32>().sqrt();
+            let gn: f32 = g.row(m).iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((s[m] - xn * gn).abs() < 1e-5);
+        }
+    }
+}

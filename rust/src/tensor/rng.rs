@@ -1,0 +1,307 @@
+//! Deterministic RNG + samplers (offline substitute for `rand`).
+//!
+//! xoshiro256++ seeded through SplitMix64, with the samplers the
+//! coordinator needs: uniforms, Box–Muller normals, shuffles, and the
+//! with/without-replacement weighted draws of the randK / weightedK
+//! selection policies (Sec. II-B of the paper).
+//!
+//! Determinism is a correctness feature here: the native and HLO training
+//! paths must make *identical* policy decisions for the cross-check tests
+//! in `rust/tests/native_vs_hlo.rs`, so every stochastic choice flows
+//! through this generator with an explicit seed.
+
+/// xoshiro256++ generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second output of the last Box–Muller draw.
+    spare_normal: Option<f32>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seeded generator; any u64 (including 0) is a valid seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng {
+            s,
+            spare_normal: None,
+        }
+    }
+
+    /// Derive an independent stream (for per-experiment / per-layer RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0xD1342543DE82EF95))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f32 {
+        // 24 high bits -> [0,1) with full float precision
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn uniform_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f32 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform_f64();
+            let u2 = self.uniform_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (sin, cos) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare_normal = Some((r * sin) as f32);
+            return (r * cos) as f32;
+        }
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        // Lemire-style rejection-free-enough for our n << 2^64
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Fisher–Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below(i + 1);
+            v.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices drawn uniformly from [0, n) (randK policy).
+    pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "k={k} > n={n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        // partial Fisher–Yates: first k entries are the sample
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// `k` distinct indices drawn ∝ `weights` without replacement via the
+    /// Gumbel-top-k trick (weightedK policy, the paper's sampling mode).
+    /// Zero-weight rows are never selected unless fewer than `k` rows have
+    /// positive weight.
+    pub fn weighted_sample_without_replacement(
+        &mut self,
+        weights: &[f32],
+        k: usize,
+    ) -> Vec<usize> {
+        let n = weights.len();
+        assert!(k <= n, "k={k} > n={n}");
+        let mut keys: Vec<(f64, usize)> = weights
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| {
+                let u = self.uniform_f64().max(1e-300);
+                let gumbel = -(-u.ln()).ln();
+                let logw = if w > 0.0 {
+                    (w as f64).ln()
+                } else {
+                    f64::NEG_INFINITY
+                };
+                (logw + gumbel, i)
+            })
+            .collect();
+        keys.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+        keys.into_iter().take(k).map(|(_, i)| i).collect()
+    }
+
+    /// `k` indices drawn ∝ `weights` WITH replacement (eq. (5) variant),
+    /// by inverse-CDF on the cumulative weights.
+    pub fn weighted_sample_with_replacement(
+        &mut self,
+        weights: &[f32],
+        k: usize,
+    ) -> Vec<usize> {
+        let total: f64 = weights.iter().map(|&w| w.max(0.0) as f64).sum();
+        assert!(total > 0.0, "all weights are zero");
+        let mut cdf = Vec::with_capacity(weights.len());
+        let mut acc = 0.0f64;
+        for &w in weights {
+            acc += w.max(0.0) as f64;
+            cdf.push(acc);
+        }
+        (0..k)
+            .map(|_| {
+                let u = self.uniform_f64() * total;
+                match cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+                    Ok(i) => i,
+                    Err(i) => i.min(weights.len() - 1),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(8);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Rng::new(1);
+        let n = 20000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 50000;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let z = r.normal() as f64;
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn sample_without_replacement_is_distinct_and_in_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..50 {
+            let idx = r.sample_without_replacement(37, 11);
+            assert_eq!(idx.len(), 11);
+            let mut sorted = idx.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 11);
+            assert!(idx.iter().all(|&i| i < 37));
+        }
+    }
+
+    #[test]
+    fn sample_without_replacement_full() {
+        let mut r = Rng::new(4);
+        let mut idx = r.sample_without_replacement(9, 9);
+        idx.sort_unstable();
+        assert_eq!(idx, (0..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_without_replacement_prefers_heavy_rows() {
+        let mut r = Rng::new(5);
+        let w = [10.0f32, 10.0, 10.0, 0.01, 0.01, 0.01, 0.01, 0.01];
+        let mut hits = [0usize; 8];
+        for _ in 0..500 {
+            for i in r.weighted_sample_without_replacement(&w, 3) {
+                hits[i] += 1;
+            }
+        }
+        let heavy: usize = hits[..3].iter().sum();
+        let light: usize = hits[3..].iter().sum();
+        assert!(heavy > 20 * light.max(1), "heavy={heavy} light={light}");
+    }
+
+    #[test]
+    fn weighted_without_replacement_distinct() {
+        let mut r = Rng::new(6);
+        let w: Vec<f32> = (1..=20).map(|i| i as f32).collect();
+        for _ in 0..50 {
+            let idx = r.weighted_sample_without_replacement(&w, 7);
+            let mut s = idx.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 7);
+        }
+    }
+
+    #[test]
+    fn weighted_with_replacement_frequency() {
+        let mut r = Rng::new(7);
+        let w = [1.0f32, 3.0];
+        let mut hits = [0usize; 2];
+        for i in r.weighted_sample_with_replacement(&w, 40000) {
+            hits[i] += 1;
+        }
+        let frac = hits[1] as f64 / 40000.0;
+        assert!((frac - 0.75).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(8);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let mut r = Rng::new(9);
+        let mut a = r.fork(1);
+        let mut b = r.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,245 @@
+//! Criterion-style micro/macro benchmark harness (offline substitute).
+//!
+//! `cargo bench` targets in `rust/benches/` are plain `main`s
+//! (`harness = false`) built on this module: warmup, adaptive iteration
+//! count, robust statistics (median / p10 / p90 / MAD), and a
+//! machine-readable JSONL sink under `results/bench/` so the figure
+//! harness and EXPERIMENTS.md can quote numbers verbatim.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::{self, Json};
+
+/// Robust summary of one benchmark's per-iteration timings.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    /// Median absolute deviation (scaled to ns).
+    pub mad_ns: f64,
+    /// Optional caller-supplied work metric (e.g. FLOPs per iteration).
+    pub work_per_iter: Option<f64>,
+}
+
+impl Stats {
+    /// Work metric per second from the median iteration time.
+    pub fn work_rate(&self) -> Option<f64> {
+        self.work_per_iter.map(|w| w / (self.median_ns * 1e-9))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", json::s(&self.name)),
+            ("iters", json::num(self.iters as f64)),
+            ("median_ns", json::num(self.median_ns)),
+            ("mean_ns", json::num(self.mean_ns)),
+            ("p10_ns", json::num(self.p10_ns)),
+            ("p90_ns", json::num(self.p90_ns)),
+            ("mad_ns", json::num(self.mad_ns)),
+        ];
+        if let Some(w) = self.work_per_iter {
+            pairs.push(("work_per_iter", json::num(w)));
+            pairs.push(("work_per_sec", json::num(self.work_rate().unwrap())));
+        }
+        json::obj(pairs)
+    }
+}
+
+/// Benchmark runner with a fixed time budget per benchmark.
+pub struct Bencher {
+    /// Target measurement time per benchmark.
+    pub measure: Duration,
+    /// Warmup time per benchmark.
+    pub warmup: Duration,
+    results: Vec<Stats>,
+    suite: String,
+}
+
+impl Bencher {
+    pub fn new(suite: &str) -> Self {
+        // Respect a quick mode for CI-ish runs: BENCH_QUICK=1
+        let quick = std::env::var("BENCH_QUICK").ok().as_deref() == Some("1");
+        Bencher {
+            measure: if quick {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_millis(1500)
+            },
+            warmup: if quick {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(300)
+            },
+            results: Vec::new(),
+            suite: suite.to_string(),
+        }
+    }
+
+    /// Time `f` repeatedly; `f` must perform one unit of work per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> Stats {
+        self.bench_with_work(name, None, f)
+    }
+
+    /// Like [`bench`] but records a work metric (e.g. FLOPs) per iteration.
+    pub fn bench_with_work<F: FnMut()>(
+        &mut self,
+        name: &str,
+        work_per_iter: Option<f64>,
+        mut f: F,
+    ) -> Stats {
+        // Warmup and calibration: figure out how many calls fit in a batch.
+        let warm_start = Instant::now();
+        let mut calls_in_warmup = 0usize;
+        while warm_start.elapsed() < self.warmup {
+            f();
+            calls_in_warmup += 1;
+        }
+        let per_call = self.warmup.as_secs_f64() / calls_in_warmup.max(1) as f64;
+        // Aim for ~50 samples; batch calls if each is very fast.
+        let batch = ((self.measure.as_secs_f64() / 50.0) / per_call.max(1e-9))
+            .max(1.0)
+            .min(1e7) as usize;
+
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let meas_start = Instant::now();
+        let mut total_calls = 0usize;
+        while meas_start.elapsed() < self.measure || samples_ns.len() < 5 {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let ns = t.elapsed().as_nanos() as f64 / batch as f64;
+            samples_ns.push(ns);
+            total_calls += batch;
+            if samples_ns.len() > 5000 {
+                break;
+            }
+        }
+        let stats = summarize(name, total_calls, &mut samples_ns, work_per_iter);
+        eprintln!(
+            "{:44} {:>12}  (p10 {} / p90 {}, {} iters)",
+            stats.name,
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.p10_ns),
+            fmt_ns(stats.p90_ns),
+            stats.iters
+        );
+        if let Some(rate) = stats.work_rate() {
+            eprintln!("{:44} {:>12.3e} work-units/s", "", rate);
+        }
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// Write all collected results as JSONL under `results/bench/`.
+    pub fn finish(self) {
+        let dir = std::path::Path::new("results/bench");
+        if std::fs::create_dir_all(dir).is_err() {
+            return;
+        }
+        let path = dir.join(format!("{}.jsonl", self.suite));
+        let mut out = String::new();
+        for r in &self.results {
+            out.push_str(&r.to_json().dump());
+            out.push('\n');
+        }
+        let _ = std::fs::write(&path, out);
+        eprintln!("[bench] wrote {} results to {}", self.results.len(), path.display());
+    }
+}
+
+fn summarize(
+    name: &str,
+    iters: usize,
+    samples: &mut [f64],
+    work_per_iter: Option<f64>,
+) -> Stats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| -> f64 {
+        let idx = (p * (samples.len() - 1) as f64).round() as usize;
+        samples[idx]
+    };
+    let median = q(0.5);
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    Stats {
+        name: name.to_string(),
+        iters,
+        median_ns: median,
+        mean_ns: mean,
+        p10_ns: q(0.1),
+        p90_ns: q(0.9),
+        mad_ns: mad,
+        work_per_iter,
+    }
+}
+
+/// Human duration formatting for ns quantities.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let mut b = Bencher::new("test");
+        b.measure = Duration::from_millis(30);
+        b.warmup = Duration::from_millis(5);
+        let mut acc = 0u64;
+        let s = b.bench("spin", || {
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+        assert!(s.iters > 0);
+        assert!(s.median_ns > 0.0);
+    }
+
+    #[test]
+    fn work_rate_computed() {
+        let s = Stats {
+            name: "x".into(),
+            iters: 10,
+            median_ns: 1e6,
+            mean_ns: 1e6,
+            p10_ns: 1e6,
+            p90_ns: 1e6,
+            mad_ns: 0.0,
+            work_per_iter: Some(2e6),
+        };
+        let r = s.work_rate().unwrap();
+        assert!((r - 2e9).abs() / 2e9 < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e3).contains("µs"));
+        assert!(fmt_ns(5e6).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,302 @@
+//! Tiny declarative CLI argument parser (offline substitute for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, and generates `--help` text. Only what the `repro`
+//! binary and the examples need — but with real validation and error
+//! messages, not ad-hoc `args().nth()` poking.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Declaration of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None ⇒ boolean flag; Some(default) ⇒ takes a value.
+    pub default: Option<String>,
+    pub required: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    /// Leftover positional arguments.
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError(format!("missing --{name}")))?;
+        raw.parse()
+            .map_err(|e| CliError(format!("--{name}={raw}: {e}")))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// One subcommand with its option table.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    /// `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            required: false,
+        });
+        self
+    }
+
+    /// Required `--name <value>`.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(String::new()),
+            required: true,
+        });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            required: false,
+        });
+        self
+    }
+
+    fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let left = match &o.default {
+                None => format!("  --{}", o.name),
+                Some(d) if o.required => format!("  --{} <v> (required)", o.name),
+                Some(d) if d.is_empty() => format!("  --{} <v>", o.name),
+                Some(d) => format!("  --{} <v> [{}]", o.name, d),
+            };
+            out.push_str(&format!("{left:40} {}\n", o.help));
+        }
+        out
+    }
+
+    /// Parse a raw argv slice against this command's option table.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        // seed defaults
+        for o in &self.opts {
+            match &o.default {
+                Some(d) if !o.required && !d.is_empty() => {
+                    args.values.insert(o.name.to_string(), d.clone());
+                }
+                None => {
+                    args.flags.insert(o.name.to_string(), false);
+                }
+                _ => {}
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError(self.usage()));
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key}\n\n{}", self.usage())))?;
+                match &spec.default {
+                    None => {
+                        if inline_val.is_some() {
+                            return Err(CliError(format!("--{key} is a flag, takes no value")));
+                        }
+                        args.flags.insert(key.to_string(), true);
+                    }
+                    Some(_) => {
+                        let v = match inline_val {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| CliError(format!("--{key} needs a value")))?
+                            }
+                        };
+                        args.values.insert(key.to_string(), v);
+                    }
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if o.required && !args.values.contains_key(o.name) {
+                return Err(CliError(format!("missing required --{}\n\n{}", o.name, self.usage())));
+            }
+        }
+        Ok(args)
+    }
+}
+
+/// Top-level multi-command app.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\ncommands:\n", self.name, self.about);
+        for c in &self.commands {
+            out.push_str(&format!("  {:20} {}\n", c.name, c.about));
+        }
+        out.push_str("\nrun `<command> --help` for per-command options\n");
+        out
+    }
+
+    /// Dispatch: returns (command name, parsed args).
+    pub fn parse(&self, argv: &[String]) -> Result<(&Command, Args), CliError> {
+        let first = argv.first().ok_or_else(|| CliError(self.usage()))?;
+        if first == "--help" || first == "-h" || first == "help" {
+            return Err(CliError(self.usage()));
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == first)
+            .ok_or_else(|| CliError(format!("unknown command '{first}'\n\n{}", self.usage())))?;
+        let args = cmd.parse(&argv[1..])?;
+        Ok((cmd, args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("train", "train a model")
+            .opt("epochs", "100", "number of epochs")
+            .opt("policy", "topk", "selection policy")
+            .req("task", "task name")
+            .flag("no-memory", "disable error feedback")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&argv(&["--task", "energy"])).unwrap();
+        assert_eq!(a.get("epochs"), Some("100"));
+        assert_eq!(a.get_parse::<usize>("epochs").unwrap(), 100);
+        assert!(!a.flag("no-memory"));
+    }
+
+    #[test]
+    fn equals_and_space_forms() {
+        let a = cmd()
+            .parse(&argv(&["--task=mnist", "--epochs", "7", "--no-memory"]))
+            .unwrap();
+        assert_eq!(a.get("task"), Some("mnist"));
+        assert_eq!(a.get("epochs"), Some("7"));
+        assert!(a.flag("no-memory"));
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(cmd().parse(&argv(&["--epochs", "3"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse(&argv(&["--task", "x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cmd().parse(&argv(&["--task", "x", "--no-memory=1"])).is_err());
+    }
+
+    #[test]
+    fn value_missing_rejected() {
+        assert!(cmd().parse(&argv(&["--task"])).is_err());
+    }
+
+    #[test]
+    fn bad_parse_type() {
+        let a = cmd().parse(&argv(&["--task", "x", "--epochs", "abc"])).unwrap();
+        assert!(a.get_parse::<usize>("epochs").is_err());
+    }
+
+    #[test]
+    fn app_dispatch() {
+        let app = App {
+            name: "repro",
+            about: "Mem-AOP-GD reproduction",
+            commands: vec![cmd(), Command::new("table", "print Tab. I")],
+        };
+        let (c, a) = app.parse(&argv(&["train", "--task", "energy"])).unwrap();
+        assert_eq!(c.name, "train");
+        assert_eq!(a.get("task"), Some("energy"));
+        assert!(app.parse(&argv(&["bogus"])).is_err());
+        assert!(app.parse(&argv(&["help"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cmd().parse(&argv(&["--task", "x", "pos1", "pos2"])).unwrap();
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+}

@@ -1,0 +1,8 @@
+//! In-tree substrates replacing crates unavailable in the offline build
+//! environment (see the note in `Cargo.toml`).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;

@@ -1,0 +1,125 @@
+//! Scoped worker pool for parallel experiment sweeps (offline substitute
+//! for tokio/rayon on the coordinator's *control* plane).
+//!
+//! The figure harness runs dozens of independent training runs (7 series ×
+//! 3 compression levels × seeds); [`run_parallel`] fans them out over
+//! `std::thread::scope` with a bounded worker count and returns results in
+//! input order. Work items must be `Send`; panics in a worker are
+//! propagated to the caller.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers: `REPRO_THREADS` env override, else available
+/// parallelism, else 4.
+pub fn default_workers() -> usize {
+    std::env::var("REPRO_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        })
+}
+
+/// Apply `f` to every item of `items` on up to `workers` threads,
+/// preserving input order in the returned vector.
+pub fn run_parallel<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return items.iter().map(|it| f(it)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let next = &next;
+            let slots = &slots;
+            let items = &items;
+            let f = &f;
+            handles.push(scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            }));
+        }
+        for h in handles {
+            // propagate worker panics
+            h.join().expect("worker thread panicked");
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("missing result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..97).collect();
+        let out = run_parallel(items.clone(), 8, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let out = run_parallel(vec![1, 2, 3], 1, |&x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<i32> = run_parallel(Vec::<i32>::new(), 4, |&x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let out = run_parallel(vec![10], 16, |&x| x - 1);
+        assert_eq!(out, vec![9]);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker thread panicked")]
+    fn worker_panic_propagates() {
+        run_parallel(vec![0usize, 1], 2, |&x| {
+            if x == 1 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn heavy_fanout_consistent() {
+        let items: Vec<u64> = (0..500).collect();
+        let out = run_parallel(items, 13, |&x| {
+            // small unequal work per item
+            (0..(x % 7 + 1)).sum::<u64>() + x
+        });
+        for (i, v) in out.iter().enumerate() {
+            let x = i as u64;
+            assert_eq!(*v, (0..(x % 7 + 1)).sum::<u64>() + x);
+        }
+    }
+}

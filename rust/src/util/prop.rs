@@ -1,0 +1,151 @@
+//! Property-testing mini-framework (offline substitute for `proptest`).
+//!
+//! A property is a closure over a [`Gen`] (seeded RNG-backed value source);
+//! the runner executes it across many random cases and, on failure,
+//! re-runs with the failing seed reported so the case is reproducible:
+//!
+//! ```no_run
+//! use mem_aop_gd::util::prop::{property, Gen};
+//! property("abs is non-negative", 200, |g: &mut Gen| {
+//!     let x = g.f32_range(-10.0, 10.0);
+//!     assert!(x.abs() >= 0.0);
+//! });
+//! ```
+//!
+//! Coordinator invariants (routing, batching, selection, memory state) are
+//! verified through this runner in `rust/tests/props.rs` and in per-module
+//! `#[cfg(test)]` blocks.
+
+use crate::tensor::rng::Rng;
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Seed of the current case (for failure reports).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            case_seed: seed,
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + (self.rng.next_u64() % (hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.uniform()
+    }
+
+    pub fn f32_normal(&mut self) -> f32 {
+        self.rng.normal()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of standard normals.
+    pub fn vec_normal(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    /// Vector of uniforms in [lo, hi).
+    pub fn vec_uniform(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_range(lo, hi)).collect()
+    }
+
+    /// A 0/1 mask with each entry independently 1 w.p. `p`.
+    pub fn mask(&mut self, n: usize, p: f32) -> Vec<f32> {
+        (0..n)
+            .map(|_| if self.rng.uniform() < p { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    /// Borrow the underlying RNG (for passing to library APIs under test).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `body`. Panics (with the case seed) on the
+/// first failing case. The base seed is fixed for reproducibility but can
+/// be overridden with the `PROP_SEED` env var.
+pub fn property<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut body: F) {
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x9E3779B97F4A7C15u64);
+    for i in 0..cases {
+        let seed = base.wrapping_add((i as u64).wrapping_mul(0xA24BAED4963EE407));
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {i} (seed {seed:#x}):\n{msg}\n\
+                 reproduce with PROP_SEED={base} and case index {i}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        property("sum symmetric", 100, |g| {
+            let a = g.f32_range(-5.0, 5.0);
+            let b = g.f32_range(-5.0, 5.0);
+            assert!((a + b - (b + a)).abs() < 1e-6);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failing_case() {
+        property("always fails", 10, |g| {
+            let x = g.f32_range(0.0, 1.0);
+            assert!(x < 0.0, "x={x}");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        property("ranges", 200, |g| {
+            let n = g.usize_range(1, 64);
+            assert!((1..=64).contains(&n));
+            let f = g.f32_range(2.0, 3.0);
+            assert!((2.0..3.0001).contains(&f));
+            let m = g.mask(n, 0.5);
+            assert!(m.iter().all(|&v| v == 0.0 || v == 1.0));
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        property("record", 5, |g| first.push(g.u64()));
+        let mut second: Vec<u64> = Vec::new();
+        property("record", 5, |g| second.push(g.u64()));
+        assert_eq!(first, second);
+    }
+}

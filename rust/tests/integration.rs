@@ -1,0 +1,329 @@
+//! Cross-module integration tests: runtime ⇄ coordinator ⇄ data ⇄ aop,
+//! including failure injection on the runtime boundary and short
+//! end-to-end trainings with quality thresholds.
+//!
+//! Artifact-dependent cases skip with a note when `make artifacts` has
+//! not been run.
+
+use mem_aop_gd::aop::Policy;
+use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig};
+use mem_aop_gd::coordinator::experiment;
+use mem_aop_gd::coordinator::mlp_driver::{train_mlp, MlpDriver, MlpVariant};
+use mem_aop_gd::data::digits;
+use mem_aop_gd::runtime::{Manifest, Runtime, Value};
+use mem_aop_gd::tensor::Matrix;
+
+fn runtime() -> Option<Runtime> {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    Some(Runtime::from_default_artifacts().expect("runtime"))
+}
+
+// ---------------------------------------------------------------------
+// runtime boundary
+// ---------------------------------------------------------------------
+
+#[test]
+fn artifact_shape_validation_rejects_bad_inputs() {
+    let Some(rt) = runtime() else { return };
+    let eval = rt.load("energy_eval").unwrap();
+    // wrong rank
+    let bad = eval.run(&[
+        Value::Scalar(1.0),
+        Value::Scalar(1.0),
+        Value::Scalar(1.0),
+        Value::Scalar(1.0),
+    ]);
+    assert!(bad.is_err());
+    // wrong arity
+    let bad2 = eval.run(&[Value::Scalar(1.0)]);
+    assert!(bad2.is_err());
+    let msg = format!("{:#}", bad2.unwrap_err());
+    assert!(msg.contains("expected 4"), "{msg}");
+}
+
+#[test]
+fn eval_artifact_matches_native_loss() {
+    let Some(rt) = runtime() else { return };
+    use mem_aop_gd::model::LossKind;
+    use mem_aop_gd::tensor::rng::Rng;
+    let eval = rt.load("energy_eval").unwrap();
+    let mut rng = Rng::new(1);
+    let x = Matrix::from_fn(192, 16, |_, _| rng.normal());
+    let y = Matrix::from_fn(192, 1, |_, _| rng.normal());
+    let w = Matrix::from_fn(16, 1, |_, _| 0.1 * rng.normal());
+    let b = vec![0.05f32];
+    let out = eval
+        .run(&[
+            Value::Matrix(x.clone()),
+            Value::Matrix(y.clone()),
+            Value::Matrix(w.clone()),
+            Value::Vector(b.clone()),
+        ])
+        .unwrap();
+    let hlo_loss = out[0].as_scalar().unwrap();
+    let o = x.matmul(&w).add_row_broadcast(&b);
+    let native_loss = LossKind::Mse.loss(&o, &y);
+    assert!(
+        (hlo_loss - native_loss).abs() / native_loss < 1e-4,
+        "hlo {hlo_loss} vs native {native_loss}"
+    );
+}
+
+#[test]
+fn exec_stats_accumulate() {
+    let Some(rt) = runtime() else { return };
+    let eval = rt.load("energy_eval").unwrap();
+    let before = eval.stats().calls;
+    let x = Matrix::zeros(192, 16);
+    let y = Matrix::zeros(192, 1);
+    let w = Matrix::zeros(16, 1);
+    for _ in 0..3 {
+        eval.run(&[
+            Value::Matrix(x.clone()),
+            Value::Matrix(y.clone()),
+            Value::Matrix(w.clone()),
+            Value::Vector(vec![0.0]),
+        ])
+        .unwrap();
+    }
+    let st = eval.stats();
+    assert_eq!(st.calls, before + 3);
+    assert!(st.mean_us() > 0.0);
+    // the runtime cache must return the same executable
+    let again = rt.load("energy_eval").unwrap();
+    assert_eq!(again.stats().calls, st.calls);
+}
+
+#[test]
+fn manifest_contract_complete() {
+    let Some(rt) = runtime() else { return };
+    let m = &rt.manifest;
+    m.check_files().unwrap();
+    for task in ["energy", "mnist"] {
+        for phase in ["fwd_score", "apply", "eval"] {
+            assert!(
+                m.artifacts.contains_key(&format!("{task}_{phase}")),
+                "{task}_{phase} missing"
+            );
+        }
+    }
+    for v in ["mlp_exact", "mlp_topk_mem", "mlp_topk_nomem", "mlp_randk_mem", "mlp_weightedk_mem", "mlp_eval"] {
+        assert!(m.artifacts.contains_key(v), "{v} missing");
+    }
+    // two-phase contract: apply's first two inputs match fwd_score's
+    // xhat/ghat outputs
+    let fs = m.artifact("mnist_fwd_score").unwrap();
+    let ap = m.artifact("mnist_apply").unwrap();
+    assert_eq!(fs.outputs[1].shape, ap.inputs[0].shape); // xhat
+    assert_eq!(fs.outputs[2].shape, ap.inputs[1].shape); // ghat
+    assert_eq!(fs.outputs[4].shape, vec![64]); // scores = M
+}
+
+#[test]
+fn corrupt_artifact_fails_cleanly() {
+    let Some(_rt) = runtime() else { return };
+    // copy artifacts to a temp dir, corrupt one HLO file, expect a clean
+    // parse error (not a crash) on load
+    let src = Manifest::default_dir();
+    let dst = std::env::temp_dir().join(format!("memaop_corrupt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dst);
+    std::fs::create_dir_all(&dst).unwrap();
+    for entry in std::fs::read_dir(&src).unwrap() {
+        let e = entry.unwrap();
+        std::fs::copy(e.path(), dst.join(e.file_name())).unwrap();
+    }
+    std::fs::write(dst.join("energy_eval.hlo.txt"), "ENTRY garbage {").unwrap();
+    let rt = Runtime::new(&dst).unwrap();
+    let err = match rt.load("energy_eval") {
+        Err(e) => e,
+        Ok(_) => panic!("corrupt artifact loaded"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("energy_eval"), "{msg}");
+    // other artifacts still load fine
+    rt.load("energy_fwd_score").unwrap();
+    let _ = std::fs::remove_dir_all(&dst);
+}
+
+#[test]
+fn missing_manifest_is_reported() {
+    let dst = std::env::temp_dir().join(format!("memaop_nomanifest_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dst);
+    std::fs::create_dir_all(&dst).unwrap();
+    let err = match Runtime::new(&dst) {
+        Err(e) => e,
+        Ok(_) => panic!("runtime built without manifest"),
+    };
+    assert!(format!("{err:#}").contains("make artifacts"));
+    let _ = std::fs::remove_dir_all(&dst);
+}
+
+#[test]
+fn lr_schedule_changes_hlo_training_without_recompile() {
+    let Some(rt) = runtime() else { return };
+    use mem_aop_gd::coordinator::config::LrSchedule;
+    let mut cfg = ExperimentConfig::energy_preset();
+    cfg.policy = Policy::TopK;
+    cfg.k = 18;
+    cfg.memory = true;
+    cfg.epochs = 6;
+    let constant = experiment::run_hlo(&cfg, &rt).unwrap();
+    cfg.schedule = LrSchedule::Cosine { min_frac: 0.01 };
+    let cosine = experiment::run_hlo(&cfg, &rt).unwrap();
+    // same artifacts, different dynamics
+    assert_ne!(
+        constant.final_val_loss(),
+        cosine.final_val_loss()
+    );
+}
+
+#[test]
+fn fused_step_matches_two_phase_topk() {
+    // The single-dispatch deployment artifact must produce exactly the
+    // two-phase path's update for the deterministic topK policy.
+    let Some(rt) = runtime() else { return };
+    use mem_aop_gd::aop::policy;
+    use mem_aop_gd::coordinator::hlo_trainer::HloTrainer;
+    use mem_aop_gd::coordinator::experiment::Trainer;
+    use mem_aop_gd::runtime::ArgRef;
+    use mem_aop_gd::tensor::rng::Rng;
+
+    let mut cfg = ExperimentConfig::mnist_preset();
+    cfg.policy = Policy::TopK;
+    cfg.k = 32;
+    cfg.memory = true;
+    let mut two_phase = HloTrainer::new(&cfg, &rt).unwrap();
+
+    let mut rng = Rng::new(77);
+    let x = Matrix::from_fn(64, 784, |_, _| rng.normal().abs() * 0.5);
+    let y = Matrix::from_fn(64, 10, |r, c| ((r % 10) == c) as u32 as f32);
+    let w0 = two_phase.w.clone();
+    let b0 = two_phase.b.clone();
+
+    // two-phase step
+    let (_, scores, _) = two_phase.fwd_score(&x, &y).unwrap();
+    let sel = policy::select(Policy::TopK, &scores, 32, true, &mut rng);
+    two_phase.apply(&sel).unwrap();
+
+    // fused step (same initial state)
+    let fused = rt.load("mnist_fused_topk_mem").unwrap();
+    let noise = vec![0.5f32; 64];
+    let out = fused
+        .run_ref(&[
+            ArgRef::from(&x),
+            ArgRef::from(&y),
+            ArgRef::from(&w0),
+            ArgRef::from(&b0),
+            ArgRef::Matrix(&Matrix::zeros(64, 784)),
+            ArgRef::Matrix(&Matrix::zeros(64, 10)),
+            ArgRef::from(&noise),
+            ArgRef::Scalar(cfg.lr),
+        ])
+        .unwrap();
+    let w_fused = out[1].clone().into_matrix().unwrap();
+    let d = w_fused.max_abs_diff(&two_phase.w);
+    assert!(d < 1e-5, "fused vs two-phase |Δw|∞ = {d}");
+}
+
+// ---------------------------------------------------------------------
+// end-to-end trainings with thresholds
+// ---------------------------------------------------------------------
+
+#[test]
+fn hlo_energy_full_paper_run_reaches_threshold() {
+    let Some(rt) = runtime() else { return };
+    // Tab. I configuration, topK K=18 with memory — paper's Fig. 2 top
+    let mut cfg = ExperimentConfig::energy_preset();
+    cfg.policy = Policy::TopK;
+    cfg.k = 18;
+    cfg.memory = true;
+    let r = experiment::run_hlo(&cfg, &rt).unwrap();
+    // standardized-target MSE: a fitted linear model lands well under 0.3
+    assert!(
+        r.final_val_loss() < 0.3,
+        "val loss {} too high",
+        r.final_val_loss()
+    );
+}
+
+#[test]
+fn native_energy_panel_paper_shape_at_high_k() {
+    // Fig. 2 top panel claim: with-memory Mem-AOP-GD ≈ or beats baseline.
+    let mut base = ExperimentConfig::energy_preset();
+    base.backend = Backend::Native;
+    let configs = mem_aop_gd::coordinator::sweep::panel_configs(&base, 18);
+    let results = mem_aop_gd::coordinator::sweep::run_sweep(&configs, 7);
+    let mut baseline = f32::NAN;
+    let mut best_mem = f32::INFINITY;
+    for r in results {
+        let r = r.unwrap();
+        let t = r.curve.tail_mean_val_loss(5);
+        if r.config.label() == "baseline" {
+            baseline = t;
+        } else if r.config.memory {
+            best_mem = best_mem.min(t);
+        }
+    }
+    assert!(
+        best_mem < baseline * 1.5,
+        "with-memory series ({best_mem}) far above baseline ({baseline})"
+    );
+}
+
+#[test]
+fn mlp_e2e_short_training_learns() {
+    let Some(rt) = runtime() else { return };
+    let train = digits::digits_dataset(1280, 11);
+    let val = digits::digits_dataset(256, 12);
+    let (_driver, curve) =
+        train_mlp(&rt, MlpVariant::TopKMem, &train, &val, 60, 0.05, 20, 11).unwrap();
+    let acc = curve.final_val_acc();
+    assert!(acc > 0.5, "e2e MLP acc {acc} after 60 steps");
+    // memory variant must actually defer mass
+    assert!(curve.epochs.last().unwrap().mem_fro > 0.0);
+}
+
+#[test]
+fn mlp_nomem_variant_keeps_memory_zero() {
+    let Some(rt) = runtime() else { return };
+    let train = digits::digits_dataset(256, 13);
+    let mut driver = MlpDriver::new(&rt, MlpVariant::TopKNoMem, 5).unwrap();
+    let idx: Vec<usize> = (0..driver.batch).collect();
+    let b = train.gather(&idx);
+    for _ in 0..3 {
+        driver.step(&b.x, &b.y, 0.05).unwrap();
+    }
+    assert_eq!(driver.mem_fro(), 0.0);
+}
+
+#[test]
+fn mlp_exact_beats_chance_quickly() {
+    let Some(rt) = runtime() else { return };
+    let train = digits::digits_dataset(1280, 14);
+    let val = digits::digits_dataset(256, 15);
+    let (_d, curve) =
+        train_mlp(&rt, MlpVariant::Exact, &train, &val, 40, 0.05, 40, 14).unwrap();
+    assert!(curve.final_val_acc() > 0.5);
+}
+
+// ---------------------------------------------------------------------
+// backend equivalence at the single-step level (no policy noise)
+// ---------------------------------------------------------------------
+
+#[test]
+fn single_step_exact_native_vs_hlo_weights_match() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = ExperimentConfig::energy_preset();
+    cfg.epochs = 1;
+    cfg.backend = Backend::Native;
+    let n = experiment::run(&cfg).unwrap();
+    let h = experiment::run_hlo(&cfg, &rt).unwrap();
+    let d = n.final_w.max_abs_diff(&h.final_w);
+    assert!(d < 1e-4, "after 1 epoch, |Δw|∞ = {d}");
+    for (a, b) in n.final_b.iter().zip(h.final_b.iter()) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,125 @@
+//! Cross-check: the native Rust path and the AOT/PJRT path are the same
+//! algorithm.
+//!
+//! Both backends share seeds for weight init, data generation, epoch
+//! shuffling and policy draws (owned by `experiment::run_with_trainer`),
+//! so for any configuration their curves and final weights must agree to
+//! float32 accumulation tolerance. This is the strongest correctness
+//! statement in the repo: it ties the Pallas kernels (inside the HLO) to
+//! the hand-written Rust math over full multi-epoch trainings.
+//!
+//! Requires `make artifacts`; the suite is skipped (with a note) if the
+//! artifacts directory is missing.
+
+use mem_aop_gd::aop::Policy;
+use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig};
+use mem_aop_gd::coordinator::experiment::{self, RunResult};
+use mem_aop_gd::runtime::{Manifest, Runtime};
+
+fn artifacts_available() -> bool {
+    Manifest::default_dir().join("manifest.json").exists()
+}
+
+fn run_both(mut cfg: ExperimentConfig) -> Option<(RunResult, RunResult)> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    cfg.backend = Backend::Native;
+    let native = experiment::run(&cfg).expect("native run");
+    cfg.backend = Backend::Hlo;
+    let rt = Runtime::from_default_artifacts().expect("runtime");
+    let hlo = experiment::run_hlo(&cfg, &rt).expect("hlo run");
+    Some((native, hlo))
+}
+
+fn assert_close_curves(a: &RunResult, b: &RunResult, tol: f32) {
+    assert_eq!(a.curve.epochs.len(), b.curve.epochs.len());
+    for (ma, mb) in a.curve.epochs.iter().zip(b.curve.epochs.iter()) {
+        let d = (ma.val_loss - mb.val_loss).abs();
+        let rel = d / ma.val_loss.abs().max(1e-6);
+        assert!(
+            rel < tol || d < tol,
+            "epoch {}: native {} vs hlo {} (rel {rel})",
+            ma.epoch,
+            ma.val_loss,
+            mb.val_loss
+        );
+    }
+    let wd = a.final_w.max_abs_diff(&b.final_w);
+    let scale = a.final_w.frobenius().max(1e-6);
+    assert!(wd / scale < tol, "weight divergence {wd} (scale {scale})");
+}
+
+#[test]
+fn energy_exact_baseline_agrees() {
+    let mut cfg = ExperimentConfig::energy_preset();
+    cfg.epochs = 15;
+    if let Some((n, h)) = run_both(cfg) {
+        assert_close_curves(&n, &h, 2e-3);
+    }
+}
+
+#[test]
+fn energy_topk_with_memory_agrees() {
+    let mut cfg = ExperimentConfig::energy_preset();
+    cfg.policy = Policy::TopK;
+    cfg.k = 18;
+    cfg.memory = true;
+    cfg.epochs = 15;
+    if let Some((n, h)) = run_both(cfg) {
+        assert_close_curves(&n, &h, 2e-3);
+    }
+}
+
+#[test]
+fn energy_randk_no_memory_agrees() {
+    let mut cfg = ExperimentConfig::energy_preset();
+    cfg.policy = Policy::RandK;
+    cfg.k = 9;
+    cfg.memory = false;
+    cfg.epochs = 10;
+    if let Some((n, h)) = run_both(cfg) {
+        assert_close_curves(&n, &h, 2e-3);
+    }
+}
+
+#[test]
+fn energy_weightedk_agrees() {
+    let mut cfg = ExperimentConfig::energy_preset();
+    cfg.policy = Policy::WeightedK;
+    cfg.k = 9;
+    cfg.memory = true;
+    cfg.epochs = 10;
+    cfg.seed = 3;
+    if let Some((n, h)) = run_both(cfg) {
+        assert_close_curves(&n, &h, 2e-3);
+    }
+}
+
+#[test]
+fn mnist_topk_agrees_scaled() {
+    let mut cfg = ExperimentConfig::mnist_preset();
+    cfg.policy = Policy::TopK;
+    cfg.k = 16;
+    cfg.memory = true;
+    cfg.epochs = 2;
+    cfg.data_scale = 0.02;
+    if let Some((n, h)) = run_both(cfg) {
+        // larger model, more accumulation divergence allowed
+        assert_close_curves(&n, &h, 5e-3);
+    }
+}
+
+#[test]
+fn mnist_weightedk_replacement_agrees_scaled() {
+    let mut cfg = ExperimentConfig::mnist_preset();
+    cfg.policy = Policy::WeightedKReplacement;
+    cfg.k = 16;
+    cfg.memory = true;
+    cfg.epochs = 2;
+    cfg.data_scale = 0.02;
+    if let Some((n, h)) = run_both(cfg) {
+        assert_close_curves(&n, &h, 5e-3);
+    }
+}

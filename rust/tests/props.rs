@@ -1,0 +1,266 @@
+//! Property-based invariants over the coordinator and the algorithm,
+//! run through the in-tree `util::prop` framework (offline substitute
+//! for proptest — seeded cases, reproducible failures).
+
+use mem_aop_gd::aop::policy::{self, Policy};
+use mem_aop_gd::aop::{flops, MemoryState};
+use mem_aop_gd::data::batcher::Batcher;
+use mem_aop_gd::data::Dataset;
+use mem_aop_gd::tensor::{ops, Matrix};
+use mem_aop_gd::util::json;
+use mem_aop_gd::util::prop::{property, Gen};
+
+fn randm(g: &mut Gen, r: usize, c: usize) -> Matrix {
+    Matrix::from_vec(r, c, g.vec_normal(r * c))
+}
+
+// ---------------------------------------------------------------------
+// AOP / eq. (4)-(7) invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_masked_outer_decomposition() {
+    // masked(s) + masked(1-s) == full X^T G for any mask and any shapes
+    property("mask decomposition", 60, |g| {
+        let m = g.usize_range(1, 48);
+        let n = g.usize_range(1, 32);
+        let p = g.usize_range(1, 8);
+        let x = randm(g, m, n);
+        let gm = randm(g, m, p);
+        let mask = g.mask(m, 0.5);
+        let inv: Vec<f32> = mask.iter().map(|v| 1.0 - v).collect();
+        let sum = ops::masked_outer(&x, &gm, &mask).add(&ops::masked_outer(&x, &gm, &inv));
+        let full = ops::matmul_tn(&x, &gm);
+        let tol = 1e-3 * (1.0 + full.frobenius());
+        assert!(sum.max_abs_diff(&full) < tol);
+    });
+}
+
+#[test]
+fn prop_compact_equals_mask_regime() {
+    property("compact == mask", 60, |g| {
+        let m = g.usize_range(1, 40);
+        let n = g.usize_range(1, 24);
+        let p = g.usize_range(1, 6);
+        let x = randm(g, m, n);
+        let gm = randm(g, m, p);
+        let mask = g.mask(m, 0.3);
+        let pairs: Vec<(usize, f32)> = mask
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s != 0.0)
+            .map(|(i, &s)| (i, s))
+            .collect();
+        let a = ops::masked_outer(&x, &gm, &mask);
+        let b = ops::masked_outer_compact(&x, &gm, &pairs);
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    });
+}
+
+#[test]
+fn prop_selection_partition_invariant() {
+    // For every policy with memory: sel_scale and keep partition the rows;
+    // k_effective == k for without-replacement policies.
+    property("selection partition", 80, |g| {
+        let m = g.usize_range(2, 64);
+        let k = g.usize_range(1, m);
+        let scores = g.vec_uniform(m, 0.01, 10.0);
+        for pol in [Policy::TopK, Policy::RandK, Policy::WeightedK] {
+            let sel = policy::select(pol, &scores, k, true, g.rng());
+            assert_eq!(sel.k_effective(), k, "{pol:?}");
+            for i in 0..m {
+                let s = sel.sel_scale[i] != 0.0;
+                let kp = sel.keep[i] != 0.0;
+                assert!(s ^ kp, "{pol:?} row {i}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_topk_takes_largest() {
+    property("topk order", 100, |g| {
+        let m = g.usize_range(2, 100);
+        let k = g.usize_range(1, m);
+        let scores = g.vec_uniform(m, 0.0, 1.0);
+        let idx = policy::top_k_indices(&scores, k);
+        let min_sel = idx.iter().map(|&i| scores[i]).fold(f32::INFINITY, f32::min);
+        let max_unsel = (0..m)
+            .filter(|i| !idx.contains(i))
+            .map(|i| scores[i])
+            .fold(f32::NEG_INFINITY, f32::max);
+        assert!(min_sel >= max_unsel - 1e-6, "{min_sel} < {max_unsel}");
+    });
+}
+
+#[test]
+fn prop_memory_rows_are_exact_copies_or_zero() {
+    property("memory partition", 60, |g| {
+        let m = g.usize_range(1, 32);
+        let n = g.usize_range(1, 16);
+        let p = g.usize_range(1, 4);
+        let mut ms = MemoryState::new(m, n, p, true);
+        let xhat = randm(g, m, n);
+        let ghat = randm(g, m, p);
+        let keep = g.mask(m, 0.5);
+        ms.update(&xhat, &ghat, &keep);
+        for r in 0..m {
+            if keep[r] == 1.0 {
+                assert_eq!(ms.mem_x.row(r), xhat.row(r));
+                assert_eq!(ms.mem_g.row(r), ghat.row(r));
+            } else {
+                assert!(ms.mem_x.row(r).iter().all(|&v| v == 0.0));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fold_is_affine_in_memory() {
+    // fold(m, x, eta) == fold(0, x, eta) + m
+    property("fold affine", 50, |g| {
+        let m = g.usize_range(1, 24);
+        let n = g.usize_range(1, 12);
+        let eta = g.f32_range(0.001, 1.0);
+        let x = randm(g, m, n);
+        let gm = randm(g, m, 2);
+        let mut with = MemoryState::new(m, n, 2, true);
+        with.mem_x = randm(g, m, n);
+        with.mem_g = randm(g, m, 2);
+        let zero = MemoryState::new(m, n, 2, true);
+        let (xa, ga) = with.fold(&x, &gm, eta);
+        let (xb, gb) = zero.fold(&x, &gm, eta);
+        assert!(xa.max_abs_diff(&xb.add(&with.mem_x)) < 1e-5);
+        assert!(ga.max_abs_diff(&gb.add(&with.mem_g)) < 1e-5);
+    });
+}
+
+#[test]
+fn prop_flops_model_consistent() {
+    property("flops ratios", 100, |g| {
+        let m = g.usize_range(1, 512);
+        let n = g.usize_range(1, 512);
+        let p = g.usize_range(1, 64);
+        let k = g.usize_range(1, m);
+        let r = flops::backward_reduction(m, n, p, k);
+        assert!((r - k as f64 / m as f64).abs() < 1e-12);
+        assert!(flops::aop_step(m, n, p, k).total() >= flops::aop_step(m, n, p, 1).total());
+    });
+}
+
+// ---------------------------------------------------------------------
+// coordinator invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_partitions_every_epoch() {
+    property("batcher partition", 50, |g| {
+        let n = g.usize_range(4, 300);
+        let bs = g.usize_range(1, n);
+        let mut b = Batcher::new(n, bs);
+        let mut rng = g.rng().fork(1);
+        for _ in 0..3 {
+            let batches = b.epoch(&mut rng);
+            let mut seen: Vec<usize> = batches.into_iter().flatten().collect();
+            assert_eq!(seen.len(), (n / bs) * bs);
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), (n / bs) * bs, "duplicate index in epoch");
+        }
+    });
+}
+
+#[test]
+fn prop_dataset_gather_split_consistent() {
+    property("dataset ops", 40, |g| {
+        let n = g.usize_range(2, 60);
+        let c = g.usize_range(1, 8);
+        let ds = Dataset::new(randm(g, n, c), randm(g, n, 1));
+        let cut = g.usize_range(1, n - 1);
+        let (a, b) = ds.split_at(cut);
+        assert_eq!(a.len() + b.len(), n);
+        // gather with identity permutation reproduces the dataset
+        let idx: Vec<usize> = (0..n).collect();
+        let gathered = ds.gather(&idx);
+        assert_eq!(gathered.x, ds.x);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_flat_objects() {
+    property("json roundtrip", 80, |g| {
+        let n = g.usize_range(0, 12);
+        let mut pairs = Vec::new();
+        for i in 0..n {
+            let v = match g.usize_range(0, 3) {
+                0 => json::Json::Num(g.f32_range(-1e6, 1e6) as f64),
+                1 => json::Json::Bool(g.bool()),
+                2 => json::Json::Str(format!("s{}_\"q\"\n", g.u64())),
+                _ => json::Json::Null,
+            };
+            pairs.push((format!("k{i}"), v));
+        }
+        let obj = json::Json::Obj(pairs);
+        let parsed = json::parse(&obj.dump()).unwrap();
+        // numbers survive with f64 round-trip precision
+        match (&obj, &parsed) {
+            (json::Json::Obj(a), json::Json::Obj(b)) => {
+                assert_eq!(a.len(), b.len());
+                for ((ka, va), (kb, vb)) in a.iter().zip(b.iter()) {
+                    assert_eq!(ka, kb);
+                    match (va, vb) {
+                        (json::Json::Num(x), json::Json::Num(y)) => {
+                            assert!((x - y).abs() <= x.abs() * 1e-12)
+                        }
+                        _ => assert_eq!(va, vb),
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+    });
+}
+
+#[test]
+fn prop_weighted_sampling_never_selects_zero_weight() {
+    property("zero weights excluded", 60, |g| {
+        let m = g.usize_range(4, 40);
+        let mut w = g.vec_uniform(m, 0.5, 2.0);
+        // zero half the weights
+        let zeroed: Vec<usize> = (0..m).filter(|i| i % 2 == 0).collect();
+        for &i in &zeroed {
+            w[i] = 0.0;
+        }
+        let k = g.usize_range(1, m - zeroed.len());
+        let idx = g.rng().weighted_sample_without_replacement(&w, k);
+        for i in idx {
+            assert!(w[i] > 0.0, "selected zero-weight row {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_engine_step_keeps_weights_finite() {
+    use mem_aop_gd::aop::AopEngine;
+    use mem_aop_gd::model::LossKind;
+    property("engine stability", 30, |g| {
+        let m = g.usize_range(2, 32);
+        let n = g.usize_range(1, 16);
+        let k = g.usize_range(1, m);
+        let x = randm(g, m, n);
+        let y = randm(g, m, 1);
+        let w0 = randm(g, n, 1).scale(0.1);
+        let pol = match g.usize_range(0, 2) {
+            0 => Policy::TopK,
+            1 => Policy::RandK,
+            _ => Policy::WeightedK,
+        };
+        let mut e = AopEngine::new(w0, LossKind::Mse, m, pol, k, g.bool());
+        let mut rng = g.rng().fork(7);
+        for _ in 0..10 {
+            let st = e.step(&x, &y, 0.01, &mut rng);
+            assert!(st.loss.is_finite());
+        }
+        assert!(e.w.is_finite());
+    });
+}
