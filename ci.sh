@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, release build, full test suite.
+#
+#   ./ci.sh          # everything (what CI runs)
+#   ./ci.sh --fast   # skip the release build (debug build + tests only)
+#
+# The build is offline-first: no network access, no XLA toolchain — see
+# README.md. Benches are compiled but not run here.
+
+set -euo pipefail
+cd "$(dirname "$0")"
+
+fast=0
+[ "${1:-}" = "--fast" ] && fast=1
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+# the PJRT client only compiles under the `hlo` feature (against the
+# vendor/xla stub) — keep it from bit-rotting even though the default
+# build never touches it
+echo "==> cargo check --features hlo --all-targets"
+cargo check --features hlo --all-targets
+
+if [ "$fast" -eq 0 ]; then
+  echo "==> cargo build --release"
+  cargo build --release
+fi
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "CI green."

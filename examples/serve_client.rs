@@ -1,0 +1,186 @@
+//! Concurrency driver for the serve subsystem: fires a burst of training
+//! jobs at a Mem-AOP-GD job server over many simultaneous TCP
+//! connections, waits for every job to finish, verifies a sample of the
+//! returned loss curves bit-for-bit against direct in-process runs, and
+//! prints the server's metrics (queue depth, jobs/sec, per-policy FLOP
+//! savings).
+//!
+//! By default it spawns its own server on an ephemeral port, so the full
+//! acceptance loop runs standalone:
+//!
+//! ```sh
+//! cargo run --release --example serve_client -- --jobs 64 --conns 16
+//! ```
+//!
+//! Point `--addr` at a running `repro serve` instance to hammer that
+//! instead (the in-process server is then skipped).
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Result};
+
+use mem_aop_gd::aop::Policy;
+use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig};
+use mem_aop_gd::coordinator::experiment;
+use mem_aop_gd::metrics::RunCurve;
+use mem_aop_gd::serve::{Client, ServeOptions, Server};
+use mem_aop_gd::util::cli::Command;
+
+/// Deterministic job mix: cycle through every policy, vary K and seed
+/// with the job index. Energy task, 3 epochs — fast enough that 64+ jobs
+/// finish in seconds, real enough that curves are non-trivial.
+fn job_config(i: usize) -> ExperimentConfig {
+    let policies = Policy::all();
+    let p = policies[i % policies.len()];
+    let mut cfg = ExperimentConfig::energy_preset();
+    cfg.policy = p;
+    cfg.memory = p != Policy::Exact;
+    cfg.k = if p == Policy::Exact {
+        cfg.m()
+    } else {
+        [18, 9, 3][(i / policies.len()) % 3]
+    };
+    cfg.epochs = 3;
+    cfg.seed = i as u64;
+    cfg.backend = Backend::Native;
+    cfg
+}
+
+fn curves_identical(a: &RunCurve, b: &RunCurve) -> bool {
+    a.epochs.len() == b.epochs.len()
+        && a.epochs.iter().zip(&b.epochs).all(|(x, y)| {
+            x.train_loss.to_bits() == y.train_loss.to_bits()
+                && x.val_loss.to_bits() == y.val_loss.to_bits()
+                && x.backward_flops == y.backward_flops
+        })
+}
+
+fn main() -> Result<()> {
+    let cmd = Command::new("serve_client", "hammer a Mem-AOP-GD training-job server")
+        .opt("addr", "", "server address (empty = spawn an in-process server)")
+        .opt("jobs", "64", "total jobs to submit")
+        .opt("conns", "16", "concurrent client connections")
+        .opt("verify", "8", "jobs to re-run locally and compare bit-for-bit")
+        .opt("timeout-s", "600", "per-job completion timeout");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cmd.parse(&argv).map_err(|e| anyhow!("{e}"))?;
+
+    let jobs: usize = args.get_parse("jobs")?;
+    let conns: usize = args.get_parse("conns")?;
+    let verify: usize = args.get_parse("verify")?;
+    let timeout = Duration::from_secs(args.get_parse::<u64>("timeout-s")?);
+    ensure!(jobs > 0 && conns > 0, "--jobs and --conns must be > 0");
+
+    // spawn an in-process server unless pointed at a running one
+    let mut spawned = None;
+    let addr = match args.get("addr").filter(|a| !a.is_empty()) {
+        Some(a) => a.to_string(),
+        None => {
+            let server = Server::bind(&ServeOptions {
+                addr: "127.0.0.1:0".to_string(),
+                workers: 0,
+                queue_capacity: jobs.max(64),
+                registry_dir: None,
+            })?;
+            let addr = server.local_addr()?.to_string();
+            spawned = Some(std::thread::spawn(move || server.run()));
+            addr
+        }
+    };
+    println!("hammering {addr}: {jobs} jobs over {conns} connections");
+
+    // fan out: connection t submits and polls jobs i with i % conns == t
+    let t0 = Instant::now();
+    let mut completed: Vec<(usize, String, Option<RunCurve>)> = Vec::with_capacity(jobs);
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for t in 0..conns.min(jobs) {
+            let addr = addr.clone();
+            handles.push(scope.spawn(move || -> Result<Vec<(usize, String, Option<RunCurve>)>> {
+                let mut client = Client::connect(&addr)?;
+                let mine: Vec<usize> = (0..jobs).filter(|i| i % conns == t).collect();
+                let mut ids = Vec::with_capacity(mine.len());
+                for &i in &mine {
+                    ids.push((i, client.submit(&job_config(i), &format!("burst-{i}"))?));
+                }
+                let mut out = Vec::with_capacity(mine.len());
+                for (i, id) in ids {
+                    let job = client.wait(id, timeout)?;
+                    let state = job
+                        .get("state")
+                        .and_then(|s| s.as_str())
+                        .unwrap_or("?")
+                        .to_string();
+                    let curve = if state == "done" {
+                        Some(client.result(id)?.1)
+                    } else {
+                        None
+                    };
+                    out.push((i, state, curve));
+                }
+                Ok(out)
+            }));
+        }
+        for h in handles {
+            completed.extend(h.join().expect("client thread panicked")?);
+        }
+        Ok(())
+    })?;
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    ensure!(
+        completed.len() == jobs,
+        "dropped jobs: {} of {jobs} accounted for",
+        completed.len()
+    );
+    let done = completed.iter().filter(|(_, s, _)| s == "done").count();
+    ensure!(done == jobs, "{} of {jobs} jobs did not finish 'done'", jobs - done);
+    println!(
+        "{jobs} jobs done in {elapsed:.2}s ({:.1} jobs/s end-to-end), none dropped",
+        jobs as f64 / elapsed
+    );
+
+    // bit-for-bit determinism spot-check against direct in-process runs
+    completed.sort_by_key(|(i, _, _)| *i);
+    let n_verify = verify.min(jobs);
+    for (i, _, curve) in completed.iter().take(n_verify) {
+        let served = curve.as_ref().expect("done job without curve");
+        let direct = experiment::run(&job_config(*i))?;
+        ensure!(
+            curves_identical(served, &direct.curve),
+            "job {i}: served curve differs from direct run"
+        );
+    }
+    if n_verify > 0 {
+        println!("{n_verify} curves verified bit-identical to direct experiment::run");
+    }
+
+    // scrape and display server metrics
+    let mut client = Client::connect(&addr)?;
+    let m = client.metrics()?;
+    let g = |k: &str| m.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    println!(
+        "server metrics: uptime {:.1}s, {} requests, queue depth {}, {:.2} jobs/s",
+        g("uptime_s"),
+        g("requests_total") as u64,
+        g("queue_depth") as u64,
+        g("jobs_per_sec")
+    );
+    if let Some(pols) = m.get("policies").and_then(|p| p.as_arr()) {
+        for p in pols {
+            println!(
+                "  {:>15}: {} jobs, {:.1}% of exact backward FLOPs saved",
+                p.get("policy").and_then(|s| s.as_str()).unwrap_or("?"),
+                p.get("jobs").and_then(|n| n.as_f64()).unwrap_or(0.0) as u64,
+                100.0 * p.get("saved_frac").and_then(|n| n.as_f64()).unwrap_or(0.0)
+            );
+        }
+    }
+
+    if let Some(handle) = spawned {
+        client.shutdown()?;
+        handle.join().expect("server thread panicked")?;
+        println!("in-process server drained and shut down cleanly");
+    }
+    Ok(())
+}

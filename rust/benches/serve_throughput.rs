@@ -1,0 +1,97 @@
+//! Serve-subsystem macro-benchmark: end-to-end job throughput and wire
+//! protocol overhead against an in-process server on an ephemeral port.
+//!
+//! Two numbers matter for the trainer-as-a-service story:
+//!
+//! * **jobs/sec** — submit→train→result for a burst of short energy-task
+//!   jobs across every policy, over several concurrent connections (the
+//!   scheduler + registry + persistence path, dominated by training);
+//! * **requests/sec** — `ping` round-trips on one connection (pure
+//!   framing/dispatch overhead; must be orders of magnitude above any
+//!   plausible job rate so the protocol never bottlenecks the pool).
+//!
+//! ```sh
+//! cargo bench --bench serve_throughput
+//! ```
+
+use std::time::{Duration, Instant};
+
+use mem_aop_gd::aop::Policy;
+use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig, Task};
+use mem_aop_gd::serve::{Client, ServeOptions, Server};
+
+fn quick_cfg(i: usize) -> ExperimentConfig {
+    let policies = Policy::all();
+    let p = policies[i % policies.len()];
+    let mut cfg = ExperimentConfig::preset(Task::Energy);
+    cfg.policy = p;
+    cfg.memory = p != Policy::Exact;
+    cfg.k = if p == Policy::Exact { cfg.m() } else { 18 };
+    cfg.epochs = 2;
+    cfg.seed = i as u64;
+    cfg.backend = Backend::Native;
+    cfg
+}
+
+fn main() {
+    let server = Server::bind(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 0,
+        queue_capacity: 256,
+        registry_dir: None,
+    })
+    .expect("bind");
+    let addr = server.local_addr().expect("addr").to_string();
+    let handle = std::thread::spawn(move || server.run());
+
+    // protocol overhead: ping round-trips on a single connection
+    let mut c = Client::connect(&addr).expect("connect");
+    let pings = 2000usize;
+    let t0 = Instant::now();
+    for _ in 0..pings {
+        c.ping().expect("ping");
+    }
+    let ping_s = t0.elapsed().as_secs_f64();
+    println!(
+        "protocol: {pings} pings in {ping_s:.3}s  ({:.0} req/s, {:.1} us/req)",
+        pings as f64 / ping_s,
+        1e6 * ping_s / pings as f64
+    );
+
+    // end-to-end job throughput over concurrent connections
+    let jobs = 64usize;
+    let conns = 8usize;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..conns {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut c = Client::connect(&addr).expect("connect");
+                let ids: Vec<u64> = (0..jobs)
+                    .filter(|i| i % conns == t)
+                    .map(|i| c.submit(&quick_cfg(i), "bench").expect("submit"))
+                    .collect();
+                for id in ids {
+                    let job = c.wait(id, Duration::from_secs(600)).expect("wait");
+                    assert_eq!(job.get("state").and_then(|s| s.as_str()), Some("done"));
+                }
+            });
+        }
+    });
+    let job_s = t0.elapsed().as_secs_f64();
+    println!(
+        "jobs: {jobs} (2-epoch energy, all policies) over {conns} conns in {job_s:.2}s  \
+         ({:.1} jobs/s)",
+        jobs as f64 / job_s
+    );
+
+    let m = c.metrics().expect("metrics");
+    println!(
+        "server-side: {} requests total, mean {:.2} jobs/s since start",
+        m.get("requests_total").and_then(|n| n.as_f64()).unwrap_or(0.0) as u64,
+        m.get("jobs_per_sec").and_then(|n| n.as_f64()).unwrap_or(0.0)
+    );
+
+    c.shutdown().expect("shutdown");
+    handle.join().expect("server thread").expect("server run");
+}

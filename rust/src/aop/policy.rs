@@ -32,15 +32,48 @@ pub enum Policy {
 }
 
 impl Policy {
-    /// Parse CLI / config names.
+    /// Parse CLI / config names (case-insensitive, surrounding whitespace
+    /// ignored, so `TopK` / `  RANDK ` work from hand-typed job specs).
     pub fn parse(s: &str) -> Option<Policy> {
-        Some(match s {
+        let t = s.trim().to_ascii_lowercase();
+        Some(match t.as_str() {
             "exact" | "baseline" => Policy::Exact,
             "topk" => Policy::TopK,
             "randk" => Policy::RandK,
             "weightedk" => Policy::WeightedK,
             "weightedk-repl" | "weightedk_repl" => Policy::WeightedKReplacement,
             _ => return None,
+        })
+    }
+
+    /// Every policy, in CLI help / metrics-reporting order.
+    pub fn all() -> [Policy; 5] {
+        [
+            Policy::Exact,
+            Policy::TopK,
+            Policy::RandK,
+            Policy::WeightedK,
+            Policy::WeightedKReplacement,
+        ]
+    }
+
+    /// `Policy::all()` names joined for help text and error messages.
+    pub fn names_joined(sep: &str) -> String {
+        Policy::all()
+            .iter()
+            .map(|p| p.name())
+            .collect::<Vec<_>>()
+            .join(sep)
+    }
+
+    /// Like [`Policy::parse`] but with an actionable error listing the
+    /// accepted names — used by the CLI and the serve protocol.
+    pub fn parse_or_suggest(s: &str) -> Result<Policy, String> {
+        Policy::parse(s).ok_or_else(|| {
+            format!(
+                "unknown policy '{s}' (expected one of: {})",
+                Policy::names_joined(", ")
+            )
         })
     }
 
@@ -190,17 +223,29 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for p in [
-            Policy::Exact,
-            Policy::TopK,
-            Policy::RandK,
-            Policy::WeightedK,
-            Policy::WeightedKReplacement,
-        ] {
+        for p in Policy::all() {
             assert_eq!(Policy::parse(p.name()), Some(p));
         }
         assert_eq!(Policy::parse("nope"), None);
         assert_eq!(Policy::parse("baseline"), Some(Policy::Exact));
+    }
+
+    #[test]
+    fn parse_is_case_insensitive() {
+        assert_eq!(Policy::parse("TopK"), Some(Policy::TopK));
+        assert_eq!(Policy::parse(" RANDK "), Some(Policy::RandK));
+        assert_eq!(Policy::parse("WeightedK-Repl"), Some(Policy::WeightedKReplacement));
+        assert_eq!(Policy::parse("Baseline"), Some(Policy::Exact));
+    }
+
+    #[test]
+    fn suggestions_list_all_names() {
+        let err = Policy::parse_or_suggest("bogus").unwrap_err();
+        for p in Policy::all() {
+            assert!(err.contains(p.name()), "{err}");
+        }
+        assert!(err.contains("bogus"));
+        assert_eq!(Policy::parse_or_suggest("topk"), Ok(Policy::TopK));
     }
 
     #[test]

@@ -6,13 +6,17 @@
 //!
 //! ```text
 //! magic  b"MAOP1\n"
-//! u32    number of named tensors
-//! per tensor:
+//! u32    number of named entries
+//! per entry:
 //!   u32        name length, then name bytes (utf-8)
-//!   u32 u32    rows, cols          (vectors: rows=len, cols=1 tagged 0?)
-//!   u8         rank (1 = vector, 2 = matrix)
-//!   f32 * n    row-major data
+//!   u32 u32    rows, cols   (vectors: rows=len, cols=1; bytes: rows=len, cols=1)
+//!   u8         rank (1 = vector, 2 = matrix, 3 = raw bytes)
+//!   payload    rank 1/2: f32 * rows*cols row-major; rank 3: rows raw bytes
 //! ```
+//!
+//! Rank-3 entries carry opaque metadata (UTF-8 JSON in practice) so
+//! higher layers — the serve run registry — can persist configs and
+//! curves next to the tensors without a second file format.
 //!
 //! Integrity: a trailing u64 FNV-1a checksum over everything before it.
 
@@ -36,6 +40,7 @@ pub struct Checkpoint {
 enum Entry {
     Vector(Vec<f32>),
     Matrix(Matrix),
+    Bytes(Vec<u8>),
 }
 
 fn fnv1a(bytes: &[u8]) -> u64 {
@@ -67,6 +72,17 @@ impl Checkpoint {
         self.put_vector(name, &[v]);
     }
 
+    /// Opaque byte payload (rank-3 entry).
+    pub fn put_bytes(&mut self, name: &str, data: &[u8]) {
+        self.entries
+            .insert(name.to_string(), Entry::Bytes(data.to_vec()));
+    }
+
+    /// UTF-8 string payload (stored as a rank-3 bytes entry).
+    pub fn put_str(&mut self, name: &str, s: &str) {
+        self.put_bytes(name, s.as_bytes());
+    }
+
     pub fn names(&self) -> Vec<&str> {
         self.entries.keys().map(|s| s.as_str()).collect()
     }
@@ -74,7 +90,7 @@ impl Checkpoint {
     pub fn matrix(&self, name: &str) -> Result<&Matrix> {
         match self.entries.get(name) {
             Some(Entry::Matrix(m)) => Ok(m),
-            Some(Entry::Vector(_)) => bail!("'{name}' is a vector, not a matrix"),
+            Some(_) => bail!("'{name}' is not a matrix"),
             None => bail!("checkpoint has no entry '{name}'"),
         }
     }
@@ -82,7 +98,7 @@ impl Checkpoint {
     pub fn vector(&self, name: &str) -> Result<&[f32]> {
         match self.entries.get(name) {
             Some(Entry::Vector(v)) => Ok(v),
-            Some(Entry::Matrix(_)) => bail!("'{name}' is a matrix, not a vector"),
+            Some(_) => bail!("'{name}' is not a vector"),
             None => bail!("checkpoint has no entry '{name}'"),
         }
     }
@@ -91,6 +107,19 @@ impl Checkpoint {
         let v = self.vector(name)?;
         anyhow::ensure!(v.len() == 1, "'{name}' is not a scalar");
         Ok(v[0])
+    }
+
+    pub fn bytes(&self, name: &str) -> Result<&[u8]> {
+        match self.entries.get(name) {
+            Some(Entry::Bytes(b)) => Ok(b),
+            Some(_) => bail!("'{name}' is a tensor, not a bytes entry"),
+            None => bail!("checkpoint has no entry '{name}'"),
+        }
+    }
+
+    pub fn str_entry(&self, name: &str) -> Result<&str> {
+        std::str::from_utf8(self.bytes(name)?)
+            .map_err(|e| anyhow!("'{name}' is not valid utf-8: {e}"))
     }
 
     /// Serialize to bytes (MAOP1 + checksum).
@@ -117,6 +146,12 @@ impl Checkpoint {
                     for x in m.data() {
                         out.extend_from_slice(&x.to_le_bytes());
                     }
+                }
+                Entry::Bytes(b) => {
+                    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+                    out.extend_from_slice(&1u32.to_le_bytes());
+                    out.push(3);
+                    out.extend_from_slice(b);
                 }
             }
         }
@@ -157,6 +192,12 @@ impl Checkpoint {
             let cols = read_u32(&mut r)? as usize;
             let mut rank = [0u8; 1];
             r.read_exact(&mut rank)?;
+            if rank[0] == 3 {
+                let mut raw = vec![0u8; rows];
+                r.read_exact(&mut raw)?;
+                cp.entries.insert(name, Entry::Bytes(raw));
+                continue;
+            }
             let n = rows
                 .checked_mul(cols)
                 .ok_or_else(|| anyhow!("tensor too large"))?;
@@ -231,6 +272,27 @@ mod tests {
         let loaded = Checkpoint::load(&path).unwrap();
         assert_eq!(cp, loaded);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bytes_entries_roundtrip() {
+        let mut cp = sample();
+        cp.put_str("config_json", r#"{"task":"energy","k":18}"#);
+        cp.put_bytes("blob", &[0u8, 1, 2, 255, 128]);
+        let parsed = Checkpoint::from_bytes(&cp.to_bytes()).unwrap();
+        assert_eq!(parsed, cp);
+        assert_eq!(
+            parsed.str_entry("config_json").unwrap(),
+            r#"{"task":"energy","k":18}"#
+        );
+        assert_eq!(parsed.bytes("blob").unwrap(), &[0u8, 1, 2, 255, 128]);
+        // tensors still intact next to bytes entries
+        assert_eq!(parsed.matrix("w").unwrap().shape(), (16, 4));
+        // type confusion between bytes and tensors rejected
+        assert!(parsed.matrix("blob").is_err());
+        assert!(parsed.vector("config_json").is_err());
+        assert!(parsed.bytes("w").is_err());
+        assert!(parsed.str_entry("nope").is_err());
     }
 
     #[test]

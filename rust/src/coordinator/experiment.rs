@@ -64,18 +64,34 @@ pub fn load_data(cfg: &ExperimentConfig) -> (Dataset, Dataset) {
     }
 }
 
+/// Per-epoch observer for incremental progress reporting. Receives each
+/// epoch's metrics as soon as they are recorded; returning `false` stops
+/// the run early (the partial `RunResult` is still returned `Ok`) — this
+/// is how the serve subsystem streams progress and honours cancellation.
+///
+/// Observers never influence the math: the RNG streams, data and policy
+/// decisions are identical whether or not anyone is watching, so observed
+/// runs stay seed-for-seed identical to plain [`run`] calls.
+pub type EpochObserver<'a> = &'a mut dyn FnMut(&EpochMetrics) -> bool;
+
 /// Run with the default backend resolution (creates a PJRT runtime if the
 /// config asks for the HLO backend).
 pub fn run(cfg: &ExperimentConfig) -> Result<RunResult> {
+    run_with(cfg, &mut |_| true)
+}
+
+/// Like [`run`], reporting each epoch to `on_epoch` as it completes.
+pub fn run_with(cfg: &ExperimentConfig, on_epoch: EpochObserver<'_>) -> Result<RunResult> {
     match cfg.backend {
         Backend::Native => {
             let trainer = NativeTrainer::new(cfg)?;
-            run_with_trainer(cfg, trainer)
+            run_with_trainer_observed(cfg, trainer, on_epoch)
         }
         Backend::Hlo => {
             let rt = Runtime::from_default_artifacts()
                 .context("creating PJRT runtime (run `make artifacts`?)")?;
-            run_hlo(cfg, &rt)
+            let trainer = HloTrainer::new(cfg, &rt)?;
+            run_with_trainer_observed(cfg, trainer, on_epoch)
         }
     }
 }
@@ -88,7 +104,16 @@ pub fn run_hlo(cfg: &ExperimentConfig, rt: &Runtime) -> Result<RunResult> {
 }
 
 /// The epoch/step loop, generic over the backend.
-pub fn run_with_trainer<T: Trainer>(cfg: &ExperimentConfig, mut trainer: T) -> Result<RunResult> {
+pub fn run_with_trainer<T: Trainer>(cfg: &ExperimentConfig, trainer: T) -> Result<RunResult> {
+    run_with_trainer_observed(cfg, trainer, &mut |_| true)
+}
+
+/// [`run_with_trainer`] with a per-epoch observer (see [`EpochObserver`]).
+pub fn run_with_trainer_observed<T: Trainer>(
+    cfg: &ExperimentConfig,
+    mut trainer: T,
+    on_epoch: EpochObserver<'_>,
+) -> Result<RunResult> {
     cfg.validate()?;
     let (train, val) = load_data(cfg);
     let m = cfg.m();
@@ -104,6 +129,7 @@ pub fn run_with_trainer<T: Trainer>(cfg: &ExperimentConfig, mut trainer: T) -> R
         let t0 = Instant::now();
         trainer.set_lr(cfg.schedule.lr_at(cfg.lr, epoch, cfg.epochs));
         let batches = batcher.epoch_batches(&train, &mut shuffle_rng);
+        curve.steps_per_epoch = batches.len();
         let mut loss_sum = 0.0f64;
         let mut fro_sum = 0.0f64;
         for b in &batches {
@@ -116,7 +142,7 @@ pub fn run_with_trainer<T: Trainer>(cfg: &ExperimentConfig, mut trainer: T) -> R
                 flops::aop_step(m, n, p, sel.k_effective()).backward_only();
         }
         let (val_loss, val_acc) = evaluate_chunked(&mut trainer, &val, cfg.task.eval_batch())?;
-        curve.push(EpochMetrics {
+        let metrics = EpochMetrics {
             epoch,
             train_loss: (loss_sum / batches.len() as f64) as f32,
             val_loss,
@@ -125,7 +151,11 @@ pub fn run_with_trainer<T: Trainer>(cfg: &ExperimentConfig, mut trainer: T) -> R
             mem_fro: trainer.mem_fro(),
             backward_flops: cum_backward_flops,
             wall_s: t0.elapsed().as_secs_f64(),
-        });
+        };
+        curve.push(metrics);
+        if !on_epoch(&metrics) {
+            break; // observer asked to stop (e.g. job cancellation)
+        }
     }
 
     let (final_w, final_b) = trainer.weight_snapshot();
@@ -223,6 +253,32 @@ mod tests {
             a.curve.final_val_loss(),
             b.curve.final_val_loss()
         );
+    }
+
+    #[test]
+    fn observer_sees_every_epoch_without_changing_the_math() {
+        let cfg = quick_energy(Policy::WeightedK, true, 9);
+        let mut seen = Vec::new();
+        let observed = run_with(&cfg, &mut |m| {
+            seen.push(m.val_loss);
+            true
+        })
+        .unwrap();
+        let plain = run(&cfg).unwrap();
+        assert_eq!(seen.len(), 12);
+        for (ma, mb) in observed.curve.epochs.iter().zip(plain.curve.epochs.iter()) {
+            assert_eq!(ma.val_loss, mb.val_loss);
+            assert_eq!(ma.backward_flops, mb.backward_flops);
+        }
+        assert_eq!(observed.curve.steps_per_epoch, 576 / 144);
+    }
+
+    #[test]
+    fn observer_can_stop_early() {
+        let cfg = quick_energy(Policy::TopK, true, 18);
+        let r = run_with(&cfg, &mut |m| m.epoch < 5).unwrap();
+        assert_eq!(r.curve.epochs.len(), 5);
+        assert!(r.final_w.is_finite());
     }
 
     #[test]

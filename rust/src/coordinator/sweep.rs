@@ -8,22 +8,37 @@
 
 use anyhow::Result;
 
-use crate::coordinator::config::{Backend, ExperimentConfig};
+use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::experiment::{self, RunResult};
+use crate::metrics::EpochMetrics;
 use crate::util::pool;
 
 /// Run all configurations, up to `workers` at a time, preserving order.
 /// Errors are returned per-experiment (a failed run does not abort the
 /// sweep).
 pub fn run_sweep(configs: &[ExperimentConfig], workers: usize) -> Vec<Result<RunResult>> {
-    let items: Vec<ExperimentConfig> = configs.to_vec();
-    pool::run_parallel(items, workers, |cfg| match cfg.backend {
-        Backend::Native => experiment::run(cfg),
-        Backend::Hlo => {
-            // per-thread runtime: PJRT handles are not Send
-            let rt = crate::runtime::Runtime::from_default_artifacts()?;
-            experiment::run_hlo(cfg, &rt)
-        }
+    run_sweep_observed(configs, workers, |_, _| true)
+}
+
+/// Like [`run_sweep`], reporting per-epoch progress incrementally:
+/// `on_epoch(config_index, metrics)` is called from the worker thread as
+/// each epoch of each run completes, and may return `false` to stop that
+/// run early (its partial result is still returned). This is the fan-out
+/// primitive the serve subsystem and long figure sweeps build on.
+pub fn run_sweep_observed<F>(
+    configs: &[ExperimentConfig],
+    workers: usize,
+    on_epoch: F,
+) -> Vec<Result<RunResult>>
+where
+    F: Fn(usize, &EpochMetrics) -> bool + Sync,
+{
+    let items: Vec<(usize, ExperimentConfig)> =
+        configs.iter().cloned().enumerate().collect();
+    pool::run_parallel(items, workers, |(idx, cfg)| {
+        // Per-config run; the HLO backend creates a per-thread runtime
+        // inside `run_with` (PJRT handles are not Send).
+        experiment::run_with(cfg, &mut |m| on_epoch(*idx, m))
     })
 }
 
@@ -73,6 +88,24 @@ mod tests {
             ]
         );
         assert!(cfgs[1..].iter().all(|c| c.k == 18));
+    }
+
+    #[test]
+    fn observed_sweep_reports_per_config_progress() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let mut base = ExperimentConfig::energy_preset();
+        base.epochs = 2;
+        let cfgs = panel_configs(&base, 18);
+        let ticks: Vec<AtomicUsize> = (0..cfgs.len()).map(|_| AtomicUsize::new(0)).collect();
+        let results = run_sweep_observed(&cfgs, 4, |idx, m| {
+            assert!(m.epoch >= 1 && m.epoch <= 2);
+            ticks[idx].fetch_add(1, Ordering::Relaxed);
+            true
+        });
+        assert_eq!(results.len(), 7);
+        for (i, t) in ticks.iter().enumerate() {
+            assert_eq!(t.load(Ordering::Relaxed), 2, "config {i}");
+        }
     }
 
     #[test]

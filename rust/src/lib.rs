@@ -18,6 +18,18 @@
 //! Python never runs on the training path: `make artifacts` lowers the
 //! graphs once, and the `repro` binary is self-contained afterwards.
 //!
+//! On top of the coordinator sits the [`serve`] subsystem — a std-only
+//! TCP/JSON training-job server (`repro serve`): submit any
+//! `ExperimentConfig`, poll status, stream loss curves, cancel, and
+//! scrape queue/throughput/FLOP-savings metrics, with completed runs
+//! persisted through `coordinator::checkpoint` so the run registry
+//! survives restarts. See README.md for the wire protocol.
+//!
+//! Builds are offline-first: the PJRT execution path is gated behind the
+//! `hlo` cargo feature (default off), so `cargo build && cargo test`
+//! needs no XLA toolchain — `--backend hlo` then reports a clear
+//! "backend unavailable" error while `--backend native` runs everywhere.
+//!
 //! See `examples/` for end-to-end drivers and `repro --help` for the CLI.
 
 pub mod aop;
@@ -26,5 +38,6 @@ pub mod data;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

@@ -11,7 +11,10 @@
 //! * `mlp`                — end-to-end multi-layer MLP training through
 //!                          the monolithic AOT artifacts;
 //! * `inspect-artifacts`  — compile every artifact and report compile
-//!                          times + manifest contract.
+//!                          times + manifest contract;
+//! * `serve`              — long-lived training-job server (TCP/JSON):
+//!                          submit/status/result/list/cancel/metrics,
+//!                          persistent run registry (see README.md).
 
 use anyhow::{anyhow, bail, Result};
 
@@ -25,6 +28,13 @@ use mem_aop_gd::metrics::print_table;
 use mem_aop_gd::runtime::Runtime;
 use mem_aop_gd::util::cli::{App, Args, Command};
 
+/// `--policy` help generated from [`Policy::all`] so the CLI can never
+/// drift from the policies the crate actually implements. Leaked once at
+/// startup (the option table wants `&'static str`).
+fn policy_help() -> &'static str {
+    Box::leak(Policy::names_joined(" | ").into_boxed_str())
+}
+
 fn app() -> App {
     App {
         name: "repro",
@@ -32,7 +42,7 @@ fn app() -> App {
         commands: vec![
             Command::new("train", "run one experiment and print its curve")
                 .opt("task", "energy", "energy | mnist")
-                .opt("policy", "topk", "exact | topk | randk | weightedk | weightedk-repl")
+                .opt("policy", "topk", policy_help())
                 .opt("k", "18", "outer products kept per update (K <= M)")
                 .opt("epochs", "0", "override Tab. I epochs (0 = preset)")
                 .opt("lr", "0.01", "learning rate")
@@ -74,6 +84,11 @@ fn app() -> App {
             .opt("seed", "0", "RNG seed")
             .opt("out", "results", "output directory"),
             Command::new("inspect-artifacts", "compile all artifacts, report stats"),
+            Command::new("serve", "training-job server: TCP/JSON submit/status/result/metrics")
+                .opt("addr", "127.0.0.1:7070", "listen address (host:port; port 0 = ephemeral)")
+                .opt("workers", "0", "training worker threads (0 = auto)")
+                .opt("queue-cap", "256", "max queued jobs before submissions are rejected")
+                .opt("registry-dir", "", "persist completed runs here (empty = in-memory only)"),
         ],
     }
 }
@@ -112,6 +127,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "mlp" => cmd_mlp(args),
         "approx-error" => cmd_approx_error(args),
         "inspect-artifacts" => cmd_inspect(),
+        "serve" => cmd_serve(args),
         _ => bail!("unhandled command {cmd}"),
     }
 }
@@ -120,8 +136,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let task = Task::parse(args.get("task").unwrap_or("energy"))
         .ok_or_else(|| anyhow!("bad --task"))?;
     let mut cfg = ExperimentConfig::preset(task);
-    cfg.policy = Policy::parse(args.get("policy").unwrap_or("topk"))
-        .ok_or_else(|| anyhow!("bad --policy"))?;
+    cfg.policy = Policy::parse_or_suggest(args.get("policy").unwrap_or("topk"))
+        .map_err(|e| anyhow!("--policy: {e}"))?;
     cfg.k = args.get_parse("k")?;
     if cfg.policy == Policy::Exact {
         cfg.k = cfg.m();
@@ -318,6 +334,39 @@ fn cmd_approx_error(args: &Args) -> Result<()> {
     std::fs::write(out_dir.join("approx_error.csv"), csv)?;
     println!("\nwrote {}", out_dir.join("approx_error.csv").display());
     Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use mem_aop_gd::serve::{ServeOptions, Server};
+    let opts = ServeOptions {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7070").to_string(),
+        workers: args.get_parse("workers")?,
+        queue_capacity: args.get_parse("queue-cap")?,
+        registry_dir: args
+            .get("registry-dir")
+            .filter(|s| !s.is_empty())
+            .map(std::path::PathBuf::from),
+    };
+    let server = Server::bind(&opts)?;
+    let state = server.state();
+    let restored = state.registry.counts().done;
+    println!(
+        "repro serve listening on {} ({} workers, queue capacity {}, registry {}{})",
+        server.local_addr()?,
+        state.scheduler.worker_count(),
+        opts.queue_capacity,
+        match &opts.registry_dir {
+            Some(d) => d.display().to_string(),
+            None => "in-memory".to_string(),
+        },
+        if restored > 0 {
+            format!(", {restored} runs restored")
+        } else {
+            String::new()
+        }
+    );
+    println!("protocol: one JSON object per line; try {{\"op\":\"ping\"}} — see README.md");
+    server.run()
 }
 
 fn cmd_inspect() -> Result<()> {

@@ -4,6 +4,8 @@
 use std::io::Write;
 use std::path::Path;
 
+use anyhow::{anyhow, Result};
+
 use crate::util::json::{self, Json};
 
 /// One epoch's record for a training run.
@@ -29,6 +31,10 @@ pub struct EpochMetrics {
 pub struct RunCurve {
     /// Series label, e.g. `topk-mem` / `baseline`.
     pub label: String,
+    /// Optimizer steps per epoch (0 = unknown, e.g. hand-built curves).
+    /// Set by the experiment loop; lets metrics consumers (the serve
+    /// subsystem's FLOP accounting) reconstruct total step counts.
+    pub steps_per_epoch: usize,
     pub epochs: Vec<EpochMetrics>,
 }
 
@@ -36,8 +42,14 @@ impl RunCurve {
     pub fn new(label: &str) -> Self {
         RunCurve {
             label: label.to_string(),
+            steps_per_epoch: 0,
             epochs: Vec::new(),
         }
+    }
+
+    /// Total optimizer steps across the recorded epochs (0 if unknown).
+    pub fn total_steps(&self) -> u64 {
+        self.steps_per_epoch as u64 * self.epochs.len() as u64
     }
 
     pub fn push(&mut self, m: EpochMetrics) {
@@ -85,6 +97,7 @@ impl RunCurve {
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("label", json::s(&self.label)),
+            ("steps_per_epoch", json::num(self.steps_per_epoch as f64)),
             (
                 "epochs",
                 Json::Arr(
@@ -106,6 +119,49 @@ impl RunCurve {
                 ),
             ),
         ])
+    }
+
+    /// Inverse of [`RunCurve::to_json`] — used by the serve registry when
+    /// reloading persisted runs and by protocol clients decoding results.
+    pub fn from_json(v: &Json) -> Result<RunCurve> {
+        let label = v
+            .get("label")
+            .and_then(|l| l.as_str())
+            .ok_or_else(|| anyhow!("curve: missing label"))?
+            .to_string();
+        let steps_per_epoch = v
+            .get("steps_per_epoch")
+            .and_then(|n| n.as_usize())
+            .unwrap_or(0);
+        let mut epochs = Vec::new();
+        for (i, e) in v
+            .get("epochs")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("curve: missing epochs array"))?
+            .iter()
+            .enumerate()
+        {
+            let num = |k: &str| -> Result<f64> {
+                e.get(k)
+                    .and_then(|n| n.as_f64())
+                    .ok_or_else(|| anyhow!("curve epoch {i}: missing '{k}'"))
+            };
+            epochs.push(EpochMetrics {
+                epoch: num("epoch")? as usize,
+                train_loss: num("train_loss")? as f32,
+                val_loss: num("val_loss")? as f32,
+                val_acc: num("val_acc")? as f32,
+                wstar_fro: num("wstar_fro")? as f32,
+                mem_fro: num("mem_fro")? as f32,
+                backward_flops: num("backward_flops")? as u64,
+                wall_s: num("wall_s")?,
+            });
+        }
+        Ok(RunCurve {
+            label,
+            steps_per_epoch,
+            epochs,
+        })
     }
 }
 
@@ -222,6 +278,24 @@ mod tests {
         assert!(lines[1].starts_with("1,1,1.2"));
         assert_eq!(lines[2], "2,0.5,");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn curve_json_roundtrip() {
+        let mut c = RunCurve::new("topk-mem");
+        c.steps_per_epoch = 4;
+        for (e, v) in [(1, 3.0), (2, 2.0)] {
+            c.push(m(e, v));
+        }
+        let r = RunCurve::from_json(&c.to_json()).unwrap();
+        assert_eq!(r.label, c.label);
+        assert_eq!(r.steps_per_epoch, 4);
+        assert_eq!(r.total_steps(), 8);
+        assert_eq!(r.epochs.len(), 2);
+        assert_eq!(r.epochs[1].val_loss, c.epochs[1].val_loss);
+        assert_eq!(r.epochs[1].backward_flops, c.epochs[1].backward_flops);
+        // malformed input rejected
+        assert!(RunCurve::from_json(&crate::util::json::parse("{}").unwrap()).is_err());
     }
 
     #[test]

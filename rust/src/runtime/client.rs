@@ -1,11 +1,13 @@
 //! PJRT client wrapper: compile HLO-text artifacts once, execute many.
 //!
-//! [`Runtime`] owns one `PjRtClient` (CPU) and a lazily-populated cache of
-//! compiled executables keyed by artifact name. [`Executable::run`]
-//! validates argument shapes against the manifest, marshals `Matrix`/
-//! scalar values into `xla::Literal`s, executes, and unpacks the output
-//! tuple back into typed values, accumulating wall-clock stats per
-//! artifact (surfaced by `repro inspect-artifacts` and the §Perf pass).
+//! Compiled only with the `hlo` cargo feature (the default offline build
+//! uses the stub in `client_stub.rs` instead). [`Runtime`] owns one
+//! `PjRtClient` (CPU) and a lazily-populated cache of compiled
+//! executables keyed by artifact name. [`Executable::run`] validates
+//! argument shapes against the manifest, marshals `Matrix`/scalar values
+//! into `xla::Literal`s, executes, and unpacks the output tuple back into
+//! typed values, accumulating wall-clock stats per artifact (surfaced by
+//! `repro inspect-artifacts` and the §Perf pass).
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -15,167 +17,8 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::runtime::manifest::{ArtifactSpec, Manifest, TensorSpec};
-use crate::tensor::Matrix;
-
-/// A typed value crossing the Rust ⇄ PJRT boundary.
-#[derive(Debug, Clone)]
-pub enum Value {
-    Scalar(f32),
-    Vector(Vec<f32>),
-    Matrix(Matrix),
-}
-
-/// Borrowed argument for [`Executable::run_ref`] — lets the hot path feed
-/// model state without cloning matrices into [`Value`]s first (§Perf).
-#[derive(Debug, Clone, Copy)]
-pub enum ArgRef<'a> {
-    Scalar(f32),
-    Vector(&'a [f32]),
-    Matrix(&'a Matrix),
-}
-
-impl<'a> ArgRef<'a> {
-    fn shape(&self) -> Vec<usize> {
-        match self {
-            ArgRef::Scalar(_) => vec![],
-            ArgRef::Vector(v) => vec![v.len()],
-            ArgRef::Matrix(m) => vec![m.rows(), m.cols()],
-        }
-    }
-
-    fn data(&self) -> &[f32] {
-        match self {
-            ArgRef::Scalar(v) => std::slice::from_ref(v),
-            ArgRef::Vector(v) => v,
-            ArgRef::Matrix(m) => m.data(),
-        }
-    }
-}
-
-impl<'a> From<&'a Value> for ArgRef<'a> {
-    fn from(v: &'a Value) -> Self {
-        match v {
-            Value::Scalar(s) => ArgRef::Scalar(*s),
-            Value::Vector(v) => ArgRef::Vector(v),
-            Value::Matrix(m) => ArgRef::Matrix(m),
-        }
-    }
-}
-
-impl<'a> From<&'a Matrix> for ArgRef<'a> {
-    fn from(m: &'a Matrix) -> Self {
-        ArgRef::Matrix(m)
-    }
-}
-
-impl<'a> From<&'a [f32]> for ArgRef<'a> {
-    fn from(v: &'a [f32]) -> Self {
-        ArgRef::Vector(v)
-    }
-}
-
-impl<'a> From<&'a Vec<f32>> for ArgRef<'a> {
-    fn from(v: &'a Vec<f32>) -> Self {
-        ArgRef::Vector(v)
-    }
-}
-
-impl From<f32> for ArgRef<'static> {
-    fn from(v: f32) -> Self {
-        ArgRef::Scalar(v)
-    }
-}
-
-impl Value {
-    pub fn as_scalar(&self) -> Result<f32> {
-        match self {
-            Value::Scalar(v) => Ok(*v),
-            _ => bail!("expected scalar, got {self:?}"),
-        }
-    }
-
-    pub fn as_vector(&self) -> Result<&[f32]> {
-        match self {
-            Value::Vector(v) => Ok(v),
-            _ => bail!("expected vector"),
-        }
-    }
-
-    pub fn into_matrix(self) -> Result<Matrix> {
-        match self {
-            Value::Matrix(m) => Ok(m),
-            _ => bail!("expected matrix"),
-        }
-    }
-
-    pub fn into_vector(self) -> Result<Vec<f32>> {
-        match self {
-            Value::Vector(v) => Ok(v),
-            _ => bail!("expected vector"),
-        }
-    }
-
-    /// Build from a spec + flat data (output unmarshalling).
-    fn from_flat(spec: &TensorSpec, data: Vec<f32>) -> Result<Value> {
-        if data.len() != spec.num_elements() {
-            bail!(
-                "output '{}': got {} elements, expected {}",
-                spec.name,
-                data.len(),
-                spec.num_elements()
-            );
-        }
-        Ok(match spec.shape.len() {
-            0 => Value::Scalar(data[0]),
-            1 => Value::Vector(data),
-            2 => Value::Matrix(Matrix::from_vec(spec.shape[0], spec.shape[1], data)),
-            n => bail!("output '{}': rank {n} unsupported", spec.name),
-        })
-    }
-}
-
-impl From<f32> for Value {
-    fn from(v: f32) -> Self {
-        Value::Scalar(v)
-    }
-}
-
-impl From<Vec<f32>> for Value {
-    fn from(v: Vec<f32>) -> Self {
-        Value::Vector(v)
-    }
-}
-
-impl From<Matrix> for Value {
-    fn from(m: Matrix) -> Self {
-        Value::Matrix(m)
-    }
-}
-
-impl From<&Matrix> for Value {
-    fn from(m: &Matrix) -> Self {
-        Value::Matrix(m.clone())
-    }
-}
-
-/// Cumulative execution stats for one artifact.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct ExecStats {
-    pub calls: u64,
-    pub total_ns: u64,
-    pub compile_ns: u64,
-}
-
-impl ExecStats {
-    pub fn mean_us(&self) -> f64 {
-        if self.calls == 0 {
-            0.0
-        } else {
-            self.total_ns as f64 / self.calls as f64 / 1e3
-        }
-    }
-}
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::values::{ArgRef, ExecStats, Value};
 
 /// One compiled artifact.
 pub struct Executable {
@@ -353,62 +196,5 @@ impl Runtime {
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::runtime::manifest::TensorSpec;
-
-    #[test]
-    fn argref_shape_data() {
-        let v = Value::Scalar(2.0);
-        let r = ArgRef::from(&v);
-        assert!(r.shape().is_empty());
-        assert_eq!(r.data(), &[2.0]);
-        let vec_val = vec![1.0f32, 2.0];
-        let r = ArgRef::from(&vec_val);
-        assert_eq!(r.shape(), vec![2]);
-        assert_eq!(r.data().len(), 2);
-        let m = Matrix::zeros(3, 4);
-        let r = ArgRef::from(&m);
-        assert_eq!(r.shape(), vec![3, 4]);
-        assert_eq!(r.data().len(), 12);
-    }
-
-    #[test]
-    fn value_from_flat_ranks() {
-        let sc = TensorSpec {
-            name: "a".into(),
-            shape: vec![],
-        };
-        assert!(matches!(
-            Value::from_flat(&sc, vec![1.0]).unwrap(),
-            Value::Scalar(_)
-        ));
-        let ve = TensorSpec {
-            name: "b".into(),
-            shape: vec![3],
-        };
-        assert!(matches!(
-            Value::from_flat(&ve, vec![1.0, 2.0, 3.0]).unwrap(),
-            Value::Vector(_)
-        ));
-        let ma = TensorSpec {
-            name: "c".into(),
-            shape: vec![2, 2],
-        };
-        let m = Value::from_flat(&ma, vec![1.0; 4]).unwrap();
-        assert_eq!(m.into_matrix().unwrap().shape(), (2, 2));
-        // wrong element count rejected
-        assert!(Value::from_flat(&ve, vec![1.0]).is_err());
-    }
-
-    #[test]
-    fn value_accessors() {
-        assert_eq!(Value::Scalar(3.0).as_scalar().unwrap(), 3.0);
-        assert!(Value::Vector(vec![]).as_scalar().is_err());
-        assert!(Value::Scalar(1.0).into_matrix().is_err());
-    }
-
-    // Execution against real artifacts is covered by rust/tests/ (needs
-    // `make artifacts`); unit scope here is marshalling only.
-}
+// Marshalling unit tests live in `values.rs`; execution-path tests live
+// in rust/tests/ (they need the built artifacts).

@@ -1,0 +1,87 @@
+//! Native-only stand-in for the PJRT client, compiled when the `hlo`
+//! cargo feature is disabled (the default in the offline environment).
+//!
+//! Presents the exact same typed surface as `client.rs` so trainers,
+//! benches and the serve subsystem compile unchanged; every entry point
+//! that would need a PJRT plugin returns a clear "backend unavailable"
+//! error instead. The native backend (`--backend native`) is unaffected.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::values::{ArgRef, ExecStats, Value};
+
+const UNAVAILABLE: &str = "HLO/PJRT backend unavailable: this binary was built without the \
+     `hlo` cargo feature. Rebuild with `cargo build --features hlo` (after vendoring the \
+     real xla bindings, see vendor/xla), or rerun with `--backend native`";
+
+/// Stub of the compiled-artifact handle. Cannot be constructed (the stub
+/// [`Runtime`] never hands one out); methods exist for type-compatibility.
+pub struct Executable {
+    spec: ArtifactSpec,
+}
+
+impl Executable {
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        ExecStats::default()
+    }
+
+    pub fn run(&self, _args: &[Value]) -> Result<Vec<Value>> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn run_ref(&self, _args: &[ArgRef<'_>]) -> Result<Vec<Value>> {
+        bail!("{UNAVAILABLE}");
+    }
+}
+
+/// Stub runtime: construction always fails with the unavailable message.
+pub struct Runtime {
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn new(_artifacts_dir: &Path) -> Result<Runtime> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn from_default_artifacts() -> Result<Runtime> {
+        Self::new(&Manifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without the hlo feature)".to_string()
+    }
+
+    pub fn load(&self, _name: &str) -> Result<Rc<Executable>> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn load_all(&self) -> Result<Vec<(String, ExecStats)>> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn stats(&self) -> Vec<(String, ExecStats)> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let err = Runtime::from_default_artifacts().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("hlo"), "{msg}");
+        assert!(msg.contains("--backend native"), "{msg}");
+    }
+}

@@ -5,15 +5,30 @@
 //!
 //! * [`manifest`] — parse `artifacts/manifest.json` (input/output specs
 //!   emitted by `python/compile/aot.py`);
+//! * [`values`] — the typed `Value`/`ArgRef` marshalling layer shared by
+//!   both client builds;
 //! * [`client`] — `Runtime`: PJRT client + per-artifact compiled
-//!   executable cache; [`client::Executable::run`] validates shapes
-//!   against the manifest before dispatch and returns `Matrix`/scalars.
+//!   executable cache; `Executable::run` validates shapes against the
+//!   manifest before dispatch and returns `Matrix`/scalars.
+//!
+//! The PJRT path is gated behind the `hlo` cargo feature: without it (the
+//! offline default) `client` resolves to a stub with the same surface
+//! whose runtime constructor reports a clear "backend unavailable" error,
+//! so `--backend native` keeps working and nothing upstream needs cfg'ing.
 //!
 //! HLO *text* is the interchange format (see `aot.py` for why), parsed
 //! with `HloModuleProto::from_text_file` and compiled at first use.
 
-pub mod client;
 pub mod manifest;
+pub mod values;
 
-pub use client::{ArgRef, Executable, Runtime, Value};
+#[cfg(feature = "hlo")]
+pub mod client;
+
+#[cfg(not(feature = "hlo"))]
+#[path = "client_stub.rs"]
+pub mod client;
+
+pub use client::{Executable, Runtime};
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use values::{ArgRef, ExecStats, Value};

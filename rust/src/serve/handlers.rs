@@ -1,0 +1,303 @@
+//! Request dispatch: one function from protocol [`Request`] to response
+//! JSON against the shared [`ServerState`].
+//!
+//! Kept free of any socket I/O so the whole op surface is unit-testable
+//! in-process — the TCP layer in `server.rs` only frames lines and calls
+//! [`ServerState::handle`]. Every path returns a response object; client
+//! mistakes (unknown job id, malformed config, full queue) become
+//! `ok:false` envelopes, never a closed connection or a panic.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::serve::protocol::{self, err_response, ok_response, Request, PROTOCOL_VERSION};
+use crate::serve::queue::Scheduler;
+use crate::serve::registry::Registry;
+use crate::util::json::{self, Json};
+
+/// Everything a connection handler needs, shared via `Arc` across the
+/// accept loop and every connection thread.
+pub struct ServerState {
+    pub registry: Arc<Registry>,
+    pub scheduler: Scheduler,
+    started: Instant,
+    requests: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+impl ServerState {
+    pub fn new(registry: Arc<Registry>, scheduler: Scheduler) -> ServerState {
+        ServerState {
+            registry,
+            scheduler,
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// Set once a `shutdown` op arrives; the accept loop polls this.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Dispatch one request frame. Infallible by design: every error is
+    /// encoded as an `ok:false` response.
+    pub fn handle(&self, frame: &Json) -> Json {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let req = match Request::from_json(frame) {
+            Ok(r) => r,
+            Err(e) => return err_response(&format!("{e:#}")),
+        };
+        match req {
+            Request::Submit { config, tag } => match self.scheduler.submit(config, &tag) {
+                Ok(id) => ok_response(vec![("id", json::num(id as f64))]),
+                Err(e) => err_response(&format!("{e:#}")),
+            },
+            Request::Status { id } => match self.registry.view(id) {
+                Some(v) => ok_response(vec![("job", v.to_json())]),
+                None => err_response(&format!("no job {id}")),
+            },
+            Request::Result { id } => {
+                let Some(view) = self.registry.view(id) else {
+                    return err_response(&format!("no job {id}"));
+                };
+                match self.registry.result_of(id) {
+                    Some((cfg, curve)) => ok_response(vec![
+                        ("job", view.to_json()),
+                        ("config", cfg.to_json()),
+                        ("curve", curve.to_json()),
+                    ]),
+                    None => err_response(&format!(
+                        "job {id} has no result yet (state '{}')",
+                        view.state.name()
+                    )),
+                }
+            }
+            Request::List => ok_response(vec![(
+                "jobs",
+                Json::Arr(self.registry.views().iter().map(|v| v.to_json()).collect()),
+            )]),
+            Request::Cancel { id } => match self.registry.cancel(id) {
+                // Queued jobs finalize immediately; running jobs stop at
+                // the next epoch boundary.
+                Ok(state) => ok_response(vec![(
+                    "state",
+                    json::s(match state {
+                        crate::serve::registry::JobState::Cancelled => "cancelled",
+                        _ => "cancelling",
+                    }),
+                )]),
+                Err(e) => err_response(&format!("{e:#}")),
+            },
+            Request::Metrics => self.metrics_response(),
+            Request::Ping => ok_response(vec![
+                ("protocol", json::num(PROTOCOL_VERSION as f64)),
+                ("uptime_s", json::num(self.uptime_s())),
+            ]),
+            Request::Shutdown => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                ok_response(vec![("state", json::s("shutting-down"))])
+            }
+        }
+    }
+
+    /// The `metrics` payload: queue/job counters, throughput, and the
+    /// per-policy FLOP-savings rollup from `aop::flops`.
+    fn metrics_response(&self) -> Json {
+        let counts = self.registry.counts();
+        let uptime = self.uptime_s();
+        // throughput of *this* process: jobs restored from a previous
+        // lifetime don't count toward the current uptime's rate
+        let done_here = counts.done.saturating_sub(self.registry.restored_count());
+        let jobs_per_sec = if uptime > 0.0 {
+            done_here as f64 / uptime
+        } else {
+            0.0
+        };
+        let policies: Vec<Json> = self
+            .registry
+            .rollup()
+            .iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("policy", json::s(r.policy.name())),
+                    ("jobs", json::num(r.jobs as f64)),
+                    ("backward_flops", json::num(r.backward_flops as f64)),
+                    ("exact_flops", json::num(r.exact_flops as f64)),
+                    ("saved_frac", json::num(r.saved_frac())),
+                ])
+            })
+            .collect();
+        ok_response(vec![
+            ("uptime_s", json::num(uptime)),
+            ("requests_total", json::num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("queue_depth", json::num(self.scheduler.queue_depth() as f64)),
+            ("workers", json::num(self.scheduler.worker_count() as f64)),
+            ("jobs_per_sec", json::num(jobs_per_sec)),
+            (
+                "jobs",
+                json::obj(vec![
+                    ("queued", json::num(counts.queued as f64)),
+                    ("running", json::num(counts.running as f64)),
+                    ("done", json::num(counts.done as f64)),
+                    ("failed", json::num(counts.failed as f64)),
+                    ("cancelled", json::num(counts.cancelled as f64)),
+                    ("total", json::num(counts.total() as f64)),
+                ]),
+            ),
+            ("policies", Json::Arr(policies)),
+        ])
+    }
+}
+
+/// Convenience used by the TCP layer: format a protocol-level read error
+/// (bad JSON on a line) as a response frame.
+pub fn frame_error(e: &anyhow::Error) -> Json {
+    protocol::err_response(&format!("{e:#}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aop::Policy;
+    use crate::coordinator::config::{ExperimentConfig, Task};
+    use crate::serve::protocol::is_ok;
+    use std::time::Duration;
+
+    fn state() -> ServerState {
+        let reg = Arc::new(Registry::new(None).unwrap());
+        let sched = Scheduler::start(reg.clone(), 2, 32);
+        ServerState::new(reg, sched)
+    }
+
+    fn quick_cfg(seed: u64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::preset(Task::Energy);
+        cfg.policy = Policy::TopK;
+        cfg.k = 18;
+        cfg.memory = true;
+        cfg.epochs = 2;
+        cfg.seed = seed;
+        cfg
+    }
+
+    fn submit_req(seed: u64) -> Json {
+        json::obj(vec![
+            ("op", json::s("submit")),
+            ("config", quick_cfg(seed).to_json()),
+            ("tag", json::s("unit")),
+        ])
+    }
+
+    fn wait_done(st: &ServerState, id: u64) -> Json {
+        let status = json::obj(vec![("op", json::s("status")), ("id", json::num(id as f64))]);
+        for _ in 0..2000 {
+            let resp = st.handle(&status);
+            assert!(is_ok(&resp), "{}", resp.dump());
+            let state = resp
+                .get("job")
+                .and_then(|j| j.get("state"))
+                .and_then(|s| s.as_str())
+                .unwrap()
+                .to_string();
+            if state == "done" || state == "failed" || state == "cancelled" {
+                return resp.get("job").unwrap().clone();
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        panic!("job {id} never finished");
+    }
+
+    #[test]
+    fn submit_status_result_roundtrip() {
+        let st = state();
+        let resp = st.handle(&submit_req(0));
+        assert!(is_ok(&resp), "{}", resp.dump());
+        let id = resp.get("id").unwrap().as_f64().unwrap() as u64;
+        let job = wait_done(&st, id);
+        assert_eq!(job.get("state").unwrap().as_str().unwrap(), "done");
+        assert_eq!(job.get("tag").unwrap().as_str().unwrap(), "unit");
+
+        let result = st.handle(&json::obj(vec![
+            ("op", json::s("result")),
+            ("id", json::num(id as f64)),
+        ]));
+        assert!(is_ok(&result));
+        let curve = result.get("curve").unwrap();
+        assert_eq!(curve.get("epochs").unwrap().as_arr().unwrap().len(), 2);
+        // decoded config matches what was submitted
+        let cfg = ExperimentConfig::from_json(result.get("config").unwrap()).unwrap();
+        assert_eq!(cfg.seed, 0);
+        assert_eq!(cfg.policy, Policy::TopK);
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn errors_are_envelopes_not_panics() {
+        let st = state();
+        // bad op
+        let r = st.handle(&json::obj(vec![("op", json::s("explode"))]));
+        assert!(!is_ok(&r));
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("unknown op"));
+        // unknown job
+        let r = st.handle(&json::obj(vec![("op", json::s("status")), ("id", json::num(77))]));
+        assert!(!is_ok(&r));
+        // result before completion / for missing job
+        let r = st.handle(&json::obj(vec![("op", json::s("result")), ("id", json::num(77))]));
+        assert!(!is_ok(&r));
+        // malformed submit
+        let r = st.handle(&json::obj(vec![("op", json::s("submit"))]));
+        assert!(!is_ok(&r));
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn list_metrics_and_shutdown_flag() {
+        let st = state();
+        let a = st.handle(&submit_req(1));
+        let b = st.handle(&submit_req(2));
+        let ida = a.get("id").unwrap().as_f64().unwrap() as u64;
+        let idb = b.get("id").unwrap().as_f64().unwrap() as u64;
+        wait_done(&st, ida);
+        wait_done(&st, idb);
+
+        let list = st.handle(&json::obj(vec![("op", json::s("list"))]));
+        assert!(is_ok(&list));
+        assert_eq!(list.get("jobs").unwrap().as_arr().unwrap().len(), 2);
+
+        let m = st.handle(&json::obj(vec![("op", json::s("metrics"))]));
+        assert!(is_ok(&m), "{}", m.dump());
+        let jobs = m.get("jobs").unwrap();
+        assert_eq!(jobs.get("done").unwrap().as_usize().unwrap(), 2);
+        let pols = m.get("policies").unwrap().as_arr().unwrap();
+        assert_eq!(pols.len(), 1);
+        assert_eq!(pols[0].get("policy").unwrap().as_str().unwrap(), "topk");
+        // topk K=18 of M=144 ⇒ 7/8 of the backward FLOPs saved
+        let saved = pols[0].get("saved_frac").unwrap().as_f64().unwrap();
+        assert!((saved - 0.875).abs() < 1e-9, "{saved}");
+
+        assert!(!st.shutdown_requested());
+        let s = st.handle(&json::obj(vec![("op", json::s("shutdown"))]));
+        assert!(is_ok(&s));
+        assert_eq!(s.get("state").unwrap().as_str().unwrap(), "shutting-down");
+        assert!(st.shutdown_requested());
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn ping_reports_protocol() {
+        let st = state();
+        let p = st.handle(&json::obj(vec![("op", json::s("ping"))]));
+        assert!(is_ok(&p));
+        assert_eq!(
+            p.get("protocol").unwrap().as_usize().unwrap() as u64,
+            PROTOCOL_VERSION
+        );
+        st.scheduler.shutdown();
+    }
+}

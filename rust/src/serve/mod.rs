@@ -1,0 +1,40 @@
+//! Trainer-as-a-service: a long-lived TCP server multiplexing Mem-AOP-GD
+//! training jobs over the coordinator's worker pool.
+//!
+//! The paper's economics — approximate the outer-product gradient, bank
+//! the residual in memory, spend a fraction of the FLOPs — pay off when
+//! *many* cheap runs share hardware. This subsystem turns the one-shot
+//! CLI coordinator into that shared service:
+//!
+//! * [`protocol`] — newline-delimited JSON over TCP (`submit` / `status` /
+//!   `result` / `list` / `cancel` / `metrics` / `ping` / `shutdown`),
+//!   plus the blocking [`Client`] used by `examples/serve_client.rs`;
+//! * [`registry`] — the authoritative job table
+//!   (`queued → running → done | failed | cancelled`), persisted through
+//!   `coordinator::checkpoint` so completed runs survive restarts;
+//! * [`queue`] — bounded FIFO + fixed worker pool driving
+//!   `experiment::run_with` with per-epoch progress streaming and
+//!   epoch-boundary cancellation; graceful shutdown drains every accepted
+//!   job;
+//! * [`handlers`] — socket-free request dispatch ([`ServerState`]);
+//! * [`server`] — the accept loop ([`Server`] / [`ServeOptions`]).
+//!
+//! Determinism is preserved end-to-end: a job's curve is bit-identical to
+//! a direct [`experiment::run`](crate::coordinator::experiment::run) of
+//! the same config, which `rust/tests/serve.rs` asserts seed-for-seed.
+//!
+//! Start one with `repro serve --addr 127.0.0.1:7070 --registry-dir runs`
+//! and drive it with `cargo run --example serve_client` (see README.md
+//! for the wire schema and an example session).
+
+pub mod handlers;
+pub mod protocol;
+pub mod queue;
+pub mod registry;
+pub mod server;
+
+pub use handlers::ServerState;
+pub use protocol::{Client, PROTOCOL_VERSION};
+pub use queue::Scheduler;
+pub use registry::{JobState, JobView, Registry};
+pub use server::{ServeOptions, Server};

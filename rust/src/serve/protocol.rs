@@ -1,0 +1,360 @@
+//! Wire protocol of the training-job server: newline-delimited JSON over
+//! TCP (one request object per line, one response object per line, using
+//! the in-tree `util::json` — no external dependencies).
+//!
+//! Requests are `{"op": <name>, ...}` objects:
+//!
+//! | op         | fields                      | response payload                   |
+//! |------------|-----------------------------|------------------------------------|
+//! | `submit`   | `config` (experiment JSON), | `id` — job id                      |
+//! |            | `tag` (optional)            |                                    |
+//! | `status`   | `id`                        | `job` — job view                   |
+//! | `result`   | `id`                        | `job`, `config`, `curve`           |
+//! | `list`     | —                           | `jobs` — array of job views        |
+//! | `cancel`   | `id`                        | `state` — `cancelled`/`cancelling` |
+//! | `metrics`  | —                           | queue/job/FLOP metrics             |
+//! | `ping`     | —                           | `protocol`, `uptime_s`             |
+//! | `shutdown` | —                           | `state: shutting-down`             |
+//!
+//! Every response carries `"ok": true` or `"ok": false` + `"error"`.
+//! The `config` object is exactly `ExperimentConfig::to_json` (task,
+//! policy, k, memory, epochs, lr, schedule, seed, backend, data_scale);
+//! the `curve` object is `RunCurve::to_json` (per-epoch losses, accuracy,
+//! memory mass, cumulative backward FLOPs from `aop::flops`).
+//!
+//! [`Client`] is a small blocking client used by `examples/serve_client.rs`
+//! and the integration tests.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::config::ExperimentConfig;
+use crate::metrics::RunCurve;
+use crate::util::json::{self, Json};
+
+/// Version stamp reported by `ping` (bump on wire-format changes).
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// A parsed client request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Submit { config: ExperimentConfig, tag: String },
+    Status { id: u64 },
+    Result { id: u64 },
+    List,
+    Cancel { id: u64 },
+    Metrics,
+    Ping,
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one request frame; errors are protocol-level (reported back
+    /// to the client as `ok:false`, never closing the connection).
+    pub fn from_json(v: &Json) -> Result<Request> {
+        let op = v
+            .get("op")
+            .and_then(|o| o.as_str())
+            .ok_or_else(|| anyhow!("missing string field 'op'"))?;
+        let id = || -> Result<u64> {
+            v.get("id")
+                .and_then(|n| n.as_f64())
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .map(|n| n as u64)
+                .ok_or_else(|| anyhow!("op '{op}' requires an integer 'id' field"))
+        };
+        Ok(match op {
+            "submit" => {
+                let cfg = v
+                    .get("config")
+                    .ok_or_else(|| anyhow!("submit requires a 'config' object"))?;
+                let config = ExperimentConfig::from_json(cfg)
+                    .map_err(|e| anyhow!("bad config: {e:#}"))?;
+                let tag = v
+                    .get("tag")
+                    .and_then(|t| t.as_str())
+                    .unwrap_or("")
+                    .to_string();
+                Request::Submit { config, tag }
+            }
+            "status" => Request::Status { id: id()? },
+            "result" => Request::Result { id: id()? },
+            "list" => Request::List,
+            "cancel" => Request::Cancel { id: id()? },
+            "metrics" => Request::Metrics,
+            "ping" => Request::Ping,
+            "shutdown" => Request::Shutdown,
+            other => bail!(
+                "unknown op '{other}' (expected one of: submit, status, result, \
+                 list, cancel, metrics, ping, shutdown)"
+            ),
+        })
+    }
+}
+
+/// `{"ok": true, ...fields}`.
+pub fn ok_response(mut fields: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![("ok", Json::Bool(true))];
+    pairs.append(&mut fields);
+    json::obj(pairs)
+}
+
+/// `{"ok": false, "error": msg}`.
+pub fn err_response(msg: &str) -> Json {
+    json::obj(vec![("ok", Json::Bool(false)), ("error", json::s(msg))])
+}
+
+/// Whether a response frame reports success.
+pub fn is_ok(v: &Json) -> bool {
+    v.get("ok").and_then(|b| b.as_bool()) == Some(true)
+}
+
+/// Write one frame (compact JSON + `\n`) and flush.
+pub fn write_json<W: Write>(w: &mut W, v: &Json) -> std::io::Result<()> {
+    let mut line = v.dump();
+    line.push('\n');
+    w.write_all(line.as_bytes())?;
+    w.flush()
+}
+
+/// Read one frame; `Ok(None)` on clean EOF. Blank lines are skipped.
+pub fn read_json<R: BufRead>(r: &mut R) -> Result<Option<Json>> {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = r.read_line(&mut line).context("reading frame")?;
+        if n == 0 {
+            return Ok(None);
+        }
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        return json::parse(t)
+            .map(Some)
+            .map_err(|e| anyhow!("bad json frame: {e}"));
+    }
+}
+
+/// Blocking protocol client (one TCP connection, serial request/response).
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+        Ok(Client {
+            writer: stream,
+            reader,
+        })
+    }
+
+    /// Send one frame and read the response (no `ok` check).
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        write_json(&mut self.writer, req).context("sending request")?;
+        read_json(&mut self.reader)?
+            .ok_or_else(|| anyhow!("server closed the connection"))
+    }
+
+    fn call_ok(&mut self, req: &Json) -> Result<Json> {
+        let resp = self.call(req)?;
+        if !is_ok(&resp) {
+            bail!(
+                "server error: {}",
+                resp.get("error")
+                    .and_then(|e| e.as_str())
+                    .unwrap_or("<no message>")
+            );
+        }
+        Ok(resp)
+    }
+
+    pub fn ping(&mut self) -> Result<Json> {
+        self.call_ok(&json::obj(vec![("op", json::s("ping"))]))
+    }
+
+    /// Submit a job; returns its id.
+    pub fn submit(&mut self, cfg: &ExperimentConfig, tag: &str) -> Result<u64> {
+        let req = json::obj(vec![
+            ("op", json::s("submit")),
+            ("config", cfg.to_json()),
+            ("tag", json::s(tag)),
+        ]);
+        let resp = self.call_ok(&req)?;
+        resp.get("id")
+            .and_then(|n| n.as_f64())
+            .map(|n| n as u64)
+            .ok_or_else(|| anyhow!("submit response missing 'id'"))
+    }
+
+    /// Job view for one id.
+    pub fn status(&mut self, id: u64) -> Result<Json> {
+        let req = json::obj(vec![("op", json::s("status")), ("id", json::num(id as f64))]);
+        let resp = self.call_ok(&req)?;
+        resp.get("job")
+            .cloned()
+            .ok_or_else(|| anyhow!("status response missing 'job'"))
+    }
+
+    /// Poll until the job reaches a terminal state; returns the final view.
+    pub fn wait(&mut self, id: u64, timeout: Duration) -> Result<Json> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let job = self.status(id)?;
+            let state = job
+                .get("state")
+                .and_then(|s| s.as_str())
+                .unwrap_or("")
+                .to_string();
+            if matches!(state.as_str(), "done" | "failed" | "cancelled") {
+                return Ok(job);
+            }
+            if Instant::now() > deadline {
+                bail!("timed out waiting for job {id} (last state '{state}')");
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Fetch a completed job's config + loss curve.
+    pub fn result(&mut self, id: u64) -> Result<(ExperimentConfig, RunCurve)> {
+        let req = json::obj(vec![("op", json::s("result")), ("id", json::num(id as f64))]);
+        let resp = self.call_ok(&req)?;
+        let cfg = ExperimentConfig::from_json(
+            resp.get("config")
+                .ok_or_else(|| anyhow!("result response missing 'config'"))?,
+        )?;
+        let curve = RunCurve::from_json(
+            resp.get("curve")
+                .ok_or_else(|| anyhow!("result response missing 'curve'"))?,
+        )?;
+        Ok((cfg, curve))
+    }
+
+    /// All job views.
+    pub fn list(&mut self) -> Result<Vec<Json>> {
+        let resp = self.call_ok(&json::obj(vec![("op", json::s("list"))]))?;
+        Ok(resp
+            .get("jobs")
+            .and_then(|a| a.as_arr())
+            .unwrap_or(&[])
+            .to_vec())
+    }
+
+    /// Cancel a job; returns `cancelled` (was queued) or `cancelling`
+    /// (running — takes effect at the next epoch boundary).
+    pub fn cancel(&mut self, id: u64) -> Result<String> {
+        let req = json::obj(vec![("op", json::s("cancel")), ("id", json::num(id as f64))]);
+        let resp = self.call_ok(&req)?;
+        Ok(resp
+            .get("state")
+            .and_then(|s| s.as_str())
+            .unwrap_or("")
+            .to_string())
+    }
+
+    /// Server metrics snapshot.
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.call_ok(&json::obj(vec![("op", json::s("metrics"))]))
+    }
+
+    /// Ask the server to shut down gracefully.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.call_ok(&json::obj(vec![("op", json::s("shutdown"))]))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::Task;
+
+    #[test]
+    fn parses_every_op() {
+        let cfg = ExperimentConfig::preset(Task::Energy);
+        let submit = json::obj(vec![
+            ("op", json::s("submit")),
+            ("config", cfg.to_json()),
+            ("tag", json::s("t1")),
+        ]);
+        match Request::from_json(&submit).unwrap() {
+            Request::Submit { config, tag } => {
+                assert_eq!(config.task, Task::Energy);
+                assert_eq!(tag, "t1");
+            }
+            other => panic!("{other:?}"),
+        }
+        for (op, want_id) in [
+            ("status", true),
+            ("result", true),
+            ("cancel", true),
+            ("list", false),
+            ("metrics", false),
+            ("ping", false),
+            ("shutdown", false),
+        ] {
+            let mut pairs = vec![("op", json::s(op))];
+            if want_id {
+                pairs.push(("id", json::num(7.0)));
+            }
+            assert!(
+                Request::from_json(&json::obj(pairs)).is_ok(),
+                "op {op} failed"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(Request::from_json(&json::obj(vec![])).is_err());
+        assert!(Request::from_json(&json::obj(vec![("op", json::s("bogus"))])).is_err());
+        // id required
+        assert!(Request::from_json(&json::obj(vec![("op", json::s("status"))])).is_err());
+        // fractional id rejected
+        assert!(Request::from_json(&json::obj(vec![
+            ("op", json::s("status")),
+            ("id", json::num(1.5)),
+        ]))
+        .is_err());
+        // submit without config
+        assert!(Request::from_json(&json::obj(vec![("op", json::s("submit"))])).is_err());
+        // submit with invalid config (k out of range)
+        let mut cfg = ExperimentConfig::preset(Task::Energy);
+        cfg.k = 0;
+        let bad = json::obj(vec![("op", json::s("submit")), ("config", cfg.to_json())]);
+        let err = Request::from_json(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("bad config"), "{err:#}");
+    }
+
+    #[test]
+    fn response_envelopes() {
+        let ok = ok_response(vec![("id", json::num(3.0))]);
+        assert!(is_ok(&ok));
+        assert_eq!(ok.get("id").unwrap().as_usize().unwrap(), 3);
+        let err = err_response("nope");
+        assert!(!is_ok(&err));
+        assert_eq!(err.get("error").unwrap().as_str().unwrap(), "nope");
+    }
+
+    #[test]
+    fn frame_io_roundtrip() {
+        let mut buf = Vec::new();
+        write_json(&mut buf, &ok_response(vec![("x", json::num(1.0))])).unwrap();
+        write_json(&mut buf, &err_response("bad")).unwrap();
+        let mut r = std::io::BufReader::new(&buf[..]);
+        let a = read_json(&mut r).unwrap().unwrap();
+        assert!(is_ok(&a));
+        let b = read_json(&mut r).unwrap().unwrap();
+        assert!(!is_ok(&b));
+        assert!(read_json(&mut r).unwrap().is_none()); // EOF
+    }
+}

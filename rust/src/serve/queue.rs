@@ -1,0 +1,218 @@
+//! Bounded job scheduler: a fixed pool of worker threads draining a
+//! FIFO queue of registry job ids.
+//!
+//! The design mirrors `util::pool`'s scoped workers but for a long-lived
+//! service: workers block on a condvar, pop ids in submission order, and
+//! drive [`experiment::run_with`](crate::coordinator::experiment::run_with)
+//! with an observer that streams per-epoch progress into the registry and
+//! honours cancellation at epoch boundaries. Submission is bounded — a
+//! full queue rejects rather than buffering without limit — and
+//! [`Scheduler::shutdown`] is graceful: it drains every queued job, then
+//! joins the workers, so no accepted job is ever dropped.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::config::ExperimentConfig;
+use crate::coordinator::experiment;
+use crate::serve::registry::Registry;
+
+/// Worker pool + bounded FIFO of job ids.
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    n_workers: usize,
+}
+
+struct Shared {
+    registry: Arc<Registry>,
+    queue: Mutex<VecDeque<u64>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    capacity: usize,
+}
+
+impl Scheduler {
+    /// Spawn `workers` (≥1) threads over `registry`, with at most
+    /// `capacity` (≥1) jobs queued at any time.
+    pub fn start(registry: Arc<Registry>, workers: usize, capacity: usize) -> Scheduler {
+        let n_workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            registry,
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            capacity: capacity.max(1),
+        });
+        let handles = (0..n_workers)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawning scheduler worker")
+            })
+            .collect();
+        Scheduler {
+            shared,
+            workers: Mutex::new(handles),
+            n_workers,
+        }
+    }
+
+    /// Register and enqueue a job; rejects when shutting down or full.
+    pub fn submit(&self, config: ExperimentConfig, tag: &str) -> Result<u64> {
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            bail!("server is shutting down, not accepting jobs");
+        }
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.len() >= self.shared.capacity {
+            bail!(
+                "job queue full ({} queued, capacity {})",
+                q.len(),
+                self.shared.capacity
+            );
+        }
+        let id = self.shared.registry.submit(config, tag);
+        q.push_back(id);
+        self.shared.cv.notify_one();
+        Ok(id)
+    }
+
+    /// Jobs currently waiting for a worker.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Graceful shutdown: refuse new submissions, drain every queued job,
+    /// join the workers. Idempotent.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    loop {
+        let id = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(id) = q.pop_front() {
+                    break Some(id);
+                }
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        let Some(id) = id else { return };
+        run_job(sh, id);
+    }
+}
+
+/// Execute one job end-to-end, streaming progress into the registry.
+fn run_job(sh: &Shared, id: u64) {
+    // Cancelled-while-queued jobs are finalized inside mark_running.
+    let Some((cfg, cancel)) = sh.registry.mark_running(id) else {
+        return;
+    };
+    let registry = &sh.registry;
+    // Classify by whether the run actually stopped early, not by the
+    // cancel flag at finish time: a cancel that lands after the final
+    // epoch arrived too late — the run completed and must be recorded
+    // (and persisted) as done, and a genuine failure keeps its error.
+    let mut stopped_early = false;
+    let result = experiment::run_with(&cfg, &mut |m| {
+        registry.update_progress(id, m.epoch);
+        if cancel.load(Ordering::Relaxed) {
+            stopped_early = true;
+            return false;
+        }
+        true
+    });
+    match result {
+        Ok(r) if stopped_early => registry.finish_cancelled(id, Some(&r)),
+        Ok(r) => registry.finish_ok(id, &r),
+        Err(e) => registry.finish_err(id, format!("{e:#}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aop::Policy;
+    use crate::coordinator::config::{ExperimentConfig, Task};
+    use crate::serve::registry::JobState;
+
+    fn quick_cfg(seed: u64, policy: Policy) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::preset(Task::Energy);
+        cfg.policy = policy;
+        cfg.k = if policy == Policy::Exact { cfg.m() } else { 9 };
+        cfg.memory = policy != Policy::Exact;
+        cfg.epochs = 2;
+        cfg.seed = seed;
+        cfg
+    }
+
+    #[test]
+    fn drains_all_jobs_on_shutdown_without_drops() {
+        let reg = Arc::new(Registry::new(None).unwrap());
+        let sched = Scheduler::start(reg.clone(), 3, 64);
+        let mut ids = Vec::new();
+        for (i, p) in [Policy::Exact, Policy::TopK, Policy::RandK, Policy::WeightedK]
+            .iter()
+            .cycle()
+            .take(10)
+            .enumerate()
+        {
+            ids.push(sched.submit(quick_cfg(i as u64, *p), "drain").unwrap());
+        }
+        // immediate graceful shutdown: every accepted job still completes
+        sched.shutdown();
+        for id in ids {
+            let v = reg.view(id).unwrap();
+            assert_eq!(v.state, JobState::Done, "job {id}");
+            assert_eq!(v.epochs_done, 2, "job {id}");
+        }
+        assert_eq!(sched.queue_depth(), 0);
+        // post-shutdown submissions are refused
+        assert!(sched.submit(quick_cfg(99, Policy::TopK), "").is_err());
+    }
+
+    #[test]
+    fn capacity_bounds_the_queue() {
+        let reg = Arc::new(Registry::new(None).unwrap());
+        // exercise the bound directly: fill faster than 1 worker can
+        // drain a deliberately slow first job
+        let sched = Scheduler::start(reg.clone(), 1, 2);
+        let mut slow = quick_cfg(0, Policy::TopK);
+        slow.task = Task::Mnist;
+        slow.k = 16;
+        slow.data_scale = 0.05;
+        slow.epochs = 10;
+        sched.submit(slow, "slow").unwrap();
+        // fill the queue behind the slow job; the bound must kick in
+        let mut rejected = false;
+        for i in 0..8 {
+            if sched.submit(quick_cfg(i, Policy::RandK), "").is_err() {
+                rejected = true;
+                break;
+            }
+        }
+        assert!(rejected, "queue accepted unbounded submissions");
+        sched.shutdown();
+    }
+}

@@ -1,0 +1,523 @@
+//! Run registry: the server's authoritative table of jobs and results.
+//!
+//! Every submitted job lives here through its whole lifecycle
+//! (`queued → running → done | failed | cancelled`); the scheduler
+//! transitions states, connection handlers read views. Completed runs are
+//! persisted through [`coordinator::checkpoint`](crate::coordinator::checkpoint)
+//! — one `job_<id>.maop` file per run holding the config + curve (as
+//! rank-3 JSON bytes entries) next to the final weights — so a restarted
+//! server reloads its history and keeps allocating fresh ids above it.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::aop::{flops, Policy};
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::config::ExperimentConfig;
+use crate::coordinator::experiment::RunResult;
+use crate::metrics::RunCurve;
+use crate::util::json::{self, Json};
+
+/// Lifecycle state of one job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// Internal job record.
+struct Job {
+    tag: String,
+    config: ExperimentConfig,
+    state: JobState,
+    epochs_done: usize,
+    error: Option<String>,
+    curve: Option<RunCurve>,
+    cancel: Arc<AtomicBool>,
+    restored: bool,
+}
+
+/// Read-only snapshot of a job, served to protocol clients.
+#[derive(Debug, Clone)]
+pub struct JobView {
+    pub id: u64,
+    pub tag: String,
+    pub state: JobState,
+    pub epochs_done: usize,
+    pub epochs_total: usize,
+    pub error: Option<String>,
+    pub cancel_requested: bool,
+    pub restored: bool,
+    pub config: ExperimentConfig,
+}
+
+impl JobView {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("id", json::num(self.id as f64)),
+            ("tag", json::s(&self.tag)),
+            ("label", json::s(&self.config.label())),
+            ("task", json::s(self.config.task.name())),
+            ("policy", json::s(self.config.policy.name())),
+            ("backend", json::s(self.config.backend.name())),
+            ("k", json::num(self.config.k as f64)),
+            ("seed", json::num(self.config.seed as f64)),
+            ("state", json::s(self.state.name())),
+            ("epochs_done", json::num(self.epochs_done as f64)),
+            ("epochs_total", json::num(self.epochs_total as f64)),
+            ("cancel_requested", Json::Bool(self.cancel_requested)),
+            ("restored", Json::Bool(self.restored)),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => json::s(e),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// Per-state job counts for the metrics endpoint.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StateCounts {
+    pub queued: u64,
+    pub running: u64,
+    pub done: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+}
+
+impl StateCounts {
+    pub fn total(&self) -> u64 {
+        self.queued + self.running + self.done + self.failed + self.cancelled
+    }
+}
+
+/// Per-policy FLOP accounting over completed jobs (`aop::flops` model).
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyRollup {
+    pub policy: Policy,
+    pub jobs: u64,
+    /// Backward weight-gradient FLOPs actually spent (from the curves).
+    pub backward_flops: u64,
+    /// What exact back-propagation would have spent on the same steps.
+    pub exact_flops: u64,
+}
+
+impl PolicyRollup {
+    pub fn saved_frac(&self) -> f64 {
+        if self.exact_flops == 0 {
+            0.0
+        } else {
+            1.0 - self.backward_flops as f64 / self.exact_flops as f64
+        }
+    }
+}
+
+/// The registry proper. All methods take `&self`; internal locking keeps
+/// it shareable across the scheduler and connection threads via `Arc`.
+pub struct Registry {
+    jobs: Mutex<BTreeMap<u64, Job>>,
+    next_id: AtomicU64,
+    dir: Option<PathBuf>,
+}
+
+impl Registry {
+    /// In-memory registry, optionally persisted under `dir` (created if
+    /// missing; existing `job_*.maop` files are reloaded as done jobs).
+    pub fn new(dir: Option<PathBuf>) -> Result<Registry> {
+        let mut jobs = BTreeMap::new();
+        let mut max_id = 0u64;
+        if let Some(d) = &dir {
+            std::fs::create_dir_all(d)
+                .with_context(|| format!("creating registry dir {}", d.display()))?;
+            for entry in std::fs::read_dir(d)
+                .with_context(|| format!("reading registry dir {}", d.display()))?
+            {
+                let path = entry?.path();
+                let Some(id) = job_id_of(&path) else { continue };
+                // count the id even if the file is unreadable, so a
+                // corrupt run can never get its id reused (and its file
+                // silently overwritten) by a new job
+                max_id = max_id.max(id);
+                match load_job_file(&path) {
+                    Ok(job) => {
+                        jobs.insert(id, job);
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "[serve] skipping unreadable run file {}: {e:#}",
+                            path.display()
+                        );
+                    }
+                }
+            }
+        }
+        Ok(Registry {
+            jobs: Mutex::new(jobs),
+            next_id: AtomicU64::new(max_id + 1),
+            dir,
+        })
+    }
+
+    /// Register a new queued job; returns its id.
+    pub fn submit(&self, config: ExperimentConfig, tag: &str) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let job = Job {
+            tag: tag.to_string(),
+            config,
+            state: JobState::Queued,
+            epochs_done: 0,
+            error: None,
+            curve: None,
+            cancel: Arc::new(AtomicBool::new(false)),
+            restored: false,
+        };
+        self.jobs.lock().unwrap().insert(id, job);
+        id
+    }
+
+    /// Transition a queued job to running; returns its config and cancel
+    /// flag. `None` if the job was cancelled while queued (the state is
+    /// finalized to `Cancelled` here) or is not in the queued state.
+    pub fn mark_running(&self, id: u64) -> Option<(ExperimentConfig, Arc<AtomicBool>)> {
+        let mut jobs = self.jobs.lock().unwrap();
+        let job = jobs.get_mut(&id)?;
+        if job.state != JobState::Queued {
+            return None;
+        }
+        if job.cancel.load(Ordering::Relaxed) {
+            job.state = JobState::Cancelled;
+            return None;
+        }
+        job.state = JobState::Running;
+        Some((job.config.clone(), job.cancel.clone()))
+    }
+
+    /// Record per-epoch progress (called from the worker's observer).
+    pub fn update_progress(&self, id: u64, epochs_done: usize) {
+        if let Some(job) = self.jobs.lock().unwrap().get_mut(&id) {
+            job.epochs_done = epochs_done;
+        }
+    }
+
+    /// Request cancellation. Queued jobs are finalized immediately;
+    /// running jobs stop at the next epoch boundary. Terminal jobs error.
+    pub fn cancel(&self, id: u64) -> Result<JobState> {
+        let mut jobs = self.jobs.lock().unwrap();
+        let job = jobs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("no job {id}"))?;
+        match job.state {
+            JobState::Queued => {
+                job.cancel.store(true, Ordering::Relaxed);
+                job.state = JobState::Cancelled;
+                Ok(JobState::Cancelled)
+            }
+            JobState::Running => {
+                job.cancel.store(true, Ordering::Relaxed);
+                Ok(JobState::Running)
+            }
+            s => bail!("job {id} already {}", s.name()),
+        }
+    }
+
+    /// Finalize a successful run and persist it (best-effort; persistence
+    /// failures are logged, never fail the job).
+    pub fn finish_ok(&self, id: u64, r: &RunResult) {
+        let persist = {
+            let mut jobs = self.jobs.lock().unwrap();
+            let Some(job) = jobs.get_mut(&id) else { return };
+            job.state = JobState::Done;
+            job.epochs_done = r.curve.epochs.len();
+            job.curve = Some(r.curve.clone());
+            job.error = None;
+            self.dir
+                .as_ref()
+                .map(|d| (d.join(job_file_name(id)), job.tag.clone()))
+        };
+        if let Some((path, tag)) = persist {
+            if let Err(e) = persist_job(&path, id, &tag, r) {
+                eprintln!("[serve] persisting job {id} failed: {e:#}");
+            }
+        }
+    }
+
+    /// Finalize a failed run.
+    pub fn finish_err(&self, id: u64, msg: String) {
+        if let Some(job) = self.jobs.lock().unwrap().get_mut(&id) {
+            job.state = JobState::Failed;
+            job.error = Some(msg);
+        }
+    }
+
+    /// Finalize a cancelled run; a partial curve (epochs completed before
+    /// the cancellation took effect) is kept for inspection.
+    pub fn finish_cancelled(&self, id: u64, partial: Option<&RunResult>) {
+        if let Some(job) = self.jobs.lock().unwrap().get_mut(&id) {
+            job.state = JobState::Cancelled;
+            if let Some(r) = partial {
+                job.epochs_done = r.curve.epochs.len();
+                job.curve = Some(r.curve.clone());
+            }
+        }
+    }
+
+    /// Snapshot of one job.
+    pub fn view(&self, id: u64) -> Option<JobView> {
+        let jobs = self.jobs.lock().unwrap();
+        jobs.get(&id).map(|j| view_of(id, j))
+    }
+
+    /// Snapshot of every job, in id order.
+    pub fn views(&self) -> Vec<JobView> {
+        let jobs = self.jobs.lock().unwrap();
+        jobs.iter().map(|(id, j)| view_of(*id, j)).collect()
+    }
+
+    /// Config + curve of a job that has one (done, or cancelled mid-run).
+    pub fn result_of(&self, id: u64) -> Option<(ExperimentConfig, RunCurve)> {
+        let jobs = self.jobs.lock().unwrap();
+        let job = jobs.get(&id)?;
+        job.curve
+            .as_ref()
+            .map(|c| (job.config.clone(), c.clone()))
+    }
+
+    /// Jobs restored from disk at startup (completed in a *previous*
+    /// server lifetime — excluded from this process's throughput).
+    pub fn restored_count(&self) -> u64 {
+        let jobs = self.jobs.lock().unwrap();
+        jobs.values().filter(|j| j.restored).count() as u64
+    }
+
+    /// Per-state counts.
+    pub fn counts(&self) -> StateCounts {
+        let jobs = self.jobs.lock().unwrap();
+        let mut c = StateCounts::default();
+        for j in jobs.values() {
+            match j.state {
+                JobState::Queued => c.queued += 1,
+                JobState::Running => c.running += 1,
+                JobState::Done => c.done += 1,
+                JobState::Failed => c.failed += 1,
+                JobState::Cancelled => c.cancelled += 1,
+            }
+        }
+        c
+    }
+
+    /// Per-policy FLOP accounting over completed jobs. The exact-BP
+    /// equivalent comes from `aop::flops::exact_step` scaled by the
+    /// curve's recorded step count (0 steps ⇒ no claimed savings).
+    pub fn rollup(&self) -> Vec<PolicyRollup> {
+        let jobs = self.jobs.lock().unwrap();
+        let mut acc: BTreeMap<&'static str, PolicyRollup> = BTreeMap::new();
+        for j in jobs.values() {
+            let (JobState::Done, Some(curve)) = (j.state, j.curve.as_ref()) else {
+                continue;
+            };
+            let actual = curve.total_backward_flops();
+            let steps = curve.total_steps();
+            let (n, p) = j.config.task.dims();
+            let m = j.config.m();
+            let exact = if steps == 0 {
+                actual
+            } else {
+                flops::exact_step(m, n, p).backward_only() * steps
+            };
+            let e = acc.entry(j.config.policy.name()).or_insert(PolicyRollup {
+                policy: j.config.policy,
+                jobs: 0,
+                backward_flops: 0,
+                exact_flops: 0,
+            });
+            e.jobs += 1;
+            e.backward_flops += actual;
+            e.exact_flops += exact;
+        }
+        acc.into_values().collect()
+    }
+}
+
+fn view_of(id: u64, j: &Job) -> JobView {
+    JobView {
+        id,
+        tag: j.tag.clone(),
+        state: j.state,
+        epochs_done: j.epochs_done,
+        epochs_total: j.config.epochs,
+        error: j.error.clone(),
+        cancel_requested: j.cancel.load(Ordering::Relaxed),
+        restored: j.restored,
+        config: j.config.clone(),
+    }
+}
+
+fn job_file_name(id: u64) -> String {
+    format!("job_{id:08}.maop")
+}
+
+/// `job_<id>.maop` → id (None for unrelated files).
+fn job_id_of(path: &Path) -> Option<u64> {
+    let name = path.file_name()?.to_str()?;
+    name.strip_prefix("job_")?
+        .strip_suffix(".maop")?
+        .parse()
+        .ok()
+}
+
+fn persist_job(path: &Path, id: u64, tag: &str, r: &RunResult) -> Result<()> {
+    let mut cp = Checkpoint::new();
+    cp.put_scalar("id", id as f32);
+    cp.put_str("tag", tag);
+    cp.put_str("config_json", &r.config.to_json().dump());
+    cp.put_str("curve_json", &r.curve.to_json().dump());
+    cp.put_matrix("final_w", &r.final_w);
+    cp.put_vector("final_b", &r.final_b);
+    // write-then-rename so a crash mid-write can never leave a truncated
+    // run file at the final path (restart skips `.tmp` leftovers: they
+    // don't match the `job_<id>.maop` pattern)
+    let tmp = path.with_extension("maop.tmp");
+    cp.save(&tmp)?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing {}", path.display()))
+}
+
+fn load_job_file(path: &Path) -> Result<Job> {
+    let cp = Checkpoint::load(path)?;
+    let config = ExperimentConfig::from_json(&json::parse(cp.str_entry("config_json")?)?)?;
+    let curve = RunCurve::from_json(&json::parse(cp.str_entry("curve_json")?)?)?;
+    Ok(Job {
+        tag: cp.str_entry("tag")?.to_string(),
+        config,
+        state: JobState::Done,
+        epochs_done: curve.epochs.len(),
+        error: None,
+        curve: Some(curve),
+        cancel: Arc::new(AtomicBool::new(false)),
+        restored: true,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::Task;
+    use crate::coordinator::experiment;
+
+    fn quick_cfg(seed: u64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::preset(Task::Energy);
+        cfg.policy = Policy::TopK;
+        cfg.k = 18;
+        cfg.memory = true;
+        cfg.epochs = 3;
+        cfg.seed = seed;
+        cfg
+    }
+
+    #[test]
+    fn lifecycle_queued_running_done() {
+        let reg = Registry::new(None).unwrap();
+        let id = reg.submit(quick_cfg(0), "t");
+        assert_eq!(reg.view(id).unwrap().state, JobState::Queued);
+        let (cfg, _cancel) = reg.mark_running(id).unwrap();
+        assert_eq!(reg.view(id).unwrap().state, JobState::Running);
+        // double-start is refused
+        assert!(reg.mark_running(id).is_none());
+        reg.update_progress(id, 2);
+        assert_eq!(reg.view(id).unwrap().epochs_done, 2);
+        let r = experiment::run(&cfg).unwrap();
+        reg.finish_ok(id, &r);
+        let v = reg.view(id).unwrap();
+        assert_eq!(v.state, JobState::Done);
+        assert_eq!(v.epochs_done, 3);
+        let (_, curve) = reg.result_of(id).unwrap();
+        assert_eq!(curve.epochs.len(), 3);
+        assert_eq!(reg.counts().done, 1);
+        // terminal jobs can't be cancelled
+        assert!(reg.cancel(id).is_err());
+    }
+
+    #[test]
+    fn cancel_queued_is_immediate_and_skipped_by_workers() {
+        let reg = Registry::new(None).unwrap();
+        let id = reg.submit(quick_cfg(1), "");
+        assert_eq!(reg.cancel(id).unwrap(), JobState::Cancelled);
+        assert_eq!(reg.view(id).unwrap().state, JobState::Cancelled);
+        assert!(reg.mark_running(id).is_none());
+        assert!(reg.cancel(99).is_err());
+    }
+
+    #[test]
+    fn persistence_roundtrip_and_id_continuation() {
+        let dir = std::env::temp_dir().join(format!("memaop_reg_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = quick_cfg(7);
+        let r = experiment::run(&cfg).unwrap();
+        let first_id;
+        {
+            let reg = Registry::new(Some(dir.clone())).unwrap();
+            first_id = reg.submit(cfg.clone(), "persisted");
+            reg.mark_running(first_id).unwrap();
+            reg.finish_ok(first_id, &r);
+        }
+        // fresh registry over the same dir sees the run
+        let reg2 = Registry::new(Some(dir.clone())).unwrap();
+        let v = reg2.view(first_id).unwrap();
+        assert_eq!(v.state, JobState::Done);
+        assert!(v.restored);
+        assert_eq!(v.tag, "persisted");
+        let (cfg2, curve2) = reg2.result_of(first_id).unwrap();
+        assert_eq!(cfg2.label(), cfg.label());
+        assert_eq!(cfg2.seed, 7);
+        for (a, b) in curve2.epochs.iter().zip(r.curve.epochs.iter()) {
+            assert_eq!(a.val_loss, b.val_loss);
+            assert_eq!(a.backward_flops, b.backward_flops);
+        }
+        // new ids continue above the restored ones
+        let next = reg2.submit(quick_cfg(8), "");
+        assert!(next > first_id);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rollup_accounts_savings_per_policy() {
+        let reg = Registry::new(None).unwrap();
+        let cfg = quick_cfg(3); // topk, K=18 of M=144 → 1/8 of exact
+        let id = reg.submit(cfg.clone(), "");
+        let (cfg, _) = reg.mark_running(id).unwrap();
+        let r = experiment::run(&cfg).unwrap();
+        reg.finish_ok(id, &r);
+        let roll = reg.rollup();
+        assert_eq!(roll.len(), 1);
+        assert_eq!(roll[0].policy, Policy::TopK);
+        assert_eq!(roll[0].jobs, 1);
+        assert!(roll[0].exact_flops > roll[0].backward_flops);
+        assert!((roll[0].saved_frac() - 0.875).abs() < 1e-9, "{}", roll[0].saved_frac());
+    }
+}

@@ -1,0 +1,230 @@
+//! The TCP front door: accept loop, per-connection threads, graceful
+//! shutdown.
+//!
+//! One thread per connection reads newline-delimited JSON frames and
+//! answers through [`ServerState::handle`]; a malformed line gets an
+//! `ok:false` response and the connection stays open (framing is
+//! line-based, so the stream re-synchronizes at the next newline). The
+//! listener runs non-blocking so the accept loop can poll the shutdown
+//! flag set by the `shutdown` op; on shutdown it stops accepting, drains
+//! every queued job through [`Scheduler::shutdown`], and returns.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::serve::handlers::{frame_error, ServerState};
+use crate::serve::protocol;
+use crate::serve::queue::Scheduler;
+use crate::serve::registry::Registry;
+use crate::util::pool;
+
+/// Configuration of one server instance.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Listen address; port 0 picks an ephemeral port (tests, benches).
+    pub addr: String,
+    /// Training worker threads (0 = available parallelism).
+    pub workers: usize,
+    /// Max jobs waiting for a worker before submissions are rejected.
+    pub queue_capacity: usize,
+    /// Persist completed runs here (None = in-memory registry only).
+    pub registry_dir: Option<PathBuf>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:7070".to_string(),
+            workers: 0,
+            queue_capacity: 256,
+            registry_dir: None,
+        }
+    }
+}
+
+/// A bound (but not yet running) server.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+}
+
+impl Server {
+    /// Bind the listener, load/create the registry, start the scheduler.
+    pub fn bind(opts: &ServeOptions) -> Result<Server> {
+        let registry = Arc::new(Registry::new(opts.registry_dir.clone())?);
+        let workers = if opts.workers == 0 {
+            pool::default_workers()
+        } else {
+            opts.workers
+        };
+        let scheduler = Scheduler::start(registry.clone(), workers, opts.queue_capacity.max(1));
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding {}", opts.addr))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting listener non-blocking")?;
+        Ok(Server {
+            listener,
+            state: Arc::new(ServerState::new(registry, scheduler)),
+        })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("reading local addr")
+    }
+
+    /// Shared state handle (metrics inspection in tests and benches).
+    pub fn state(&self) -> Arc<ServerState> {
+        self.state.clone()
+    }
+
+    /// Serve until a client sends `shutdown`. Graceful: stops accepting,
+    /// then drains every queued job before returning — no accepted job is
+    /// ever dropped. Connection threads exit on client EOF.
+    pub fn run(self) -> Result<()> {
+        loop {
+            if self.state.shutdown_requested() {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    // accepted sockets must block: connection threads do
+                    // plain line-buffered reads
+                    stream
+                        .set_nonblocking(false)
+                        .context("setting connection blocking")?;
+                    let state = self.state.clone();
+                    std::thread::Builder::new()
+                        .name("serve-conn".to_string())
+                        .spawn(move || serve_connection(&state, stream))
+                        .context("spawning connection thread")?;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e).context("accepting connection"),
+            }
+        }
+        // Drain: every accepted job completes before we return. Open
+        // connections see submission errors and EOF once the process (or
+        // the caller holding the listener) goes away.
+        self.state.scheduler.shutdown();
+        Ok(())
+    }
+}
+
+/// Serve one connection until EOF. Never panics; I/O failures close the
+/// connection, request-level failures are `ok:false` responses.
+fn serve_connection(state: &ServerState, stream: TcpStream) {
+    stream.set_nodelay(true).ok();
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        match protocol::read_json(&mut reader) {
+            Ok(Some(frame)) => {
+                let resp = state.handle(&frame);
+                if protocol::write_json(&mut writer, &resp).is_err() {
+                    return;
+                }
+            }
+            // clean EOF: the client hung up
+            Ok(None) => return,
+            // bad JSON on one line: report and keep the connection — the
+            // next line is a fresh frame
+            Err(e) => {
+                if protocol::write_json(&mut writer, &frame_error(&e)).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aop::Policy;
+    use crate::coordinator::config::{ExperimentConfig, Task};
+    use crate::serve::protocol::Client;
+    use crate::util::json;
+
+    fn quick_cfg(seed: u64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::preset(Task::Energy);
+        cfg.policy = Policy::RandK;
+        cfg.k = 9;
+        cfg.memory = true;
+        cfg.epochs = 2;
+        cfg.seed = seed;
+        cfg
+    }
+
+    fn spawn_server() -> (String, std::thread::JoinHandle<Result<()>>) {
+        let opts = ServeOptions {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            queue_capacity: 16,
+            registry_dir: None,
+        };
+        let server = Server::bind(&opts).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || server.run());
+        (addr, handle)
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let (addr, handle) = spawn_server();
+        let mut c = Client::connect(&addr).unwrap();
+        let pong = c.ping().unwrap();
+        assert!(pong.get("protocol").is_some());
+
+        let id = c.submit(&quick_cfg(3), "tcp").unwrap();
+        let job = c.wait(id, Duration::from_secs(120)).unwrap();
+        assert_eq!(job.get("state").unwrap().as_str().unwrap(), "done");
+        let (cfg, curve) = c.result(id).unwrap();
+        assert_eq!(cfg.seed, 3);
+        assert_eq!(curve.epochs.len(), 2);
+
+        c.shutdown().unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn malformed_line_keeps_connection_alive() {
+        use std::io::{BufRead, Write};
+        let (addr, handle) = spawn_server();
+
+        // raw non-JSON line → error response, connection stays usable
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        raw.write_all(b"{{{ not json\n").unwrap();
+        let mut reader = BufReader::new(raw.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = json::parse(line.trim()).unwrap();
+        assert!(!crate::serve::protocol::is_ok(&resp));
+        // a valid frame on the same connection still works
+        raw.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(crate::serve::protocol::is_ok(&json::parse(line.trim()).unwrap()));
+        // a well-formed frame with a bad op is also just an envelope
+        raw.write_all(b"{\"op\":\"bogus\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(!crate::serve::protocol::is_ok(&json::parse(line.trim()).unwrap()));
+        drop(raw);
+
+        let mut c = Client::connect(&addr).unwrap();
+        c.shutdown().unwrap();
+        handle.join().unwrap().unwrap();
+    }
+}

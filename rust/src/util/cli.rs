@@ -113,7 +113,7 @@ impl Command {
         for o in &self.opts {
             let left = match &o.default {
                 None => format!("  --{}", o.name),
-                Some(d) if o.required => format!("  --{} <v> (required)", o.name),
+                Some(_) if o.required => format!("  --{} <v> (required)", o.name),
                 Some(d) if d.is_empty() => format!("  --{} <v>", o.name),
                 Some(d) => format!("  --{} <v> [{}]", o.name, d),
             };

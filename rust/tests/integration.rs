@@ -157,7 +157,13 @@ fn missing_manifest_is_reported() {
         Err(e) => e,
         Ok(_) => panic!("runtime built without manifest"),
     };
-    assert!(format!("{err:#}").contains("make artifacts"));
+    // actionable either way: the real client points at the artifact
+    // pipeline, the no-`hlo` stub at the missing feature/backend switch
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("make artifacts") || msg.contains("hlo"),
+        "{msg}"
+    );
     let _ = std::fs::remove_dir_all(&dst);
 }
 

@@ -1,0 +1,223 @@
+//! Integration tests for the serve subsystem: a real server on an
+//! ephemeral port, hammered over TCP by concurrent clients.
+//!
+//! Covers the PR acceptance criteria: concurrent submissions across every
+//! policy and both backends complete without drops or deadlocks, served
+//! loss curves are bit-identical to direct `experiment::run` calls of the
+//! same configs, and the persistent run registry survives a full server
+//! restart.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use mem_aop_gd::aop::Policy;
+use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig, Task};
+use mem_aop_gd::coordinator::experiment;
+use mem_aop_gd::metrics::RunCurve;
+use mem_aop_gd::serve::{Client, ServeOptions, Server};
+
+fn spawn_server(
+    workers: usize,
+    dir: Option<PathBuf>,
+) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let server = Server::bind(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        queue_capacity: 128,
+        registry_dir: dir,
+    })
+    .expect("bind server");
+    let addr = server.local_addr().expect("local addr").to_string();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+fn shutdown(addr: &str, handle: std::thread::JoinHandle<anyhow::Result<()>>) {
+    let mut c = Client::connect(addr).expect("connect for shutdown");
+    c.shutdown().expect("shutdown op");
+    handle.join().expect("server thread").expect("server run");
+}
+
+/// 5-policy native job mix (seed = index), 3 epochs of the energy task.
+fn native_cfg(i: usize) -> ExperimentConfig {
+    let policies = Policy::all();
+    let p = policies[i % policies.len()];
+    let mut cfg = ExperimentConfig::preset(Task::Energy);
+    cfg.policy = p;
+    cfg.memory = p != Policy::Exact;
+    cfg.k = if p == Policy::Exact { cfg.m() } else { [18, 9][i % 2] };
+    cfg.epochs = 3;
+    cfg.seed = i as u64;
+    cfg.backend = Backend::Native;
+    cfg
+}
+
+fn assert_bit_identical(served: &RunCurve, direct: &RunCurve, what: &str) {
+    assert_eq!(served.epochs.len(), direct.epochs.len(), "{what}: length");
+    assert_eq!(served.label, direct.label, "{what}: label");
+    for (e, (a, b)) in served.epochs.iter().zip(&direct.epochs).enumerate() {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{what} ep{e}");
+        assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits(), "{what} ep{e}");
+        assert_eq!(a.val_acc.to_bits(), b.val_acc.to_bits(), "{what} ep{e}");
+        assert_eq!(a.wstar_fro.to_bits(), b.wstar_fro.to_bits(), "{what} ep{e}");
+        assert_eq!(a.mem_fro.to_bits(), b.mem_fro.to_bits(), "{what} ep{e}");
+        assert_eq!(a.backward_flops, b.backward_flops, "{what} ep{e}");
+    }
+}
+
+#[test]
+fn concurrent_jobs_across_policies_and_backends() {
+    let (addr, handle) = spawn_server(4, None);
+    const NATIVE_JOBS: usize = 10;
+
+    // 10 native jobs over 10 concurrent connections (one per thread)...
+    let served: Vec<(usize, RunCurve)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for i in 0..NATIVE_JOBS {
+            let addr = addr.clone();
+            handles.push(scope.spawn(move || {
+                let mut c = Client::connect(&addr).expect("connect");
+                let id = c.submit(&native_cfg(i), &format!("job-{i}")).expect("submit");
+                let job = c.wait(id, Duration::from_secs(120)).expect("wait");
+                assert_eq!(
+                    job.get("state").and_then(|s| s.as_str()),
+                    Some("done"),
+                    "job {i}: {}",
+                    job.dump()
+                );
+                let (cfg, curve) = c.result(id).expect("result");
+                assert_eq!(cfg.seed, i as u64);
+                (i, curve)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+
+    // ...every curve bit-identical to a direct run of the same config
+    assert_eq!(served.len(), NATIVE_JOBS);
+    for (i, curve) in &served {
+        let direct = experiment::run(&native_cfg(*i)).expect("direct run");
+        assert_bit_identical(curve, &direct.curve, &format!("job {i}"));
+    }
+
+    // ...plus an HLO-backend job, which must fail *cleanly* in the
+    // offline build (no `hlo` feature) with an actionable error
+    let mut c = Client::connect(&addr).expect("connect");
+    let mut hlo = native_cfg(0);
+    hlo.backend = Backend::Hlo;
+    let id = c.submit(&hlo, "hlo-job").expect("submit hlo");
+    let job = c.wait(id, Duration::from_secs(120)).expect("wait hlo");
+    if cfg!(feature = "hlo") {
+        // with real bindings this would need artifacts; the stub vendor
+        // crate still reports unavailability at runtime
+        assert_ne!(job.get("state").and_then(|s| s.as_str()), Some("queued"));
+    } else {
+        assert_eq!(job.get("state").and_then(|s| s.as_str()), Some("failed"));
+        let err = job.get("error").and_then(|e| e.as_str()).unwrap_or("");
+        assert!(err.contains("hlo") || err.contains("unavailable"), "{err}");
+    }
+
+    // metrics reflect the completed work with no dropped jobs
+    let m = c.metrics().expect("metrics");
+    let jobs = m.get("jobs").expect("jobs block");
+    assert_eq!(
+        jobs.get("done").and_then(|n| n.as_usize()),
+        Some(NATIVE_JOBS),
+        "{}",
+        m.dump()
+    );
+    assert_eq!(jobs.get("queued").and_then(|n| n.as_usize()), Some(0));
+    let pols = m.get("policies").and_then(|p| p.as_arr()).expect("policies");
+    assert_eq!(pols.len(), Policy::all().len(), "one rollup row per policy");
+
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn registry_survives_server_restart() {
+    let dir = std::env::temp_dir().join(format!("memaop_serve_restart_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // first server lifetime: run three jobs to completion
+    let (addr, handle) = spawn_server(2, Some(dir.clone()));
+    let mut ids = Vec::new();
+    {
+        let mut c = Client::connect(&addr).expect("connect");
+        for i in 0..3 {
+            ids.push(c.submit(&native_cfg(i), &format!("persisted-{i}")).expect("submit"));
+        }
+        for &id in &ids {
+            let job = c.wait(id, Duration::from_secs(120)).expect("wait");
+            assert_eq!(job.get("state").and_then(|s| s.as_str()), Some("done"));
+        }
+    }
+    shutdown(&addr, handle);
+
+    // second server over the same registry dir: history is back
+    let (addr2, handle2) = spawn_server(2, Some(dir.clone()));
+    let mut c = Client::connect(&addr2).expect("connect restarted");
+    let jobs = c.list().expect("list");
+    assert_eq!(jobs.len(), 3, "restored jobs missing");
+    for v in &jobs {
+        assert_eq!(v.get("state").and_then(|s| s.as_str()), Some("done"));
+        assert_eq!(v.get("restored").and_then(|b| b.as_bool()), Some(true));
+    }
+    // results (config + full curve) survive the restart bit-for-bit
+    for (i, &id) in ids.iter().enumerate() {
+        let (cfg, curve) = c.result(id).expect("restored result");
+        assert_eq!(cfg.seed, i as u64);
+        let direct = experiment::run(&native_cfg(i)).expect("direct run");
+        assert_bit_identical(&curve, &direct.curve, &format!("restored job {id}"));
+    }
+    // fresh ids continue above the restored history
+    let new_id = c.submit(&native_cfg(7), "after-restart").expect("submit");
+    assert!(new_id > *ids.iter().max().unwrap());
+    c.wait(new_id, Duration::from_secs(120)).expect("wait new");
+    shutdown(&addr2, handle2);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cancellation_and_queue_ordering() {
+    // one worker ⇒ jobs run strictly in submission order
+    let (addr, handle) = spawn_server(1, None);
+    let mut c = Client::connect(&addr).expect("connect");
+
+    // a deliberately slower first job to hold the single worker...
+    let mut slow = ExperimentConfig::preset(Task::Mnist);
+    slow.policy = Policy::TopK;
+    slow.k = 16;
+    slow.memory = true;
+    slow.data_scale = 0.05;
+    slow.epochs = 15;
+    slow.seed = 99;
+    slow.backend = Backend::Native;
+    let slow_id = c.submit(&slow, "slow").expect("submit slow");
+
+    // ...then quick jobs queue behind it; the last one gets cancelled
+    // while still queued
+    let a = c.submit(&native_cfg(1), "quick-a").expect("submit a");
+    let victim = c.submit(&native_cfg(2), "victim").expect("submit victim");
+    let state = c.cancel(victim).expect("cancel victim");
+    assert!(
+        state == "cancelled" || state == "cancelling",
+        "unexpected cancel state {state}"
+    );
+    let v = c.wait(victim, Duration::from_secs(120)).expect("wait victim");
+    assert_eq!(v.get("state").and_then(|s| s.as_str()), Some("cancelled"));
+
+    // the survivors complete normally
+    for id in [slow_id, a] {
+        let job = c.wait(id, Duration::from_secs(300)).expect("wait survivor");
+        assert_eq!(
+            job.get("state").and_then(|s| s.as_str()),
+            Some("done"),
+            "{}",
+            job.dump()
+        );
+    }
+    // double-cancel of a terminal job is a clean protocol error
+    assert!(c.cancel(victim).is_err());
+
+    shutdown(&addr, handle);
+}
