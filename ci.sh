@@ -33,4 +33,14 @@ fi
 echo "==> cargo test -q"
 cargo test -q
 
+# Multi-thread determinism gate: the exec test suite asserts bit-identical
+# curves/weights for threads ∈ {1,2,4,7}; running it under two different
+# REPRO_THREADS settings also varies the env-driven pool size
+# (`determinism_at_env_worker_count`), so two genuinely different worker
+# pools must agree bit-for-bit before CI goes green.
+echo "==> exec determinism gate (REPRO_THREADS=2)"
+REPRO_THREADS=2 cargo test -q --test exec
+echo "==> exec determinism gate (REPRO_THREADS=7)"
+REPRO_THREADS=7 cargo test -q --test exec
+
 echo "CI green."

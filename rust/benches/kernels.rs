@@ -1,19 +1,125 @@
 //! Kernel-level benchmarks: the AOP weight-gradient computation in both
 //! execution regimes (mask vs compaction) against the exact outer-product
 //! sum, on the paper's exact shapes, for both the native path and the
-//! compiled HLO artifacts.
+//! compiled HLO artifacts — plus the end-to-end `exec` training-step
+//! throughput (serial vs threads=4), written to `BENCH_2.json` so the
+//! repo's perf trajectory is machine-readable.
 //!
 //! Work metric = FLOPs of the compaction-regime cost model, so the
 //! reported work-rate is directly comparable across K (who computes the
 //! same gradient with fewer FLOPs/second wins).
 
+use std::time::{Duration, Instant};
+
+use mem_aop_gd::aop::engine::AopEngine;
+use mem_aop_gd::aop::{flops, Policy};
+use mem_aop_gd::exec::Executor;
+use mem_aop_gd::model::loss::LossKind;
 use mem_aop_gd::runtime::{Manifest, Runtime, Value};
-use mem_aop_gd::tensor::{ops, rng::Rng, Matrix};
+use mem_aop_gd::tensor::{init, ops, rng::Rng, Matrix};
 use mem_aop_gd::util::bench::{black_box, Bencher};
+use mem_aop_gd::util::json::{self, Json};
+
+/// Steady-state rows/sec of full Mem-AOP-GD training steps on the MNIST
+/// head shape (M=64, 784×10, topk K=32, memory on) at a thread count.
+fn exec_rows_per_sec(threads: usize, measure: Duration) -> f64 {
+    let (m, n, p, k) = (64usize, 784usize, 10usize, 32usize);
+    let mut rng = Rng::new(0);
+    let x = Matrix::from_fn(m, n, |_, _| rng.normal());
+    let y = Matrix::from_fn(m, p, |r, c| ((r % p) == c) as u32 as f32);
+    let mut wrng = Rng::new(1);
+    let mut engine = AopEngine::new(
+        init::glorot_uniform(&mut wrng, n, p),
+        LossKind::SoftmaxCrossEntropy,
+        m,
+        Policy::TopK,
+        k,
+        true,
+    );
+    let exec = Executor::new(threads);
+    let mut srng = Rng::new(2);
+    // warmup: populate memory, warm the pool's threads and caches
+    for _ in 0..20 {
+        black_box(engine.step_exec(&x, &y, 0.01, &mut srng, &exec));
+    }
+    let t0 = Instant::now();
+    let mut steps = 0u64;
+    while t0.elapsed() < measure {
+        black_box(engine.step_exec(&x, &y, 0.01, &mut srng, &exec));
+        steps += 1;
+    }
+    steps as f64 * m as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Measure serial vs threads=4 training throughput and write
+/// `BENCH_2.json` (rows/sec + FLOPs/step, with the speedup ratio).
+fn bench_exec_and_write_bench2() {
+    let quick = std::env::var("BENCH_QUICK").ok().as_deref() == Some("1");
+    let measure = if quick {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_secs(2)
+    };
+    let serial = exec_rows_per_sec(1, measure);
+    let par4 = exec_rows_per_sec(4, measure);
+    let speedup = par4 / serial;
+    let step = flops::aop_step(64, 784, 10, 32);
+    let flops_per_step = step.total() as f64;
+    let flops_per_row = flops_per_step / 64.0;
+    eprintln!(
+        "{:44} {:>12.0} rows/s",
+        "mnist/exec/train-step threads=1", serial
+    );
+    eprintln!(
+        "{:44} {:>12.0} rows/s  ({speedup:.2}x)",
+        "mnist/exec/train-step threads=4", par4
+    );
+    let out = json::obj(vec![
+        ("workload", json::s("mnist-784x10 topk K=32 mem train-step")),
+        ("m", json::num(64.0)),
+        ("n", json::num(784.0)),
+        ("p", json::num(10.0)),
+        ("k", json::num(32.0)),
+        ("flops_per_step", json::num(flops_per_step)),
+        (
+            "serial",
+            json::obj(vec![
+                ("threads", json::num(1.0)),
+                ("rows_per_sec", json::num(serial)),
+                ("flops_per_sec", json::num(serial * flops_per_row)),
+            ]),
+        ),
+        (
+            "threads4",
+            json::obj(vec![
+                ("threads", json::num(4.0)),
+                ("rows_per_sec", json::num(par4)),
+                ("flops_per_sec", json::num(par4 * flops_per_row)),
+            ]),
+        ),
+        ("speedup", json::num(speedup)),
+    ]);
+    let mut text = out.dump();
+    text.push('\n');
+    if std::fs::write("BENCH_2.json", &text).is_ok() {
+        eprintln!("[kernels] wrote BENCH_2.json (speedup {speedup:.2}x)");
+    }
+    let _ = write_results_copy(&out);
+}
+
+/// Also drop the record under `results/bench/` next to the other suites.
+fn write_results_copy(v: &Json) -> std::io::Result<()> {
+    std::fs::create_dir_all("results/bench")?;
+    let mut text = v.dump();
+    text.push('\n');
+    std::fs::write("results/bench/exec_throughput.json", text)
+}
 
 fn main() {
     let mut b = Bencher::new("kernels");
     let mut rng = Rng::new(0);
+
+    bench_exec_and_write_bench2();
 
     for (task, m, n, p, ks) in [
         ("energy", 144usize, 16usize, 1usize, vec![144usize, 18, 9, 3]),

@@ -5,10 +5,20 @@
 //! both with identical policy decisions and compare states step-by-step.
 //! This engine is also the baseline comparator for the criterion-style
 //! benches (native CPU vs PJRT-compiled artifacts).
+//!
+//! Both phases execute through the [`exec`](crate::exec) subsystem: rows
+//! are cut on the fixed shard grid, per-shard kernels run on the
+//! executor's worker pool, and cross-row reductions (loss, bias
+//! gradient, the AOP weight update) are combined in fixed shard order —
+//! so results are bit-identical at every thread count. The plain
+//! `fwd_score`/`apply`/`step`/`evaluate` methods are the `threads = 1`
+//! special case (an inline [`Executor::serial`]), running the very same
+//! code path.
 
 use crate::aop::memory::MemoryState;
 use crate::aop::policy::{self, Policy, Selection};
-use crate::model::loss::{accuracy, LossKind};
+use crate::exec::{reduce, shard, Executor};
+use crate::model::loss::{self, LossKind};
 use crate::tensor::rng::Rng;
 use crate::tensor::{ops, Matrix};
 
@@ -74,12 +84,50 @@ impl AopEngine {
 
     /// Phase 1 (mirrors the `*_fwd_score` artifact): forward, loss,
     /// output-gradient, memory folding, policy scores, exact bias grad.
+    /// Serial (`threads = 1`) case of [`AopEngine::fwd_score_exec`].
     pub fn fwd_score(&self, x: &Matrix, y: &Matrix, eta: f32) -> FwdScore {
-        let o = self.forward(x);
-        let (loss, g) = self.loss.loss_and_grad(&o, y);
-        let (xhat, ghat) = self.memory.fold(x, &g, eta);
-        let scores = ops::norm_product_scores(&xhat, &ghat);
-        let db: Vec<f32> = g.col_sums().iter().map(|d| eta * d).collect();
+        self.fwd_score_exec(x, y, eta, &Executor::serial())
+    }
+
+    /// Phase 1, data-parallel: one shard task per row block computes
+    /// forward rows, loss-gradient rows, memory folding, scores and the
+    /// partial loss/bias sums; partials reduce in fixed shard order.
+    pub fn fwd_score_exec(&self, x: &Matrix, y: &Matrix, eta: f32, exec: &Executor) -> FwdScore {
+        let (m, n) = x.shape();
+        let p = self.w.cols();
+        assert_eq!(y.shape(), (m, p), "target shape");
+        let plan = exec.plan(m);
+        let se = eta.sqrt();
+        let mut xhat = Matrix::zeros(m, n);
+        let mut ghat = Matrix::zeros(m, p);
+        let mut scores = vec![0.0f32; m];
+        let parts: Vec<(f32, Vec<f32>)> = {
+            let xh_blocks = shard::RowBlocks::of(&mut xhat, &plan);
+            let gh_blocks = shard::RowBlocks::of(&mut ghat, &plan);
+            let sc_blocks = shard::RowBlocks::of_slice(&mut scores, 1, &plan);
+            exec.map(&plan, |i, rows| {
+                let nr = rows.len();
+                // shard-local forward + loss-gradient scratch
+                let mut o = vec![0.0f32; nr * p];
+                shard::forward_rows(x, &self.w, &self.b, rows.clone(), &mut o);
+                let loss_part = self.loss.partial_loss(&o, y, rows.clone());
+                let mut g = vec![0.0f32; nr * p];
+                self.loss.grad_rows(&o, y, rows.clone(), m, &mut g);
+                let db_part = shard::col_sums_rows(&g, p);
+                // fold memory into the fresh batch (alg. lines 3-4)
+                let mut xh = xh_blocks.lock(i);
+                shard::fold_rows(x, &self.memory.mem_x, se, rows.clone(), &mut xh);
+                let mut gh = gh_blocks.lock(i);
+                shard::fold_block(&g, &self.memory.mem_g, se, rows.clone(), &mut gh);
+                let mut sc = sc_blocks.lock(i);
+                shard::score_rows(&xh, &gh, n, p, &mut sc);
+                (loss_part, db_part)
+            })
+        };
+        let loss_total = reduce::sum_f32(parts.iter().map(|(l, _)| *l));
+        let loss = self.loss.finish_loss(loss_total, m, p);
+        let db_raw = reduce::sum_vecs(p, parts.iter().map(|(_, d)| d.as_slice()));
+        let db: Vec<f32> = db_raw.iter().map(|d| eta * d).collect();
         FwdScore {
             loss,
             xhat,
@@ -91,18 +139,61 @@ impl AopEngine {
 
     /// Phase 2 (mirrors the `*_apply` artifact): AOP weight update, exact
     /// bias update, memory update.
+    /// Serial (`threads = 1`) case of [`AopEngine::apply_exec`].
     pub fn apply(&mut self, fs: &FwdScore, sel: &Selection) -> StepStats {
-        let wstar = if self.compact {
-            ops::masked_outer_compact(&fs.xhat, &fs.ghat, &sel.compact_pairs())
+        self.apply_exec(fs, sel, &Executor::serial())
+    }
+
+    /// Phase 2, data-parallel: each shard accumulates the outer products
+    /// of its own selected rows; the partials reduce in fixed shard
+    /// order before the (serial, elementwise) weight/bias writes, and the
+    /// memory retention rows are rewritten shard-parallel.
+    pub fn apply_exec(&mut self, fs: &FwdScore, sel: &Selection, exec: &Executor) -> StepStats {
+        let (m, n) = fs.xhat.shape();
+        let p = fs.ghat.cols();
+        let plan = exec.plan(m);
+        let partials: Vec<Option<Matrix>> = if self.compact {
+            let pairs = sel.compact_pairs();
+            exec.map(&plan, |_, rows| {
+                // `pairs` is ascending (Selection contract), so the
+                // filtered slice keeps row order within the shard
+                let local: Vec<(usize, f32)> = pairs
+                    .iter()
+                    .copied()
+                    .filter(|(r, _)| rows.contains(r))
+                    .collect();
+                if local.is_empty() {
+                    None
+                } else {
+                    Some(ops::masked_outer_compact(&fs.xhat, &fs.ghat, &local))
+                }
+            })
         } else {
-            ops::masked_outer(&fs.xhat, &fs.ghat, &sel.sel_scale)
+            exec.map(&plan, |_, rows| {
+                Some(ops::masked_outer_range(
+                    &fs.xhat,
+                    &fs.ghat,
+                    &sel.sel_scale,
+                    rows,
+                ))
+            })
         };
+        let wstar = reduce::sum_matrices(n, p, partials);
         let wstar_fro = wstar.frobenius();
         self.w.axpy(-1.0, &wstar);
         for (b, d) in self.b.iter_mut().zip(fs.db.iter()) {
             *b -= d;
         }
-        self.memory.update(&fs.xhat, &fs.ghat, &sel.keep);
+        if self.memory.enabled {
+            let mx_blocks = shard::RowBlocks::of(&mut self.memory.mem_x, &plan);
+            let mg_blocks = shard::RowBlocks::of(&mut self.memory.mem_g, &plan);
+            exec.run_each(&plan, |i, rows| {
+                let mut mx = mx_blocks.lock(i);
+                shard::keep_rows(&fs.xhat, &sel.keep, rows.clone(), &mut mx);
+                let mut mg = mg_blocks.lock(i);
+                shard::keep_rows(&fs.ghat, &sel.keep, rows, &mut mg);
+            });
+        }
         StepStats {
             loss: fs.loss,
             wstar_fro,
@@ -111,8 +202,23 @@ impl AopEngine {
     }
 
     /// Full Algorithm-1 step: fwd_score → out_K → apply.
+    /// Serial (`threads = 1`) case of [`AopEngine::step_exec`].
     pub fn step(&mut self, x: &Matrix, y: &Matrix, eta: f32, rng: &mut Rng) -> StepStats {
-        let fs = self.fwd_score(x, y, eta);
+        self.step_exec(x, y, eta, rng, &Executor::serial())
+    }
+
+    /// Full data-parallel Algorithm-1 step. The policy decision runs on
+    /// the calling thread from the global score vector — selection is
+    /// identical at every thread count by construction.
+    pub fn step_exec(
+        &mut self,
+        x: &Matrix,
+        y: &Matrix,
+        eta: f32,
+        rng: &mut Rng,
+        exec: &Executor,
+    ) -> StepStats {
+        let fs = self.fwd_score_exec(x, y, eta, exec);
         let sel = policy::select(
             self.policy,
             &fs.scores,
@@ -120,13 +226,35 @@ impl AopEngine {
             self.memory.enabled,
             rng,
         );
-        self.apply(&fs, &sel)
+        self.apply_exec(&fs, &sel, exec)
     }
 
     /// Validation loss and accuracy.
+    /// Serial (`threads = 1`) case of [`AopEngine::evaluate_exec`].
     pub fn evaluate(&self, x: &Matrix, y: &Matrix) -> (f32, f32) {
-        let o = self.forward(x);
-        (self.loss.loss(&o, y), accuracy(&o, y))
+        self.evaluate_exec(x, y, &Executor::serial())
+    }
+
+    /// Validation, data-parallel: per-shard forward + partial loss and
+    /// (integer, hence exactly order-free) argmax-agreement counts.
+    pub fn evaluate_exec(&self, x: &Matrix, y: &Matrix, exec: &Executor) -> (f32, f32) {
+        let m = x.rows();
+        let p = self.w.cols();
+        let plan = exec.plan(m);
+        let parts: Vec<(f32, usize)> = exec.map(&plan, |_, rows| {
+            let mut o = vec![0.0f32; rows.len() * p];
+            shard::forward_rows(x, &self.w, &self.b, rows.clone(), &mut o);
+            (
+                self.loss.partial_loss(&o, y, rows.clone()),
+                loss::correct_rows(&o, y, rows),
+            )
+        });
+        let loss_total = reduce::sum_f32(parts.iter().map(|(l, _)| *l));
+        let correct = reduce::sum_usize(parts.iter().map(|(_, c)| *c));
+        (
+            self.loss.finish_loss(loss_total, m, p),
+            correct as f32 / m as f32,
+        )
     }
 
     /// Remark-1 step: produce the *raw* AOP gradient estimate (memory
@@ -280,6 +408,31 @@ mod tests {
             e.step(&x, &y, 0.05, &mut rng);
         }
         assert!(e.memory.is_zero());
+    }
+
+    #[test]
+    fn step_exec_is_bit_identical_to_serial_step() {
+        // unit-level smoke check; the full property matrix lives in
+        // rust/tests/exec.rs
+        let mut rng = Rng::new(9);
+        let (x, y, _) = regression_data(&mut rng, 48, 10);
+        let exec4 = Executor::new(4);
+        let mut serial = engine(&mut Rng::new(21), 10, 48, Policy::TopK, 12, true);
+        let mut par = engine(&mut Rng::new(21), 10, 48, Policy::TopK, 12, true);
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        for _ in 0..15 {
+            let a = serial.step(&x, &y, 0.03, &mut r1);
+            let b = par.step_exec(&x, &y, 0.03, &mut r2, &exec4);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.wstar_fro.to_bits(), b.wstar_fro.to_bits());
+        }
+        assert_eq!(serial.w.data(), par.w.data());
+        assert_eq!(serial.b, par.b);
+        let (l1, a1) = serial.evaluate(&x, &y);
+        let (l2, a2) = par.evaluate_exec(&x, &y, &exec4);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(a1, a2);
     }
 
     #[test]

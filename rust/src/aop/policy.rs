@@ -106,7 +106,10 @@ pub struct Selection {
     pub sel_scale: Vec<f32>,
     /// Per-row memory retention (1 = row goes to memory). Length M.
     pub keep: Vec<f32>,
-    /// The selected indices (deduplicated, unordered).
+    /// The selected indices, deduplicated and **sorted ascending** — the
+    /// accumulation order of the compaction-regime AOP is part of the
+    /// result's float semantics, so it is pinned to row order (matching
+    /// the mask regime) rather than left to sampling/partition order.
     pub indices: Vec<usize>,
 }
 
@@ -140,7 +143,7 @@ pub fn select(
     let m = scores.len();
     assert!(k <= m, "k={k} > m={m}");
     let mut sel_scale = vec![0.0f32; m];
-    let indices: Vec<usize> = match policy {
+    let mut indices: Vec<usize> = match policy {
         Policy::Exact => (0..m).collect(),
         Policy::TopK => top_k_indices(scores, k),
         Policy::RandK => rng.sample_without_replacement(m, k),
@@ -169,6 +172,9 @@ pub fn select(
             };
         }
     };
+    // pin the accumulation order (see `Selection::indices`); which rows
+    // were drawn is already decided, so this never changes the sample
+    indices.sort_unstable();
     for &i in &indices {
         sel_scale[i] = 1.0;
     }
@@ -191,8 +197,17 @@ fn keep_vector(indices: &[usize], m: usize, memory: bool, policy: Policy) -> Vec
     keep
 }
 
-/// Indices of the K largest scores. Uses `select_nth_unstable` (O(m) on
-/// average) instead of a full sort — this sits on the per-step hot path.
+/// Indices of the K largest scores, **sorted ascending**. Uses
+/// `select_nth_unstable` (O(m) on average) instead of a full sort — this
+/// sits on the per-step hot path.
+///
+/// Determinism contract: ties are broken by row index (lower index
+/// wins), so the selected *set* is a pure function of the scores — not
+/// of the partition's internal order, which `select_nth_unstable` leaves
+/// unspecified across std versions and platforms. The returned order is
+/// then pinned to ascending row index so downstream accumulation (and
+/// per-shard filtering in `exec`) is reproducible across shard
+/// boundaries and platforms.
 pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
     let m = scores.len();
     if k == 0 {
@@ -206,10 +221,11 @@ pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
         scores[b]
             .partial_cmp(&scores[a])
             .unwrap_or(std::cmp::Ordering::Equal)
-            // tie-break on index for determinism across partition orders
+            // tie-break on index: total order ⇒ the selected set is unique
             .then(a.cmp(&b))
     });
     idx.truncate(k);
+    idx.sort_unstable();
     idx
 }
 
@@ -272,6 +288,27 @@ mod tests {
         b.sort_unstable();
         assert_eq!(a, b);
         assert_eq!(a, vec![0, 1, 2, 3]); // index tie-break
+    }
+
+    #[test]
+    fn top_k_returns_ascending_indices() {
+        let scores = [0.1, 5.0, 0.2, 3.0, 0.05, 4.0];
+        assert_eq!(top_k_indices(&scores, 3), vec![1, 3, 5]);
+        // ties spanning shard boundaries resolve to the lowest row indices
+        let tied = vec![2.0f32; 40];
+        assert_eq!(top_k_indices(&tied, 5), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn selection_indices_are_sorted_for_every_policy() {
+        let scores: Vec<f32> = (0..32).map(|i| ((i * 7) % 13) as f32 + 0.5).collect();
+        let mut r = rng();
+        for policy in Policy::all() {
+            let s = select(policy, &scores, 10, true, &mut r);
+            for w in s.indices.windows(2) {
+                assert!(w[0] < w[1], "{policy:?}: indices not ascending");
+            }
+        }
     }
 
     #[test]

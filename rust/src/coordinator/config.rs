@@ -182,7 +182,16 @@ pub struct ExperimentConfig {
     /// Fraction of the Tab. I dataset size to generate (1.0 = paper
     /// scale). Only affects mnist (60k/10k is expensive on CPU).
     pub data_scale: f32,
+    /// Data-parallel execution threads for the native backend (the
+    /// `exec` subsystem). Deterministic: every value produces
+    /// bit-identical curves and weights; it only changes wall-clock. The
+    /// serve scheduler accounts `threads` pool slots per job.
+    pub threads: usize,
 }
+
+/// Upper bound on [`ExperimentConfig::threads`] (sanity cap, far above
+/// any useful parallelism for the paper's shapes).
+pub const MAX_THREADS: usize = 256;
 
 impl ExperimentConfig {
     /// Tab. I column 1: energy regression baseline configuration.
@@ -198,6 +207,7 @@ impl ExperimentConfig {
             seed: 0,
             backend: Backend::Native,
             data_scale: 1.0,
+            threads: 1,
         }
     }
 
@@ -214,6 +224,7 @@ impl ExperimentConfig {
             seed: 0,
             backend: Backend::Native,
             data_scale: 1.0,
+            threads: 1,
         }
     }
 
@@ -258,6 +269,17 @@ impl ExperimentConfig {
         if !(0.001..=1.0).contains(&self.data_scale) {
             bail!("data_scale {} out of (0.001, 1.0]", self.data_scale);
         }
+        if self.threads == 0 || self.threads > MAX_THREADS {
+            bail!("threads={} out of 1..={MAX_THREADS}", self.threads);
+        }
+        if self.backend == Backend::Hlo && self.threads > 1 {
+            // the PJRT path is single-threaded per job; accepting
+            // threads>1 would reserve scheduler slots it never uses
+            bail!(
+                "threads={} requires the native backend (the hlo path runs one thread per job)",
+                self.threads
+            );
+        }
         Ok(())
     }
 
@@ -273,6 +295,7 @@ impl ExperimentConfig {
             ("seed", json::num(self.seed as f64)),
             ("backend", json::s(self.backend.name())),
             ("data_scale", json::num(self.data_scale as f64)),
+            ("threads", json::num(self.threads as f64)),
         ])
     }
 
@@ -307,6 +330,16 @@ impl ExperimentConfig {
             seed: gn("seed")? as u64,
             backend: Backend::parse(gs("backend")?).ok_or_else(|| anyhow!("bad backend"))?,
             data_scale: gn("data_scale")? as f32,
+            // optional for wire/persistence compatibility with
+            // protocol-v1 clients and pre-exec run files
+            threads: match v.get("threads") {
+                Some(t) => t
+                    .as_f64()
+                    .filter(|n| *n >= 1.0 && n.fract() == 0.0)
+                    .ok_or_else(|| anyhow!("bad threads (integer >= 1)"))?
+                    as usize,
+                None => 1,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -367,13 +400,41 @@ mod tests {
         c.memory = true;
         c.seed = 42;
         c.data_scale = 0.25;
+        c.threads = 4;
         let j = c.to_json();
         let c2 = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c2.label(), c.label());
         assert_eq!(c2.k, 16);
         assert_eq!(c2.seed, 42);
         assert_eq!(c2.data_scale, 0.25);
+        assert_eq!(c2.threads, 4);
         assert_eq!(c2.task, Task::Mnist);
+    }
+
+    #[test]
+    fn threads_field_is_optional_and_validated() {
+        // protocol-v1 frames / pre-exec run files omit `threads`
+        let mut j = ExperimentConfig::energy_preset().to_json();
+        if let crate::util::json::Json::Obj(pairs) = &mut j {
+            pairs.retain(|(k, _)| k != "threads");
+        }
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.threads, 1);
+        // out-of-range values are rejected
+        let mut bad = ExperimentConfig::energy_preset();
+        bad.threads = 0;
+        assert!(bad.validate().is_err());
+        bad.threads = MAX_THREADS + 1;
+        assert!(bad.validate().is_err());
+        bad.threads = MAX_THREADS;
+        assert!(bad.validate().is_ok());
+        // threads is a native-backend knob: the hlo path is
+        // single-threaded per job and must not reserve unused slots
+        bad.backend = Backend::Hlo;
+        bad.threads = 2;
+        assert!(bad.validate().is_err());
+        bad.threads = 1;
+        assert!(bad.validate().is_ok());
     }
 
     #[test]

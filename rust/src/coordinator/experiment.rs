@@ -6,6 +6,13 @@
 //! from seeded streams derived from `cfg.seed`. The backends then differ
 //! only in where the math runs — which is exactly what the
 //! `native_vs_hlo` cross-check integration test asserts.
+//!
+//! Policy draws use *counter-based* streams (`Rng::for_stream` keyed by
+//! `(seed, epoch, step)`) rather than one sequentially-consumed
+//! generator: each step's selection is a pure function of its position,
+//! so it cannot drift with the draw history of any other component —
+//! one of the invariants behind the `exec` subsystem's guarantee that
+//! `cfg.threads` never changes a curve (`rust/tests/exec.rs`).
 
 use std::time::Instant;
 
@@ -120,7 +127,6 @@ pub fn run_with_trainer_observed<T: Trainer>(
     let (n, p) = cfg.task.dims();
 
     let mut shuffle_rng = Rng::new(cfg.seed ^ 0x5A0FF);
-    let mut policy_rng = Rng::new(cfg.seed ^ 0x9011C4);
     let mut batcher = Batcher::new(train.len(), m);
     let mut curve = RunCurve::new(&cfg.label());
     let mut cum_backward_flops: u64 = 0;
@@ -132,8 +138,12 @@ pub fn run_with_trainer_observed<T: Trainer>(
         curve.steps_per_epoch = batches.len();
         let mut loss_sum = 0.0f64;
         let mut fro_sum = 0.0f64;
-        for b in &batches {
+        for (step, b) in batches.iter().enumerate() {
             let (loss, scores, _db) = trainer.fwd_score(&b.x, &b.y)?;
+            // counter-based stream: the draw is keyed by (seed, epoch,
+            // step), independent of every other stream's consumption
+            let mut policy_rng =
+                Rng::for_stream(cfg.seed ^ 0x9011C4, epoch as u64, step as u64);
             let sel = policy::select(cfg.policy, &scores, cfg.k, cfg.memory, &mut policy_rng);
             let fro = trainer.apply(&sel)?;
             loss_sum += loss as f64;
@@ -141,6 +151,8 @@ pub fn run_with_trainer_observed<T: Trainer>(
             cum_backward_flops +=
                 flops::aop_step(m, n, p, sel.k_effective()).backward_only();
         }
+        let train_s = t0.elapsed().as_secs_f64();
+        let rows_done = (batches.len() * m) as f64;
         let (val_loss, val_acc) = evaluate_chunked(&mut trainer, &val, cfg.task.eval_batch())?;
         let metrics = EpochMetrics {
             epoch,
@@ -150,6 +162,7 @@ pub fn run_with_trainer_observed<T: Trainer>(
             wstar_fro: (fro_sum / batches.len() as f64) as f32,
             mem_fro: trainer.mem_fro(),
             backward_flops: cum_backward_flops,
+            rows_per_sec: if train_s > 0.0 { rows_done / train_s } else { 0.0 },
             wall_s: t0.elapsed().as_secs_f64(),
         };
         curve.push(metrics);
@@ -241,6 +254,30 @@ mod tests {
         for (ma, mb) in a.curve.epochs.iter().zip(b.curve.epochs.iter()) {
             assert_eq!(ma.val_loss, mb.val_loss);
         }
+    }
+
+    #[test]
+    fn threads_do_not_change_the_curve() {
+        // unit-level check of the exec determinism guarantee; the full
+        // {1,2,4,7} × policy × regime matrix lives in rust/tests/exec.rs
+        let mut cfg = quick_energy(Policy::WeightedK, true, 9);
+        let a = run(&cfg).unwrap();
+        cfg.threads = 4;
+        let b = run(&cfg).unwrap();
+        for (ma, mb) in a.curve.epochs.iter().zip(b.curve.epochs.iter()) {
+            assert_eq!(ma.train_loss.to_bits(), mb.train_loss.to_bits());
+            assert_eq!(ma.val_loss.to_bits(), mb.val_loss.to_bits());
+            assert_eq!(ma.backward_flops, mb.backward_flops);
+        }
+        assert_eq!(a.final_w.data(), b.final_w.data());
+        assert_eq!(a.final_b, b.final_b);
+    }
+
+    #[test]
+    fn epochs_record_throughput() {
+        let cfg = quick_energy(Policy::TopK, true, 18);
+        let r = run(&cfg).unwrap();
+        assert!(r.curve.epochs.iter().all(|m| m.rows_per_sec > 0.0));
     }
 
     #[test]

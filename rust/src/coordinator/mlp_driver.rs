@@ -265,6 +265,7 @@ pub fn train_mlp(
                     wstar_fro: 0.0,
                     mem_fro: driver.mem_fro(),
                     backward_flops: 0,
+                    rows_per_sec: 0.0, // HLO driver: not instrumented
                     wall_s: t0.elapsed().as_secs_f64(),
                 });
                 t0 = Instant::now();

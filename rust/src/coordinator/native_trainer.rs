@@ -11,12 +11,18 @@ use crate::aop::engine::{AopEngine, FwdScore};
 use crate::aop::policy::Selection;
 use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::experiment::Trainer;
+use crate::exec::Executor;
 use crate::tensor::{init, rng::Rng, Matrix};
 
-/// Native single-dense-layer trainer.
+/// Native single-dense-layer trainer. Executes through the `exec`
+/// subsystem with `cfg.threads` workers — `threads = 1` is the inline
+/// serial path, and any other value is bit-identical to it.
 pub struct NativeTrainer {
     engine: AopEngine,
     eta: f32,
+    /// Persistent worker pool, one per trainer (dispatch reuses warm
+    /// threads across every step of the run).
+    exec: Executor,
     /// Cached fwd_score output between `scores` and `apply` (the trait
     /// splits the step so the caller owns the policy decision).
     pending: Option<FwdScore>,
@@ -39,6 +45,7 @@ impl NativeTrainer {
         Ok(NativeTrainer {
             engine,
             eta: cfg.lr,
+            exec: Executor::new(cfg.threads),
             pending: None,
         })
     }
@@ -50,7 +57,7 @@ impl Trainer for NativeTrainer {
     }
 
     fn fwd_score(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, Vec<f32>, Vec<f32>)> {
-        let fs = self.engine.fwd_score(x, y, self.eta);
+        let fs = self.engine.fwd_score_exec(x, y, self.eta, &self.exec);
         let loss = fs.loss;
         let scores = fs.scores.clone();
         let db = fs.db.clone();
@@ -63,12 +70,12 @@ impl Trainer for NativeTrainer {
             .pending
             .take()
             .expect("apply called without fwd_score");
-        let stats = self.engine.apply(&fs, sel);
+        let stats = self.engine.apply_exec(&fs, sel, &self.exec);
         Ok(stats.wstar_fro)
     }
 
     fn evaluate(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, f32)> {
-        Ok(self.engine.evaluate(x, y))
+        Ok(self.engine.evaluate_exec(x, y, &self.exec))
     }
 
     fn mem_fro(&self) -> f32 {

@@ -1,0 +1,161 @@
+//! `exec` — deterministic data-parallel execution engine.
+//!
+//! Shards a mini-batch's rows across worker threads and recombines the
+//! results so that **any** thread count produces bit-identical training
+//! curves and final weights. The pieces:
+//!
+//! * [`plan`] — the shard grid: contiguous [`plan::SHARD_ROWS`]-row
+//!   blocks, a pure function of the batch size and *never* of the thread
+//!   count. This is the determinism keystone: every thread count executes
+//!   the same float ops with the same grouping;
+//! * [`pool`] — [`ExecPool`], a persistent scoped-dispatch pool built on
+//!   the one generalized [`util::pool::TaskPool`](crate::util::pool::TaskPool)
+//!   (shared with the serve scheduler), so per-step dispatch costs a
+//!   condvar wake, not a thread spawn;
+//! * [`shard`] — row-range kernels (forward, memory folding, scores,
+//!   column sums, retention) writing into disjoint borrowed row blocks;
+//!   each is bit-identical per row to its serial twin in `tensor::ops`;
+//! * [`reduce`] — fixed ascending-shard-order combination of partials
+//!   (losses, bias grads, partial AOP outer products), single-threaded.
+//!
+//! What stays on the coordinator thread: the policy decision. Shards
+//! compute *scores*; `out_K` selection happens once, globally, from a
+//! counter-based RNG stream (`Rng::for_stream`) keyed by (seed, epoch,
+//! step) — so stochastic policies select identically at any parallelism,
+//! and the selected row set is then filtered per shard for the partial
+//! outer products.
+//!
+//! `AopEngine::step_exec` / `Mlp::train_step_aop_exec` assemble these
+//! into full training steps; `ExperimentConfig::threads` (and the serve
+//! protocol's `threads` field / `repro train --threads N`) picks the
+//! worker count. `rust/tests/exec.rs` asserts bit-identity for
+//! `threads ∈ {1, 2, 4, 7}` across every policy, both execution regimes,
+//! and through a served job.
+//!
+//! **One-time re-baselining (deliberate)**: bit-identity across thread
+//! counts and bit-identity to the *pre-exec* whole-batch accumulation
+//! cannot both hold — f32 addition is non-associative, so a fixed shard
+//! grid is itself a (new) grouping, and position-keyed policy streams
+//! replace the old sequentially-consumed generator. The serial
+//! `threads = 1` path of THIS engine is therefore the definition of
+//! "the serial curve" from this version forward; curves recorded by
+//! earlier builds re-run under the same seed land at the same quality
+//! but not the same bits. Within a build, all determinism guarantees
+//! (same seed ⇒ same curve, native ≡ HLO decisions, any `threads`)
+//! are exact.
+
+pub mod plan;
+pub mod pool;
+pub mod reduce;
+pub mod shard;
+
+use std::ops::Range;
+use std::sync::Mutex;
+
+pub use plan::{ShardPlan, SHARD_ROWS};
+pub use pool::ExecPool;
+
+/// Handle tying a worker pool to the canonical shard grid. Cheap to
+/// create at `threads == 1` (no threads are spawned); owns `threads - 1`
+/// persistent workers otherwise. The engine/trainer holds one for its
+/// whole lifetime so per-step dispatch reuses warm threads.
+pub struct Executor {
+    pool: ExecPool,
+}
+
+impl Executor {
+    pub fn new(threads: usize) -> Executor {
+        Executor {
+            pool: ExecPool::new(threads),
+        }
+    }
+
+    /// Inline executor: same grid, same reductions, zero threads — the
+    /// serial reference every parallel run is bit-compared against.
+    pub fn serial() -> Executor {
+        Executor::new(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// The canonical plan for a batch of `rows`.
+    pub fn plan(&self, rows: usize) -> ShardPlan {
+        ShardPlan::for_rows(rows)
+    }
+
+    /// Run `f(shard, rows)` for every shard of `plan`; blocks until all
+    /// shards completed.
+    pub fn run_each<F>(&self, plan: &ShardPlan, f: F)
+    where
+        F: Fn(usize, Range<usize>) + Sync,
+    {
+        let call = |i: usize| f(i, plan.range(i));
+        self.pool.run(plan.len(), &call);
+    }
+
+    /// Run `f(shard, rows)` for every shard and collect the returns in
+    /// shard order (ready for `exec::reduce`).
+    pub fn map<R, F>(&self, plan: &ShardPlan, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, Range<usize>) -> R + Sync,
+    {
+        let n = plan.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let call = |i: usize| {
+            let r = f(i, plan.range(i));
+            *slots[i].lock().unwrap() = Some(r);
+        };
+        self.pool.run(n, &call);
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("missing shard result"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_returns_results_in_shard_order() {
+        for threads in [1usize, 2, 4, 7] {
+            let ex = Executor::new(threads);
+            let plan = ShardPlan::with_granularity(100, 9);
+            let got = ex.map(&plan, |i, range| (i, range.start, range.end));
+            assert_eq!(got.len(), plan.len());
+            for (i, (gi, s, e)) in got.iter().enumerate() {
+                assert_eq!(*gi, i);
+                assert_eq!(*s..*e, plan.range(i));
+            }
+        }
+    }
+
+    #[test]
+    fn run_each_sees_every_shard_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let ex = Executor::new(4);
+        let plan = ShardPlan::with_granularity(33, 4);
+        let hits: Vec<AtomicUsize> = (0..plan.len()).map(|_| AtomicUsize::new(0)).collect();
+        ex.run_each(&plan, |i, range| {
+            assert_eq!(range, plan.range(i));
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_plan_is_a_noop() {
+        let ex = Executor::serial();
+        let plan = ShardPlan::for_rows(0);
+        let got: Vec<u8> = ex.map(&plan, |_, _| panic!("no shards to run"));
+        assert!(got.is_empty());
+        ex.run_each(&plan, |_, _| panic!("no shards to run"));
+    }
+}

@@ -1,0 +1,119 @@
+//! Deterministic shard plans: how a mini-batch's rows are cut into
+//! parallel work units.
+//!
+//! **The invariant that makes the whole exec subsystem deterministic**:
+//! the shard grid is a pure function of the row count — it NEVER depends
+//! on the worker/thread count. Every thread count therefore executes the
+//! *same* floating-point operations grouped the *same* way; only the
+//! assignment of shards to OS threads varies, and the fixed-order
+//! reduction (`exec::reduce`) erases that. `threads=7` and `threads=1`
+//! produce bit-identical weights by construction, not by tolerance.
+
+use std::ops::Range;
+
+/// Rows per shard. Chosen so the paper's shapes split into enough units
+/// to keep 4-8 threads busy (energy M=144 → 9 shards, mnist M=64 → 4)
+/// while each unit still amortizes dispatch overhead. Changing this
+/// value changes the fixed reduction grouping — and therefore the
+/// low-order bits of every curve — so it is a compile-time constant, not
+/// a runtime knob.
+pub const SHARD_ROWS: usize = 16;
+
+/// A contiguous partition of `rows` into blocks of `granularity` rows
+/// (last block may be short).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    rows: usize,
+    granularity: usize,
+}
+
+impl ShardPlan {
+    /// The canonical plan for a row count (fixed [`SHARD_ROWS`] grid).
+    pub fn for_rows(rows: usize) -> ShardPlan {
+        ShardPlan::with_granularity(rows, SHARD_ROWS)
+    }
+
+    /// Custom granularity (tests / benches only — production paths must
+    /// share one grid or their bits diverge).
+    pub fn with_granularity(rows: usize, granularity: usize) -> ShardPlan {
+        assert!(granularity > 0, "shard granularity must be positive");
+        ShardPlan { rows, granularity }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn granularity(&self) -> usize {
+        self.granularity
+    }
+
+    /// Number of shards (0 only for an empty batch).
+    pub fn len(&self) -> usize {
+        self.rows.div_ceil(self.granularity)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Row range of shard `i`.
+    pub fn range(&self, i: usize) -> Range<usize> {
+        let start = i * self.granularity;
+        assert!(start < self.rows, "shard {i} out of range");
+        start..(start + self.granularity).min(self.rows)
+    }
+
+    /// Shard ranges in shard order.
+    pub fn iter(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        (0..self.len()).map(|i| self.range(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_rows_exactly_once_in_order() {
+        for rows in [1usize, 15, 16, 17, 64, 144, 1000] {
+            let plan = ShardPlan::for_rows(rows);
+            let mut next = 0usize;
+            for r in plan.iter() {
+                assert_eq!(r.start, next);
+                assert!(!r.is_empty());
+                assert!(r.len() <= SHARD_ROWS);
+                next = r.end;
+            }
+            assert_eq!(next, rows);
+        }
+    }
+
+    #[test]
+    fn paper_shapes() {
+        assert_eq!(ShardPlan::for_rows(144).len(), 9);
+        assert_eq!(ShardPlan::for_rows(64).len(), 4);
+        assert_eq!(ShardPlan::for_rows(12).len(), 1); // tiny batches: one shard
+    }
+
+    #[test]
+    fn empty_plan() {
+        let p = ShardPlan::for_rows(0);
+        assert_eq!(p.len(), 0);
+        assert!(p.is_empty());
+        assert_eq!(p.iter().count(), 0);
+    }
+
+    #[test]
+    fn custom_granularity() {
+        let p = ShardPlan::with_granularity(10, 4);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.range(2), 8..10);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_shard_panics() {
+        ShardPlan::for_rows(16).range(1);
+    }
+}

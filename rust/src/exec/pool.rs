@@ -1,0 +1,261 @@
+//! Persistent worker pool for scoped shard dispatch.
+//!
+//! [`ExecPool`] bridges the gap between the long-lived
+//! [`util::pool::TaskPool`](crate::util::pool::TaskPool) (whose tasks
+//! must be `'static`) and per-step shard closures that borrow the step's
+//! matrices: a [`ShardJob`] carries a lifetime-erased pointer to the
+//! caller's closure plus a completion latch, and [`ExecPool::run`] blocks
+//! until every shard has finished — so the borrow provably outlives every
+//! use. This is the same contract `std::thread::scope` provides, but
+//! without respawning OS threads on every dispatch (a training step
+//! dispatches twice — `fwd_score` and `apply` — and thread spawn latency
+//! would eat the speedup on the paper's small shapes).
+//!
+//! Shards are claimed dynamically (atomic counter), so which *thread*
+//! runs which shard varies run to run; determinism comes from the shard
+//! *grid* being fixed (`exec::plan`) and results being combined in shard
+//! order (`exec::reduce`), never from scheduling.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::util::pool::TaskPool;
+
+/// Worker pool executing indexed shard tasks with `threads` total compute
+/// threads (the calling thread participates; `threads - 1` pool workers
+/// are spawned). `threads <= 1` spawns nothing and runs inline — the
+/// serial path is literally the same code minus the dispatch.
+pub struct ExecPool {
+    workers: Option<TaskPool>,
+    threads: usize,
+}
+
+impl ExecPool {
+    pub fn new(threads: usize) -> ExecPool {
+        let threads = threads.max(1);
+        let workers = if threads > 1 {
+            Some(TaskPool::new("exec", threads - 1))
+        } else {
+            None
+        };
+        ExecPool { workers, threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(i)` for every `i in 0..n_tasks`, potentially in parallel;
+    /// returns only after every invocation has completed. Each index is
+    /// claimed exactly once. A panic inside `f` is re-raised here after
+    /// the remaining shards finish.
+    pub fn run(&self, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        let Some(pool) = &self.workers else {
+            for i in 0..n_tasks {
+                f(i);
+            }
+            return;
+        };
+        if n_tasks == 1 {
+            f(0);
+            return;
+        }
+        let job = Arc::new(ShardJob::new(f, n_tasks));
+        // one runner per spare thread, never more than could claim a task
+        let runners = (self.threads - 1).min(n_tasks - 1);
+        for _ in 0..runners {
+            let j = job.clone();
+            // submit can only fail after shutdown; the caller's drain
+            // below completes every task itself in that case
+            let _ = pool.submit(move || j.drain());
+        }
+        {
+            // Workers hold a pointer into this stack frame: we must not
+            // return — or unwind past here — before every shard is done.
+            // The guard waits on drop, so even a panic inside the
+            // caller-thread drain below parks until the workers finish.
+            let _wait = WaitGuard { job: &job };
+            job.drain(); // the calling thread works too
+        }
+        if job.panicked.load(Ordering::SeqCst) {
+            panic!("exec shard task panicked");
+        }
+    }
+}
+
+/// One dispatched batch of shard tasks. Holds a lifetime-erased pointer
+/// to the caller's closure; see the safety argument on [`ShardJob::new`].
+struct ShardJob {
+    /// Points at the caller's `&dyn Fn(usize) + Sync`, valid until
+    /// `wait()` observes `done == n`.
+    f: *const (dyn Fn(usize) + Sync + 'static),
+    n: usize,
+    next: AtomicUsize,
+    done: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+// SAFETY: the raw pointer is only dereferenced by `drain`, and only for
+// claimed indices `< n`; `ExecPool::run` keeps the pointee alive (and the
+// `Sync` bound makes shared calls sound) until `wait()` confirms all `n`
+// completions. Runners that outlive the batch (queued but executed after
+// the tasks ran out) observe `next >= n` and never touch the pointer.
+unsafe impl Send for ShardJob {}
+unsafe impl Sync for ShardJob {}
+
+impl ShardJob {
+    fn new(f: &(dyn Fn(usize) + Sync), n: usize) -> ShardJob {
+        // SAFETY (lifetime erasure): `ExecPool::run` does not return until
+        // every task completed, so the borrow outlives every dereference.
+        let f = unsafe {
+            std::mem::transmute::<
+                *const (dyn Fn(usize) + Sync),
+                *const (dyn Fn(usize) + Sync + 'static),
+            >(f as *const _)
+        };
+        ShardJob {
+            f,
+            n,
+            next: AtomicUsize::new(0),
+            done: Mutex::new(0),
+            cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    /// Claim and execute tasks until none remain.
+    fn drain(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                return;
+            }
+            // the guard records completion even if `f` unwinds, so
+            // `wait()` can never deadlock on a panicked shard
+            let guard = CompletionGuard { job: self };
+            // SAFETY: i < n, so the batch is still live (see struct docs).
+            let f = unsafe { &*self.f };
+            f(i);
+            drop(guard);
+        }
+    }
+
+    fn wait(&self) {
+        let mut done = self.done.lock().unwrap();
+        while *done < self.n {
+            done = self.cv.wait(done).unwrap();
+        }
+    }
+}
+
+/// Blocks on drop until every task of the batch completed — the borrow
+/// safety backstop of [`ExecPool::run`].
+struct WaitGuard<'a> {
+    job: &'a ShardJob,
+}
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.job.wait();
+    }
+}
+
+struct CompletionGuard<'a> {
+    job: &'a ShardJob,
+}
+
+impl Drop for CompletionGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.job.panicked.store(true, Ordering::SeqCst);
+        }
+        let mut done = self.job.done.lock().unwrap();
+        *done += 1;
+        if *done == self.job.n {
+            self.job.cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_pool_runs_inline_in_order() {
+        let pool = ExecPool::new(1);
+        let order = Mutex::new(Vec::new());
+        pool.run(5, &|i| order.lock().unwrap().push(i));
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(pool.threads(), 1);
+    }
+
+    #[test]
+    fn parallel_pool_claims_each_task_exactly_once() {
+        let pool = ExecPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(97, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_dispatches() {
+        let pool = ExecPool::new(3);
+        for round in 0..50 {
+            let sum = AtomicUsize::new(0);
+            pool.run(10, &|i| {
+                sum.fetch_add(i + round, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 45 + 10 * round);
+        }
+    }
+
+    #[test]
+    fn borrowed_state_is_written_before_run_returns() {
+        let pool = ExecPool::new(4);
+        let slots: Vec<Mutex<Option<usize>>> = (0..40).map(|_| Mutex::new(None)).collect();
+        pool.run(40, &|i| {
+            // a little uneven work so threads interleave
+            let spin = (i % 5) * 10;
+            let mut acc = 0usize;
+            for k in 0..spin {
+                acc = acc.wrapping_add(std::hint::black_box(k));
+            }
+            *slots[i].lock().unwrap() = Some(i + acc.min(0));
+        });
+        for (i, s) in slots.iter().enumerate() {
+            assert_eq!(s.lock().unwrap().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn zero_and_single_task_edge_cases() {
+        let pool = ExecPool::new(4);
+        pool.run(0, &|_| panic!("must not be called"));
+        let hit = AtomicUsize::new(0);
+        pool.run(1, &|i| {
+            assert_eq!(i, 0);
+            hit.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    #[should_panic] // message depends on which thread hit the bad shard
+    fn shard_panic_propagates_to_caller() {
+        let pool = ExecPool::new(2);
+        pool.run(8, &|i| {
+            if i == 3 {
+                panic!("shard blew up");
+            }
+        });
+    }
+}

@@ -1,0 +1,271 @@
+//! Per-shard row-range kernels and the disjoint row-block splitter.
+//!
+//! Every helper here operates on a contiguous row range of a row-major
+//! matrix, reading shared inputs and writing into a borrowed output block
+//! — the building blocks `AopEngine`/`Mlp` assemble into sharded
+//! `fwd_score`/`apply` phases. Each kernel performs exactly the same
+//! per-element floating-point operations as its whole-matrix twin in
+//! `tensor::ops`, so a shard's rows are bit-identical to the rows the
+//! serial kernel would have produced (asserted by the tests below).
+
+use std::ops::Range;
+use std::sync::{Mutex, MutexGuard};
+
+use crate::exec::plan::ShardPlan;
+use crate::tensor::{ops, Matrix};
+
+/// Disjoint per-shard mutable views over one output buffer, indexable by
+/// shard id from concurrent shard tasks. Built on `chunks_mut`, so the
+/// disjointness is checked by the compiler, not by `unsafe`.
+pub struct RowBlocks<'a> {
+    blocks: Vec<Mutex<&'a mut [f32]>>,
+}
+
+impl<'a> RowBlocks<'a> {
+    /// Split a matrix into the plan's row blocks (block `i` holds rows
+    /// `plan.range(i)`).
+    pub fn of(m: &'a mut Matrix, plan: &ShardPlan) -> RowBlocks<'a> {
+        let cols = m.cols();
+        assert_eq!(m.rows(), plan.rows(), "matrix rows vs plan rows");
+        RowBlocks::of_slice(m.data_mut(), cols, plan)
+    }
+
+    /// Split a flat row-major buffer with `per_row` entries per row.
+    pub fn of_slice(v: &'a mut [f32], per_row: usize, plan: &ShardPlan) -> RowBlocks<'a> {
+        assert!(per_row > 0, "per_row must be positive");
+        assert_eq!(v.len(), plan.rows() * per_row, "buffer vs plan size");
+        let blocks = v
+            .chunks_mut(plan.granularity() * per_row)
+            .map(Mutex::new)
+            .collect();
+        RowBlocks { blocks }
+    }
+
+    /// Exclusive access to shard `i`'s block. Uncontended by design —
+    /// each shard task locks only its own index, the `Mutex` exists to
+    /// hand `&mut` access through a shared `&self`.
+    pub fn lock(&self, i: usize) -> MutexGuard<'_, &'a mut [f32]> {
+        self.blocks[i].lock().unwrap()
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+}
+
+/// The contiguous row-major block of `rows` of a matrix.
+pub fn rows_of(m: &Matrix, rows: Range<usize>) -> &[f32] {
+    let cols = m.cols();
+    &m.data()[rows.start * cols..rows.end * cols]
+}
+
+/// Forward rows: `out[r] = x[r] @ w + b` for `r` in `rows` (`out` is the
+/// `rows.len() × w.cols()` block). Same math as
+/// `x.matmul(w).add_row_broadcast(b)` restricted to the range.
+pub fn forward_rows(x: &Matrix, w: &Matrix, b: &[f32], rows: Range<usize>, out: &mut [f32]) {
+    let p = w.cols();
+    assert_eq!(b.len(), p);
+    ops::matmul_rows(x, w, rows, out);
+    for orow in out.chunks_exact_mut(p) {
+        for (v, &bias) in orow.iter_mut().zip(b.iter()) {
+            *v += bias;
+        }
+    }
+}
+
+/// Memory folding (alg. lines 3-4) for a row range:
+/// `out[r] = scale * src[r] + mem[r]` — the per-element op order matches
+/// `src.scale(scale)` + `axpy(1.0, mem)`.
+pub fn fold_rows(src: &Matrix, mem: &Matrix, scale: f32, rows: Range<usize>, out: &mut [f32]) {
+    fold_block(rows_of(src, rows.clone()), mem, scale, rows, out);
+}
+
+/// [`fold_rows`] where the fresh term is already a shard-local block
+/// (e.g. the just-computed loss-gradient rows).
+pub fn fold_block(
+    src_block: &[f32],
+    mem: &Matrix,
+    scale: f32,
+    rows: Range<usize>,
+    out: &mut [f32],
+) {
+    let mem_block = rows_of(mem, rows);
+    assert_eq!(src_block.len(), out.len());
+    assert_eq!(mem_block.len(), out.len());
+    for ((o, &s), &m) in out.iter_mut().zip(src_block.iter()).zip(mem_block.iter()) {
+        *o = scale * s + m;
+    }
+}
+
+/// Policy scores for a shard: `out[r] = ||xhat[r]|| * ||ghat[r]||` over
+/// the block-local rows (`xhat` is `rows × n`, `ghat` is `rows × p`).
+/// Same per-row ops as `ops::norm_product_scores`.
+pub fn score_rows(xhat: &[f32], ghat: &[f32], n: usize, p: usize, out: &mut [f32]) {
+    let rows = out.len();
+    assert_eq!(xhat.len(), rows * n);
+    assert_eq!(ghat.len(), rows * p);
+    for ((o, xr), gr) in out
+        .iter_mut()
+        .zip(xhat.chunks_exact(n))
+        .zip(ghat.chunks_exact(p))
+    {
+        *o = ops::dot(xr, xr).sqrt() * ops::dot(gr, gr).sqrt();
+    }
+}
+
+/// Column sums of a shard-local block (`rows × cols`), accumulated in
+/// row order — the shard partial of `Matrix::col_sums`.
+pub fn col_sums_rows(block: &[f32], cols: usize) -> Vec<f32> {
+    assert!(cols > 0 && block.len() % cols == 0);
+    let mut out = vec![0.0f32; cols];
+    for row in block.chunks_exact(cols) {
+        for (o, &v) in out.iter_mut().zip(row.iter()) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Memory retention (alg. lines 8-9) for a row range:
+/// `out[r] = keep[r] * src[r]` — the shard twin of `ops::row_scale`.
+pub fn keep_rows(src: &Matrix, keep: &[f32], rows: Range<usize>, out: &mut [f32]) {
+    let cols = src.cols();
+    assert_eq!(out.len(), rows.len() * cols);
+    for (local, r) in rows.enumerate() {
+        let k = keep[r];
+        let orow = &mut out[local * cols..(local + 1) * cols];
+        for (o, &s) in orow.iter_mut().zip(src.row(r).iter()) {
+            *o = s * k;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    fn randm(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        Matrix::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn row_blocks_are_disjoint_and_cover() {
+        let plan = ShardPlan::with_granularity(10, 4);
+        let mut m = Matrix::from_fn(10, 3, |r, c| (r * 3 + c) as f32);
+        let blocks = RowBlocks::of(&mut m, &plan);
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(blocks.lock(0).len(), 12);
+        assert_eq!(blocks.lock(2).len(), 6); // short tail block
+        // write through every block, then check the matrix saw it all
+        for i in 0..blocks.len() {
+            for v in blocks.lock(i).iter_mut() {
+                *v += 100.0;
+            }
+        }
+        drop(blocks);
+        assert!(m.data().iter().all(|&v| v >= 100.0));
+    }
+
+    #[test]
+    fn forward_rows_matches_serial_bitwise() {
+        let mut rng = Rng::new(0);
+        for (m, n, p) in [(20, 8, 3), (64, 784, 10), (7, 40, 2)] {
+            let x = randm(&mut rng, m, n);
+            let w = randm(&mut rng, n, p);
+            let b: Vec<f32> = (0..p).map(|_| rng.normal()).collect();
+            let serial = x.matmul(&w).add_row_broadcast(&b);
+            let plan = ShardPlan::with_granularity(m, 6);
+            let mut out = Matrix::zeros(m, p);
+            for (i, range) in plan.iter().enumerate() {
+                let blocks = RowBlocks::of(&mut out, &plan);
+                let mut blk = blocks.lock(i);
+                forward_rows(&x, &w, &b, range, &mut blk);
+            }
+            assert_eq!(out.data(), serial.data(), "({m},{n},{p})");
+        }
+    }
+
+    #[test]
+    fn fold_rows_matches_memory_fold_bitwise() {
+        use crate::aop::memory::MemoryState;
+        let mut rng = Rng::new(1);
+        let (m, n, p) = (18, 5, 2);
+        let mut ms = MemoryState::new(m, n, p, true);
+        ms.mem_x = randm(&mut rng, m, n);
+        ms.mem_g = randm(&mut rng, m, p);
+        let x = randm(&mut rng, m, n);
+        let g = randm(&mut rng, m, p);
+        let eta = 0.04f32;
+        let (xhat, ghat) = ms.fold(&x, &g, eta);
+        let se = eta.sqrt();
+        let plan = ShardPlan::with_granularity(m, 7);
+        let mut xh = Matrix::zeros(m, n);
+        let mut gh = Matrix::zeros(m, p);
+        for (i, range) in plan.iter().enumerate() {
+            let xb = RowBlocks::of(&mut xh, &plan);
+            fold_rows(&x, &ms.mem_x, se, range.clone(), &mut xb.lock(i));
+            let gb = RowBlocks::of(&mut gh, &plan);
+            fold_block(rows_of(&g, range.clone()), &ms.mem_g, se, range, &mut gb.lock(i));
+        }
+        assert_eq!(xh.data(), xhat.data());
+        assert_eq!(gh.data(), ghat.data());
+    }
+
+    #[test]
+    fn score_rows_matches_serial_bitwise() {
+        let mut rng = Rng::new(2);
+        let (m, n, p) = (23, 9, 4);
+        let xhat = randm(&mut rng, m, n);
+        let ghat = randm(&mut rng, m, p);
+        let serial = ops::norm_product_scores(&xhat, &ghat);
+        let plan = ShardPlan::with_granularity(m, 5);
+        let mut scores = vec![0.0f32; m];
+        for (i, range) in plan.iter().enumerate() {
+            let blocks = RowBlocks::of_slice(&mut scores, 1, &plan);
+            let mut blk = blocks.lock(i);
+            score_rows(
+                rows_of(&xhat, range.clone()),
+                rows_of(&ghat, range.clone()),
+                n,
+                p,
+                &mut blk,
+            );
+        }
+        assert_eq!(scores, serial);
+    }
+
+    #[test]
+    fn col_sums_partials_cover_col_sums() {
+        let mut rng = Rng::new(3);
+        let g = randm(&mut rng, 16, 3);
+        // single full-range partial == serial col_sums exactly
+        let full = col_sums_rows(rows_of(&g, 0..16), 3);
+        assert_eq!(full, g.col_sums());
+        // split partials sum to the same within f32 grouping tolerance
+        let a = col_sums_rows(rows_of(&g, 0..9), 3);
+        let b = col_sums_rows(rows_of(&g, 9..16), 3);
+        for c in 0..3 {
+            assert!((a[c] + b[c] - full[c]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn keep_rows_matches_row_scale_bitwise() {
+        let mut rng = Rng::new(4);
+        let src = randm(&mut rng, 12, 6);
+        let keep: Vec<f32> = (0..12).map(|i| (i % 3 == 0) as u32 as f32).collect();
+        let serial = ops::row_scale(&src, &keep);
+        let plan = ShardPlan::with_granularity(12, 5);
+        let mut out = Matrix::zeros(12, 6);
+        for (i, range) in plan.iter().enumerate() {
+            let blocks = RowBlocks::of(&mut out, &plan);
+            keep_rows(&src, &keep, range, &mut blocks.lock(i));
+        }
+        assert_eq!(out.data(), serial.data());
+    }
+}

@@ -25,6 +25,13 @@
 //! persisted through `coordinator::checkpoint` so the run registry
 //! survives restarts. See README.md for the wire protocol.
 //!
+//! Underneath the native trainer sits the [`exec`] subsystem — a
+//! deterministic data-parallel execution engine: batch rows are sharded
+//! on a fixed grid across a persistent worker pool and reduced in fixed
+//! shard order, so any `threads` setting (config field, `--threads`
+//! flag, serve protocol) produces bit-identical curves and weights —
+//! the thread count is a speed knob, never a hyperparameter.
+//!
 //! Builds are offline-first: the PJRT execution path is gated behind the
 //! `hlo` cargo feature (default off), so `cargo build && cargo test`
 //! needs no XLA toolchain — `--backend hlo` then reports a clear
@@ -35,6 +42,7 @@
 pub mod aop;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod metrics;
 pub mod model;
 pub mod runtime;

@@ -50,6 +50,11 @@ fn app() -> App {
                 .opt("seed", "0", "RNG seed")
                 .opt("backend", "hlo", "hlo (PJRT artifacts) | native (pure Rust)")
                 .opt("data-scale", "1.0", "fraction of Tab. I dataset size (mnist)")
+                .opt(
+                    "threads",
+                    "1",
+                    "data-parallel training threads (native backend; bit-identical curves at any value)",
+                )
                 .opt("save", "", "write final weights+memories to this checkpoint path")
                 .flag("no-memory", "disable error-feedback memory")
                 .flag("quiet", "suppress per-epoch output"),
@@ -154,6 +159,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.backend = Backend::parse(args.get("backend").unwrap_or("hlo"))
         .ok_or_else(|| anyhow!("bad --backend"))?;
     cfg.data_scale = args.get_parse("data-scale")?;
+    cfg.threads = args.get_parse("threads")?;
     cfg.memory = !args.flag("no-memory");
     if cfg.policy == Policy::Exact {
         cfg.memory = false;
@@ -161,7 +167,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.validate()?;
 
     println!(
-        "training {} / {} (K={}/{}, backend={}, {} epochs, lr={}, seed={})",
+        "training {} / {} (K={}/{}, backend={}, {} epochs, lr={}, seed={}, threads={})",
         cfg.task.name(),
         cfg.label(),
         cfg.k,
@@ -169,7 +175,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.backend.name(),
         cfg.epochs,
         cfg.lr,
-        cfg.seed
+        cfg.seed,
+        cfg.threads
     );
     let r = experiment::run(&cfg)?;
     if !args.flag("quiet") {
@@ -187,10 +194,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         print_table(&["epoch", "train", "val", "acc", "mem_fro", "s"], &rows);
     }
     println!(
-        "final val loss {:.6} (best {:.6}); backward FLOPs {:.3e}",
+        "final val loss {:.6} (best {:.6}); backward FLOPs {:.3e} ({:.3e}/s); {:.0} rows/s",
         r.final_val_loss(),
         r.curve.best_val_loss(),
-        r.curve.total_backward_flops() as f64
+        r.curve.total_backward_flops() as f64,
+        r.curve.backward_flops_per_sec(),
+        r.curve.mean_rows_per_sec()
     );
     if let Some(path) = args.get("save").filter(|s| !s.is_empty()) {
         use mem_aop_gd::coordinator::checkpoint::Checkpoint;

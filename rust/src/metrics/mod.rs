@@ -22,7 +22,12 @@ pub struct EpochMetrics {
     pub mem_fro: f32,
     /// Cumulative FLOPs spent on weight-gradient computation so far.
     pub backward_flops: u64,
-    /// Wall-clock seconds spent training this epoch.
+    /// Training-row throughput of this epoch (mini-batch rows processed
+    /// per second of training time, validation excluded; 0 = unknown).
+    /// This is the `exec` subsystem's measured — not asserted — speedup
+    /// axis: same curve bits at any `threads`, different rows/sec.
+    pub rows_per_sec: f64,
+    /// Wall-clock seconds spent on this epoch (training + validation).
     pub wall_s: f64,
 }
 
@@ -94,6 +99,31 @@ impl RunCurve {
         self.epochs.last().map(|m| m.backward_flops).unwrap_or(0)
     }
 
+    /// Mean training-row throughput over epochs that recorded one
+    /// (NaN for an empty/unknown curve).
+    pub fn mean_rows_per_sec(&self) -> f64 {
+        let known: Vec<f64> = self
+            .epochs
+            .iter()
+            .map(|m| m.rows_per_sec)
+            .filter(|&r| r > 0.0)
+            .collect();
+        if known.is_empty() {
+            return f64::NAN;
+        }
+        known.iter().sum::<f64>() / known.len() as f64
+    }
+
+    /// Backward weight-gradient FLOP throughput: cumulative backward
+    /// FLOPs over total wall time (0 when unknown).
+    pub fn backward_flops_per_sec(&self) -> f64 {
+        let wall = self.total_wall_s();
+        if wall <= 0.0 {
+            return 0.0;
+        }
+        self.total_backward_flops() as f64 / wall
+    }
+
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("label", json::s(&self.label)),
@@ -112,6 +142,7 @@ impl RunCurve {
                                 ("wstar_fro", json::num(m.wstar_fro as f64)),
                                 ("mem_fro", json::num(m.mem_fro as f64)),
                                 ("backward_flops", json::num(m.backward_flops as f64)),
+                                ("rows_per_sec", json::num(m.rows_per_sec)),
                                 ("wall_s", json::num(m.wall_s)),
                             ])
                         })
@@ -154,6 +185,11 @@ impl RunCurve {
                 wstar_fro: num("wstar_fro")? as f32,
                 mem_fro: num("mem_fro")? as f32,
                 backward_flops: num("backward_flops")? as u64,
+                // optional: absent from pre-exec persisted runs
+                rows_per_sec: e
+                    .get("rows_per_sec")
+                    .and_then(|n| n.as_f64())
+                    .unwrap_or(0.0),
                 wall_s: num("wall_s")?,
             });
         }
@@ -239,6 +275,7 @@ mod tests {
             wstar_fro: 1.0,
             mem_fro: 0.1,
             backward_flops: (epoch as u64) * 100,
+            rows_per_sec: 1000.0,
             wall_s: 0.01,
         }
     }
@@ -253,6 +290,32 @@ mod tests {
         assert_eq!(c.best_val_loss(), 2.0);
         assert!((c.tail_mean_val_loss(2) - 2.25).abs() < 1e-6);
         assert_eq!(c.total_backward_flops(), 300);
+        assert!((c.mean_rows_per_sec() - 1000.0).abs() < 1e-9);
+        assert!((c.backward_flops_per_sec() - 300.0 / 0.03).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rows_per_sec_is_optional_in_json() {
+        // curves persisted before the exec subsystem lack the field
+        let mut c = RunCurve::new("old");
+        c.push(m(1, 1.0));
+        let mut j = c.to_json();
+        if let Json::Obj(pairs) = &mut j {
+            for (k, v) in pairs.iter_mut() {
+                if k == "epochs" {
+                    if let Json::Arr(arr) = v {
+                        for e in arr.iter_mut() {
+                            if let Json::Obj(ep) = e {
+                                ep.retain(|(k, _)| k != "rows_per_sec");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let r = RunCurve::from_json(&j).unwrap();
+        assert_eq!(r.epochs[0].rows_per_sec, 0.0);
+        assert!(r.mean_rows_per_sec().is_nan());
     }
 
     #[test]

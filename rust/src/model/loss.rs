@@ -64,25 +64,134 @@ impl LossKind {
     pub fn loss(&self, o: &Matrix, y: &Matrix) -> f32 {
         self.loss_and_grad(o, y).0
     }
+
+    // --- row-range API (the `exec` subsystem's shard kernels) ---------
+    //
+    // A shard computes `partial_loss` over its rows; the coordinator sums
+    // the partials in fixed shard order and normalizes with
+    // `finish_loss`. Gradients are row-local, so `grad_rows` is bitwise
+    // the restriction of `loss_and_grad`'s gradient to the range.
+
+    /// Unnormalized loss contribution of `rows`, whose forward outputs
+    /// are the shard-local block `o_rows` (`rows.len() × y.cols()`,
+    /// row-major). MSE: Σ (o−y)²; CCE: Σ y·log-softmax(o) (note: *not*
+    /// yet negated — `finish_loss` applies sign and normalizer).
+    pub fn partial_loss(&self, o_rows: &[f32], y: &Matrix, rows: std::ops::Range<usize>) -> f32 {
+        let p = y.cols();
+        assert_eq!(o_rows.len(), rows.len() * p, "output block size");
+        match self {
+            LossKind::Mse => {
+                let mut acc = 0.0f32;
+                for (local, r) in rows.enumerate() {
+                    let orow = &o_rows[local * p..(local + 1) * p];
+                    for (ov, &yv) in orow.iter().zip(y.row(r).iter()) {
+                        let d = ov - yv;
+                        acc += d * d;
+                    }
+                }
+                acc
+            }
+            LossKind::SoftmaxCrossEntropy => {
+                let mut acc = 0.0f32;
+                for (local, r) in rows.enumerate() {
+                    let orow = &o_rows[local * p..(local + 1) * p];
+                    // stable log-softmax, same math as `log_softmax_rows`
+                    let mx = orow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let lse = orow.iter().map(|v| (v - mx).exp()).sum::<f32>().ln();
+                    for (ov, &yv) in orow.iter().zip(y.row(r).iter()) {
+                        acc += yv * (ov - mx - lse);
+                    }
+                }
+                acc
+            }
+        }
+    }
+
+    /// Normalize a fixed-order total of [`LossKind::partial_loss`] values
+    /// for a batch of `batch_rows × cols` outputs.
+    pub fn finish_loss(&self, total: f32, batch_rows: usize, cols: usize) -> f32 {
+        match self {
+            LossKind::Mse => total / (batch_rows * cols) as f32,
+            LossKind::SoftmaxCrossEntropy => -total / batch_rows as f32,
+        }
+    }
+
+    /// Output-gradient rows for `rows` into `g_rows` (same block shape as
+    /// `o_rows`). `batch_rows` is the full mini-batch size — the gradient
+    /// normalizer depends on it, not on the shard size.
+    pub fn grad_rows(
+        &self,
+        o_rows: &[f32],
+        y: &Matrix,
+        rows: std::ops::Range<usize>,
+        batch_rows: usize,
+        g_rows: &mut [f32],
+    ) {
+        let p = y.cols();
+        assert_eq!(o_rows.len(), rows.len() * p, "output block size");
+        assert_eq!(g_rows.len(), o_rows.len(), "gradient block size");
+        match self {
+            LossKind::Mse => {
+                let c = 2.0 / (batch_rows * p) as f32;
+                for (local, r) in rows.enumerate() {
+                    let orow = &o_rows[local * p..(local + 1) * p];
+                    let grow = &mut g_rows[local * p..(local + 1) * p];
+                    for ((gv, ov), &yv) in grow.iter_mut().zip(orow.iter()).zip(y.row(r).iter()) {
+                        *gv = (ov - yv) * c;
+                    }
+                }
+            }
+            LossKind::SoftmaxCrossEntropy => {
+                let c = 1.0 / batch_rows as f32;
+                for (local, r) in rows.enumerate() {
+                    let orow = &o_rows[local * p..(local + 1) * p];
+                    let grow = &mut g_rows[local * p..(local + 1) * p];
+                    // stable softmax, same math as `softmax_rows`
+                    let mx = orow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut sum = 0.0f32;
+                    for (gv, ov) in grow.iter_mut().zip(orow.iter()) {
+                        *gv = (ov - mx).exp();
+                        sum += *gv;
+                    }
+                    for (gv, &yv) in grow.iter_mut().zip(y.row(r).iter()) {
+                        *gv = (*gv / sum - yv) * c;
+                    }
+                }
+            }
+        }
+    }
 }
 
-/// Argmax-agreement accuracy (classification diagnostics).
-pub fn accuracy(o: &Matrix, y: &Matrix) -> f32 {
-    assert_eq!(o.shape(), y.shape());
+/// Index of a row's largest entry (first wins on ties/NaN) — the one
+/// argmax both [`accuracy`] and [`correct_rows`] share, so their
+/// tie-breaking can never drift apart.
+fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Argmax-agreement count over a row range (shard partial of
+/// [`accuracy`]; integer, so exact under any reduction order).
+pub fn correct_rows(o_rows: &[f32], y: &Matrix, rows: std::ops::Range<usize>) -> usize {
+    let p = y.cols();
+    assert_eq!(o_rows.len(), rows.len() * p, "output block size");
     let mut correct = 0usize;
-    for r in 0..o.rows() {
-        let am = |row: &[f32]| -> usize {
-            row.iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-                .map(|(i, _)| i)
-                .unwrap_or(0)
-        };
-        if am(o.row(r)) == am(y.row(r)) {
+    for (local, r) in rows.enumerate() {
+        if argmax(&o_rows[local * p..(local + 1) * p]) == argmax(y.row(r)) {
             correct += 1;
         }
     }
-    correct as f32 / o.rows() as f32
+    correct
+}
+
+/// Argmax-agreement accuracy (classification diagnostics). Delegates to
+/// [`correct_rows`] over the whole batch — one argmax definition.
+pub fn accuracy(o: &Matrix, y: &Matrix) -> f32 {
+    assert_eq!(o.shape(), y.shape());
+    correct_rows(o.data(), y, 0..o.rows()) as f32 / o.rows() as f32
 }
 
 #[cfg(test)]
@@ -149,6 +258,54 @@ mod tests {
         let o = Matrix::from_vec(3, 2, vec![0.9, 0.1, 0.2, 0.8, 0.6, 0.4]);
         let y = Matrix::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 0.0, 1.0]);
         assert!((accuracy(&o, &y) - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn row_range_api_matches_whole_batch() {
+        let mut rng = Rng::new(9);
+        for kind in [LossKind::Mse, LossKind::SoftmaxCrossEntropy] {
+            let (m, p) = (13, 4);
+            let o = Matrix::from_fn(m, p, |_, _| rng.normal());
+            let y = match kind {
+                LossKind::Mse => Matrix::from_fn(m, p, |_, _| rng.normal()),
+                LossKind::SoftmaxCrossEntropy => {
+                    Matrix::from_fn(m, p, |r, c| ((r % p) == c) as u32 as f32)
+                }
+            };
+            let (loss, g) = kind.loss_and_grad(&o, &y);
+
+            // single full-range shard: loss and gradient match serial
+            let full = kind.partial_loss(o.data(), &y, 0..m);
+            assert!((kind.finish_loss(full, m, p) - loss).abs() < 1e-6, "{kind:?}");
+            let mut g_full = vec![0.0f32; m * p];
+            kind.grad_rows(o.data(), &y, 0..m, m, &mut g_full);
+            assert_eq!(&g_full[..], g.data(), "{kind:?} grad bitwise");
+
+            // split shards: gradients bitwise, loss within grouping tol
+            let mut total = 0.0f32;
+            for lo in (0..m).step_by(5) {
+                let hi = (lo + 5).min(m);
+                let ob = &o.data()[lo * p..hi * p];
+                total += kind.partial_loss(ob, &y, lo..hi);
+                let mut gb = vec![0.0f32; (hi - lo) * p];
+                kind.grad_rows(ob, &y, lo..hi, m, &mut gb);
+                assert_eq!(&gb[..], &g.data()[lo * p..hi * p], "{kind:?} rows {lo}..{hi}");
+            }
+            assert!(
+                (kind.finish_loss(total, m, p) - loss).abs() < 1e-5,
+                "{kind:?} sharded loss"
+            );
+        }
+    }
+
+    #[test]
+    fn correct_rows_partials_sum_to_accuracy() {
+        let o = Matrix::from_vec(3, 2, vec![0.9, 0.1, 0.2, 0.8, 0.6, 0.4]);
+        let y = Matrix::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 0.0, 1.0]);
+        let total = correct_rows(&o.data()[0..2], &y, 0..1)
+            + correct_rows(&o.data()[2..6], &y, 1..3);
+        assert_eq!(total, 2);
+        assert!((total as f32 / 3.0 - accuracy(&o, &y)).abs() < 1e-6);
     }
 
     #[test]

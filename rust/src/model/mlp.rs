@@ -8,7 +8,8 @@
 //! `mlp_train_step` operation-for-operation.
 
 use crate::aop::{policy, MemoryState, Policy};
-use crate::model::activations::{relu, relu_grad_mask};
+use crate::exec::{reduce, shard, Executor};
+use crate::model::activations::relu;
 use crate::model::loss::{accuracy, LossKind};
 use crate::tensor::rng::Rng;
 use crate::tensor::{init, ops, Matrix};
@@ -128,6 +129,7 @@ impl Mlp {
     ///
     /// `state.memories[i]` must match layer i's batch/input/output dims.
     /// The RNG drives the stochastic selection policies.
+    /// Serial (`threads = 1`) case of [`Mlp::train_step_aop_exec`].
     pub fn train_step_aop(
         &mut self,
         x: &Matrix,
@@ -136,11 +138,72 @@ impl Mlp {
         state: &mut MlpAopState,
         rng: &mut Rng,
     ) -> MlpStepInfo {
+        self.train_step_aop_exec(x, y, eta, state, rng, &Executor::serial())
+    }
+
+    /// Data-parallel Mem-AOP-GD step: forward rows, per-layer memory
+    /// folding/scores/bias sums, the per-layer partial outer products and
+    /// the backward chain (eq. (2a)) all run row-sharded on the
+    /// executor's fixed grid; per-layer `out_K` selection stays on the
+    /// calling thread (global scores, sequential RNG) so decisions are
+    /// identical at every thread count, and all reductions combine in
+    /// fixed shard order — curves and weights are bit-identical for any
+    /// `threads`.
+    pub fn train_step_aop_exec(
+        &mut self,
+        x: &Matrix,
+        y: &Matrix,
+        eta: f32,
+        state: &mut MlpAopState,
+        rng: &mut Rng,
+        exec: &Executor,
+    ) -> MlpStepInfo {
         let n = self.layers.len();
         assert_eq!(state.memories.len(), n);
-        let (acts, zs) = self.forward_trace(x);
-        let (loss, mut g) = self.loss.loss_and_grad(&acts[n], y);
-        let acc = accuracy(&acts[n], y);
+        let m = x.rows();
+        let plan = exec.plan(m);
+        let se = eta.sqrt();
+
+        // Forward trace, row-sharded per layer (activations are
+        // row-local; relu is applied serially — elementwise, identical
+        // at any thread count).
+        let mut acts: Vec<Matrix> = Vec::with_capacity(n + 1);
+        let mut zs: Vec<Matrix> = Vec::with_capacity(n);
+        acts.push(x.clone());
+        for (li, layer) in self.layers.iter().enumerate() {
+            let p = layer.fan_out();
+            let mut z = Matrix::zeros(m, p);
+            {
+                let prev = &acts[li];
+                let zb = shard::RowBlocks::of(&mut z, &plan);
+                exec.run_each(&plan, |i, rows| {
+                    let mut blk = zb.lock(i);
+                    shard::forward_rows(prev, &layer.w, &layer.b, rows, &mut blk);
+                });
+            }
+            let h = if li + 1 < n { relu(&z) } else { z.clone() };
+            zs.push(z);
+            acts.push(h);
+        }
+
+        // Head loss + output gradient, row-sharded.
+        let out = &acts[n];
+        let p_out = out.cols();
+        let mut g = Matrix::zeros(m, p_out);
+        let loss_parts: Vec<f32> = {
+            let gb = shard::RowBlocks::of(&mut g, &plan);
+            exec.map(&plan, |i, rows| {
+                let ob = shard::rows_of(out, rows.clone());
+                let lp = self.loss.partial_loss(ob, y, rows.clone());
+                let mut blk = gb.lock(i);
+                self.loss.grad_rows(ob, y, rows, m, &mut blk);
+                lp
+            })
+        };
+        let loss = self
+            .loss
+            .finish_loss(reduce::sum_f32(loss_parts), m, p_out);
+        let acc = accuracy(out, y);
 
         let mut k_eff = 0usize;
         // Backward: compute each layer's update from the *pre-update*
@@ -149,8 +212,24 @@ impl Mlp {
         for i in (0..n).rev() {
             let xin = &acts[i];
             let mem = &mut state.memories[i];
-            let (xhat, ghat) = mem.fold(xin, &g, eta);
-            let scores = ops::norm_product_scores(&xhat, &ghat);
+            let (nf, pf) = (xin.cols(), g.cols());
+            let mut xhat = Matrix::zeros(m, nf);
+            let mut ghat = Matrix::zeros(m, pf);
+            let mut scores = vec![0.0f32; m];
+            let db_parts: Vec<Vec<f32>> = {
+                let xh_blocks = shard::RowBlocks::of(&mut xhat, &plan);
+                let gh_blocks = shard::RowBlocks::of(&mut ghat, &plan);
+                let sc_blocks = shard::RowBlocks::of_slice(&mut scores, 1, &plan);
+                exec.map(&plan, |si, rows| {
+                    let mut xh = xh_blocks.lock(si);
+                    shard::fold_rows(xin, &mem.mem_x, se, rows.clone(), &mut xh);
+                    let mut gh = gh_blocks.lock(si);
+                    shard::fold_rows(&g, &mem.mem_g, se, rows.clone(), &mut gh);
+                    let mut sc = sc_blocks.lock(si);
+                    shard::score_rows(&xh, &gh, nf, pf, &mut sc);
+                    shard::col_sums_rows(shard::rows_of(&g, rows), pf)
+                })
+            };
             let sel = policy::select(
                 state.policy,
                 &scores,
@@ -159,26 +238,59 @@ impl Mlp {
                 rng,
             );
             k_eff += sel.k_effective();
-            let wstar = ops::masked_outer_compact(&xhat, &ghat, &sel.compact_pairs());
+            let pairs = sel.compact_pairs();
+            let wstar_parts: Vec<Option<Matrix>> = exec.map(&plan, |_, rows| {
+                let local: Vec<(usize, f32)> = pairs
+                    .iter()
+                    .copied()
+                    .filter(|(r, _)| rows.contains(r))
+                    .collect();
+                if local.is_empty() {
+                    None
+                } else {
+                    Some(ops::masked_outer_compact(&xhat, &ghat, &local))
+                }
+            });
+            let wstar = reduce::sum_matrices(nf, pf, wstar_parts);
             let layer = &self.layers[i];
             let w_new = layer.w.sub(&wstar);
-            let db = g.col_sums();
+            let db = reduce::sum_vecs(pf, db_parts.iter().map(|d| d.as_slice()));
             let b_new: Vec<f32> = layer
                 .b
                 .iter()
                 .zip(db.iter())
                 .map(|(b, d)| b - eta * d)
                 .collect();
-            mem.update(&xhat, &ghat, &sel.keep);
+            if mem.enabled {
+                let mx_blocks = shard::RowBlocks::of(&mut mem.mem_x, &plan);
+                let mg_blocks = shard::RowBlocks::of(&mut mem.mem_g, &plan);
+                exec.run_each(&plan, |si, rows| {
+                    let mut mx = mx_blocks.lock(si);
+                    shard::keep_rows(&xhat, &sel.keep, rows.clone(), &mut mx);
+                    let mut mg = mg_blocks.lock(si);
+                    shard::keep_rows(&ghat, &sel.keep, rows, &mut mg);
+                });
+            }
             new_weights.push((w_new, b_new));
 
             if i > 0 {
-                // eq. (2a): G_i = G_{i+1} W_i^T ⊙ relu'(z_{i-1})
-                let back = g.matmul(&layer.w.transpose());
-                let mask = relu_grad_mask(&zs[i - 1]);
-                g = Matrix::from_fn(back.rows(), back.cols(), |r, c| {
-                    back[(r, c)] * mask[(r, c)]
-                });
+                // eq. (2a): G_i = G_{i+1} W_i^T ⊙ relu'(z_{i-1}) —
+                // row-local, so sharding is bitwise-free
+                let wt = layer.w.transpose();
+                let z_prev = &zs[i - 1];
+                let mut g_next = Matrix::zeros(m, nf);
+                {
+                    let gn_blocks = shard::RowBlocks::of(&mut g_next, &plan);
+                    exec.run_each(&plan, |si, rows| {
+                        let mut blk = gn_blocks.lock(si);
+                        ops::matmul_rows(&g, &wt, rows.clone(), &mut blk);
+                        let zb = shard::rows_of(z_prev, rows);
+                        for (v, &z) in blk.iter_mut().zip(zb.iter()) {
+                            *v *= (z > 0.0) as u32 as f32;
+                        }
+                    });
+                }
+                g = g_next;
             }
         }
         for (i, (w, b)) in new_weights.into_iter().enumerate() {

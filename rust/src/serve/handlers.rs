@@ -139,6 +139,9 @@ impl ServerState {
             ("requests_total", json::num(self.requests.load(Ordering::Relaxed) as f64)),
             ("queue_depth", json::num(self.scheduler.queue_depth() as f64)),
             ("workers", json::num(self.scheduler.worker_count() as f64)),
+            // thread-slot budget: a running job holds `threads` slots
+            ("slots_total", json::num(self.scheduler.worker_count() as f64)),
+            ("slots_free", json::num(self.scheduler.slots_free() as f64)),
             ("jobs_per_sec", json::num(jobs_per_sec)),
             (
                 "jobs",
@@ -286,6 +289,26 @@ mod tests {
         assert!(is_ok(&s));
         assert_eq!(s.get("state").unwrap().as_str().unwrap(), "shutting-down");
         assert!(st.shutdown_requested());
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn oversized_threads_request_is_a_protocol_error() {
+        let st = state(); // 2-slot scheduler
+        let mut cfg = quick_cfg(0);
+        cfg.threads = 8;
+        let r = st.handle(&json::obj(vec![
+            ("op", json::s("submit")),
+            ("config", cfg.to_json()),
+        ]));
+        assert!(!is_ok(&r));
+        let err = r.get("error").unwrap().as_str().unwrap();
+        assert!(err.contains("threads=8"), "{err}");
+
+        let m = st.handle(&json::obj(vec![("op", json::s("metrics"))]));
+        assert!(is_ok(&m));
+        assert_eq!(m.get("slots_total").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(m.get("slots_free").unwrap().as_usize().unwrap(), 2);
         st.scheduler.shutdown();
     }
 

@@ -12,10 +12,12 @@
 //! * [`registry`] — the authoritative job table
 //!   (`queued → running → done | failed | cancelled`), persisted through
 //!   `coordinator::checkpoint` so completed runs survive restarts;
-//! * [`queue`] — bounded FIFO + fixed worker pool driving
-//!   `experiment::run_with` with per-epoch progress streaming and
-//!   epoch-boundary cancellation; graceful shutdown drains every accepted
-//!   job;
+//! * [`queue`] — bounded FIFO over the shared `util::pool::TaskPool`
+//!   driving `experiment::run_with` with per-epoch progress streaming,
+//!   epoch-boundary cancellation, and thread-slot accounting for
+//!   data-parallel jobs (a `threads = t` job holds `t` of the server's
+//!   `--workers` slots; oversized jobs are rejected, never deadlocked);
+//!   graceful shutdown drains every accepted job;
 //! * [`handlers`] — socket-free request dispatch ([`ServerState`]);
 //! * [`server`] — the accept loop ([`Server`] / [`ServeOptions`]).
 //!

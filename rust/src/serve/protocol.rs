@@ -18,9 +18,17 @@
 //!
 //! Every response carries `"ok": true` or `"ok": false` + `"error"`.
 //! The `config` object is exactly `ExperimentConfig::to_json` (task,
-//! policy, k, memory, epochs, lr, schedule, seed, backend, data_scale);
-//! the `curve` object is `RunCurve::to_json` (per-epoch losses, accuracy,
-//! memory mass, cumulative backward FLOPs from `aop::flops`).
+//! policy, k, memory, epochs, lr, schedule, seed, backend, data_scale,
+//! threads); the `curve` object is `RunCurve::to_json` (per-epoch
+//! losses, accuracy, memory mass, cumulative backward FLOPs from
+//! `aop::flops`, rows/sec throughput).
+//!
+//! `threads` (protocol v2, optional — v1 frames default to 1) is the
+//! job's data-parallel worker count: the scheduler accounts `threads`
+//! pool slots for it while it runs, and rejects at submission any job
+//! whose `threads` exceeds the server's slot budget. Determinism
+//! guarantee: `threads` never changes a job's curve or final weights,
+//! only its wall-clock (see the `exec` subsystem docs).
 //!
 //! [`Client`] is a small blocking client used by `examples/serve_client.rs`
 //! and the integration tests.
@@ -36,7 +44,9 @@ use crate::metrics::RunCurve;
 use crate::util::json::{self, Json};
 
 /// Version stamp reported by `ping` (bump on wire-format changes).
-pub const PROTOCOL_VERSION: u64 = 1;
+/// v2: `config.threads` field + scheduler slot accounting (`metrics`
+/// reports `slots_total`/`slots_free`); v1 frames remain accepted.
+pub const PROTOCOL_VERSION: u64 = 2;
 
 /// A parsed client request.
 #[derive(Debug, Clone)]

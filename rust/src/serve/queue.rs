@@ -1,152 +1,256 @@
-//! Bounded job scheduler: a fixed pool of worker threads draining a
-//! FIFO queue of registry job ids.
+//! Bounded job scheduler: training jobs drained FIFO by the shared
+//! [`util::pool::TaskPool`](crate::util::pool::TaskPool) worker pool,
+//! with *thread-slot* accounting for data-parallel jobs.
 //!
-//! The design mirrors `util::pool`'s scoped workers but for a long-lived
-//! service: workers block on a condvar, pop ids in submission order, and
-//! drive [`experiment::run_with`](crate::coordinator::experiment::run_with)
-//! with an observer that streams per-epoch progress into the registry and
-//! honours cancellation at epoch boundaries. Submission is bounded — a
-//! full queue rejects rather than buffering without limit — and
-//! [`Scheduler::shutdown`] is graceful: it drains every queued job, then
-//! joins the workers, so no accepted job is ever dropped.
+//! The server's `--workers` value is a budget of **slots** — total
+//! training threads across concurrently running jobs. A job with
+//! `config.threads = t` occupies `t` slots for its whole run (its
+//! `exec` pool spawns `t - 1` extra threads beside the pool worker
+//! driving it), so an 8-slot server runs eight `threads=1` jobs, or two
+//! `threads=4` jobs, at a time. Jobs that could never fit
+//! (`threads > slots_total`) are rejected at submission with a clear
+//! protocol error instead of deadlocking the queue; jobs that fit but
+//! must wait park on a condvar until running jobs release their slots.
+//!
+//! Submission is bounded — a full queue rejects rather than buffering
+//! without limit — and [`Scheduler::shutdown`] is graceful: it drains
+//! every queued job, then joins the workers, so no accepted job is ever
+//! dropped.
 
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::experiment;
 use crate::serve::registry::Registry;
+use crate::util::pool::TaskPool;
 
-/// Worker pool + bounded FIFO of job ids.
+/// Worker pool + bounded FIFO of job ids + slot accounting.
 pub struct Scheduler {
     shared: Arc<Shared>,
-    workers: Mutex<Vec<JoinHandle<()>>>,
-    n_workers: usize,
+    pool: TaskPool,
+    capacity: usize,
 }
 
 struct Shared {
     registry: Arc<Registry>,
-    queue: Mutex<VecDeque<u64>>,
-    cv: Condvar,
-    shutdown: AtomicBool,
-    capacity: usize,
+    /// Slot ledger + admission counter; waiters park on `slot_cv`.
+    slots: Mutex<SlotState>,
+    slot_cv: Condvar,
+    slots_total: usize,
+}
+
+struct SlotState {
+    /// Training-thread slots not held by a running job.
+    free: usize,
+    /// Jobs accepted but not yet running (queued for a worker, or
+    /// claimed by one and waiting for slots) — the capacity bound and
+    /// `queue_depth` both count these, so a job blocked on slots can
+    /// neither vanish from the metrics nor sneak past the bound.
+    admitted: usize,
+    /// FIFO tickets for slot acquisition: `next_ticket` is issued when a
+    /// worker reaches `SlotGuard::acquire`, `now_serving` gates who may
+    /// take slots. Without this a high-`threads` job waiting for N
+    /// simultaneously-free slots could be overtaken forever by a stream
+    /// of small jobs (starvation); with it, acquisition follows the
+    /// order in which workers pick jobs up (≈ queue order, not a strict
+    /// submission-order guarantee when several workers race), at the
+    /// cost of head-of-line blocking while a wide job waits.
+    next_ticket: u64,
+    now_serving: u64,
 }
 
 impl Scheduler {
-    /// Spawn `workers` (≥1) threads over `registry`, with at most
-    /// `capacity` (≥1) jobs queued at any time.
+    /// Spawn a pool of `workers` (≥1) threads over `registry` — also the
+    /// slot budget — with at most `capacity` (≥1) jobs queued at a time.
     pub fn start(registry: Arc<Registry>, workers: usize, capacity: usize) -> Scheduler {
-        let n_workers = workers.max(1);
+        let slots_total = workers.max(1);
         let shared = Arc::new(Shared {
             registry,
-            queue: Mutex::new(VecDeque::new()),
-            cv: Condvar::new(),
-            shutdown: AtomicBool::new(false),
-            capacity: capacity.max(1),
+            slots: Mutex::new(SlotState {
+                free: slots_total,
+                admitted: 0,
+                next_ticket: 0,
+                now_serving: 0,
+            }),
+            slot_cv: Condvar::new(),
+            slots_total,
         });
-        let handles = (0..n_workers)
-            .map(|i| {
-                let sh = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("serve-worker-{i}"))
-                    .spawn(move || worker_loop(&sh))
-                    .expect("spawning scheduler worker")
-            })
-            .collect();
         Scheduler {
             shared,
-            workers: Mutex::new(handles),
-            n_workers,
+            pool: TaskPool::new("serve-worker", slots_total),
+            capacity: capacity.max(1),
         }
     }
 
-    /// Register and enqueue a job; rejects when shutting down or full.
+    /// Register and enqueue a job; rejects when shutting down, when the
+    /// queue is full, or when the job's `threads` exceeds the pool's
+    /// slot budget (it could never be scheduled — failing fast here is
+    /// the fix for the historical queue deadlock).
     pub fn submit(&self, config: ExperimentConfig, tag: &str) -> Result<u64> {
-        if self.shared.shutdown.load(Ordering::SeqCst) {
+        if self.pool.is_shutdown() {
             bail!("server is shutting down, not accepting jobs");
         }
-        let mut q = self.shared.queue.lock().unwrap();
-        if q.len() >= self.shared.capacity {
+        let threads = config.threads.max(1);
+        if threads > self.shared.slots_total {
             bail!(
-                "job queue full ({} queued, capacity {})",
-                q.len(),
-                self.shared.capacity
+                "job requires threads={threads} but the server pool has only {} slot(s); \
+                 lower the config's 'threads' or restart the server with more --workers",
+                self.shared.slots_total
             );
         }
+        {
+            // check-and-admit atomically: concurrent submits cannot both
+            // squeeze into the last capacity slot
+            let mut st = self.shared.slots.lock().unwrap();
+            if st.admitted >= self.capacity {
+                bail!(
+                    "job queue full ({} queued, capacity {})",
+                    st.admitted,
+                    self.capacity
+                );
+            }
+            st.admitted += 1;
+        }
         let id = self.shared.registry.submit(config, tag);
-        q.push_back(id);
-        self.shared.cv.notify_one();
+        let sh = self.shared.clone();
+        let accepted = self.pool.submit(move || {
+            let Some(cancel) = sh.registry.cancel_flag(id) else {
+                sh.slots.lock().unwrap().admitted -= 1;
+                return;
+            };
+            // blocks this pool worker until the job's thread budget is
+            // free; a job cancelled while queued/waiting steps aside at
+            // the head of the line instead of waiting for slots it will
+            // never use (Registry::cancel already finalized it)
+            let Some(_slots) = SlotGuard::acquire(&sh, threads, &cancel) else {
+                return;
+            };
+            run_job(&sh.registry, id);
+        });
+        if !accepted {
+            // shutdown raced the entry check: the job was registered but
+            // can never run — finalize it instead of leaking a zombie
+            self.shared.slots.lock().unwrap().admitted -= 1;
+            self.shared
+                .registry
+                .finish_err(id, "server shut down before the job could start".into());
+            bail!("server is shutting down, not accepting jobs");
+        }
         Ok(id)
     }
 
-    /// Jobs currently waiting for a worker.
+    /// Jobs accepted but not yet running (waiting for a worker or for
+    /// slots).
     pub fn queue_depth(&self) -> usize {
-        self.shared.queue.lock().unwrap().len()
+        self.shared.slots.lock().unwrap().admitted
     }
 
+    /// Total training-thread slots (the `--workers` budget).
     pub fn worker_count(&self) -> usize {
-        self.n_workers
+        self.shared.slots_total
+    }
+
+    /// Slots not currently held by running jobs.
+    pub fn slots_free(&self) -> usize {
+        self.shared.slots.lock().unwrap().free
     }
 
     /// Graceful shutdown: refuse new submissions, drain every queued job,
     /// join the workers. Idempotent.
     pub fn shutdown(&self) {
-        self.shared.shutdown.store(true, Ordering::SeqCst);
-        self.shared.cv.notify_all();
-        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
-        for h in handles {
-            let _ = h.join();
-        }
+        self.pool.shutdown();
     }
 }
 
-fn worker_loop(sh: &Shared) {
-    loop {
-        let id = {
-            let mut q = sh.queue.lock().unwrap();
-            loop {
-                if let Some(id) = q.pop_front() {
-                    break Some(id);
+/// RAII slot lease: blocks until `n` slots are free *and* it is this
+/// waiter's FIFO turn, returns the slots on drop (also on panic, so a
+/// crashed job can't shrink the budget). Acquisition also retires the
+/// job from the admission count — it is now running, not queued.
+struct SlotGuard<'a> {
+    shared: &'a Shared,
+    n: usize,
+}
+
+impl<'a> SlotGuard<'a> {
+    /// `None` means the job was cancelled before it could take its
+    /// slots: the ticket line is advanced past it and nothing is held.
+    fn acquire(shared: &'a Shared, n: usize, cancel: &AtomicBool) -> Option<SlotGuard<'a>> {
+        debug_assert!(n <= shared.slots_total);
+        let mut st = shared.slots.lock().unwrap();
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        loop {
+            if st.now_serving == ticket {
+                if cancel.load(Ordering::Relaxed) {
+                    // dead job: step aside without waiting for slots
+                    st.now_serving += 1;
+                    st.admitted -= 1;
+                    shared.slot_cv.notify_all();
+                    return None;
                 }
-                if sh.shutdown.load(Ordering::SeqCst) {
-                    break None;
+                if st.free >= n {
+                    break;
                 }
-                q = sh.cv.wait(q).unwrap();
             }
-        };
-        let Some(id) = id else { return };
-        run_job(sh, id);
+            st = shared.slot_cv.wait(st).unwrap();
+        }
+        st.free -= n;
+        st.now_serving += 1;
+        st.admitted -= 1;
+        // wake the next ticket holder (it may only need now_serving to
+        // advance, not slots)
+        shared.slot_cv.notify_all();
+        Some(SlotGuard { shared, n })
+    }
+}
+
+impl Drop for SlotGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.shared.slots.lock().unwrap();
+        st.free += self.n;
+        self.shared.slot_cv.notify_all();
     }
 }
 
 /// Execute one job end-to-end, streaming progress into the registry.
-fn run_job(sh: &Shared, id: u64) {
+fn run_job(registry: &Arc<Registry>, id: u64) {
     // Cancelled-while-queued jobs are finalized inside mark_running.
-    let Some((cfg, cancel)) = sh.registry.mark_running(id) else {
+    let Some((cfg, cancel)) = registry.mark_running(id) else {
         return;
     };
-    let registry = &sh.registry;
     // Classify by whether the run actually stopped early, not by the
     // cancel flag at finish time: a cancel that lands after the final
     // epoch arrived too late — the run completed and must be recorded
     // (and persisted) as done, and a genuine failure keeps its error.
     let mut stopped_early = false;
-    let result = experiment::run_with(&cfg, &mut |m| {
-        registry.update_progress(id, m.epoch);
-        if cancel.load(Ordering::Relaxed) {
-            stopped_early = true;
-            return false;
-        }
-        true
-    });
+    // A panicking run must still finalize the job: TaskPool's worker
+    // survives a panic, so without this catch the registry entry would
+    // sit in `running` forever while clients poll it.
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        experiment::run_with(&cfg, &mut |m| {
+            registry.update_progress(id, m.epoch);
+            if cancel.load(Ordering::Relaxed) {
+                stopped_early = true;
+                return false;
+            }
+            true
+        })
+    }));
     match result {
-        Ok(r) if stopped_early => registry.finish_cancelled(id, Some(&r)),
-        Ok(r) => registry.finish_ok(id, &r),
-        Err(e) => registry.finish_err(id, format!("{e:#}")),
+        Ok(Ok(r)) if stopped_early => registry.finish_cancelled(id, Some(&r)),
+        Ok(Ok(r)) => registry.finish_ok(id, &r),
+        Ok(Err(e)) => registry.finish_err(id, format!("{e:#}")),
+        Err(panic) => {
+            let msg = panic
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "<non-string panic payload>".to_string());
+            registry.finish_err(id, format!("training panicked: {msg}"));
+        }
     }
 }
 
@@ -188,6 +292,7 @@ mod tests {
             assert_eq!(v.epochs_done, 2, "job {id}");
         }
         assert_eq!(sched.queue_depth(), 0);
+        assert_eq!(sched.slots_free(), 3);
         // post-shutdown submissions are refused
         assert!(sched.submit(quick_cfg(99, Policy::TopK), "").is_err());
     }
@@ -214,5 +319,92 @@ mod tests {
         }
         assert!(rejected, "queue accepted unbounded submissions");
         sched.shutdown();
+    }
+
+    #[test]
+    fn oversized_thread_requests_are_rejected_not_deadlocked() {
+        let reg = Arc::new(Registry::new(None).unwrap());
+        let sched = Scheduler::start(reg.clone(), 2, 16);
+        let mut cfg = quick_cfg(0, Policy::TopK);
+        cfg.threads = 3; // > 2 slots: could never be scheduled
+        let err = sched.submit(cfg, "big").unwrap_err().to_string();
+        assert!(err.contains("threads=3"), "{err}");
+        assert!(err.contains("2 slot"), "{err}");
+        // nothing was registered for the rejected job
+        assert_eq!(reg.counts().total(), 0);
+        // a job that exactly fits the budget still runs
+        let mut ok = quick_cfg(1, Policy::TopK);
+        ok.threads = 2;
+        let id = sched.submit(ok, "fits").unwrap();
+        sched.shutdown();
+        assert_eq!(reg.view(id).unwrap().state, JobState::Done);
+    }
+
+    #[test]
+    fn cancelled_queued_wide_job_does_not_block_the_line() {
+        let reg = Arc::new(Registry::new(None).unwrap());
+        let sched = Scheduler::start(reg.clone(), 2, 16);
+        // occupy both slots with a slow job
+        let mut slow = quick_cfg(0, Policy::TopK);
+        slow.threads = 2;
+        slow.task = Task::Mnist;
+        slow.k = 16;
+        slow.data_scale = 0.05;
+        slow.epochs = 4;
+        let slow_id = sched.submit(slow, "slow").unwrap();
+        // wait until the slow job provably holds both slots, so the wide
+        // job below cannot race it to the front and start before the
+        // cancel lands
+        for _ in 0..2000 {
+            if sched.slots_free() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(sched.slots_free(), 0, "slow job never took its slots");
+        // a wide job queued behind it, cancelled while queued: it must
+        // step aside at the head instead of waiting for 2 free slots
+        let mut wide = quick_cfg(1, Policy::TopK);
+        wide.threads = 2;
+        let wide_id = sched.submit(wide, "wide").unwrap();
+        reg.cancel(wide_id).unwrap();
+        let mut small_ids = Vec::new();
+        for i in 0..3 {
+            small_ids.push(sched.submit(quick_cfg(i + 2, Policy::RandK), "small").unwrap());
+        }
+        sched.shutdown();
+        assert_eq!(reg.view(slow_id).unwrap().state, JobState::Done);
+        assert_eq!(reg.view(wide_id).unwrap().state, JobState::Cancelled);
+        for id in small_ids {
+            assert_eq!(reg.view(id).unwrap().state, JobState::Done, "job {id}");
+        }
+        assert_eq!(sched.queue_depth(), 0, "admitted count leaked");
+        assert_eq!(sched.slots_free(), 2, "slots leaked");
+    }
+
+    #[test]
+    fn slot_accounting_multiplies_by_job_threads() {
+        let reg = Arc::new(Registry::new(None).unwrap());
+        // 4 slots: a threads=4 job must exclude everything else while it
+        // runs, then the singles all complete
+        let sched = Scheduler::start(reg.clone(), 4, 32);
+        let mut big = quick_cfg(0, Policy::TopK);
+        big.threads = 4;
+        big.task = Task::Mnist;
+        big.k = 16;
+        big.data_scale = 0.05;
+        big.epochs = 4;
+        let big_id = sched.submit(big, "big").unwrap();
+        let mut ids = vec![big_id];
+        for i in 0..6 {
+            let mut c = quick_cfg(i + 1, Policy::RandK);
+            c.threads = 1;
+            ids.push(sched.submit(c, "small").unwrap());
+        }
+        sched.shutdown();
+        for id in ids {
+            assert_eq!(reg.view(id).unwrap().state, JobState::Done, "job {id}");
+        }
+        assert_eq!(sched.slots_free(), 4, "slots leaked");
     }
 }

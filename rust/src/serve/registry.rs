@@ -85,6 +85,7 @@ impl JobView {
             ("backend", json::s(self.config.backend.name())),
             ("k", json::num(self.config.k as f64)),
             ("seed", json::num(self.config.seed as f64)),
+            ("threads", json::num(self.config.threads as f64)),
             ("state", json::s(self.state.name())),
             ("epochs_done", json::num(self.epochs_done as f64)),
             ("epochs_total", json::num(self.epochs_total as f64)),
@@ -216,6 +217,13 @@ impl Registry {
         }
         job.state = JobState::Running;
         Some((job.config.clone(), job.cancel.clone()))
+    }
+
+    /// The job's cancel flag (any state) — lets the scheduler observe a
+    /// cancellation while the job is still waiting for thread slots, so
+    /// a dead job never blocks live ones.
+    pub fn cancel_flag(&self, id: u64) -> Option<Arc<AtomicBool>> {
+        self.jobs.lock().unwrap().get(&id).map(|j| j.cancel.clone())
     }
 
     /// Record per-epoch progress (called from the worker's observer).

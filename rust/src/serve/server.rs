@@ -28,7 +28,10 @@ use crate::util::pool;
 pub struct ServeOptions {
     /// Listen address; port 0 picks an ephemeral port (tests, benches).
     pub addr: String,
-    /// Training worker threads (0 = available parallelism).
+    /// Training-thread slots (0 = available parallelism). A running job
+    /// holds `config.threads` slots, so this bounds total training
+    /// threads, not job count; jobs with `threads` above this are
+    /// rejected at submission.
     pub workers: usize,
     /// Max jobs waiting for a worker before submissions are rejected.
     pub queue_capacity: usize,

@@ -57,40 +57,52 @@ fn axpy_slice(y: &mut [f32], alpha: f32, x: &[f32]) {
 /// `A (m×k) @ B (k×n)` — blocked ikj matmul; narrow-B shapes (the paper's
 /// 16×1 and 784×10 heads) take a transposed-dot path instead.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, _) = a.shape();
+    let (_, n) = b.shape();
+    let mut out = Matrix::zeros(m, n);
+    matmul_rows(a, b, 0..m, out.data_mut());
+    out
+}
+
+/// Row-range matmul: computes output rows `rows` of `A @ B` into `out`
+/// (a `rows.len() × n` row-major block). Every output row is the same
+/// sequence of float ops regardless of the range it is computed through
+/// — both the path choice (narrow-B vs blocked ikj) and the k-blocking
+/// depend only on the operand shapes — so sharded and whole-matrix
+/// products are bitwise identical per row. This is the primitive the
+/// `exec` subsystem's data-parallel forward/backward passes are built on.
+pub fn matmul_rows(a: &Matrix, b: &Matrix, rows: std::ops::Range<usize>, out: &mut [f32]) {
     let (m, ka) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(ka, kb, "matmul inner dims: {ka} vs {kb}");
+    assert!(rows.end <= m, "row range {rows:?} out of {m}");
+    assert_eq!(out.len(), rows.len() * n, "output block size");
     if n <= NARROW_N && ka >= 32 {
         // transpose B once (k·n traffic), then every output element is a
         // contiguous k-length dot that runs at SIMD width
         let bt = b.transpose();
-        let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
+        for (oi, i) in rows.enumerate() {
             let arow = a.row(i);
-            let orow = out.row_mut(i);
+            let orow = &mut out[oi * n..(oi + 1) * n];
             for j in 0..n {
                 orow[j] = dot(arow, bt.row(j));
             }
         }
-        return out;
+        return;
     }
-    let mut out = Matrix::zeros(m, n);
-    for i0 in (0..m).step_by(BLOCK) {
-        let i1 = (i0 + BLOCK).min(m);
-        for k0 in (0..ka).step_by(BLOCK) {
-            let k1 = (k0 + BLOCK).min(ka);
-            for i in i0..i1 {
-                let arow = a.row(i);
-                let orow = out.row_mut(i);
-                for k in k0..k1 {
-                    let aik = arow[k];
-                    let brow = b.row(k);
-                    axpy_slice(orow, aik, brow);
-                }
+    out.fill(0.0);
+    for k0 in (0..ka).step_by(BLOCK) {
+        let k1 = (k0 + BLOCK).min(ka);
+        for (oi, i) in rows.clone().enumerate() {
+            let arow = a.row(i);
+            let orow = &mut out[oi * n..(oi + 1) * n];
+            for k in k0..k1 {
+                let aik = arow[k];
+                let brow = b.row(k);
+                axpy_slice(orow, aik, brow);
             }
         }
     }
-    out
 }
 
 /// `A^T (k×m)^T=(m? ) ...` — computes `A^T @ B` for `A (m×n)`, `B (m×p)`
@@ -160,19 +172,34 @@ fn use_transposed_aop(n: usize, p: usize) -> bool {
 /// Mirrors the Pallas kernel (same reduction over m; the accumulation
 /// layout is an implementation detail below f32 tolerance).
 pub fn masked_outer(x: &Matrix, g: &Matrix, scale: &[f32]) -> Matrix {
+    masked_outer_range(x, g, scale, 0..x.rows())
+}
+
+/// Row-range mask-regime AOP: the partial sum over `rows` only — the
+/// shard partial the `exec` subsystem reduces in fixed shard order. The
+/// accumulation layout (transposed or not) is decided from the *full*
+/// operand shape, so every shard—and the whole-batch call—applies the
+/// same per-term float ops.
+pub fn masked_outer_range(
+    x: &Matrix,
+    g: &Matrix,
+    scale: &[f32],
+    rows: std::ops::Range<usize>,
+) -> Matrix {
     let (m, n) = x.shape();
     let (m2, p) = g.shape();
     assert_eq!(m, m2);
     assert_eq!(scale.len(), m);
+    assert!(rows.end <= m, "row range {rows:?} out of {m}");
     if use_transposed_aop(n, p) {
         let mut out_t = Matrix::zeros(p, n);
-        for r in 0..m {
+        for r in rows {
             accumulate_outer_t(&mut out_t, x.row(r), g.row(r), scale[r]);
         }
         return out_t.transpose();
     }
     let mut out = Matrix::zeros(n, p);
-    for r in 0..m {
+    for r in rows {
         accumulate_outer(&mut out, x.row(r), g.row(r), scale[r]);
     }
     out
@@ -271,6 +298,43 @@ mod tests {
             let g = randm(&mut rng, m, p);
             let d = matmul_tn(&x, &g).max_abs_diff(&matmul(&x.transpose(), &g));
             assert!(d < 1e-3, "({m},{n},{p}): {d}");
+        }
+    }
+
+    #[test]
+    fn matmul_rows_is_bitwise_slice_of_matmul() {
+        let mut rng = Rng::new(42);
+        // both the narrow-B dot path (k>=32, n<=24) and the blocked path
+        for (m, k, n) in [(20, 40, 3), (64, 784, 10), (30, 12, 30), (7, 5, 2)] {
+            let a = randm(&mut rng, m, k);
+            let b = randm(&mut rng, k, n);
+            let full = matmul(&a, &b);
+            for (lo, hi) in [(0, m), (0, m / 2), (m / 2, m), (1, m.min(5))] {
+                let mut out = vec![f32::NAN; (hi - lo) * n];
+                matmul_rows(&a, &b, lo..hi, &mut out);
+                assert_eq!(
+                    &out[..],
+                    &full.data()[lo * n..hi * n],
+                    "({m},{k},{n}) rows {lo}..{hi}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn masked_outer_range_partials_sum_to_full() {
+        let mut rng = Rng::new(43);
+        for (m, n, p) in [(30, 9, 5), (64, 784, 10)] {
+            let x = randm(&mut rng, m, n);
+            let g = randm(&mut rng, m, p);
+            let scale: Vec<f32> = (0..m).map(|i| ((i % 4) as f32) * 0.5).collect();
+            let full = masked_outer(&x, &g, &scale);
+            let mut acc = Matrix::zeros(n, p);
+            for lo in (0..m).step_by(16) {
+                let hi = (lo + 16).min(m);
+                acc.axpy(1.0, &masked_outer_range(&x, &g, &scale, lo..hi));
+            }
+            assert!(acc.max_abs_diff(&full) < 1e-4, "({m},{n},{p})");
         }
     }
 

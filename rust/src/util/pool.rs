@@ -1,14 +1,23 @@
-//! Scoped worker pool for parallel experiment sweeps (offline substitute
-//! for tokio/rayon on the coordinator's *control* plane).
+//! Worker pools (offline substitute for tokio/rayon).
 //!
-//! The figure harness runs dozens of independent training runs (7 series ×
-//! 3 compression levels × seeds); [`run_parallel`] fans them out over
-//! `std::thread::scope` with a bounded worker count and returns results in
-//! input order. Work items must be `Send`; panics in a worker are
-//! propagated to the caller.
+//! Two shapes of parallelism live here:
+//!
+//! * [`run_parallel`] — a *scoped, one-shot* fan-out over
+//!   `std::thread::scope` used by the figure harness and sweeps: apply a
+//!   function to a finished list of items and return results in input
+//!   order. Work items must be `Send`; panics in a worker are propagated
+//!   to the caller.
+//! * [`TaskPool`] — a *long-lived* condvar worker pool draining a FIFO of
+//!   boxed tasks. This is the single generalized pool the serve
+//!   scheduler (`serve::queue`) and the data-parallel execution engine
+//!   (`exec::pool`) are both built on, so the repo has exactly one
+//!   blocking worker loop to reason about. Shutdown is graceful: the
+//!   queue is drained before the workers exit.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 /// Number of workers: `REPRO_THREADS` env override, else available
 /// parallelism, else 4.
@@ -70,6 +79,129 @@ where
         .collect()
 }
 
+type Task = Box<dyn FnOnce() + Send>;
+
+struct TaskShared {
+    queue: Mutex<VecDeque<Task>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Long-lived FIFO worker pool: `workers` threads block on a condvar and
+/// drain boxed tasks in submission order.
+///
+/// * submission after [`TaskPool::shutdown`] is refused (returns `false`);
+/// * [`TaskPool::shutdown`] is graceful and idempotent: workers finish
+///   every queued task, then exit and are joined — no accepted task is
+///   ever dropped;
+/// * a panicking task is caught and logged; the worker survives and keeps
+///   draining (long-lived services must not lose workers to one bad job).
+pub struct TaskPool {
+    shared: Arc<TaskShared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    workers: usize,
+}
+
+impl TaskPool {
+    /// Spawn `workers` (≥1) threads named `<name>-<i>`.
+    pub fn new(name: &str, workers: usize) -> TaskPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(TaskShared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || task_loop(&sh))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        TaskPool {
+            shared,
+            handles: Mutex::new(handles),
+            workers,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Tasks queued but not yet picked up by a worker.
+    pub fn pending(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Enqueue a task; returns `false` (task NOT queued) once shut down.
+    /// The shutdown check happens under the queue lock — the same lock
+    /// [`TaskPool::shutdown`] sets the flag under — so a `true` return
+    /// means the push strictly preceded the flag and the drain covers
+    /// it: an accepted task always runs.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) -> bool {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                return false;
+            }
+            q.push_back(Box::new(f));
+        }
+        self.shared.cv.notify_one();
+        true
+    }
+
+    /// Refuse new tasks, drain the queue, join the workers. Idempotent.
+    pub fn shutdown(&self) {
+        {
+            // flag flips under the queue lock so it totally orders with
+            // every submit: anything accepted is already in the queue
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::SeqCst);
+        }
+        self.shared.cv.notify_all();
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TaskPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn task_loop(sh: &TaskShared) {
+    loop {
+        let task = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break Some(t);
+                }
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        let Some(task) = task else { return };
+        // AssertUnwindSafe: the task owns its captures; a panicked task's
+        // state is discarded with it, nothing half-mutated is observed.
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(task)).is_err() {
+            eprintln!("[pool] task panicked (worker continues)");
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +240,54 @@ mod tests {
             }
             x
         });
+    }
+
+    #[test]
+    fn task_pool_runs_everything_submitted() {
+        let pool = TaskPool::new("t", 4);
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let h = hits.clone();
+            assert!(pool.submit(move || {
+                h.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        pool.shutdown();
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+        // post-shutdown submissions are refused
+        assert!(!pool.submit(|| {}));
+        assert!(pool.is_shutdown());
+    }
+
+    #[test]
+    fn task_pool_shutdown_drains_queue() {
+        // 1 worker, slow first task: the rest must still all run
+        let pool = TaskPool::new("drain", 1);
+        let hits = Arc::new(AtomicUsize::new(0));
+        for i in 0..10 {
+            let h = hits.clone();
+            pool.submit(move || {
+                if i == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                }
+                h.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn task_pool_survives_panicking_task() {
+        let pool = TaskPool::new("p", 1);
+        let hits = Arc::new(AtomicUsize::new(0));
+        pool.submit(|| panic!("boom"));
+        let h = hits.clone();
+        pool.submit(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.shutdown();
+        assert_eq!(hits.load(Ordering::Relaxed), 1, "worker died with the panic");
     }
 
     #[test]

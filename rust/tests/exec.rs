@@ -1,0 +1,256 @@
+//! Determinism property tests for the `exec` data-parallel engine.
+//!
+//! The contract under test: **the thread count is not a hyperparameter**.
+//! For every selection policy, both execution regimes (mask and
+//! compaction), memory on/off, engine-level and experiment-level, local
+//! and through a served job — `threads ∈ {1, 2, 4, 7}` must produce
+//! bit-identical losses, curves, and final weights. Every comparison
+//! here is exact (`to_bits` / slice equality), never tolerance-based.
+//!
+//! `ci.sh` runs this suite at two `REPRO_THREADS` settings; the
+//! `determinism_at_env_worker_count` test picks its parallelism from
+//! that env var so the two CI runs genuinely exercise different pools.
+
+use std::time::Duration;
+
+use mem_aop_gd::aop::engine::AopEngine;
+use mem_aop_gd::aop::Policy;
+use mem_aop_gd::coordinator::config::{ExperimentConfig, Task};
+use mem_aop_gd::coordinator::experiment::{self, RunResult};
+use mem_aop_gd::exec::Executor;
+use mem_aop_gd::model::loss::LossKind;
+use mem_aop_gd::model::mlp::{mlp_memories, Mlp, MlpAopState};
+use mem_aop_gd::serve::{Client, ServeOptions, Server};
+use mem_aop_gd::tensor::{init, rng::Rng, Matrix};
+use mem_aop_gd::util::pool;
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 7];
+
+fn synth_data(seed: u64, m: usize, n: usize, p: usize) -> (Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let teacher = Matrix::from_fn(n, p, |_, _| rng.normal());
+    let x = Matrix::from_fn(m, n, |_, _| rng.normal());
+    let y = x.matmul(&teacher);
+    (x, y)
+}
+
+/// Train one engine for `steps` and return (per-step losses, w, b).
+fn train_engine(
+    policy: Policy,
+    compact: bool,
+    memory: bool,
+    threads: usize,
+    steps: usize,
+) -> (Vec<u32>, Matrix, Vec<f32>) {
+    let (m, n, p) = (48usize, 12usize, 3usize);
+    let (x, y) = synth_data(7, m, n, p);
+    let mut wrng = Rng::new(13);
+    let mut e = AopEngine::new(
+        init::glorot_uniform(&mut wrng, n, p),
+        LossKind::Mse,
+        m,
+        policy,
+        12,
+        memory,
+    );
+    e.compact = compact;
+    let exec = Executor::new(threads);
+    let mut rng = Rng::new(99);
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let st = e.step_exec(&x, &y, 0.02, &mut rng, &exec);
+        assert!(st.loss.is_finite());
+        losses.push(st.loss.to_bits());
+    }
+    (losses, e.w.clone(), e.b.clone())
+}
+
+#[test]
+fn engine_bit_identical_across_threads_for_all_policies_and_regimes() {
+    for policy in Policy::all() {
+        for compact in [true, false] {
+            for memory in [true, false] {
+                let (l1, w1, b1) = train_engine(policy, compact, memory, 1, 30);
+                for threads in &THREAD_COUNTS[1..] {
+                    let (lt, wt, bt) = train_engine(policy, compact, memory, *threads, 30);
+                    assert_eq!(
+                        l1, lt,
+                        "{policy:?} compact={compact} mem={memory} threads={threads}: losses"
+                    );
+                    assert_eq!(
+                        w1.data(),
+                        wt.data(),
+                        "{policy:?} compact={compact} mem={memory} threads={threads}: weights"
+                    );
+                    assert_eq!(
+                        b1, bt,
+                        "{policy:?} compact={compact} mem={memory} threads={threads}: bias"
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn energy_cfg(policy: Policy, threads: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset(Task::Energy);
+    cfg.policy = policy;
+    cfg.k = if policy == Policy::Exact { cfg.m() } else { 9 };
+    cfg.memory = policy != Policy::Exact;
+    cfg.epochs = 4;
+    cfg.seed = 3;
+    cfg.threads = threads;
+    cfg
+}
+
+fn assert_runs_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.curve.epochs.len(), b.curve.epochs.len(), "{what}: epochs");
+    for (ma, mb) in a.curve.epochs.iter().zip(b.curve.epochs.iter()) {
+        assert_eq!(
+            ma.train_loss.to_bits(),
+            mb.train_loss.to_bits(),
+            "{what}: epoch {} train loss",
+            ma.epoch
+        );
+        assert_eq!(
+            ma.val_loss.to_bits(),
+            mb.val_loss.to_bits(),
+            "{what}: epoch {} val loss",
+            ma.epoch
+        );
+        assert_eq!(
+            ma.wstar_fro.to_bits(),
+            mb.wstar_fro.to_bits(),
+            "{what}: epoch {} wstar",
+            ma.epoch
+        );
+        assert_eq!(
+            ma.mem_fro.to_bits(),
+            mb.mem_fro.to_bits(),
+            "{what}: epoch {} mem",
+            ma.epoch
+        );
+        assert_eq!(ma.backward_flops, mb.backward_flops, "{what}: flops");
+    }
+    assert_eq!(a.final_w.data(), b.final_w.data(), "{what}: final weights");
+    assert_eq!(a.final_b, b.final_b, "{what}: final bias");
+}
+
+#[test]
+fn experiment_curves_bit_identical_across_threads_for_all_policies() {
+    for policy in Policy::all() {
+        let serial = experiment::run(&energy_cfg(policy, 1)).unwrap();
+        for threads in &THREAD_COUNTS[1..] {
+            let par = experiment::run(&energy_cfg(policy, *threads)).unwrap();
+            assert_runs_identical(&serial, &par, &format!("{policy:?} threads={threads}"));
+        }
+    }
+}
+
+#[test]
+fn determinism_at_env_worker_count() {
+    // parallelism comes from REPRO_THREADS: ci.sh runs this suite twice
+    // with different settings, so the gate compares real distinct pools
+    let threads = pool::default_workers().min(12);
+    let serial = experiment::run(&energy_cfg(Policy::WeightedK, 1)).unwrap();
+    let par = experiment::run(&energy_cfg(Policy::WeightedK, threads.max(2))).unwrap();
+    assert_runs_identical(&serial, &par, &format!("env threads={threads}"));
+}
+
+#[test]
+fn mnist_shape_bit_identical_across_threads() {
+    // the 784×10 acceptance workload, scaled down in samples (not shape)
+    let mut cfg = ExperimentConfig::preset(Task::Mnist);
+    cfg.policy = Policy::TopK;
+    cfg.k = 32;
+    cfg.memory = true;
+    cfg.epochs = 2;
+    cfg.data_scale = 0.02;
+    cfg.threads = 1;
+    let serial = experiment::run(&cfg).unwrap();
+    cfg.threads = 4;
+    let par = experiment::run(&cfg).unwrap();
+    assert_runs_identical(&serial, &par, "mnist threads=4");
+}
+
+#[test]
+fn mlp_training_bit_identical_across_threads() {
+    let (x, y) = {
+        let mut rng = Rng::new(11);
+        let x = Matrix::from_fn(40, 6, |_, _| rng.normal());
+        let y = Matrix::from_fn(40, 3, |r, c| ((r % 3) == c) as u32 as f32);
+        (x, y)
+    };
+    let train = |threads: usize| -> (Vec<u32>, Mlp) {
+        let mut rng = Rng::new(5);
+        let mut mlp = Mlp::new(&mut rng, &[6, 17, 3], LossKind::SoftmaxCrossEntropy);
+        let mut state = MlpAopState {
+            memories: mlp_memories(&mlp, 40, true),
+            policy: Policy::WeightedK,
+            k: 10,
+        };
+        let exec = Executor::new(threads);
+        let mut prng = Rng::new(23);
+        let mut losses = Vec::new();
+        for _ in 0..25 {
+            let info = mlp.train_step_aop_exec(&x, &y, 0.05, &mut state, &mut prng, &exec);
+            losses.push(info.loss.to_bits());
+        }
+        (losses, mlp)
+    };
+    let (l1, mlp1) = train(1);
+    for threads in &THREAD_COUNTS[1..] {
+        let (lt, mlpt) = train(*threads);
+        assert_eq!(l1, lt, "threads={threads}: losses");
+        for (a, b) in mlp1.layers.iter().zip(mlpt.layers.iter()) {
+            assert_eq!(a.w.data(), b.w.data(), "threads={threads}: layer weights");
+            assert_eq!(a.b, b.b, "threads={threads}: layer bias");
+        }
+    }
+}
+
+#[test]
+fn served_jobs_with_threads_are_bit_identical_and_bounded() {
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 6,
+        queue_capacity: 16,
+        registry_dir: None,
+    };
+    let server = Server::bind(&opts).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+    let mut c = Client::connect(&addr).unwrap();
+
+    // same config at threads=1 and threads=4 through the wire
+    let id1 = c.submit(&energy_cfg(Policy::WeightedK, 1), "t1").unwrap();
+    let id4 = c.submit(&energy_cfg(Policy::WeightedK, 4), "t4").unwrap();
+    c.wait(id1, Duration::from_secs(120)).unwrap();
+    c.wait(id4, Duration::from_secs(120)).unwrap();
+    let (cfg1, curve1) = c.result(id1).unwrap();
+    let (cfg4, curve4) = c.result(id4).unwrap();
+    assert_eq!(cfg1.threads, 1);
+    assert_eq!(cfg4.threads, 4);
+    assert_eq!(curve1.epochs.len(), curve4.epochs.len());
+    for (a, b) in curve1.epochs.iter().zip(curve4.epochs.iter()) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits());
+        assert_eq!(a.backward_flops, b.backward_flops);
+    }
+    // ... and both match a direct local run of the same config
+    let local = experiment::run(&energy_cfg(Policy::WeightedK, 1)).unwrap();
+    for (a, b) in curve1.epochs.iter().zip(local.curve.epochs.iter()) {
+        assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits());
+    }
+
+    // a job that can never fit the slot budget is rejected with a clear
+    // protocol error (not queued, not deadlocked)
+    let err = c
+        .submit(&energy_cfg(Policy::TopK, 7), "too-big")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("threads=7"), "{err}");
+
+    c.shutdown().unwrap();
+    handle.join().unwrap().unwrap();
+}
