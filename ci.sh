@@ -43,4 +43,13 @@ REPRO_THREADS=2 cargo test -q --test exec
 echo "==> exec determinism gate (REPRO_THREADS=7)"
 REPRO_THREADS=7 cargo test -q --test exec
 
+# Perf smoke: a quick run of the kernels bench on the 2-hidden-layer
+# graph shape so every CI pass leaves machine-readable throughput data
+# points (BENCH_2.json: flat engine; BENCH_3.json: layer-graph core,
+# rows/sec + FLOPs/step, serial vs threads=4) for the perf trajectory.
+echo "==> kernels bench smoke (BENCH_2.json / BENCH_3.json)"
+BENCH_QUICK=1 cargo bench --bench kernels
+test -f BENCH_3.json
+echo "BENCH_3.json: $(cat BENCH_3.json | head -c 200)..."
+
 echo "CI green."

@@ -25,9 +25,9 @@ fn bench_series<T: Trainer>(
     let batch = train.gather(&idx);
     let mut rng = Rng::new(9);
     b.bench(name, || {
-        let (_, scores, _) = trainer.fwd_score(&batch.x, &batch.y).unwrap();
-        let sel = policy::select(cfg.policy, &scores, cfg.k, cfg.memory, &mut rng);
-        black_box(trainer.apply(&sel).unwrap());
+        let (_, scores) = trainer.fwd_score(&batch.x, &batch.y).unwrap();
+        let sel = policy::select(cfg.policy, &scores[0], cfg.k, cfg.memory, &mut rng);
+        black_box(trainer.apply(std::slice::from_ref(&sel)).unwrap());
     });
 }
 

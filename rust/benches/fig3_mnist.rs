@@ -36,18 +36,18 @@ fn main() {
 
             let mut nt = NativeTrainer::new(&cfg).unwrap();
             b.bench(&format!("native/{label}"), || {
-                let (_, scores, _) = nt.fwd_score(&ds.x, &ds.y).unwrap();
-                let sel = policy::select(cfg.policy, &scores, cfg.k, cfg.memory, &mut rng);
-                black_box(nt.apply(&sel).unwrap());
+                let (_, scores) = nt.fwd_score(&ds.x, &ds.y).unwrap();
+                let sel = policy::select(cfg.policy, &scores[0], cfg.k, cfg.memory, &mut rng);
+                black_box(nt.apply(std::slice::from_ref(&sel)).unwrap());
             });
 
             if let Some(rt) = &rt {
                 let mut ht = HloTrainer::new(&cfg, rt).unwrap();
                 b.bench(&format!("hlo/{label}"), || {
-                    let (_, scores, _) = ht.fwd_score(&ds.x, &ds.y).unwrap();
+                    let (_, scores) = ht.fwd_score(&ds.x, &ds.y).unwrap();
                     let sel =
-                        policy::select(cfg.policy, &scores, cfg.k, cfg.memory, &mut rng);
-                    black_box(ht.apply(&sel).unwrap());
+                        policy::select(cfg.policy, &scores[0], cfg.k, cfg.memory, &mut rng);
+                    black_box(ht.apply(std::slice::from_ref(&sel)).unwrap());
                 });
             }
         }

@@ -2,8 +2,10 @@
 //! execution regimes (mask vs compaction) against the exact outer-product
 //! sum, on the paper's exact shapes, for both the native path and the
 //! compiled HLO artifacts — plus the end-to-end `exec` training-step
-//! throughput (serial vs threads=4), written to `BENCH_2.json` so the
-//! repo's perf trajectory is machine-readable.
+//! throughput (serial vs threads=4), written to `BENCH_2.json`, and the
+//! layer-graph training-step throughput on a 2-hidden-layer shape with
+//! heterogeneous per-layer K, written to `BENCH_3.json` — so the repo's
+//! perf trajectory is machine-readable.
 //!
 //! Work metric = FLOPs of the compaction-regime cost model, so the
 //! reported work-rate is directly comparable across K (who computes the
@@ -17,6 +19,7 @@ use mem_aop_gd::exec::Executor;
 use mem_aop_gd::model::loss::LossKind;
 use mem_aop_gd::runtime::{Manifest, Runtime, Value};
 use mem_aop_gd::tensor::{init, ops, rng::Rng, Matrix};
+use mem_aop_gd::train::{self, AopLayerConfig, Graph, GraphState};
 use mem_aop_gd::util::bench::{black_box, Bencher};
 use mem_aop_gd::util::json::{self, Json};
 
@@ -115,11 +118,125 @@ fn write_results_copy(v: &Json) -> std::io::Result<()> {
     std::fs::write("results/bench/exec_throughput.json", text)
 }
 
+/// The BENCH_3 workload: a 2-hidden-layer MNIST-head graph
+/// (784→128→64→10, relu hiddens) with heterogeneous per-layer K.
+const GRAPH_WIDTHS: [usize; 4] = [784, 128, 64, 10];
+const GRAPH_KS: [usize; 3] = [32, 16, 8];
+const GRAPH_BATCH: usize = 64;
+
+/// Steady-state rows/sec of full layer-graph Mem-AOP-GD training steps
+/// (the unified `train::step` core) at a thread count.
+fn graph_rows_per_sec(threads: usize, measure: Duration) -> f64 {
+    let m = GRAPH_BATCH;
+    let (n, p) = (GRAPH_WIDTHS[0], GRAPH_WIDTHS[3]);
+    let mut rng = Rng::new(0);
+    let x = Matrix::from_fn(m, n, |_, _| rng.normal());
+    let y = Matrix::from_fn(m, p, |r, c| ((r % p) == c) as u32 as f32);
+    let mut wrng = Rng::new(1);
+    let mut graph = Graph::relu_mlp(&mut wrng, &GRAPH_WIDTHS, LossKind::SoftmaxCrossEntropy);
+    let cfgs: Vec<AopLayerConfig> = GRAPH_KS
+        .iter()
+        .map(|&k| AopLayerConfig {
+            k,
+            policy: Policy::TopK,
+            memory: true,
+        })
+        .collect();
+    let mut state = GraphState::from_configs(&graph, m, &cfgs);
+    let exec = Executor::new(threads);
+    let mut srng = Rng::new(2);
+    for _ in 0..10 {
+        black_box(train::train_step(
+            &mut graph, &mut state, &x, &y, 0.01, &mut srng, &exec, true,
+        ));
+    }
+    let t0 = Instant::now();
+    let mut steps = 0u64;
+    while t0.elapsed() < measure {
+        black_box(train::train_step(
+            &mut graph, &mut state, &x, &y, 0.01, &mut srng, &exec, true,
+        ));
+        steps += 1;
+    }
+    steps as f64 * m as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Measure serial vs threads=4 layer-graph throughput and write
+/// `BENCH_3.json` (rows/sec + FLOPs/step on the 2-hidden-layer shape).
+fn bench_graph_and_write_bench3() {
+    let quick = std::env::var("BENCH_QUICK").ok().as_deref() == Some("1");
+    let measure = if quick {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_secs(2)
+    };
+    let serial = graph_rows_per_sec(1, measure);
+    let par4 = graph_rows_per_sec(4, measure);
+    let speedup = par4 / serial;
+    // per-layer FLOPs from the cost model, summed over the graph
+    let mut flops_per_step = 0.0f64;
+    let mut layer_json = Vec::new();
+    for (i, &k) in GRAPH_KS.iter().enumerate() {
+        let (n, p) = (GRAPH_WIDTHS[i], GRAPH_WIDTHS[i + 1]);
+        let lf = flops::aop_step(GRAPH_BATCH, n, p, k).total() as f64;
+        flops_per_step += lf;
+        layer_json.push(json::obj(vec![
+            ("n", json::num(n as f64)),
+            ("p", json::num(p as f64)),
+            ("k", json::num(k as f64)),
+            ("flops_per_step", json::num(lf)),
+        ]));
+    }
+    let flops_per_row = flops_per_step / GRAPH_BATCH as f64;
+    eprintln!(
+        "{:44} {:>12.0} rows/s",
+        "graph/exec/train-step threads=1", serial
+    );
+    eprintln!(
+        "{:44} {:>12.0} rows/s  ({speedup:.2}x)",
+        "graph/exec/train-step threads=4", par4
+    );
+    let out = json::obj(vec![
+        (
+            "workload",
+            json::s("graph-784x128x64x10 topk K=[32,16,8] mem train-step"),
+        ),
+        ("m", json::num(GRAPH_BATCH as f64)),
+        ("layers", Json::Arr(layer_json)),
+        ("flops_per_step", json::num(flops_per_step)),
+        (
+            "serial",
+            json::obj(vec![
+                ("threads", json::num(1.0)),
+                ("rows_per_sec", json::num(serial)),
+                ("flops_per_sec", json::num(serial * flops_per_row)),
+            ]),
+        ),
+        (
+            "threads4",
+            json::obj(vec![
+                ("threads", json::num(4.0)),
+                ("rows_per_sec", json::num(par4)),
+                ("flops_per_sec", json::num(par4 * flops_per_row)),
+            ]),
+        ),
+        ("speedup", json::num(speedup)),
+    ]);
+    let mut text = out.dump();
+    text.push('\n');
+    if std::fs::write("BENCH_3.json", &text).is_ok() {
+        eprintln!("[kernels] wrote BENCH_3.json (speedup {speedup:.2}x)");
+    }
+    let _ = std::fs::create_dir_all("results/bench")
+        .and_then(|_| std::fs::write("results/bench/graph_throughput.json", text));
+}
+
 fn main() {
     let mut b = Bencher::new("kernels");
     let mut rng = Rng::new(0);
 
     bench_exec_and_write_bench2();
+    bench_graph_and_write_bench3();
 
     for (task, m, n, p, ks) in [
         ("energy", 144usize, 16usize, 1usize, vec![144usize, 18, 9, 3]),

@@ -1,52 +1,38 @@
-//! Native single-layer Mem-AOP-GD engine (Algorithm 1, pure Rust).
+//! Native single-layer Mem-AOP-GD engine — a thin adapter over the
+//! layer-graph training core ([`crate::train`]).
 //!
-//! Structured as the same two phases the HLO path executes —
-//! `fwd_score` then `apply` — so `rust/tests/native_vs_hlo.rs` can drive
-//! both with identical policy decisions and compare states step-by-step.
-//! This engine is also the baseline comparator for the criterion-style
-//! benches (native CPU vs PJRT-compiled artifacts).
+//! `AopEngine` is exactly a 1-layer identity-activation [`Graph`] with a
+//! flat `{policy, k, memory}` [`GraphState`]: the paper's experimental
+//! model for both tasks (16×1 energy, 784×10 mnist). The actual
+//! forward/fold/score/apply math lives *once* in `train::step`; this
+//! type only keeps the historical constructor/step/evaluate surface for
+//! the benches, the property suite and the single-layer examples.
 //!
-//! Both phases execute through the [`exec`](crate::exec) subsystem: rows
-//! are cut on the fixed shard grid, per-shard kernels run on the
-//! executor's worker pool, and cross-row reductions (loss, bias
-//! gradient, the AOP weight update) are combined in fixed shard order —
-//! so results are bit-identical at every thread count. The plain
-//! `fwd_score`/`apply`/`step`/`evaluate` methods are the `threads = 1`
-//! special case (an inline [`Executor::serial`]), running the very same
-//! code path.
+//! Everything executes through the [`exec`](crate::exec) subsystem: the
+//! plain `step`/`evaluate` methods are the `threads = 1` special case
+//! (an inline [`Executor::serial`]) of their `_exec` twins, running the
+//! very same code path — so results are bit-identical at every thread
+//! count.
 
 use crate::aop::memory::MemoryState;
-use crate::aop::policy::{self, Policy, Selection};
-use crate::exec::{reduce, shard, Executor};
-use crate::model::loss::{self, LossKind};
+use crate::aop::policy::Policy;
+use crate::exec::Executor;
+use crate::model::loss::LossKind;
 use crate::tensor::rng::Rng;
-use crate::tensor::{ops, Matrix};
+use crate::tensor::Matrix;
+use crate::train::{self, AopLayerConfig, Graph, GraphState, StepOutcome};
 
-/// Single dense layer `o = x W + b` trained with Mem-AOP-GD — the paper's
-/// experimental model for both tasks (16×1 energy, 784×10 mnist).
+/// Single dense layer `o = x W + b` trained with Mem-AOP-GD.
 pub struct AopEngine {
-    pub w: Matrix,
-    pub b: Vec<f32>,
-    pub loss: LossKind,
-    pub memory: MemoryState,
-    pub policy: Policy,
-    pub k: usize,
+    graph: Graph,
+    state: GraphState,
     /// Use the compaction-regime kernel (K-row loop) instead of the
     /// mask-regime one. Numerically identical for without-replacement
     /// policies; this is the paper's complexity-reduction execution mode.
     pub compact: bool,
 }
 
-/// Outputs of the fwd_score phase (mirrors the HLO artifact's outputs).
-pub struct FwdScore {
-    pub loss: f32,
-    pub xhat: Matrix,
-    pub ghat: Matrix,
-    pub db: Vec<f32>,
-    pub scores: Vec<f32>,
-}
-
-/// Per-step diagnostics.
+/// Per-step diagnostics (single-layer view of [`StepOutcome`]).
 #[derive(Debug, Clone, Copy)]
 pub struct StepStats {
     pub loss: f32,
@@ -54,6 +40,16 @@ pub struct StepStats {
     pub wstar_fro: f32,
     /// Distinct outer products evaluated.
     pub k_effective: usize,
+}
+
+impl From<StepOutcome> for StepStats {
+    fn from(o: StepOutcome) -> StepStats {
+        StepStats {
+            loss: o.loss,
+            wstar_fro: o.wstar_fro,
+            k_effective: o.k_effective,
+        }
+    }
 }
 
 impl AopEngine {
@@ -65,140 +61,46 @@ impl AopEngine {
         k: usize,
         memory_enabled: bool,
     ) -> Self {
-        let (n, p) = w.shape();
+        let graph = Graph::single(w, loss);
+        let state = GraphState::from_configs(
+            &graph,
+            batch,
+            &[AopLayerConfig {
+                k,
+                policy,
+                memory: memory_enabled,
+            }],
+        );
         AopEngine {
-            b: vec![0.0; p],
-            w,
-            loss,
-            memory: MemoryState::new(batch, n, p, memory_enabled),
-            policy,
-            k,
+            graph,
+            state,
             compact: true,
         }
     }
 
+    /// The layer's weights.
+    pub fn w(&self) -> &Matrix {
+        &self.graph.layers[0].w
+    }
+
+    /// The layer's bias.
+    pub fn b(&self) -> &[f32] {
+        &self.graph.layers[0].b
+    }
+
+    /// The layer's error-feedback memory.
+    pub fn memory(&self) -> &MemoryState {
+        &self.state.layers[0].mem
+    }
+
+    /// The flat selection config this engine was built with.
+    pub fn layer_cfg(&self) -> AopLayerConfig {
+        self.state.layers[0].cfg
+    }
+
     /// Forward output `x W + b`.
     pub fn forward(&self, x: &Matrix) -> Matrix {
-        x.matmul(&self.w).add_row_broadcast(&self.b)
-    }
-
-    /// Phase 1 (mirrors the `*_fwd_score` artifact): forward, loss,
-    /// output-gradient, memory folding, policy scores, exact bias grad.
-    /// Serial (`threads = 1`) case of [`AopEngine::fwd_score_exec`].
-    pub fn fwd_score(&self, x: &Matrix, y: &Matrix, eta: f32) -> FwdScore {
-        self.fwd_score_exec(x, y, eta, &Executor::serial())
-    }
-
-    /// Phase 1, data-parallel: one shard task per row block computes
-    /// forward rows, loss-gradient rows, memory folding, scores and the
-    /// partial loss/bias sums; partials reduce in fixed shard order.
-    pub fn fwd_score_exec(&self, x: &Matrix, y: &Matrix, eta: f32, exec: &Executor) -> FwdScore {
-        let (m, n) = x.shape();
-        let p = self.w.cols();
-        assert_eq!(y.shape(), (m, p), "target shape");
-        let plan = exec.plan(m);
-        let se = eta.sqrt();
-        let mut xhat = Matrix::zeros(m, n);
-        let mut ghat = Matrix::zeros(m, p);
-        let mut scores = vec![0.0f32; m];
-        let parts: Vec<(f32, Vec<f32>)> = {
-            let xh_blocks = shard::RowBlocks::of(&mut xhat, &plan);
-            let gh_blocks = shard::RowBlocks::of(&mut ghat, &plan);
-            let sc_blocks = shard::RowBlocks::of_slice(&mut scores, 1, &plan);
-            exec.map(&plan, |i, rows| {
-                let nr = rows.len();
-                // shard-local forward + loss-gradient scratch
-                let mut o = vec![0.0f32; nr * p];
-                shard::forward_rows(x, &self.w, &self.b, rows.clone(), &mut o);
-                let loss_part = self.loss.partial_loss(&o, y, rows.clone());
-                let mut g = vec![0.0f32; nr * p];
-                self.loss.grad_rows(&o, y, rows.clone(), m, &mut g);
-                let db_part = shard::col_sums_rows(&g, p);
-                // fold memory into the fresh batch (alg. lines 3-4)
-                let mut xh = xh_blocks.lock(i);
-                shard::fold_rows(x, &self.memory.mem_x, se, rows.clone(), &mut xh);
-                let mut gh = gh_blocks.lock(i);
-                shard::fold_block(&g, &self.memory.mem_g, se, rows.clone(), &mut gh);
-                let mut sc = sc_blocks.lock(i);
-                shard::score_rows(&xh, &gh, n, p, &mut sc);
-                (loss_part, db_part)
-            })
-        };
-        let loss_total = reduce::sum_f32(parts.iter().map(|(l, _)| *l));
-        let loss = self.loss.finish_loss(loss_total, m, p);
-        let db_raw = reduce::sum_vecs(p, parts.iter().map(|(_, d)| d.as_slice()));
-        let db: Vec<f32> = db_raw.iter().map(|d| eta * d).collect();
-        FwdScore {
-            loss,
-            xhat,
-            ghat,
-            db,
-            scores,
-        }
-    }
-
-    /// Phase 2 (mirrors the `*_apply` artifact): AOP weight update, exact
-    /// bias update, memory update.
-    /// Serial (`threads = 1`) case of [`AopEngine::apply_exec`].
-    pub fn apply(&mut self, fs: &FwdScore, sel: &Selection) -> StepStats {
-        self.apply_exec(fs, sel, &Executor::serial())
-    }
-
-    /// Phase 2, data-parallel: each shard accumulates the outer products
-    /// of its own selected rows; the partials reduce in fixed shard
-    /// order before the (serial, elementwise) weight/bias writes, and the
-    /// memory retention rows are rewritten shard-parallel.
-    pub fn apply_exec(&mut self, fs: &FwdScore, sel: &Selection, exec: &Executor) -> StepStats {
-        let (m, n) = fs.xhat.shape();
-        let p = fs.ghat.cols();
-        let plan = exec.plan(m);
-        let partials: Vec<Option<Matrix>> = if self.compact {
-            let pairs = sel.compact_pairs();
-            exec.map(&plan, |_, rows| {
-                // `pairs` is ascending (Selection contract), so the
-                // filtered slice keeps row order within the shard
-                let local: Vec<(usize, f32)> = pairs
-                    .iter()
-                    .copied()
-                    .filter(|(r, _)| rows.contains(r))
-                    .collect();
-                if local.is_empty() {
-                    None
-                } else {
-                    Some(ops::masked_outer_compact(&fs.xhat, &fs.ghat, &local))
-                }
-            })
-        } else {
-            exec.map(&plan, |_, rows| {
-                Some(ops::masked_outer_range(
-                    &fs.xhat,
-                    &fs.ghat,
-                    &sel.sel_scale,
-                    rows,
-                ))
-            })
-        };
-        let wstar = reduce::sum_matrices(n, p, partials);
-        let wstar_fro = wstar.frobenius();
-        self.w.axpy(-1.0, &wstar);
-        for (b, d) in self.b.iter_mut().zip(fs.db.iter()) {
-            *b -= d;
-        }
-        if self.memory.enabled {
-            let mx_blocks = shard::RowBlocks::of(&mut self.memory.mem_x, &plan);
-            let mg_blocks = shard::RowBlocks::of(&mut self.memory.mem_g, &plan);
-            exec.run_each(&plan, |i, rows| {
-                let mut mx = mx_blocks.lock(i);
-                shard::keep_rows(&fs.xhat, &sel.keep, rows.clone(), &mut mx);
-                let mut mg = mg_blocks.lock(i);
-                shard::keep_rows(&fs.ghat, &sel.keep, rows, &mut mg);
-            });
-        }
-        StepStats {
-            loss: fs.loss,
-            wstar_fro,
-            k_effective: sel.k_effective(),
-        }
+        self.graph.forward(x)
     }
 
     /// Full Algorithm-1 step: fwd_score → out_K → apply.
@@ -218,43 +120,29 @@ impl AopEngine {
         rng: &mut Rng,
         exec: &Executor,
     ) -> StepStats {
-        let fs = self.fwd_score_exec(x, y, eta, exec);
-        let sel = policy::select(
-            self.policy,
-            &fs.scores,
-            self.k.min(fs.scores.len()),
-            self.memory.enabled,
+        train::train_step(
+            &mut self.graph,
+            &mut self.state,
+            x,
+            y,
+            eta,
             rng,
-        );
-        self.apply_exec(&fs, &sel, exec)
+            exec,
+            self.compact,
+        )
+        .into()
     }
 
     /// Validation loss and accuracy.
     /// Serial (`threads = 1`) case of [`AopEngine::evaluate_exec`].
     pub fn evaluate(&self, x: &Matrix, y: &Matrix) -> (f32, f32) {
-        self.evaluate_exec(x, y, &Executor::serial())
+        self.graph.evaluate(x, y)
     }
 
-    /// Validation, data-parallel: per-shard forward + partial loss and
-    /// (integer, hence exactly order-free) argmax-agreement counts.
+    /// Validation, data-parallel (per-shard forward + fixed-order
+    /// reductions).
     pub fn evaluate_exec(&self, x: &Matrix, y: &Matrix, exec: &Executor) -> (f32, f32) {
-        let m = x.rows();
-        let p = self.w.cols();
-        let plan = exec.plan(m);
-        let parts: Vec<(f32, usize)> = exec.map(&plan, |_, rows| {
-            let mut o = vec![0.0f32; rows.len() * p];
-            shard::forward_rows(x, &self.w, &self.b, rows.clone(), &mut o);
-            (
-                self.loss.partial_loss(&o, y, rows.clone()),
-                loss::correct_rows(&o, y, rows),
-            )
-        });
-        let loss_total = reduce::sum_f32(parts.iter().map(|(l, _)| *l));
-        let correct = reduce::sum_usize(parts.iter().map(|(_, c)| *c));
-        (
-            self.loss.finish_loss(loss_total, m, p),
-            correct as f32 / m as f32,
-        )
+        self.graph.evaluate_exec(x, y, exec)
     }
 
     /// Remark-1 step: produce the *raw* AOP gradient estimate (memory
@@ -267,27 +155,21 @@ impl AopEngine {
         x: &Matrix,
         y: &Matrix,
         opt: &crate::aop::optimizer::Optimizer,
-        state: &mut crate::aop::optimizer::OptState,
+        ost: &mut crate::aop::optimizer::OptState,
         rng: &mut Rng,
     ) -> StepStats {
-        let fs = self.fwd_score(x, y, 1.0);
-        let sel = policy::select(
-            self.policy,
-            &fs.scores,
-            self.k.min(fs.scores.len()),
-            self.memory.enabled,
-            rng,
-        );
-        let gw = if self.compact {
-            ops::masked_outer_compact(&fs.xhat, &fs.ghat, &sel.compact_pairs())
-        } else {
-            ops::masked_outer(&fs.xhat, &fs.ghat, &sel.sel_scale)
-        };
+        let exec = Executor::serial();
+        let fwd = train::fwd_score(&self.graph, &self.state, x, y, 1.0, &exec);
+        let sel = train::select_layers(&self.state, &fwd, rng).remove(0);
+        let gw = train::aop_weight_grad(&fwd.layers[0], &sel, self.compact, &exec);
+        let layer = &mut self.graph.layers[0];
         // fwd_score folded η=1, so db is the raw bias gradient
-        state.apply(opt, &mut self.w, &mut self.b, &gw, &fs.db);
-        self.memory.update(&fs.xhat, &fs.ghat, &sel.keep);
+        ost.apply(opt, &mut layer.w, &mut layer.b, &gw, &fwd.layers[0].db);
+        self.state.layers[0]
+            .mem
+            .update(&fwd.layers[0].xhat, &fwd.layers[0].ghat, &sel.keep);
         StepStats {
-            loss: fs.loss,
+            loss: fwd.loss,
             wstar_fro: gw.frobenius(),
             k_effective: sel.k_effective(),
         }
@@ -358,7 +240,7 @@ mod tests {
                 let st = e.step(&x, &y, 0.02, &mut rng);
                 assert!(st.loss.is_finite(), "{policy:?}");
             }
-            assert!(e.w.is_finite(), "{policy:?}");
+            assert!(e.w().is_finite(), "{policy:?}");
         }
     }
 
@@ -382,7 +264,7 @@ mod tests {
             a.step(&x, &y, 0.03, &mut rng_a);
             b.step(&x, &y, 0.03, &mut rng_b);
         }
-        assert!(a.w.max_abs_diff(&b.w) < 1e-5);
+        assert!(a.w().max_abs_diff(b.w()) < 1e-5);
     }
 
     #[test]
@@ -392,22 +274,24 @@ mod tests {
         let mut e = engine(&mut rng, 4, 16, Policy::TopK, 4, true);
         e.step(&x, &y, 0.05, &mut rng);
         // 12 unselected rows must sit in memory
-        assert!(!e.memory.is_zero());
+        assert!(!e.memory().is_zero());
         let nz = (0..16)
-            .filter(|&m| e.memory.mem_x.row(m).iter().any(|&v| v != 0.0))
+            .filter(|&m| e.memory().mem_x.row(m).iter().any(|&v| v != 0.0))
             .count();
         assert_eq!(nz, 12);
     }
 
     #[test]
-    fn no_memory_never_accumulates() {
+    fn no_memory_never_accumulates_and_never_allocates() {
         let mut rng = Rng::new(5);
         let (x, y, _) = regression_data(&mut rng, 16, 4);
         let mut e = engine(&mut rng, 4, 16, Policy::RandK, 4, false);
         for _ in 0..10 {
             e.step(&x, &y, 0.05, &mut rng);
         }
-        assert!(e.memory.is_zero());
+        assert!(e.memory().is_zero());
+        // disabled memory is the storage-free state, not an M×N zero pair
+        assert_eq!(e.memory().mem_x.shape(), (0, 0));
     }
 
     #[test]
@@ -427,8 +311,8 @@ mod tests {
             assert_eq!(a.loss.to_bits(), b.loss.to_bits());
             assert_eq!(a.wstar_fro.to_bits(), b.wstar_fro.to_bits());
         }
-        assert_eq!(serial.w.data(), par.w.data());
-        assert_eq!(serial.b, par.b);
+        assert_eq!(serial.w().data(), par.w().data());
+        assert_eq!(serial.b(), par.b());
         let (l1, a1) = serial.evaluate(&x, &y);
         let (l2, a2) = par.evaluate_exec(&x, &y, &exec4);
         assert_eq!(l1.to_bits(), l2.to_bits());
@@ -443,10 +327,10 @@ mod tests {
         let o = e.forward(&x);
         let (_, g) = LossKind::Mse.loss_and_grad(&o, &y);
         let db_expect: Vec<f32> = g.col_sums().iter().map(|d| 0.05 * d).collect();
-        let b0 = e.b.clone();
+        let b0 = e.b().to_vec();
         e.step(&x, &y, 0.05, &mut rng);
-        for i in 0..e.b.len() {
-            assert!((e.b[i] - (b0[i] - db_expect[i])).abs() < 1e-6);
+        for i in 0..e.b().len() {
+            assert!((e.b()[i] - (b0[i] - db_expect[i])).abs() < 1e-6);
         }
     }
 }

@@ -32,6 +32,17 @@ impl MemoryState {
         }
     }
 
+    /// A permanently-off memory holding **no storage** (0×0 matrices):
+    /// the "without memory" ablation and the exact-SGD path never
+    /// allocate the M×N / M×P state they would never read.
+    pub fn disabled() -> Self {
+        MemoryState {
+            mem_x: Matrix::zeros(0, 0),
+            mem_g: Matrix::zeros(0, 0),
+            enabled: false,
+        }
+    }
+
     /// Lines 3-4: fold the memory into the fresh batch,
     /// returning `(X̂, Ĝ)`.
     pub fn fold(&self, x: &Matrix, g: &Matrix, eta: f32) -> (Matrix, Matrix) {
@@ -59,10 +70,17 @@ impl MemoryState {
         self.mem_g = Matrix::zeros(self.mem_g.rows(), self.mem_g.cols());
     }
 
+    /// Squared Frobenius mass of the deferred state — the summable
+    /// per-layer partial behind [`MemoryState::deferred_mass`] (the
+    /// layer-graph core sums these across layers before one final sqrt).
+    pub fn deferred_sq(&self) -> f32 {
+        self.mem_x.frobenius().powi(2) + self.mem_g.frobenius().powi(2)
+    }
+
     /// Frobenius norm of the deferred gradient mass (diagnostic; the
     /// metrics sink logs this as `mem_fro`).
     pub fn deferred_mass(&self) -> f32 {
-        (self.mem_x.frobenius().powi(2) + self.mem_g.frobenius().powi(2)).sqrt()
+        self.deferred_sq().sqrt()
     }
 
     pub fn is_zero(&self) -> bool {
@@ -120,6 +138,15 @@ mod tests {
                 assert!(ms.mem_g.row(m).iter().all(|&v| v == 0.0));
             }
         }
+    }
+
+    #[test]
+    fn disabled_constructor_holds_no_storage() {
+        let ms = MemoryState::disabled();
+        assert!(!ms.enabled);
+        assert!(ms.is_zero());
+        assert_eq!(ms.mem_x.shape(), (0, 0));
+        assert_eq!(ms.deferred_mass(), 0.0);
     }
 
     #[test]

@@ -7,8 +7,9 @@
 //!   without replacement) plus the exact baseline;
 //! * [`memory`] — the `m^X` / `m^G` error-feedback state (alg. lines 3-4,
 //!   8-9);
-//! * [`engine`] — a pure-Rust Mem-AOP-GD step, the oracle for the HLO path
-//!   and the baseline comparator for the benches;
+//! * [`engine`] — the single-layer engine surface (a thin adapter over
+//!   the [`crate::train`] layer-graph core, where the step itself lives),
+//!   the oracle for the HLO path and the baseline comparator for benches;
 //! * [`flops`] — exact vs compaction-regime cost model backing the
 //!   computational-reduction claims.
 

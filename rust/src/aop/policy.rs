@@ -128,6 +128,17 @@ impl Selection {
     }
 }
 
+/// The deterministic exact-BP selection: every row, unit scale, nothing
+/// deferred. Needs no scores and no RNG — the exact-SGD path calls this
+/// directly instead of threading a dummy generator through [`select`].
+pub fn select_exact(m: usize) -> Selection {
+    Selection {
+        sel_scale: vec![1.0; m],
+        keep: vec![0.0; m],
+        indices: (0..m).collect(),
+    }
+}
+
 /// Apply `policy` to `scores`, selecting `k` of `m = scores.len()` rows.
 ///
 /// `memory` toggles the error-feedback retention of unselected rows
@@ -142,9 +153,12 @@ pub fn select(
 ) -> Selection {
     let m = scores.len();
     assert!(k <= m, "k={k} > m={m}");
+    if policy == Policy::Exact {
+        return select_exact(m);
+    }
     let mut sel_scale = vec![0.0f32; m];
     let mut indices: Vec<usize> = match policy {
-        Policy::Exact => (0..m).collect(),
+        Policy::Exact => unreachable!("handled above"),
         Policy::TopK => top_k_indices(scores, k),
         Policy::RandK => rng.sample_without_replacement(m, k),
         Policy::WeightedK => rng.weighted_sample_without_replacement(scores, k),
@@ -317,6 +331,12 @@ mod tests {
         assert_eq!(s.indices.len(), 3);
         assert!(s.sel_scale.iter().all(|&v| v == 1.0));
         assert!(s.keep.iter().all(|&v| v == 0.0));
+        // select(Exact) is exactly select_exact — no RNG, no scores read
+        let direct = select_exact(3);
+        assert_eq!(direct.indices, s.indices);
+        assert_eq!(direct.sel_scale, s.sel_scale);
+        assert_eq!(direct.keep, s.keep);
+        assert_eq!(direct.k_effective(), 3);
     }
 
     #[test]

@@ -1,9 +1,20 @@
 //! Experiment configuration and the paper's Tab. I presets.
+//!
+//! Beyond the paper's flat single-layer setup, a config may carry a
+//! `layers` spec: a chain of dense layers (width + activation), each
+//! with its own optional `{k, policy, memory}` override — heterogeneous
+//! per-layer approximation budgets, resolved by
+//! [`ExperimentConfig::layer_plan`] into the `train` core's
+//! [`AopLayerConfig`]s. A flat config (no `layers`) resolves to a
+//! single identity-activation layer with the flat knobs — exactly the
+//! historical behavior, preserved bit-for-bit.
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::aop::Policy;
+use crate::model::activations::Activation;
 use crate::model::LossKind;
+use crate::train::AopLayerConfig;
 use crate::util::json::{self, Json};
 
 /// Which of the paper's two workloads (plus dataset substitution scale).
@@ -164,6 +175,148 @@ impl LrSchedule {
     }
 }
 
+/// One layer of a `layers` spec: output width, activation, and optional
+/// per-layer Mem-AOP-GD overrides (absent fields fall back to the flat
+/// config's `k`/`policy`/`memory`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSpec {
+    /// Output width of this layer. The last layer's width must equal the
+    /// task's output dim.
+    pub width: usize,
+    /// Elementwise activation; `None` resolves positionally (relu for
+    /// hidden layers, identity for the head).
+    pub activation: Option<Activation>,
+    /// Per-layer K override (≤ M).
+    pub k: Option<usize>,
+    /// Per-layer selection-policy override.
+    pub policy: Option<Policy>,
+    /// Per-layer memory override.
+    pub memory: Option<bool>,
+}
+
+impl LayerSpec {
+    /// A bare layer: width only, everything else inherited.
+    pub fn plain(width: usize) -> LayerSpec {
+        LayerSpec {
+            width,
+            activation: None,
+            k: None,
+            policy: None,
+            memory: None,
+        }
+    }
+
+    /// Parse one CLI layer item `width[:activation[:k]]`, e.g. `32`,
+    /// `32:relu`, `32:tanh:16`.
+    pub fn parse(s: &str) -> Result<LayerSpec> {
+        let mut it = s.trim().split(':');
+        let width: usize = it
+            .next()
+            .filter(|w| !w.is_empty())
+            .and_then(|w| w.parse().ok())
+            .ok_or_else(|| anyhow!("layer '{s}': expected width[:activation[:k]]"))?;
+        let activation = match it.next() {
+            None | Some("") => None,
+            Some(a) => Some(
+                Activation::parse(a)
+                    .ok_or_else(|| anyhow!("layer '{s}': unknown activation '{a}'"))?,
+            ),
+        };
+        let k = match it.next() {
+            None | Some("") => None,
+            Some(kv) => Some(
+                kv.parse()
+                    .map_err(|_| anyhow!("layer '{s}': bad k '{kv}'"))?,
+            ),
+        };
+        if let Some(extra) = it.next() {
+            bail!("layer '{s}': unexpected trailing ':{extra}'");
+        }
+        Ok(LayerSpec {
+            width,
+            activation,
+            k,
+            policy: None,
+            memory: None,
+        })
+    }
+
+    /// Parse a comma-separated CLI list, e.g. `"32:relu,10"`. Empty
+    /// segments (stray `,,` or a trailing comma) are errors, not silently
+    /// dropped — a typo must not train a different network.
+    pub fn parse_list(s: &str) -> Result<Vec<LayerSpec>> {
+        s.split(',').map(LayerSpec::parse).collect()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![("width", json::num(self.width as f64))];
+        if let Some(a) = self.activation {
+            pairs.push(("activation", json::s(a.name())));
+        }
+        if let Some(k) = self.k {
+            pairs.push(("k", json::num(k as f64)));
+        }
+        if let Some(p) = self.policy {
+            pairs.push(("policy", json::s(p.name())));
+        }
+        if let Some(m) = self.memory {
+            pairs.push(("memory", Json::Bool(m)));
+        }
+        json::obj(pairs)
+    }
+
+    fn from_json(v: &Json, i: usize) -> Result<LayerSpec> {
+        let width = v
+            .get("width")
+            .and_then(|n| n.as_usize())
+            .ok_or_else(|| anyhow!("layers[{i}]: missing integer 'width'"))?;
+        let activation = match v.get("activation").and_then(|a| a.as_str()) {
+            Some(a) => Some(
+                Activation::parse(a)
+                    .ok_or_else(|| anyhow!("layers[{i}]: unknown activation '{a}'"))?,
+            ),
+            None => None,
+        };
+        let k = match v.get("k") {
+            Some(n) => Some(
+                n.as_usize()
+                    .ok_or_else(|| anyhow!("layers[{i}]: bad k"))?,
+            ),
+            None => None,
+        };
+        let policy = match v.get("policy").and_then(|p| p.as_str()) {
+            Some(p) => {
+                Some(Policy::parse_or_suggest(p).map_err(|e| anyhow!("layers[{i}]: {e}"))?)
+            }
+            None => None,
+        };
+        let memory = match v.get("memory") {
+            Some(b) => Some(
+                b.as_bool()
+                    .ok_or_else(|| anyhow!("layers[{i}]: bad memory"))?,
+            ),
+            None => None,
+        };
+        Ok(LayerSpec {
+            width,
+            activation,
+            k,
+            policy,
+            memory,
+        })
+    }
+}
+
+/// One fully-resolved layer of a run: dims, activation, and the
+/// effective per-layer Mem-AOP-GD config.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResolvedLayer {
+    pub fan_in: usize,
+    pub fan_out: usize,
+    pub activation: Activation,
+    pub cfg: AopLayerConfig,
+}
+
 /// Full specification of one training run.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -187,6 +340,12 @@ pub struct ExperimentConfig {
     /// bit-identical curves and weights; it only changes wall-clock. The
     /// serve scheduler accounts `threads` pool slots per job.
     pub threads: usize,
+    /// Optional layer-graph spec (protocol v3). `None` = the paper's
+    /// flat single dense layer with the flat `k`/`policy`/`memory` —
+    /// the historical behavior. `Some` = a chain of dense layers ending
+    /// at the task's output width, each optionally overriding the flat
+    /// selection knobs (native backend only).
+    pub layers: Option<Vec<LayerSpec>>,
 }
 
 /// Upper bound on [`ExperimentConfig::threads`] (sanity cap, far above
@@ -208,6 +367,7 @@ impl ExperimentConfig {
             backend: Backend::Native,
             data_scale: 1.0,
             threads: 1,
+            layers: None,
         }
     }
 
@@ -225,6 +385,7 @@ impl ExperimentConfig {
             backend: Backend::Native,
             data_scale: 1.0,
             threads: 1,
+            layers: None,
         }
     }
 
@@ -255,6 +416,61 @@ impl ExperimentConfig {
         self.task.batch()
     }
 
+    /// Resolve the run's layer graph: dims, activation, and the
+    /// effective `{k, policy, memory}` per layer. A flat config (no
+    /// `layers`) is one identity-activation dense layer with the flat
+    /// knobs; a `layers` spec chains `n_in → widths... → n_out` with
+    /// positional activation defaults (relu hidden, identity head) and
+    /// per-layer overrides falling back to the flat values.
+    pub fn layer_plan(&self) -> Vec<ResolvedLayer> {
+        let (n_in, n_out) = self.task.dims();
+        let Some(specs) = &self.layers else {
+            return vec![ResolvedLayer {
+                fan_in: n_in,
+                fan_out: n_out,
+                activation: Activation::Identity,
+                cfg: AopLayerConfig {
+                    k: self.k,
+                    policy: self.policy,
+                    memory: self.memory,
+                },
+            }];
+        };
+        let nl = specs.len();
+        let mut fan_in = n_in;
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let last = i + 1 == nl;
+                let rl = ResolvedLayer {
+                    fan_in,
+                    fan_out: s.width,
+                    activation: s.activation.unwrap_or(if last {
+                        Activation::Identity
+                    } else {
+                        Activation::Relu
+                    }),
+                    cfg: AopLayerConfig {
+                        k: s.k.unwrap_or(self.k),
+                        policy: s.policy.unwrap_or(self.policy),
+                        memory: s.memory.unwrap_or(self.memory),
+                    },
+                };
+                fan_in = s.width;
+                rl
+            })
+            .collect()
+    }
+
+    /// `(fan_in, fan_out)` of every resolved layer.
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        self.layer_plan()
+            .iter()
+            .map(|rl| (rl.fan_in, rl.fan_out))
+            .collect()
+    }
+
     /// Validate internal consistency.
     pub fn validate(&self) -> Result<()> {
         if self.k == 0 || self.k > self.m() {
@@ -280,11 +496,41 @@ impl ExperimentConfig {
                 self.threads
             );
         }
+        if let Some(specs) = &self.layers {
+            if specs.is_empty() {
+                bail!("layers spec must not be empty (omit it for the flat single layer)");
+            }
+            if self.backend == Backend::Hlo {
+                // the compiled two-phase artifacts are the fixed
+                // single-layer models; layer graphs are native-only
+                bail!("a layers spec requires the native backend");
+            }
+            let n_out = self.task.dims().1;
+            let last = specs.last().unwrap();
+            if last.width != n_out {
+                bail!(
+                    "last layer width {} must equal the task output dim {n_out}",
+                    last.width
+                );
+            }
+            for (i, rl) in self.layer_plan().iter().enumerate() {
+                if rl.fan_out == 0 {
+                    bail!("layers[{i}]: width must be > 0");
+                }
+                if rl.cfg.k == 0 || rl.cfg.k > self.m() {
+                    bail!(
+                        "layers[{i}]: k={} out of range 1..={}",
+                        rl.cfg.k,
+                        self.m()
+                    );
+                }
+            }
+        }
         Ok(())
     }
 
     pub fn to_json(&self) -> Json {
-        json::obj(vec![
+        let mut pairs = vec![
             ("task", json::s(self.task.name())),
             ("policy", json::s(self.policy.name())),
             ("k", json::num(self.k as f64)),
@@ -296,7 +542,12 @@ impl ExperimentConfig {
             ("backend", json::s(self.backend.name())),
             ("data_scale", json::num(self.data_scale as f64)),
             ("threads", json::num(self.threads as f64)),
-        ])
+        ];
+        if let Some(specs) = &self.layers {
+            // emitted only when present, so flat frames stay v1/v2-shaped
+            pairs.push(("layers", Json::Arr(specs.iter().map(|s| s.to_json()).collect())));
+        }
+        json::obj(pairs)
     }
 
     pub fn from_json(v: &Json) -> Result<Self> {
@@ -339,6 +590,22 @@ impl ExperimentConfig {
                     .ok_or_else(|| anyhow!("bad threads (integer >= 1)"))?
                     as usize,
                 None => 1,
+            },
+            // optional (protocol v3): v1/v2 frames and flat run files
+            // carry no layer spec
+            layers: match v.get("layers") {
+                Some(l) => {
+                    let arr = l
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("config: layers not an array"))?;
+                    Some(
+                        arr.iter()
+                            .enumerate()
+                            .map(|(i, e)| LayerSpec::from_json(e, i))
+                            .collect::<Result<Vec<_>>>()?,
+                    )
+                }
+                None => None,
             },
         };
         cfg.validate()?;
@@ -484,6 +751,109 @@ mod tests {
         c.schedule = LrSchedule::StepDecay { every: 25, gamma: 0.3 };
         let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c2.schedule, c.schedule);
+    }
+
+    fn layered_cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::energy_preset();
+        c.backend = Backend::Native;
+        c.policy = Policy::TopK;
+        c.k = 18;
+        c.memory = true;
+        c.layers = Some(vec![
+            LayerSpec {
+                width: 8,
+                activation: Some(Activation::Tanh),
+                k: Some(36),
+                policy: Some(Policy::RandK),
+                memory: Some(false),
+            },
+            LayerSpec::plain(1),
+        ]);
+        c
+    }
+
+    #[test]
+    fn flat_config_resolves_to_one_identity_layer() {
+        let c = ExperimentConfig::mnist_preset();
+        let plan = c.layer_plan();
+        assert_eq!(plan.len(), 1);
+        assert_eq!((plan[0].fan_in, plan[0].fan_out), (784, 10));
+        assert_eq!(plan[0].activation, Activation::Identity);
+        assert_eq!(plan[0].cfg.k, c.k);
+        assert_eq!(plan[0].cfg.policy, c.policy);
+        assert_eq!(plan[0].cfg.memory, c.memory);
+        assert_eq!(c.layer_dims(), vec![(784, 10)]);
+    }
+
+    #[test]
+    fn layer_plan_resolves_overrides_and_defaults() {
+        let c = layered_cfg();
+        assert!(c.validate().is_ok());
+        let plan = c.layer_plan();
+        assert_eq!(plan.len(), 2);
+        // explicit overrides on layer 0
+        assert_eq!((plan[0].fan_in, plan[0].fan_out), (16, 8));
+        assert_eq!(plan[0].activation, Activation::Tanh);
+        assert_eq!(plan[0].cfg.k, 36);
+        assert_eq!(plan[0].cfg.policy, Policy::RandK);
+        assert!(!plan[0].cfg.memory);
+        // bare head layer inherits the flat knobs + identity default
+        assert_eq!((plan[1].fan_in, plan[1].fan_out), (8, 1));
+        assert_eq!(plan[1].activation, Activation::Identity);
+        assert_eq!(plan[1].cfg.k, 18);
+        assert_eq!(plan[1].cfg.policy, Policy::TopK);
+        assert!(plan[1].cfg.memory);
+    }
+
+    #[test]
+    fn layers_json_roundtrip() {
+        let c = layered_cfg();
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.layers, c.layers);
+        assert_eq!(c2.layer_plan(), c.layer_plan());
+        // flat configs emit no `layers` key at all (v1/v2-shaped frames)
+        let flat = ExperimentConfig::energy_preset().to_json();
+        assert!(flat.get("layers").is_none());
+        let f2 = ExperimentConfig::from_json(&flat).unwrap();
+        assert!(f2.layers.is_none());
+    }
+
+    #[test]
+    fn layers_validation_rejects_bad_specs() {
+        // wrong head width
+        let mut c = layered_cfg();
+        c.layers = Some(vec![LayerSpec::plain(8), LayerSpec::plain(3)]);
+        assert!(c.validate().is_err());
+        // empty spec
+        c.layers = Some(vec![]);
+        assert!(c.validate().is_err());
+        // per-layer k out of range
+        let mut c = layered_cfg();
+        if let Some(specs) = &mut c.layers {
+            specs[0].k = Some(200); // > M=144
+        }
+        assert!(c.validate().is_err());
+        // layer graphs are native-only
+        let mut c = layered_cfg();
+        c.backend = Backend::Hlo;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn layer_spec_cli_parse() {
+        let specs = LayerSpec::parse_list("32:relu,8:tanh:9,1").unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].width, 32);
+        assert_eq!(specs[0].activation, Some(Activation::Relu));
+        assert_eq!(specs[0].k, None);
+        assert_eq!(specs[1].k, Some(9));
+        assert_eq!(specs[2], LayerSpec::plain(1));
+        assert!(LayerSpec::parse("x:relu").is_err());
+        assert!(LayerSpec::parse("8:gelu").is_err());
+        assert!(LayerSpec::parse("8:relu:4:zzz").is_err());
+        // empty segments are rejected, never silently dropped
+        assert!(LayerSpec::parse_list("128:relu,,10").is_err());
+        assert!(LayerSpec::parse_list("128:relu,10,").is_err());
     }
 
     #[test]

@@ -23,28 +23,32 @@ use crate::coordinator::config::{Backend, ExperimentConfig, Task};
 use crate::coordinator::hlo_trainer::HloTrainer;
 use crate::coordinator::native_trainer::NativeTrainer;
 use crate::data::{batcher::Batcher, digits, energy, Dataset};
-use crate::metrics::{EpochMetrics, RunCurve};
+use crate::metrics::{EpochMetrics, LayerEpochMetrics, RunCurve};
 use crate::runtime::Runtime;
 use crate::tensor::{rng::Rng, Matrix};
+use crate::train::{self, AopLayerConfig};
 
-/// Backend-agnostic single-layer training interface.
+/// Backend-agnostic layer-graph training interface.
 ///
-/// The step is split in two so the *caller* owns the policy decision
-/// (mirroring the two compiled phases of the HLO path).
+/// The step is split in two so the *caller* owns the per-layer policy
+/// decisions (mirroring the two compiled phases of the HLO path). Score
+/// vectors and selections are indexed by layer; the single-layer HLO
+/// path is simply the length-1 case.
 pub trait Trainer {
     /// Update the learning rate (η_t enters the memory folding as √η_t;
     /// on the HLO path η is a runtime input — no recompilation).
     fn set_lr(&mut self, eta: f32);
-    /// Phase 1: returns (train loss, policy scores, bias-grad step).
-    fn fwd_score(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, Vec<f32>, Vec<f32>)>;
-    /// Phase 2: apply the selection; returns ||Ŵ*||_F.
-    fn apply(&mut self, sel: &policy::Selection) -> Result<f32>;
+    /// Phase 1: returns (train loss, per-layer policy scores).
+    fn fwd_score(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, Vec<Vec<f32>>)>;
+    /// Phase 2: apply the per-layer selections (same indexing as the
+    /// scores); returns the total ||Ŵ*||_F across layers.
+    fn apply(&mut self, sels: &[policy::Selection]) -> Result<f32>;
     /// Validation loss and accuracy on one batch.
     fn evaluate(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, f32)>;
-    /// Frobenius mass currently deferred in memory.
+    /// Frobenius mass currently deferred across all layer memories.
     fn mem_fro(&self) -> f32;
-    /// Copy of (W, b) for cross-checks.
-    fn weight_snapshot(&self) -> (Matrix, Vec<f32>);
+    /// Copy of every layer's (W, b) for cross-checks, input-to-output.
+    fn weight_snapshot(&self) -> Vec<(Matrix, Vec<f32>)>;
 }
 
 /// Result of one experiment.
@@ -52,14 +56,25 @@ pub trait Trainer {
 pub struct RunResult {
     pub config: ExperimentConfig,
     pub curve: RunCurve,
-    /// Final weights (for cross-checking backends).
-    pub final_w: Matrix,
-    pub final_b: Vec<f32>,
+    /// Final per-layer weights `(W, b)`, input-to-output (for
+    /// cross-checking backends; one entry for flat configs).
+    pub final_layers: Vec<(Matrix, Vec<f32>)>,
 }
 
 impl RunResult {
     pub fn final_val_loss(&self) -> f32 {
         self.curve.final_val_loss()
+    }
+
+    /// First layer's final weights — for flat (single-layer) configs,
+    /// *the* weights.
+    pub fn final_w(&self) -> &Matrix {
+        &self.final_layers[0].0
+    }
+
+    /// First layer's final bias.
+    pub fn final_b(&self) -> &[f32] {
+        &self.final_layers[0].1
     }
 }
 
@@ -124,12 +139,15 @@ pub fn run_with_trainer_observed<T: Trainer>(
     cfg.validate()?;
     let (train, val) = load_data(cfg);
     let m = cfg.m();
-    let (n, p) = cfg.task.dims();
+    let layers = cfg.layer_plan();
+    let nl = layers.len();
 
+    let layer_cfgs: Vec<AopLayerConfig> = layers.iter().map(|rl| rl.cfg).collect();
     let mut shuffle_rng = Rng::new(cfg.seed ^ 0x5A0FF);
     let mut batcher = Batcher::new(train.len(), m);
     let mut curve = RunCurve::new(&cfg.label());
     let mut cum_backward_flops: u64 = 0;
+    let mut cum_layer_flops: Vec<u64> = vec![0; nl];
 
     for epoch in 1..=cfg.epochs {
         let t0 = Instant::now();
@@ -138,18 +156,34 @@ pub fn run_with_trainer_observed<T: Trainer>(
         curve.steps_per_epoch = batches.len();
         let mut loss_sum = 0.0f64;
         let mut fro_sum = 0.0f64;
+        let mut k_eff_sums: Vec<u64> = vec![0; nl];
         for (step, b) in batches.iter().enumerate() {
-            let (loss, scores, _db) = trainer.fwd_score(&b.x, &b.y)?;
-            // counter-based stream: the draw is keyed by (seed, epoch,
-            // step), independent of every other stream's consumption
+            let (loss, scores) = trainer.fwd_score(&b.x, &b.y)?;
+            anyhow::ensure!(scores.len() == nl, "trainer scores vs layer plan");
+            // counter-based stream: the draws are keyed by (seed, epoch,
+            // step), independent of every other stream's consumption.
+            // The per-layer draw order (output-layer-first) is defined
+            // once, in `train::select_with_configs` — for flat configs
+            // this is the historical single draw.
             let mut policy_rng =
                 Rng::for_stream(cfg.seed ^ 0x9011C4, epoch as u64, step as u64);
-            let sel = policy::select(cfg.policy, &scores, cfg.k, cfg.memory, &mut policy_rng);
-            let fro = trainer.apply(&sel)?;
+            let score_refs: Vec<&[f32]> = scores.iter().map(|s| s.as_slice()).collect();
+            let sels = train::select_with_configs(&layer_cfgs, &score_refs, &mut policy_rng);
+            let fro = trainer.apply(&sels)?;
             loss_sum += loss as f64;
             fro_sum += fro as f64;
-            cum_backward_flops +=
-                flops::aop_step(m, n, p, sel.k_effective()).backward_only();
+            for (li, sel) in sels.iter().enumerate() {
+                let lf = flops::aop_step(
+                    m,
+                    layers[li].fan_in,
+                    layers[li].fan_out,
+                    sel.k_effective(),
+                )
+                .backward_only();
+                cum_layer_flops[li] += lf;
+                cum_backward_flops += lf;
+                k_eff_sums[li] += sel.k_effective() as u64;
+            }
         }
         let train_s = t0.elapsed().as_secs_f64();
         let rows_done = (batches.len() * m) as f64;
@@ -164,19 +198,24 @@ pub fn run_with_trainer_observed<T: Trainer>(
             backward_flops: cum_backward_flops,
             rows_per_sec: if train_s > 0.0 { rows_done / train_s } else { 0.0 },
             wall_s: t0.elapsed().as_secs_f64(),
+            layers: (0..nl)
+                .map(|li| LayerEpochMetrics {
+                    k_effective: k_eff_sums[li] as f64 / batches.len() as f64,
+                    backward_flops: cum_layer_flops[li],
+                })
+                .collect(),
         };
+        let keep_going = on_epoch(&metrics);
         curve.push(metrics);
-        if !on_epoch(&metrics) {
+        if !keep_going {
             break; // observer asked to stop (e.g. job cancellation)
         }
     }
 
-    let (final_w, final_b) = trainer.weight_snapshot();
     Ok(RunResult {
         config: cfg.clone(),
         curve,
-        final_w,
-        final_b,
+        final_layers: trainer.weight_snapshot(),
     })
 }
 
@@ -224,7 +263,7 @@ mod tests {
         let first = r.curve.epochs[0].val_loss;
         let last = r.final_val_loss();
         assert!(last < first * 0.8, "first={first} last={last}");
-        assert!(r.final_w.is_finite());
+        assert!(r.final_w().is_finite());
     }
 
     #[test]
@@ -269,8 +308,10 @@ mod tests {
             assert_eq!(ma.val_loss.to_bits(), mb.val_loss.to_bits());
             assert_eq!(ma.backward_flops, mb.backward_flops);
         }
-        assert_eq!(a.final_w.data(), b.final_w.data());
-        assert_eq!(a.final_b, b.final_b);
+        for ((wa, ba), (wb, bb)) in a.final_layers.iter().zip(b.final_layers.iter()) {
+            assert_eq!(wa.data(), wb.data());
+            assert_eq!(ba, bb);
+        }
     }
 
     #[test]
@@ -315,7 +356,7 @@ mod tests {
         let cfg = quick_energy(Policy::TopK, true, 18);
         let r = run_with(&cfg, &mut |m| m.epoch < 5).unwrap();
         assert_eq!(r.curve.epochs.len(), 5);
-        assert!(r.final_w.is_finite());
+        assert!(r.final_w().is_finite());
     }
 
     #[test]

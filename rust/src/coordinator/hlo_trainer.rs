@@ -41,6 +41,11 @@ pub struct HloTrainer {
 impl HloTrainer {
     /// Build against a runtime; compiles (or reuses cached) artifacts.
     pub fn new(cfg: &ExperimentConfig, rt: &Runtime) -> Result<HloTrainer> {
+        anyhow::ensure!(
+            cfg.layers.is_none(),
+            "the hlo backend compiles the fixed single-layer artifacts; \
+             layer-graph configs need --backend native"
+        );
         let task = cfg.task.name();
         let meta = rt.manifest.task(task)?;
         let (n, p) = cfg.task.dims();
@@ -77,7 +82,7 @@ impl Trainer for HloTrainer {
         self.eta = eta;
     }
 
-    fn fwd_score(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, Vec<f32>, Vec<f32>)> {
+    fn fwd_score(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, Vec<Vec<f32>>)> {
         let out = self.fwd.run_ref(&[
             ArgRef::from(x),
             ArgRef::from(y),
@@ -94,11 +99,14 @@ impl Trainer for HloTrainer {
         let ghat = it.next().unwrap().into_matrix()?;
         let db = it.next().unwrap().into_vector()?;
         let scores = it.next().unwrap().into_vector()?;
-        self.pending = Some((xhat, ghat, db.clone()));
-        Ok((loss, scores, db))
+        self.pending = Some((xhat, ghat, db));
+        // single compiled dense layer == length-1 layer graph
+        Ok((loss, vec![scores]))
     }
 
-    fn apply(&mut self, sel: &Selection) -> Result<f32> {
+    fn apply(&mut self, sels: &[Selection]) -> Result<f32> {
+        anyhow::ensure!(sels.len() == 1, "hlo trainer is single-layer");
+        let sel = &sels[0];
         let (xhat, ghat, db) = self
             .pending
             .take()
@@ -135,8 +143,8 @@ impl Trainer for HloTrainer {
         (self.mem_x.frobenius().powi(2) + self.mem_g.frobenius().powi(2)).sqrt()
     }
 
-    fn weight_snapshot(&self) -> (Matrix, Vec<f32>) {
-        (self.w.clone(), self.b.clone())
+    fn weight_snapshot(&self) -> Vec<(Matrix, Vec<f32>)> {
+        vec![(self.w.clone(), self.b.clone())]
     }
 }
 

@@ -1,49 +1,56 @@
-//! Pure-Rust trainer for the paper's single-layer tasks.
+//! Pure-Rust trainer — a thin adapter binding the layer-graph training
+//! core (`crate::train`) to the backend-agnostic [`Trainer`] interface.
 //!
 //! The numerics oracle for the HLO path: identical math, identical policy
 //! decisions (both paths draw selections from the same seeded RNG stream
-//! in [`experiment`](crate::coordinator::experiment)), so curves must
-//! agree to f32 tolerance — enforced by `rust/tests/native_vs_hlo.rs`.
+//! in [`experiment`](crate::coordinator::experiment)), so single-layer
+//! curves must agree to f32 tolerance — enforced by
+//! `rust/tests/native_vs_hlo.rs`. Beyond the paper's flat models it
+//! trains any `layers` spec: per-layer activations and per-layer
+//! `{k, policy, memory}` resolved by `ExperimentConfig::layer_plan`.
 
 use anyhow::Result;
 
-use crate::aop::engine::{AopEngine, FwdScore};
 use crate::aop::policy::Selection;
 use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::experiment::Trainer;
 use crate::exec::Executor;
-use crate::tensor::{init, rng::Rng, Matrix};
+use crate::tensor::{rng::Rng, Matrix};
+use crate::train::{self, Dense, Graph, GraphFwd, GraphState};
 
-/// Native single-dense-layer trainer. Executes through the `exec`
-/// subsystem with `cfg.threads` workers — `threads = 1` is the inline
-/// serial path, and any other value is bit-identical to it.
+/// Native layer-graph trainer. Executes through the `exec` subsystem
+/// with `cfg.threads` workers — `threads = 1` is the inline serial path,
+/// and any other value is bit-identical to it.
 pub struct NativeTrainer {
-    engine: AopEngine,
+    graph: Graph,
+    state: GraphState,
     eta: f32,
     /// Persistent worker pool, one per trainer (dispatch reuses warm
     /// threads across every step of the run).
     exec: Executor,
     /// Cached fwd_score output between `scores` and `apply` (the trait
-    /// splits the step so the caller owns the policy decision).
-    pending: Option<FwdScore>,
+    /// splits the step so the caller owns the policy decisions).
+    pending: Option<GraphFwd>,
 }
 
 impl NativeTrainer {
     pub fn new(cfg: &ExperimentConfig) -> Result<NativeTrainer> {
-        let (n, p) = cfg.task.dims();
-        // weight init stream is independent of the policy stream
+        cfg.validate()?;
+        let plan = cfg.layer_plan();
+        // weight init stream is independent of the policy stream; layers
+        // draw in input-to-output order, so the flat single-layer case
+        // consumes exactly the historical stream
         let mut wrng = Rng::new(cfg.seed ^ 0x57EED);
-        let w = init::glorot_uniform(&mut wrng, n, p);
-        let engine = AopEngine::new(
-            w,
-            cfg.task.loss(),
-            cfg.m(),
-            cfg.policy,
-            cfg.k,
-            cfg.memory,
-        );
+        let layers: Vec<Dense> = plan
+            .iter()
+            .map(|rl| Dense::glorot(&mut wrng, rl.fan_in, rl.fan_out, rl.activation))
+            .collect();
+        let graph = Graph::new(layers, cfg.task.loss());
+        let cfgs: Vec<_> = plan.iter().map(|rl| rl.cfg).collect();
+        let state = GraphState::from_configs(&graph, cfg.m(), &cfgs);
         Ok(NativeTrainer {
-            engine,
+            graph,
+            state,
             eta: cfg.lr,
             exec: Executor::new(cfg.threads),
             pending: None,
@@ -56,34 +63,45 @@ impl Trainer for NativeTrainer {
         self.eta = eta;
     }
 
-    fn fwd_score(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, Vec<f32>, Vec<f32>)> {
-        let fs = self.engine.fwd_score_exec(x, y, self.eta, &self.exec);
-        let loss = fs.loss;
-        let scores = fs.scores.clone();
-        let db = fs.db.clone();
-        self.pending = Some(fs);
-        Ok((loss, scores, db))
+    fn fwd_score(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, Vec<Vec<f32>>)> {
+        let fwd = train::fwd_score(&self.graph, &self.state, x, y, self.eta, &self.exec);
+        let loss = fwd.loss;
+        let scores = fwd.layers.iter().map(|l| l.scores.clone()).collect();
+        self.pending = Some(fwd);
+        Ok((loss, scores))
     }
 
-    fn apply(&mut self, sel: &Selection) -> Result<f32> {
-        let fs = self
+    fn apply(&mut self, sels: &[Selection]) -> Result<f32> {
+        let fwd = self
             .pending
             .take()
             .expect("apply called without fwd_score");
-        let stats = self.engine.apply_exec(&fs, sel, &self.exec);
-        Ok(stats.wstar_fro)
+        let out = train::apply(
+            &mut self.graph,
+            &mut self.state,
+            &fwd,
+            sels,
+            self.eta,
+            &self.exec,
+            true,
+        );
+        Ok(out.wstar_fro)
     }
 
     fn evaluate(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, f32)> {
-        Ok(self.engine.evaluate_exec(x, y, &self.exec))
+        Ok(self.graph.evaluate_exec(x, y, &self.exec))
     }
 
     fn mem_fro(&self) -> f32 {
-        self.engine.memory.deferred_mass()
+        self.state.deferred_mass()
     }
 
-    fn weight_snapshot(&self) -> (Matrix, Vec<f32>) {
-        (self.engine.w.clone(), self.engine.b.clone())
+    fn weight_snapshot(&self) -> Vec<(Matrix, Vec<f32>)> {
+        self.graph
+            .layers
+            .iter()
+            .map(|l| (l.w.clone(), l.b.clone()))
+            .collect()
     }
 }
 
@@ -91,6 +109,7 @@ impl Trainer for NativeTrainer {
 mod tests {
     use super::*;
     use crate::aop::policy::{self, Policy};
+    use crate::coordinator::config::LayerSpec;
 
     #[test]
     fn trait_step_cycle_runs() {
@@ -102,15 +121,51 @@ mod tests {
         let mut rng = Rng::new(0);
         let x = Matrix::from_fn(144, 16, |_, _| rng.normal());
         let y = Matrix::from_fn(144, 1, |_, _| rng.normal());
-        let (loss, scores, _db) = t.fwd_score(&x, &y).unwrap();
+        let (loss, scores) = t.fwd_score(&x, &y).unwrap();
         assert!(loss.is_finite());
-        assert_eq!(scores.len(), 144);
-        let sel = policy::select(Policy::TopK, &scores, 18, true, &mut rng);
-        let fro = t.apply(&sel).unwrap();
+        assert_eq!(scores.len(), 1);
+        assert_eq!(scores[0].len(), 144);
+        let sel = policy::select(Policy::TopK, &scores[0], 18, true, &mut rng);
+        let fro = t.apply(std::slice::from_ref(&sel)).unwrap();
         assert!(fro > 0.0);
         let (vl, _) = t.evaluate(&x, &y).unwrap();
         assert!(vl.is_finite());
         assert!(t.mem_fro() > 0.0);
+        assert_eq!(t.weight_snapshot().len(), 1);
+    }
+
+    #[test]
+    fn layered_config_builds_matching_graph() {
+        let mut cfg = ExperimentConfig::energy_preset();
+        cfg.policy = Policy::TopK;
+        cfg.k = 18;
+        cfg.memory = true;
+        cfg.layers = Some(vec![
+            LayerSpec {
+                width: 8,
+                activation: Some(crate::model::Activation::Tanh),
+                k: Some(36),
+                policy: None,
+                memory: None,
+            },
+            LayerSpec::plain(1),
+        ]);
+        let mut t = NativeTrainer::new(&cfg).unwrap();
+        let mut rng = Rng::new(1);
+        let x = Matrix::from_fn(144, 16, |_, _| rng.normal());
+        let y = Matrix::from_fn(144, 1, |_, _| rng.normal());
+        let (_, scores) = t.fwd_score(&x, &y).unwrap();
+        assert_eq!(scores.len(), 2);
+        let sels: Vec<_> = [(36usize, 0usize), (18, 1)]
+            .iter()
+            .map(|&(k, li)| policy::select(Policy::TopK, &scores[li], k, true, &mut rng))
+            .collect();
+        let fro = t.apply(&sels).unwrap();
+        assert!(fro.is_finite());
+        let snap = t.weight_snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].0.shape(), (16, 8));
+        assert_eq!(snap[1].0.shape(), (8, 1));
     }
 
     #[test]
@@ -123,6 +178,6 @@ mod tests {
             keep: vec![0.0; 144],
             indices: (0..144).collect(),
         };
-        let _ = t.apply(&sel);
+        let _ = t.apply(std::slice::from_ref(&sel));
     }
 }

@@ -101,6 +101,17 @@ pub fn fold_block(
     }
 }
 
+/// Memory-off folding for a row range: `out[r] = scale * src[r]` — the
+/// [`fold_rows`] special case with no memory term, so disabled memories
+/// fold without ever allocating (or reading) zero matrices.
+pub fn scale_rows(src: &Matrix, scale: f32, rows: Range<usize>, out: &mut [f32]) {
+    let block = rows_of(src, rows);
+    assert_eq!(block.len(), out.len());
+    for (o, &s) in out.iter_mut().zip(block.iter()) {
+        *o = scale * s;
+    }
+}
+
 /// Policy scores for a shard: `out[r] = ||xhat[r]|| * ||ghat[r]||` over
 /// the block-local rows (`xhat` is `rows × n`, `ghat` is `rows × p`).
 /// Same per-row ops as `ops::norm_product_scores`.
@@ -214,6 +225,20 @@ mod tests {
         }
         assert_eq!(xh.data(), xhat.data());
         assert_eq!(gh.data(), ghat.data());
+    }
+
+    #[test]
+    fn scale_rows_matches_scale_bitwise() {
+        let mut rng = Rng::new(9);
+        let src = randm(&mut rng, 14, 5);
+        let serial = src.scale(0.3);
+        let plan = ShardPlan::with_granularity(14, 6);
+        let mut out = Matrix::zeros(14, 5);
+        for (i, range) in plan.iter().enumerate() {
+            let blocks = RowBlocks::of(&mut out, &plan);
+            scale_rows(&src, 0.3, range, &mut blocks.lock(i));
+        }
+        assert_eq!(out.data(), serial.data());
     }
 
     #[test]

@@ -32,6 +32,13 @@
 //! flag, serve protocol) produces bit-identical curves and weights —
 //! the thread count is a speed knob, never a hyperparameter.
 //!
+//! The algorithm itself lives in exactly one place: the [`train`] module
+//! — a layer-graph model (`Dense` layers with pluggable activations)
+//! with per-layer `{k, policy, memory}` configuration and a single
+//! phase-split Mem-AOP-GD step built on the `exec` shard primitives.
+//! `AopEngine` (1-layer identity graph), the MLP API, `NativeTrainer`
+//! and the serve job path are all thin adapters over it.
+//!
 //! Builds are offline-first: the PJRT execution path is gated behind the
 //! `hlo` cargo feature (default off), so `cargo build && cargo test`
 //! needs no XLA toolchain — `--backend hlo` then reports a clear
@@ -48,4 +55,5 @@ pub mod model;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;
+pub mod train;
 pub mod util;

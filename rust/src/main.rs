@@ -55,6 +55,12 @@ fn app() -> App {
                     "1",
                     "data-parallel training threads (native backend; bit-identical curves at any value)",
                 )
+                .opt(
+                    "layers",
+                    "",
+                    "layer-graph spec `width[:activation[:k]],...` ending at the task output \
+                     width, e.g. `32:tanh:16,10` (native backend; empty = flat single layer)",
+                )
                 .opt("save", "", "write final weights+memories to this checkpoint path")
                 .flag("no-memory", "disable error-feedback memory")
                 .flag("quiet", "suppress per-epoch output"),
@@ -164,6 +170,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     if cfg.policy == Policy::Exact {
         cfg.memory = false;
     }
+    if let Some(spec) = args.get("layers").filter(|s| !s.is_empty()) {
+        use mem_aop_gd::coordinator::config::LayerSpec;
+        cfg.layers = Some(LayerSpec::parse_list(spec).map_err(|e| anyhow!("--layers: {e}"))?);
+    }
     cfg.validate()?;
 
     println!(
@@ -178,6 +188,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.seed,
         cfg.threads
     );
+    if cfg.layers.is_some() {
+        for (i, rl) in cfg.layer_plan().iter().enumerate() {
+            println!(
+                "  layer {i}: {}x{} {} (K={}, policy={}, memory={})",
+                rl.fan_in,
+                rl.fan_out,
+                rl.activation.name(),
+                rl.cfg.k,
+                rl.cfg.policy.name(),
+                rl.cfg.memory
+            );
+        }
+    }
     let r = experiment::run(&cfg)?;
     if !args.flag("quiet") {
         let mut rows = Vec::new();
@@ -204,8 +227,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(path) = args.get("save").filter(|s| !s.is_empty()) {
         use mem_aop_gd::coordinator::checkpoint::Checkpoint;
         let mut cp = Checkpoint::new();
-        cp.put_matrix("w", &r.final_w);
-        cp.put_vector("b", &r.final_b);
+        cp.put_scalar("n_layers", r.final_layers.len() as f32);
+        for (i, (w, b)) in r.final_layers.iter().enumerate() {
+            cp.put_matrix(&format!("w{i}"), w);
+            cp.put_vector(&format!("b{i}"), b);
+        }
         cp.put_scalar("epochs", cfg.epochs as f32);
         cp.save(std::path::Path::new(path))?;
         println!("checkpoint written to {path}");

@@ -8,8 +8,18 @@ use anyhow::{anyhow, Result};
 
 use crate::util::json::{self, Json};
 
-/// One epoch's record for a training run.
+/// Per-layer record within one epoch (protocol v3): how much of the
+/// approximation budget each layer actually used, and what it cost.
 #[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerEpochMetrics {
+    /// Mean distinct outer products evaluated per step at this layer.
+    pub k_effective: f64,
+    /// Cumulative backward weight-gradient FLOPs spent at this layer.
+    pub backward_flops: u64,
+}
+
+/// One epoch's record for a training run.
+#[derive(Debug, Clone, PartialEq)]
 pub struct EpochMetrics {
     pub epoch: usize,
     pub train_loss: f32,
@@ -29,6 +39,9 @@ pub struct EpochMetrics {
     pub rows_per_sec: f64,
     /// Wall-clock seconds spent on this epoch (training + validation).
     pub wall_s: f64,
+    /// Per-layer k_effective/FLOPs (one entry per graph layer; empty for
+    /// curves recorded before the layer-graph core or built by hand).
+    pub layers: Vec<LayerEpochMetrics>,
 }
 
 /// A full training curve plus identification.
@@ -144,6 +157,23 @@ impl RunCurve {
                                 ("backward_flops", json::num(m.backward_flops as f64)),
                                 ("rows_per_sec", json::num(m.rows_per_sec)),
                                 ("wall_s", json::num(m.wall_s)),
+                                (
+                                    "layers",
+                                    Json::Arr(
+                                        m.layers
+                                            .iter()
+                                            .map(|l| {
+                                                json::obj(vec![
+                                                    ("k_effective", json::num(l.k_effective)),
+                                                    (
+                                                        "backward_flops",
+                                                        json::num(l.backward_flops as f64),
+                                                    ),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
                             ])
                         })
                         .collect(),
@@ -191,6 +221,26 @@ impl RunCurve {
                     .and_then(|n| n.as_f64())
                     .unwrap_or(0.0),
                 wall_s: num("wall_s")?,
+                // optional (protocol v3): absent from pre-layer-graph runs
+                layers: e
+                    .get("layers")
+                    .and_then(|a| a.as_arr())
+                    .map(|arr| {
+                        arr.iter()
+                            .map(|l| LayerEpochMetrics {
+                                k_effective: l
+                                    .get("k_effective")
+                                    .and_then(|n| n.as_f64())
+                                    .unwrap_or(0.0),
+                                backward_flops: l
+                                    .get("backward_flops")
+                                    .and_then(|n| n.as_f64())
+                                    .unwrap_or(0.0)
+                                    as u64,
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default(),
             });
         }
         Ok(RunCurve {
@@ -277,6 +327,16 @@ mod tests {
             backward_flops: (epoch as u64) * 100,
             rows_per_sec: 1000.0,
             wall_s: 0.01,
+            layers: vec![
+                LayerEpochMetrics {
+                    k_effective: 4.5,
+                    backward_flops: (epoch as u64) * 60,
+                },
+                LayerEpochMetrics {
+                    k_effective: 2.0,
+                    backward_flops: (epoch as u64) * 40,
+                },
+            ],
         }
     }
 
@@ -292,6 +352,33 @@ mod tests {
         assert_eq!(c.total_backward_flops(), 300);
         assert!((c.mean_rows_per_sec() - 1000.0).abs() < 1e-9);
         assert!((c.backward_flops_per_sec() - 300.0 / 0.03).abs() < 1e-6);
+    }
+
+    #[test]
+    fn per_layer_metrics_roundtrip_and_are_optional() {
+        let mut c = RunCurve::new("layered");
+        c.push(m(1, 1.0));
+        let r = RunCurve::from_json(&c.to_json()).unwrap();
+        assert_eq!(r.epochs[0].layers.len(), 2);
+        assert_eq!(r.epochs[0].layers[0].k_effective, 4.5);
+        assert_eq!(r.epochs[0].layers[1].backward_flops, 40);
+        // pre-layer-graph records (no `layers` key) decode to empty
+        let mut j = c.to_json();
+        if let Json::Obj(pairs) = &mut j {
+            for (k, v) in pairs.iter_mut() {
+                if k == "epochs" {
+                    if let Json::Arr(arr) = v {
+                        for e in arr.iter_mut() {
+                            if let Json::Obj(ep) = e {
+                                ep.retain(|(k, _)| k != "layers");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let old = RunCurve::from_json(&j).unwrap();
+        assert!(old.epochs[0].layers.is_empty());
     }
 
     #[test]

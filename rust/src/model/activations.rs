@@ -1,6 +1,103 @@
 //! Activations (numerically-stable, matching `jax.nn` semantics).
+//!
+//! [`Activation`] is the pluggable per-layer nonlinearity of the
+//! layer-graph training core (`crate::train`): forward is applied
+//! elementwise on shard-local row blocks, and the backward chain's
+//! derivative is computed *from the activation output* `h` — which for
+//! every supported activation is cheaper than (and for relu bitwise
+//! identical to) evaluating the derivative from the pre-activation `z`,
+//! so the forward trace never has to retain `z` at all.
 
 use crate::tensor::Matrix;
+
+/// Pluggable elementwise layer activation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    /// `h = z` — the linear head (and the paper's single-layer model).
+    Identity,
+    /// `h = max(z, 0)` — the MLP default.
+    Relu,
+    /// `h = tanh(z)`.
+    Tanh,
+    /// `h = 1 / (1 + e^{-z})`.
+    Sigmoid,
+}
+
+impl Activation {
+    /// Parse config / CLI names (case-insensitive, trimmed).
+    pub fn parse(s: &str) -> Option<Activation> {
+        Some(match s.trim().to_ascii_lowercase().as_str() {
+            "identity" | "linear" | "none" => Activation::Identity,
+            "relu" => Activation::Relu,
+            "tanh" => Activation::Tanh,
+            "sigmoid" => Activation::Sigmoid,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Activation::Identity => "identity",
+            Activation::Relu => "relu",
+            Activation::Tanh => "tanh",
+            Activation::Sigmoid => "sigmoid",
+        }
+    }
+
+    /// Every activation, in help/metrics order.
+    pub fn all() -> [Activation; 4] {
+        [
+            Activation::Identity,
+            Activation::Relu,
+            Activation::Tanh,
+            Activation::Sigmoid,
+        ]
+    }
+
+    /// Scalar forward `h = f(z)`.
+    pub fn f(&self, z: f32) -> f32 {
+        match self {
+            Activation::Identity => z,
+            Activation::Relu => z.max(0.0),
+            Activation::Tanh => z.tanh(),
+            Activation::Sigmoid => 1.0 / (1.0 + (-z).exp()),
+        }
+    }
+
+    /// Derivative `f'(z)` expressed through the *output* `h = f(z)`:
+    ///
+    /// * identity: 1;
+    /// * relu: `h > 0` — bitwise the same 0/1 mask as `z > 0` since
+    ///   `h = max(z, 0)` is positive exactly when `z` is;
+    /// * tanh: `1 − h²`;
+    /// * sigmoid: `h (1 − h)`.
+    pub fn grad_from_output(&self, h: f32) -> f32 {
+        match self {
+            Activation::Identity => 1.0,
+            Activation::Relu => (h > 0.0) as u32 as f32,
+            Activation::Tanh => 1.0 - h * h,
+            Activation::Sigmoid => h * (1.0 - h),
+        }
+    }
+
+    /// Apply in place to a shard-local row block (no-op for identity, so
+    /// linear layers pay nothing).
+    pub fn apply_block(&self, block: &mut [f32]) {
+        if *self == Activation::Identity {
+            return;
+        }
+        for v in block.iter_mut() {
+            *v = self.f(*v);
+        }
+    }
+
+    /// Apply to an owned matrix. Identity moves the matrix through
+    /// untouched — the final pre-activation is never cloned.
+    pub fn apply_owned(&self, mut z: Matrix) -> Matrix {
+        self.apply_block(z.data_mut());
+        z
+    }
+}
 
 /// Elementwise relu.
 pub fn relu(m: &Matrix) -> Matrix {
@@ -48,6 +145,52 @@ pub fn log_softmax_rows(m: &Matrix) -> Matrix {
 mod tests {
     use super::*;
     use crate::tensor::rng::Rng;
+
+    #[test]
+    fn activation_parse_roundtrip() {
+        for a in Activation::all() {
+            assert_eq!(Activation::parse(a.name()), Some(a));
+        }
+        assert_eq!(Activation::parse(" ReLU "), Some(Activation::Relu));
+        assert_eq!(Activation::parse("linear"), Some(Activation::Identity));
+        assert_eq!(Activation::parse("gelu"), None);
+    }
+
+    #[test]
+    fn grad_from_output_matches_numeric_derivative() {
+        for a in Activation::all() {
+            for &z in &[-2.0f32, -0.5, 0.3, 1.7] {
+                let h = a.f(z);
+                let eps = 1e-3f32;
+                let num = (a.f(z + eps) - a.f(z - eps)) / (2.0 * eps);
+                let ana = a.grad_from_output(h);
+                assert!((num - ana).abs() < 1e-2, "{a:?} at z={z}: {num} vs {ana}");
+            }
+        }
+    }
+
+    #[test]
+    fn relu_grad_from_output_equals_z_mask() {
+        // the bitwise claim the backward chain relies on
+        for &z in &[-3.0f32, -0.0, 0.0, 1e-20, 4.0] {
+            let h = Activation::Relu.f(z);
+            assert_eq!(
+                Activation::Relu.grad_from_output(h).to_bits(),
+                ((z > 0.0) as u32 as f32).to_bits(),
+                "z={z}"
+            );
+        }
+    }
+
+    #[test]
+    fn apply_owned_identity_is_noop() {
+        let m = Matrix::from_vec(1, 3, vec![-1.0, 0.0, 2.0]);
+        let data_before = m.data().to_vec();
+        let out = Activation::Identity.apply_owned(m);
+        assert_eq!(out.data(), &data_before[..]);
+        let t = Activation::Tanh.apply_owned(out);
+        assert!((t[(0, 2)] - 2.0f32.tanh()).abs() < 1e-6);
+    }
 
     #[test]
     fn relu_clamps() {

@@ -1,5 +1,5 @@
-//! Native model substrate: layers, activations, losses, and the MLP
-//! definition shared by the native trainer and the e2e example.
+//! Native model substrate: activations, losses, and the MLP alias
+//! surface over the layer-graph core (`crate::train`).
 //!
 //! Matches the Layer-2 JAX graphs operation-for-operation so the native
 //! and HLO training paths are interchangeable oracles of each other.
@@ -8,5 +8,6 @@ pub mod activations;
 pub mod loss;
 pub mod mlp;
 
+pub use activations::Activation;
 pub use loss::LossKind;
 pub use mlp::{DenseLayer, Mlp};

@@ -30,6 +30,14 @@
 //! guarantee: `threads` never changes a job's curve or final weights,
 //! only its wall-clock (see the `exec` subsystem docs).
 //!
+//! Protocol v3 adds the layer-graph surface: `config` may carry a
+//! `layers` array (per-layer `width`/`activation` plus optional
+//! `{k, policy, memory}` overrides, native backend only), job views
+//! report the resolved per-layer config under `layers`, and every curve
+//! epoch carries a `layers` array with that layer's mean `k_effective`
+//! and cumulative `backward_flops`. v1/v2 frames (no `layers`) remain
+//! accepted and mean the flat single-layer model.
+//!
 //! [`Client`] is a small blocking client used by `examples/serve_client.rs`
 //! and the integration tests.
 
@@ -45,8 +53,11 @@ use crate::util::json::{self, Json};
 
 /// Version stamp reported by `ping` (bump on wire-format changes).
 /// v2: `config.threads` field + scheduler slot accounting (`metrics`
-/// reports `slots_total`/`slots_free`); v1 frames remain accepted.
-pub const PROTOCOL_VERSION: u64 = 2;
+/// reports `slots_total`/`slots_free`). v3: layer-graph configs
+/// (`config.layers`), resolved per-layer config in job views, and
+/// per-layer `k_effective`/FLOPs in curve epochs. Older frames remain
+/// accepted.
+pub const PROTOCOL_VERSION: u64 = 3;
 
 /// A parsed client request.
 #[derive(Debug, Clone)]

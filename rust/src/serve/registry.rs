@@ -76,6 +76,23 @@ pub struct JobView {
 
 impl JobView {
     pub fn to_json(&self) -> Json {
+        // resolved per-layer view (protocol v3): what each layer will
+        // actually run with after spec defaults are applied — one entry
+        // for flat configs
+        let layers: Vec<Json> = self
+            .config
+            .layer_plan()
+            .iter()
+            .map(|rl| {
+                json::obj(vec![
+                    ("width", json::num(rl.fan_out as f64)),
+                    ("activation", json::s(rl.activation.name())),
+                    ("k", json::num(rl.cfg.k as f64)),
+                    ("policy", json::s(rl.cfg.policy.name())),
+                    ("memory", Json::Bool(rl.cfg.memory)),
+                ])
+            })
+            .collect();
         json::obj(vec![
             ("id", json::num(self.id as f64)),
             ("tag", json::s(&self.tag)),
@@ -86,6 +103,7 @@ impl JobView {
             ("k", json::num(self.config.k as f64)),
             ("seed", json::num(self.config.seed as f64)),
             ("threads", json::num(self.config.threads as f64)),
+            ("layers", Json::Arr(layers)),
             ("state", json::s(self.state.name())),
             ("epochs_done", json::num(self.epochs_done as f64)),
             ("epochs_total", json::num(self.epochs_total as f64)),
@@ -339,34 +357,70 @@ impl Registry {
         c
     }
 
-    /// Per-policy FLOP accounting over completed jobs. The exact-BP
-    /// equivalent comes from `aop::flops::exact_step` scaled by the
-    /// curve's recorded step count (0 steps ⇒ no claimed savings).
+    /// Per-policy FLOP accounting over completed jobs, attributed at
+    /// layer granularity: each resolved layer's actual backward FLOPs
+    /// (from the curve's per-layer metrics) and exact-BP equivalent
+    /// (`aop::flops::exact_step` × recorded steps) land in the bucket of
+    /// *that layer's* policy, so a mixed-policy layer graph is counted
+    /// where the work actually happened. A job contributes to `jobs`
+    /// once per policy it touches. Curves without per-layer metrics
+    /// (pre-layer-graph persisted runs) fall back to whole-job
+    /// attribution under the flat policy; 0 recorded steps ⇒ no claimed
+    /// savings.
     pub fn rollup(&self) -> Vec<PolicyRollup> {
         let jobs = self.jobs.lock().unwrap();
         let mut acc: BTreeMap<&'static str, PolicyRollup> = BTreeMap::new();
-        for j in jobs.values() {
-            let (JobState::Done, Some(curve)) = (j.state, j.curve.as_ref()) else {
-                continue;
-            };
-            let actual = curve.total_backward_flops();
-            let steps = curve.total_steps();
-            let (n, p) = j.config.task.dims();
-            let m = j.config.m();
-            let exact = if steps == 0 {
-                actual
-            } else {
-                flops::exact_step(m, n, p).backward_only() * steps
-            };
-            let e = acc.entry(j.config.policy.name()).or_insert(PolicyRollup {
-                policy: j.config.policy,
+        let mut add = |policy: Policy, jobs_inc: u64, actual: u64, exact: u64| {
+            let e = acc.entry(policy.name()).or_insert(PolicyRollup {
+                policy,
                 jobs: 0,
                 backward_flops: 0,
                 exact_flops: 0,
             });
-            e.jobs += 1;
+            e.jobs += jobs_inc;
             e.backward_flops += actual;
             e.exact_flops += exact;
+        };
+        for j in jobs.values() {
+            let (JobState::Done, Some(curve)) = (j.state, j.curve.as_ref()) else {
+                continue;
+            };
+            let steps = curve.total_steps();
+            let m = j.config.m();
+            let plan = j.config.layer_plan();
+            let per_layer: Vec<u64> = curve
+                .epochs
+                .last()
+                .map(|e| e.layers.iter().map(|l| l.backward_flops).collect())
+                .unwrap_or_default();
+            if per_layer.len() == plan.len() {
+                let mut seen: Vec<&'static str> = Vec::new();
+                for (rl, &actual) in plan.iter().zip(per_layer.iter()) {
+                    let exact = if steps == 0 {
+                        actual
+                    } else {
+                        flops::exact_step(m, rl.fan_in, rl.fan_out).backward_only() * steps
+                    };
+                    let first = !seen.contains(&rl.cfg.policy.name());
+                    if first {
+                        seen.push(rl.cfg.policy.name());
+                    }
+                    add(rl.cfg.policy, first as u64, actual, exact);
+                }
+            } else {
+                // legacy curve: no per-layer metrics recorded
+                let actual = curve.total_backward_flops();
+                let exact_per_step: u64 = plan
+                    .iter()
+                    .map(|rl| flops::exact_step(m, rl.fan_in, rl.fan_out).backward_only())
+                    .sum();
+                let exact = if steps == 0 {
+                    actual
+                } else {
+                    exact_per_step * steps
+                };
+                add(j.config.policy, 1, actual, exact);
+            }
         }
         acc.into_values().collect()
     }
@@ -405,8 +459,11 @@ fn persist_job(path: &Path, id: u64, tag: &str, r: &RunResult) -> Result<()> {
     cp.put_str("tag", tag);
     cp.put_str("config_json", &r.config.to_json().dump());
     cp.put_str("curve_json", &r.curve.to_json().dump());
-    cp.put_matrix("final_w", &r.final_w);
-    cp.put_vector("final_b", &r.final_b);
+    cp.put_scalar("n_layers", r.final_layers.len() as f32);
+    for (i, (w, b)) in r.final_layers.iter().enumerate() {
+        cp.put_matrix(&format!("final_w{i}"), w);
+        cp.put_vector(&format!("final_b{i}"), b);
+    }
     // write-then-rename so a crash mid-write can never leave a truncated
     // run file at the final path (restart skips `.tmp` leftovers: they
     // don't match the `job_<id>.maop` pattern)
@@ -527,5 +584,44 @@ mod tests {
         assert_eq!(roll[0].jobs, 1);
         assert!(roll[0].exact_flops > roll[0].backward_flops);
         assert!((roll[0].saved_frac() - 0.875).abs() < 1e-9, "{}", roll[0].saved_frac());
+    }
+
+    #[test]
+    fn rollup_attributes_mixed_policy_layers_per_layer() {
+        use crate::coordinator::config::LayerSpec;
+        // layer 0: randk override; head: the flat topk — the FLOPs must
+        // land in each layer's own policy bucket, not all under topk
+        let mut cfg = quick_cfg(5);
+        cfg.layers = Some(vec![
+            LayerSpec {
+                width: 8,
+                activation: None,
+                k: Some(36),
+                policy: Some(Policy::RandK),
+                memory: None,
+            },
+            LayerSpec::plain(1),
+        ]);
+        cfg.validate().unwrap();
+        let reg = Registry::new(None).unwrap();
+        let id = reg.submit(cfg.clone(), "");
+        let (cfg, _) = reg.mark_running(id).unwrap();
+        let r = experiment::run(&cfg).unwrap();
+        reg.finish_ok(id, &r);
+        let roll = reg.rollup();
+        assert_eq!(roll.len(), 2, "one bucket per layer policy");
+        let by_name = |p: Policy| roll.iter().find(|r| r.policy == p).unwrap();
+        let randk = by_name(Policy::RandK);
+        let topk = by_name(Policy::TopK);
+        assert_eq!(randk.jobs, 1);
+        assert_eq!(topk.jobs, 1);
+        // layer 0 (16→8, K=36/144): 1/4 of exact; head (8→1, K=18): 1/8
+        assert!((randk.saved_frac() - 0.75).abs() < 1e-9, "{}", randk.saved_frac());
+        assert!((topk.saved_frac() - 0.875).abs() < 1e-9, "{}", topk.saved_frac());
+        // the two buckets together cover the whole job's backward FLOPs
+        assert_eq!(
+            randk.backward_flops + topk.backward_flops,
+            r.curve.total_backward_flops()
+        );
     }
 }

@@ -1,0 +1,267 @@
+//! The layer graph: an ordered chain of [`Dense`] layers with one loss
+//! head, plus the per-layer training state ([`GraphState`]) that pairs
+//! each layer with its [`AopLayerConfig`] and error-feedback memory.
+//!
+//! This is the one model type every training surface shares: the paper's
+//! single dense layer is a 1-layer identity-activation graph
+//! (`AopEngine`), the MLP is a relu-hidden graph (`model::mlp`), and the
+//! coordinator builds graphs straight from `ExperimentConfig`.
+
+use crate::aop::{MemoryState, Policy};
+use crate::exec::{reduce, shard, Executor};
+use crate::model::activations::Activation;
+use crate::model::loss::{self, LossKind};
+use crate::tensor::{rng::Rng, Matrix};
+
+use crate::train::layer::{AopLayerConfig, Dense};
+
+/// A feed-forward chain of dense layers trained with Mem-AOP-GD.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub layers: Vec<Dense>,
+    pub loss: LossKind,
+}
+
+impl Graph {
+    /// Build from explicit layers; dims must chain.
+    pub fn new(layers: Vec<Dense>, loss: LossKind) -> Graph {
+        assert!(!layers.is_empty(), "a graph needs at least one layer");
+        for win in layers.windows(2) {
+            assert_eq!(
+                win[0].fan_out(),
+                win[1].fan_in(),
+                "layer dims must chain: {} -> {}",
+                win[0].fan_out(),
+                win[1].fan_in()
+            );
+        }
+        Graph { layers, loss }
+    }
+
+    /// The paper's single dense layer: one identity-activation `Dense`
+    /// wrapping `w` with zero bias.
+    pub fn single(w: Matrix, loss: LossKind) -> Graph {
+        Graph::new(vec![Dense::from_weights(w, Activation::Identity)], loss)
+    }
+
+    /// Classic MLP over `widths` (e.g. `[784, 1024, 1024, 10]`): glorot
+    /// init, relu hidden layers, identity head.
+    pub fn relu_mlp(rng: &mut Rng, widths: &[usize], loss: LossKind) -> Graph {
+        assert!(widths.len() >= 2, "need at least input and output widths");
+        let n = widths.len() - 1;
+        let layers = widths
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| {
+                let act = if i + 1 < n {
+                    Activation::Relu
+                } else {
+                    Activation::Identity
+                };
+                Dense::glorot(rng, w[0], w[1], act)
+            })
+            .collect();
+        Graph::new(layers, loss)
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.num_params()).sum()
+    }
+
+    /// `[n_in, hidden..., n_out]`.
+    pub fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.layers.iter().map(|l| l.fan_in()).collect();
+        w.push(self.layers.last().unwrap().fan_out());
+        w
+    }
+
+    /// Plain forward (serial whole-batch; borrows the input).
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        let mut h: Option<Matrix> = None;
+        for layer in &self.layers {
+            let prev = h.as_ref().unwrap_or(x);
+            h = Some(layer.forward(prev));
+        }
+        h.expect("graph has at least one layer")
+    }
+
+    /// Validation loss + accuracy (serial case of [`Graph::evaluate_exec`]).
+    pub fn evaluate(&self, x: &Matrix, y: &Matrix) -> (f32, f32) {
+        self.evaluate_exec(x, y, &Executor::serial())
+    }
+
+    /// Validation, data-parallel: row-sharded forward through every
+    /// layer, then per-shard partial losses and (integer, hence exactly
+    /// order-free) argmax-agreement counts reduced in fixed shard order.
+    pub fn evaluate_exec(&self, x: &Matrix, y: &Matrix, exec: &Executor) -> (f32, f32) {
+        let m = x.rows();
+        let plan = exec.plan(m);
+        // rolling buffer: evaluation needs only the previous layer's
+        // output (unlike the training trace, which keeps every layer's
+        // activation for the backward sweep)
+        let mut prev: Option<Matrix> = None;
+        for layer in &self.layers {
+            let mut h = Matrix::zeros(m, layer.fan_out());
+            {
+                let pin: &Matrix = prev.as_ref().unwrap_or(x);
+                let hb = shard::RowBlocks::of(&mut h, &plan);
+                exec.run_each(&plan, |i, rows| {
+                    let mut blk = hb.lock(i);
+                    shard::forward_rows(pin, &layer.w, &layer.b, rows, &mut blk);
+                    layer.activation.apply_block(&mut blk);
+                });
+            }
+            prev = Some(h);
+        }
+        let out = &prev.expect("graph has at least one layer");
+        let p = out.cols();
+        let parts: Vec<(f32, usize)> = exec.map(&plan, |_, rows| {
+            let ob = shard::rows_of(out, rows.clone());
+            (
+                self.loss.partial_loss(ob, y, rows.clone()),
+                loss::correct_rows(ob, y, rows),
+            )
+        });
+        let loss_total = reduce::sum_f32(parts.iter().map(|(l, _)| *l));
+        let correct = reduce::sum_usize(parts.iter().map(|(_, c)| *c));
+        (
+            self.loss.finish_loss(loss_total, m, p),
+            correct as f32 / m as f32,
+        )
+    }
+}
+
+/// Per-layer training state: the resolved config plus the layer's
+/// error-feedback memory. Memory-off layers hold a storage-free
+/// [`MemoryState::disabled`] — nothing is allocated that the step would
+/// never read.
+#[derive(Debug, Clone)]
+pub struct LayerState {
+    pub cfg: AopLayerConfig,
+    pub mem: MemoryState,
+}
+
+/// The whole graph's Mem-AOP-GD state, one [`LayerState`] per layer.
+#[derive(Debug, Clone)]
+pub struct GraphState {
+    pub layers: Vec<LayerState>,
+}
+
+impl GraphState {
+    /// Build from resolved per-layer configs (one per graph layer).
+    pub fn from_configs(graph: &Graph, batch: usize, cfgs: &[AopLayerConfig]) -> GraphState {
+        assert_eq!(
+            cfgs.len(),
+            graph.layers.len(),
+            "one AopLayerConfig per layer"
+        );
+        let layers = graph
+            .layers
+            .iter()
+            .zip(cfgs.iter())
+            .map(|(l, c)| LayerState {
+                cfg: *c,
+                mem: if c.memory {
+                    MemoryState::new(batch, l.fan_in(), l.fan_out(), true)
+                } else {
+                    MemoryState::disabled()
+                },
+            })
+            .collect();
+        GraphState { layers }
+    }
+
+    /// Flat (homogeneous) config: the same `{k, policy, memory}` at every
+    /// layer — the pre-layer-graph behavior.
+    pub fn uniform(
+        graph: &Graph,
+        batch: usize,
+        policy: Policy,
+        k: usize,
+        memory: bool,
+    ) -> GraphState {
+        let cfg = AopLayerConfig { k, policy, memory };
+        let cfgs = vec![cfg; graph.layers.len()];
+        GraphState::from_configs(graph, batch, &cfgs)
+    }
+
+    /// Exact-BP state: every row selected, memories off — nothing
+    /// allocated. Backs the plain SGD step.
+    pub fn exact(graph: &Graph, batch: usize) -> GraphState {
+        GraphState::uniform(graph, batch, Policy::Exact, batch, false)
+    }
+
+    /// Frobenius mass deferred across all layer memories (the curves'
+    /// `mem_fro`; for one layer this is exactly the single memory's
+    /// `deferred_mass`).
+    pub fn deferred_mass(&self) -> f32 {
+        self.layers
+            .iter()
+            .map(|l| l.mem.deferred_sq())
+            .sum::<f32>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_mlp_builds_and_forwards() {
+        let mut rng = Rng::new(0);
+        let g = Graph::relu_mlp(&mut rng, &[8, 16, 4], LossKind::SoftmaxCrossEntropy);
+        assert_eq!(g.layers.len(), 2);
+        assert_eq!(g.layers[0].activation, Activation::Relu);
+        assert_eq!(g.layers[1].activation, Activation::Identity);
+        assert_eq!(g.widths(), vec![8, 16, 4]);
+        assert_eq!(g.num_params(), 8 * 16 + 16 + 16 * 4 + 4);
+        let x = Matrix::from_fn(5, 8, |_, _| rng.normal());
+        assert_eq!(g.forward(&x).shape(), (5, 4));
+    }
+
+    #[test]
+    fn evaluate_exec_matches_serial_bitwise() {
+        let mut rng = Rng::new(1);
+        let g = Graph::relu_mlp(&mut rng, &[6, 11, 3], LossKind::SoftmaxCrossEntropy);
+        let x = Matrix::from_fn(33, 6, |_, _| rng.normal());
+        let y = Matrix::from_fn(33, 3, |r, c| ((r % 3) == c) as u32 as f32);
+        let (l1, a1) = g.evaluate(&x, &y);
+        let ex = Executor::new(4);
+        let (l4, a4) = g.evaluate_exec(&x, &y, &ex);
+        assert_eq!(l1.to_bits(), l4.to_bits());
+        assert_eq!(a1, a4);
+    }
+
+    #[test]
+    fn state_constructors_respect_memory_flags() {
+        let mut rng = Rng::new(2);
+        let g = Graph::relu_mlp(&mut rng, &[4, 6, 2], LossKind::Mse);
+        let on = GraphState::uniform(&g, 8, Policy::TopK, 3, true);
+        assert!(on.layers.iter().all(|l| l.mem.enabled));
+        assert_eq!(on.layers[0].mem.mem_x.shape(), (8, 4));
+        assert_eq!(on.layers[1].mem.mem_g.shape(), (8, 2));
+        let off = GraphState::exact(&g, 8);
+        assert!(off.layers.iter().all(|l| !l.mem.enabled));
+        // the satellite guarantee: no storage behind disabled memories
+        assert!(off.layers.iter().all(|l| l.mem.mem_x.shape() == (0, 0)));
+        assert_eq!(off.deferred_mass(), 0.0);
+        assert_eq!(off.layers[0].cfg.k, 8);
+        assert_eq!(off.layers[0].cfg.policy, Policy::Exact);
+    }
+
+    #[test]
+    fn heterogeneous_configs_resolve_per_layer() {
+        let mut rng = Rng::new(3);
+        let g = Graph::relu_mlp(&mut rng, &[4, 6, 2], LossKind::Mse);
+        let cfgs = [
+            AopLayerConfig { k: 2, policy: Policy::TopK, memory: true },
+            AopLayerConfig { k: 5, policy: Policy::RandK, memory: false },
+        ];
+        let st = GraphState::from_configs(&g, 8, &cfgs);
+        assert_eq!(st.layers[0].cfg.k, 2);
+        assert_eq!(st.layers[1].cfg.policy, Policy::RandK);
+        assert!(st.layers[0].mem.enabled);
+        assert!(!st.layers[1].mem.enabled);
+    }
+}

@@ -1,0 +1,103 @@
+//! The layer abstraction of the training core: a dense affine map with a
+//! pluggable elementwise [`Activation`], plus the per-layer Mem-AOP-GD
+//! knobs ([`AopLayerConfig`]) the paper's Algorithm 1 parameterizes each
+//! layer with.
+
+use crate::aop::Policy;
+use crate::model::activations::Activation;
+use crate::tensor::{init, rng::Rng, Matrix};
+
+/// One dense layer `h = act(x W + b)`.
+#[derive(Debug, Clone)]
+pub struct Dense {
+    pub w: Matrix,
+    pub b: Vec<f32>,
+    pub activation: Activation,
+}
+
+impl Dense {
+    /// Glorot-uniform weights, zero bias (Keras default).
+    pub fn glorot(rng: &mut Rng, fan_in: usize, fan_out: usize, activation: Activation) -> Self {
+        Dense {
+            w: init::glorot_uniform(rng, fan_in, fan_out),
+            b: init::zeros_bias(fan_out),
+            activation,
+        }
+    }
+
+    /// Wrap existing weights (zero bias) — the single-layer engine path.
+    pub fn from_weights(w: Matrix, activation: Activation) -> Self {
+        let p = w.cols();
+        Dense {
+            w,
+            b: vec![0.0; p],
+            activation,
+        }
+    }
+
+    /// Pre-activation output `z = x W + b` (serial whole-batch path; the
+    /// training step uses the row-sharded `exec::shard::forward_rows`).
+    pub fn forward_z(&self, x: &Matrix) -> Matrix {
+        x.matmul(&self.w).add_row_broadcast(&self.b)
+    }
+
+    /// Activated output `act(x W + b)`.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        self.activation.apply_owned(self.forward_z(x))
+    }
+
+    pub fn fan_in(&self) -> usize {
+        self.w.rows()
+    }
+
+    pub fn fan_out(&self) -> usize {
+        self.w.cols()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.w.rows() * self.w.cols() + self.b.len()
+    }
+}
+
+/// Per-layer Mem-AOP-GD configuration: the approximation budget K, the
+/// `out_K` selection policy, and the error-feedback memory toggle —
+/// Algorithm 1's design knobs, resolvable layer-by-layer (heterogeneous
+/// budgets are where the interesting regimes live).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AopLayerConfig {
+    /// Outer products kept per update at this layer (K ≤ M).
+    pub k: usize,
+    /// The `out_K` operator for this layer.
+    pub policy: Policy,
+    /// Error-feedback memory on/off for this layer.
+    pub memory: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    #[test]
+    fn dense_shapes_and_params() {
+        let mut rng = Rng::new(0);
+        let d = Dense::glorot(&mut rng, 8, 3, Activation::Relu);
+        assert_eq!(d.fan_in(), 8);
+        assert_eq!(d.fan_out(), 3);
+        assert_eq!(d.num_params(), 8 * 3 + 3);
+        let x = Matrix::from_fn(5, 8, |_, _| rng.normal());
+        let h = d.forward(&x);
+        assert_eq!(h.shape(), (5, 3));
+        // relu output is non-negative
+        assert!(h.data().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn forward_matches_manual() {
+        let mut rng = Rng::new(1);
+        let d = Dense::from_weights(Matrix::from_fn(4, 2, |_, _| rng.normal()), Activation::Identity);
+        let x = Matrix::from_fn(3, 4, |_, _| rng.normal());
+        let manual = x.matmul(&d.w).add_row_broadcast(&d.b);
+        assert_eq!(d.forward(&x).data(), manual.data());
+    }
+}

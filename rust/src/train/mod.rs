@@ -1,0 +1,31 @@
+//! `train` — the single Mem-AOP-GD training core.
+//!
+//! Everything that *trains* in this crate goes through this module:
+//!
+//! * [`layer`] — [`Dense`] (`h = act(x W + b)`) with a pluggable
+//!   [`Activation`](crate::model::activations::Activation), plus the
+//!   per-layer [`AopLayerConfig`] `{k, policy, memory}` — Algorithm 1's
+//!   design knobs, resolvable layer-by-layer;
+//! * [`graph`] — [`Graph`] (an ordered layer chain + loss head) and
+//!   [`GraphState`] (per-layer config + error-feedback memory);
+//! * [`step`] — the one implementation of the Mem-AOP-GD step on the
+//!   `exec` row-shard primitives, phase-split (`fwd_score` / caller-owned
+//!   per-layer `out_K` / `apply`) exactly like the compiled HLO
+//!   artifacts.
+//!
+//! The adapters are deliberately thin: `aop::AopEngine` is a 1-layer
+//! identity-activation graph, `model::mlp::Mlp` *is* [`Graph`], and the
+//! coordinator's `NativeTrainer` (hence the serve job path) drives the
+//! phase-split functions directly. There is no second copy of the
+//! forward/fold/score/masked-outer math anywhere.
+
+pub mod graph;
+pub mod layer;
+pub mod step;
+
+pub use graph::{Graph, GraphState, LayerState};
+pub use layer::{AopLayerConfig, Dense};
+pub use step::{
+    aop_weight_grad, apply, fwd_score, select_layers, select_with_configs, train_step,
+    train_step_exact, GraphFwd, LayerFwd, StepOutcome,
+};

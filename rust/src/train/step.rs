@@ -1,0 +1,594 @@
+//! The one Mem-AOP-GD training step (Algorithm 1, applied per layer),
+//! implemented once on the `exec` row-shard primitives and adapted by
+//! every surface (`AopEngine`, the MLP API, `NativeTrainer`, the serve
+//! job path).
+//!
+//! The step is split in the same two phases the compiled HLO artifacts
+//! execute, generalized to a whole layer graph:
+//!
+//! 1. [`fwd_score`] — row-sharded forward trace, head loss + output
+//!    gradient, then a backward sweep computing, *per layer*: the memory
+//!    folding `X̂/Ĝ` (lines 3-4), the policy scores, the exact bias
+//!    gradient, and the chained gradient `G_i = G_{i+1} W_i^T ⊙ act'`
+//!    (eq. (2a)) — all against the pre-update weights, so nothing in
+//!    this phase depends on any selection;
+//! 2. (between the phases) the caller owns the per-layer `out_K`
+//!    decisions — [`select_layers`] draws them output-layer-first from
+//!    one RNG stream, matching the historical single-layer stream;
+//! 3. [`apply`] — per-layer AOP weight update (compaction or mask
+//!    regime), exact bias update, memory retention (lines 8-9).
+//!
+//! Determinism contract (inherited from `exec` and asserted by
+//! `rust/tests/exec.rs`): every float quantity is computed on the fixed
+//! shard grid and reduced in fixed shard order, and selections are made
+//! globally on the calling thread — so curves and weights are
+//! bit-identical at every thread count, for every activation × policy ×
+//! per-layer-K combination.
+
+use crate::aop::policy::{self, Policy, Selection};
+use crate::exec::{reduce, shard, Executor};
+use crate::model::activations::Activation;
+use crate::model::loss::correct_rows;
+use crate::tensor::{ops, rng::Rng, Matrix};
+
+use crate::train::graph::{Graph, GraphState};
+use crate::train::layer::AopLayerConfig;
+
+/// Phase-1 outputs for one layer.
+pub struct LayerFwd {
+    /// Folded `X̂ = m^X + √η X` (alg. lines 3-4).
+    pub xhat: Matrix,
+    /// Folded `Ĝ = m^G + √η G`.
+    pub ghat: Matrix,
+    /// Policy scores `‖X̂_(m)‖ ‖Ĝ_(m)‖`, length M.
+    pub scores: Vec<f32>,
+    /// Raw bias gradient (column sums of `G`, unscaled by η).
+    pub db: Vec<f32>,
+}
+
+/// Phase-1 outputs for the whole graph (index = layer index).
+pub struct GraphFwd {
+    pub loss: f32,
+    /// Train-batch argmax accuracy (1.0 for single-output regression).
+    pub acc: f32,
+    pub layers: Vec<LayerFwd>,
+}
+
+/// One full step's diagnostics.
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    pub loss: f32,
+    pub acc: f32,
+    /// `‖Ŵ*‖_F` of the applied update across all layers
+    /// (`sqrt(Σ_i ‖Ŵ*_i‖_F²)`).
+    pub wstar_fro: f32,
+    /// Total distinct outer products evaluated across layers.
+    pub k_effective: usize,
+    /// Distinct outer products evaluated per layer.
+    pub layer_k: Vec<usize>,
+}
+
+/// Phase 1: forward trace + per-layer folding/scores/bias sums + the
+/// backward gradient chain, all row-sharded on the executor's fixed
+/// grid. Selections do not exist yet — everything here is computed from
+/// the pre-update weights, which is what lets the caller own the policy
+/// decision (and the HLO path mirror it artifact-for-artifact).
+pub fn fwd_score(
+    graph: &Graph,
+    state: &GraphState,
+    x: &Matrix,
+    y: &Matrix,
+    eta: f32,
+    exec: &Executor,
+) -> GraphFwd {
+    let n = graph.layers.len();
+    assert_eq!(state.layers.len(), n, "state layers vs graph layers");
+    let m = x.rows();
+    assert_eq!(
+        x.cols(),
+        graph.layers[0].fan_in(),
+        "input dim vs first layer"
+    );
+    let plan = exec.plan(m);
+    let se = eta.sqrt();
+
+    // Forward trace: acts[i] = act_i(acts[i-1] W_i + b_i). The input
+    // batch stays borrowed (never cloned), and pre-activations are not
+    // retained — every activation's derivative is computed from its
+    // output (`Activation::grad_from_output`), for relu bitwise the same
+    // mask as the `z > 0` form.
+    let mut acts: Vec<Matrix> = Vec::with_capacity(n);
+    for (li, layer) in graph.layers.iter().enumerate() {
+        let mut h = Matrix::zeros(m, layer.fan_out());
+        {
+            let prev: &Matrix = if li == 0 { x } else { &acts[li - 1] };
+            let hb = shard::RowBlocks::of(&mut h, &plan);
+            exec.run_each(&plan, |i, rows| {
+                let mut blk = hb.lock(i);
+                shard::forward_rows(prev, &layer.w, &layer.b, rows, &mut blk);
+                layer.activation.apply_block(&mut blk);
+            });
+        }
+        acts.push(h);
+    }
+
+    // Head loss + output gradient (+ integer accuracy counts),
+    // row-sharded. With a non-identity head activation the loss sees
+    // `h = act(z)`, so the head's G picks up the chain factor
+    // `act'(h)` — identity heads (the flat engine, the MLP default)
+    // skip the multiply entirely and keep their historical bits.
+    let out = &acts[n - 1];
+    let p_out = out.cols();
+    assert_eq!(y.shape(), (m, p_out), "target shape");
+    let act_out = graph.layers[n - 1].activation;
+    let mut g = Matrix::zeros(m, p_out);
+    let head_parts: Vec<(f32, usize)> = {
+        let gb = shard::RowBlocks::of(&mut g, &plan);
+        exec.map(&plan, |i, rows| {
+            let ob = shard::rows_of(out, rows.clone());
+            let lp = graph.loss.partial_loss(ob, y, rows.clone());
+            let mut blk = gb.lock(i);
+            graph.loss.grad_rows(ob, y, rows.clone(), m, &mut blk);
+            if act_out != Activation::Identity {
+                for (v, &h) in blk.iter_mut().zip(ob.iter()) {
+                    *v *= act_out.grad_from_output(h);
+                }
+            }
+            (lp, correct_rows(ob, y, rows))
+        })
+    };
+    let loss = graph
+        .loss
+        .finish_loss(reduce::sum_f32(head_parts.iter().map(|(l, _)| *l)), m, p_out);
+    let correct = reduce::sum_usize(head_parts.iter().map(|(_, c)| *c));
+    let acc = correct as f32 / m as f32;
+
+    // Backward sweep: per-layer fold/scores/db, then chain G down with
+    // the pre-update weights (eq. (2a)).
+    let mut infos: Vec<Option<LayerFwd>> = (0..n).map(|_| None).collect();
+    for i in (0..n).rev() {
+        let layer = &graph.layers[i];
+        let xin: &Matrix = if i == 0 { x } else { &acts[i - 1] };
+        let mem = &state.layers[i].mem;
+        // Exact selection never reads scores (`select_exact` takes every
+        // row) — skip the per-row norm products for those layers
+        let need_scores = state.layers[i].cfg.policy != Policy::Exact;
+        let (nf, pf) = (layer.fan_in(), layer.fan_out());
+        let mut xhat = Matrix::zeros(m, nf);
+        let mut ghat = Matrix::zeros(m, pf);
+        let mut scores = vec![0.0f32; m];
+        let db_parts: Vec<Vec<f32>> = {
+            let xh_blocks = shard::RowBlocks::of(&mut xhat, &plan);
+            let gh_blocks = shard::RowBlocks::of(&mut ghat, &plan);
+            let sc_blocks = shard::RowBlocks::of_slice(&mut scores, 1, &plan);
+            exec.map(&plan, |si, rows| {
+                let mut xh = xh_blocks.lock(si);
+                let mut gh = gh_blocks.lock(si);
+                if mem.enabled {
+                    shard::fold_rows(xin, &mem.mem_x, se, rows.clone(), &mut xh);
+                    shard::fold_rows(&g, &mem.mem_g, se, rows.clone(), &mut gh);
+                } else {
+                    shard::scale_rows(xin, se, rows.clone(), &mut xh);
+                    shard::scale_rows(&g, se, rows.clone(), &mut gh);
+                }
+                if need_scores {
+                    let mut sc = sc_blocks.lock(si);
+                    shard::score_rows(&xh, &gh, nf, pf, &mut sc);
+                }
+                shard::col_sums_rows(shard::rows_of(&g, rows), pf)
+            })
+        };
+        let db = reduce::sum_vecs(pf, db_parts.iter().map(|d| d.as_slice()));
+
+        if i > 0 {
+            // eq. (2a): G_i = G_{i+1} W_i^T ⊙ act'(h_{i-1}) — row-local,
+            // so sharding is bitwise-free.
+            let wt = layer.w.transpose();
+            let act_prev = graph.layers[i - 1].activation;
+            let h_prev = &acts[i - 1];
+            let mut g_next = Matrix::zeros(m, nf);
+            {
+                let gn_blocks = shard::RowBlocks::of(&mut g_next, &plan);
+                exec.run_each(&plan, |si, rows| {
+                    let mut blk = gn_blocks.lock(si);
+                    ops::matmul_rows(&g, &wt, rows.clone(), &mut blk);
+                    let hb = shard::rows_of(h_prev, rows);
+                    for (v, &h) in blk.iter_mut().zip(hb.iter()) {
+                        *v *= act_prev.grad_from_output(h);
+                    }
+                });
+            }
+            g = g_next;
+        }
+        infos[i] = Some(LayerFwd {
+            xhat,
+            ghat,
+            scores,
+            db,
+        });
+    }
+    GraphFwd {
+        loss,
+        acc,
+        layers: infos
+            .into_iter()
+            .map(|i| i.expect("backward sweep visits every layer"))
+            .collect(),
+    }
+}
+
+/// Draw every layer's `out_K` decision from one RNG stream,
+/// **output-layer-first** (the order the backward sweep produced the
+/// scores in, and — for a single layer — exactly the historical
+/// consumption pattern of the flat engine). This function is THE
+/// definition of the draw order: every surface (engine, MLP,
+/// experiment loop, serve jobs) consumes the stream through it, so the
+/// bit-compatibility-critical invariant lives in one place. Returns
+/// selections in layer order.
+pub fn select_with_configs(
+    cfgs: &[AopLayerConfig],
+    scores: &[&[f32]],
+    rng: &mut Rng,
+) -> Vec<Selection> {
+    let n = cfgs.len();
+    assert_eq!(scores.len(), n, "one score vector per layer");
+    let mut sels: Vec<Option<Selection>> = (0..n).map(|_| None).collect();
+    for i in (0..n).rev() {
+        let c = &cfgs[i];
+        sels[i] = Some(policy::select(
+            c.policy,
+            scores[i],
+            c.k.min(scores[i].len()),
+            c.memory,
+            rng,
+        ));
+    }
+    sels.into_iter()
+        .map(|s| s.expect("selection drawn for every layer"))
+        .collect()
+}
+
+/// [`select_with_configs`] against a state's per-layer configs and a
+/// phase-1 result's score vectors.
+pub fn select_layers(state: &GraphState, fwd: &GraphFwd, rng: &mut Rng) -> Vec<Selection> {
+    assert_eq!(fwd.layers.len(), state.layers.len());
+    let cfgs: Vec<AopLayerConfig> = state.layers.iter().map(|l| l.cfg).collect();
+    let scores: Vec<&[f32]> = fwd.layers.iter().map(|l| l.scores.as_slice()).collect();
+    select_with_configs(&cfgs, &scores, rng)
+}
+
+/// One layer's AOP weight gradient `Ŵ*_i` from its selection, sharded:
+/// each shard accumulates the outer products of its own selected rows
+/// (compaction regime) or its full masked row range (mask regime), and
+/// the partials reduce in fixed shard order.
+pub fn aop_weight_grad(
+    lf: &LayerFwd,
+    sel: &Selection,
+    compact: bool,
+    exec: &Executor,
+) -> Matrix {
+    let (m, nf) = lf.xhat.shape();
+    let pf = lf.ghat.cols();
+    let plan = exec.plan(m);
+    let partials: Vec<Option<Matrix>> = if compact {
+        let pairs = sel.compact_pairs();
+        exec.map(&plan, |_, rows| {
+            // `pairs` is ascending (Selection contract), so the filtered
+            // slice keeps row order within the shard
+            let local: Vec<(usize, f32)> = pairs
+                .iter()
+                .copied()
+                .filter(|(r, _)| rows.contains(r))
+                .collect();
+            if local.is_empty() {
+                None
+            } else {
+                Some(ops::masked_outer_compact(&lf.xhat, &lf.ghat, &local))
+            }
+        })
+    } else {
+        exec.map(&plan, |_, rows| {
+            Some(ops::masked_outer_range(
+                &lf.xhat,
+                &lf.ghat,
+                &sel.sel_scale,
+                rows,
+            ))
+        })
+    };
+    reduce::sum_matrices(nf, pf, partials)
+}
+
+/// Phase 2: apply the per-layer selections — AOP weight update, exact
+/// bias update `b -= η Σ_m G_(m)`, memory retention of the unselected
+/// rows. Layers are independent here (the backward chain already ran in
+/// phase 1 against pre-update weights), so updates land in place.
+pub fn apply(
+    graph: &mut Graph,
+    state: &mut GraphState,
+    fwd: &GraphFwd,
+    sels: &[Selection],
+    eta: f32,
+    exec: &Executor,
+    compact: bool,
+) -> StepOutcome {
+    let n = graph.layers.len();
+    assert_eq!(sels.len(), n, "one selection per layer");
+    assert_eq!(fwd.layers.len(), n);
+    let m = fwd.layers[0].xhat.rows();
+    let plan = exec.plan(m);
+    let mut fro_sq = 0.0f64;
+    let mut layer_k = Vec::with_capacity(n);
+    for i in 0..n {
+        let lf = &fwd.layers[i];
+        let sel = &sels[i];
+        let wstar = aop_weight_grad(lf, sel, compact, exec);
+        fro_sq += (wstar.frobenius() as f64).powi(2);
+        let layer = &mut graph.layers[i];
+        layer.w.axpy(-1.0, &wstar);
+        for (b, d) in layer.b.iter_mut().zip(lf.db.iter()) {
+            *b -= eta * d;
+        }
+        let mem = &mut state.layers[i].mem;
+        if mem.enabled {
+            let mx_blocks = shard::RowBlocks::of(&mut mem.mem_x, &plan);
+            let mg_blocks = shard::RowBlocks::of(&mut mem.mem_g, &plan);
+            exec.run_each(&plan, |si, rows| {
+                let mut mx = mx_blocks.lock(si);
+                shard::keep_rows(&lf.xhat, &sel.keep, rows.clone(), &mut mx);
+                let mut mg = mg_blocks.lock(si);
+                shard::keep_rows(&lf.ghat, &sel.keep, rows, &mut mg);
+            });
+        }
+        layer_k.push(sel.k_effective());
+    }
+    StepOutcome {
+        loss: fwd.loss,
+        acc: fwd.acc,
+        wstar_fro: fro_sq.sqrt() as f32,
+        k_effective: layer_k.iter().sum(),
+        layer_k,
+    }
+}
+
+/// Full Algorithm-1 step: `fwd_score → out_K per layer → apply`.
+#[allow(clippy::too_many_arguments)]
+pub fn train_step(
+    graph: &mut Graph,
+    state: &mut GraphState,
+    x: &Matrix,
+    y: &Matrix,
+    eta: f32,
+    rng: &mut Rng,
+    exec: &Executor,
+    compact: bool,
+) -> StepOutcome {
+    let fwd = fwd_score(graph, state, x, y, eta, exec);
+    let sels = select_layers(state, &fwd, rng);
+    apply(graph, state, &fwd, &sels, eta, exec, compact)
+}
+
+/// Exact back-propagation (plain SGD) through the very same step: every
+/// row selected deterministically, memories disabled (and — unlike the
+/// old `train_step_sgd` hack — no throwaway memory matrices and no dummy
+/// RNG are ever constructed).
+pub fn train_step_exact(
+    graph: &mut Graph,
+    x: &Matrix,
+    y: &Matrix,
+    eta: f32,
+    exec: &Executor,
+) -> StepOutcome {
+    let m = x.rows();
+    let mut state = GraphState::exact(graph, m);
+    let fwd = fwd_score(graph, &state, x, y, eta, exec);
+    let sels: Vec<Selection> = (0..graph.layers.len())
+        .map(|_| policy::select_exact(m))
+        .collect();
+    apply(graph, &mut state, &fwd, &sels, eta, exec, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aop::Policy;
+    use crate::model::activations::Activation;
+    use crate::model::loss::LossKind;
+    use crate::tensor::ops;
+    use crate::train::layer::AopLayerConfig;
+
+    fn toy_data(rng: &mut Rng, b: usize, nin: usize, nout: usize) -> (Matrix, Matrix) {
+        let x = Matrix::from_fn(b, nin, |_, _| rng.normal());
+        let y = Matrix::from_fn(b, nout, |r, c| ((r % nout) == c) as u32 as f32);
+        (x, y)
+    }
+
+    #[test]
+    fn sgd_step_reduces_loss_on_fixed_batch() {
+        let mut rng = Rng::new(2);
+        let mut g = Graph::relu_mlp(&mut rng, &[6, 12, 3], LossKind::SoftmaxCrossEntropy);
+        let (x, y) = toy_data(&mut rng, 12, 6, 3);
+        let exec = Executor::serial();
+        let before = g.evaluate(&x, &y).0;
+        for _ in 0..30 {
+            train_step_exact(&mut g, &x, &y, 0.1, &exec);
+        }
+        let after = g.evaluate(&x, &y).0;
+        assert!(after < before * 0.7, "before={before} after={after}");
+    }
+
+    #[test]
+    fn aop_topk_step_reduces_loss() {
+        let mut rng = Rng::new(3);
+        let mut g = Graph::relu_mlp(&mut rng, &[6, 12, 3], LossKind::SoftmaxCrossEntropy);
+        let (x, y) = toy_data(&mut rng, 16, 6, 3);
+        let mut state = GraphState::uniform(&g, 16, Policy::TopK, 4, true);
+        let exec = Executor::serial();
+        let before = g.evaluate(&x, &y).0;
+        for _ in 0..60 {
+            train_step(&mut g, &mut state, &x, &y, 0.1, &mut rng, &exec, true);
+        }
+        let after = g.evaluate(&x, &y).0;
+        assert!(after < before * 0.8, "before={before} after={after}");
+    }
+
+    #[test]
+    fn exact_policy_is_sgd() {
+        // AOP with the Exact policy must equal the plain SGD step exactly
+        // (they are literally the same code path now).
+        let mut rng = Rng::new(4);
+        let g0 = Graph::relu_mlp(&mut rng, &[5, 8, 2], LossKind::SoftmaxCrossEntropy);
+        let (x, y) = toy_data(&mut rng, 10, 5, 2);
+        let exec = Executor::serial();
+
+        let mut a = g0.clone();
+        train_step_exact(&mut a, &x, &y, 0.05, &exec);
+
+        let mut b = g0.clone();
+        let mut state = GraphState::exact(&b, 10);
+        let mut r2 = Rng::new(99);
+        train_step(&mut b, &mut state, &x, &y, 0.05, &mut r2, &exec, true);
+
+        for (la, lb) in a.layers.iter().zip(b.layers.iter()) {
+            assert_eq!(la.w.data(), lb.w.data());
+            assert_eq!(la.b, lb.b);
+        }
+    }
+
+    #[test]
+    fn k_effective_counts_selected_products_per_layer() {
+        let mut rng = Rng::new(5);
+        let mut g = Graph::relu_mlp(&mut rng, &[4, 6, 2], LossKind::SoftmaxCrossEntropy);
+        let (x, y) = toy_data(&mut rng, 8, 4, 2);
+        let cfgs = [
+            AopLayerConfig { k: 3, policy: Policy::TopK, memory: true },
+            AopLayerConfig { k: 5, policy: Policy::TopK, memory: true },
+        ];
+        let mut state = GraphState::from_configs(&g, 8, &cfgs);
+        let exec = Executor::serial();
+        let out = train_step(&mut g, &mut state, &x, &y, 0.05, &mut rng, &exec, true);
+        assert_eq!(out.layer_k, vec![3, 5]);
+        assert_eq!(out.k_effective, 8);
+    }
+
+    #[test]
+    fn single_layer_mse_matches_manual_gradient() {
+        // one linear layer + MSE: W* = η X^T G exactly
+        let mut rng = Rng::new(6);
+        let mut g = Graph::relu_mlp(&mut rng, &[3, 2], LossKind::Mse);
+        assert_eq!(g.layers[0].activation, Activation::Identity);
+        let x = Matrix::from_fn(4, 3, |_, _| rng.normal());
+        let y = Matrix::from_fn(4, 2, |_, _| rng.normal());
+        let w0 = g.layers[0].w.clone();
+        let o = g.forward(&x);
+        let (_, grad) = LossKind::Mse.loss_and_grad(&o, &y);
+        let eta = 0.1f32;
+        train_step_exact(&mut g, &x, &y, eta, &Executor::serial());
+        let expect = w0.sub(&ops::matmul_tn(&x, &grad).scale(eta));
+        assert!(g.layers[0].w.max_abs_diff(&expect) < 1e-5);
+    }
+
+    #[test]
+    fn tanh_and_sigmoid_graphs_train() {
+        for act in [Activation::Tanh, Activation::Sigmoid] {
+            let mut rng = Rng::new(7);
+            let mut g = Graph::relu_mlp(&mut rng, &[6, 10, 3], LossKind::SoftmaxCrossEntropy);
+            g.layers[0].activation = act;
+            let (x, y) = toy_data(&mut rng, 16, 6, 3);
+            let mut state = GraphState::uniform(&g, 16, Policy::TopK, 6, true);
+            let exec = Executor::serial();
+            let before = g.evaluate(&x, &y).0;
+            for _ in 0..80 {
+                train_step(&mut g, &mut state, &x, &y, 0.2, &mut rng, &exec, true);
+            }
+            let after = g.evaluate(&x, &y).0;
+            assert!(after < before, "{act:?}: before={before} after={after}");
+            assert!(g.layers.iter().all(|l| l.w.is_finite()), "{act:?}");
+        }
+    }
+
+    #[test]
+    fn tanh_backward_matches_numeric_gradient() {
+        // exact-policy step == SGD, so the applied update must match the
+        // finite-difference loss gradient through the tanh hidden layer
+        let mut rng = Rng::new(8);
+        let mut g = Graph::relu_mlp(&mut rng, &[3, 5, 2], LossKind::Mse);
+        g.layers[0].activation = Activation::Tanh;
+        let x = Matrix::from_fn(6, 3, |_, _| rng.normal());
+        let y = Matrix::from_fn(6, 2, |_, _| rng.normal());
+        let w0 = g.layers[0].w.clone();
+        let loss_at = |gr: &Graph| gr.loss.loss(&gr.forward(&x), &y);
+        let eps = 1e-3f32;
+        let mut num_grad = vec![0.0f32; 4];
+        let probes = [(0usize, 0usize), (1, 2), (2, 4), (0, 3)];
+        for (pi, &(r, c)) in probes.iter().enumerate() {
+            let mut gp = g.clone();
+            gp.layers[0].w[(r, c)] += eps;
+            let mut gm = g.clone();
+            gm.layers[0].w[(r, c)] -= eps;
+            num_grad[pi] = (loss_at(&gp) - loss_at(&gm)) / (2.0 * eps);
+        }
+        let eta = 0.05f32;
+        train_step_exact(&mut g, &x, &y, eta, &Executor::serial());
+        for (pi, &(r, c)) in probes.iter().enumerate() {
+            let applied = (w0[(r, c)] - g.layers[0].w[(r, c)]) / eta;
+            assert!(
+                (applied - num_grad[pi]).abs() < 2e-2,
+                "({r},{c}): applied {applied} vs numeric {}",
+                num_grad[pi]
+            );
+        }
+    }
+
+    #[test]
+    fn non_identity_head_matches_numeric_gradient() {
+        // a sigmoid *head* must pick up the act'(h) chain factor on the
+        // loss gradient — at every layer, not just below the head
+        let mut rng = Rng::new(10);
+        let mut g = Graph::relu_mlp(&mut rng, &[3, 5, 2], LossKind::Mse);
+        g.layers[0].activation = Activation::Tanh; // smooth everywhere
+        g.layers[1].activation = Activation::Sigmoid;
+        let x = Matrix::from_fn(6, 3, |_, _| rng.normal());
+        let y = Matrix::from_fn(6, 2, |_, _| rng.uniform());
+        let loss_at = |gr: &Graph| gr.loss.loss(&gr.forward(&x), &y);
+        let eps = 1e-3f32;
+        // probe both the head's and the hidden layer's weights
+        let probes = [(1usize, 0usize, 0usize), (1, 4, 1), (0, 0, 2), (0, 2, 3)];
+        let mut num_grad = vec![0.0f32; probes.len()];
+        for (pi, &(li, r, c)) in probes.iter().enumerate() {
+            let mut gp = g.clone();
+            gp.layers[li].w[(r, c)] += eps;
+            let mut gm = g.clone();
+            gm.layers[li].w[(r, c)] -= eps;
+            num_grad[pi] = (loss_at(&gp) - loss_at(&gm)) / (2.0 * eps);
+        }
+        let w0: Vec<Matrix> = g.layers.iter().map(|l| l.w.clone()).collect();
+        let eta = 0.05f32;
+        train_step_exact(&mut g, &x, &y, eta, &Executor::serial());
+        for (pi, &(li, r, c)) in probes.iter().enumerate() {
+            let applied = (w0[li][(r, c)] - g.layers[li].w[(r, c)]) / eta;
+            assert!(
+                (applied - num_grad[pi]).abs() < 2e-2,
+                "layer {li} ({r},{c}): applied {applied} vs numeric {}",
+                num_grad[pi]
+            );
+        }
+    }
+
+    #[test]
+    fn memory_defers_unselected_rows_per_layer() {
+        let mut rng = Rng::new(9);
+        let mut g = Graph::relu_mlp(&mut rng, &[4, 6, 2], LossKind::Mse);
+        let x = Matrix::from_fn(16, 4, |_, _| rng.normal());
+        let y = Matrix::from_fn(16, 2, |_, _| rng.normal());
+        let mut state = GraphState::uniform(&g, 16, Policy::TopK, 4, true);
+        train_step(&mut g, &mut state, &x, &y, 0.05, &mut rng, &Executor::serial(), true);
+        for ls in &state.layers {
+            let nz = (0..16)
+                .filter(|&r| ls.mem.mem_x.row(r).iter().any(|&v| v != 0.0))
+                .count();
+            assert_eq!(nz, 12, "12 unselected rows must sit in memory");
+        }
+        assert!(state.deferred_mass() > 0.0);
+    }
+}

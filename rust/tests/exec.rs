@@ -1,11 +1,14 @@
-//! Determinism property tests for the `exec` data-parallel engine.
+//! Determinism property tests for the `exec` data-parallel engine and
+//! the layer-graph training core on top of it.
 //!
 //! The contract under test: **the thread count is not a hyperparameter**.
 //! For every selection policy, both execution regimes (mask and
-//! compaction), memory on/off, engine-level and experiment-level, local
-//! and through a served job — `threads ∈ {1, 2, 4, 7}` must produce
-//! bit-identical losses, curves, and final weights. Every comparison
-//! here is exact (`to_bits` / slice equality), never tolerance-based.
+//! compaction), memory on/off, every activation, homogeneous *and*
+//! heterogeneous per-layer K — engine-level, graph-level,
+//! experiment-level, and through a served job — `threads ∈ {1, 2, 4, 7}`
+//! must produce bit-identical losses, curves, and final weights. Every
+//! comparison here is exact (`to_bits` / slice equality), never
+//! tolerance-based.
 //!
 //! `ci.sh` runs this suite at two `REPRO_THREADS` settings; the
 //! `determinism_at_env_worker_count` test picks its parallelism from
@@ -15,13 +18,14 @@ use std::time::Duration;
 
 use mem_aop_gd::aop::engine::AopEngine;
 use mem_aop_gd::aop::Policy;
-use mem_aop_gd::coordinator::config::{ExperimentConfig, Task};
+use mem_aop_gd::coordinator::config::{ExperimentConfig, LayerSpec, Task};
 use mem_aop_gd::coordinator::experiment::{self, RunResult};
 use mem_aop_gd::exec::Executor;
+use mem_aop_gd::model::activations::Activation;
 use mem_aop_gd::model::loss::LossKind;
-use mem_aop_gd::model::mlp::{mlp_memories, Mlp, MlpAopState};
 use mem_aop_gd::serve::{Client, ServeOptions, Server};
 use mem_aop_gd::tensor::{init, rng::Rng, Matrix};
+use mem_aop_gd::train::{self, AopLayerConfig, Graph, GraphState};
 use mem_aop_gd::util::pool;
 
 const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 7];
@@ -62,7 +66,7 @@ fn train_engine(
         assert!(st.loss.is_finite());
         losses.push(st.loss.to_bits());
     }
-    (losses, e.w.clone(), e.b.clone())
+    (losses, e.w().clone(), e.b().to_vec())
 }
 
 #[test]
@@ -92,6 +96,68 @@ fn engine_bit_identical_across_threads_for_all_policies_and_regimes() {
     }
 }
 
+/// Train a 2-hidden-layer graph with a *heterogeneous* per-layer config
+/// (different K at every layer, the given activation and policy) and
+/// return (per-step losses, per-step k vectors, final layer weights).
+fn train_graph(
+    activation: Activation,
+    policy: Policy,
+    threads: usize,
+    steps: usize,
+) -> (Vec<u32>, Vec<Vec<usize>>, Graph) {
+    let (m, n, p) = (24usize, 6usize, 3usize);
+    let (x, y) = synth_data(31, m, n, p);
+    let mut wrng = Rng::new(41);
+    let mut g = Graph::relu_mlp(&mut wrng, &[n, 10, 8, p], LossKind::Mse);
+    for li in 0..2 {
+        g.layers[li].activation = activation;
+    }
+    // heterogeneous budgets: k differs at every layer (exact keeps M)
+    let ks: [usize; 3] = if policy == Policy::Exact { [m, m, m] } else { [6, 12, 18] };
+    let cfgs: Vec<AopLayerConfig> = ks
+        .iter()
+        .map(|&k| AopLayerConfig {
+            k,
+            policy,
+            memory: policy != Policy::Exact,
+        })
+        .collect();
+    let mut state = GraphState::from_configs(&g, m, &cfgs);
+    let exec = Executor::new(threads);
+    let mut rng = Rng::new(17);
+    let mut losses = Vec::with_capacity(steps);
+    let mut layer_ks = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let out = train::train_step(&mut g, &mut state, &x, &y, 0.02, &mut rng, &exec, true);
+        assert!(out.loss.is_finite());
+        losses.push(out.loss.to_bits());
+        layer_ks.push(out.layer_k.clone());
+    }
+    (losses, layer_ks, g)
+}
+
+#[test]
+fn graph_bit_identical_across_threads_for_activation_policy_layerk_grid() {
+    // the acceptance grid: every activation × every policy ×
+    // heterogeneous per-layer K, threads=1 vs threads=7, exact to_bits
+    for activation in [Activation::Relu, Activation::Tanh, Activation::Sigmoid] {
+        for policy in Policy::all() {
+            let (l1, k1, g1) = train_graph(activation, policy, 1, 12);
+            let (l7, k7, g7) = train_graph(activation, policy, 7, 12);
+            assert_eq!(l1, l7, "{activation:?} {policy:?}: losses");
+            assert_eq!(k1, k7, "{activation:?} {policy:?}: per-layer k_effective");
+            for (a, b) in g1.layers.iter().zip(g7.layers.iter()) {
+                assert_eq!(a.w.data(), b.w.data(), "{activation:?} {policy:?}: weights");
+                assert_eq!(a.b, b.b, "{activation:?} {policy:?}: bias");
+            }
+            // heterogeneous budgets actually took effect
+            if policy != Policy::Exact && policy != Policy::WeightedKReplacement {
+                assert_eq!(k1[0], vec![6, 12, 18], "{activation:?} {policy:?}");
+            }
+        }
+    }
+}
+
 fn energy_cfg(policy: Policy, threads: usize) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::preset(Task::Energy);
     cfg.policy = policy;
@@ -101,6 +167,28 @@ fn energy_cfg(policy: Policy, threads: usize) -> ExperimentConfig {
     cfg.seed = 3;
     cfg.threads = threads;
     cfg
+}
+
+/// A 2-layer energy config with per-layer {k, policy, memory} and the
+/// given hidden activation.
+fn layered_energy_cfg_with(threads: usize, hidden: Activation) -> ExperimentConfig {
+    let mut cfg = energy_cfg(Policy::TopK, threads);
+    cfg.k = 18;
+    cfg.layers = Some(vec![
+        LayerSpec {
+            width: 8,
+            activation: Some(hidden),
+            k: Some(36),
+            policy: Some(Policy::WeightedK),
+            memory: Some(true),
+        },
+        LayerSpec::plain(1), // head inherits k=18 / topk / mem
+    ]);
+    cfg
+}
+
+fn layered_energy_cfg(threads: usize) -> ExperimentConfig {
+    layered_energy_cfg_with(threads, Activation::Tanh)
 }
 
 fn assert_runs_identical(a: &RunResult, b: &RunResult, what: &str) {
@@ -131,9 +219,17 @@ fn assert_runs_identical(a: &RunResult, b: &RunResult, what: &str) {
             ma.epoch
         );
         assert_eq!(ma.backward_flops, mb.backward_flops, "{what}: flops");
+        assert_eq!(ma.layers, mb.layers, "{what}: per-layer metrics");
     }
-    assert_eq!(a.final_w.data(), b.final_w.data(), "{what}: final weights");
-    assert_eq!(a.final_b, b.final_b, "{what}: final bias");
+    assert_eq!(
+        a.final_layers.len(),
+        b.final_layers.len(),
+        "{what}: layer count"
+    );
+    for ((wa, ba), (wb, bb)) in a.final_layers.iter().zip(b.final_layers.iter()) {
+        assert_eq!(wa.data(), wb.data(), "{what}: final weights");
+        assert_eq!(ba, bb, "{what}: final bias");
+    }
 }
 
 #[test]
@@ -145,6 +241,60 @@ fn experiment_curves_bit_identical_across_threads_for_all_policies() {
             assert_runs_identical(&serial, &par, &format!("{policy:?} threads={threads}"));
         }
     }
+}
+
+#[test]
+fn layered_experiment_bit_identical_across_threads() {
+    // per-layer {k, policy, memory} + tanh/sigmoid hiddens through the
+    // whole experiment loop — the acceptance cases beyond relu
+    for hidden in [Activation::Tanh, Activation::Sigmoid] {
+        let serial = experiment::run(&layered_energy_cfg_with(1, hidden)).unwrap();
+        assert_eq!(serial.final_layers.len(), 2, "{hidden:?}");
+        // per-layer metrics carry the heterogeneous budgets
+        let last = serial.curve.epochs.last().unwrap();
+        assert_eq!(last.layers.len(), 2, "{hidden:?}");
+        // weightedk w/o replacement: exactly k distinct products
+        assert_eq!(last.layers[0].k_effective, 36.0, "{hidden:?}");
+        assert_eq!(last.layers[1].k_effective, 18.0, "{hidden:?}");
+        assert!(last.layers[0].backward_flops > 0, "{hidden:?}");
+        assert_eq!(
+            last.backward_flops,
+            last.layers.iter().map(|l| l.backward_flops).sum::<u64>(),
+            "{hidden:?}"
+        );
+        for threads in &THREAD_COUNTS[1..] {
+            let par = experiment::run(&layered_energy_cfg_with(*threads, hidden)).unwrap();
+            assert_runs_identical(
+                &serial,
+                &par,
+                &format!("layered {hidden:?} threads={threads}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn layered_config_json_roundtrip_and_flat_backcompat() {
+    // the layers spec survives the wire format...
+    let cfg = layered_energy_cfg(2);
+    let decoded = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+    assert_eq!(decoded.layers, cfg.layers);
+    assert_eq!(decoded.layer_plan(), cfg.layer_plan());
+    assert_eq!(decoded.threads, 2);
+    // ...and a flat config (no `layers` key) resolves to the historical
+    // single identity layer with the flat knobs
+    let flat = energy_cfg(Policy::TopK, 1);
+    let fj = flat.to_json();
+    assert!(fj.get("layers").is_none());
+    let fd = ExperimentConfig::from_json(&fj).unwrap();
+    assert!(fd.layers.is_none());
+    let plan = fd.layer_plan();
+    assert_eq!(plan.len(), 1);
+    assert_eq!((plan[0].fan_in, plan[0].fan_out), (16, 1));
+    assert_eq!(plan[0].activation, Activation::Identity);
+    assert_eq!(plan[0].cfg.k, flat.k);
+    assert_eq!(plan[0].cfg.policy, flat.policy);
+    assert_eq!(plan[0].cfg.memory, flat.memory);
 }
 
 #[test]
@@ -181,14 +331,10 @@ fn mlp_training_bit_identical_across_threads() {
         let y = Matrix::from_fn(40, 3, |r, c| ((r % 3) == c) as u32 as f32);
         (x, y)
     };
-    let train = |threads: usize| -> (Vec<u32>, Mlp) {
+    let train = |threads: usize| -> (Vec<u32>, Graph) {
         let mut rng = Rng::new(5);
-        let mut mlp = Mlp::new(&mut rng, &[6, 17, 3], LossKind::SoftmaxCrossEntropy);
-        let mut state = MlpAopState {
-            memories: mlp_memories(&mlp, 40, true),
-            policy: Policy::WeightedK,
-            k: 10,
-        };
+        let mut mlp = Graph::relu_mlp(&mut rng, &[6, 17, 3], LossKind::SoftmaxCrossEntropy);
+        let mut state = GraphState::uniform(&mlp, 40, Policy::WeightedK, 10, true);
         let exec = Executor::new(threads);
         let mut prng = Rng::new(23);
         let mut losses = Vec::new();
@@ -250,6 +396,57 @@ fn served_jobs_with_threads_are_bit_identical_and_bounded() {
         .unwrap_err()
         .to_string();
     assert!(err.contains("threads=7"), "{err}");
+
+    c.shutdown().unwrap();
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn served_layered_job_reports_per_layer_k_effective() {
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 5,
+        queue_capacity: 8,
+        registry_dir: None,
+    };
+    let server = Server::bind(&opts).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+    let mut c = Client::connect(&addr).unwrap();
+
+    // per-layer {k, policy} through the wire at two thread counts
+    let id1 = c.submit(&layered_energy_cfg(1), "l1").unwrap();
+    let id4 = c.submit(&layered_energy_cfg(4), "l4").unwrap();
+    c.wait(id1, Duration::from_secs(120)).unwrap();
+    c.wait(id4, Duration::from_secs(120)).unwrap();
+
+    // the job view exposes the resolved per-layer config (protocol v3)
+    let view = c.status(id1).unwrap();
+    let layers = view.get("layers").and_then(|l| l.as_arr()).unwrap().to_vec();
+    assert_eq!(layers.len(), 2);
+    assert_eq!(layers[0].get("k").unwrap().as_usize().unwrap(), 36);
+    assert_eq!(
+        layers[0].get("policy").unwrap().as_str().unwrap(),
+        "weightedk"
+    );
+    assert_eq!(
+        layers[0].get("activation").unwrap().as_str().unwrap(),
+        "tanh"
+    );
+    assert_eq!(layers[1].get("k").unwrap().as_usize().unwrap(), 18);
+
+    // the returned metrics carry per-layer k_effective, and the curves
+    // are bit-identical across thread counts
+    let (_, curve1) = c.result(id1).unwrap();
+    let (_, curve4) = c.result(id4).unwrap();
+    for (a, b) in curve1.epochs.iter().zip(curve4.epochs.iter()) {
+        assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits());
+        assert_eq!(a.layers, b.layers);
+    }
+    let last = curve1.epochs.last().unwrap();
+    assert_eq!(last.layers.len(), 2);
+    assert_eq!(last.layers[0].k_effective, 36.0);
+    assert_eq!(last.layers[1].k_effective, 18.0);
 
     c.shutdown().unwrap();
     handle.join().unwrap().unwrap();

@@ -210,9 +210,9 @@ fn fused_step_matches_two_phase_topk() {
     let b0 = two_phase.b.clone();
 
     // two-phase step
-    let (_, scores, _) = two_phase.fwd_score(&x, &y).unwrap();
-    let sel = policy::select(Policy::TopK, &scores, 32, true, &mut rng);
-    two_phase.apply(&sel).unwrap();
+    let (_, scores) = two_phase.fwd_score(&x, &y).unwrap();
+    let sel = policy::select(Policy::TopK, &scores[0], 32, true, &mut rng);
+    two_phase.apply(std::slice::from_ref(&sel)).unwrap();
 
     // fused step (same initial state)
     let fused = rt.load("mnist_fused_topk_mem").unwrap();
@@ -327,9 +327,9 @@ fn single_step_exact_native_vs_hlo_weights_match() {
     cfg.backend = Backend::Native;
     let n = experiment::run(&cfg).unwrap();
     let h = experiment::run_hlo(&cfg, &rt).unwrap();
-    let d = n.final_w.max_abs_diff(&h.final_w);
+    let d = n.final_w().max_abs_diff(h.final_w());
     assert!(d < 1e-4, "after 1 epoch, |Δw|∞ = {d}");
-    for (a, b) in n.final_b.iter().zip(h.final_b.iter()) {
+    for (a, b) in n.final_b().iter().zip(h.final_b().iter()) {
         assert!((a - b).abs() < 1e-4);
     }
 }

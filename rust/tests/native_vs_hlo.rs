@@ -46,8 +46,8 @@ fn assert_close_curves(a: &RunResult, b: &RunResult, tol: f32) {
             mb.val_loss
         );
     }
-    let wd = a.final_w.max_abs_diff(&b.final_w);
-    let scale = a.final_w.frobenius().max(1e-6);
+    let wd = a.final_w().max_abs_diff(b.final_w());
+    let scale = a.final_w().frobenius().max(1e-6);
     assert!(wd / scale < tol, "weight divergence {wd} (scale {scale})");
 }
 

@@ -261,6 +261,6 @@ fn prop_engine_step_keeps_weights_finite() {
             let st = e.step(&x, &y, 0.01, &mut rng);
             assert!(st.loss.is_finite());
         }
-        assert!(e.w.is_finite());
+        assert!(e.w().is_finite());
     });
 }
