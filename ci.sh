@@ -43,13 +43,26 @@ REPRO_THREADS=2 cargo test -q --test exec
 echo "==> exec determinism gate (REPRO_THREADS=7)"
 REPRO_THREADS=7 cargo test -q --test exec
 
-# Perf smoke: a quick run of the kernels bench on the 2-hidden-layer
-# graph shape so every CI pass leaves machine-readable throughput data
-# points (BENCH_2.json: flat engine; BENCH_3.json: layer-graph core,
-# rows/sec + FLOPs/step, serial vs threads=4) for the perf trajectory.
-echo "==> kernels bench smoke (BENCH_2.json / BENCH_3.json)"
+# Perf smoke: a quick run of the kernels bench so every CI pass leaves
+# machine-readable throughput data points (BENCH_2.json: flat engine;
+# BENCH_3.json: layer-graph core; BENCH_4.json: wide-layer
+# workspace-resident step with the allocations-per-step counter — the
+# bench itself asserts the serial steady state performs 0 heap
+# allocations) for the perf trajectory.
+echo "==> kernels bench smoke (BENCH_2/3/4.json)"
 BENCH_QUICK=1 cargo bench --bench kernels
 test -f BENCH_3.json
-echo "BENCH_3.json: $(cat BENCH_3.json | head -c 200)..."
+test -f BENCH_4.json
+echo "BENCH_4.json: $(cat BENCH_4.json | head -c 200)..."
+
+# BENCH trajectory (ROADMAP): append this run to the committed bench/
+# history and fail on a >15% rows/sec regression vs the recorded
+# baseline. BENCH_NO_GATE=1 records without gating (noisy boxes).
+echo "==> bench trajectory gate"
+if command -v python3 >/dev/null 2>&1; then
+  python3 tools/bench_gate.py
+else
+  echo "python3 not found — bench trajectory skipped"
+fi
 
 echo "CI green."

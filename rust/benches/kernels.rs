@@ -2,15 +2,27 @@
 //! execution regimes (mask vs compaction) against the exact outer-product
 //! sum, on the paper's exact shapes, for both the native path and the
 //! compiled HLO artifacts — plus the end-to-end `exec` training-step
-//! throughput (serial vs threads=4), written to `BENCH_2.json`, and the
+//! throughput (serial vs threads=4), written to `BENCH_2.json`, the
 //! layer-graph training-step throughput on a 2-hidden-layer shape with
-//! heterogeneous per-layer K, written to `BENCH_3.json` — so the repo's
-//! perf trajectory is machine-readable.
+//! heterogeneous per-layer K, written to `BENCH_3.json`, and (§Perf
+//! pass) the wide-layer workspace-resident step with an
+//! **allocations-per-step counter**, written to `BENCH_4.json` — so the
+//! repo's perf trajectory is machine-readable.
 //!
 //! Work metric = FLOPs of the compaction-regime cost model, so the
 //! reported work-rate is directly comparable across K (who computes the
 //! same gradient with fewer FLOPs/second wins).
+//!
+//! The allocation counter is a thin `#[global_allocator]` wrapper that
+//! counts `alloc`/`realloc` calls; the BENCH_4 section asserts the
+//! serial steady-state step performs **zero** of them (the tentpole
+//! claim of the workspace refactor) and reports the threads=4 count —
+//! which is also expected to be zero with the job-slot `ExecPool`, but
+//! is reported rather than asserted so a platform whose std primitives
+//! allocate under contention cannot fail CI.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use mem_aop_gd::aop::engine::AopEngine;
@@ -19,9 +31,39 @@ use mem_aop_gd::exec::Executor;
 use mem_aop_gd::model::loss::LossKind;
 use mem_aop_gd::runtime::{Manifest, Runtime, Value};
 use mem_aop_gd::tensor::{init, ops, rng::Rng, Matrix};
-use mem_aop_gd::train::{self, AopLayerConfig, Graph, GraphState};
+use mem_aop_gd::train::{self, AopLayerConfig, Graph, GraphState, GraphWorkspace};
 use mem_aop_gd::util::bench::{black_box, Bencher};
 use mem_aop_gd::util::json::{self, Json};
+
+/// Counts every heap allocation (alloc + realloc) the process performs.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: delegates verbatim to the system allocator; the counter is a
+// relaxed atomic with no allocation of its own.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_calls() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
 
 /// Steady-state rows/sec of full Mem-AOP-GD training steps on the MNIST
 /// head shape (M=64, 784×10, topk K=32, memory on) at a thread count.
@@ -231,12 +273,154 @@ fn bench_graph_and_write_bench3() {
         .and_then(|_| std::fs::write("results/bench/graph_throughput.json", text));
 }
 
+/// The BENCH_4 workload (§Perf pass): a wide hidden layer (784→4096→10,
+/// relu, topk K=64, memory on, batch 128 — K < M, so the compaction
+/// window filtering and nonzero memory retention are genuinely on the
+/// measured path) stepped through the workspace-resident
+/// `train::train_step_ws` — the shape where the lane-blocked kernels
+/// and the cached transposes dominate, plus the allocations-per-step
+/// counter proving the zero-allocation steady state. (The resident
+/// per-shard outer-product partials for the 784×4096 layer make this a
+/// ~100 MB workspace — a bench-box budget, deliberately.)
+const WIDE_WIDTHS: [usize; 3] = [784, 4096, 10];
+const WIDE_K: usize = 64;
+const WIDE_BATCH: usize = 128;
+
+/// Steady-state (rows/sec, allocations/step) of wide-layer training
+/// steps at a thread count. Allocations are counted over the same timed
+/// steps, after a warmup that populates every lazy buffer (workspace,
+/// transpose caches, selection scratch).
+fn wide_rows_per_sec(threads: usize, measure: Duration) -> (f64, f64) {
+    let m = WIDE_BATCH;
+    let (n, p) = (WIDE_WIDTHS[0], WIDE_WIDTHS[2]);
+    let mut rng = Rng::new(0);
+    let x = Matrix::from_fn(m, n, |_, _| rng.normal());
+    let y = Matrix::from_fn(m, p, |r, c| ((r % p) == c) as u32 as f32);
+    let mut wrng = Rng::new(1);
+    let mut graph = Graph::relu_mlp(&mut wrng, &WIDE_WIDTHS, LossKind::SoftmaxCrossEntropy);
+    let cfgs: Vec<AopLayerConfig> = (0..2)
+        .map(|_| AopLayerConfig {
+            k: WIDE_K,
+            policy: Policy::TopK,
+            memory: true,
+        })
+        .collect();
+    let mut state = GraphState::from_configs(&graph, m, &cfgs);
+    let mut ws = GraphWorkspace::new(&graph, m);
+    let exec = Executor::new(threads);
+    let mut srng = Rng::new(2);
+    for _ in 0..3 {
+        black_box(train::train_step_ws(
+            &mut graph, &mut state, &x, &y, 0.01, &mut srng, &exec, true, &mut ws,
+        ));
+    }
+    let a0 = alloc_calls();
+    let t0 = Instant::now();
+    let mut steps = 0u64;
+    while steps < 2 || t0.elapsed() < measure {
+        black_box(train::train_step_ws(
+            &mut graph, &mut state, &x, &y, 0.01, &mut srng, &exec, true, &mut ws,
+        ));
+        steps += 1;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let allocs = (alloc_calls() - a0) as f64 / steps as f64;
+    (steps as f64 * m as f64 / elapsed, allocs)
+}
+
+/// Measure the wide-layer workload and write `BENCH_4.json` (serial vs
+/// threads=4 rows/sec + allocations/step). The serial steady state is
+/// asserted allocation-free — the tentpole claim of the workspace
+/// refactor — unless `BENCH_ALLOW_ALLOCS=1` downgrades the assert to a
+/// warning (escape hatch for platforms whose std primitives allocate).
+fn bench_wide_and_write_bench4() {
+    let quick = std::env::var("BENCH_QUICK").ok().as_deref() == Some("1");
+    let measure = if quick {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_secs(2)
+    };
+    let (serial, serial_allocs) = wide_rows_per_sec(1, measure);
+    let (par4, par4_allocs) = wide_rows_per_sec(4, measure);
+    let speedup = par4 / serial;
+    let mut flops_per_step = 0.0f64;
+    let mut layer_json = Vec::new();
+    for i in 0..2 {
+        let (n, p) = (WIDE_WIDTHS[i], WIDE_WIDTHS[i + 1]);
+        let lf = flops::aop_step(WIDE_BATCH, n, p, WIDE_K).total() as f64;
+        flops_per_step += lf;
+        layer_json.push(json::obj(vec![
+            ("n", json::num(n as f64)),
+            ("p", json::num(p as f64)),
+            ("k", json::num(WIDE_K as f64)),
+            ("flops_per_step", json::num(lf)),
+        ]));
+    }
+    let flops_per_row = flops_per_step / WIDE_BATCH as f64;
+    eprintln!(
+        "{:44} {:>12.0} rows/s  ({serial_allocs:.1} allocs/step)",
+        "wide/exec/train-step threads=1", serial
+    );
+    eprintln!(
+        "{:44} {:>12.0} rows/s  ({speedup:.2}x, {par4_allocs:.1} allocs/step)",
+        "wide/exec/train-step threads=4", par4
+    );
+    if serial_allocs != 0.0 {
+        let msg = format!(
+            "serial steady-state step performed {serial_allocs} allocations (expected 0)"
+        );
+        if std::env::var("BENCH_ALLOW_ALLOCS").ok().as_deref() == Some("1") {
+            eprintln!("[kernels] WARNING: {msg}");
+        } else {
+            panic!("{msg}");
+        }
+    }
+    let out = json::obj(vec![
+        (
+            "workload",
+            json::s("wide-784x4096x10 topk K=64 mem train-step (workspace-resident)"),
+        ),
+        ("m", json::num(WIDE_BATCH as f64)),
+        ("layers", Json::Arr(layer_json)),
+        ("flops_per_step", json::num(flops_per_step)),
+        (
+            "serial",
+            json::obj(vec![
+                ("threads", json::num(1.0)),
+                ("rows_per_sec", json::num(serial)),
+                ("flops_per_sec", json::num(serial * flops_per_row)),
+                ("allocs_per_step", json::num(serial_allocs)),
+            ]),
+        ),
+        (
+            "threads4",
+            json::obj(vec![
+                ("threads", json::num(4.0)),
+                ("rows_per_sec", json::num(par4)),
+                ("flops_per_sec", json::num(par4 * flops_per_row)),
+                ("allocs_per_step", json::num(par4_allocs)),
+            ]),
+        ),
+        ("speedup", json::num(speedup)),
+    ]);
+    let mut text = out.dump();
+    text.push('\n');
+    if std::fs::write("BENCH_4.json", &text).is_ok() {
+        eprintln!(
+            "[kernels] wrote BENCH_4.json (speedup {speedup:.2}x, serial allocs/step {serial_allocs:.1})"
+        );
+    }
+    let _ = std::fs::create_dir_all("results/bench")
+        .and_then(|_| std::fs::write("results/bench/wide_throughput.json", text));
+}
+
 fn main() {
     let mut b = Bencher::new("kernels");
     let mut rng = Rng::new(0);
 
     bench_exec_and_write_bench2();
     bench_graph_and_write_bench3();
+    bench_wide_and_write_bench4();
 
     for (task, m, n, p, ks) in [
         ("energy", 144usize, 16usize, 1usize, vec![144usize, 18, 9, 3]),

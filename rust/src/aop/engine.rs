@@ -20,12 +20,15 @@ use crate::exec::Executor;
 use crate::model::loss::LossKind;
 use crate::tensor::rng::Rng;
 use crate::tensor::Matrix;
-use crate::train::{self, AopLayerConfig, Graph, GraphState, StepOutcome};
+use crate::train::{self, AopLayerConfig, Graph, GraphState, GraphWorkspace, StepOutcome};
 
 /// Single dense layer `o = x W + b` trained with Mem-AOP-GD.
 pub struct AopEngine {
     graph: Graph,
     state: GraphState,
+    /// Resident step workspace (§Perf pass): steady-state `step`/
+    /// `step_exec` calls perform zero heap allocations.
+    ws: GraphWorkspace,
     /// Use the compaction-regime kernel (K-row loop) instead of the
     /// mask-regime one. Numerically identical for without-replacement
     /// policies; this is the paper's complexity-reduction execution mode.
@@ -71,9 +74,11 @@ impl AopEngine {
                 memory: memory_enabled,
             }],
         );
+        let ws = GraphWorkspace::new(&graph, batch);
         AopEngine {
             graph,
             state,
+            ws,
             compact: true,
         }
     }
@@ -120,7 +125,7 @@ impl AopEngine {
         rng: &mut Rng,
         exec: &Executor,
     ) -> StepStats {
-        train::train_step(
+        train::train_step_ws(
             &mut self.graph,
             &mut self.state,
             x,
@@ -129,6 +134,7 @@ impl AopEngine {
             rng,
             exec,
             self.compact,
+            &mut self.ws,
         )
         .into()
     }
@@ -159,20 +165,28 @@ impl AopEngine {
         rng: &mut Rng,
     ) -> StepStats {
         let exec = Executor::serial();
-        let fwd = train::fwd_score(&self.graph, &self.state, x, y, 1.0, &exec);
-        let sel = train::select_layers(&self.state, &fwd, rng).remove(0);
-        let gw = train::aop_weight_grad(&fwd.layers[0], &sel, self.compact, &exec);
+        let (loss, _) = train::fwd_score(&self.graph, &self.state, x, y, 1.0, &exec, &mut self.ws);
+        // this path applies through the optimizer, not train::apply —
+        // drop the pending fwd marker so the pairing guard stays honest
+        self.ws.clear_fwd();
+        train::select_layers_ws(&self.state, &mut self.ws, rng);
+        let sels = self.ws.take_sels();
+        let gw = train::aop_weight_grad_ws(&mut self.ws, 0, &sels[0], self.compact, &exec);
         let layer = &mut self.graph.layers[0];
         // fwd_score folded η=1, so db is the raw bias gradient
-        ost.apply(opt, &mut layer.w, &mut layer.b, &gw, &fwd.layers[0].db);
+        ost.apply(opt, &mut layer.w, &mut layer.b, &gw, self.ws.db(0));
+        // the optimizer mutated w out of band — re-derive the cache
+        layer.refresh_w_t();
         self.state.layers[0]
             .mem
-            .update(&fwd.layers[0].xhat, &fwd.layers[0].ghat, &sel.keep);
-        StepStats {
-            loss: fwd.loss,
+            .update(self.ws.xhat(0), self.ws.ghat(0), &sels[0].keep);
+        let stats = StepStats {
+            loss,
             wstar_fro: gw.frobenius(),
-            k_effective: sel.k_effective(),
-        }
+            k_effective: sels[0].k_effective(),
+        };
+        self.ws.put_sels(sels);
+        stats
     }
 }
 

@@ -114,6 +114,16 @@ pub struct Selection {
 }
 
 impl Selection {
+    /// An empty selection with capacity for `m` rows — the reusable
+    /// workspace form; [`select_into`] fills it without reallocating.
+    pub fn with_capacity(m: usize) -> Selection {
+        Selection {
+            sel_scale: Vec::with_capacity(m),
+            keep: Vec::with_capacity(m),
+            indices: Vec::with_capacity(m),
+        }
+    }
+
     /// Compaction-regime pairs (row, scale) for `masked_outer_compact`.
     pub fn compact_pairs(&self) -> Vec<(usize, f32)> {
         self.indices
@@ -128,15 +138,42 @@ impl Selection {
     }
 }
 
+/// Reusable scratch for [`select_into`]: every temporary the policies
+/// need (candidate indices, Gumbel keys, the sampling CDF, draw counts)
+/// lives here so steady-state selection performs zero heap allocations.
+#[derive(Debug, Default)]
+pub struct SelectScratch {
+    idx: Vec<usize>,
+    keys: Vec<(f64, usize)>,
+    cdf: Vec<f64>,
+    draws: Vec<usize>,
+    counts: Vec<u32>,
+}
+
+impl SelectScratch {
+    pub fn new() -> SelectScratch {
+        SelectScratch::default()
+    }
+}
+
 /// The deterministic exact-BP selection: every row, unit scale, nothing
 /// deferred. Needs no scores and no RNG — the exact-SGD path calls this
 /// directly instead of threading a dummy generator through [`select`].
 pub fn select_exact(m: usize) -> Selection {
-    Selection {
-        sel_scale: vec![1.0; m],
-        keep: vec![0.0; m],
-        indices: (0..m).collect(),
-    }
+    let mut sel = Selection::with_capacity(m);
+    select_exact_into(m, &mut sel);
+    sel
+}
+
+/// [`select_exact`] into a reusable [`Selection`] (no allocation at
+/// capacity).
+pub fn select_exact_into(m: usize, sel: &mut Selection) {
+    sel.sel_scale.clear();
+    sel.sel_scale.resize(m, 1.0);
+    sel.keep.clear();
+    sel.keep.resize(m, 0.0);
+    sel.indices.clear();
+    sel.indices.extend(0..m);
 }
 
 /// Apply `policy` to `scores`, selecting `k` of `m = scores.len()` rows.
@@ -152,63 +189,90 @@ pub fn select(
     rng: &mut Rng,
 ) -> Selection {
     let m = scores.len();
+    let mut sel = Selection::with_capacity(m);
+    let mut scratch = SelectScratch::new();
+    select_into(policy, scores, k, memory, rng, &mut scratch, &mut sel);
+    sel
+}
+
+/// [`select`] into a reusable [`Selection`] + [`SelectScratch`] — the
+/// identical decision (same RNG consumption, same indices/scales/keep)
+/// with zero heap allocations once the buffers have seen a batch of this
+/// size. This is the form the workspace-resident training step calls.
+pub fn select_into(
+    policy: Policy,
+    scores: &[f32],
+    k: usize,
+    memory: bool,
+    rng: &mut Rng,
+    scratch: &mut SelectScratch,
+    sel: &mut Selection,
+) {
+    let m = scores.len();
     assert!(k <= m, "k={k} > m={m}");
     if policy == Policy::Exact {
-        return select_exact(m);
+        select_exact_into(m, sel);
+        return;
     }
-    let mut sel_scale = vec![0.0f32; m];
-    let mut indices: Vec<usize> = match policy {
+    sel.sel_scale.clear();
+    sel.sel_scale.resize(m, 0.0);
+    sel.indices.clear();
+    match policy {
         Policy::Exact => unreachable!("handled above"),
-        Policy::TopK => top_k_indices(scores, k),
-        Policy::RandK => rng.sample_without_replacement(m, k),
-        Policy::WeightedK => rng.weighted_sample_without_replacement(scores, k),
+        Policy::TopK => top_k_indices_into(scores, k, &mut scratch.idx, &mut sel.indices),
+        Policy::RandK => {
+            rng.sample_without_replacement_into(m, k, &mut scratch.idx, &mut sel.indices)
+        }
+        Policy::WeightedK => rng.weighted_sample_without_replacement_into(
+            scores,
+            k,
+            &mut scratch.keys,
+            &mut sel.indices,
+        ),
         Policy::WeightedKReplacement => {
             let total: f64 = scores.iter().map(|&s| s.max(0.0) as f64).sum();
-            let draws = rng.weighted_sample_with_replacement(scores, k);
-            let mut counts = vec![0u32; m];
-            for &i in &draws {
-                counts[i] += 1;
+            rng.weighted_sample_with_replacement_into(
+                scores,
+                k,
+                &mut scratch.cdf,
+                &mut scratch.draws,
+            );
+            scratch.counts.clear();
+            scratch.counts.resize(m, 0);
+            for &i in &scratch.draws {
+                scratch.counts[i] += 1;
             }
-            let mut idx = Vec::new();
-            for (i, &c) in counts.iter().enumerate() {
+            for (i, &c) in scratch.counts.iter().enumerate() {
                 if c > 0 {
                     let p = (scores[i].max(0.0) as f64 / total).max(1e-30);
-                    sel_scale[i] = (c as f64 / (p * k as f64)) as f32;
-                    idx.push(i);
+                    sel.sel_scale[i] = (c as f64 / (p * k as f64)) as f32;
+                    sel.indices.push(i);
                 }
             }
-            // scales already set; mark keep below and return
-            let keep = keep_vector(&idx, m, memory, policy);
-            return Selection {
-                sel_scale,
-                keep,
-                indices: idx,
-            };
+            // scales already set; mark keep and return
+            keep_vector_into(&sel.indices, m, memory, policy, &mut sel.keep);
+            return;
         }
     };
     // pin the accumulation order (see `Selection::indices`); which rows
     // were drawn is already decided, so this never changes the sample
-    indices.sort_unstable();
-    for &i in &indices {
-        sel_scale[i] = 1.0;
+    sel.indices.sort_unstable();
+    for &i in &sel.indices {
+        sel.sel_scale[i] = 1.0;
     }
-    let keep = keep_vector(&indices, m, memory, policy);
-    Selection {
-        sel_scale,
-        keep,
-        indices,
-    }
+    keep_vector_into(&sel.indices, m, memory, policy, &mut sel.keep);
 }
 
-fn keep_vector(indices: &[usize], m: usize, memory: bool, policy: Policy) -> Vec<f32> {
+fn keep_vector_into(indices: &[usize], m: usize, memory: bool, policy: Policy, keep: &mut Vec<f32>) {
+    keep.clear();
     if !memory || policy == Policy::Exact {
-        return vec![0.0; m];
+        keep.resize(m, 0.0);
+        return;
     }
-    let mut keep = vec![1.0f32; m];
+    keep.resize(m, 1.0);
     for &i in indices {
         keep[i] = 0.0;
     }
-    keep
 }
 
 /// Indices of the K largest scores, **sorted ascending**. Uses
@@ -223,24 +287,36 @@ fn keep_vector(indices: &[usize], m: usize, memory: bool, policy: Policy) -> Vec
 /// per-shard filtering in `exec`) is reproducible across shard
 /// boundaries and platforms.
 pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut scratch = Vec::new();
+    let mut out = Vec::new();
+    top_k_indices_into(scores, k, &mut scratch, &mut out);
+    out
+}
+
+/// [`top_k_indices`] into reusable buffers — same selected set, same
+/// ascending order, no allocation at capacity (`select_nth_unstable` and
+/// `sort_unstable` are both in-place).
+pub fn top_k_indices_into(scores: &[f32], k: usize, scratch: &mut Vec<usize>, out: &mut Vec<usize>) {
     let m = scores.len();
+    out.clear();
     if k == 0 {
-        return Vec::new();
+        return;
     }
     if k >= m {
-        return (0..m).collect();
+        out.extend(0..m);
+        return;
     }
-    let mut idx: Vec<usize> = (0..m).collect();
-    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+    scratch.clear();
+    scratch.extend(0..m);
+    scratch.select_nth_unstable_by(k - 1, |&a, &b| {
         scores[b]
             .partial_cmp(&scores[a])
             .unwrap_or(std::cmp::Ordering::Equal)
             // tie-break on index: total order ⇒ the selected set is unique
             .then(a.cmp(&b))
     });
-    idx.truncate(k);
-    idx.sort_unstable();
-    idx
+    out.extend_from_slice(&scratch[..k]);
+    out.sort_unstable();
 }
 
 #[cfg(test)]

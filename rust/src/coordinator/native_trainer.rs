@@ -16,7 +16,7 @@ use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::experiment::Trainer;
 use crate::exec::Executor;
 use crate::tensor::{rng::Rng, Matrix};
-use crate::train::{self, Dense, Graph, GraphFwd, GraphState};
+use crate::train::{self, Dense, Graph, GraphState, GraphWorkspace};
 
 /// Native layer-graph trainer. Executes through the `exec` subsystem
 /// with `cfg.threads` workers — `threads = 1` is the inline serial path,
@@ -28,9 +28,12 @@ pub struct NativeTrainer {
     /// Persistent worker pool, one per trainer (dispatch reuses warm
     /// threads across every step of the run).
     exec: Executor,
-    /// Cached fwd_score output between `scores` and `apply` (the trait
-    /// splits the step so the caller owns the policy decisions).
-    pending: Option<GraphFwd>,
+    /// Resident step workspace (§Perf pass): the trace, foldings,
+    /// scores and shard partials of the pending `fwd_score` live here
+    /// between the trait's two phases (the workspace's internal pairing
+    /// marker enforces the fwd_score→apply ordering), and steady-state
+    /// steps allocate only the trait-mandated score clones.
+    ws: GraphWorkspace,
 }
 
 impl NativeTrainer {
@@ -48,12 +51,13 @@ impl NativeTrainer {
         let graph = Graph::new(layers, cfg.task.loss());
         let cfgs: Vec<_> = plan.iter().map(|rl| rl.cfg).collect();
         let state = GraphState::from_configs(&graph, cfg.m(), &cfgs);
+        let ws = GraphWorkspace::new(&graph, cfg.m());
         Ok(NativeTrainer {
             graph,
             state,
             eta: cfg.lr,
             exec: Executor::new(cfg.threads),
-            pending: None,
+            ws,
         })
     }
 }
@@ -64,26 +68,28 @@ impl Trainer for NativeTrainer {
     }
 
     fn fwd_score(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, Vec<Vec<f32>>)> {
-        let fwd = train::fwd_score(&self.graph, &self.state, x, y, self.eta, &self.exec);
-        let loss = fwd.loss;
-        let scores = fwd.layers.iter().map(|l| l.scores.clone()).collect();
-        self.pending = Some(fwd);
+        let (loss, _acc) =
+            train::fwd_score(&self.graph, &self.state, x, y, self.eta, &self.exec, &mut self.ws);
+        // the trait hands scores to the caller by value; Exact-policy
+        // layers never compute scores (their workspace vector is stale)
+        // and never read them either — see train::workspace
+        let scores = (0..self.graph.layers.len())
+            .map(|li| self.ws.scores(li).to_vec())
+            .collect();
         Ok((loss, scores))
     }
 
     fn apply(&mut self, sels: &[Selection]) -> Result<f32> {
-        let fwd = self
-            .pending
-            .take()
-            .expect("apply called without fwd_score");
+        // panics "apply called without fwd_score" via the workspace's
+        // pairing marker if the phases are misused
         let out = train::apply(
             &mut self.graph,
             &mut self.state,
-            &fwd,
             sels,
             self.eta,
             &self.exec,
             true,
+            &mut self.ws,
         );
         Ok(out.wstar_fro)
     }

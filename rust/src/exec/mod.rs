@@ -8,15 +8,19 @@
 //!   blocks, a pure function of the batch size and *never* of the thread
 //!   count. This is the determinism keystone: every thread count executes
 //!   the same float ops with the same grouping;
-//! * [`pool`] — [`ExecPool`], a persistent scoped-dispatch pool built on
-//!   the one generalized [`util::pool::TaskPool`](crate::util::pool::TaskPool)
-//!   (shared with the serve scheduler), so per-step dispatch costs a
-//!   condvar wake, not a thread spawn;
+//! * [`pool`] — [`ExecPool`], a persistent scoped-dispatch pool with a
+//!   single epoch-checked job slot, so per-step dispatch costs a condvar
+//!   wake — not a thread spawn, and (§Perf pass) not a single heap
+//!   allocation; the serve scheduler keeps the separate generalized
+//!   [`util::pool::TaskPool`](crate::util::pool::TaskPool) for its
+//!   boxed long-lived jobs;
 //! * [`shard`] — row-range kernels (forward, memory folding, scores,
 //!   column sums, retention) writing into disjoint borrowed row blocks;
 //!   each is bit-identical per row to its serial twin in `tensor::ops`;
-//! * [`reduce`] — fixed ascending-shard-order combination of partials
-//!   (losses, bias grads, partial AOP outer products), single-threaded.
+//! * [`reduce`] — fixed ascending-shard-order scalar reducers (losses,
+//!   counts), single-threaded; the per-step vector/matrix reductions
+//!   run as in-place fixed-order loops over workspace buffers in
+//!   `train::step` (§Perf pass).
 //!
 //! What stays on the coordinator thread: the policy decision. Shards
 //! compute *scores*; `out_K` selection happens once, globally, from a
@@ -97,6 +101,11 @@ impl Executor {
 
     /// Run `f(shard, rows)` for every shard and collect the returns in
     /// shard order (ready for `exec::reduce`).
+    ///
+    /// Allocates the result slots per call — fine for epoch-level work
+    /// (evaluation, sweeps); the per-step training hot path uses
+    /// [`Executor::run_each`] with workspace-resident partial buffers
+    /// instead, keeping steady-state steps allocation-free.
     pub fn map<R, F>(&self, plan: &ShardPlan, f: F) -> Vec<R>
     where
         R: Send,

@@ -1,44 +1,118 @@
 //! Persistent worker pool for scoped shard dispatch.
 //!
-//! [`ExecPool`] bridges the gap between the long-lived
-//! [`util::pool::TaskPool`](crate::util::pool::TaskPool) (whose tasks
-//! must be `'static`) and per-step shard closures that borrow the step's
-//! matrices: a [`ShardJob`] carries a lifetime-erased pointer to the
-//! caller's closure plus a completion latch, and [`ExecPool::run`] blocks
-//! until every shard has finished — so the borrow provably outlives every
-//! use. This is the same contract `std::thread::scope` provides, but
-//! without respawning OS threads on every dispatch (a training step
-//! dispatches twice — `fwd_score` and `apply` — and thread spawn latency
-//! would eat the speedup on the paper's small shapes).
+//! [`ExecPool`] owns `threads - 1` dedicated workers parked on a condvar
+//! and a single *job slot*: [`ExecPool::run`] installs a lifetime-erased
+//! pointer to the caller's closure plus the shard count, wakes the
+//! workers, participates in the drain itself, and blocks until every
+//! shard has completed — so the borrow provably outlives every use. This
+//! is the same contract `std::thread::scope` provides, but without
+//! respawning OS threads on every dispatch, and (unlike the previous
+//! `TaskPool`-backed design) **without any per-dispatch heap
+//! allocation**: no `Arc`'d job, no boxed runner tasks — a training step
+//! dispatches a dozen times and the steady state must stay at zero
+//! allocations (§Perf pass, asserted by `benches/kernels.rs`).
 //!
-//! Shards are claimed dynamically (atomic counter), so which *thread*
-//! runs which shard varies run to run; determinism comes from the shard
-//! *grid* being fixed (`exec::plan`) and results being combined in shard
-//! order (`exec::reduce`), never from scheduling.
+//! Shard indices are claimed under the job mutex (a shard is ≥16 rows of
+//! real math, so one uncontended lock per claim is noise), which makes
+//! the claim and the epoch check atomic: a worker that wakes late —
+//! even after the job it slept through has been fully drained and a new
+//! one installed — can never claim an index against a stale closure
+//! pointer. Which *thread* runs which shard still varies run to run;
+//! determinism comes from the shard *grid* being fixed (`exec::plan`)
+//! and results being combined in shard order (`exec::reduce`), never
+//! from scheduling.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::panic::AssertUnwindSafe;
 use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
-use crate::util::pool::TaskPool;
+/// Lifetime-erased shard closure pointer. Only dereferenced for indices
+/// claimed while the installing [`ExecPool::run`] call is still blocked
+/// (see the safety argument there), and the `Sync` bound on the pointee
+/// makes shared calls sound.
+#[derive(Clone, Copy)]
+struct RawFn(*const (dyn Fn(usize) + Sync + 'static));
+
+// SAFETY: the pointer is produced from a `&(dyn Fn(usize) + Sync)` whose
+// referent outlives every dereference (ExecPool::run blocks until
+// `done == n`), and the pointee is `Sync`, so sharing the pointer across
+// worker threads is sound.
+unsafe impl Send for RawFn {}
+
+/// The single job slot all dispatches go through, guarded by one mutex.
+struct JobState {
+    /// Monotonic dispatch counter; a worker's claims are valid only while
+    /// its snapshot matches.
+    epoch: u64,
+    /// The active closure, `None` between dispatches.
+    f: Option<RawFn>,
+    /// Shard count of the active job.
+    n: usize,
+    /// Next unclaimed shard index.
+    next: usize,
+    /// Completed shard count.
+    done: usize,
+    /// A shard closure panicked (re-raised by `run` after the drain).
+    panicked: bool,
+    /// Pool is shutting down; workers exit once no work remains.
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<JobState>,
+    /// Workers wait here for a new job (or shutdown).
+    work_cv: Condvar,
+    /// The dispatching caller waits here for `done == n`.
+    done_cv: Condvar,
+}
 
 /// Worker pool executing indexed shard tasks with `threads` total compute
 /// threads (the calling thread participates; `threads - 1` pool workers
 /// are spawned). `threads <= 1` spawns nothing and runs inline — the
 /// serial path is literally the same code minus the dispatch.
 pub struct ExecPool {
-    workers: Option<TaskPool>,
+    shared: Option<Arc<Shared>>,
+    handles: Vec<JoinHandle<()>>,
     threads: usize,
 }
 
 impl ExecPool {
     pub fn new(threads: usize) -> ExecPool {
         let threads = threads.max(1);
-        let workers = if threads > 1 {
-            Some(TaskPool::new("exec", threads - 1))
-        } else {
-            None
-        };
-        ExecPool { workers, threads }
+        if threads == 1 {
+            return ExecPool {
+                shared: None,
+                handles: Vec::new(),
+                threads,
+            };
+        }
+        let shared = Arc::new(Shared {
+            state: Mutex::new(JobState {
+                epoch: 0,
+                f: None,
+                n: 0,
+                next: 0,
+                done: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..threads - 1)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("exec-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawning exec worker")
+            })
+            .collect();
+        ExecPool {
+            shared: Some(shared),
+            handles,
+            threads,
+        }
     }
 
     pub fn threads(&self) -> usize {
@@ -48,12 +122,12 @@ impl ExecPool {
     /// Run `f(i)` for every `i in 0..n_tasks`, potentially in parallel;
     /// returns only after every invocation has completed. Each index is
     /// claimed exactly once. A panic inside `f` is re-raised here after
-    /// the remaining shards finish.
+    /// the remaining shards finish. Allocation-free in steady state.
     pub fn run(&self, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
         if n_tasks == 0 {
             return;
         }
-        let Some(pool) = &self.workers else {
+        let Some(sh) = &self.shared else {
             for i in 0..n_tasks {
                 f(i);
             }
@@ -63,120 +137,117 @@ impl ExecPool {
             f(0);
             return;
         }
-        let job = Arc::new(ShardJob::new(f, n_tasks));
-        // one runner per spare thread, never more than could claim a task
-        let runners = (self.threads - 1).min(n_tasks - 1);
-        for _ in 0..runners {
-            let j = job.clone();
-            // submit can only fail after shutdown; the caller's drain
-            // below completes every task itself in that case
-            let _ = pool.submit(move || j.drain());
-        }
+        // SAFETY (lifetime erasure): this function does not return until
+        // `done == n_tasks` (the wait below runs even if the caller's own
+        // drain panicked — see `drain`'s catch), so the borrow outlives
+        // every dereference; stale workers cannot claim against it after
+        // that because claims are epoch-checked under the same lock that
+        // installs jobs.
+        let raw = RawFn(unsafe {
+            std::mem::transmute::<
+                *const (dyn Fn(usize) + Sync),
+                *const (dyn Fn(usize) + Sync + 'static),
+            >(f as *const _)
+        });
+        let epoch;
         {
-            // Workers hold a pointer into this stack frame: we must not
-            // return — or unwind past here — before every shard is done.
-            // The guard waits on drop, so even a panic inside the
-            // caller-thread drain below parks until the workers finish.
-            let _wait = WaitGuard { job: &job };
-            job.drain(); // the calling thread works too
+            let mut st = sh.state.lock().unwrap();
+            // Concurrent dispatches on a shared Executor serialize here:
+            // the slot holds one job at a time, and it is freed (f =
+            // None, work_cv notified) only after every shard of the
+            // previous dispatch completed — so no dispatch can clobber
+            // another's job or steal its completion count.
+            while st.f.is_some() {
+                st = sh.work_cv.wait(st).unwrap();
+            }
+            st.epoch += 1;
+            epoch = st.epoch;
+            st.f = Some(raw);
+            st.n = n_tasks;
+            st.next = 0;
+            st.done = 0;
+            st.panicked = false;
         }
-        if job.panicked.load(Ordering::SeqCst) {
+        sh.work_cv.notify_all();
+        // the calling thread works too
+        drain(sh, raw, epoch);
+        // wait for the stragglers, then free the slot (waking any
+        // dispatcher queued on it — workers woken spuriously re-check
+        // their condition and go back to sleep)
+        let panicked = {
+            let mut st = sh.state.lock().unwrap();
+            while st.done < st.n {
+                st = sh.done_cv.wait(st).unwrap();
+            }
+            st.f = None;
+            st.panicked
+        };
+        sh.work_cv.notify_all();
+        if panicked {
             panic!("exec shard task panicked");
         }
     }
 }
 
-/// One dispatched batch of shard tasks. Holds a lifetime-erased pointer
-/// to the caller's closure; see the safety argument on [`ShardJob::new`].
-struct ShardJob {
-    /// Points at the caller's `&dyn Fn(usize) + Sync`, valid until
-    /// `wait()` observes `done == n`.
-    f: *const (dyn Fn(usize) + Sync + 'static),
-    n: usize,
-    next: AtomicUsize,
-    done: Mutex<usize>,
-    cv: Condvar,
-    panicked: AtomicBool,
-}
-
-// SAFETY: the raw pointer is only dereferenced by `drain`, and only for
-// claimed indices `< n`; `ExecPool::run` keeps the pointee alive (and the
-// `Sync` bound makes shared calls sound) until `wait()` confirms all `n`
-// completions. Runners that outlive the batch (queued but executed after
-// the tasks ran out) observe `next >= n` and never touch the pointer.
-unsafe impl Send for ShardJob {}
-unsafe impl Sync for ShardJob {}
-
-impl ShardJob {
-    fn new(f: &(dyn Fn(usize) + Sync), n: usize) -> ShardJob {
-        // SAFETY (lifetime erasure): `ExecPool::run` does not return until
-        // every task completed, so the borrow outlives every dereference.
-        let f = unsafe {
-            std::mem::transmute::<
-                *const (dyn Fn(usize) + Sync),
-                *const (dyn Fn(usize) + Sync + 'static),
-            >(f as *const _)
-        };
-        ShardJob {
-            f,
-            n,
-            next: AtomicUsize::new(0),
-            done: Mutex::new(0),
-            cv: Condvar::new(),
-            panicked: AtomicBool::new(false),
-        }
-    }
-
-    /// Claim and execute tasks until none remain.
-    fn drain(&self) {
-        loop {
-            let i = self.next.fetch_add(1, Ordering::Relaxed);
-            if i >= self.n {
+/// Claim-and-execute loop shared by the caller and the workers. Claims
+/// happen under the job lock and are epoch-checked, so a participant can
+/// never execute an index of a job it did not snapshot.
+fn drain(sh: &Shared, raw: RawFn, epoch: u64) {
+    loop {
+        let i = {
+            let mut st = sh.state.lock().unwrap();
+            if st.epoch != epoch || st.next >= st.n {
                 return;
             }
-            // the guard records completion even if `f` unwinds, so
-            // `wait()` can never deadlock on a panicked shard
-            let guard = CompletionGuard { job: self };
-            // SAFETY: i < n, so the batch is still live (see struct docs).
-            let f = unsafe { &*self.f };
-            f(i);
-            drop(guard);
+            let i = st.next;
+            st.next += 1;
+            i
+        };
+        // SAFETY: `i` was claimed while `epoch` was current, so the
+        // installing `run` is still blocked and the pointee is alive.
+        let f = unsafe { &*raw.0 };
+        // catch so one bad shard cannot leave `done` short and deadlock
+        // the dispatcher; `run` re-raises after the drain completes.
+        let ok = std::panic::catch_unwind(AssertUnwindSafe(|| f(i))).is_ok();
+        let mut st = sh.state.lock().unwrap();
+        if !ok {
+            st.panicked = true;
         }
-    }
-
-    fn wait(&self) {
-        let mut done = self.done.lock().unwrap();
-        while *done < self.n {
-            done = self.cv.wait(done).unwrap();
+        st.done += 1;
+        if st.done == st.n {
+            sh.done_cv.notify_all();
         }
     }
 }
 
-/// Blocks on drop until every task of the batch completed — the borrow
-/// safety backstop of [`ExecPool::run`].
-struct WaitGuard<'a> {
-    job: &'a ShardJob,
+fn worker_loop(sh: &Shared) {
+    loop {
+        let (raw, epoch) = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                if let Some(raw) = st.f {
+                    if st.next < st.n {
+                        break (raw, st.epoch);
+                    }
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = sh.work_cv.wait(st).unwrap();
+            }
+        };
+        drain(sh, raw, epoch);
+    }
 }
 
-impl Drop for WaitGuard<'_> {
+impl Drop for ExecPool {
     fn drop(&mut self) {
-        self.job.wait();
-    }
-}
-
-struct CompletionGuard<'a> {
-    job: &'a ShardJob,
-}
-
-impl Drop for CompletionGuard<'_> {
-    fn drop(&mut self) {
-        if std::thread::panicking() {
-            self.job.panicked.store(true, Ordering::SeqCst);
+        if let Some(sh) = &self.shared {
+            sh.state.lock().unwrap().shutdown = true;
+            sh.work_cv.notify_all();
         }
-        let mut done = self.job.done.lock().unwrap();
-        *done += 1;
-        if *done == self.job.n {
-            self.job.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
         }
     }
 }
@@ -184,6 +255,7 @@ impl Drop for CompletionGuard<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn serial_pool_runs_inline_in_order() {
@@ -249,7 +321,7 @@ mod tests {
     }
 
     #[test]
-    #[should_panic] // message depends on which thread hit the bad shard
+    #[should_panic(expected = "exec shard task panicked")]
     fn shard_panic_propagates_to_caller() {
         let pool = ExecPool::new(2);
         pool.run(8, &|i| {
@@ -257,5 +329,49 @@ mod tests {
                 panic!("shard blew up");
             }
         });
+    }
+
+    #[test]
+    fn concurrent_dispatches_on_shared_pool_serialize() {
+        // two threads hammering one pool: the job slot must serialize
+        // them so every dispatch runs all of its own shards
+        let pool = ExecPool::new(3);
+        let a = AtomicUsize::new(0);
+        let b = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for _ in 0..25 {
+                    pool.run(8, &|i| {
+                        a.fetch_add(i + 1, Ordering::Relaxed);
+                    });
+                }
+            });
+            for _ in 0..25 {
+                pool.run(8, &|i| {
+                    b.fetch_add(i + 1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(a.load(Ordering::Relaxed), 25 * 36);
+        assert_eq!(b.load(Ordering::Relaxed), 25 * 36);
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_dispatch() {
+        // the job slot must be cleanly recycled after a panicked run
+        let pool = ExecPool::new(3);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(6, &|i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            })
+        }));
+        assert!(r.is_err());
+        let sum = AtomicUsize::new(0);
+        pool.run(6, &|i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 15);
     }
 }

@@ -4,10 +4,15 @@
 //! part of its definition. Everything here combines shard partials in
 //! ascending shard order on a single thread — together with the
 //! thread-count-independent grid of `exec::plan`, that makes every
-//! reduced quantity (losses, bias gradients, AOP weight updates) a pure
-//! function of the inputs, identical at any parallelism.
-
-use crate::tensor::Matrix;
+//! reduced quantity a pure function of the inputs, identical at any
+//! parallelism.
+//!
+//! Since the §Perf-pass workspace refactor, the *per-step* reductions
+//! (bias gradients, AOP weight partials) run as in-place fixed-order
+//! loops over workspace buffers inside `train::step` — the historical
+//! `sum_vecs`/`sum_matrices` helpers they replaced are gone so the
+//! determinism-critical reduction has exactly one live definition.
+//! What remains here are the scalar reducers the evaluation path uses.
 
 /// Sum scalars in iteration (= shard) order.
 pub fn sum_f32(parts: impl IntoIterator<Item = f32>) -> f32 {
@@ -23,35 +28,6 @@ pub fn sum_usize(parts: impl IntoIterator<Item = usize>) -> usize {
     parts.into_iter().sum()
 }
 
-/// Elementwise-sum equal-length vectors in iteration (= shard) order.
-pub fn sum_vecs<'a>(len: usize, parts: impl IntoIterator<Item = &'a [f32]>) -> Vec<f32> {
-    let mut acc = vec![0.0f32; len];
-    for p in parts {
-        assert_eq!(p.len(), len, "partial length mismatch");
-        for (a, &v) in acc.iter_mut().zip(p.iter()) {
-            *a += v;
-        }
-    }
-    acc
-}
-
-/// Sum optional shard-partial matrices in iteration (= shard) order into
-/// an `rows × cols` accumulator. `None` marks a shard with no
-/// contribution (e.g. no selected rows) and is skipped — whether a shard
-/// is `None` depends only on the selection, never on scheduling, so
-/// skipping is deterministic too.
-pub fn sum_matrices(
-    rows: usize,
-    cols: usize,
-    parts: impl IntoIterator<Item = Option<Matrix>>,
-) -> Matrix {
-    let mut acc = Matrix::zeros(rows, cols);
-    for p in parts.into_iter().flatten() {
-        acc.axpy(1.0, &p);
-    }
-    acc
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,34 +40,7 @@ mod tests {
     }
 
     #[test]
-    fn vec_sum_matches_manual() {
-        let a = [1.0f32, 2.0];
-        let b = [10.0f32, 20.0];
-        let c = [100.0f32, 200.0];
-        let s = sum_vecs(2, [&a[..], &b[..], &c[..]]);
-        assert_eq!(s, vec![111.0, 222.0]);
-    }
-
-    #[test]
-    fn matrix_sum_skips_none_deterministically() {
-        let m1 = Matrix::full(2, 2, 1.0);
-        let m2 = Matrix::full(2, 2, 2.0);
-        let s = sum_matrices(2, 2, vec![Some(m1.clone()), None, Some(m2.clone())]);
-        assert_eq!(s, m1.add(&m2));
-        let empty = sum_matrices(2, 2, vec![None, None]);
-        assert_eq!(empty, Matrix::zeros(2, 2));
-    }
-
-    #[test]
     fn counts_sum() {
         assert_eq!(sum_usize([3usize, 4, 5]), 12);
-    }
-
-    #[test]
-    #[should_panic(expected = "partial length mismatch")]
-    fn vec_sum_rejects_ragged_partials() {
-        let a = [1.0f32];
-        let b = [1.0f32, 2.0];
-        sum_vecs(1, [&a[..], &b[..]]);
     }
 }

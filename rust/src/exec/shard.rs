@@ -2,24 +2,52 @@
 //!
 //! Every helper here operates on a contiguous row range of a row-major
 //! matrix, reading shared inputs and writing into a borrowed output block
-//! — the building blocks `AopEngine`/`Mlp` assemble into sharded
+//! — the building blocks the training core assembles into sharded
 //! `fwd_score`/`apply` phases. Each kernel performs exactly the same
 //! per-element floating-point operations as its whole-matrix twin in
-//! `tensor::ops`, so a shard's rows are bit-identical to the rows the
-//! serial kernel would have produced (asserted by the tests below).
+//! `tensor::ops` (and follows the same 8-lane split-loop contract — see
+//! the `tensor::ops` module docs), so a shard's rows are bit-identical to
+//! the rows the serial kernel would have produced (asserted by the tests
+//! below).
 
+use std::marker::PhantomData;
 use std::ops::Range;
-use std::sync::{Mutex, MutexGuard};
 
 use crate::exec::plan::ShardPlan;
 use crate::tensor::{ops, Matrix};
 
 /// Disjoint per-shard mutable views over one output buffer, indexable by
-/// shard id from concurrent shard tasks. Built on `chunks_mut`, so the
-/// disjointness is checked by the compiler, not by `unsafe`.
+/// shard id from concurrent shard tasks.
+///
+/// Allocation-free (§Perf pass): the splitter is a stride computation
+/// over a raw pointer, not a `Vec<Mutex<&mut [f32]>>` — constructing one
+/// per dispatch must not allocate, because a steady-state training step
+/// constructs a dozen of them. The price is that handing out `&mut`
+/// blocks through a shared `&self` is now an `unsafe fn` with a caller
+/// contract instead of a compiler-checked `chunks_mut`:
+///
+/// > **Safety contract of [`RowBlocks::block`]** — for a given `i`, at
+/// > most one returned block may be live at a time. The intended caller
+/// > is a shard closure under `Executor::run_each`/`map`, whose dispatch
+/// > contract (`exec::pool`) claims every shard index exactly once per
+/// > dispatch — each closure invocation touches only its own `i`, so
+/// > blocks are never aliased. (Sequential test loops that take one
+/// > block at a time satisfy the contract trivially.)
 pub struct RowBlocks<'a> {
-    blocks: Vec<Mutex<&'a mut [f32]>>,
+    ptr: *mut f32,
+    len: usize,
+    /// f32s per block (`granularity * per_row`); the last block may be
+    /// short.
+    stride: usize,
+    n_blocks: usize,
+    _borrow: PhantomData<&'a mut [f32]>,
 }
+
+// SAFETY: RowBlocks hands out disjoint sub-slices of one exclusively
+// borrowed buffer (see the `block` contract above); the pointer itself
+// carries no thread affinity.
+unsafe impl Send for RowBlocks<'_> {}
+unsafe impl Sync for RowBlocks<'_> {}
 
 impl<'a> RowBlocks<'a> {
     /// Split a matrix into the plan's row blocks (block `i` holds rows
@@ -34,26 +62,40 @@ impl<'a> RowBlocks<'a> {
     pub fn of_slice(v: &'a mut [f32], per_row: usize, plan: &ShardPlan) -> RowBlocks<'a> {
         assert!(per_row > 0, "per_row must be positive");
         assert_eq!(v.len(), plan.rows() * per_row, "buffer vs plan size");
-        let blocks = v
-            .chunks_mut(plan.granularity() * per_row)
-            .map(Mutex::new)
-            .collect();
-        RowBlocks { blocks }
+        RowBlocks {
+            ptr: v.as_mut_ptr(),
+            len: v.len(),
+            stride: plan.granularity() * per_row,
+            n_blocks: plan.len(),
+            _borrow: PhantomData,
+        }
     }
 
-    /// Exclusive access to shard `i`'s block. Uncontended by design —
-    /// each shard task locks only its own index, the `Mutex` exists to
-    /// hand `&mut` access through a shared `&self`.
-    pub fn lock(&self, i: usize) -> MutexGuard<'_, &'a mut [f32]> {
-        self.blocks[i].lock().unwrap()
+    /// Exclusive access to shard `i`'s block.
+    ///
+    /// # Safety
+    ///
+    /// At most one live block per index `i` (see the type-level
+    /// contract). Distinct indices are disjoint by construction, so
+    /// concurrent access to *different* indices is always sound.
+    #[allow(clippy::mut_from_ref)] // &mut from & is the point: disjoint blocks behind one borrow
+    pub unsafe fn block(&self, i: usize) -> &'a mut [f32] {
+        assert!(i < self.n_blocks, "block {i} out of {}", self.n_blocks);
+        let start = i * self.stride;
+        let end = (start + self.stride).min(self.len);
+        // SAFETY: `start..end` is in-bounds and disjoint from every other
+        // index's range; the caller guarantees `i` is not aliased and the
+        // PhantomData borrow keeps the underlying buffer alive and
+        // exclusively reserved for this splitter.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), end - start) }
     }
 
     pub fn len(&self) -> usize {
-        self.blocks.len()
+        self.n_blocks
     }
 
     pub fn is_empty(&self) -> bool {
-        self.blocks.is_empty()
+        self.n_blocks == 0
     }
 }
 
@@ -66,10 +108,33 @@ pub fn rows_of(m: &Matrix, rows: Range<usize>) -> &[f32] {
 /// Forward rows: `out[r] = x[r] @ w + b` for `r` in `rows` (`out` is the
 /// `rows.len() × w.cols()` block). Same math as
 /// `x.matmul(w).add_row_broadcast(b)` restricted to the range.
+///
+/// Narrow-B shapes transpose `w` on every call; per-step hot paths use
+/// [`forward_rows_bt`] with the layer's cached transpose instead.
 pub fn forward_rows(x: &Matrix, w: &Matrix, b: &[f32], rows: Range<usize>, out: &mut [f32]) {
-    let p = w.cols();
-    assert_eq!(b.len(), p);
     ops::matmul_rows(x, w, rows, out);
+    add_bias_rows(b, w.cols(), out);
+}
+
+/// [`forward_rows`] with a caller-cached `w_t = w.transpose()` — bitwise
+/// identical, but the narrow-B path reads the cache instead of
+/// transposing per shard per step.
+pub fn forward_rows_bt(
+    x: &Matrix,
+    w: &Matrix,
+    w_t: &Matrix,
+    b: &[f32],
+    rows: Range<usize>,
+    out: &mut [f32],
+) {
+    ops::matmul_rows_bt(x, w, w_t, rows, out);
+    add_bias_rows(b, w.cols(), out);
+}
+
+/// Broadcast bias add over a `rows × p` block, 8-lane body per row.
+#[inline]
+fn add_bias_rows(b: &[f32], p: usize, out: &mut [f32]) {
+    assert_eq!(b.len(), p);
     for orow in out.chunks_exact_mut(p) {
         for (v, &bias) in orow.iter_mut().zip(b.iter()) {
             *v += bias;
@@ -85,7 +150,8 @@ pub fn fold_rows(src: &Matrix, mem: &Matrix, scale: f32, rows: Range<usize>, out
 }
 
 /// [`fold_rows`] where the fresh term is already a shard-local block
-/// (e.g. the just-computed loss-gradient rows).
+/// (e.g. the just-computed loss-gradient rows). 8-lane split + tail —
+/// elementwise, so the split changes no bits.
 pub fn fold_block(
     src_block: &[f32],
     mem: &Matrix,
@@ -96,7 +162,20 @@ pub fn fold_block(
     let mem_block = rows_of(mem, rows);
     assert_eq!(src_block.len(), out.len());
     assert_eq!(mem_block.len(), out.len());
-    for ((o, &s), &m) in out.iter_mut().zip(src_block.iter()).zip(mem_block.iter()) {
+    let split = out.len() - out.len() % ops::LANES;
+    let (o8, o_tail) = out.split_at_mut(split);
+    let (s8, s_tail) = src_block.split_at(split);
+    let (m8, m_tail) = mem_block.split_at(split);
+    for ((oc, sc), mc) in o8
+        .chunks_exact_mut(ops::LANES)
+        .zip(s8.chunks_exact(ops::LANES))
+        .zip(m8.chunks_exact(ops::LANES))
+    {
+        for l in 0..ops::LANES {
+            oc[l] = scale * sc[l] + mc[l];
+        }
+    }
+    for ((o, &s), &m) in o_tail.iter_mut().zip(s_tail.iter()).zip(m_tail.iter()) {
         *o = scale * s + m;
     }
 }
@@ -107,14 +186,25 @@ pub fn fold_block(
 pub fn scale_rows(src: &Matrix, scale: f32, rows: Range<usize>, out: &mut [f32]) {
     let block = rows_of(src, rows);
     assert_eq!(block.len(), out.len());
-    for (o, &s) in out.iter_mut().zip(block.iter()) {
+    let split = out.len() - out.len() % ops::LANES;
+    let (o8, o_tail) = out.split_at_mut(split);
+    let (s8, s_tail) = block.split_at(split);
+    for (oc, sc) in o8
+        .chunks_exact_mut(ops::LANES)
+        .zip(s8.chunks_exact(ops::LANES))
+    {
+        for l in 0..ops::LANES {
+            oc[l] = scale * sc[l];
+        }
+    }
+    for (o, &s) in o_tail.iter_mut().zip(s_tail.iter()) {
         *o = scale * s;
     }
 }
 
 /// Policy scores for a shard: `out[r] = ||xhat[r]|| * ||ghat[r]||` over
 /// the block-local rows (`xhat` is `rows × n`, `ghat` is `rows × p`).
-/// Same per-row ops as `ops::norm_product_scores`.
+/// Same per-row ops as `ops::norm_product_scores` (8-lane dot).
 pub fn score_rows(xhat: &[f32], ghat: &[f32], n: usize, p: usize, out: &mut [f32]) {
     let rows = out.len();
     assert_eq!(xhat.len(), rows * n);
@@ -129,16 +219,26 @@ pub fn score_rows(xhat: &[f32], ghat: &[f32], n: usize, p: usize, out: &mut [f32
 }
 
 /// Column sums of a shard-local block (`rows × cols`), accumulated in
-/// row order — the shard partial of `Matrix::col_sums`.
+/// row order — the shard partial of `Matrix::col_sums`. Allocating
+/// wrapper over [`col_sums_rows_into`].
 pub fn col_sums_rows(block: &[f32], cols: usize) -> Vec<f32> {
-    assert!(cols > 0 && block.len() % cols == 0);
     let mut out = vec![0.0f32; cols];
+    col_sums_rows_into(block, cols, &mut out);
+    out
+}
+
+/// [`col_sums_rows`] into a caller-owned buffer (zeroed first) — the
+/// workspace path. Per-column accumulation order is identical, so the
+/// result is bitwise the same.
+pub fn col_sums_rows_into(block: &[f32], cols: usize, out: &mut [f32]) {
+    assert!(cols > 0 && block.len() % cols == 0);
+    assert_eq!(out.len(), cols);
+    out.fill(0.0);
     for row in block.chunks_exact(cols) {
         for (o, &v) in out.iter_mut().zip(row.iter()) {
             *o += v;
         }
     }
-    out
 }
 
 /// Memory retention (alg. lines 8-9) for a row range:
@@ -170,16 +270,31 @@ mod tests {
         let mut m = Matrix::from_fn(10, 3, |r, c| (r * 3 + c) as f32);
         let blocks = RowBlocks::of(&mut m, &plan);
         assert_eq!(blocks.len(), 3);
-        assert_eq!(blocks.lock(0).len(), 12);
-        assert_eq!(blocks.lock(2).len(), 6); // short tail block
-        // write through every block, then check the matrix saw it all
-        for i in 0..blocks.len() {
-            for v in blocks.lock(i).iter_mut() {
-                *v += 100.0;
+        // SAFETY: one block live at a time (sequential loop)
+        unsafe {
+            assert_eq!(blocks.block(0).len(), 12);
+            assert_eq!(blocks.block(2).len(), 6); // short tail block
+            // write through every block, then check the matrix saw it all
+            for i in 0..blocks.len() {
+                for v in blocks.block(i).iter_mut() {
+                    *v += 100.0;
+                }
             }
         }
         drop(blocks);
         assert!(m.data().iter().all(|&v| v >= 100.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of")]
+    fn row_blocks_reject_out_of_range_index() {
+        let plan = ShardPlan::with_granularity(10, 4);
+        let mut m = Matrix::zeros(10, 3);
+        let blocks = RowBlocks::of(&mut m, &plan);
+        // SAFETY: single access
+        unsafe {
+            blocks.block(3);
+        }
     }
 
     #[test]
@@ -188,16 +303,24 @@ mod tests {
         for (m, n, p) in [(20, 8, 3), (64, 784, 10), (7, 40, 2)] {
             let x = randm(&mut rng, m, n);
             let w = randm(&mut rng, n, p);
+            let wt = w.transpose();
             let b: Vec<f32> = (0..p).map(|_| rng.normal()).collect();
             let serial = x.matmul(&w).add_row_broadcast(&b);
             let plan = ShardPlan::with_granularity(m, 6);
             let mut out = Matrix::zeros(m, p);
+            let mut out_bt = Matrix::zeros(m, p);
             for (i, range) in plan.iter().enumerate() {
                 let blocks = RowBlocks::of(&mut out, &plan);
-                let mut blk = blocks.lock(i);
-                forward_rows(&x, &w, &b, range, &mut blk);
+                // SAFETY: one block live at a time
+                let blk = unsafe { blocks.block(i) };
+                forward_rows(&x, &w, &b, range.clone(), blk);
+                let blocks_bt = RowBlocks::of(&mut out_bt, &plan);
+                // SAFETY: one block live at a time
+                let blk_bt = unsafe { blocks_bt.block(i) };
+                forward_rows_bt(&x, &w, &wt, &b, range, blk_bt);
             }
             assert_eq!(out.data(), serial.data(), "({m},{n},{p})");
+            assert_eq!(out_bt.data(), serial.data(), "({m},{n},{p}) cached wt");
         }
     }
 
@@ -219,9 +342,13 @@ mod tests {
         let mut gh = Matrix::zeros(m, p);
         for (i, range) in plan.iter().enumerate() {
             let xb = RowBlocks::of(&mut xh, &plan);
-            fold_rows(&x, &ms.mem_x, se, range.clone(), &mut xb.lock(i));
+            // SAFETY: one block live at a time
+            fold_rows(&x, &ms.mem_x, se, range.clone(), unsafe { xb.block(i) });
             let gb = RowBlocks::of(&mut gh, &plan);
-            fold_block(rows_of(&g, range.clone()), &ms.mem_g, se, range, &mut gb.lock(i));
+            // SAFETY: one block live at a time
+            fold_block(rows_of(&g, range.clone()), &ms.mem_g, se, range, unsafe {
+                gb.block(i)
+            });
         }
         assert_eq!(xh.data(), xhat.data());
         assert_eq!(gh.data(), ghat.data());
@@ -236,7 +363,8 @@ mod tests {
         let mut out = Matrix::zeros(14, 5);
         for (i, range) in plan.iter().enumerate() {
             let blocks = RowBlocks::of(&mut out, &plan);
-            scale_rows(&src, 0.3, range, &mut blocks.lock(i));
+            // SAFETY: one block live at a time
+            scale_rows(&src, 0.3, range, unsafe { blocks.block(i) });
         }
         assert_eq!(out.data(), serial.data());
     }
@@ -252,13 +380,14 @@ mod tests {
         let mut scores = vec![0.0f32; m];
         for (i, range) in plan.iter().enumerate() {
             let blocks = RowBlocks::of_slice(&mut scores, 1, &plan);
-            let mut blk = blocks.lock(i);
+            // SAFETY: one block live at a time
+            let blk = unsafe { blocks.block(i) };
             score_rows(
                 rows_of(&xhat, range.clone()),
                 rows_of(&ghat, range.clone()),
                 n,
                 p,
-                &mut blk,
+                blk,
             );
         }
         assert_eq!(scores, serial);
@@ -271,6 +400,10 @@ mod tests {
         // single full-range partial == serial col_sums exactly
         let full = col_sums_rows(rows_of(&g, 0..16), 3);
         assert_eq!(full, g.col_sums());
+        // the _into form is bitwise the same (and zeroes stale contents)
+        let mut buf = vec![f32::NAN; 3];
+        col_sums_rows_into(rows_of(&g, 0..16), 3, &mut buf);
+        assert_eq!(buf, full);
         // split partials sum to the same within f32 grouping tolerance
         let a = col_sums_rows(rows_of(&g, 0..9), 3);
         let b = col_sums_rows(rows_of(&g, 9..16), 3);
@@ -289,7 +422,8 @@ mod tests {
         let mut out = Matrix::zeros(12, 6);
         for (i, range) in plan.iter().enumerate() {
             let blocks = RowBlocks::of(&mut out, &plan);
-            keep_rows(&src, &keep, range, &mut blocks.lock(i));
+            // SAFETY: one block live at a time
+            keep_rows(&src, &keep, range, unsafe { blocks.block(i) });
         }
         assert_eq!(out.data(), serial.data());
     }

@@ -81,7 +81,7 @@ mod tests {
         for _ in 0..20 {
             let info: MlpStepInfo = mlp.train_step_sgd(&x, &y, 0.1);
             assert!(info.loss.is_finite());
-            assert_eq!(info.layer_k, vec![12, 12]); // exact: every row, each layer
+            assert_eq!(info.k_effective, 24); // exact: every row, each layer
         }
         let mut state = GraphState::uniform(&mlp, 12, Policy::TopK, 4, true);
         for _ in 0..20 {

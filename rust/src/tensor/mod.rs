@@ -114,12 +114,45 @@ impl Matrix {
     /// Transposed copy.
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// Write `self^T` into an existing `cols × rows` matrix — the
+    /// allocation-free path the per-step weight-transpose cache
+    /// (`train::Dense::refresh_w_t`) runs on.
+    pub fn transpose_into(&self, out: &mut Matrix) {
+        assert_eq!(
+            out.shape(),
+            (self.cols, self.rows),
+            "transpose_into shape mismatch"
+        );
         for r in 0..self.rows {
-            for c in 0..self.cols {
-                out[(c, r)] = self[(r, c)];
+            let row = self.row(r);
+            for (c, &v) in row.iter().enumerate() {
+                out.data[c * self.rows + r] = v;
             }
         }
-        out
+    }
+
+    /// In-place `self[r, c] -= other_t[c, r]` for a transposed-layout
+    /// operand — applies a `cols × rows` accumulation (the transposed
+    /// AOP layout of `tensor::ops`) without materializing its transpose.
+    /// Per-element it performs exactly the subtraction `axpy(-1.0, ·)`
+    /// would after a `transpose()` copy.
+    pub fn sub_transposed(&mut self, other_t: &Matrix) {
+        assert_eq!(
+            other_t.shape(),
+            (self.cols, self.rows),
+            "sub_transposed shape mismatch"
+        );
+        let (rows, cols) = (self.rows, self.cols);
+        for r in 0..rows {
+            let row = &mut self.data[r * cols..(r + 1) * cols];
+            for (c, v) in row.iter_mut().enumerate() {
+                *v -= other_t.data[c * rows + r];
+            }
+        }
     }
 
     /// Elementwise map into a new matrix.
@@ -275,6 +308,31 @@ mod tests {
         assert_eq!(m.transpose().transpose(), m);
         assert_eq!(m.transpose().shape(), (5, 3));
         assert_eq!(m.transpose()[(4, 2)], m[(2, 4)]);
+    }
+
+    #[test]
+    fn transpose_into_reuses_buffer() {
+        let a = Matrix::from_fn(4, 3, |r, c| (r * 3 + c) as f32);
+        let mut out = Matrix::full(3, 4, f32::NAN); // stale contents
+        a.transpose_into(&mut out);
+        assert_eq!(out, a.transpose());
+    }
+
+    #[test]
+    fn sub_transposed_matches_axpy_of_transpose() {
+        let mut a = Matrix::from_fn(5, 2, |r, c| (r + c) as f32 * 0.5);
+        let t = Matrix::from_fn(2, 5, |r, c| (r * 5 + c) as f32 * 0.25);
+        let mut expect = a.clone();
+        expect.axpy(-1.0, &t.transpose());
+        a.sub_transposed(&t);
+        assert_eq!(a.data(), expect.data());
+    }
+
+    #[test]
+    #[should_panic(expected = "sub_transposed shape mismatch")]
+    fn sub_transposed_rejects_bad_shape() {
+        let mut a = Matrix::zeros(2, 3);
+        a.sub_transposed(&Matrix::zeros(2, 3));
     }
 
     #[test]

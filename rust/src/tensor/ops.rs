@@ -11,10 +11,36 @@
 //!     paper claims; numerically identical for without-replacement
 //!     policies since unselected scales are exactly 0.
 //!
+//! ## The 8-lane accumulation contract (§Perf pass, PR 4)
+//!
+//! Every kernel here is written as a fixed [`LANES`]-wide split loop:
+//! eight explicit accumulators (or eight independent element streams),
+//! a separate scalar tail loop for the `len % 8` remainder, and **no
+//! value-dependent branches inside the lane loops** — so LLVM
+//! auto-vectorizes them to AVX2/NEON width without needing
+//! `-ffast-math`-style reassociation. The grouping of every reduction is
+//! therefore part of each kernel's definition: it depends only on the
+//! operand *shapes* (never on row-range position, thread count, or
+//! runtime CPU features), which is what keeps the exec subsystem's
+//! bit-identity-across-threads contract intact. Removing the historical
+//! per-element `w == 0.0` skip branches is part of the same contract
+//! (branch-free inner loops); the per-row `scale == 0.0` skip in the
+//! mask-regime AOP stays — it is selection semantics (unselected rows
+//! contribute exactly nothing, giving the mask regime its O(K·N·P)
+//! cost), decided per row, not per lane.
+//!
 //! `matmul`/`matmul_tn` are cache-blocked with an ikj loop order so the
 //! inner loop is a contiguous f32 AXPY the compiler auto-vectorizes.
+//! Narrow-B shapes take a transposed-dot path; hot callers pass a cached
+//! transpose through [`matmul_rows_bt`] so the per-call `transpose()` of
+//! the historical narrow path disappears from steady-state steps.
 
 use super::Matrix;
+
+/// Lane width of the split loops (f32 lanes of one AVX2 register; two
+/// NEON registers). Changing it changes reduction groupings — and hence
+/// the low-order bits of every curve — so it is a compile-time constant.
+pub const LANES: usize = 8;
 
 /// Cache-block edge (rows of A per block / rows of B per block).
 const BLOCK: usize = 64;
@@ -24,32 +50,42 @@ const BLOCK: usize = 64;
 /// EXPERIMENTS.md — 3-4× on the paper's 784×10 shapes).
 const NARROW_N: usize = 24;
 
-/// Vectorizable dot product: 8 independent accumulators so the compiler
-/// can keep the reduction in SIMD lanes despite float non-associativity.
+/// Vectorizable dot product: eight independent accumulator lanes over
+/// `chunks_exact(8)`, pairwise-combined, then a scalar tail — the
+/// reduction stays in SIMD lanes despite float non-associativity.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 8];
-    let chunks = a.len() / 8;
-    for c in 0..chunks {
-        let ai = &a[c * 8..c * 8 + 8];
-        let bi = &b[c * 8..c * 8 + 8];
-        for l in 0..8 {
+    let mut acc = [0.0f32; LANES];
+    let (a8, a_tail) = a.split_at(a.len() - a.len() % LANES);
+    let (b8, b_tail) = b.split_at(a8.len());
+    for (ai, bi) in a8.chunks_exact(LANES).zip(b8.chunks_exact(LANES)) {
+        for l in 0..LANES {
             acc[l] += ai[l] * bi[l];
         }
     }
     let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
-    for i in chunks * 8..a.len() {
-        s += a[i] * b[i];
+    for (av, bv) in a_tail.iter().zip(b_tail.iter()) {
+        s += av * bv;
     }
     s
 }
 
-/// Contiguous `y += alpha * x` (auto-vectorizes).
+/// Contiguous `y += alpha * x`, 8-lane split + scalar tail. Elementwise
+/// (no cross-lane reduction), so the split changes no bits — it only
+/// hands the compiler a branch-free fixed-width body.
 #[inline]
-fn axpy_slice(y: &mut [f32], alpha: f32, x: &[f32]) {
+pub(crate) fn axpy_slice(y: &mut [f32], alpha: f32, x: &[f32]) {
     debug_assert_eq!(y.len(), x.len());
-    for (yv, &xv) in y.iter_mut().zip(x.iter()) {
+    let split = y.len() - y.len() % LANES;
+    let (y8, y_tail) = y.split_at_mut(split);
+    let (x8, x_tail) = x.split_at(split);
+    for (yc, xc) in y8.chunks_exact_mut(LANES).zip(x8.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            yc[l] += alpha * xc[l];
+        }
+    }
+    for (yv, &xv) in y_tail.iter_mut().zip(x_tail.iter()) {
         *yv += alpha * xv;
     }
 }
@@ -71,25 +107,72 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 /// depend only on the operand shapes — so sharded and whole-matrix
 /// products are bitwise identical per row. This is the primitive the
 /// `exec` subsystem's data-parallel forward/backward passes are built on.
+///
+/// The narrow-B path transposes `b` on every call; per-step hot paths
+/// must use [`matmul_rows_bt`] with a cached transpose instead.
 pub fn matmul_rows(a: &Matrix, b: &Matrix, rows: std::ops::Range<usize>, out: &mut [f32]) {
+    let (_, ka) = a.shape();
+    let (_, n) = b.shape();
+    if narrow_b(ka, n) {
+        let bt = b.transpose();
+        return matmul_rows_bt(a, b, &bt, rows, out);
+    }
+    matmul_rows_blocked(a, b, rows, out);
+}
+
+/// [`matmul_rows`] with a caller-cached `bt = b.transpose()` — the
+/// narrow-B path reads `bt` directly, so no transpose happens per call.
+/// Bitwise identical to [`matmul_rows`] (the transposed values are the
+/// same floats; the path choice is the same shape-only predicate).
+pub fn matmul_rows_bt(
+    a: &Matrix,
+    b: &Matrix,
+    bt: &Matrix,
+    rows: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "matmul inner dims: {ka} vs {kb}");
+    assert_eq!(bt.shape(), (n, kb), "bt must be b transposed");
+    assert!(rows.end <= m, "row range {rows:?} out of {m}");
+    assert_eq!(out.len(), rows.len() * n, "output block size");
+    if narrow_b(ka, n) {
+        // every output element is a contiguous k-length dot at SIMD width
+        for (oi, i) in rows.enumerate() {
+            let arow = a.row(i);
+            let orow = &mut out[oi * n..(oi + 1) * n];
+            for (j, ov) in orow.iter_mut().enumerate() {
+                *ov = dot(arow, bt.row(j));
+            }
+        }
+        return;
+    }
+    matmul_rows_blocked(a, b, rows, out);
+}
+
+/// Whether the transposed-dot path pays for a `(· × k) @ (k × n)`.
+#[inline]
+fn narrow_b(k: usize, n: usize) -> bool {
+    n <= NARROW_N && k >= 32
+}
+
+/// Whether [`matmul_rows_bt`] will actually read the cached transpose
+/// for a `(· × k) @ (k × n)` product — exported so callers can skip
+/// warming (and re-refreshing) a transpose cache no kernel will ever
+/// read (e.g. a wide non-narrow layer with no backward consumer).
+#[inline]
+pub fn matmul_uses_bt(k: usize, n: usize) -> bool {
+    narrow_b(k, n)
+}
+
+/// The blocked ikj body shared by both entry points.
+fn matmul_rows_blocked(a: &Matrix, b: &Matrix, rows: std::ops::Range<usize>, out: &mut [f32]) {
     let (m, ka) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(ka, kb, "matmul inner dims: {ka} vs {kb}");
     assert!(rows.end <= m, "row range {rows:?} out of {m}");
     assert_eq!(out.len(), rows.len() * n, "output block size");
-    if n <= NARROW_N && ka >= 32 {
-        // transpose B once (k·n traffic), then every output element is a
-        // contiguous k-length dot that runs at SIMD width
-        let bt = b.transpose();
-        for (oi, i) in rows.enumerate() {
-            let arow = a.row(i);
-            let orow = &mut out[oi * n..(oi + 1) * n];
-            for j in 0..n {
-                orow[j] = dot(arow, bt.row(j));
-            }
-        }
-        return;
-    }
     out.fill(0.0);
     for k0 in (0..ka).step_by(BLOCK) {
         let k1 = (k0 + BLOCK).min(ka);
@@ -114,58 +197,71 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
     let (m, n) = a.shape();
     let (m2, p) = b.shape();
     assert_eq!(m, m2, "matmul_tn leading dims: {m} vs {m2}");
-    if use_transposed_aop(n, p) {
+    if aop_transposed(n, p) {
         let mut out_t = Matrix::zeros(p, n);
         for r in 0..m {
-            accumulate_outer_t(&mut out_t, a.row(r), b.row(r), 1.0);
+            accumulate_outer_t(out_t.data_mut(), n, a.row(r), b.row(r), 1.0);
         }
         return out_t.transpose();
     }
     let mut out = Matrix::zeros(n, p);
     for r in 0..m {
-        accumulate_outer(&mut out, a.row(r), b.row(r), 1.0);
+        accumulate_outer(out.data_mut(), p, a.row(r), b.row(r), 1.0);
     }
     out
 }
 
-/// Rank-1 update `out += s * x ⊗ g` with contiguous inner loop.
+/// Rank-1 update `out += s * x ⊗ g` into a flat row-major `n × p` block
+/// (`p = g.len()`). Branch-free inner loops: a zero `s·x[n]` contributes
+/// `+0.0` products (lane contract above). Rows with `s == 0.0` are
+/// skipped wholesale — selection semantics, not a lane branch.
 #[inline]
-fn accumulate_outer(out: &mut Matrix, x: &[f32], g: &[f32], s: f32) {
-    debug_assert_eq!(out.shape(), (x.len(), g.len()));
+fn accumulate_outer(out: &mut [f32], p: usize, x: &[f32], g: &[f32], s: f32) {
+    debug_assert_eq!(out.len(), x.len() * p);
+    debug_assert_eq!(g.len(), p);
     if s == 0.0 {
         return;
     }
-    for (n, &xv) in x.iter().enumerate() {
-        let w = s * xv;
-        if w == 0.0 {
-            continue;
-        }
-        axpy_slice(out.row_mut(n), w, g);
+    for (orow, &xv) in out.chunks_exact_mut(p).zip(x.iter()) {
+        axpy_slice(orow, s * xv, g);
     }
 }
 
-/// Transposed rank-1 update: `out_t[p, n] += (s·g[p]) * x[n]` — the inner
-/// loop runs over the long N axis contiguously, which is what makes the
-/// paper's (N=784, P=10) head shape vectorize (§Perf pass).
+/// Transposed rank-1 update: `out_t[p, n] += (s·g[p]) * x[n]` into a flat
+/// row-major `p × n` block (`n = x.len()`) — the inner loop runs over the
+/// long N axis contiguously, which is what makes the paper's
+/// (N=784, P=10) head shape vectorize (§Perf pass).
 #[inline]
-fn accumulate_outer_t(out_t: &mut Matrix, x: &[f32], g: &[f32], s: f32) {
-    debug_assert_eq!(out_t.shape(), (g.len(), x.len()));
+fn accumulate_outer_t(out_t: &mut [f32], n: usize, x: &[f32], g: &[f32], s: f32) {
+    debug_assert_eq!(out_t.len(), g.len() * n);
+    debug_assert_eq!(x.len(), n);
     if s == 0.0 {
         return;
     }
-    for (p, &gv) in g.iter().enumerate() {
-        let w = s * gv;
-        if w == 0.0 {
-            continue;
-        }
-        axpy_slice(out_t.row_mut(p), w, x);
+    for (orow, &gv) in out_t.chunks_exact_mut(n).zip(g.iter()) {
+        axpy_slice(orow, s * gv, x);
     }
 }
 
-/// Whether the transposed accumulation layout pays for (n, p).
+/// Whether the AOP accumulation for an `(n, p)` layer runs in the
+/// transposed `p × n` layout. A pure function of the operand shape —
+/// exported so workspace owners can size partial buffers and apply the
+/// summed update without an intermediate `transpose()` copy
+/// (`Matrix::sub_transposed`).
 #[inline]
-fn use_transposed_aop(n: usize, p: usize) -> bool {
+pub fn aop_transposed(n: usize, p: usize) -> bool {
     p < n && p <= NARROW_N && n >= 64
+}
+
+/// Rows (as a flat length) of the AOP accumulation layout for `(n, p)`:
+/// `(p, n)` when transposed, `(n, p)` otherwise.
+#[inline]
+pub fn aop_layout(n: usize, p: usize) -> (usize, usize) {
+    if aop_transposed(n, p) {
+        (p, n)
+    } else {
+        (n, p)
+    }
 }
 
 /// Mask-regime AOP: `out[n,p] = sum_m scale[m] * x[m,n] * g[m,p]`.
@@ -175,56 +271,116 @@ pub fn masked_outer(x: &Matrix, g: &Matrix, scale: &[f32]) -> Matrix {
     masked_outer_range(x, g, scale, 0..x.rows())
 }
 
-/// Row-range mask-regime AOP: the partial sum over `rows` only — the
-/// shard partial the `exec` subsystem reduces in fixed shard order. The
-/// accumulation layout (transposed or not) is decided from the *full*
-/// operand shape, so every shard—and the whole-batch call—applies the
-/// same per-term float ops.
+/// Row-range mask-regime AOP partial into a caller-owned buffer in the
+/// [`aop_layout`] of the *full* operand shape (zeroed first, then
+/// accumulated in ascending row order). This is the zero-allocation
+/// primitive the workspace-resident training step shards on; every
+/// shard — and the whole-batch call — applies the same per-term float
+/// ops regardless of where its row range sits.
+pub fn masked_outer_range_into(
+    x: &Matrix,
+    g: &Matrix,
+    scale: &[f32],
+    rows: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
+    let (m, n) = x.shape();
+    let (m2, p) = g.shape();
+    assert_eq!(m, m2);
+    assert_eq!(scale.len(), m);
+    assert!(rows.end <= m, "row range {rows:?} out of {m}");
+    assert_eq!(out.len(), n * p, "partial buffer size");
+    out.fill(0.0);
+    if aop_transposed(n, p) {
+        for r in rows {
+            accumulate_outer_t(out, n, x.row(r), g.row(r), scale[r]);
+        }
+    } else {
+        for r in rows {
+            accumulate_outer(out, p, x.row(r), g.row(r), scale[r]);
+        }
+    }
+}
+
+/// Compaction-regime AOP partial into a caller-owned [`aop_layout`]
+/// buffer: only the `indices` (ascending, with per-row `scale`) that fall
+/// inside `rows` are touched. Returns how many rows contributed — **0
+/// means the buffer was left untouched** (not zeroed): the shard adds
+/// nothing and the caller must skip it in the reduction, which is what
+/// spares empty shards a hot-path memset of the whole `n × p` partial.
+/// No per-call allocation: the in-range index window is found by binary
+/// search on the ascending `indices`.
+pub fn masked_outer_compact_range_into(
+    x: &Matrix,
+    g: &Matrix,
+    indices: &[usize],
+    scale: &[f32],
+    rows: std::ops::Range<usize>,
+    out: &mut [f32],
+) -> usize {
+    let (m, n) = x.shape();
+    let (m2, p) = g.shape();
+    assert_eq!(m, m2);
+    assert_eq!(scale.len(), m);
+    assert_eq!(out.len(), n * p, "partial buffer size");
+    debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "indices ascending");
+    let lo = indices.partition_point(|&i| i < rows.start);
+    let hi = indices.partition_point(|&i| i < rows.end);
+    if lo == hi {
+        return 0;
+    }
+    out.fill(0.0);
+    let window = &indices[lo..hi];
+    if aop_transposed(n, p) {
+        for &r in window {
+            accumulate_outer_t(out, n, x.row(r), g.row(r), scale[r]);
+        }
+    } else {
+        for &r in window {
+            accumulate_outer(out, p, x.row(r), g.row(r), scale[r]);
+        }
+    }
+    window.len()
+}
+
+/// Row-range mask-regime AOP returning an owned `n × p` matrix — the
+/// allocating convenience wrapper over [`masked_outer_range_into`]
+/// (analysis, props, and benches; the training step uses the `_into`
+/// form on workspace buffers).
 pub fn masked_outer_range(
     x: &Matrix,
     g: &Matrix,
     scale: &[f32],
     rows: std::ops::Range<usize>,
 ) -> Matrix {
-    let (m, n) = x.shape();
-    let (m2, p) = g.shape();
-    assert_eq!(m, m2);
-    assert_eq!(scale.len(), m);
-    assert!(rows.end <= m, "row range {rows:?} out of {m}");
-    if use_transposed_aop(n, p) {
-        let mut out_t = Matrix::zeros(p, n);
-        for r in rows {
-            accumulate_outer_t(&mut out_t, x.row(r), g.row(r), scale[r]);
-        }
-        return out_t.transpose();
+    let (_, n) = x.shape();
+    let (_, p) = g.shape();
+    let (a, b) = aop_layout(n, p);
+    let mut out = Matrix::zeros(a, b);
+    masked_outer_range_into(x, g, scale, rows, out.data_mut());
+    if aop_transposed(n, p) {
+        out.transpose()
+    } else {
+        out
     }
-    let mut out = Matrix::zeros(n, p);
-    for r in rows {
-        accumulate_outer(&mut out, x.row(r), g.row(r), scale[r]);
-    }
-    out
 }
 
 /// Compaction-regime AOP: only the rows in `selected` (with their scales)
 /// are touched — cost `O(K·N·P)` instead of `O(M·N·P)`, the paper's
 /// computational-reduction claim.
-pub fn masked_outer_compact(
-    x: &Matrix,
-    g: &Matrix,
-    selected: &[(usize, f32)],
-) -> Matrix {
+pub fn masked_outer_compact(x: &Matrix, g: &Matrix, selected: &[(usize, f32)]) -> Matrix {
     let (_, n) = x.shape();
     let (_, p) = g.shape();
-    if use_transposed_aop(n, p) {
+    if aop_transposed(n, p) {
         let mut out_t = Matrix::zeros(p, n);
         for &(r, s) in selected {
-            accumulate_outer_t(&mut out_t, x.row(r), g.row(r), s);
+            accumulate_outer_t(out_t.data_mut(), n, x.row(r), g.row(r), s);
         }
         return out_t.transpose();
     }
     let mut out = Matrix::zeros(n, p);
     for &(r, s) in selected {
-        accumulate_outer(&mut out, x.row(r), g.row(r), s);
+        accumulate_outer(out.data_mut(), p, x.row(r), g.row(r), s);
     }
     out
 }
@@ -291,6 +447,23 @@ mod tests {
     }
 
     #[test]
+    fn dot_matches_f64_reference() {
+        let mut rng = Rng::new(11);
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 100, 1000] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let refd: f64 = a
+                .iter()
+                .zip(b.iter())
+                .map(|(&x, &y)| x as f64 * y as f64)
+                .sum();
+            let d = (dot(&a, &b) as f64 - refd).abs();
+            let tol = 1e-4 * (1.0 + refd.abs()) * (len.max(1) as f64).sqrt();
+            assert!(d < tol, "len={len}: {d}");
+        }
+    }
+
+    #[test]
     fn matmul_tn_equals_transpose_then_matmul() {
         let mut rng = Rng::new(2);
         for (m, n, p) in [(144, 16, 1), (64, 784, 10), (33, 20, 11)] {
@@ -322,6 +495,33 @@ mod tests {
     }
 
     #[test]
+    fn matmul_rows_bt_is_bitwise_matmul_rows() {
+        let mut rng = Rng::new(44);
+        // narrow (cached-transpose) and blocked (bt ignored) paths
+        for (m, k, n) in [(20, 40, 3), (64, 784, 10), (30, 12, 30)] {
+            let a = randm(&mut rng, m, k);
+            let b = randm(&mut rng, k, n);
+            let bt = b.transpose();
+            for (lo, hi) in [(0, m), (m / 3, m / 2 + 1)] {
+                let mut plain = vec![f32::NAN; (hi - lo) * n];
+                matmul_rows(&a, &b, lo..hi, &mut plain);
+                let mut cached = vec![f32::NAN; (hi - lo) * n];
+                matmul_rows_bt(&a, &b, &bt, lo..hi, &mut cached);
+                assert_eq!(plain, cached, "({m},{k},{n}) rows {lo}..{hi}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bt must be b transposed")]
+    fn matmul_rows_bt_rejects_wrong_cache() {
+        let a = Matrix::zeros(2, 40);
+        let b = Matrix::zeros(40, 3);
+        let mut out = vec![0.0; 6];
+        matmul_rows_bt(&a, &b, &Matrix::zeros(40, 3), 0..2, &mut out);
+    }
+
+    #[test]
     fn masked_outer_range_partials_sum_to_full() {
         let mut rng = Rng::new(43);
         for (m, n, p) in [(30, 9, 5), (64, 784, 10)] {
@@ -335,6 +535,83 @@ mod tests {
                 acc.axpy(1.0, &masked_outer_range(&x, &g, &scale, lo..hi));
             }
             assert!(acc.max_abs_diff(&full) < 1e-4, "({m},{n},{p})");
+        }
+    }
+
+    #[test]
+    fn masked_outer_range_into_matches_owned_in_both_layouts() {
+        let mut rng = Rng::new(45);
+        // (9, 5): standard layout; (784, 10): transposed layout
+        for (m, n, p) in [(30usize, 9usize, 5usize), (40, 784, 10)] {
+            let x = randm(&mut rng, m, n);
+            let g = randm(&mut rng, m, p);
+            let scale: Vec<f32> = (0..m).map(|i| ((i % 3) as f32) * 0.5).collect();
+            let (a, b) = aop_layout(n, p);
+            for (lo, hi) in [(0, m), (5, m - 3)] {
+                let owned = masked_outer_range(&x, &g, &scale, lo..hi);
+                let mut buf = vec![f32::NAN; n * p];
+                masked_outer_range_into(&x, &g, &scale, lo..hi, &mut buf);
+                let flat = Matrix::from_vec(a, b, buf);
+                let flat_np = if aop_transposed(n, p) {
+                    flat.transpose()
+                } else {
+                    flat
+                };
+                assert_eq!(flat_np.data(), owned.data(), "({m},{n},{p}) {lo}..{hi}");
+            }
+        }
+    }
+
+    #[test]
+    fn compact_range_into_filters_by_binary_search() {
+        let mut rng = Rng::new(46);
+        let (m, n, p) = (25usize, 8usize, 6usize);
+        let x = randm(&mut rng, m, n);
+        let g = randm(&mut rng, m, p);
+        let indices = [1usize, 7, 8, 15, 24];
+        let mut scale = vec![0.0f32; m];
+        for &i in &indices {
+            scale[i] = 1.0 + i as f32 * 0.1;
+        }
+        // partials over a 16-row grid must sum to the mask-regime result
+        let full = masked_outer(&x, &g, &scale);
+        let mut acc = Matrix::zeros(n, p);
+        let mut contributed = 0usize;
+        for lo in (0..m).step_by(16) {
+            let hi = (lo + 16).min(m);
+            let mut buf = vec![f32::NAN; n * p];
+            let cnt = masked_outer_compact_range_into(&x, &g, &indices, &scale, lo..hi, &mut buf);
+            contributed += cnt;
+            acc.axpy(1.0, &Matrix::from_vec(n, p, buf));
+        }
+        assert_eq!(contributed, indices.len());
+        assert!(acc.max_abs_diff(&full) < 1e-4);
+        // a range with no selected rows reports 0 and leaves the buffer
+        // untouched (the caller's contract is to skip it)
+        let mut buf = vec![f32::NAN; n * p];
+        let cnt = masked_outer_compact_range_into(&x, &g, &indices, &scale, 2..7, &mut buf);
+        assert_eq!(cnt, 0);
+        assert!(buf.iter().all(|v| v.is_nan()), "untouched on empty window");
+    }
+
+    #[test]
+    fn masked_outer_range_equals_mask_restricted_to_range() {
+        // the kernel-path property: restricting the row range is bitwise
+        // the same as zeroing the scales outside it — accumulation layout
+        // and per-term ops depend only on the operand shapes, never on
+        // where the range sits
+        let mut rng = Rng::new(47);
+        for (m, n, p) in [(30usize, 9usize, 5usize), (48, 784, 10)] {
+            let x = randm(&mut rng, m, n);
+            let g = randm(&mut rng, m, p);
+            let scale: Vec<f32> = (0..m).map(|i| 0.25 + (i % 5) as f32).collect();
+            for (lo, hi) in [(0, m / 2), (m / 3, m), (4, 5)] {
+                let ranged = masked_outer_range(&x, &g, &scale, lo..hi);
+                let mut masked_scale = vec![0.0f32; m];
+                masked_scale[lo..hi].copy_from_slice(&scale[lo..hi]);
+                let masked = masked_outer(&x, &g, &masked_scale);
+                assert_eq!(ranged.data(), masked.data(), "({m},{n},{p}) {lo}..{hi}");
+            }
         }
     }
 

@@ -135,15 +135,33 @@ impl Rng {
 
     /// `k` distinct indices drawn uniformly from [0, n) (randK policy).
     pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        self.sample_without_replacement_into(n, k, &mut scratch, &mut out);
+        out
+    }
+
+    /// [`Rng::sample_without_replacement`] into reusable buffers —
+    /// identical draw sequence, no allocation once the buffers have
+    /// capacity (`scratch` grows to `n`, `out` to `k`). The per-step
+    /// selection path runs on this.
+    pub fn sample_without_replacement_into(
+        &mut self,
+        n: usize,
+        k: usize,
+        scratch: &mut Vec<usize>,
+        out: &mut Vec<usize>,
+    ) {
         assert!(k <= n, "k={k} > n={n}");
-        let mut idx: Vec<usize> = (0..n).collect();
+        scratch.clear();
+        scratch.extend(0..n);
         // partial Fisher–Yates: first k entries are the sample
         for i in 0..k {
             let j = i + self.below(n - i);
-            idx.swap(i, j);
+            scratch.swap(i, j);
         }
-        idx.truncate(k);
-        idx
+        out.clear();
+        out.extend_from_slice(&scratch[..k]);
     }
 
     /// `k` distinct indices drawn ∝ `weights` without replacement via the
@@ -155,24 +173,48 @@ impl Rng {
         weights: &[f32],
         k: usize,
     ) -> Vec<usize> {
+        let mut keys = Vec::new();
+        let mut out = Vec::new();
+        self.weighted_sample_without_replacement_into(weights, k, &mut keys, &mut out);
+        out
+    }
+
+    /// [`Rng::weighted_sample_without_replacement`] into reusable buffers
+    /// — identical draw sequence, no allocation at capacity. The sort is
+    /// `sort_unstable_by` (in-place, allocation-free) over a **total**
+    /// order: key ties break on ascending row index. Ties are not
+    /// hypothetical — every zero-weight row keys at `-inf` — and the
+    /// index tie-break reproduces exactly what the historical stable
+    /// sort did (keys are generated in index order), keeping the
+    /// selected set index-stable across std versions and platforms, the
+    /// same discipline as `top_k_indices`.
+    pub fn weighted_sample_without_replacement_into(
+        &mut self,
+        weights: &[f32],
+        k: usize,
+        keys: &mut Vec<(f64, usize)>,
+        out: &mut Vec<usize>,
+    ) {
         let n = weights.len();
         assert!(k <= n, "k={k} > n={n}");
-        let mut keys: Vec<(f64, usize)> = weights
-            .iter()
-            .enumerate()
-            .map(|(i, &w)| {
-                let u = self.uniform_f64().max(1e-300);
-                let gumbel = -(-u.ln()).ln();
-                let logw = if w > 0.0 {
-                    (w as f64).ln()
-                } else {
-                    f64::NEG_INFINITY
-                };
-                (logw + gumbel, i)
-            })
-            .collect();
-        keys.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
-        keys.into_iter().take(k).map(|(_, i)| i).collect()
+        keys.clear();
+        keys.extend(weights.iter().enumerate().map(|(i, &w)| {
+            let u = self.uniform_f64().max(1e-300);
+            let gumbel = -(-u.ln()).ln();
+            let logw = if w > 0.0 {
+                (w as f64).ln()
+            } else {
+                f64::NEG_INFINITY
+            };
+            (logw + gumbel, i)
+        }));
+        keys.sort_unstable_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
+        out.clear();
+        out.extend(keys.iter().take(k).map(|&(_, i)| i));
     }
 
     /// `k` indices drawn ∝ `weights` WITH replacement (eq. (5) variant),
@@ -182,23 +224,37 @@ impl Rng {
         weights: &[f32],
         k: usize,
     ) -> Vec<usize> {
+        let mut cdf = Vec::new();
+        let mut out = Vec::new();
+        self.weighted_sample_with_replacement_into(weights, k, &mut cdf, &mut out);
+        out
+    }
+
+    /// [`Rng::weighted_sample_with_replacement`] into reusable buffers —
+    /// identical draw sequence, no allocation at capacity.
+    pub fn weighted_sample_with_replacement_into(
+        &mut self,
+        weights: &[f32],
+        k: usize,
+        cdf: &mut Vec<f64>,
+        out: &mut Vec<usize>,
+    ) {
         let total: f64 = weights.iter().map(|&w| w.max(0.0) as f64).sum();
         assert!(total > 0.0, "all weights are zero");
-        let mut cdf = Vec::with_capacity(weights.len());
+        cdf.clear();
         let mut acc = 0.0f64;
         for &w in weights {
             acc += w.max(0.0) as f64;
             cdf.push(acc);
         }
-        (0..k)
-            .map(|_| {
-                let u = self.uniform_f64() * total;
-                match cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
-                    Ok(i) => i,
-                    Err(i) => i.min(weights.len() - 1),
-                }
-            })
-            .collect()
+        out.clear();
+        out.extend((0..k).map(|_| {
+            let u = self.uniform_f64() * total;
+            match cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+                Ok(i) => i,
+                Err(i) => i.min(weights.len() - 1),
+            }
+        }));
     }
 }
 
@@ -295,6 +351,18 @@ mod tests {
             s.dedup();
             assert_eq!(s.len(), 7);
         }
+    }
+
+    #[test]
+    fn weighted_without_replacement_breaks_zero_weight_ties_by_index() {
+        // every zero-weight row keys at -inf; when k forces selection
+        // into the dead rows, the tie must resolve by ascending index —
+        // a total order, stable across std versions and platforms
+        let w = [0.0f32, 0.0, 0.0, 0.0, 1.0, 0.0];
+        let mut r = Rng::new(3);
+        let idx = r.weighted_sample_without_replacement(&w, 4);
+        assert_eq!(idx[0], 4, "the only positive weight wins");
+        assert_eq!(&idx[1..], &[0, 1, 2], "-inf ties in index order");
     }
 
     #[test]

@@ -104,11 +104,19 @@ impl Graph {
             let mut h = Matrix::zeros(m, layer.fan_out());
             {
                 let pin: &Matrix = prev.as_ref().unwrap_or(x);
+                // warm the transpose cache outside the dispatch (narrow
+                // shapes only — wide layers never read it), so the
+                // narrow-B forward never transposes per shard
+                let w_t = layer.warmed_w_t();
                 let hb = shard::RowBlocks::of(&mut h, &plan);
                 exec.run_each(&plan, |i, rows| {
-                    let mut blk = hb.lock(i);
-                    shard::forward_rows(pin, &layer.w, &layer.b, rows, &mut blk);
-                    layer.activation.apply_block(&mut blk);
+                    // SAFETY: run_each claims each shard index exactly once
+                    let blk = unsafe { hb.block(i) };
+                    match w_t {
+                        Some(t) => shard::forward_rows_bt(pin, &layer.w, t, &layer.b, rows, blk),
+                        None => shard::forward_rows(pin, &layer.w, &layer.b, rows, blk),
+                    }
+                    layer.activation.apply_block(blk);
                 });
             }
             prev = Some(h);

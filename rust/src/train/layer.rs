@@ -3,16 +3,37 @@
 //! knobs ([`AopLayerConfig`]) the paper's Algorithm 1 parameterizes each
 //! layer with.
 
+use std::sync::OnceLock;
+
 use crate::aop::Policy;
 use crate::model::activations::Activation;
-use crate::tensor::{init, rng::Rng, Matrix};
+use crate::tensor::{init, ops, rng::Rng, Matrix};
 
 /// One dense layer `h = act(x W + b)`.
+///
+/// `w_t` is a lazily-maintained transpose cache (§Perf pass): the
+/// training step's narrow-B forward path and the backward chain
+/// `G W^T` both want `W^T`, and before the cache every shard of every
+/// step re-transposed the weights. [`Dense::w_t`] computes it on first
+/// use (thread-safe — shard closures may race on the first touch, one
+/// wins) and [`Dense::refresh_w_t`] rewrites it **in place** after the
+/// weight update in `train::apply`, so steady-state steps never
+/// transpose per shard and never allocate for it.
+///
+/// Invariant: any code that mutates `w` directly (outside
+/// `train::apply` / the optimizer step, which refresh it) must call
+/// [`Dense::invalidate_w_t`] — a stale cache silently corrupts the
+/// backward pass. The cache is populated by *any* consumer of
+/// [`Dense::w_t`] (a training step's forward/backward, `evaluate_exec`,
+/// a direct call), so "freshly built" is the only state where a direct
+/// `w[(r, c)]` poke is safe without invalidating; when in doubt, call
+/// `invalidate_w_t` — it costs one lazy re-transpose at most.
 #[derive(Debug, Clone)]
 pub struct Dense {
     pub w: Matrix,
     pub b: Vec<f32>,
     pub activation: Activation,
+    w_t: OnceLock<Matrix>,
 }
 
 impl Dense {
@@ -22,6 +43,7 @@ impl Dense {
             w: init::glorot_uniform(rng, fan_in, fan_out),
             b: init::zeros_bias(fan_out),
             activation,
+            w_t: OnceLock::new(),
         }
     }
 
@@ -32,7 +54,42 @@ impl Dense {
             w,
             b: vec![0.0; p],
             activation,
+            w_t: OnceLock::new(),
         }
+    }
+
+    /// `W^T`, computed once and cached (see the type docs for the
+    /// maintenance contract).
+    pub fn w_t(&self) -> &Matrix {
+        self.w_t.get_or_init(|| self.w.transpose())
+    }
+
+    /// The cached transpose, warmed only when this layer's *forward*
+    /// narrow-B kernel will actually read it — wide layers return `None`
+    /// and their cache stays cold, costing nothing here or in the
+    /// per-step refresh. The one definition of the warm predicate for
+    /// every forward path (training step and evaluation).
+    pub fn warmed_w_t(&self) -> Option<&Matrix> {
+        if ops::matmul_uses_bt(self.fan_in(), self.fan_out()) {
+            Some(self.w_t())
+        } else {
+            None
+        }
+    }
+
+    /// Re-derive the cache from the current `w`, reusing its buffer —
+    /// zero allocations once populated. No-op while the cache is cold
+    /// (the next [`Dense::w_t`] call recomputes lazily anyway).
+    pub fn refresh_w_t(&mut self) {
+        if let Some(mut t) = self.w_t.take() {
+            self.w.transpose_into(&mut t);
+            let _ = self.w_t.set(t);
+        }
+    }
+
+    /// Drop the cache after an out-of-band mutation of `w`.
+    pub fn invalidate_w_t(&mut self) {
+        self.w_t.take();
     }
 
     /// Pre-activation output `z = x W + b` (serial whole-batch path; the
@@ -90,6 +147,30 @@ mod tests {
         assert_eq!(h.shape(), (5, 3));
         // relu output is non-negative
         assert!(h.data().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn w_t_cache_tracks_weight_updates() {
+        let mut rng = Rng::new(2);
+        let mut d = Dense::glorot(&mut rng, 6, 4, Activation::Identity);
+        assert_eq!(d.w_t().data(), d.w.transpose().data());
+        // refresh after an in-place update keeps the cache exact
+        d.w.axpy(0.5, &Matrix::full(6, 4, 1.0));
+        d.refresh_w_t();
+        assert_eq!(d.w_t().data(), d.w.transpose().data());
+        // invalidation recomputes lazily
+        d.w[(0, 0)] += 1.0;
+        d.invalidate_w_t();
+        assert_eq!(d.w_t().data(), d.w.transpose().data());
+    }
+
+    #[test]
+    fn refresh_on_cold_cache_is_noop_then_lazy() {
+        let mut rng = Rng::new(3);
+        let mut d = Dense::glorot(&mut rng, 3, 2, Activation::Relu);
+        d.refresh_w_t(); // cold: nothing to rewrite
+        d.w[(1, 1)] = 42.0;
+        assert_eq!(d.w_t()[(1, 1)], 42.0);
     }
 
     #[test]

@@ -11,21 +11,28 @@
 //! * [`step`] — the one implementation of the Mem-AOP-GD step on the
 //!   `exec` row-shard primitives, phase-split (`fwd_score` / caller-owned
 //!   per-layer `out_K` / `apply`) exactly like the compiled HLO
-//!   artifacts.
+//!   artifacts;
+//! * [`workspace`] — [`GraphWorkspace`], the reusable per-run arena
+//!   (trace, gradients, foldings, scores, shard partials, selections)
+//!   keyed by graph shape × batch size; with a resident workspace a
+//!   steady-state step performs **zero heap allocations** (§Perf pass,
+//!   asserted by `benches/kernels.rs`).
 //!
 //! The adapters are deliberately thin: `aop::AopEngine` is a 1-layer
 //! identity-activation graph, `model::mlp::Mlp` *is* [`Graph`], and the
 //! coordinator's `NativeTrainer` (hence the serve job path) drives the
-//! phase-split functions directly. There is no second copy of the
-//! forward/fold/score/masked-outer math anywhere.
+//! phase-split functions directly — each owning one workspace. There is
+//! no second copy of the forward/fold/score/masked-outer math anywhere.
 
 pub mod graph;
 pub mod layer;
 pub mod step;
+pub mod workspace;
 
 pub use graph::{Graph, GraphState, LayerState};
 pub use layer::{AopLayerConfig, Dense};
 pub use step::{
-    aop_weight_grad, apply, fwd_score, select_layers, select_with_configs, train_step,
-    train_step_exact, GraphFwd, LayerFwd, StepOutcome,
+    aop_weight_grad_ws, apply, fwd_score, select_layers_ws, select_with_configs, train_step,
+    train_step_exact, train_step_exact_ws, train_step_ws, StepOutcome,
 };
+pub use workspace::GraphWorkspace;

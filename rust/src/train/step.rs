@@ -13,49 +13,45 @@
 //!    (eq. (2a)) — all against the pre-update weights, so nothing in
 //!    this phase depends on any selection;
 //! 2. (between the phases) the caller owns the per-layer `out_K`
-//!    decisions — [`select_layers`] draws them output-layer-first from
-//!    one RNG stream, matching the historical single-layer stream;
+//!    decisions — [`select_layers_ws`]/[`select_with_configs`] draw them
+//!    output-layer-first from one RNG stream, matching the historical
+//!    single-layer stream;
 //! 3. [`apply`] — per-layer AOP weight update (compaction or mask
 //!    regime), exact bias update, memory retention (lines 8-9).
+//!
+//! **Workspace residency (§Perf pass)**: every transient of the step —
+//! trace, gradients, foldings, scores, shard partials, selections —
+//! lives in a caller-owned [`GraphWorkspace`], so a steady-state step
+//! performs zero heap allocations; narrow-shape matmuls read the
+//! layer's cached `W^T` ([`Dense::w_t`](crate::train::Dense::w_t),
+//! refreshed in place by [`apply`]) instead of re-transposing per
+//! shard. The convenience wrappers ([`train_step`],
+//! [`train_step_exact`]) build a throwaway workspace per call and are
+//! bit-identical to the resident-workspace path — there is exactly one
+//! implementation.
 //!
 //! Determinism contract (inherited from `exec` and asserted by
 //! `rust/tests/exec.rs`): every float quantity is computed on the fixed
 //! shard grid and reduced in fixed shard order, and selections are made
 //! globally on the calling thread — so curves and weights are
 //! bit-identical at every thread count, for every activation × policy ×
-//! per-layer-K combination.
+//! per-layer-K combination, whether the workspace is fresh or reused.
 
-use crate::aop::policy::{self, Policy, Selection};
-use crate::exec::{reduce, shard, Executor};
+use crate::aop::policy::{self, Policy, SelectScratch, Selection};
+use crate::exec::plan::ShardPlan;
+use crate::exec::{shard, Executor};
 use crate::model::activations::Activation;
 use crate::model::loss::correct_rows;
 use crate::tensor::{ops, rng::Rng, Matrix};
 
 use crate::train::graph::{Graph, GraphState};
 use crate::train::layer::AopLayerConfig;
+use crate::train::workspace::GraphWorkspace;
 
-/// Phase-1 outputs for one layer.
-pub struct LayerFwd {
-    /// Folded `X̂ = m^X + √η X` (alg. lines 3-4).
-    pub xhat: Matrix,
-    /// Folded `Ĝ = m^G + √η G`.
-    pub ghat: Matrix,
-    /// Policy scores `‖X̂_(m)‖ ‖Ĝ_(m)‖`, length M.
-    pub scores: Vec<f32>,
-    /// Raw bias gradient (column sums of `G`, unscaled by η).
-    pub db: Vec<f32>,
-}
-
-/// Phase-1 outputs for the whole graph (index = layer index).
-pub struct GraphFwd {
-    pub loss: f32,
-    /// Train-batch argmax accuracy (1.0 for single-output regression).
-    pub acc: f32,
-    pub layers: Vec<LayerFwd>,
-}
-
-/// One full step's diagnostics.
-#[derive(Debug, Clone)]
+/// One full step's diagnostics. Per-layer `k_effective` values live in
+/// the workspace ([`GraphWorkspace::layer_k`]) so the outcome itself
+/// stays allocation-free.
+#[derive(Debug, Clone, Copy)]
 pub struct StepOutcome {
     pub loss: f32,
     pub acc: f32,
@@ -64,15 +60,14 @@ pub struct StepOutcome {
     pub wstar_fro: f32,
     /// Total distinct outer products evaluated across layers.
     pub k_effective: usize,
-    /// Distinct outer products evaluated per layer.
-    pub layer_k: Vec<usize>,
 }
 
 /// Phase 1: forward trace + per-layer folding/scores/bias sums + the
 /// backward gradient chain, all row-sharded on the executor's fixed
-/// grid. Selections do not exist yet — everything here is computed from
-/// the pre-update weights, which is what lets the caller own the policy
-/// decision (and the HLO path mirror it artifact-for-artifact).
+/// grid, written into the workspace. Selections do not exist yet —
+/// everything here is computed from the pre-update weights, which is
+/// what lets the caller own the policy decision (and the HLO path
+/// mirror it artifact-for-artifact). Returns `(train loss, batch acc)`.
 pub fn fwd_score(
     graph: &Graph,
     state: &GraphState,
@@ -80,7 +75,8 @@ pub fn fwd_score(
     y: &Matrix,
     eta: f32,
     exec: &Executor,
-) -> GraphFwd {
+    ws: &mut GraphWorkspace,
+) -> (f32, f32) {
     let n = graph.layers.len();
     assert_eq!(state.layers.len(), n, "state layers vs graph layers");
     let m = x.rows();
@@ -89,7 +85,10 @@ pub fn fwd_score(
         graph.layers[0].fan_in(),
         "input dim vs first layer"
     );
+    ws.ensure(graph, m);
     let plan = exec.plan(m);
+    let n_shards = plan.len();
+    debug_assert_eq!(n_shards, ws.n_shards, "plan vs workspace shard count");
     let se = eta.sqrt();
 
     // Forward trace: acts[i] = act_i(acts[i-1] W_i + b_i). The input
@@ -97,134 +96,166 @@ pub fn fwd_score(
     // retained — every activation's derivative is computed from its
     // output (`Activation::grad_from_output`), for relu bitwise the same
     // mask as the `z > 0` form.
-    let mut acts: Vec<Matrix> = Vec::with_capacity(n);
     for (li, layer) in graph.layers.iter().enumerate() {
-        let mut h = Matrix::zeros(m, layer.fan_out());
-        {
-            let prev: &Matrix = if li == 0 { x } else { &acts[li - 1] };
-            let hb = shard::RowBlocks::of(&mut h, &plan);
-            exec.run_each(&plan, |i, rows| {
-                let mut blk = hb.lock(i);
-                shard::forward_rows(prev, &layer.w, &layer.b, rows, &mut blk);
-                layer.activation.apply_block(&mut blk);
-            });
-        }
-        acts.push(h);
+        // warm the transpose cache on the coordinator thread (so shards
+        // never race the lazy first computation) — but only when the
+        // narrow-B path will actually read it; a wide layer's cache
+        // stays cold and costs nothing here or in `apply`'s refresh
+        let w_t = layer.warmed_w_t();
+        let (before, rest) = ws.acts.split_at_mut(li);
+        let h = &mut rest[0];
+        let prev: &Matrix = if li == 0 { x } else { &before[li - 1] };
+        let hb = shard::RowBlocks::of(h, &plan);
+        exec.run_each(&plan, |i, rows| {
+            // SAFETY: run_each claims each shard index exactly once
+            let blk = unsafe { hb.block(i) };
+            match w_t {
+                Some(t) => shard::forward_rows_bt(prev, &layer.w, t, &layer.b, rows, blk),
+                None => shard::forward_rows(prev, &layer.w, &layer.b, rows, blk),
+            }
+            layer.activation.apply_block(blk);
+        });
     }
 
     // Head loss + output gradient (+ integer accuracy counts),
-    // row-sharded. With a non-identity head activation the loss sees
-    // `h = act(z)`, so the head's G picks up the chain factor
-    // `act'(h)` — identity heads (the flat engine, the MLP default)
-    // skip the multiply entirely and keep their historical bits.
-    let out = &acts[n - 1];
+    // row-sharded into workspace slots. With a non-identity head
+    // activation the loss sees `h = act(z)`, so the head's G picks up
+    // the chain factor `act'(h)` — identity heads (the flat engine, the
+    // MLP default) skip the multiply entirely.
+    let out = &ws.acts[n - 1];
     let p_out = out.cols();
     assert_eq!(y.shape(), (m, p_out), "target shape");
     let act_out = graph.layers[n - 1].activation;
-    let mut g = Matrix::zeros(m, p_out);
-    let head_parts: Vec<(f32, usize)> = {
-        let gb = shard::RowBlocks::of(&mut g, &plan);
-        exec.map(&plan, |i, rows| {
+    {
+        let gb = shard::RowBlocks::of(&mut ws.grads[n - 1], &plan);
+        let loss_parts = &ws.loss_parts;
+        exec.run_each(&plan, |i, rows| {
             let ob = shard::rows_of(out, rows.clone());
             let lp = graph.loss.partial_loss(ob, y, rows.clone());
-            let mut blk = gb.lock(i);
-            graph.loss.grad_rows(ob, y, rows.clone(), m, &mut blk);
+            // SAFETY: run_each claims each shard index exactly once
+            let blk = unsafe { gb.block(i) };
+            graph.loss.grad_rows(ob, y, rows.clone(), m, blk);
             if act_out != Activation::Identity {
                 for (v, &h) in blk.iter_mut().zip(ob.iter()) {
                     *v *= act_out.grad_from_output(h);
                 }
             }
-            (lp, correct_rows(ob, y, rows))
-        })
-    };
-    let loss = graph
-        .loss
-        .finish_loss(reduce::sum_f32(head_parts.iter().map(|(l, _)| *l)), m, p_out);
-    let correct = reduce::sum_usize(head_parts.iter().map(|(_, c)| *c));
+            *loss_parts[i].lock().unwrap() = (lp, correct_rows(ob, y, rows));
+        });
+    }
+    // fixed shard-order reduction of the head partials
+    let mut loss_total = 0.0f32;
+    let mut correct = 0usize;
+    for slot in ws.loss_parts.iter().take(n_shards) {
+        let (l, c) = *slot.lock().unwrap();
+        loss_total += l;
+        correct += c;
+    }
+    let loss = graph.loss.finish_loss(loss_total, m, p_out);
     let acc = correct as f32 / m as f32;
 
     // Backward sweep: per-layer fold/scores/db, then chain G down with
     // the pre-update weights (eq. (2a)).
-    let mut infos: Vec<Option<LayerFwd>> = (0..n).map(|_| None).collect();
+    let shard_rows = ShardPlan::with_granularity(n_shards, 1);
+    let max_pf = ws.db_parts.cols();
     for i in (0..n).rev() {
         let layer = &graph.layers[i];
-        let xin: &Matrix = if i == 0 { x } else { &acts[i - 1] };
         let mem = &state.layers[i].mem;
         // Exact selection never reads scores (`select_exact` takes every
         // row) — skip the per-row norm products for those layers
         let need_scores = state.layers[i].cfg.policy != Policy::Exact;
         let (nf, pf) = (layer.fan_in(), layer.fan_out());
-        let mut xhat = Matrix::zeros(m, nf);
-        let mut ghat = Matrix::zeros(m, pf);
-        let mut scores = vec![0.0f32; m];
-        let db_parts: Vec<Vec<f32>> = {
-            let xh_blocks = shard::RowBlocks::of(&mut xhat, &plan);
-            let gh_blocks = shard::RowBlocks::of(&mut ghat, &plan);
-            let sc_blocks = shard::RowBlocks::of_slice(&mut scores, 1, &plan);
-            exec.map(&plan, |si, rows| {
-                let mut xh = xh_blocks.lock(si);
-                let mut gh = gh_blocks.lock(si);
+        {
+            let xin: &Matrix = if i == 0 { x } else { &ws.acts[i - 1] };
+            let g = &ws.grads[i];
+            let xh_blocks = shard::RowBlocks::of(&mut ws.xhat[i], &plan);
+            let gh_blocks = shard::RowBlocks::of(&mut ws.ghat[i], &plan);
+            let sc_blocks = shard::RowBlocks::of_slice(&mut ws.scores[i], 1, &plan);
+            let db_blocks = shard::RowBlocks::of_slice(ws.db_parts.data_mut(), max_pf, &shard_rows);
+            exec.run_each(&plan, |si, rows| {
+                // SAFETY (×4): run_each claims each shard index exactly
+                // once, so every splitter hands out block `si` once
+                let xh = unsafe { xh_blocks.block(si) };
+                let gh = unsafe { gh_blocks.block(si) };
                 if mem.enabled {
-                    shard::fold_rows(xin, &mem.mem_x, se, rows.clone(), &mut xh);
-                    shard::fold_rows(&g, &mem.mem_g, se, rows.clone(), &mut gh);
+                    shard::fold_rows(xin, &mem.mem_x, se, rows.clone(), xh);
+                    shard::fold_rows(g, &mem.mem_g, se, rows.clone(), gh);
                 } else {
-                    shard::scale_rows(xin, se, rows.clone(), &mut xh);
-                    shard::scale_rows(&g, se, rows.clone(), &mut gh);
+                    shard::scale_rows(xin, se, rows.clone(), xh);
+                    shard::scale_rows(g, se, rows.clone(), gh);
                 }
                 if need_scores {
-                    let mut sc = sc_blocks.lock(si);
-                    shard::score_rows(&xh, &gh, nf, pf, &mut sc);
+                    let sc = unsafe { sc_blocks.block(si) };
+                    shard::score_rows(xh, gh, nf, pf, sc);
                 }
-                shard::col_sums_rows(shard::rows_of(&g, rows), pf)
-            })
-        };
-        let db = reduce::sum_vecs(pf, db_parts.iter().map(|d| d.as_slice()));
+                let db_blk = unsafe { db_blocks.block(si) };
+                shard::col_sums_rows_into(shard::rows_of(g, rows), pf, &mut db_blk[..pf]);
+            });
+        }
+        // reduce the bias-gradient partials in fixed shard order
+        {
+            let db = &mut ws.db[i];
+            db.fill(0.0);
+            for si in 0..n_shards {
+                for (d, &v) in db.iter_mut().zip(ws.db_parts.row(si)[..pf].iter()) {
+                    *d += v;
+                }
+            }
+        }
 
         if i > 0 {
-            // eq. (2a): G_i = G_{i+1} W_i^T ⊙ act'(h_{i-1}) — row-local,
-            // so sharding is bitwise-free.
-            let wt = layer.w.transpose();
+            // eq. (2a): G_{i-1} = G_i W_i^T ⊙ act'(h_{i-1}) — row-local,
+            // so sharding is bitwise-free. The cached w_t IS the matmul
+            // operand here, and `w` itself is its transpose — so the
+            // narrow-B path needs no extra transpose either.
+            let w_t = layer.w_t();
             let act_prev = graph.layers[i - 1].activation;
-            let h_prev = &acts[i - 1];
-            let mut g_next = Matrix::zeros(m, nf);
-            {
-                let gn_blocks = shard::RowBlocks::of(&mut g_next, &plan);
-                exec.run_each(&plan, |si, rows| {
-                    let mut blk = gn_blocks.lock(si);
-                    ops::matmul_rows(&g, &wt, rows.clone(), &mut blk);
-                    let hb = shard::rows_of(h_prev, rows);
-                    for (v, &h) in blk.iter_mut().zip(hb.iter()) {
-                        *v *= act_prev.grad_from_output(h);
-                    }
-                });
-            }
-            g = g_next;
+            let h_prev = &ws.acts[i - 1];
+            let (gl, gr) = ws.grads.split_at_mut(i);
+            let g_cur = &gr[0];
+            let gn_blocks = shard::RowBlocks::of(&mut gl[i - 1], &plan);
+            exec.run_each(&plan, |si, rows| {
+                // SAFETY: run_each claims each shard index exactly once
+                let blk = unsafe { gn_blocks.block(si) };
+                ops::matmul_rows_bt(g_cur, w_t, &layer.w, rows.clone(), blk);
+                let hb = shard::rows_of(h_prev, rows);
+                for (v, &h) in blk.iter_mut().zip(hb.iter()) {
+                    *v *= act_prev.grad_from_output(h);
+                }
+            });
         }
-        infos[i] = Some(LayerFwd {
-            xhat,
-            ghat,
-            scores,
-            db,
-        });
     }
-    GraphFwd {
-        loss,
-        acc,
-        layers: infos
-            .into_iter()
-            .map(|i| i.expect("backward sweep visits every layer"))
-            .collect(),
-    }
+    ws.fwd = Some((loss, acc));
+    (loss, acc)
+}
+
+/// One layer's `out_K` draw — THE definition shared by the workspace
+/// path and the experiment loop, so the bit-compatibility-critical
+/// clamp (`k.min(m)`) and RNG consumption live in one place.
+fn select_one_into(
+    cfg: &AopLayerConfig,
+    scores: &[f32],
+    rng: &mut Rng,
+    scratch: &mut SelectScratch,
+    sel: &mut Selection,
+) {
+    policy::select_into(
+        cfg.policy,
+        scores,
+        cfg.k.min(scores.len()),
+        cfg.memory,
+        rng,
+        scratch,
+        sel,
+    );
 }
 
 /// Draw every layer's `out_K` decision from one RNG stream,
 /// **output-layer-first** (the order the backward sweep produced the
 /// scores in, and — for a single layer — exactly the historical
-/// consumption pattern of the flat engine). This function is THE
-/// definition of the draw order: every surface (engine, MLP,
-/// experiment loop, serve jobs) consumes the stream through it, so the
-/// bit-compatibility-critical invariant lives in one place. Returns
-/// selections in layer order.
+/// consumption pattern of the flat engine). Returns selections in layer
+/// order. The workspace path ([`select_layers_ws`]) draws through the
+/// same per-layer helper, so the two can never drift.
 pub fn select_with_configs(
     cfgs: &[AopLayerConfig],
     scores: &[&[f32]],
@@ -232,126 +263,209 @@ pub fn select_with_configs(
 ) -> Vec<Selection> {
     let n = cfgs.len();
     assert_eq!(scores.len(), n, "one score vector per layer");
-    let mut sels: Vec<Option<Selection>> = (0..n).map(|_| None).collect();
+    let mut scratch = SelectScratch::new();
+    let mut sels: Vec<Selection> = scores
+        .iter()
+        .map(|s| Selection::with_capacity(s.len()))
+        .collect();
     for i in (0..n).rev() {
-        let c = &cfgs[i];
-        sels[i] = Some(policy::select(
-            c.policy,
-            scores[i],
-            c.k.min(scores[i].len()),
-            c.memory,
-            rng,
-        ));
+        select_one_into(&cfgs[i], scores[i], rng, &mut scratch, &mut sels[i]);
     }
-    sels.into_iter()
-        .map(|s| s.expect("selection drawn for every layer"))
-        .collect()
+    sels
 }
 
-/// [`select_with_configs`] against a state's per-layer configs and a
-/// phase-1 result's score vectors.
-pub fn select_layers(state: &GraphState, fwd: &GraphFwd, rng: &mut Rng) -> Vec<Selection> {
-    assert_eq!(fwd.layers.len(), state.layers.len());
-    let cfgs: Vec<AopLayerConfig> = state.layers.iter().map(|l| l.cfg).collect();
-    let scores: Vec<&[f32]> = fwd.layers.iter().map(|l| l.scores.as_slice()).collect();
-    select_with_configs(&cfgs, &scores, rng)
-}
-
-/// One layer's AOP weight gradient `Ŵ*_i` from its selection, sharded:
-/// each shard accumulates the outer products of its own selected rows
-/// (compaction regime) or its full masked row range (mask regime), and
-/// the partials reduce in fixed shard order.
-pub fn aop_weight_grad(
-    lf: &LayerFwd,
-    sel: &Selection,
-    compact: bool,
-    exec: &Executor,
-) -> Matrix {
-    let (m, nf) = lf.xhat.shape();
-    let pf = lf.ghat.cols();
-    let plan = exec.plan(m);
-    let partials: Vec<Option<Matrix>> = if compact {
-        let pairs = sel.compact_pairs();
-        exec.map(&plan, |_, rows| {
-            // `pairs` is ascending (Selection contract), so the filtered
-            // slice keeps row order within the shard
-            let local: Vec<(usize, f32)> = pairs
-                .iter()
-                .copied()
-                .filter(|(r, _)| rows.contains(r))
-                .collect();
-            if local.is_empty() {
-                None
-            } else {
-                Some(ops::masked_outer_compact(&lf.xhat, &lf.ghat, &local))
-            }
-        })
-    } else {
-        exec.map(&plan, |_, rows| {
-            Some(ops::masked_outer_range(
-                &lf.xhat,
-                &lf.ghat,
-                &sel.sel_scale,
-                rows,
-            ))
-        })
-    };
-    reduce::sum_matrices(nf, pf, partials)
+/// [`select_with_configs`] against the workspace's score vectors and
+/// reusable selections — zero allocations in steady state. Results land
+/// in [`GraphWorkspace::selections`].
+pub fn select_layers_ws(state: &GraphState, ws: &mut GraphWorkspace, rng: &mut Rng) {
+    let n = state.layers.len();
+    assert_eq!(ws.sels.len(), n, "workspace selections vs layers");
+    for i in (0..n).rev() {
+        select_one_into(
+            &state.layers[i].cfg,
+            &ws.scores[i],
+            rng,
+            &mut ws.scratch,
+            &mut ws.sels[i],
+        );
+    }
 }
 
 /// Phase 2: apply the per-layer selections — AOP weight update, exact
 /// bias update `b -= η Σ_m G_(m)`, memory retention of the unselected
-/// rows. Layers are independent here (the backward chain already ran in
-/// phase 1 against pre-update weights), so updates land in place.
+/// rows — all on workspace partial buffers. Layers are independent here
+/// (the backward chain already ran in phase 1 against pre-update
+/// weights), so updates land in place; each layer's `w_t` cache is
+/// refreshed (in place) after its weight update.
 pub fn apply(
     graph: &mut Graph,
     state: &mut GraphState,
-    fwd: &GraphFwd,
     sels: &[Selection],
     eta: f32,
     exec: &Executor,
     compact: bool,
+    ws: &mut GraphWorkspace,
 ) -> StepOutcome {
     let n = graph.layers.len();
     assert_eq!(sels.len(), n, "one selection per layer");
-    assert_eq!(fwd.layers.len(), n);
-    let m = fwd.layers[0].xhat.rows();
+    let (loss, acc) = ws.fwd.take().expect("apply called without fwd_score");
+    let m = ws.batch;
     let plan = exec.plan(m);
+    debug_assert_eq!(plan.len(), ws.n_shards, "plan vs workspace shard count");
     let mut fro_sq = 0.0f64;
-    let mut layer_k = Vec::with_capacity(n);
+    let mut k_total = 0usize;
+    ws.layer_k.clear();
     for i in 0..n {
-        let lf = &fwd.layers[i];
-        let sel = &sels[i];
-        let wstar = aop_weight_grad(lf, sel, compact, exec);
-        fro_sq += (wstar.frobenius() as f64).powi(2);
         let layer = &mut graph.layers[i];
-        layer.w.axpy(-1.0, &wstar);
-        for (b, d) in layer.b.iter_mut().zip(lf.db.iter()) {
+        let (nf, pf) = (layer.fan_in(), layer.fan_out());
+        let sel = &sels[i];
+        assert_eq!(sel.sel_scale.len(), m, "selection rows vs batch");
+        reduce_wstar_into_ws(ws, i, sel, compact, exec);
+        fro_sq += (ws.wstar[i].frobenius() as f64).powi(2);
+        // weight update straight from the accumulation layout — no
+        // transpose copy; per-element it is the same subtraction
+        if ops::aop_transposed(nf, pf) {
+            layer.w.sub_transposed(&ws.wstar[i]);
+        } else {
+            layer.w.axpy(-1.0, &ws.wstar[i]);
+        }
+        for (b, d) in layer.b.iter_mut().zip(ws.db[i].iter()) {
             *b -= eta * d;
         }
+        layer.refresh_w_t();
         let mem = &mut state.layers[i].mem;
         if mem.enabled {
+            let xhat = &ws.xhat[i];
+            let ghat = &ws.ghat[i];
             let mx_blocks = shard::RowBlocks::of(&mut mem.mem_x, &plan);
             let mg_blocks = shard::RowBlocks::of(&mut mem.mem_g, &plan);
             exec.run_each(&plan, |si, rows| {
-                let mut mx = mx_blocks.lock(si);
-                shard::keep_rows(&lf.xhat, &sel.keep, rows.clone(), &mut mx);
-                let mut mg = mg_blocks.lock(si);
-                shard::keep_rows(&lf.ghat, &sel.keep, rows, &mut mg);
+                // SAFETY (×2): run_each claims each shard index exactly once
+                let mx = unsafe { mx_blocks.block(si) };
+                shard::keep_rows(xhat, &sel.keep, rows.clone(), mx);
+                let mg = unsafe { mg_blocks.block(si) };
+                shard::keep_rows(ghat, &sel.keep, rows, mg);
             });
         }
-        layer_k.push(sel.k_effective());
+        ws.layer_k.push(sel.k_effective());
+        k_total += sel.k_effective();
     }
     StepOutcome {
-        loss: fwd.loss,
-        acc: fwd.acc,
+        loss,
+        acc,
         wstar_fro: fro_sq.sqrt() as f32,
-        k_effective: layer_k.iter().sum(),
-        layer_k,
+        k_effective: k_total,
     }
 }
 
-/// Full Algorithm-1 step: `fwd_score → out_K per layer → apply`.
+/// Shard-dispatch + fixed-order reduction of one layer's `Ŵ*` into
+/// `ws.wstar[li]` (in the layer's [`ops::aop_layout`]). THE single
+/// definition of the bit-compatibility-critical reduction, shared by
+/// [`apply`] and the optimizer path: per-shard partials land in the
+/// workspace buffer, then sum in ascending shard order — and
+/// compaction-regime shards with no selected rows are skipped, exactly
+/// like the historical `Option<Matrix>::None` partials (whether a shard
+/// contributes depends only on the selection, never on scheduling).
+fn reduce_wstar_into_ws(
+    ws: &mut GraphWorkspace,
+    li: usize,
+    sel: &Selection,
+    compact: bool,
+    exec: &Executor,
+) {
+    let (m, nf) = ws.xhat[li].shape();
+    let pf = ws.ghat[li].cols();
+    let plan = exec.plan(m);
+    let n_shards = plan.len();
+    let (la, lb) = ops::aop_layout(nf, pf);
+    let shard_rows = ShardPlan::with_granularity(n_shards, 1);
+    {
+        let xhat = &ws.xhat[li];
+        let ghat = &ws.ghat[li];
+        let parts =
+            shard::RowBlocks::of_slice(ws.wstar_parts[li].data_mut(), la * lb, &shard_rows);
+        exec.run_each(&plan, |si, rows| {
+            // SAFETY: run_each claims each shard index exactly once
+            let blk = unsafe { parts.block(si) };
+            if compact {
+                ops::masked_outer_compact_range_into(
+                    xhat,
+                    ghat,
+                    &sel.indices,
+                    &sel.sel_scale,
+                    rows,
+                    blk,
+                );
+            } else {
+                ops::masked_outer_range_into(xhat, ghat, &sel.sel_scale, rows, blk);
+            }
+        });
+    }
+    let wstar = &mut ws.wstar[li];
+    wstar.data_mut().fill(0.0);
+    let parts = ws.wstar_parts[li].data();
+    for si in 0..n_shards {
+        if compact {
+            let rows = plan.range(si);
+            let lo = sel.indices.partition_point(|&r| r < rows.start);
+            let hi = sel.indices.partition_point(|&r| r < rows.end);
+            if lo == hi {
+                continue;
+            }
+        }
+        let part = &parts[si * la * lb..(si + 1) * la * lb];
+        for (o, &v) in wstar.data_mut().iter_mut().zip(part.iter()) {
+            *o += v;
+        }
+    }
+}
+
+/// One layer's reduced AOP weight gradient `Ŵ*` as an owned `n × p`
+/// matrix, recomputed from the workspace's last `fwd_score` buffers —
+/// the optimizer path (Remark 1), which hands the raw gradient to an
+/// external optimizer instead of applying it. Allocates for the result;
+/// not a steady-state step path.
+pub fn aop_weight_grad_ws(
+    ws: &mut GraphWorkspace,
+    li: usize,
+    sel: &Selection,
+    compact: bool,
+    exec: &Executor,
+) -> Matrix {
+    let nf = ws.xhat[li].cols();
+    let pf = ws.ghat[li].cols();
+    reduce_wstar_into_ws(ws, li, sel, compact, exec);
+    if ops::aop_transposed(nf, pf) {
+        ws.wstar[li].transpose()
+    } else {
+        ws.wstar[li].clone()
+    }
+}
+
+/// Full Algorithm-1 step on a caller-owned workspace: `fwd_score →
+/// out_K per layer → apply`. Zero heap allocations in steady state.
+#[allow(clippy::too_many_arguments)]
+pub fn train_step_ws(
+    graph: &mut Graph,
+    state: &mut GraphState,
+    x: &Matrix,
+    y: &Matrix,
+    eta: f32,
+    rng: &mut Rng,
+    exec: &Executor,
+    compact: bool,
+    ws: &mut GraphWorkspace,
+) -> StepOutcome {
+    fwd_score(graph, state, x, y, eta, exec, ws);
+    select_layers_ws(state, ws, rng);
+    let sels = ws.take_sels();
+    let out = apply(graph, state, &sels, eta, exec, compact, ws);
+    ws.put_sels(sels);
+    out
+}
+
+/// [`train_step_ws`] with a throwaway workspace — the convenience form
+/// for tests and one-off steps (bit-identical; it is the same code).
 #[allow(clippy::too_many_arguments)]
 pub fn train_step(
     graph: &mut Graph,
@@ -363,14 +477,35 @@ pub fn train_step(
     exec: &Executor,
     compact: bool,
 ) -> StepOutcome {
-    let fwd = fwd_score(graph, state, x, y, eta, exec);
-    let sels = select_layers(state, &fwd, rng);
-    apply(graph, state, &fwd, &sels, eta, exec, compact)
+    let mut ws = GraphWorkspace::new(graph, x.rows());
+    train_step_ws(graph, state, x, y, eta, rng, exec, compact, &mut ws)
 }
 
-/// Exact back-propagation (plain SGD) through the very same step: every
-/// row selected deterministically, memories disabled (and — unlike the
-/// old `train_step_sgd` hack — no throwaway memory matrices and no dummy
+/// Exact back-propagation (plain SGD) through the very same step on a
+/// caller-owned workspace: every row selected deterministically,
+/// memories disabled, no RNG consumed.
+pub fn train_step_exact_ws(
+    graph: &mut Graph,
+    state: &mut GraphState,
+    x: &Matrix,
+    y: &Matrix,
+    eta: f32,
+    exec: &Executor,
+    ws: &mut GraphWorkspace,
+) -> StepOutcome {
+    let m = x.rows();
+    fwd_score(graph, state, x, y, eta, exec, ws);
+    let mut sels = ws.take_sels();
+    for sel in sels.iter_mut() {
+        policy::select_exact_into(m, sel);
+    }
+    let out = apply(graph, state, &sels, eta, exec, true, ws);
+    ws.put_sels(sels);
+    out
+}
+
+/// Exact back-propagation with throwaway state + workspace — the
+/// historical `train_step_sgd` surface (no memory matrices and no dummy
 /// RNG are ever constructed).
 pub fn train_step_exact(
     graph: &mut Graph,
@@ -381,11 +516,8 @@ pub fn train_step_exact(
 ) -> StepOutcome {
     let m = x.rows();
     let mut state = GraphState::exact(graph, m);
-    let fwd = fwd_score(graph, &state, x, y, eta, exec);
-    let sels: Vec<Selection> = (0..graph.layers.len())
-        .map(|_| policy::select_exact(m))
-        .collect();
-    apply(graph, &mut state, &fwd, &sels, eta, exec, true)
+    let mut ws = GraphWorkspace::new(graph, m);
+    train_step_exact_ws(graph, &mut state, x, y, eta, exec, &mut ws)
 }
 
 #[cfg(test)]
@@ -433,6 +565,36 @@ mod tests {
     }
 
     #[test]
+    fn reused_workspace_is_bit_identical_to_fresh() {
+        // the satellite guarantee at unit level: a workspace reused
+        // across steps produces the same bits as a fresh one per step
+        let mut mk = || {
+            let mut rng = Rng::new(12);
+            let g = Graph::relu_mlp(&mut rng, &[6, 9, 3], LossKind::Mse);
+            let st = GraphState::uniform(&g, 16, Policy::WeightedK, 5, true);
+            (g, st)
+        };
+        let mut rng = Rng::new(5);
+        let (x, y) = toy_data(&mut rng, 16, 6, 3);
+        let exec = Executor::serial();
+        let (mut ga, mut sta) = mk();
+        let (mut gb, mut stb) = mk();
+        let mut ra = Rng::new(77);
+        let mut rb = Rng::new(77);
+        let mut ws = GraphWorkspace::new(&ga, 16);
+        for _ in 0..12 {
+            let a = train_step_ws(&mut ga, &mut sta, &x, &y, 0.05, &mut ra, &exec, true, &mut ws);
+            let b = train_step(&mut gb, &mut stb, &x, &y, 0.05, &mut rb, &exec, true);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.wstar_fro.to_bits(), b.wstar_fro.to_bits());
+        }
+        for (la, lb) in ga.layers.iter().zip(gb.layers.iter()) {
+            assert_eq!(la.w.data(), lb.w.data());
+            assert_eq!(la.b, lb.b);
+        }
+    }
+
+    #[test]
     fn exact_policy_is_sgd() {
         // AOP with the Exact policy must equal the plain SGD step exactly
         // (they are literally the same code path now).
@@ -466,8 +628,9 @@ mod tests {
         ];
         let mut state = GraphState::from_configs(&g, 8, &cfgs);
         let exec = Executor::serial();
-        let out = train_step(&mut g, &mut state, &x, &y, 0.05, &mut rng, &exec, true);
-        assert_eq!(out.layer_k, vec![3, 5]);
+        let mut ws = GraphWorkspace::new(&g, 8);
+        let out = train_step_ws(&mut g, &mut state, &x, &y, 0.05, &mut rng, &exec, true, &mut ws);
+        assert_eq!(ws.layer_k(), &[3, 5]);
         assert_eq!(out.k_effective, 8);
     }
 
@@ -524,8 +687,10 @@ mod tests {
         for (pi, &(r, c)) in probes.iter().enumerate() {
             let mut gp = g.clone();
             gp.layers[0].w[(r, c)] += eps;
+            gp.layers[0].invalidate_w_t();
             let mut gm = g.clone();
             gm.layers[0].w[(r, c)] -= eps;
+            gm.layers[0].invalidate_w_t();
             num_grad[pi] = (loss_at(&gp) - loss_at(&gm)) / (2.0 * eps);
         }
         let eta = 0.05f32;
@@ -558,8 +723,10 @@ mod tests {
         for (pi, &(li, r, c)) in probes.iter().enumerate() {
             let mut gp = g.clone();
             gp.layers[li].w[(r, c)] += eps;
+            gp.layers[li].invalidate_w_t();
             let mut gm = g.clone();
             gm.layers[li].w[(r, c)] -= eps;
+            gm.layers[li].invalidate_w_t();
             num_grad[pi] = (loss_at(&gp) - loss_at(&gm)) / (2.0 * eps);
         }
         let w0: Vec<Matrix> = g.layers.iter().map(|l| l.w.clone()).collect();
@@ -590,5 +757,16 @@ mod tests {
             assert_eq!(nz, 12, "12 unselected rows must sit in memory");
         }
         assert!(state.deferred_mass() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "apply called without fwd_score")]
+    fn apply_without_fwd_score_panics() {
+        let mut rng = Rng::new(11);
+        let mut g = Graph::relu_mlp(&mut rng, &[4, 2], LossKind::Mse);
+        let mut state = GraphState::exact(&g, 8);
+        let mut ws = GraphWorkspace::new(&g, 8);
+        let sels = vec![policy::select_exact(8)];
+        apply(&mut g, &mut state, &sels, 0.1, &Executor::serial(), true, &mut ws);
     }
 }

@@ -1,0 +1,266 @@
+//! [`GraphWorkspace`] — the reusable per-run arena behind the
+//! zero-allocation training step (§Perf pass).
+//!
+//! One Mem-AOP-GD step needs a surprising amount of transient storage:
+//! the forward trace, the backward gradient chain, per-layer `X̂`/`Ĝ`
+//! foldings, policy scores, bias-gradient and outer-product shard
+//! partials, and the per-layer selections. Before this type existed a
+//! single step performed dozens of `Matrix::zeros`/`transpose`/`Vec`
+//! heap allocations; now every buffer lives here, keyed by
+//! **graph shape × batch size**, and is reused step after step — a
+//! steady-state step allocates nothing (asserted by the allocation
+//! counter in `benches/kernels.rs`).
+//!
+//! Ownership rules:
+//!
+//! * every long-lived training surface owns one workspace —
+//!   `NativeTrainer` (and through it every serve job) and `AopEngine`
+//!   construct theirs up front; the convenience wrappers
+//!   (`train::train_step`, the MLP methods) build a throwaway workspace
+//!   per call, trading allocations for API simplicity on cold paths;
+//! * [`GraphWorkspace::ensure`] re-keys (reallocates) only when the
+//!   graph widths or the batch size actually change, so calling it at
+//!   the top of every step is free in steady state;
+//! * buffers hold *stale* values between steps by design — every kernel
+//!   that reads a workspace buffer either overwrote it first or zeroes
+//!   it (`*_into` kernels `fill(0.0)` before accumulating). The one
+//!   deliberate exception: `scores[i]` of an `Exact`-policy layer is
+//!   never written (exact selection reads no scores) and must be treated
+//!   as undefined.
+
+use std::sync::Mutex;
+
+use crate::aop::policy::{SelectScratch, Selection};
+use crate::exec::plan::ShardPlan;
+use crate::tensor::{ops, Matrix};
+use crate::train::graph::Graph;
+
+/// Reusable step storage for one (graph shape, batch size) key. See the
+/// module docs for the ownership and staleness rules.
+pub struct GraphWorkspace {
+    /// Key: the graph's width chain `[fan_in_0, fan_out_0, ..]`.
+    pub(crate) widths: Vec<usize>,
+    /// Key: rows per training batch.
+    pub(crate) batch: usize,
+    /// Shards of the canonical plan for `batch` rows.
+    pub(crate) n_shards: usize,
+
+    /// Forward trace: `acts[i]` is layer i's activated output (batch × fan_out_i).
+    pub(crate) acts: Vec<Matrix>,
+    /// Backward chain: `grads[i]` is ∂L/∂acts\[i\] (batch × fan_out_i).
+    pub(crate) grads: Vec<Matrix>,
+    /// Folded `X̂` per layer (batch × fan_in_i).
+    pub(crate) xhat: Vec<Matrix>,
+    /// Folded `Ĝ` per layer (batch × fan_out_i).
+    pub(crate) ghat: Vec<Matrix>,
+    /// Policy scores per layer (len batch; undefined for Exact layers).
+    pub(crate) scores: Vec<Vec<f32>>,
+    /// Reduced bias gradient per layer (len fan_out_i).
+    pub(crate) db: Vec<Vec<f32>>,
+
+    /// Per-shard (loss partial, correct count) slots for the head pass.
+    pub(crate) loss_parts: Vec<Mutex<(f32, usize)>>,
+    /// Per-shard bias-gradient partials: row `si` holds shard si's
+    /// column sums in its first fan_out_i entries (cols = max fan_out).
+    pub(crate) db_parts: Matrix,
+    /// Per-layer outer-product shard partials in the layer's
+    /// [`ops::aop_layout`]: `(n_shards · a_i) × b_i`, block si = rows
+    /// `[si·a_i, (si+1)·a_i)`.
+    pub(crate) wstar_parts: Vec<Matrix>,
+    /// Per-layer reduced `Ŵ*` in the same layout (`a_i × b_i`).
+    pub(crate) wstar: Vec<Matrix>,
+
+    /// Per-layer reusable selections (moved out during `apply`, moved
+    /// back after — `std::mem::take` swaps with an unallocated Vec).
+    pub(crate) sels: Vec<Selection>,
+    /// Policy scratch shared by every layer's draw.
+    pub(crate) scratch: SelectScratch,
+    /// Per-layer distinct outer products of the last applied step.
+    pub(crate) layer_k: Vec<usize>,
+    /// Set by `fwd_score` (loss, acc), consumed by `apply` — the pairing
+    /// guard behind the "apply called without fwd_score" panic.
+    pub(crate) fwd: Option<(f32, f32)>,
+}
+
+impl GraphWorkspace {
+    /// Allocate every buffer for `graph` at `batch` rows.
+    pub fn new(graph: &Graph, batch: usize) -> GraphWorkspace {
+        assert!(batch > 0, "workspace needs a non-empty batch");
+        let widths = graph.widths();
+        let n = graph.layers.len();
+        let n_shards = ShardPlan::for_rows(batch).len();
+        let max_pf = graph.layers.iter().map(|l| l.fan_out()).max().unwrap();
+        let mut wstar_parts = Vec::with_capacity(n);
+        let mut wstar = Vec::with_capacity(n);
+        for l in &graph.layers {
+            let (a, b) = ops::aop_layout(l.fan_in(), l.fan_out());
+            wstar_parts.push(Matrix::zeros(n_shards * a, b));
+            wstar.push(Matrix::zeros(a, b));
+        }
+        GraphWorkspace {
+            batch,
+            n_shards,
+            acts: graph
+                .layers
+                .iter()
+                .map(|l| Matrix::zeros(batch, l.fan_out()))
+                .collect(),
+            grads: graph
+                .layers
+                .iter()
+                .map(|l| Matrix::zeros(batch, l.fan_out()))
+                .collect(),
+            xhat: graph
+                .layers
+                .iter()
+                .map(|l| Matrix::zeros(batch, l.fan_in()))
+                .collect(),
+            ghat: graph
+                .layers
+                .iter()
+                .map(|l| Matrix::zeros(batch, l.fan_out()))
+                .collect(),
+            scores: (0..n).map(|_| vec![0.0f32; batch]).collect(),
+            db: graph
+                .layers
+                .iter()
+                .map(|l| vec![0.0f32; l.fan_out()])
+                .collect(),
+            loss_parts: (0..n_shards).map(|_| Mutex::new((0.0, 0))).collect(),
+            db_parts: Matrix::zeros(n_shards, max_pf),
+            wstar_parts,
+            wstar,
+            sels: (0..n).map(|_| Selection::with_capacity(batch)).collect(),
+            scratch: SelectScratch::new(),
+            layer_k: Vec::with_capacity(n),
+            fwd: None,
+            widths,
+        }
+    }
+
+    /// Whether this workspace is keyed for (`graph`, `batch`).
+    /// Allocation-free (called at the top of every step): compares the
+    /// width chain element-wise instead of materializing
+    /// `graph.widths()`.
+    pub fn matches(&self, graph: &Graph, batch: usize) -> bool {
+        self.batch == batch
+            && self.widths.len() == graph.layers.len() + 1
+            && self.widths[0] == graph.layers[0].fan_in()
+            && graph
+                .layers
+                .iter()
+                .zip(self.widths[1..].iter())
+                .all(|(l, &w)| l.fan_out() == w)
+    }
+
+    /// Re-key (reallocate everything) iff the key changed — a cheap
+    /// width-chain comparison in steady state.
+    pub fn ensure(&mut self, graph: &Graph, batch: usize) {
+        if !self.matches(graph, batch) {
+            *self = GraphWorkspace::new(graph, batch);
+        }
+    }
+
+    /// The batch size this workspace is keyed for.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Layer `li`'s policy scores from the last `fwd_score` (undefined
+    /// for Exact-policy layers — see the module docs).
+    pub fn scores(&self, li: usize) -> &[f32] {
+        &self.scores[li]
+    }
+
+    /// Layer `li`'s reduced raw bias gradient from the last `fwd_score`.
+    pub fn db(&self, li: usize) -> &[f32] {
+        &self.db[li]
+    }
+
+    /// Layer `li`'s folded `X̂` from the last `fwd_score`.
+    pub fn xhat(&self, li: usize) -> &Matrix {
+        &self.xhat[li]
+    }
+
+    /// Layer `li`'s folded `Ĝ` from the last `fwd_score`.
+    pub fn ghat(&self, li: usize) -> &Matrix {
+        &self.ghat[li]
+    }
+
+    /// Per-layer distinct outer products applied by the last `apply`.
+    pub fn layer_k(&self) -> &[usize] {
+        &self.layer_k
+    }
+
+    /// The per-layer selections drawn by the last `select_layers_ws`.
+    pub fn selections(&self) -> &[Selection] {
+        &self.sels
+    }
+
+    /// Move the selection vector out (so `apply` can borrow the
+    /// workspace mutably alongside it); pair with [`Self::put_sels`].
+    /// `std::mem::take` leaves an unallocated Vec — no heap traffic.
+    pub(crate) fn take_sels(&mut self) -> Vec<Selection> {
+        std::mem::take(&mut self.sels)
+    }
+
+    pub(crate) fn put_sels(&mut self, sels: Vec<Selection>) {
+        self.sels = sels;
+    }
+
+    /// Drop a pending `fwd_score` result without applying it (the
+    /// optimizer path computes its own update from the fwd buffers).
+    pub(crate) fn clear_fwd(&mut self) {
+        self.fwd = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::loss::LossKind;
+    use crate::tensor::rng::Rng;
+
+    #[test]
+    fn keyed_by_widths_and_batch() {
+        let mut rng = Rng::new(0);
+        let g = Graph::relu_mlp(&mut rng, &[6, 10, 3], LossKind::Mse);
+        let mut ws = GraphWorkspace::new(&g, 32);
+        assert!(ws.matches(&g, 32));
+        assert!(!ws.matches(&g, 16));
+        assert_eq!(ws.n_shards, 2); // 32 rows on the 16-row grid
+        assert_eq!(ws.acts.len(), 2);
+        assert_eq!(ws.xhat[0].shape(), (32, 6));
+        assert_eq!(ws.ghat[1].shape(), (32, 3));
+        // ensure() re-keys on batch change, keeps on match
+        ws.ensure(&g, 32);
+        assert_eq!(ws.batch(), 32);
+        ws.ensure(&g, 48);
+        assert!(ws.matches(&g, 48));
+        assert_eq!(ws.n_shards, 3);
+        // a different graph shape re-keys too
+        let g2 = Graph::relu_mlp(&mut rng, &[6, 11, 3], LossKind::Mse);
+        ws.ensure(&g2, 48);
+        assert!(ws.matches(&g2, 48));
+        assert!(!ws.matches(&g, 48));
+    }
+
+    #[test]
+    fn partial_buffers_follow_aop_layout() {
+        let mut rng = Rng::new(1);
+        // 784 → 10 takes the transposed layout; 10 → 784 does not
+        let g = Graph::relu_mlp(&mut rng, &[784, 10], LossKind::Mse);
+        let ws = GraphWorkspace::new(&g, 64);
+        assert!(ops::aop_transposed(784, 10));
+        assert_eq!(ws.wstar[0].shape(), (10, 784));
+        assert_eq!(ws.wstar_parts[0].shape(), (4 * 10, 784));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty batch")]
+    fn zero_batch_rejected() {
+        let mut rng = Rng::new(2);
+        let g = Graph::relu_mlp(&mut rng, &[4, 2], LossKind::Mse);
+        GraphWorkspace::new(&g, 0);
+    }
+}

@@ -8,11 +8,12 @@
 //!   order. Work items must be `Send`; panics in a worker are propagated
 //!   to the caller.
 //! * [`TaskPool`] — a *long-lived* condvar worker pool draining a FIFO of
-//!   boxed tasks. This is the single generalized pool the serve
-//!   scheduler (`serve::queue`) and the data-parallel execution engine
-//!   (`exec::pool`) are both built on, so the repo has exactly one
-//!   blocking worker loop to reason about. Shutdown is graceful: the
-//!   queue is drained before the workers exit.
+//!   boxed tasks, used by the serve scheduler (`serve::queue`) for its
+//!   coarse-grained jobs. The data-parallel execution engine keeps its
+//!   own allocation-free job-slot pool (`exec::pool`) — boxing a task
+//!   per shard dispatch is exactly the per-step heap traffic the §Perf
+//!   pass removed. Shutdown is graceful: the queue is drained before
+//!   the workers exit.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};

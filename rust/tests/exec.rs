@@ -25,7 +25,7 @@ use mem_aop_gd::model::activations::Activation;
 use mem_aop_gd::model::loss::LossKind;
 use mem_aop_gd::serve::{Client, ServeOptions, Server};
 use mem_aop_gd::tensor::{init, rng::Rng, Matrix};
-use mem_aop_gd::train::{self, AopLayerConfig, Graph, GraphState};
+use mem_aop_gd::train::{self, AopLayerConfig, Graph, GraphState, GraphWorkspace};
 use mem_aop_gd::util::pool;
 
 const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 7];
@@ -99,11 +99,16 @@ fn engine_bit_identical_across_threads_for_all_policies_and_regimes() {
 /// Train a 2-hidden-layer graph with a *heterogeneous* per-layer config
 /// (different K at every layer, the given activation and policy) and
 /// return (per-step losses, per-step k vectors, final layer weights).
+///
+/// `reuse_ws` switches between one `GraphWorkspace` reused across every
+/// step (the steady-state zero-allocation path) and a fresh workspace
+/// per step — the two must be bit-identical at every thread count.
 fn train_graph(
     activation: Activation,
     policy: Policy,
     threads: usize,
     steps: usize,
+    reuse_ws: bool,
 ) -> (Vec<u32>, Vec<Vec<usize>>, Graph) {
     let (m, n, p) = (24usize, 6usize, 3usize);
     let (x, y) = synth_data(31, m, n, p);
@@ -125,13 +130,25 @@ fn train_graph(
     let mut state = GraphState::from_configs(&g, m, &cfgs);
     let exec = Executor::new(threads);
     let mut rng = Rng::new(17);
+    let mut resident = GraphWorkspace::new(&g, m);
     let mut losses = Vec::with_capacity(steps);
     let mut layer_ks = Vec::with_capacity(steps);
     for _ in 0..steps {
-        let out = train::train_step(&mut g, &mut state, &x, &y, 0.02, &mut rng, &exec, true);
+        let (out, lk) = if reuse_ws {
+            let out = train::train_step_ws(
+                &mut g, &mut state, &x, &y, 0.02, &mut rng, &exec, true, &mut resident,
+            );
+            (out, resident.layer_k().to_vec())
+        } else {
+            let mut fresh = GraphWorkspace::new(&g, m);
+            let out = train::train_step_ws(
+                &mut g, &mut state, &x, &y, 0.02, &mut rng, &exec, true, &mut fresh,
+            );
+            (out, fresh.layer_k().to_vec())
+        };
         assert!(out.loss.is_finite());
         losses.push(out.loss.to_bits());
-        layer_ks.push(out.layer_k.clone());
+        layer_ks.push(lk);
     }
     (losses, layer_ks, g)
 }
@@ -139,16 +156,20 @@ fn train_graph(
 #[test]
 fn graph_bit_identical_across_threads_for_activation_policy_layerk_grid() {
     // the acceptance grid: every activation × every policy ×
-    // heterogeneous per-layer K, threads=1 vs threads=7, exact to_bits
+    // heterogeneous per-layer K × (fresh vs reused workspace),
+    // threads=1 vs threads=7, exact to_bits
     for activation in [Activation::Relu, Activation::Tanh, Activation::Sigmoid] {
         for policy in Policy::all() {
-            let (l1, k1, g1) = train_graph(activation, policy, 1, 12);
-            let (l7, k7, g7) = train_graph(activation, policy, 7, 12);
-            assert_eq!(l1, l7, "{activation:?} {policy:?}: losses");
-            assert_eq!(k1, k7, "{activation:?} {policy:?}: per-layer k_effective");
-            for (a, b) in g1.layers.iter().zip(g7.layers.iter()) {
-                assert_eq!(a.w.data(), b.w.data(), "{activation:?} {policy:?}: weights");
-                assert_eq!(a.b, b.b, "{activation:?} {policy:?}: bias");
+            let (l1, k1, g1) = train_graph(activation, policy, 1, 12, false);
+            for (threads, reuse) in [(7usize, false), (1, true), (7, true)] {
+                let what = format!("{activation:?} {policy:?} threads={threads} reuse={reuse}");
+                let (lt, kt, gt) = train_graph(activation, policy, threads, 12, reuse);
+                assert_eq!(l1, lt, "{what}: losses");
+                assert_eq!(k1, kt, "{what}: per-layer k_effective");
+                for (a, b) in g1.layers.iter().zip(gt.layers.iter()) {
+                    assert_eq!(a.w.data(), b.w.data(), "{what}: weights");
+                    assert_eq!(a.b, b.b, "{what}: bias");
+                }
             }
             // heterogeneous budgets actually took effect
             if policy != Policy::Exact && policy != Policy::WeightedKReplacement {

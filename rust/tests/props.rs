@@ -15,6 +15,110 @@ fn randm(g: &mut Gen, r: usize, c: usize) -> Matrix {
 }
 
 // ---------------------------------------------------------------------
+// 8-lane kernel contract (§Perf pass): lane-blocked reductions agree
+// with an f64 reference, and kernel path choice is a pure function of
+// operand shapes — never of row-range position.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_lane_blocked_dot_matches_f64_reference() {
+    property("dot vs f64", 80, |g| {
+        // lengths straddling the 8-lane split and its scalar tail
+        let len = g.usize_range(1, 300);
+        let a = g.vec_normal(len);
+        let b = g.vec_normal(len);
+        let refd: f64 = a
+            .iter()
+            .zip(b.iter())
+            .map(|(&x, &y)| x as f64 * y as f64)
+            .sum();
+        let got = ops::dot(&a, &b) as f64;
+        let scale: f64 = a
+            .iter()
+            .zip(b.iter())
+            .map(|(&x, &y)| (x as f64 * y as f64).abs())
+            .sum::<f64>()
+            .max(1.0);
+        assert!(
+            (got - refd).abs() < 1e-5 * scale,
+            "len={len}: {got} vs {refd}"
+        );
+    });
+}
+
+#[test]
+fn prop_masked_outer_range_matches_f64_reference() {
+    property("masked outer vs f64", 40, |g| {
+        let m = g.usize_range(1, 40);
+        let n = g.usize_range(1, 100); // crosses the transposed-layout shapes
+        let p = g.usize_range(1, 12);
+        let x = randm(g, m, n);
+        let gm = randm(g, m, p);
+        let scale = g.vec_uniform(m, 0.0, 2.0);
+        let lo = g.usize_range(0, m - 1);
+        let hi = g.usize_range(lo + 1, m);
+        let out = ops::masked_outer_range(&x, &gm, &scale, lo..hi);
+        // probe a handful of entries against exact f64 accumulation
+        for probe in 0..4usize {
+            let r = probe % n;
+            let c = (probe * 3 + 1) % p;
+            let refd: f64 = (lo..hi)
+                .map(|row| scale[row] as f64 * x[(row, r)] as f64 * gm[(row, c)] as f64)
+                .sum();
+            let scale_mag: f64 = (lo..hi)
+                .map(|row| (scale[row] as f64 * x[(row, r)] as f64 * gm[(row, c)] as f64).abs())
+                .sum::<f64>()
+                .max(1.0);
+            assert!(
+                (out[(r, c)] as f64 - refd).abs() < 1e-5 * scale_mag,
+                "({m},{n},{p}) [{r},{c}]"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_kernel_path_is_shape_only_never_position() {
+    // restricting the row range must be BITWISE identical to zeroing the
+    // scales outside it: accumulation layout and per-term float ops
+    // depend only on (n, p), not on where the range sits in the batch
+    property("path choice shape-only", 40, |g| {
+        let m = g.usize_range(2, 48);
+        let n = g.usize_range(1, 120);
+        let p = g.usize_range(1, 12);
+        let x = randm(g, m, n);
+        let gm = randm(g, m, p);
+        let scale = g.vec_uniform(m, 0.1, 2.0);
+        let lo = g.usize_range(0, m - 1);
+        let hi = g.usize_range(lo + 1, m);
+        let ranged = ops::masked_outer_range(&x, &gm, &scale, lo..hi);
+        let mut masked = vec![0.0f32; m];
+        masked[lo..hi].copy_from_slice(&scale[lo..hi]);
+        let full = ops::masked_outer(&x, &gm, &masked);
+        assert_eq!(ranged.data(), full.data(), "({m},{n},{p}) rows {lo}..{hi}");
+    });
+}
+
+#[test]
+fn prop_matmul_rows_slices_are_position_free() {
+    // every row range of matmul_rows is bitwise the corresponding slice
+    // of the whole-batch product, for narrow-B and blocked shapes alike
+    property("matmul_rows position-free", 40, |g| {
+        let m = g.usize_range(1, 30);
+        let k = g.usize_range(1, 90);
+        let n = g.usize_range(1, 40);
+        let a = randm(g, m, k);
+        let b = randm(g, k, n);
+        let full = ops::matmul(&a, &b);
+        let lo = g.usize_range(0, m - 1);
+        let hi = g.usize_range(lo + 1, m);
+        let mut out = vec![f32::NAN; (hi - lo) * n];
+        ops::matmul_rows(&a, &b, lo..hi, &mut out);
+        assert_eq!(&out[..], &full.data()[lo * n..hi * n], "({m},{k},{n})");
+    });
+}
+
+// ---------------------------------------------------------------------
 // AOP / eq. (4)-(7) invariants
 // ---------------------------------------------------------------------
 

@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Bench trajectory recorder + regression gate (ROADMAP: BENCH trajectory).
+
+Run from the repo root after `cargo bench --bench kernels` has written
+BENCH_2.json / BENCH_3.json / BENCH_4.json:
+
+  * appends each record (stamped with UTC time + git rev + host) to
+    `bench/history/BENCH_N.jsonl` — the committed machine-readable
+    trajectory;
+  * compares rows/sec against this machine's own baseline
+    `bench/baseline/<host>/BENCH_N.json`; a drop of more than
+    REGRESSION_FRAC on any tracked series fails the gate (exit 1)
+    unless BENCH_NO_GATE=1 is set (noisy boxes), in which case it only
+    warns;
+  * initializes a missing baseline from the current record — so the
+    first run on ANY machine self-initializes instead of failing
+    against some faster box's numbers; commit the generated `bench/`
+    contents to pin the CI box's trajectory.
+
+Update a baseline deliberately by deleting its file and re-running.
+"""
+
+import json
+import os
+import platform
+import re
+import subprocess
+import sys
+import time
+
+RECORDS = ["BENCH_2.json", "BENCH_3.json", "BENCH_4.json"]
+# keys holding a {"rows_per_sec": ...} object we track
+SERIES = ["serial", "threads4"]
+REGRESSION_FRAC = 0.15
+
+
+def git_rev():
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True,
+            text=True,
+            check=True,
+        )
+        return out.stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def host_key():
+    raw = platform.node() or "unknown"
+    return re.sub(r"[^A-Za-z0-9._-]", "_", raw)[:64] or "unknown"
+
+
+def main():
+    host = host_key()
+    base_dir = os.path.join("bench/baseline", host)
+    os.makedirs("bench/history", exist_ok=True)
+    os.makedirs(base_dir, exist_ok=True)
+    no_gate = os.environ.get("BENCH_NO_GATE") == "1"
+    rev = git_rev()
+    stamp = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+    failures = []
+
+    for name in RECORDS:
+        if not os.path.exists(name):
+            print(f"[bench-gate] {name} missing — skipped")
+            continue
+        with open(name) as f:
+            record = json.load(f)
+
+        entry = dict(record)
+        entry["_recorded_at"] = stamp
+        entry["_git_rev"] = rev
+        entry["_host"] = host
+        hist_path = os.path.join("bench/history", name.replace(".json", ".jsonl"))
+        with open(hist_path, "a") as f:
+            f.write(json.dumps(entry, sort_keys=True) + "\n")
+
+        base_path = os.path.join(base_dir, name)
+        if not os.path.exists(base_path):
+            with open(base_path, "w") as f:
+                json.dump(entry, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(
+                f"[bench-gate] {name}: baseline for host '{host}' initialized — "
+                "commit bench/ to pin it"
+            )
+            continue
+
+        with open(base_path) as f:
+            baseline = json.load(f)
+        for series in SERIES:
+            try:
+                base = float(baseline[series]["rows_per_sec"])
+                cur = float(record[series]["rows_per_sec"])
+            except (KeyError, TypeError, ValueError):
+                continue
+            if base <= 0:
+                continue
+            ratio = cur / base
+            verdict = "ok"
+            if ratio < 1.0 - REGRESSION_FRAC:
+                verdict = "REGRESSION"
+                failures.append(f"{name}:{series} {cur:.0f} vs baseline {base:.0f} ({ratio:.2f}x)")
+            print(
+                f"[bench-gate] {name}:{series} {cur:.0f} rows/s vs baseline {base:.0f} "
+                f"({ratio:.2f}x) {verdict}"
+            )
+
+    if failures:
+        msg = "; ".join(failures)
+        if no_gate:
+            print(f"[bench-gate] WARNING (BENCH_NO_GATE=1): {msg}")
+        else:
+            print(f"[bench-gate] FAILED: {msg}")
+            print("[bench-gate] (set BENCH_NO_GATE=1 to record without gating)")
+            sys.exit(1)
+    print("[bench-gate] trajectory recorded")
+
+
+if __name__ == "__main__":
+    main()
