@@ -43,17 +43,31 @@ REPRO_THREADS=2 cargo test -q --test exec
 echo "==> exec determinism gate (REPRO_THREADS=7)"
 REPRO_THREADS=7 cargo test -q --test exec
 
+# Annealed-K smoke: one short end-to-end training with a K schedule
+# through the real CLI (per-layer budgets ramping over epochs must parse,
+# validate, train, and report) — the K-schedule tentpole's cheapest
+# end-to-end proof. Uses the release binary, so it only runs on full
+# passes.
+if [ "$fast" -eq 0 ]; then
+  echo "==> annealed-K CLI smoke (repro train --k linear:3:18)"
+  ./target/release/repro train --task energy --policy topk --k "linear:3:18" \
+    --epochs 6 --backend native --threads 2 --quiet
+fi
+
 # Perf smoke: a quick run of the kernels bench so every CI pass leaves
 # machine-readable throughput data points (BENCH_2.json: flat engine;
 # BENCH_3.json: layer-graph core; BENCH_4.json: wide-layer
 # workspace-resident step with the allocations-per-step counter — the
 # bench itself asserts the serial steady state performs 0 heap
-# allocations) for the perf trajectory.
-echo "==> kernels bench smoke (BENCH_2/3/4.json)"
+# allocations; BENCH_5.json: annealed-K step, k ramping mid-run on one
+# workspace, also asserted allocation-free) for the perf trajectory.
+echo "==> kernels bench smoke (BENCH_2/3/4/5.json)"
 BENCH_QUICK=1 cargo bench --bench kernels
 test -f BENCH_3.json
 test -f BENCH_4.json
+test -f BENCH_5.json
 echo "BENCH_4.json: $(cat BENCH_4.json | head -c 200)..."
+echo "BENCH_5.json: $(cat BENCH_5.json | head -c 200)..."
 
 # BENCH trajectory (ROADMAP): append this run to the committed bench/
 # history and fail on a >15% rows/sec regression vs the recorded

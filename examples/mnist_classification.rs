@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 use mem_aop_gd::aop::Policy;
-use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig};
+use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig, KSchedule};
 use mem_aop_gd::coordinator::experiment;
 
 fn main() -> Result<()> {
@@ -22,7 +22,7 @@ fn main() -> Result<()> {
         let mut cfg = ExperimentConfig::mnist_preset();
         cfg.backend = Backend::Hlo;
         cfg.policy = policy;
-        cfg.k = k;
+        cfg.k = KSchedule::constant(k);
         cfg.memory = memory;
         cfg.epochs = 8;
         cfg.data_scale = scale;

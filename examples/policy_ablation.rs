@@ -11,7 +11,7 @@
 
 use anyhow::Result;
 use mem_aop_gd::aop::Policy;
-use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig};
+use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig, KSchedule};
 use mem_aop_gd::coordinator::sweep;
 use mem_aop_gd::metrics::print_table;
 
@@ -33,7 +33,7 @@ fn main() -> Result<()> {
                     c.backend = Backend::Native;
                     c.epochs = 60;
                     c.policy = p;
-                    c.k = k;
+                    c.k = KSchedule::constant(k);
                     c.memory = mem;
                     c.seed = seed;
                     configs.push(c);
@@ -61,7 +61,9 @@ fn main() -> Result<()> {
             .filter_map(|r| r.as_ref().ok())
             .filter(|r| match p {
                 Some(p) => {
-                    r.config.policy == p && r.config.k == k && r.config.memory == mem
+                    r.config.policy == p
+                        && r.config.k == KSchedule::Constant(k)
+                        && r.config.memory == mem
                 }
                 None => r.config.policy == Policy::Exact,
             })

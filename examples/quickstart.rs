@@ -9,7 +9,7 @@
 
 use anyhow::Result;
 use mem_aop_gd::aop::Policy;
-use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig};
+use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig, KSchedule};
 use mem_aop_gd::coordinator::experiment;
 
 fn main() -> Result<()> {
@@ -23,7 +23,7 @@ fn main() -> Result<()> {
     //    error-feedback memory compensating the approximation.
     let mut aop = baseline.clone();
     aop.policy = Policy::TopK;
-    aop.k = 18;
+    aop.k = KSchedule::Constant(18);
     aop.memory = true;
 
     println!("== exact back-propagation (baseline) ==");

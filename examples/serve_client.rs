@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, ensure, Result};
 
 use mem_aop_gd::aop::Policy;
-use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig};
+use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig, KSchedule};
 use mem_aop_gd::coordinator::experiment;
 use mem_aop_gd::metrics::RunCurve;
 use mem_aop_gd::serve::{Client, ServeOptions, Server};
@@ -35,11 +35,11 @@ fn job_config(i: usize) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::energy_preset();
     cfg.policy = p;
     cfg.memory = p != Policy::Exact;
-    cfg.k = if p == Policy::Exact {
+    cfg.k = KSchedule::constant(if p == Policy::Exact {
         cfg.m()
     } else {
         [18, 9, 3][(i / policies.len()) % 3]
-    };
+    });
     cfg.epochs = 3;
     cfg.seed = i as u64;
     cfg.backend = Backend::Native;

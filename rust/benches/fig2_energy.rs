@@ -24,9 +24,11 @@ fn bench_series<T: Trainer>(
     let idx: Vec<usize> = (0..cfg.m()).collect();
     let batch = train.gather(&idx);
     let mut rng = Rng::new(9);
+    // panel configs are constant-K; resolve the schedule once
+    let k = cfg.k.k_at(1, cfg.epochs, cfg.m());
     b.bench(name, || {
         let (_, scores) = trainer.fwd_score(&batch.x, &batch.y).unwrap();
-        let sel = policy::select(cfg.policy, &scores[0], cfg.k, cfg.memory, &mut rng);
+        let sel = policy::select(cfg.policy, &scores[0], k, cfg.memory, &mut rng);
         black_box(trainer.apply(std::slice::from_ref(&sel)).unwrap());
     });
 }

@@ -33,11 +33,13 @@ fn main() {
     for &k in &base.task.figure_ks() {
         for cfg in sweep::panel_configs(&base, k) {
             let label = format!("K={k}/{}", cfg.label());
+            // panel configs are constant-K; resolve the schedule once
+            let sel_k = cfg.k.k_at(1, cfg.epochs, cfg.m());
 
             let mut nt = NativeTrainer::new(&cfg).unwrap();
             b.bench(&format!("native/{label}"), || {
                 let (_, scores) = nt.fwd_score(&ds.x, &ds.y).unwrap();
-                let sel = policy::select(cfg.policy, &scores[0], cfg.k, cfg.memory, &mut rng);
+                let sel = policy::select(cfg.policy, &scores[0], sel_k, cfg.memory, &mut rng);
                 black_box(nt.apply(std::slice::from_ref(&sel)).unwrap());
             });
 
@@ -46,7 +48,7 @@ fn main() {
                 b.bench(&format!("hlo/{label}"), || {
                     let (_, scores) = ht.fwd_score(&ds.x, &ds.y).unwrap();
                     let sel =
-                        policy::select(cfg.policy, &scores[0], cfg.k, cfg.memory, &mut rng);
+                        policy::select(cfg.policy, &scores[0], sel_k, cfg.memory, &mut rng);
                     black_box(ht.apply(std::slice::from_ref(&sel)).unwrap());
                 });
             }

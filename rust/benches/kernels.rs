@@ -4,10 +4,12 @@
 //! compiled HLO artifacts — plus the end-to-end `exec` training-step
 //! throughput (serial vs threads=4), written to `BENCH_2.json`, the
 //! layer-graph training-step throughput on a 2-hidden-layer shape with
-//! heterogeneous per-layer K, written to `BENCH_3.json`, and (§Perf
-//! pass) the wide-layer workspace-resident step with an
-//! **allocations-per-step counter**, written to `BENCH_4.json` — so the
-//! repo's perf trajectory is machine-readable.
+//! heterogeneous per-layer K, written to `BENCH_3.json`, (§Perf pass)
+//! the wide-layer workspace-resident step with an
+//! **allocations-per-step counter**, written to `BENCH_4.json`, and the
+//! **annealed-K** step (K ramping over resolved epochs on one resident
+//! workspace — the K-schedule tentpole), written to `BENCH_5.json` — so
+//! the repo's perf trajectory is machine-readable.
 //!
 //! Work metric = FLOPs of the compaction-regime cost model, so the
 //! reported work-rate is directly comparable across K (who computes the
@@ -27,6 +29,7 @@ use std::time::{Duration, Instant};
 
 use mem_aop_gd::aop::engine::AopEngine;
 use mem_aop_gd::aop::{flops, Policy};
+use mem_aop_gd::coordinator::config::KSchedule;
 use mem_aop_gd::exec::Executor;
 use mem_aop_gd::model::loss::LossKind;
 use mem_aop_gd::runtime::{Manifest, Runtime, Value};
@@ -414,6 +417,147 @@ fn bench_wide_and_write_bench4() {
         .and_then(|_| std::fs::write("results/bench/wide_throughput.json", text));
 }
 
+/// The BENCH_5 workload (K-schedule tentpole): the BENCH_3 graph driven
+/// through an annealed budget — every layer's K follows `linear:8:32`
+/// across 6 resolved epochs on ONE resident workspace and state, so the
+/// measured path includes mid-run k changes. The serial steady state is
+/// asserted allocation-free even while k ramps (selection buffers are
+/// pre-sized for the batch, the schedule's clamp ceiling), with the same
+/// `BENCH_ALLOW_ALLOCS=1` escape hatch as BENCH_4.
+const ANNEAL_EPOCHS: usize = 6;
+
+fn annealed_rows_per_sec(threads: usize, measure: Duration) -> (f64, f64) {
+    let m = GRAPH_BATCH;
+    let (n, p) = (GRAPH_WIDTHS[0], GRAPH_WIDTHS[3]);
+    let sched = KSchedule::parse("linear:8:32").unwrap();
+    let mut rng = Rng::new(0);
+    let x = Matrix::from_fn(m, n, |_, _| rng.normal());
+    let y = Matrix::from_fn(m, p, |r, c| ((r % p) == c) as u32 as f32);
+    let mut wrng = Rng::new(1);
+    let mut graph = Graph::relu_mlp(&mut wrng, &GRAPH_WIDTHS, LossKind::SoftmaxCrossEntropy);
+    let cfgs = vec![
+        AopLayerConfig {
+            k: sched.k_at(1, ANNEAL_EPOCHS, m),
+            policy: Policy::TopK,
+            memory: true,
+        };
+        3
+    ];
+    let mut state = GraphState::from_configs(&graph, m, &cfgs);
+    let mut ws = GraphWorkspace::new(&graph, m);
+    let exec = Executor::new(threads);
+    let mut srng = Rng::new(2);
+    let mut epoch = 0usize;
+    let mut step_annealed =
+        |graph: &mut Graph, state: &mut GraphState, ws: &mut GraphWorkspace, srng: &mut Rng| {
+            epoch = epoch % ANNEAL_EPOCHS + 1;
+            let k = sched.k_at(epoch, ANNEAL_EPOCHS, m);
+            for ls in state.layers.iter_mut() {
+                ls.cfg.k = k;
+            }
+            black_box(train::train_step_ws(
+                graph, state, &x, &y, 0.01, srng, &exec, true, ws,
+            ));
+        };
+    // warmup covers the whole k ramp, so every buffer has seen max k
+    for _ in 0..2 * ANNEAL_EPOCHS {
+        step_annealed(&mut graph, &mut state, &mut ws, &mut srng);
+    }
+    let a0 = alloc_calls();
+    let t0 = Instant::now();
+    let mut steps = 0u64;
+    while steps < ANNEAL_EPOCHS as u64 || t0.elapsed() < measure {
+        step_annealed(&mut graph, &mut state, &mut ws, &mut srng);
+        steps += 1;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let allocs = (alloc_calls() - a0) as f64 / steps as f64;
+    (steps as f64 * m as f64 / elapsed, allocs)
+}
+
+/// Measure the annealed-K workload and write `BENCH_5.json` (serial vs
+/// threads=4 rows/sec, mean FLOPs/step over the schedule's integral).
+fn bench_annealed_and_write_bench5() {
+    let quick = std::env::var("BENCH_QUICK").ok().as_deref() == Some("1");
+    let measure = if quick {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_secs(2)
+    };
+    let (serial, serial_allocs) = annealed_rows_per_sec(1, measure);
+    let (par4, par4_allocs) = annealed_rows_per_sec(4, measure);
+    let speedup = par4 / serial;
+    let sched = KSchedule::parse("linear:8:32").unwrap();
+    // FLOPs/step = the schedule's integral over one epoch cycle / cycle
+    // length — the honest work metric for an annealed budget
+    let mut flops_cycle = 0.0f64;
+    for e in 1..=ANNEAL_EPOCHS {
+        let k = sched.k_at(e, ANNEAL_EPOCHS, GRAPH_BATCH);
+        for i in 0..3 {
+            let (n, p) = (GRAPH_WIDTHS[i], GRAPH_WIDTHS[i + 1]);
+            flops_cycle += flops::aop_step(GRAPH_BATCH, n, p, k).total() as f64;
+        }
+    }
+    let flops_per_step = flops_cycle / ANNEAL_EPOCHS as f64;
+    let flops_per_row = flops_per_step / GRAPH_BATCH as f64;
+    eprintln!(
+        "{:44} {:>12.0} rows/s  ({serial_allocs:.1} allocs/step)",
+        "annealed/exec/train-step threads=1", serial
+    );
+    eprintln!(
+        "{:44} {:>12.0} rows/s  ({speedup:.2}x, {par4_allocs:.1} allocs/step)",
+        "annealed/exec/train-step threads=4", par4
+    );
+    if serial_allocs != 0.0 {
+        let msg = format!(
+            "serial annealed-K steady state performed {serial_allocs} allocations/step (expected 0)"
+        );
+        if std::env::var("BENCH_ALLOW_ALLOCS").ok().as_deref() == Some("1") {
+            eprintln!("[kernels] WARNING: {msg}");
+        } else {
+            panic!("{msg}");
+        }
+    }
+    let out = json::obj(vec![
+        (
+            "workload",
+            json::s("graph-784x128x64x10 topk K=linear:8:32/6ep mem train-step (annealed)"),
+        ),
+        ("m", json::num(GRAPH_BATCH as f64)),
+        ("k_schedule", json::s(&sched.name())),
+        ("anneal_epochs", json::num(ANNEAL_EPOCHS as f64)),
+        ("flops_per_step", json::num(flops_per_step)),
+        (
+            "serial",
+            json::obj(vec![
+                ("threads", json::num(1.0)),
+                ("rows_per_sec", json::num(serial)),
+                ("flops_per_sec", json::num(serial * flops_per_row)),
+                ("allocs_per_step", json::num(serial_allocs)),
+            ]),
+        ),
+        (
+            "threads4",
+            json::obj(vec![
+                ("threads", json::num(4.0)),
+                ("rows_per_sec", json::num(par4)),
+                ("flops_per_sec", json::num(par4 * flops_per_row)),
+                ("allocs_per_step", json::num(par4_allocs)),
+            ]),
+        ),
+        ("speedup", json::num(speedup)),
+    ]);
+    let mut text = out.dump();
+    text.push('\n');
+    if std::fs::write("BENCH_5.json", &text).is_ok() {
+        eprintln!(
+            "[kernels] wrote BENCH_5.json (speedup {speedup:.2}x, serial allocs/step {serial_allocs:.1})"
+        );
+    }
+    let _ = std::fs::create_dir_all("results/bench")
+        .and_then(|_| std::fs::write("results/bench/annealed_throughput.json", text));
+}
+
 fn main() {
     let mut b = Bencher::new("kernels");
     let mut rng = Rng::new(0);
@@ -421,6 +565,7 @@ fn main() {
     bench_exec_and_write_bench2();
     bench_graph_and_write_bench3();
     bench_wide_and_write_bench4();
+    bench_annealed_and_write_bench5();
 
     for (task, m, n, p, ks) in [
         ("energy", 144usize, 16usize, 1usize, vec![144usize, 18, 9, 3]),

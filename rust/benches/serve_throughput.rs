@@ -17,7 +17,7 @@
 use std::time::{Duration, Instant};
 
 use mem_aop_gd::aop::Policy;
-use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig, Task};
+use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig, KSchedule, Task};
 use mem_aop_gd::serve::{Client, ServeOptions, Server};
 
 fn quick_cfg(i: usize) -> ExperimentConfig {
@@ -26,7 +26,7 @@ fn quick_cfg(i: usize) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::preset(Task::Energy);
     cfg.policy = p;
     cfg.memory = p != Policy::Exact;
-    cfg.k = if p == Policy::Exact { cfg.m() } else { 18 };
+    cfg.k = KSchedule::constant(if p == Policy::Exact { cfg.m() } else { 18 });
     cfg.epochs = 2;
     cfg.seed = i as u64;
     cfg.backend = Backend::Native;

@@ -154,6 +154,21 @@ impl SelectScratch {
     pub fn new() -> SelectScratch {
         SelectScratch::default()
     }
+
+    /// Scratch pre-sized for batches of `m` rows. Every buffer a policy
+    /// can touch grows to at most `m` entries (`draws` holds k ≤ m
+    /// samples; resolved K schedules clamp to `[1, batch]`), so a
+    /// workspace built with this never allocates during selection — even
+    /// when an annealing schedule changes k mid-run.
+    pub fn with_capacity(m: usize) -> SelectScratch {
+        SelectScratch {
+            idx: Vec::with_capacity(m),
+            keys: Vec::with_capacity(m),
+            cdf: Vec::with_capacity(m),
+            draws: Vec::with_capacity(m),
+            counts: Vec::with_capacity(m),
+        }
+    }
 }
 
 /// The deterministic exact-BP selection: every row, unit scale, nothing

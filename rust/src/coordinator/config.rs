@@ -4,10 +4,15 @@
 //! `layers` spec: a chain of dense layers (width + activation), each
 //! with its own optional `{k, policy, memory}` override — heterogeneous
 //! per-layer approximation budgets, resolved by
-//! [`ExperimentConfig::layer_plan`] into the `train` core's
-//! [`AopLayerConfig`]s. A flat config (no `layers`) resolves to a
-//! single identity-activation layer with the flat knobs — exactly the
+//! [`ExperimentConfig::layer_plan`] into per-layer [`ResolvedLayer`]s
+//! and per epoch (via [`ResolvedLayer::cfg_at`]) into the `train`
+//! core's [`AopLayerConfig`]s. A flat config (no `layers`) resolves to
+//! a single identity-activation layer with the flat knobs — exactly the
 //! historical behavior, preserved bit-for-bit.
+//!
+//! Every K is a [`KSchedule`] — the paper's outer-product budget as a
+//! per-layer, per-epoch annealing knob (constants behave, serialize,
+//! and train exactly like the historical plain integers).
 
 use anyhow::{anyhow, bail, Result};
 
@@ -117,6 +122,81 @@ impl Backend {
     }
 }
 
+// ---------------------------------------------------------------------
+// Schedule parameter validation, shared by LrSchedule and KSchedule so
+// the two grammars can never drift on what counts as degenerate. All
+// checks run at parse time (a bad spec is rejected with a clear error
+// before anything trains) and again in `validate()` for structs built
+// programmatically.
+// ---------------------------------------------------------------------
+
+/// A step-decay period must advance: `step:0:<γ>` would decay at every
+/// epoch only by grace of a use-site `max(1)` guard.
+fn check_every(every: usize) -> Result<()> {
+    if every == 0 {
+        bail!("step period must be >= 1 (got 0)");
+    }
+    Ok(())
+}
+
+/// A decay factor outside (0, 1] either grows the quantity it is meant
+/// to anneal or zeroes/negates it.
+fn check_gamma(gamma: f32) -> Result<()> {
+    if !(gamma.is_finite() && gamma > 0.0 && gamma <= 1.0) {
+        bail!("decay gamma {gamma} out of (0, 1]");
+    }
+    Ok(())
+}
+
+/// A cosine floor fraction must be a fraction.
+fn check_frac(min_frac: f32) -> Result<()> {
+    if !(min_frac.is_finite() && (0.0..=1.0).contains(&min_frac)) {
+        bail!("min_frac {min_frac} out of [0, 1]");
+    }
+    Ok(())
+}
+
+/// 1-based epoch with an out-of-contract zero saturated — the epoch-0
+/// totality fix, defined once for every schedule resolver.
+fn sched_epoch(epoch: usize) -> usize {
+    epoch.max(1)
+}
+
+/// Completed decay periods at `epoch` — the shared step-decay exponent
+/// (integer, so the lr and K grammars cannot drift on it). Clamped to
+/// the run like [`run_frac`], so epochs beyond `total_epochs` hold the
+/// final value instead of decaying forever.
+fn decay_steps(epoch: usize, every: usize, total_epochs: usize) -> i32 {
+    let e = sched_epoch(epoch).min(total_epochs.max(1));
+    ((e - 1) / every.max(1)) as i32
+}
+
+/// Fraction of the run completed at a 1-based epoch, clamped to `[0, 1]`
+/// so epochs beyond the run hold the schedule's final value — THE
+/// definition of schedule time shared by the lr and K grammars.
+fn run_frac(epoch: usize, total_epochs: usize) -> f64 {
+    (((sched_epoch(epoch) - 1) as f64) / ((total_epochs.max(2) - 1) as f64)).min(1.0)
+}
+
+/// The one K-vs-M range rule, shared by the flat and per-layer checks in
+/// [`ExperimentConfig::validate`]: constants keep the historical strict
+/// `1..=M`; annealed shapes may clamp partially during the run, but a
+/// schedule above M at *every* realized epoch would silently train as
+/// constant K=M and is rejected like an oversized constant.
+fn check_k_range(k: &KSchedule, m: usize, epochs: usize, ctx: &str) -> Result<()> {
+    if let KSchedule::Constant(kc) = *k {
+        if kc == 0 || kc > m {
+            bail!("{ctx}k={kc} out of range 1..={m}");
+        }
+    } else if k.min_k(epochs) > m {
+        bail!(
+            "{ctx}k schedule '{}' exceeds M={m} at every epoch (it would clamp to a constant)",
+            k.name()
+        );
+    }
+    Ok(())
+}
+
 /// Learning-rate schedule (extension beyond the paper's constant η; the
 /// algorithm natively supports time-varying η_t — it enters the memory
 /// folding as √η_t — and the HLO artifacts take η as a runtime input, so
@@ -132,38 +212,72 @@ pub enum LrSchedule {
 }
 
 impl LrSchedule {
-    /// η for a 1-based epoch index.
+    /// η for a 1-based epoch index. Total: an out-of-contract `epoch = 0`
+    /// saturates to epoch 1 instead of underflowing the `usize`
+    /// subtraction (a panic in debug builds, a 2^64-epoch decay in
+    /// release — both wrong).
     pub fn lr_at(&self, base: f32, epoch: usize, total_epochs: usize) -> f32 {
-        match self {
+        match *self {
             LrSchedule::Constant => base,
             LrSchedule::StepDecay { every, gamma } => {
-                base * gamma.powi(((epoch - 1) / every.max(&1)) as i32)
+                base * gamma.powi(decay_steps(epoch, every, total_epochs))
             }
             LrSchedule::Cosine { min_frac } => {
-                let t = (epoch - 1) as f32 / (total_epochs.max(2) - 1) as f32;
+                let t = run_frac(epoch, total_epochs) as f32;
                 let floor = base * min_frac;
                 floor + 0.5 * (base - floor) * (1.0 + (std::f32::consts::PI * t).cos())
             }
         }
     }
 
-    pub fn parse(s: &str) -> Option<LrSchedule> {
-        if s == "constant" {
-            return Some(LrSchedule::Constant);
+    /// Parse a schedule spec, rejecting degenerate parameters (zero step
+    /// period, gamma outside (0, 1], min_frac outside [0, 1]) at parse
+    /// time — a bad spec must error, not silently train nonsense.
+    pub fn parse(s: &str) -> Result<LrSchedule> {
+        let t = s.trim();
+        if t == "constant" {
+            return Ok(LrSchedule::Constant);
         }
-        if let Some(rest) = s.strip_prefix("step:") {
+        if let Some(rest) = t.strip_prefix("step:") {
             // step:<every>:<gamma>
             let mut it = rest.split(':');
-            let every = it.next()?.parse().ok()?;
-            let gamma = it.next()?.parse().ok()?;
-            return Some(LrSchedule::StepDecay { every, gamma });
+            let every = it
+                .next()
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| anyhow!("schedule '{s}': bad step period"))?;
+            let gamma = it
+                .next()
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| anyhow!("schedule '{s}': bad gamma"))?;
+            if let Some(extra) = it.next() {
+                bail!("schedule '{s}': unexpected trailing ':{extra}'");
+            }
+            let sch = LrSchedule::StepDecay { every, gamma };
+            sch.validate().map_err(|e| anyhow!("schedule '{s}': {e}"))?;
+            return Ok(sch);
         }
-        if let Some(rest) = s.strip_prefix("cosine:") {
-            return Some(LrSchedule::Cosine {
-                min_frac: rest.parse().ok()?,
-            });
+        if let Some(rest) = t.strip_prefix("cosine:") {
+            let min_frac = rest
+                .parse()
+                .map_err(|_| anyhow!("schedule '{s}': bad min_frac"))?;
+            let sch = LrSchedule::Cosine { min_frac };
+            sch.validate().map_err(|e| anyhow!("schedule '{s}': {e}"))?;
+            return Ok(sch);
         }
-        None
+        bail!("unknown schedule '{s}' (expected constant | step:<every>:<gamma> | cosine:<min-frac>)")
+    }
+
+    /// Parameter validity (the parse-time checks, re-runnable on structs
+    /// built in code — `ExperimentConfig::validate` calls this).
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            LrSchedule::Constant => Ok(()),
+            LrSchedule::StepDecay { every, gamma } => {
+                check_every(every)?;
+                check_gamma(gamma)
+            }
+            LrSchedule::Cosine { min_frac } => check_frac(min_frac),
+        }
     }
 
     pub fn name(&self) -> String {
@@ -172,6 +286,239 @@ impl LrSchedule {
             LrSchedule::StepDecay { every, gamma } => format!("step:{every}:{gamma}"),
             LrSchedule::Cosine { min_frac } => format!("cosine:{min_frac}"),
         }
+    }
+}
+
+/// Per-epoch outer-product budget schedule — the paper's K as a
+/// first-class, annealable knob (ROADMAP: per-layer K schedules).
+///
+/// Related work motivates both directions: approximation error is most
+/// tolerable early in training (grow K with `linear`), and sampling
+/// budgets trade compute for curve fidelity non-uniformly over training
+/// (shrink K with `step`/`cosine`). The spec grammar:
+///
+/// * `<k>` — constant budget (the paper's setting; serializes as a plain
+///   number, so flat constant configs stay bit-for-bit wire-identical);
+/// * `step:<k0>:<every>:<gamma>` — start at k0, multiply by gamma every
+///   `every` epochs (rounded);
+/// * `cosine:<k0>:<min-frac>` — cosine-anneal from k0 down to
+///   k0·min_frac over the run;
+/// * `linear:<from>:<to>` — linear from `from` (epoch 1) to `to` (last
+///   epoch), either direction.
+///
+/// Resolution ([`KSchedule::k_at`]) is per 1-based epoch and always
+/// clamps to `[1, batch]` — an annealed budget can approach but never
+/// exceed the paper's M or hit zero. Parameters are validated at parse
+/// time with the same shared checks as [`LrSchedule`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KSchedule {
+    /// k_t = k.
+    Constant(usize),
+    /// k_t = round(k0 · gamma^((epoch-1)/every)).
+    Step { k0: usize, every: usize, gamma: f32 },
+    /// Cosine anneal from k0 to round(k0 · min_frac) over the run.
+    Cosine { k0: usize, min_frac: f32 },
+    /// Linear from `from` at epoch 1 to `to` at the last epoch.
+    Linear { from: usize, to: usize },
+}
+
+impl KSchedule {
+    /// The constant schedule — the historical `k: usize` in type form.
+    pub fn constant(k: usize) -> KSchedule {
+        KSchedule::Constant(k)
+    }
+
+    /// The largest budget any epoch can resolve to (before the batch
+    /// clamp) — what workspace-style consumers size for. Monotone decay
+    /// (step/cosine with gamma, min_frac ≤ 1) peaks at epoch 1; linear
+    /// peaks at whichever endpoint is larger.
+    pub fn max_k(&self) -> usize {
+        match *self {
+            KSchedule::Constant(k) => k,
+            KSchedule::Step { k0, .. } | KSchedule::Cosine { k0, .. } => k0,
+            KSchedule::Linear { from, to } => from.max(to),
+        }
+    }
+
+    /// Concrete K for a 1-based epoch, clamped to `[1, batch]`. Total on
+    /// out-of-contract inputs: `epoch = 0` saturates to epoch 1 and
+    /// epochs beyond `total_epochs` hold the schedule's final value.
+    pub fn k_at(&self, epoch: usize, total_epochs: usize, batch: usize) -> usize {
+        // schedule time and decay exponents come from the same shared
+        // helpers as LrSchedule::lr_at, so the two grammars cannot drift
+        // on saturation or extrapolation semantics
+        let t = run_frac(epoch, total_epochs);
+        let raw = match *self {
+            KSchedule::Constant(k) => k as f64,
+            KSchedule::Step { k0, every, gamma } => {
+                k0 as f64 * (gamma as f64).powi(decay_steps(epoch, every, total_epochs))
+            }
+            KSchedule::Cosine { k0, min_frac } => {
+                let floor = k0 as f64 * min_frac as f64;
+                floor + 0.5 * (k0 as f64 - floor) * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+            KSchedule::Linear { from, to } => from as f64 + (to as f64 - from as f64) * t,
+        };
+        (raw.round() as usize).clamp(1, batch.max(1))
+    }
+
+    /// The smallest budget any epoch of a `total_epochs`-long run can
+    /// resolve to, before the batch clamp: monotone-decay shapes bottom
+    /// out at the last epoch, linear at its smaller endpoint. Lets
+    /// `ExperimentConfig::validate` reject schedules that would clamp at
+    /// *every* epoch (almost certainly a typo) while still allowing
+    /// intentional partial clamping.
+    pub fn min_k(&self, total_epochs: usize) -> usize {
+        match *self {
+            KSchedule::Constant(k) => k,
+            KSchedule::Step { .. } | KSchedule::Cosine { .. } => {
+                self.k_at(total_epochs, total_epochs, usize::MAX)
+            }
+            KSchedule::Linear { from, to } => {
+                // a 1-epoch run only ever resolves epoch 1 = `from`; the
+                // `to` endpoint is unreachable and must not mask an
+                // out-of-range start
+                if total_epochs <= 1 {
+                    from
+                } else {
+                    from.min(to)
+                }
+            }
+        }
+    }
+
+    /// Parse a K-schedule spec (see the type docs for the grammar),
+    /// rejecting degenerate parameters at parse time with the same
+    /// shared checks as [`LrSchedule::parse`].
+    pub fn parse(s: &str) -> Result<KSchedule> {
+        let t = s.trim();
+        let int = |v: &str, what: &str| -> Result<usize> {
+            let k: usize = v
+                .parse()
+                .map_err(|_| anyhow!("k schedule '{s}': bad {what} '{v}'"))?;
+            if k == 0 {
+                bail!("k schedule '{s}': {what} must be >= 1");
+            }
+            Ok(k)
+        };
+        if t.chars().all(|c| c.is_ascii_digit()) && !t.is_empty() {
+            return Ok(KSchedule::Constant(int(t, "k")?));
+        }
+        let (kind, rest) = match t.split_once(':') {
+            Some(pair) => pair,
+            None => bail!(
+                "bad k schedule '{s}' (expected <k> | step:<k0>:<every>:<gamma> | \
+                 cosine:<k0>:<min-frac> | linear:<from>:<to>)"
+            ),
+        };
+        let mut it = rest.split(':');
+        let sch = match kind {
+            "constant" => KSchedule::Constant(int(rest, "k")?),
+            "step" => {
+                let k0 = int(it.next().unwrap_or(""), "k0")?;
+                let every = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow!("k schedule '{s}': bad step period"))?;
+                let gamma = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow!("k schedule '{s}': bad gamma"))?;
+                KSchedule::Step { k0, every, gamma }
+            }
+            "cosine" => {
+                let k0 = int(it.next().unwrap_or(""), "k0")?;
+                let min_frac = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow!("k schedule '{s}': bad min_frac"))?;
+                KSchedule::Cosine { k0, min_frac }
+            }
+            "linear" => {
+                let from = int(it.next().unwrap_or(""), "from")?;
+                let to = int(it.next().unwrap_or(""), "to")?;
+                KSchedule::Linear { from, to }
+            }
+            other => bail!(
+                "unknown k schedule kind '{other}' in '{s}' (expected <k> | \
+                 step:<k0>:<every>:<gamma> | cosine:<k0>:<min-frac> | linear:<from>:<to>)"
+            ),
+        };
+        if !matches!(sch, KSchedule::Constant(_)) {
+            if let Some(extra) = it.next() {
+                bail!("k schedule '{s}': unexpected trailing ':{extra}'");
+            }
+        }
+        sch.validate().map_err(|e| anyhow!("k schedule '{s}': {e}"))?;
+        Ok(sch)
+    }
+
+    /// Parameter validity (shared checks with [`LrSchedule`]); range
+    /// against a batch size is the caller's concern
+    /// (`ExperimentConfig::validate` pins constants to `1..=M`, annealed
+    /// shapes rely on the resolve-time clamp).
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            KSchedule::Constant(k) => {
+                if k == 0 {
+                    bail!("k must be >= 1");
+                }
+                Ok(())
+            }
+            KSchedule::Step { k0, every, gamma } => {
+                if k0 == 0 {
+                    bail!("k0 must be >= 1");
+                }
+                check_every(every)?;
+                check_gamma(gamma)
+            }
+            KSchedule::Cosine { k0, min_frac } => {
+                if k0 == 0 {
+                    bail!("k0 must be >= 1");
+                }
+                check_frac(min_frac)
+            }
+            KSchedule::Linear { from, to } => {
+                if from == 0 || to == 0 {
+                    bail!("linear endpoints must be >= 1");
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Canonical spec string; constants print as the bare integer.
+    pub fn name(&self) -> String {
+        match *self {
+            KSchedule::Constant(k) => k.to_string(),
+            KSchedule::Step { k0, every, gamma } => format!("step:{k0}:{every}:{gamma}"),
+            KSchedule::Cosine { k0, min_frac } => format!("cosine:{k0}:{min_frac}"),
+            KSchedule::Linear { from, to } => format!("linear:{from}:{to}"),
+        }
+    }
+
+    /// Wire form (protocol v4): constants stay plain numbers — exactly
+    /// the v1-v3 frame shape — and annealed schedules go as spec strings.
+    pub fn to_json(&self) -> Json {
+        match *self {
+            KSchedule::Constant(k) => json::num(k as f64),
+            _ => json::s(&self.name()),
+        }
+    }
+
+    /// Inverse of [`KSchedule::to_json`]: accepts a number (v1-v3 frames
+    /// and constant schedules) or a spec string.
+    pub fn from_json(v: &Json) -> Result<KSchedule> {
+        if let Some(k) = v.as_usize() {
+            if k == 0 {
+                bail!("k must be >= 1");
+            }
+            return Ok(KSchedule::Constant(k));
+        }
+        if let Some(s) = v.as_str() {
+            return KSchedule::parse(s);
+        }
+        bail!("k must be an integer or a schedule string")
     }
 }
 
@@ -186,8 +533,9 @@ pub struct LayerSpec {
     /// Elementwise activation; `None` resolves positionally (relu for
     /// hidden layers, identity for the head).
     pub activation: Option<Activation>,
-    /// Per-layer K override (≤ M).
-    pub k: Option<usize>,
+    /// Per-layer K-schedule override (constants stay ≤ M; annealed
+    /// shapes clamp per epoch).
+    pub k: Option<KSchedule>,
     /// Per-layer selection-policy override.
     pub policy: Option<Policy>,
     /// Per-layer memory override.
@@ -206,15 +554,17 @@ impl LayerSpec {
         }
     }
 
-    /// Parse one CLI layer item `width[:activation[:k]]`, e.g. `32`,
-    /// `32:relu`, `32:tanh:16`.
+    /// Parse one CLI layer item `width[:activation[:ksched]]`, e.g.
+    /// `32`, `32:relu`, `32:tanh:16`, `32:relu:linear:8:32` — everything
+    /// after the second `:` is one [`KSchedule`] spec (schedules contain
+    /// `:` themselves).
     pub fn parse(s: &str) -> Result<LayerSpec> {
-        let mut it = s.trim().split(':');
+        let mut it = s.trim().splitn(3, ':');
         let width: usize = it
             .next()
             .filter(|w| !w.is_empty())
             .and_then(|w| w.parse().ok())
-            .ok_or_else(|| anyhow!("layer '{s}': expected width[:activation[:k]]"))?;
+            .ok_or_else(|| anyhow!("layer '{s}': expected width[:activation[:ksched]]"))?;
         let activation = match it.next() {
             None | Some("") => None,
             Some(a) => Some(
@@ -225,13 +575,9 @@ impl LayerSpec {
         let k = match it.next() {
             None | Some("") => None,
             Some(kv) => Some(
-                kv.parse()
-                    .map_err(|_| anyhow!("layer '{s}': bad k '{kv}'"))?,
+                KSchedule::parse(kv).map_err(|e| anyhow!("layer '{s}': {e}"))?,
             ),
         };
-        if let Some(extra) = it.next() {
-            bail!("layer '{s}': unexpected trailing ':{extra}'");
-        }
         Ok(LayerSpec {
             width,
             activation,
@@ -254,7 +600,9 @@ impl LayerSpec {
             pairs.push(("activation", json::s(a.name())));
         }
         if let Some(k) = self.k {
-            pairs.push(("k", json::num(k as f64)));
+            // constants stay numbers (v3-shaped frames), schedules are
+            // spec strings (protocol v4)
+            pairs.push(("k", k.to_json()));
         }
         if let Some(p) = self.policy {
             pairs.push(("policy", json::s(p.name())));
@@ -279,8 +627,7 @@ impl LayerSpec {
         };
         let k = match v.get("k") {
             Some(n) => Some(
-                n.as_usize()
-                    .ok_or_else(|| anyhow!("layers[{i}]: bad k"))?,
+                KSchedule::from_json(n).map_err(|e| anyhow!("layers[{i}]: {e}"))?,
             ),
             None => None,
         };
@@ -308,13 +655,31 @@ impl LayerSpec {
 }
 
 /// One fully-resolved layer of a run: dims, activation, and the
-/// effective per-layer Mem-AOP-GD config.
+/// effective per-layer Mem-AOP-GD knobs — with K as a [`KSchedule`]
+/// resolved to a concrete budget per epoch by [`ResolvedLayer::cfg_at`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ResolvedLayer {
     pub fan_in: usize,
     pub fan_out: usize,
     pub activation: Activation,
-    pub cfg: AopLayerConfig,
+    /// Per-epoch outer-product budget at this layer.
+    pub k: KSchedule,
+    pub policy: Policy,
+    pub memory: bool,
+}
+
+impl ResolvedLayer {
+    /// The concrete train-core config for a 1-based epoch: the schedule
+    /// resolved and clamped to `[1, batch]`. Constant schedules yield
+    /// the same config at every epoch — the historical behavior,
+    /// bit-for-bit.
+    pub fn cfg_at(&self, epoch: usize, total_epochs: usize, batch: usize) -> AopLayerConfig {
+        AopLayerConfig {
+            k: self.k.k_at(epoch, total_epochs, batch),
+            policy: self.policy,
+            memory: self.memory,
+        }
+    }
 }
 
 /// Full specification of one training run.
@@ -322,8 +687,10 @@ pub struct ResolvedLayer {
 pub struct ExperimentConfig {
     pub task: Task,
     pub policy: Policy,
-    /// Outer products kept per update (K ≤ M). Ignored by `Exact`.
-    pub k: usize,
+    /// Outer products kept per update, as a per-epoch schedule (resolved
+    /// values clamp to `[1, M]`; constants must sit in `1..=M`). Ignored
+    /// by `Exact`.
+    pub k: KSchedule,
     /// Error-feedback memory on/off (continuous vs dashed curves).
     pub memory: bool,
     pub epochs: usize,
@@ -358,7 +725,7 @@ impl ExperimentConfig {
         ExperimentConfig {
             task: Task::Energy,
             policy: Policy::Exact,
-            k: 144,
+            k: KSchedule::Constant(144),
             memory: false,
             epochs: Task::Energy.epochs(),
             lr: 0.01,
@@ -376,7 +743,7 @@ impl ExperimentConfig {
         ExperimentConfig {
             task: Task::Mnist,
             policy: Policy::Exact,
-            k: 64,
+            k: KSchedule::Constant(64),
             memory: false,
             epochs: Task::Mnist.epochs(),
             lr: 0.01,
@@ -429,11 +796,9 @@ impl ExperimentConfig {
                 fan_in: n_in,
                 fan_out: n_out,
                 activation: Activation::Identity,
-                cfg: AopLayerConfig {
-                    k: self.k,
-                    policy: self.policy,
-                    memory: self.memory,
-                },
+                k: self.k,
+                policy: self.policy,
+                memory: self.memory,
             }];
         };
         let nl = specs.len();
@@ -451,11 +816,9 @@ impl ExperimentConfig {
                     } else {
                         Activation::Relu
                     }),
-                    cfg: AopLayerConfig {
-                        k: s.k.unwrap_or(self.k),
-                        policy: s.policy.unwrap_or(self.policy),
-                        memory: s.memory.unwrap_or(self.memory),
-                    },
+                    k: s.k.unwrap_or(self.k),
+                    policy: s.policy.unwrap_or(self.policy),
+                    memory: s.memory.unwrap_or(self.memory),
                 };
                 fan_in = s.width;
                 rl
@@ -473,9 +836,11 @@ impl ExperimentConfig {
 
     /// Validate internal consistency.
     pub fn validate(&self) -> Result<()> {
-        if self.k == 0 || self.k > self.m() {
-            bail!("k={} out of range 1..={}", self.k, self.m());
-        }
+        self.k.validate().map_err(|e| anyhow!("k: {e}"))?;
+        check_k_range(&self.k, self.m(), self.epochs, "")?;
+        self.schedule
+            .validate()
+            .map_err(|e| anyhow!("schedule: {e}"))?;
         if !(self.lr > 0.0 && self.lr.is_finite()) {
             bail!("bad learning rate {}", self.lr);
         }
@@ -517,13 +882,8 @@ impl ExperimentConfig {
                 if rl.fan_out == 0 {
                     bail!("layers[{i}]: width must be > 0");
                 }
-                if rl.cfg.k == 0 || rl.cfg.k > self.m() {
-                    bail!(
-                        "layers[{i}]: k={} out of range 1..={}",
-                        rl.cfg.k,
-                        self.m()
-                    );
-                }
+                rl.k.validate().map_err(|e| anyhow!("layers[{i}]: {e}"))?;
+                check_k_range(&rl.k, self.m(), self.epochs, &format!("layers[{i}]: "))?;
             }
         }
         Ok(())
@@ -533,7 +893,9 @@ impl ExperimentConfig {
         let mut pairs = vec![
             ("task", json::s(self.task.name())),
             ("policy", json::s(self.policy.name())),
-            ("k", json::num(self.k as f64)),
+            // constants emit as plain numbers, so flat constant frames
+            // stay bit-for-bit identical to v1-v3; schedules are strings
+            ("k", self.k.to_json()),
             ("memory", Json::Bool(self.memory)),
             ("epochs", json::num(self.epochs as f64)),
             ("lr", json::num(self.lr as f64)),
@@ -566,7 +928,9 @@ impl ExperimentConfig {
         let cfg = ExperimentConfig {
             task: Task::parse(gs("task")?).ok_or_else(|| anyhow!("bad task"))?,
             policy: Policy::parse(gs("policy")?).ok_or_else(|| anyhow!("bad policy"))?,
-            k: gn("k")? as usize,
+            // number (v1-v3 / constant) or schedule string (v4)
+            k: KSchedule::from_json(v.req("k").map_err(|e| anyhow!("{e}"))?)
+                .map_err(|e| anyhow!("config: {e}"))?,
             memory: v
                 .req("memory")
                 .map_err(|e| anyhow!("{e}"))?
@@ -575,7 +939,7 @@ impl ExperimentConfig {
             epochs: gn("epochs")? as usize,
             lr: gn("lr")? as f32,
             schedule: match v.get("schedule").and_then(|s| s.as_str()) {
-                Some(s) => LrSchedule::parse(s).ok_or_else(|| anyhow!("bad schedule"))?,
+                Some(s) => LrSchedule::parse(s).map_err(|e| anyhow!("config: {e}"))?,
                 None => LrSchedule::Constant,
             },
             seed: gn("seed")? as u64,
@@ -663,15 +1027,17 @@ mod tests {
     fn json_roundtrip() {
         let mut c = ExperimentConfig::mnist_preset();
         c.policy = Policy::WeightedK;
-        c.k = 16;
+        c.k = KSchedule::Constant(16);
         c.memory = true;
         c.seed = 42;
         c.data_scale = 0.25;
         c.threads = 4;
         let j = c.to_json();
+        // constant k stays a plain number on the wire (v1-v3 shape)
+        assert!(j.get("k").unwrap().as_usize().is_some());
         let c2 = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c2.label(), c.label());
-        assert_eq!(c2.k, 16);
+        assert_eq!(c2.k, KSchedule::Constant(16));
         assert_eq!(c2.seed, 42);
         assert_eq!(c2.data_scale, 0.25);
         assert_eq!(c2.threads, 4);
@@ -707,16 +1073,26 @@ mod tests {
     #[test]
     fn validation_rejects_bad() {
         let mut c = ExperimentConfig::energy_preset();
-        c.k = 0;
+        c.k = KSchedule::Constant(0);
         assert!(c.validate().is_err());
-        c.k = 200; // > M=144
+        c.k = KSchedule::Constant(200); // > M=144
         assert!(c.validate().is_err());
-        c.k = 18;
+        c.k = KSchedule::Constant(18);
         c.lr = -1.0;
         assert!(c.validate().is_err());
         c.lr = 0.01;
         c.epochs = 0;
         assert!(c.validate().is_err());
+        // degenerate schedule params are caught even when the structs
+        // were built in code (not parsed)
+        c.epochs = 10;
+        c.schedule = LrSchedule::StepDecay { every: 0, gamma: 0.5 };
+        assert!(c.validate().is_err());
+        c.schedule = LrSchedule::Constant;
+        c.k = KSchedule::Step { k0: 18, every: 3, gamma: -0.5 };
+        assert!(c.validate().is_err());
+        c.k = KSchedule::Constant(18);
+        assert!(c.validate().is_ok());
     }
 
     #[test]
@@ -739,10 +1115,216 @@ mod tests {
 
         // parse round-trips
         for sch in [c, s, cos] {
-            assert_eq!(LrSchedule::parse(&sch.name()), Some(sch));
+            assert_eq!(LrSchedule::parse(&sch.name()).unwrap(), sch);
         }
-        assert_eq!(LrSchedule::parse("bogus"), None);
-        assert_eq!(LrSchedule::parse("step:10"), None);
+        assert!(LrSchedule::parse("bogus").is_err());
+        assert!(LrSchedule::parse("step:10").is_err());
+    }
+
+    #[test]
+    fn lr_at_is_total_at_epoch_zero_and_beyond_the_run() {
+        // epoch is documented 1-based, but nothing upstream enforces it:
+        // epoch 0 must saturate to epoch 1, never underflow the usize
+        let variants = [
+            LrSchedule::Constant,
+            LrSchedule::StepDecay { every: 10, gamma: 0.5 },
+            LrSchedule::Cosine { min_frac: 0.1 },
+        ];
+        for sch in variants {
+            let at0 = sch.lr_at(1.0, 0, 50);
+            let at1 = sch.lr_at(1.0, 1, 50);
+            assert_eq!(at0.to_bits(), at1.to_bits(), "{sch:?}: epoch 0 vs 1");
+            let last = sch.lr_at(1.0, 50, 50);
+            assert!(last.is_finite() && last > 0.0, "{sch:?}: last epoch");
+            // past the run the cosine holds its floor instead of rising
+            let beyond = sch.lr_at(1.0, 60, 50);
+            assert!(beyond.is_finite() && beyond <= at1, "{sch:?}: beyond");
+        }
+    }
+
+    #[test]
+    fn schedule_parse_rejects_degenerate_params() {
+        // zero step period (previously only saved by a use-site max(1))
+        assert!(LrSchedule::parse("step:0:0.5").is_err());
+        // gamma out of (0, 1]
+        assert!(LrSchedule::parse("step:10:-0.5").is_err());
+        assert!(LrSchedule::parse("step:10:0").is_err());
+        assert!(LrSchedule::parse("step:10:1.5").is_err());
+        assert!(LrSchedule::parse("step:10:1").is_ok());
+        // min_frac out of [0, 1]
+        assert!(LrSchedule::parse("cosine:-0.1").is_err());
+        assert!(LrSchedule::parse("cosine:2").is_err());
+        assert!(LrSchedule::parse("cosine:0").is_ok());
+        assert!(LrSchedule::parse("cosine:1").is_ok());
+        // trailing junk
+        assert!(LrSchedule::parse("step:10:0.5:zzz").is_err());
+
+        // the K grammar shares the same validation
+        assert!(KSchedule::parse("step:18:0:0.5").is_err());
+        assert!(KSchedule::parse("step:18:3:-0.5").is_err());
+        assert!(KSchedule::parse("step:18:3:1.5").is_err());
+        assert!(KSchedule::parse("cosine:18:2").is_err());
+        assert!(KSchedule::parse("cosine:0:0.5").is_err());
+        assert!(KSchedule::parse("linear:0:10").is_err());
+        assert!(KSchedule::parse("linear:10:0").is_err());
+        assert!(KSchedule::parse("0").is_err());
+        assert!(KSchedule::parse("step:18:3:0.5:zzz").is_err());
+        assert!(KSchedule::parse("ramp:1:2").is_err());
+        assert!(KSchedule::parse("4:zzz").is_err());
+    }
+
+    #[test]
+    fn k_schedule_resolution() {
+        let m = 144;
+        // constant: every epoch identical (the historical behavior)
+        let c = KSchedule::Constant(18);
+        for e in [0usize, 1, 50, 100] {
+            assert_eq!(c.k_at(e, 100, m), 18);
+        }
+        // linear: exact endpoints, monotone ramp, clamped to the batch
+        let lin = KSchedule::parse("linear:3:18").unwrap();
+        assert_eq!(lin, KSchedule::Linear { from: 3, to: 18 });
+        let ks: Vec<usize> = (1..=6).map(|e| lin.k_at(e, 6, m)).collect();
+        assert_eq!(ks, vec![3, 6, 9, 12, 15, 18]);
+        assert_eq!(lin.k_at(0, 6, m), 3); // total at epoch 0
+        assert_eq!(lin.k_at(9, 6, m), 18); // holds the final value
+        assert_eq!(KSchedule::Linear { from: 10, to: 500 }.k_at(6, 6, m), 144); // clamp to M
+        assert_eq!(KSchedule::Linear { from: 2, to: 1 }.k_at(1, 2, 1), 1); // clamp floor
+        // step: decays at the period boundary, never below 1
+        let st = KSchedule::parse("step:36:2:0.5").unwrap();
+        let ks: Vec<usize> = (1..=6).map(|e| st.k_at(e, 6, m)).collect();
+        assert_eq!(ks, vec![36, 36, 18, 18, 9, 9]);
+        // beyond the run the step holds its final value, like cosine
+        // and linear (the shared decay exponent is clamped to the run)
+        assert_eq!(st.k_at(40, 6, m), 9);
+        // ...and with a long enough run it decays toward the clamp floor
+        assert_eq!(st.k_at(40, 40, m), 1);
+        // cosine: starts at k0, ends at round(k0·min_frac)
+        let cos = KSchedule::parse("cosine:32:0.25").unwrap();
+        assert_eq!(cos.k_at(1, 10, m), 32);
+        assert_eq!(cos.k_at(10, 10, m), 8);
+        let mid = cos.k_at(5, 10, m);
+        assert!(mid > 8 && mid < 32, "{mid}");
+        // max_k sizes buffers for the peak budget
+        assert_eq!(lin.max_k(), 18);
+        assert_eq!(st.max_k(), 36);
+        assert_eq!(cos.max_k(), 32);
+        assert_eq!(KSchedule::Linear { from: 30, to: 4 }.max_k(), 30);
+    }
+
+    #[test]
+    fn fully_out_of_range_schedules_are_rejected_like_oversized_constants() {
+        // a schedule above M at every epoch would silently train as a
+        // constant K=M — reject it exactly like `--k 200` on M=144
+        let mut c = ExperimentConfig::energy_preset(); // M=144
+        c.k = KSchedule::Linear { from: 200, to: 400 };
+        assert!(c.validate().is_err());
+        c.k = KSchedule::Cosine { k0: 300, min_frac: 1.0 };
+        assert!(c.validate().is_err());
+        // partial clamping stays intentional and allowed: these come
+        // into range during the run
+        c.k = KSchedule::Linear { from: 10, to: 500 };
+        assert!(c.validate().is_ok());
+        c.k = KSchedule::Step { k0: 300, every: 2, gamma: 0.5 };
+        assert!(c.validate().is_ok()); // decays into range well before ep 100
+        // per-layer overrides get the same check
+        let mut c = layered_cfg();
+        if let Some(specs) = &mut c.layers {
+            specs[0].k = Some(KSchedule::Linear { from: 200, to: 400 });
+        }
+        assert!(c.validate().is_err());
+        // min_k: decay shapes bottom out at the last epoch, linear at
+        // its smaller endpoint
+        assert_eq!(KSchedule::Linear { from: 200, to: 4 }.min_k(10), 4);
+        assert_eq!(KSchedule::Cosine { k0: 40, min_frac: 0.5 }.min_k(10), 20);
+        assert_eq!(KSchedule::Step { k0: 32, every: 1, gamma: 0.5 }.min_k(4), 4);
+        // a 1-epoch run only ever realizes `from`: an out-of-range start
+        // cannot hide behind an unreachable `to`
+        assert_eq!(KSchedule::Linear { from: 200, to: 4 }.min_k(1), 200);
+        let mut c = ExperimentConfig::energy_preset();
+        c.epochs = 1;
+        c.k = KSchedule::Linear { from: 200, to: 4 };
+        assert!(c.validate().is_err());
+        c.epochs = 2;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn lr_and_k_schedules_agree_on_shape() {
+        // the two grammars share sched_epoch/decay_steps/run_frac; pin
+        // the remaining (precision-split) cosine/step formulas against
+        // drift by comparing the K resolution to the lr curve scaled to
+        // the same base
+        let total = 40;
+        let k0 = 100_000usize; // large base so integer rounding is ≪ tol
+        let cos_k = KSchedule::Cosine { k0, min_frac: 0.25 };
+        let cos_lr = LrSchedule::Cosine { min_frac: 0.25 };
+        let st_k = KSchedule::Step { k0, every: 7, gamma: 0.5 };
+        let st_lr = LrSchedule::StepDecay { every: 7, gamma: 0.5 };
+        for epoch in [0usize, 1, 2, 13, 20, 39, 40, 55] {
+            let kc = cos_k.k_at(epoch, total, usize::MAX) as f64 / k0 as f64;
+            let lc = cos_lr.lr_at(1.0, epoch, total) as f64;
+            assert!((kc - lc).abs() < 1e-4, "cosine epoch {epoch}: {kc} vs {lc}");
+            let ks = st_k.k_at(epoch, total, usize::MAX) as f64 / k0 as f64;
+            let ls = st_lr.lr_at(1.0, epoch, total) as f64;
+            assert!((ks - ls).abs() < 1e-4, "step epoch {epoch}: {ks} vs {ls}");
+        }
+    }
+
+    #[test]
+    fn k_schedule_name_parse_and_json_roundtrip() {
+        let scheds = [
+            KSchedule::Constant(18),
+            KSchedule::Step { k0: 36, every: 2, gamma: 0.5 },
+            KSchedule::Cosine { k0: 32, min_frac: 0.25 },
+            KSchedule::Linear { from: 3, to: 18 },
+        ];
+        for sch in scheds {
+            assert_eq!(KSchedule::parse(&sch.name()).unwrap(), sch, "{sch:?}");
+            assert_eq!(KSchedule::from_json(&sch.to_json()).unwrap(), sch, "{sch:?}");
+        }
+        // constants serialize as numbers, schedules as strings
+        assert!(KSchedule::Constant(18).to_json().as_usize().is_some());
+        assert!(KSchedule::Linear { from: 3, to: 18 }.to_json().as_str().is_some());
+        // `constant:` prefix accepted as an alias for the bare integer
+        assert_eq!(
+            KSchedule::parse("constant:7").unwrap(),
+            KSchedule::Constant(7)
+        );
+        assert!(KSchedule::from_json(&json::num(0.0)).is_err());
+        assert!(KSchedule::from_json(&Json::Bool(true)).is_err());
+    }
+
+    #[test]
+    fn annealed_config_json_roundtrip_surfaces_schedule_strings() {
+        let mut c = ExperimentConfig::energy_preset();
+        c.policy = Policy::TopK;
+        c.k = KSchedule::parse("linear:3:18").unwrap();
+        c.layers = Some(vec![
+            LayerSpec {
+                width: 8,
+                activation: Some(Activation::Tanh),
+                k: Some(KSchedule::parse("step:36:2:0.5").unwrap()),
+                policy: None,
+                memory: None,
+            },
+            LayerSpec::plain(1),
+        ]);
+        c.validate().unwrap();
+        let j = c.to_json();
+        assert_eq!(j.get("k").unwrap().as_str(), Some("linear:3:18"));
+        let c2 = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c2.k, c.k);
+        assert_eq!(c2.layers, c.layers);
+        assert_eq!(c2.layer_plan(), c.layer_plan());
+        // a degenerate schedule string on the wire is a decode error —
+        // this is what the serve submit path surfaces as a protocol error
+        let mut bad = c.to_json();
+        if let Json::Obj(pairs) = &mut bad {
+            pairs.retain(|(k, _)| k != "k");
+            pairs.push(("k".to_string(), json::s("step:18:0:0.5")));
+        }
+        assert!(ExperimentConfig::from_json(&bad).is_err());
     }
 
     #[test]
@@ -757,13 +1339,13 @@ mod tests {
         let mut c = ExperimentConfig::energy_preset();
         c.backend = Backend::Native;
         c.policy = Policy::TopK;
-        c.k = 18;
+        c.k = KSchedule::Constant(18);
         c.memory = true;
         c.layers = Some(vec![
             LayerSpec {
                 width: 8,
                 activation: Some(Activation::Tanh),
-                k: Some(36),
+                k: Some(KSchedule::Constant(36)),
                 policy: Some(Policy::RandK),
                 memory: Some(false),
             },
@@ -779,9 +1361,13 @@ mod tests {
         assert_eq!(plan.len(), 1);
         assert_eq!((plan[0].fan_in, plan[0].fan_out), (784, 10));
         assert_eq!(plan[0].activation, Activation::Identity);
-        assert_eq!(plan[0].cfg.k, c.k);
-        assert_eq!(plan[0].cfg.policy, c.policy);
-        assert_eq!(plan[0].cfg.memory, c.memory);
+        assert_eq!(plan[0].k, c.k);
+        assert_eq!(plan[0].policy, c.policy);
+        assert_eq!(plan[0].memory, c.memory);
+        // the epoch-resolved config carries the constant K verbatim
+        let cfg1 = plan[0].cfg_at(1, c.epochs, c.m());
+        assert_eq!(cfg1.k, 64);
+        assert_eq!(cfg1.policy, c.policy);
         assert_eq!(c.layer_dims(), vec![(784, 10)]);
     }
 
@@ -794,15 +1380,37 @@ mod tests {
         // explicit overrides on layer 0
         assert_eq!((plan[0].fan_in, plan[0].fan_out), (16, 8));
         assert_eq!(plan[0].activation, Activation::Tanh);
-        assert_eq!(plan[0].cfg.k, 36);
-        assert_eq!(plan[0].cfg.policy, Policy::RandK);
-        assert!(!plan[0].cfg.memory);
+        assert_eq!(plan[0].k, KSchedule::Constant(36));
+        assert_eq!(plan[0].policy, Policy::RandK);
+        assert!(!plan[0].memory);
         // bare head layer inherits the flat knobs + identity default
         assert_eq!((plan[1].fan_in, plan[1].fan_out), (8, 1));
         assert_eq!(plan[1].activation, Activation::Identity);
-        assert_eq!(plan[1].cfg.k, 18);
-        assert_eq!(plan[1].cfg.policy, Policy::TopK);
-        assert!(plan[1].cfg.memory);
+        assert_eq!(plan[1].k, KSchedule::Constant(18));
+        assert_eq!(plan[1].policy, Policy::TopK);
+        assert!(plan[1].memory);
+    }
+
+    #[test]
+    fn layer_plan_resolves_annealed_budgets_per_epoch() {
+        let mut c = layered_cfg();
+        if let Some(specs) = &mut c.layers {
+            specs[0].k = Some(KSchedule::parse("step:36:2:0.5").unwrap());
+        }
+        c.k = KSchedule::parse("linear:3:18").unwrap();
+        c.epochs = 6;
+        assert!(c.validate().is_ok());
+        let plan = c.layer_plan();
+        // layer 0 follows its own step schedule
+        assert_eq!(plan[0].cfg_at(1, 6, 144).k, 36);
+        assert_eq!(plan[0].cfg_at(3, 6, 144).k, 18);
+        assert_eq!(plan[0].cfg_at(6, 6, 144).k, 9);
+        // the bare head inherits the flat linear schedule
+        assert_eq!(plan[1].cfg_at(1, 6, 144).k, 3);
+        assert_eq!(plan[1].cfg_at(6, 6, 144).k, 18);
+        // policy/memory ride along unchanged at every epoch
+        assert_eq!(plan[0].cfg_at(4, 6, 144).policy, Policy::RandK);
+        assert!(plan[1].cfg_at(4, 6, 144).memory);
     }
 
     #[test]
@@ -827,10 +1435,16 @@ mod tests {
         // empty spec
         c.layers = Some(vec![]);
         assert!(c.validate().is_err());
-        // per-layer k out of range
+        // per-layer constant k out of range
         let mut c = layered_cfg();
         if let Some(specs) = &mut c.layers {
-            specs[0].k = Some(200); // > M=144
+            specs[0].k = Some(KSchedule::Constant(200)); // > M=144
+        }
+        assert!(c.validate().is_err());
+        // per-layer degenerate schedule params
+        let mut c = layered_cfg();
+        if let Some(specs) = &mut c.layers {
+            specs[0].k = Some(KSchedule::Step { k0: 36, every: 0, gamma: 0.5 });
         }
         assert!(c.validate().is_err());
         // layer graphs are native-only
@@ -846,11 +1460,20 @@ mod tests {
         assert_eq!(specs[0].width, 32);
         assert_eq!(specs[0].activation, Some(Activation::Relu));
         assert_eq!(specs[0].k, None);
-        assert_eq!(specs[1].k, Some(9));
+        assert_eq!(specs[1].k, Some(KSchedule::Constant(9)));
         assert_eq!(specs[2], LayerSpec::plain(1));
+        // everything after the second ':' is one K-schedule spec
+        let annealed = LayerSpec::parse("32:relu:linear:8:32").unwrap();
+        assert_eq!(annealed.k, Some(KSchedule::Linear { from: 8, to: 32 }));
+        let stepped = LayerSpec::parse("8:tanh:step:36:2:0.5").unwrap();
+        assert_eq!(
+            stepped.k,
+            Some(KSchedule::Step { k0: 36, every: 2, gamma: 0.5 })
+        );
         assert!(LayerSpec::parse("x:relu").is_err());
         assert!(LayerSpec::parse("8:gelu").is_err());
         assert!(LayerSpec::parse("8:relu:4:zzz").is_err());
+        assert!(LayerSpec::parse("8:relu:step:36:0:0.5").is_err());
         // empty segments are rejected, never silently dropped
         assert!(LayerSpec::parse_list("128:relu,,10").is_err());
         assert!(LayerSpec::parse_list("128:relu,10,").is_err());

@@ -142,7 +142,6 @@ pub fn run_with_trainer_observed<T: Trainer>(
     let layers = cfg.layer_plan();
     let nl = layers.len();
 
-    let layer_cfgs: Vec<AopLayerConfig> = layers.iter().map(|rl| rl.cfg).collect();
     let mut shuffle_rng = Rng::new(cfg.seed ^ 0x5A0FF);
     let mut batcher = Batcher::new(train.len(), m);
     let mut curve = RunCurve::new(&cfg.label());
@@ -152,6 +151,15 @@ pub fn run_with_trainer_observed<T: Trainer>(
     for epoch in 1..=cfg.epochs {
         let t0 = Instant::now();
         trainer.set_lr(cfg.schedule.lr_at(cfg.lr, epoch, cfg.epochs));
+        // resolve this epoch's per-layer outer-product budgets from the
+        // K schedules (clamped to [1, M]); constant schedules resolve to
+        // the same configs every epoch — bit-for-bit the historical
+        // behavior. Resolution happens on the coordinator thread, so
+        // annealed budgets share the exec determinism guarantee.
+        let layer_cfgs: Vec<AopLayerConfig> = layers
+            .iter()
+            .map(|rl| rl.cfg_at(epoch, cfg.epochs, m))
+            .collect();
         let batches = batcher.epoch_batches(&train, &mut shuffle_rng);
         curve.steps_per_epoch = batches.len();
         let mut loss_sum = 0.0f64;
@@ -245,12 +253,13 @@ pub fn evaluate_chunked<T: Trainer>(
 mod tests {
     use super::*;
     use crate::aop::Policy;
+    use crate::coordinator::config::KSchedule;
 
     fn quick_energy(policy: Policy, memory: bool, k: usize) -> ExperimentConfig {
         let mut cfg = ExperimentConfig::energy_preset();
         cfg.policy = policy;
         cfg.memory = memory;
-        cfg.k = k;
+        cfg.k = KSchedule::Constant(k);
         cfg.epochs = 12;
         cfg
     }
@@ -315,6 +324,32 @@ mod tests {
     }
 
     #[test]
+    fn annealed_k_schedule_drives_per_epoch_budgets() {
+        // linear:3:18 over 6 epochs resolves to K = 3,6,9,12,15,18; topk
+        // without replacement evaluates exactly K products per step, so
+        // the recorded per-layer k_effective must follow the schedule
+        let mut cfg = quick_energy(Policy::TopK, true, 18);
+        cfg.epochs = 6;
+        cfg.k = KSchedule::parse("linear:3:18").unwrap();
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.curve.epochs.len(), 6);
+        for (ei, ep) in r.curve.epochs.iter().enumerate() {
+            let expect = cfg.k.k_at(ei + 1, 6, cfg.m()) as f64;
+            assert_eq!(ep.layers[0].k_effective, expect, "epoch {}", ei + 1);
+        }
+        // the FLOP account integrates the schedule: strictly between a
+        // flat K=3 run and a flat K=18 run of the same length
+        let mut lo_cfg = quick_energy(Policy::TopK, true, 3);
+        lo_cfg.epochs = 6;
+        let mut hi_cfg = quick_energy(Policy::TopK, true, 18);
+        hi_cfg.epochs = 6;
+        let lo = run(&lo_cfg).unwrap().curve.total_backward_flops();
+        let hi = run(&hi_cfg).unwrap().curve.total_backward_flops();
+        let mid = r.curve.total_backward_flops();
+        assert!(lo < mid && mid < hi, "{lo} {mid} {hi}");
+    }
+
+    #[test]
     fn epochs_record_throughput() {
         let cfg = quick_energy(Policy::TopK, true, 18);
         let r = run(&cfg).unwrap();
@@ -365,7 +400,7 @@ mod tests {
         cfg.data_scale = 0.02; // 1200 train / 200 val
         cfg.epochs = 3;
         cfg.policy = Policy::TopK;
-        cfg.k = 16;
+        cfg.k = KSchedule::Constant(16);
         cfg.memory = true;
         let r = run(&cfg).unwrap();
         assert_eq!(r.curve.epochs.len(), 3);

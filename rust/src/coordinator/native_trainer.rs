@@ -40,6 +40,13 @@ impl NativeTrainer {
     pub fn new(cfg: &ExperimentConfig) -> Result<NativeTrainer> {
         cfg.validate()?;
         let plan = cfg.layer_plan();
+        // defense in depth behind validate(): a degenerate plan must
+        // produce an Err a serve worker can report, never reach the
+        // Graph constructor's panic
+        anyhow::ensure!(
+            !plan.is_empty() && plan.iter().all(|rl| rl.fan_out > 0),
+            "layer plan resolves to no usable layers (empty or zero-width spec)"
+        );
         // weight init stream is independent of the policy stream; layers
         // draw in input-to-output order, so the flat single-layer case
         // consumes exactly the historical stream
@@ -49,7 +56,14 @@ impl NativeTrainer {
             .map(|rl| Dense::glorot(&mut wrng, rl.fan_in, rl.fan_out, rl.activation))
             .collect();
         let graph = Graph::new(layers, cfg.task.loss());
-        let cfgs: Vec<_> = plan.iter().map(|rl| rl.cfg).collect();
+        // the graph state carries the epoch-1 resolution of each layer's
+        // K schedule; per-epoch budgets are supplied by the experiment
+        // loop through `select_with_configs` (the caller owns selection),
+        // so an annealing schedule never mutates trainer state
+        let cfgs: Vec<_> = plan
+            .iter()
+            .map(|rl| rl.cfg_at(1, cfg.epochs, cfg.m()))
+            .collect();
         let state = GraphState::from_configs(&graph, cfg.m(), &cfgs);
         let ws = GraphWorkspace::new(&graph, cfg.m());
         Ok(NativeTrainer {
@@ -115,13 +129,13 @@ impl Trainer for NativeTrainer {
 mod tests {
     use super::*;
     use crate::aop::policy::{self, Policy};
-    use crate::coordinator::config::LayerSpec;
+    use crate::coordinator::config::{KSchedule, LayerSpec};
 
     #[test]
     fn trait_step_cycle_runs() {
         let mut cfg = ExperimentConfig::energy_preset();
         cfg.policy = Policy::TopK;
-        cfg.k = 18;
+        cfg.k = KSchedule::Constant(18);
         cfg.memory = true;
         let mut t = NativeTrainer::new(&cfg).unwrap();
         let mut rng = Rng::new(0);
@@ -144,13 +158,13 @@ mod tests {
     fn layered_config_builds_matching_graph() {
         let mut cfg = ExperimentConfig::energy_preset();
         cfg.policy = Policy::TopK;
-        cfg.k = 18;
+        cfg.k = KSchedule::Constant(18);
         cfg.memory = true;
         cfg.layers = Some(vec![
             LayerSpec {
                 width: 8,
                 activation: Some(crate::model::Activation::Tanh),
-                k: Some(36),
+                k: Some(KSchedule::Constant(36)),
                 policy: None,
                 memory: None,
             },

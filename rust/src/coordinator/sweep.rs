@@ -46,12 +46,13 @@ where
 /// × {mem, nomem}, in the paper's legend order.
 pub fn panel_configs(base: &ExperimentConfig, k: usize) -> Vec<ExperimentConfig> {
     use crate::aop::Policy;
+    use crate::coordinator::config::KSchedule;
     let mut out = Vec::with_capacity(7);
     let mut push = |policy: Policy, memory: bool| {
         let mut c = base.clone();
         c.policy = policy;
         c.memory = memory;
-        c.k = if policy == Policy::Exact { c.m() } else { k };
+        c.k = KSchedule::constant(if policy == Policy::Exact { c.m() } else { k });
         out.push(c);
     };
     push(Policy::Exact, false);
@@ -70,10 +71,11 @@ mod tests {
     #[test]
     fn panel_has_seven_series() {
         let base = ExperimentConfig::energy_preset();
+        use crate::coordinator::config::KSchedule;
         let cfgs = panel_configs(&base, 18);
         assert_eq!(cfgs.len(), 7);
         assert_eq!(cfgs[0].policy, Policy::Exact);
-        assert_eq!(cfgs[0].k, 144); // baseline uses all rows
+        assert_eq!(cfgs[0].k, KSchedule::Constant(144)); // baseline uses all rows
         let labels: Vec<String> = cfgs.iter().map(|c| c.label()).collect();
         assert_eq!(
             labels,
@@ -87,7 +89,7 @@ mod tests {
                 "randk-nomem"
             ]
         );
-        assert!(cfgs[1..].iter().all(|c| c.k == 18));
+        assert!(cfgs[1..].iter().all(|c| c.k == KSchedule::Constant(18)));
     }
 
     #[test]

@@ -43,7 +43,13 @@ fn app() -> App {
             Command::new("train", "run one experiment and print its curve")
                 .opt("task", "energy", "energy | mnist")
                 .opt("policy", "topk", policy_help())
-                .opt("k", "18", "outer products kept per update (K <= M)")
+                .opt(
+                    "k",
+                    "18",
+                    "outer-product budget per update: <k> | step:<k0>:<every>:<gamma> | \
+                     cosine:<k0>:<min-frac> | linear:<from>:<to> (resolved per epoch, \
+                     clamped to [1, M])",
+                )
                 .opt("epochs", "0", "override Tab. I epochs (0 = preset)")
                 .opt("lr", "0.01", "learning rate")
                 .opt("schedule", "constant", "constant | step:<every>:<gamma> | cosine:<min-frac>")
@@ -58,8 +64,9 @@ fn app() -> App {
                 .opt(
                     "layers",
                     "",
-                    "layer-graph spec `width[:activation[:k]],...` ending at the task output \
-                     width, e.g. `32:tanh:16,10` (native backend; empty = flat single layer)",
+                    "layer-graph spec `width[:activation[:ksched]],...` ending at the task \
+                     output width, e.g. `32:tanh:16,10` or `32:relu:linear:8:32,10` \
+                     (native backend; empty = flat single layer)",
                 )
                 .opt("save", "", "write final weights+memories to this checkpoint path")
                 .flag("no-memory", "disable error-feedback memory")
@@ -149,9 +156,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut cfg = ExperimentConfig::preset(task);
     cfg.policy = Policy::parse_or_suggest(args.get("policy").unwrap_or("topk"))
         .map_err(|e| anyhow!("--policy: {e}"))?;
-    cfg.k = args.get_parse("k")?;
+    cfg.k = mem_aop_gd::coordinator::config::KSchedule::parse(args.get("k").unwrap_or("18"))
+        .map_err(|e| anyhow!("--k: {e}"))?;
     if cfg.policy == Policy::Exact {
-        cfg.k = cfg.m();
+        cfg.k = mem_aop_gd::coordinator::config::KSchedule::constant(cfg.m());
     }
     let epochs: usize = args.get_parse("epochs")?;
     if epochs > 0 {
@@ -160,7 +168,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.lr = args.get_parse("lr")?;
     cfg.schedule =
         mem_aop_gd::coordinator::config::LrSchedule::parse(args.get("schedule").unwrap_or("constant"))
-            .ok_or_else(|| anyhow!("bad --schedule"))?;
+            .map_err(|e| anyhow!("--schedule: {e}"))?;
     cfg.seed = args.get_parse("seed")?;
     cfg.backend = Backend::parse(args.get("backend").unwrap_or("hlo"))
         .ok_or_else(|| anyhow!("bad --backend"))?;
@@ -180,7 +188,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         "training {} / {} (K={}/{}, backend={}, {} epochs, lr={}, seed={}, threads={})",
         cfg.task.name(),
         cfg.label(),
-        cfg.k,
+        cfg.k.name(),
         cfg.m(),
         cfg.backend.name(),
         cfg.epochs,
@@ -195,9 +203,9 @@ fn cmd_train(args: &Args) -> Result<()> {
                 rl.fan_in,
                 rl.fan_out,
                 rl.activation.name(),
-                rl.cfg.k,
-                rl.cfg.policy.name(),
-                rl.cfg.memory
+                rl.k.name(),
+                rl.policy.name(),
+                rl.memory
             );
         }
     }

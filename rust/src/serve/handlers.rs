@@ -182,7 +182,7 @@ mod tests {
     fn quick_cfg(seed: u64) -> ExperimentConfig {
         let mut cfg = ExperimentConfig::preset(Task::Energy);
         cfg.policy = Policy::TopK;
-        cfg.k = 18;
+        cfg.k = crate::coordinator::config::KSchedule::Constant(18);
         cfg.memory = true;
         cfg.epochs = 2;
         cfg.seed = seed;
@@ -289,6 +289,48 @@ mod tests {
         assert!(is_ok(&s));
         assert_eq!(s.get("state").unwrap().as_str().unwrap(), "shutting-down");
         assert!(st.shutdown_requested());
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn degenerate_layer_specs_are_protocol_errors_not_panics() {
+        // regression: an empty or zero-width `layers` spec (or a
+        // degenerate k schedule) must come back as an ok:false envelope
+        // at submit — it must never reach a worker thread where the
+        // Graph constructor would panic and kill it
+        let st = state();
+        let submit_with = |mutate: &dyn Fn(&mut Vec<(String, Json)>)| -> Json {
+            let mut cfg_json = quick_cfg(0).to_json();
+            if let Json::Obj(pairs) = &mut cfg_json {
+                mutate(pairs);
+            }
+            st.handle(&json::obj(vec![
+                ("op", json::s("submit")),
+                ("config", cfg_json),
+            ]))
+        };
+        // empty layers array
+        let r = submit_with(&|pairs| pairs.push(("layers".to_string(), Json::Arr(vec![]))));
+        assert!(!is_ok(&r), "{}", r.dump());
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("layers"));
+        // zero-width layer
+        let r = submit_with(&|pairs| {
+            pairs.push((
+                "layers".to_string(),
+                Json::Arr(vec![json::obj(vec![("width", json::num(0.0))])]),
+            ));
+        });
+        assert!(!is_ok(&r), "{}", r.dump());
+        // degenerate k schedule string
+        let r = submit_with(&|pairs| {
+            pairs.retain(|(k, _)| k != "k");
+            pairs.push(("k".to_string(), json::s("step:18:0:0.5")));
+        });
+        assert!(!is_ok(&r), "{}", r.dump());
+        // the server is still alive and serving
+        let p = st.handle(&json::obj(vec![("op", json::s("ping"))]));
+        assert!(is_ok(&p));
+        assert_eq!(st.registry.counts().total(), 0, "nothing was enqueued");
         st.scheduler.shutdown();
     }
 

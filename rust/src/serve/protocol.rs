@@ -38,6 +38,18 @@
 //! and cumulative `backward_flops`. v1/v2 frames (no `layers`) remain
 //! accepted and mean the flat single-layer model.
 //!
+//! Protocol v4 makes every `k` (flat and per-layer) a **K schedule**: a
+//! plain number still means a constant budget — constant configs emit
+//! exactly the v1-v3 frame shape — while a spec string
+//! (`step:<k0>:<every>:<gamma>` | `cosine:<k0>:<min-frac>` |
+//! `linear:<from>:<to>`) anneals the budget per epoch, clamped to
+//! `[1, M]`. Job views echo the schedule per layer plus its resolved
+//! first/last-epoch budgets (`k_first`/`k_last`); the realized per-epoch
+//! budget is in each curve epoch's `layers[].k_effective`. Degenerate
+//! schedule parameters (zero step period, gamma outside (0, 1],
+//! min_frac outside [0, 1], zero budgets) are rejected at submit with an
+//! `ok:false` protocol error.
+//!
 //! [`Client`] is a small blocking client used by `examples/serve_client.rs`
 //! and the integration tests.
 
@@ -55,9 +67,10 @@ use crate::util::json::{self, Json};
 /// v2: `config.threads` field + scheduler slot accounting (`metrics`
 /// reports `slots_total`/`slots_free`). v3: layer-graph configs
 /// (`config.layers`), resolved per-layer config in job views, and
-/// per-layer `k_effective`/FLOPs in curve epochs. Older frames remain
-/// accepted.
-pub const PROTOCOL_VERSION: u64 = 3;
+/// per-layer `k_effective`/FLOPs in curve epochs. v4: `k` fields accept
+/// K-schedule strings (numbers still mean constants) and job views echo
+/// resolved `k_first`/`k_last` per layer. Older frames remain accepted.
+pub const PROTOCOL_VERSION: u64 = 4;
 
 /// A parsed client request.
 #[derive(Debug, Clone)]
@@ -350,8 +363,17 @@ mod tests {
         assert!(Request::from_json(&json::obj(vec![("op", json::s("submit"))])).is_err());
         // submit with invalid config (k out of range)
         let mut cfg = ExperimentConfig::preset(Task::Energy);
-        cfg.k = 0;
+        cfg.k = crate::coordinator::config::KSchedule::Constant(0);
         let bad = json::obj(vec![("op", json::s("submit")), ("config", cfg.to_json())]);
+        let err = Request::from_json(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("bad config"), "{err:#}");
+        // submit with a degenerate k schedule string (protocol v4)
+        let mut j = ExperimentConfig::preset(Task::Energy).to_json();
+        if let Json::Obj(pairs) = &mut j {
+            pairs.retain(|(k, _)| k != "k");
+            pairs.push(("k".to_string(), json::s("step:18:0:0.5")));
+        }
+        let bad = json::obj(vec![("op", json::s("submit")), ("config", j)]);
         let err = Request::from_json(&bad).unwrap_err();
         assert!(format!("{err:#}").contains("bad config"), "{err:#}");
     }

@@ -262,9 +262,10 @@ mod tests {
     use crate::serve::registry::JobState;
 
     fn quick_cfg(seed: u64, policy: Policy) -> ExperimentConfig {
+        use crate::coordinator::config::KSchedule;
         let mut cfg = ExperimentConfig::preset(Task::Energy);
         cfg.policy = policy;
-        cfg.k = if policy == Policy::Exact { cfg.m() } else { 9 };
+        cfg.k = KSchedule::constant(if policy == Policy::Exact { cfg.m() } else { 9 });
         cfg.memory = policy != Policy::Exact;
         cfg.epochs = 2;
         cfg.seed = seed;
@@ -305,7 +306,7 @@ mod tests {
         let sched = Scheduler::start(reg.clone(), 1, 2);
         let mut slow = quick_cfg(0, Policy::TopK);
         slow.task = Task::Mnist;
-        slow.k = 16;
+        slow.k = crate::coordinator::config::KSchedule::Constant(16);
         slow.data_scale = 0.05;
         slow.epochs = 10;
         sched.submit(slow, "slow").unwrap();
@@ -348,7 +349,7 @@ mod tests {
         let mut slow = quick_cfg(0, Policy::TopK);
         slow.threads = 2;
         slow.task = Task::Mnist;
-        slow.k = 16;
+        slow.k = crate::coordinator::config::KSchedule::Constant(16);
         slow.data_scale = 0.05;
         slow.epochs = 4;
         let slow_id = sched.submit(slow, "slow").unwrap();
@@ -391,7 +392,7 @@ mod tests {
         let mut big = quick_cfg(0, Policy::TopK);
         big.threads = 4;
         big.task = Task::Mnist;
-        big.k = 16;
+        big.k = crate::coordinator::config::KSchedule::Constant(16);
         big.data_scale = 0.05;
         big.epochs = 4;
         let big_id = sched.submit(big, "big").unwrap();

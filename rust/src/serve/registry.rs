@@ -76,9 +76,14 @@ pub struct JobView {
 
 impl JobView {
     pub fn to_json(&self) -> Json {
-        // resolved per-layer view (protocol v3): what each layer will
+        // resolved per-layer view (protocol v3/v4): what each layer will
         // actually run with after spec defaults are applied — one entry
-        // for flat configs
+        // for flat configs. `k` is the schedule (a number for constants,
+        // a spec string otherwise); `k_first`/`k_last` echo the resolved
+        // epoch-1 and final-epoch budgets so clients see the annealing
+        // envelope without re-implementing the resolution.
+        let total = self.config.epochs.max(1);
+        let m = self.config.m();
         let layers: Vec<Json> = self
             .config
             .layer_plan()
@@ -87,9 +92,11 @@ impl JobView {
                 json::obj(vec![
                     ("width", json::num(rl.fan_out as f64)),
                     ("activation", json::s(rl.activation.name())),
-                    ("k", json::num(rl.cfg.k as f64)),
-                    ("policy", json::s(rl.cfg.policy.name())),
-                    ("memory", Json::Bool(rl.cfg.memory)),
+                    ("k", rl.k.to_json()),
+                    ("k_first", json::num(rl.k.k_at(1, total, m) as f64)),
+                    ("k_last", json::num(rl.k.k_at(total, total, m) as f64)),
+                    ("policy", json::s(rl.policy.name())),
+                    ("memory", Json::Bool(rl.memory)),
                 ])
             })
             .collect();
@@ -100,7 +107,7 @@ impl JobView {
             ("task", json::s(self.config.task.name())),
             ("policy", json::s(self.config.policy.name())),
             ("backend", json::s(self.config.backend.name())),
-            ("k", json::num(self.config.k as f64)),
+            ("k", self.config.k.to_json()),
             ("seed", json::num(self.config.seed as f64)),
             ("threads", json::num(self.config.threads as f64)),
             ("layers", Json::Arr(layers)),
@@ -367,6 +374,15 @@ impl Registry {
     /// (pre-layer-graph persisted runs) fall back to whole-job
     /// attribution under the flat policy; 0 recorded steps ⇒ no claimed
     /// savings.
+    ///
+    /// K schedules (protocol v4): the *actual* side is the curve's
+    /// cumulative per-layer FLOPs, which the experiment loop accumulates
+    /// step by step from each selection's realized `k_effective` — i.e.
+    /// the **integral of the schedule** over the run, never
+    /// `aop_step(k) × steps` for any single k (the
+    /// `rollup_integrates_annealed_k_schedules` test pins this). The
+    /// exact-BP side is k-free by construction, so savings fractions stay
+    /// honest for annealed budgets.
     pub fn rollup(&self) -> Vec<PolicyRollup> {
         let jobs = self.jobs.lock().unwrap();
         let mut acc: BTreeMap<&'static str, PolicyRollup> = BTreeMap::new();
@@ -401,11 +417,11 @@ impl Registry {
                     } else {
                         flops::exact_step(m, rl.fan_in, rl.fan_out).backward_only() * steps
                     };
-                    let first = !seen.contains(&rl.cfg.policy.name());
+                    let first = !seen.contains(&rl.policy.name());
                     if first {
-                        seen.push(rl.cfg.policy.name());
+                        seen.push(rl.policy.name());
                     }
-                    add(rl.cfg.policy, first as u64, actual, exact);
+                    add(rl.policy, first as u64, actual, exact);
                 }
             } else {
                 // legacy curve: no per-layer metrics recorded
@@ -492,13 +508,13 @@ fn load_job_file(path: &Path) -> Result<Job> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::config::Task;
+    use crate::coordinator::config::{KSchedule, Task};
     use crate::coordinator::experiment;
 
     fn quick_cfg(seed: u64) -> ExperimentConfig {
         let mut cfg = ExperimentConfig::preset(Task::Energy);
         cfg.policy = Policy::TopK;
-        cfg.k = 18;
+        cfg.k = KSchedule::Constant(18);
         cfg.memory = true;
         cfg.epochs = 3;
         cfg.seed = seed;
@@ -587,6 +603,44 @@ mod tests {
     }
 
     #[test]
+    fn rollup_integrates_annealed_k_schedules() {
+        // linear:18:72 over 4 epochs on the 16→1 energy head: the
+        // rollup's actual side must equal the schedule's INTEGRAL —
+        // Σ_epochs steps·aop_step(k_e) — not aop_step(k)×steps for any
+        // single k
+        let mut cfg = quick_cfg(11);
+        cfg.epochs = 4;
+        cfg.k = KSchedule::parse("linear:18:72").unwrap();
+        let reg = Registry::new(None).unwrap();
+        let id = reg.submit(cfg.clone(), "");
+        let (cfg, _) = reg.mark_running(id).unwrap();
+        let r = experiment::run(&cfg).unwrap();
+        reg.finish_ok(id, &r);
+        let m = cfg.m();
+        let steps_per_epoch = r.curve.steps_per_epoch as u64;
+        assert!(steps_per_epoch > 0);
+        let per_epoch_k: Vec<usize> = (1..=4).map(|e| cfg.k.k_at(e, 4, m)).collect();
+        assert_eq!(per_epoch_k, vec![18, 36, 54, 72]);
+        let integral: u64 = per_epoch_k
+            .iter()
+            .map(|&k| flops::aop_step(m, 16, 1, k).backward_only() * steps_per_epoch)
+            .sum();
+        let single_k = flops::aop_step(m, 16, 1, 18).backward_only() * steps_per_epoch * 4;
+        let roll = reg.rollup();
+        assert_eq!(roll.len(), 1);
+        assert_eq!(roll[0].backward_flops, integral);
+        assert_ne!(roll[0].backward_flops, single_k);
+        // savings fraction reflects the mean budget (45/144), not the
+        // starting one
+        let expect_saved = 1.0 - 45.0 / 144.0;
+        assert!(
+            (roll[0].saved_frac() - expect_saved).abs() < 1e-9,
+            "{}",
+            roll[0].saved_frac()
+        );
+    }
+
+    #[test]
     fn rollup_attributes_mixed_policy_layers_per_layer() {
         use crate::coordinator::config::LayerSpec;
         // layer 0: randk override; head: the flat topk — the FLOPs must
@@ -596,7 +650,7 @@ mod tests {
             LayerSpec {
                 width: 8,
                 activation: None,
-                k: Some(36),
+                k: Some(KSchedule::Constant(36)),
                 policy: Some(Policy::RandK),
                 memory: None,
             },

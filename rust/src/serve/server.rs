@@ -163,7 +163,7 @@ mod tests {
     fn quick_cfg(seed: u64) -> ExperimentConfig {
         let mut cfg = ExperimentConfig::preset(Task::Energy);
         cfg.policy = Policy::RandK;
-        cfg.k = 9;
+        cfg.k = crate::coordinator::config::KSchedule::Constant(9);
         cfg.memory = true;
         cfg.epochs = 2;
         cfg.seed = seed;

@@ -9,7 +9,10 @@
 //! heap allocations; now every buffer lives here, keyed by
 //! **graph shape × batch size**, and is reused step after step — a
 //! steady-state step allocates nothing (asserted by the allocation
-//! counter in `benches/kernels.rs`).
+//! counter in `benches/kernels.rs`). Selection buffers and the policy
+//! scratch are sized for the batch up front, which bounds every possible
+//! budget: resolved K schedules clamp to `[1, batch]`, so a mid-run k
+//! change (per-layer K annealing) is also allocation-free.
 //!
 //! Ownership rules:
 //!
@@ -131,7 +134,10 @@ impl GraphWorkspace {
             wstar_parts,
             wstar,
             sels: (0..n).map(|_| Selection::with_capacity(batch)).collect(),
-            scratch: SelectScratch::new(),
+            // pre-sized for the batch: every selection buffer covers any
+            // k ≤ batch (resolved K schedules clamp to [1, batch]), so
+            // mid-run budget changes stay zero-allocation
+            scratch: SelectScratch::with_capacity(batch),
             layer_k: Vec::with_capacity(n),
             fwd: None,
             widths,

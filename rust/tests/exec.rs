@@ -18,7 +18,7 @@ use std::time::Duration;
 
 use mem_aop_gd::aop::engine::AopEngine;
 use mem_aop_gd::aop::Policy;
-use mem_aop_gd::coordinator::config::{ExperimentConfig, LayerSpec, Task};
+use mem_aop_gd::coordinator::config::{ExperimentConfig, KSchedule, LayerSpec, Task};
 use mem_aop_gd::coordinator::experiment::{self, RunResult};
 use mem_aop_gd::exec::Executor;
 use mem_aop_gd::model::activations::Activation;
@@ -182,7 +182,7 @@ fn graph_bit_identical_across_threads_for_activation_policy_layerk_grid() {
 fn energy_cfg(policy: Policy, threads: usize) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::preset(Task::Energy);
     cfg.policy = policy;
-    cfg.k = if policy == Policy::Exact { cfg.m() } else { 9 };
+    cfg.k = KSchedule::constant(if policy == Policy::Exact { cfg.m() } else { 9 });
     cfg.memory = policy != Policy::Exact;
     cfg.epochs = 4;
     cfg.seed = 3;
@@ -194,12 +194,12 @@ fn energy_cfg(policy: Policy, threads: usize) -> ExperimentConfig {
 /// given hidden activation.
 fn layered_energy_cfg_with(threads: usize, hidden: Activation) -> ExperimentConfig {
     let mut cfg = energy_cfg(Policy::TopK, threads);
-    cfg.k = 18;
+    cfg.k = KSchedule::Constant(18);
     cfg.layers = Some(vec![
         LayerSpec {
             width: 8,
             activation: Some(hidden),
-            k: Some(36),
+            k: Some(KSchedule::Constant(36)),
             policy: Some(Policy::WeightedK),
             memory: Some(true),
         },
@@ -294,6 +294,111 @@ fn layered_experiment_bit_identical_across_threads() {
     }
 }
 
+/// A 2-layer energy config where BOTH layers' budgets anneal over the
+/// run: the hidden layer on its own step schedule, the head inheriting
+/// the flat linear ramp — the acceptance case for per-layer K schedules.
+fn annealed_energy_cfg(threads: usize) -> ExperimentConfig {
+    let mut cfg = energy_cfg(Policy::TopK, threads);
+    cfg.epochs = 6;
+    cfg.k = KSchedule::parse("linear:3:18").unwrap();
+    cfg.layers = Some(vec![
+        LayerSpec {
+            width: 8,
+            activation: Some(Activation::Tanh),
+            k: Some(KSchedule::parse("step:36:2:0.5").unwrap()),
+            policy: Some(Policy::WeightedK),
+            memory: Some(true),
+        },
+        LayerSpec::plain(1), // head inherits the flat linear:3:18 ramp
+    ]);
+    cfg
+}
+
+#[test]
+fn annealed_k_experiment_bit_identical_across_threads() {
+    let serial = experiment::run(&annealed_energy_cfg(1)).unwrap();
+    // the budgets actually anneal: per-epoch k_effective follows each
+    // layer's schedule exactly (both policies draw without replacement)
+    let m = 144;
+    for (ei, ep) in serial.curve.epochs.iter().enumerate() {
+        let epoch = ei + 1;
+        let hidden = KSchedule::parse("step:36:2:0.5").unwrap().k_at(epoch, 6, m);
+        let head = KSchedule::parse("linear:3:18").unwrap().k_at(epoch, 6, m);
+        assert_eq!(ep.layers[0].k_effective, hidden as f64, "epoch {epoch} hidden");
+        assert_eq!(ep.layers[1].k_effective, head as f64, "epoch {epoch} head");
+    }
+    assert_eq!(serial.curve.epochs[0].layers[1].k_effective, 3.0);
+    assert_eq!(serial.curve.epochs[5].layers[1].k_effective, 18.0);
+    // mid-run budget changes keep the exec determinism contract: every
+    // thread count reproduces the annealed curve bit for bit
+    for threads in &THREAD_COUNTS[1..] {
+        let par = experiment::run(&annealed_energy_cfg(*threads)).unwrap();
+        assert_runs_identical(&serial, &par, &format!("annealed threads={threads}"));
+    }
+    // and the schedule round-trips the wire format
+    let cfg = annealed_energy_cfg(1);
+    let decoded = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+    assert_eq!(decoded.k, cfg.k);
+    assert_eq!(decoded.layers, cfg.layers);
+}
+
+#[test]
+fn annealed_k_steps_bit_identical_fresh_vs_reused_workspace() {
+    // step-level version of the annealing guarantee: k changes between
+    // steps on one long-lived GraphState; a workspace reused across the
+    // whole k ramp must match a fresh workspace per step, bit for bit,
+    // at threads 1 and 7
+    let sched = KSchedule::parse("linear:2:12").unwrap();
+    let run = |threads: usize, reuse: bool| -> (Vec<u32>, Vec<Vec<usize>>, Graph) {
+        let (m, n, p) = (24usize, 6usize, 3usize);
+        let (x, y) = synth_data(57, m, n, p);
+        let mut wrng = Rng::new(43);
+        let mut g = Graph::relu_mlp(&mut wrng, &[n, 10, 8, p], LossKind::Mse);
+        let cfgs =
+            vec![AopLayerConfig { k: 2, policy: Policy::TopK, memory: true }; 3];
+        let mut state = GraphState::from_configs(&g, m, &cfgs);
+        let exec = Executor::new(threads);
+        let mut rng = Rng::new(19);
+        let mut resident = GraphWorkspace::new(&g, m);
+        let mut losses = Vec::new();
+        let mut layer_ks = Vec::new();
+        for step in 0..12 {
+            let k = sched.k_at(step + 1, 12, m);
+            for ls in state.layers.iter_mut() {
+                ls.cfg.k = k;
+            }
+            let (out, lk) = if reuse {
+                let out = train::train_step_ws(
+                    &mut g, &mut state, &x, &y, 0.02, &mut rng, &exec, true, &mut resident,
+                );
+                (out, resident.layer_k().to_vec())
+            } else {
+                let mut fresh = GraphWorkspace::new(&g, m);
+                let out = train::train_step_ws(
+                    &mut g, &mut state, &x, &y, 0.02, &mut rng, &exec, true, &mut fresh,
+                );
+                (out, fresh.layer_k().to_vec())
+            };
+            assert!(out.loss.is_finite());
+            assert_eq!(lk, vec![k; 3], "step {step}: k_effective follows the ramp");
+            losses.push(out.loss.to_bits());
+            layer_ks.push(lk);
+        }
+        (losses, layer_ks, g)
+    };
+    let (l1, k1, g1) = run(1, false);
+    for (threads, reuse) in [(7usize, false), (1, true), (7, true)] {
+        let what = format!("annealed steps threads={threads} reuse={reuse}");
+        let (lt, kt, gt) = run(threads, reuse);
+        assert_eq!(l1, lt, "{what}: losses");
+        assert_eq!(k1, kt, "{what}: per-layer k_effective");
+        for (a, b) in g1.layers.iter().zip(gt.layers.iter()) {
+            assert_eq!(a.w.data(), b.w.data(), "{what}: weights");
+            assert_eq!(a.b, b.b, "{what}: bias");
+        }
+    }
+}
+
 #[test]
 fn layered_config_json_roundtrip_and_flat_backcompat() {
     // the layers spec survives the wire format...
@@ -313,9 +418,9 @@ fn layered_config_json_roundtrip_and_flat_backcompat() {
     assert_eq!(plan.len(), 1);
     assert_eq!((plan[0].fan_in, plan[0].fan_out), (16, 1));
     assert_eq!(plan[0].activation, Activation::Identity);
-    assert_eq!(plan[0].cfg.k, flat.k);
-    assert_eq!(plan[0].cfg.policy, flat.policy);
-    assert_eq!(plan[0].cfg.memory, flat.memory);
+    assert_eq!(plan[0].k, flat.k);
+    assert_eq!(plan[0].policy, flat.policy);
+    assert_eq!(plan[0].memory, flat.memory);
 }
 
 #[test]
@@ -333,7 +438,7 @@ fn mnist_shape_bit_identical_across_threads() {
     // the 784×10 acceptance workload, scaled down in samples (not shape)
     let mut cfg = ExperimentConfig::preset(Task::Mnist);
     cfg.policy = Policy::TopK;
-    cfg.k = 32;
+    cfg.k = KSchedule::Constant(32);
     cfg.memory = true;
     cfg.epochs = 2;
     cfg.data_scale = 0.02;

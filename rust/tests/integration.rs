@@ -6,7 +6,7 @@
 //! not been run.
 
 use mem_aop_gd::aop::Policy;
-use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig};
+use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig, KSchedule};
 use mem_aop_gd::coordinator::experiment;
 use mem_aop_gd::coordinator::mlp_driver::{train_mlp, MlpDriver, MlpVariant};
 use mem_aop_gd::data::digits;
@@ -173,7 +173,7 @@ fn lr_schedule_changes_hlo_training_without_recompile() {
     use mem_aop_gd::coordinator::config::LrSchedule;
     let mut cfg = ExperimentConfig::energy_preset();
     cfg.policy = Policy::TopK;
-    cfg.k = 18;
+    cfg.k = KSchedule::Constant(18);
     cfg.memory = true;
     cfg.epochs = 6;
     let constant = experiment::run_hlo(&cfg, &rt).unwrap();
@@ -199,7 +199,7 @@ fn fused_step_matches_two_phase_topk() {
 
     let mut cfg = ExperimentConfig::mnist_preset();
     cfg.policy = Policy::TopK;
-    cfg.k = 32;
+    cfg.k = KSchedule::Constant(32);
     cfg.memory = true;
     let mut two_phase = HloTrainer::new(&cfg, &rt).unwrap();
 
@@ -244,7 +244,7 @@ fn hlo_energy_full_paper_run_reaches_threshold() {
     // Tab. I configuration, topK K=18 with memory — paper's Fig. 2 top
     let mut cfg = ExperimentConfig::energy_preset();
     cfg.policy = Policy::TopK;
-    cfg.k = 18;
+    cfg.k = KSchedule::Constant(18);
     cfg.memory = true;
     let r = experiment::run_hlo(&cfg, &rt).unwrap();
     // standardized-target MSE: a fitted linear model lands well under 0.3

@@ -12,7 +12,7 @@
 //! artifacts directory is missing.
 
 use mem_aop_gd::aop::Policy;
-use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig};
+use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig, KSchedule};
 use mem_aop_gd::coordinator::experiment::{self, RunResult};
 use mem_aop_gd::runtime::{Manifest, Runtime};
 
@@ -64,7 +64,7 @@ fn energy_exact_baseline_agrees() {
 fn energy_topk_with_memory_agrees() {
     let mut cfg = ExperimentConfig::energy_preset();
     cfg.policy = Policy::TopK;
-    cfg.k = 18;
+    cfg.k = KSchedule::Constant(18);
     cfg.memory = true;
     cfg.epochs = 15;
     if let Some((n, h)) = run_both(cfg) {
@@ -76,7 +76,7 @@ fn energy_topk_with_memory_agrees() {
 fn energy_randk_no_memory_agrees() {
     let mut cfg = ExperimentConfig::energy_preset();
     cfg.policy = Policy::RandK;
-    cfg.k = 9;
+    cfg.k = KSchedule::Constant(9);
     cfg.memory = false;
     cfg.epochs = 10;
     if let Some((n, h)) = run_both(cfg) {
@@ -88,7 +88,7 @@ fn energy_randk_no_memory_agrees() {
 fn energy_weightedk_agrees() {
     let mut cfg = ExperimentConfig::energy_preset();
     cfg.policy = Policy::WeightedK;
-    cfg.k = 9;
+    cfg.k = KSchedule::Constant(9);
     cfg.memory = true;
     cfg.epochs = 10;
     cfg.seed = 3;
@@ -101,7 +101,7 @@ fn energy_weightedk_agrees() {
 fn mnist_topk_agrees_scaled() {
     let mut cfg = ExperimentConfig::mnist_preset();
     cfg.policy = Policy::TopK;
-    cfg.k = 16;
+    cfg.k = KSchedule::Constant(16);
     cfg.memory = true;
     cfg.epochs = 2;
     cfg.data_scale = 0.02;
@@ -115,7 +115,7 @@ fn mnist_topk_agrees_scaled() {
 fn mnist_weightedk_replacement_agrees_scaled() {
     let mut cfg = ExperimentConfig::mnist_preset();
     cfg.policy = Policy::WeightedKReplacement;
-    cfg.k = 16;
+    cfg.k = KSchedule::Constant(16);
     cfg.memory = true;
     cfg.epochs = 2;
     cfg.data_scale = 0.02;

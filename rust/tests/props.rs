@@ -4,6 +4,7 @@
 
 use mem_aop_gd::aop::policy::{self, Policy};
 use mem_aop_gd::aop::{flops, MemoryState};
+use mem_aop_gd::coordinator::config::KSchedule;
 use mem_aop_gd::data::batcher::Batcher;
 use mem_aop_gd::data::Dataset;
 use mem_aop_gd::tensor::{ops, Matrix};
@@ -249,6 +250,69 @@ fn prop_flops_model_consistent() {
         let r = flops::backward_reduction(m, n, p, k);
         assert!((r - k as f64 / m as f64).abs() < 1e-12);
         assert!(flops::aop_step(m, n, p, k).total() >= flops::aop_step(m, n, p, 1).total());
+    });
+}
+
+// ---------------------------------------------------------------------
+// K-schedule invariants (per-layer annealed budgets)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_k_schedule_resolves_in_range_and_roundtrips() {
+    property("k schedule range + roundtrip", 120, |g| {
+        let batch = g.usize_range(1, 200);
+        let total = g.usize_range(1, 60);
+        let sched = match g.usize_range(0, 3) {
+            0 => KSchedule::Constant(g.usize_range(1, 300)),
+            1 => KSchedule::Step {
+                k0: g.usize_range(1, 300),
+                every: g.usize_range(1, 20),
+                gamma: g.f32_range(0.05, 1.0),
+            },
+            2 => KSchedule::Cosine {
+                k0: g.usize_range(1, 300),
+                min_frac: g.f32_range(0.0, 1.0),
+            },
+            _ => KSchedule::Linear {
+                from: g.usize_range(1, 300),
+                to: g.usize_range(1, 300),
+            },
+        };
+        sched.validate().unwrap_or_else(|e| panic!("{sched:?}: {e}"));
+        // the canonical string and the wire form both round-trip exactly
+        assert_eq!(KSchedule::parse(&sched.name()).unwrap(), sched, "{sched:?}");
+        assert_eq!(
+            KSchedule::from_json(&sched.to_json()).unwrap(),
+            sched,
+            "{sched:?}"
+        );
+        // resolution is total (epoch 0 and beyond-the-run included) and
+        // always clamped to [1, batch]
+        for epoch in [0usize, 1, total / 2, total, total + 7] {
+            let k = sched.k_at(epoch, total, batch);
+            assert!(
+                (1..=batch).contains(&k),
+                "{sched:?}: k_at({epoch}, {total}, {batch}) = {k}"
+            );
+            // no epoch beats the declared peak budget
+            assert!(k <= sched.max_k().clamp(1, batch), "{sched:?} epoch {epoch}");
+        }
+        // monotone-decay shapes never grow across the run
+        if matches!(sched, KSchedule::Step { .. } | KSchedule::Cosine { .. }) {
+            let mut prev = usize::MAX;
+            for epoch in 1..=total {
+                let k = sched.k_at(epoch, total, batch);
+                assert!(k <= prev, "{sched:?}: grew at epoch {epoch}");
+                prev = k;
+            }
+        }
+        // linear hits its (clamped) endpoints exactly
+        if let KSchedule::Linear { from, to } = sched {
+            assert_eq!(sched.k_at(1, total, batch), from.clamp(1, batch));
+            if total >= 2 {
+                assert_eq!(sched.k_at(total, total, batch), to.clamp(1, batch));
+            }
+        }
     });
 }
 

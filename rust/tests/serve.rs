@@ -11,7 +11,7 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use mem_aop_gd::aop::Policy;
-use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig, Task};
+use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig, KSchedule, Task};
 use mem_aop_gd::coordinator::experiment;
 use mem_aop_gd::metrics::RunCurve;
 use mem_aop_gd::serve::{Client, ServeOptions, Server};
@@ -44,7 +44,7 @@ fn native_cfg(i: usize) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::preset(Task::Energy);
     cfg.policy = p;
     cfg.memory = p != Policy::Exact;
-    cfg.k = if p == Policy::Exact { cfg.m() } else { [18, 9][i % 2] };
+    cfg.k = KSchedule::constant(if p == Policy::Exact { cfg.m() } else { [18, 9][i % 2] });
     cfg.epochs = 3;
     cfg.seed = i as u64;
     cfg.backend = Backend::Native;
@@ -186,7 +186,7 @@ fn cancellation_and_queue_ordering() {
     // a deliberately slower first job to hold the single worker...
     let mut slow = ExperimentConfig::preset(Task::Mnist);
     slow.policy = Policy::TopK;
-    slow.k = 16;
+    slow.k = KSchedule::Constant(16);
     slow.memory = true;
     slow.data_scale = 0.05;
     slow.epochs = 15;

@@ -28,7 +28,7 @@ import subprocess
 import sys
 import time
 
-RECORDS = ["BENCH_2.json", "BENCH_3.json", "BENCH_4.json"]
+RECORDS = ["BENCH_2.json", "BENCH_3.json", "BENCH_4.json", "BENCH_5.json"]
 # keys holding a {"rows_per_sec": ...} object we track
 SERIES = ["serial", "threads4"]
 REGRESSION_FRAC = 0.15
@@ -66,8 +66,16 @@ def main():
         if not os.path.exists(name):
             print(f"[bench-gate] {name} missing — skipped")
             continue
-        with open(name) as f:
-            record = json.load(f)
+        try:
+            with open(name) as f:
+                record = json.load(f)
+        except (OSError, ValueError) as e:
+            # a record the bench just claimed to write but that doesn't
+            # parse is a failure, not a skip — a truncated artifact must
+            # not silently bypass the regression gate
+            print(f"[bench-gate] {name} unreadable: {e}")
+            failures.append(f"{name}: unreadable record ({e})")
+            continue
 
         entry = dict(record)
         entry["_recorded_at"] = stamp
@@ -88,8 +96,17 @@ def main():
             )
             continue
 
-        with open(base_path) as f:
-            baseline = json.load(f)
+        try:
+            with open(base_path) as f:
+                baseline = json.load(f)
+        except (OSError, ValueError) as e:
+            # a corrupt baseline must not wedge the gate forever:
+            # re-initialize from the current record and keep recording
+            print(f"[bench-gate] {name}: baseline unreadable ({e}) — re-initializing")
+            with open(base_path, "w") as f:
+                json.dump(entry, f, indent=2, sort_keys=True)
+                f.write("\n")
+            continue
         for series in SERIES:
             try:
                 base = float(baseline[series]["rows_per_sec"])
