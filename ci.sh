@@ -54,20 +54,73 @@ if [ "$fast" -eq 0 ]; then
     --epochs 6 --backend native --threads 2 --quiet
 fi
 
+# Observability smoke (ISSUE 6): one traced run through the real CLI —
+# the Chrome trace-event dump must be valid JSON with the step phases —
+# and one Prometheus scrape against a live `repro serve`. Uses the
+# release binary, so it only runs on full passes.
+if [ "$fast" -eq 0 ] && command -v python3 >/dev/null 2>&1; then
+  echo "==> obs smoke: repro trace (Chrome trace-event dump)"
+  ./target/release/repro trace --task energy --policy topk --k 9 \
+    --epochs 2 --threads 2 --events 512 --out results/trace_ci.json
+  python3 - <<'EOF'
+import json
+evs = json.load(open("results/trace_ci.json"))
+assert isinstance(evs, list) and evs, "trace must be a non-empty event array"
+names = {e["name"] for e in evs}
+for e in evs:
+    assert e["ph"] == "X" and "ts" in e and "dur" in e and "args" in e, e
+assert {"fwd", "score", "select", "apply"} <= names, names
+print(f"[ci] chrome trace ok: {len(evs)} events, phases {sorted(names)}")
+EOF
+
+  echo "==> obs smoke: Prometheus scrape against a live serve"
+  ./target/release/repro serve --addr 127.0.0.1:17071 --workers 2 &
+  SERVE_PID=$!
+  python3 - <<'EOF'
+import json, socket, time
+for _ in range(100):
+    try:
+        s = socket.create_connection(("127.0.0.1", 17071), timeout=1)
+        break
+    except OSError:
+        time.sleep(0.1)
+else:
+    raise SystemExit("serve never came up on 17071")
+f = s.makefile("rw")
+f.write(json.dumps({"op": "metrics", "format": "prometheus"}) + "\n")
+f.flush()
+resp = json.loads(f.readline())
+assert resp.get("ok"), resp
+text = resp["text"]
+assert "# TYPE repro_requests_total counter" in text, text[:400]
+assert "repro_slots_total" in text, text[:400]
+assert "repro_request_latency_seconds_bucket" in text, text[:400]
+f.write(json.dumps({"op": "shutdown"}) + "\n")
+f.flush()
+f.readline()
+print("[ci] prometheus scrape ok: %d bytes" % len(text))
+EOF
+  wait "$SERVE_PID"
+fi
+
 # Perf smoke: a quick run of the kernels bench so every CI pass leaves
 # machine-readable throughput data points (BENCH_2.json: flat engine;
 # BENCH_3.json: layer-graph core; BENCH_4.json: wide-layer
 # workspace-resident step with the allocations-per-step counter — the
 # bench itself asserts the serial steady state performs 0 heap
 # allocations; BENCH_5.json: annealed-K step, k ramping mid-run on one
-# workspace, also asserted allocation-free) for the perf trajectory.
-echo "==> kernels bench smoke (BENCH_2/3/4/5.json)"
+# workspace, also asserted allocation-free; BENCH_6.json: the graph step
+# with telemetry ON — per-phase percentiles, still asserted
+# allocation-free) for the perf trajectory.
+echo "==> kernels bench smoke (BENCH_2/3/4/5/6.json)"
 BENCH_QUICK=1 cargo bench --bench kernels
 test -f BENCH_3.json
 test -f BENCH_4.json
 test -f BENCH_5.json
+test -f BENCH_6.json
 echo "BENCH_4.json: $(cat BENCH_4.json | head -c 200)..."
 echo "BENCH_5.json: $(cat BENCH_5.json | head -c 200)..."
+echo "BENCH_6.json: $(cat BENCH_6.json | head -c 200)..."
 
 # BENCH trajectory (ROADMAP): append this run to the committed bench/
 # history and fail on a >15% rows/sec regression vs the recorded

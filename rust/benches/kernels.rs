@@ -8,8 +8,11 @@
 //! the wide-layer workspace-resident step with an
 //! **allocations-per-step counter**, written to `BENCH_4.json`, and the
 //! **annealed-K** step (K ramping over resolved epochs on one resident
-//! workspace — the K-schedule tentpole), written to `BENCH_5.json` — so
-//! the repo's perf trajectory is machine-readable.
+//! workspace — the K-schedule tentpole), written to `BENCH_5.json`, and
+//! the **telemetry-on** graph step (obs tentpole: phase histograms +
+//! event ring recording, allocs/step still asserted 0, per-phase
+//! percentiles reported), written to `BENCH_6.json` — so the repo's
+//! perf trajectory is machine-readable.
 //!
 //! Work metric = FLOPs of the compaction-regime cost model, so the
 //! reported work-rate is directly comparable across K (who computes the
@@ -558,6 +561,155 @@ fn bench_annealed_and_write_bench5() {
         .and_then(|_| std::fs::write("results/bench/annealed_throughput.json", text));
 }
 
+/// The BENCH_6 workload (obs tentpole): the BENCH_3 graph stepped
+/// through the workspace-resident core with telemetry **on** — phase
+/// histograms, realized-K counters, and the event ring all recording on
+/// the hot path. Returns (rows/sec, allocs/step, the workspace) so the
+/// caller can render per-phase percentiles from the run's own telemetry.
+/// Telemetry is re-armed after warmup, so the reported counts cover
+/// exactly the timed steps and the allocation window starts from an
+/// already-sized ring.
+fn obs_graph_run(threads: usize, measure: Duration) -> (f64, f64, GraphWorkspace) {
+    use mem_aop_gd::obs::ObsConfig;
+    let m = GRAPH_BATCH;
+    let (n, p) = (GRAPH_WIDTHS[0], GRAPH_WIDTHS[3]);
+    let mut rng = Rng::new(0);
+    let x = Matrix::from_fn(m, n, |_, _| rng.normal());
+    let y = Matrix::from_fn(m, p, |r, c| ((r % p) == c) as u32 as f32);
+    let mut wrng = Rng::new(1);
+    let mut graph = Graph::relu_mlp(&mut wrng, &GRAPH_WIDTHS, LossKind::SoftmaxCrossEntropy);
+    let cfgs: Vec<AopLayerConfig> = GRAPH_KS
+        .iter()
+        .map(|&k| AopLayerConfig {
+            k,
+            policy: Policy::TopK,
+            memory: true,
+        })
+        .collect();
+    let mut state = GraphState::from_configs(&graph, m, &cfgs);
+    let mut ws = GraphWorkspace::with_obs(&graph, m, ObsConfig::on());
+    let exec = Executor::new(threads);
+    let mut srng = Rng::new(2);
+    for _ in 0..10 {
+        black_box(train::train_step_ws(
+            &mut graph, &mut state, &x, &y, 0.01, &mut srng, &exec, true, &mut ws,
+        ));
+    }
+    // zero the telemetry (pre-sized rebuild) BEFORE the alloc window, so
+    // counts describe the timed steps and the ring is already capacity'd
+    ws.set_obs(ObsConfig::on());
+    let a0 = alloc_calls();
+    let t0 = Instant::now();
+    let mut steps = 0u64;
+    while steps < 2 || t0.elapsed() < measure {
+        black_box(train::train_step_ws(
+            &mut graph, &mut state, &x, &y, 0.01, &mut srng, &exec, true, &mut ws,
+        ));
+        steps += 1;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let allocs = (alloc_calls() - a0) as f64 / steps as f64;
+    (steps as f64 * m as f64 / elapsed, allocs, ws)
+}
+
+/// Measure the obs-on workload and write `BENCH_6.json`: serial vs
+/// threads=4 rows/sec, allocations/step with telemetry recording
+/// (serial asserted **0** — the ISSUE 6 zero-allocation contract, same
+/// `BENCH_ALLOW_ALLOCS=1` escape hatch as BENCH_4/5), and per-phase
+/// latency percentiles straight from the run's own histograms.
+fn bench_obs_and_write_bench6() {
+    use mem_aop_gd::obs::Phase;
+    let quick = std::env::var("BENCH_QUICK").ok().as_deref() == Some("1");
+    let measure = if quick {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_secs(2)
+    };
+    let (serial, serial_allocs, ws) = obs_graph_run(1, measure);
+    let (par4, par4_allocs, _) = obs_graph_run(4, measure);
+    let speedup = par4 / serial;
+    let mut flops_per_step = 0.0f64;
+    for (i, &k) in GRAPH_KS.iter().enumerate() {
+        let (n, p) = (GRAPH_WIDTHS[i], GRAPH_WIDTHS[i + 1]);
+        flops_per_step += flops::aop_step(GRAPH_BATCH, n, p, k).total() as f64;
+    }
+    let flops_per_row = flops_per_step / GRAPH_BATCH as f64;
+    eprintln!(
+        "{:44} {:>12.0} rows/s  ({serial_allocs:.1} allocs/step)",
+        "obs/exec/train-step threads=1", serial
+    );
+    eprintln!(
+        "{:44} {:>12.0} rows/s  ({speedup:.2}x, {par4_allocs:.1} allocs/step)",
+        "obs/exec/train-step threads=4", par4
+    );
+    if serial_allocs != 0.0 {
+        let msg = format!(
+            "obs-enabled serial steady state performed {serial_allocs} allocations/step \
+             (expected 0 — telemetry must be pre-sized)"
+        );
+        if std::env::var("BENCH_ALLOW_ALLOCS").ok().as_deref() == Some("1") {
+            eprintln!("[kernels] WARNING: {msg}");
+        } else {
+            panic!("{msg}");
+        }
+    }
+    let tele = ws.obs();
+    let mut phase_json = Vec::new();
+    for ph in Phase::ALL {
+        let h = tele.phase(ph);
+        if h.is_empty() {
+            continue;
+        }
+        phase_json.push(json::obj(vec![
+            ("phase", json::s(ph.name())),
+            ("count", json::num(h.count() as f64)),
+            ("p50_ns", json::num(h.quantile_ns(0.50) as f64)),
+            ("p90_ns", json::num(h.quantile_ns(0.90) as f64)),
+            ("p99_ns", json::num(h.quantile_ns(0.99) as f64)),
+            ("mean_ns", json::num(h.mean_ns())),
+            ("max_ns", json::num(h.max_ns() as f64)),
+        ]));
+    }
+    let out = json::obj(vec![
+        (
+            "workload",
+            json::s("graph-784x128x64x10 topk K=[32,16,8] mem train-step (telemetry on)"),
+        ),
+        ("m", json::num(GRAPH_BATCH as f64)),
+        ("steps_observed", json::num(tele.steps() as f64)),
+        ("flops_per_step", json::num(flops_per_step)),
+        ("phases", Json::Arr(phase_json)),
+        (
+            "serial",
+            json::obj(vec![
+                ("threads", json::num(1.0)),
+                ("rows_per_sec", json::num(serial)),
+                ("flops_per_sec", json::num(serial * flops_per_row)),
+                ("allocs_per_step", json::num(serial_allocs)),
+            ]),
+        ),
+        (
+            "threads4",
+            json::obj(vec![
+                ("threads", json::num(4.0)),
+                ("rows_per_sec", json::num(par4)),
+                ("flops_per_sec", json::num(par4 * flops_per_row)),
+                ("allocs_per_step", json::num(par4_allocs)),
+            ]),
+        ),
+        ("speedup", json::num(speedup)),
+    ]);
+    let mut text = out.dump();
+    text.push('\n');
+    if std::fs::write("BENCH_6.json", &text).is_ok() {
+        eprintln!(
+            "[kernels] wrote BENCH_6.json (speedup {speedup:.2}x, serial allocs/step {serial_allocs:.1}, obs on)"
+        );
+    }
+    let _ = std::fs::create_dir_all("results/bench")
+        .and_then(|_| std::fs::write("results/bench/obs_throughput.json", text));
+}
+
 fn main() {
     let mut b = Bencher::new("kernels");
     let mut rng = Rng::new(0);
@@ -566,6 +718,7 @@ fn main() {
     bench_graph_and_write_bench3();
     bench_wide_and_write_bench4();
     bench_annealed_and_write_bench5();
+    bench_obs_and_write_bench6();
 
     for (task, m, n, p, ks) in [
         ("energy", 144usize, 16usize, 1usize, vec![144usize, 18, 9, 3]),

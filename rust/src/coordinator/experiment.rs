@@ -24,6 +24,7 @@ use crate::coordinator::hlo_trainer::HloTrainer;
 use crate::coordinator::native_trainer::NativeTrainer;
 use crate::data::{batcher::Batcher, digits, energy, Dataset};
 use crate::metrics::{EpochMetrics, LayerEpochMetrics, RunCurve};
+use crate::obs::PhaseRollup;
 use crate::runtime::Runtime;
 use crate::tensor::{rng::Rng, Matrix};
 use crate::train::{self, AopLayerConfig};
@@ -49,6 +50,25 @@ pub trait Trainer {
     fn mem_fro(&self) -> f32;
     /// Copy of every layer's (W, b) for cross-checks, input-to-output.
     fn weight_snapshot(&self) -> Vec<(Matrix, Vec<f32>)>;
+
+    /// Whether this trainer records step telemetry (`obs`, ISSUE 6).
+    /// When `false` the experiment loop reads no clocks on its behalf.
+    fn obs_enabled(&self) -> bool {
+        false
+    }
+
+    /// Record the duration of one selection draw, timed by the
+    /// experiment loop (the caller owns selection on the trait path, so
+    /// the trainer cannot time it itself). Only called when
+    /// [`Trainer::obs_enabled`] returns true; never influences the math.
+    fn record_select_ns(&mut self, _ns: u64) {}
+
+    /// Frozen per-phase/per-layer telemetry summary for the run, if the
+    /// backend records one (native path: the workspace's
+    /// `StepTelemetry`). `None` when telemetry is off or unsupported.
+    fn phase_rollup(&self) -> Option<PhaseRollup> {
+        None
+    }
 }
 
 /// Result of one experiment.
@@ -59,6 +79,10 @@ pub struct RunResult {
     /// Final per-layer weights `(W, b)`, input-to-output (for
     /// cross-checking backends; one entry for flat configs).
     pub final_layers: Vec<(Matrix, Vec<f32>)>,
+    /// Per-phase/per-layer telemetry summary (`None` when the backend
+    /// records none). Describes wall time only — never part of any
+    /// bit-identity comparison.
+    pub phases: Option<PhaseRollup>,
 }
 
 impl RunResult {
@@ -136,6 +160,17 @@ pub fn run_with_trainer_observed<T: Trainer>(
     mut trainer: T,
     on_epoch: EpochObserver<'_>,
 ) -> Result<RunResult> {
+    run_with_trainer_ref(cfg, &mut trainer, on_epoch)
+}
+
+/// [`run_with_trainer_observed`] over a borrowed trainer — lets callers
+/// keep the trainer afterwards (e.g. `repro trace` dumping the
+/// telemetry's event ring once the run completes).
+pub fn run_with_trainer_ref<T: Trainer>(
+    cfg: &ExperimentConfig,
+    trainer: &mut T,
+    on_epoch: EpochObserver<'_>,
+) -> Result<RunResult> {
     cfg.validate()?;
     let (train, val) = load_data(cfg);
     let m = cfg.m();
@@ -176,7 +211,14 @@ pub fn run_with_trainer_observed<T: Trainer>(
             let mut policy_rng =
                 Rng::for_stream(cfg.seed ^ 0x9011C4, epoch as u64, step as u64);
             let score_refs: Vec<&[f32]> = scores.iter().map(|s| s.as_slice()).collect();
+            // the caller owns selection on the trait path, so the loop
+            // times it on the trainer's behalf; no clock is read unless
+            // the trainer opted in (obs off ⇒ zero timer overhead).
+            let t_sel = if trainer.obs_enabled() { Some(Instant::now()) } else { None };
             let sels = train::select_with_configs(&layer_cfgs, &score_refs, &mut policy_rng);
+            if let Some(t) = t_sel {
+                trainer.record_select_ns(t.elapsed().as_nanos().min(u64::MAX as u128) as u64);
+            }
             let fro = trainer.apply(&sels)?;
             loss_sum += loss as f64;
             fro_sum += fro as f64;
@@ -195,7 +237,7 @@ pub fn run_with_trainer_observed<T: Trainer>(
         }
         let train_s = t0.elapsed().as_secs_f64();
         let rows_done = (batches.len() * m) as f64;
-        let (val_loss, val_acc) = evaluate_chunked(&mut trainer, &val, cfg.task.eval_batch())?;
+        let (val_loss, val_acc) = evaluate_chunked(trainer, &val, cfg.task.eval_batch())?;
         let metrics = EpochMetrics {
             epoch,
             train_loss: (loss_sum / batches.len() as f64) as f32,
@@ -224,6 +266,7 @@ pub fn run_with_trainer_observed<T: Trainer>(
         config: cfg.clone(),
         curve,
         final_layers: trainer.weight_snapshot(),
+        phases: trainer.phase_rollup(),
     })
 }
 

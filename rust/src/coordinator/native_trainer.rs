@@ -15,6 +15,7 @@ use crate::aop::policy::Selection;
 use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::experiment::Trainer;
 use crate::exec::Executor;
+use crate::obs::{ObsConfig, Phase, PhaseRollup, StepTelemetry};
 use crate::tensor::{rng::Rng, Matrix};
 use crate::train::{self, Dense, Graph, GraphState, GraphWorkspace};
 
@@ -65,7 +66,13 @@ impl NativeTrainer {
             .map(|rl| rl.cfg_at(1, cfg.epochs, cfg.m()))
             .collect();
         let state = GraphState::from_configs(&graph, cfg.m(), &cfgs);
-        let ws = GraphWorkspace::new(&graph, cfg.m());
+        // telemetry on by default: every run (and thus every serve job)
+        // gets a phase rollup for free. The histograms and counters are
+        // pre-sized here, so steady-state steps stay allocation-free,
+        // and obs never feeds back into the math — the exec bit-identity
+        // grid passes with it on or off (rust/tests/exec.rs).
+        let mut ws = GraphWorkspace::new(&graph, cfg.m());
+        ws.set_obs(ObsConfig::on());
         Ok(NativeTrainer {
             graph,
             state,
@@ -73,6 +80,18 @@ impl NativeTrainer {
             exec: Executor::new(cfg.threads),
             ws,
         })
+    }
+
+    /// Reconfigure telemetry (e.g. `repro trace` raising the event-ring
+    /// capacity, or benches switching it off). Resets any counts
+    /// recorded so far.
+    pub fn set_obs(&mut self, cfg: ObsConfig) {
+        self.ws.set_obs(cfg);
+    }
+
+    /// The trainer's step telemetry (histograms, counters, event ring).
+    pub fn telemetry(&self) -> &StepTelemetry {
+        self.ws.obs()
     }
 }
 
@@ -122,6 +141,23 @@ impl Trainer for NativeTrainer {
             .iter()
             .map(|l| (l.w.clone(), l.b.clone()))
             .collect()
+    }
+
+    fn obs_enabled(&self) -> bool {
+        self.ws.obs().enabled()
+    }
+
+    fn record_select_ns(&mut self, ns: u64) {
+        self.ws.obs_mut().record_ns(Phase::Select, ns);
+    }
+
+    fn phase_rollup(&self) -> Option<PhaseRollup> {
+        let obs = self.ws.obs();
+        if obs.enabled() {
+            Some(obs.rollup())
+        } else {
+            None
+        }
     }
 }
 

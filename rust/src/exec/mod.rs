@@ -84,6 +84,16 @@ impl Executor {
         self.pool.threads()
     }
 
+    /// Shard dispatches issued over this executor's lifetime (obs).
+    pub fn dispatches(&self) -> u64 {
+        self.pool.dispatches()
+    }
+
+    /// Dispatches executing right now (obs gauge).
+    pub fn active(&self) -> usize {
+        self.pool.active()
+    }
+
     /// The canonical plan for a batch of `rows`.
     pub fn plan(&self, rows: usize) -> ShardPlan {
         ShardPlan::for_rows(rows)

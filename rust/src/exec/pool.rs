@@ -23,6 +23,7 @@
 //! from scheduling.
 
 use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -74,6 +75,24 @@ pub struct ExecPool {
     shared: Option<Arc<Shared>>,
     handles: Vec<JoinHandle<()>>,
     threads: usize,
+    /// Shard dispatches issued over the pool's lifetime (obs counter;
+    /// covers the inline serial path too). Two relaxed atomic ops per
+    /// dispatch — allocation-free and invisible to the math.
+    dispatches: AtomicU64,
+    /// Dispatches currently executing (0 or 1 per owning trainer; a
+    /// shared Executor can momentarily show more while calls queue on
+    /// the job slot).
+    active: AtomicUsize,
+}
+
+/// RAII decrement for [`ExecPool::active`]: keeps the gauge honest even
+/// when a shard panic unwinds out of `run`.
+struct ActiveGuard<'a>(&'a AtomicUsize);
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 impl ExecPool {
@@ -84,6 +103,8 @@ impl ExecPool {
                 shared: None,
                 handles: Vec::new(),
                 threads,
+                dispatches: AtomicU64::new(0),
+                active: AtomicUsize::new(0),
             };
         }
         let shared = Arc::new(Shared {
@@ -112,11 +133,23 @@ impl ExecPool {
             shared: Some(shared),
             handles,
             threads,
+            dispatches: AtomicU64::new(0),
+            active: AtomicUsize::new(0),
         }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Total non-empty dispatches issued through [`ExecPool::run`].
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches.load(Ordering::Relaxed)
+    }
+
+    /// Dispatches executing right now (metrics gauge).
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
     }
 
     /// Run `f(i)` for every `i in 0..n_tasks`, potentially in parallel;
@@ -127,6 +160,9 @@ impl ExecPool {
         if n_tasks == 0 {
             return;
         }
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.active.fetch_add(1, Ordering::Relaxed);
+        let _active = ActiveGuard(&self.active);
         let Some(sh) = &self.shared else {
             for i in 0..n_tasks {
                 f(i);
@@ -275,6 +311,32 @@ mod tests {
         });
         for (i, h) in hits.iter().enumerate() {
             assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn dispatch_counter_counts_both_paths_and_gauge_settles() {
+        for threads in [1, 3] {
+            let pool = ExecPool::new(threads);
+            assert_eq!(pool.dispatches(), 0);
+            pool.run(0, &|_| panic!("empty dispatch must not count or run"));
+            assert_eq!(pool.dispatches(), 0, "threads={threads}");
+            for _ in 0..7 {
+                pool.run(4, &|_| {});
+            }
+            assert_eq!(pool.dispatches(), 7, "threads={threads}");
+            assert_eq!(pool.active(), 0, "threads={threads}");
+            // the gauge recovers even when a shard panics out of run()
+            let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                pool.run(4, &|i| {
+                    if i == 1 {
+                        panic!("boom");
+                    }
+                })
+            }));
+            assert!(r.is_err());
+            assert_eq!(pool.active(), 0, "threads={threads}");
+            assert_eq!(pool.dispatches(), 8, "threads={threads}");
         }
     }
 

@@ -39,6 +39,13 @@
 //! `AopEngine` (1-layer identity graph), the MLP API, `NativeTrainer`
 //! and the serve job path are all thin adapters over it.
 //!
+//! Observability is first-class but never intrusive: the [`obs`]
+//! subsystem records per-phase step timings, per-layer realized
+//! budgets, a bounded event trace (`repro trace` → chrome://tracing)
+//! and the serve tier's Prometheus exposition — pre-allocated and
+//! zero-allocation when enabled, free of clock reads when disabled,
+//! and incapable of changing a curve bit either way.
+//!
 //! Builds are offline-first: the PJRT execution path is gated behind the
 //! `hlo` cargo feature (default off), so `cargo build && cargo test`
 //! needs no XLA toolchain — `--backend hlo` then reports a clear
@@ -52,6 +59,7 @@ pub mod data;
 pub mod exec;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;

@@ -14,7 +14,11 @@
 //!                          times + manifest contract;
 //! * `serve`              — long-lived training-job server (TCP/JSON):
 //!                          submit/status/result/list/cancel/metrics,
-//!                          persistent run registry (see README.md).
+//!                          persistent run registry (see README.md);
+//! * `trace`              — run a short native experiment with the obs
+//!                          event ring enabled and dump a Chrome
+//!                          trace-event JSON (chrome://tracing /
+//!                          Perfetto) plus a per-phase latency rollup.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -107,6 +111,16 @@ fn app() -> App {
                 .opt("workers", "0", "training worker threads (0 = auto)")
                 .opt("queue-cap", "256", "max queued jobs before submissions are rejected")
                 .opt("registry-dir", "", "persist completed runs here (empty = in-memory only)"),
+            Command::new("trace", "dump a Chrome trace of one native run (obs event ring)")
+                .opt("task", "energy", "energy | mnist")
+                .opt("policy", "topk", policy_help())
+                .opt("k", "18", "outer-product budget per update (same grammar as train --k)")
+                .opt("epochs", "1", "epochs to trace (0 = Tab. I preset)")
+                .opt("threads", "1", "data-parallel training threads")
+                .opt("data-scale", "1.0", "fraction of Tab. I dataset size (mnist)")
+                .opt("seed", "0", "RNG seed")
+                .opt("events", "4096", "trace-ring capacity (oldest events overwritten)")
+                .opt("out", "results/trace.json", "Chrome trace-event JSON output path"),
         ],
     }
 }
@@ -146,6 +160,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "approx-error" => cmd_approx_error(args),
         "inspect-artifacts" => cmd_inspect(),
         "serve" => cmd_serve(args),
+        "trace" => cmd_trace(args),
         _ => bail!("unhandled command {cmd}"),
     }
 }
@@ -410,6 +425,107 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!("protocol: one JSON object per line; try {{\"op\":\"ping\"}} — see README.md");
     server.run()
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    use mem_aop_gd::coordinator::config::KSchedule;
+    use mem_aop_gd::coordinator::native_trainer::NativeTrainer;
+    use mem_aop_gd::obs::ObsConfig;
+
+    let task = Task::parse(args.get("task").unwrap_or("energy"))
+        .ok_or_else(|| anyhow!("bad --task"))?;
+    let mut cfg = ExperimentConfig::preset(task);
+    cfg.policy = Policy::parse_or_suggest(args.get("policy").unwrap_or("topk"))
+        .map_err(|e| anyhow!("--policy: {e}"))?;
+    cfg.k = KSchedule::parse(args.get("k").unwrap_or("18")).map_err(|e| anyhow!("--k: {e}"))?;
+    if cfg.policy == Policy::Exact {
+        cfg.k = KSchedule::constant(cfg.m());
+        cfg.memory = false;
+    }
+    let epochs: usize = args.get_parse("epochs")?;
+    if epochs > 0 {
+        cfg.epochs = epochs;
+    }
+    cfg.seed = args.get_parse("seed")?;
+    cfg.threads = args.get_parse("threads")?;
+    cfg.data_scale = args.get_parse("data-scale")?;
+    cfg.backend = Backend::Native;
+    cfg.validate()?;
+
+    let events: usize = args.get_parse("events")?;
+    let out = std::path::PathBuf::from(args.get("out").unwrap_or("results/trace.json"));
+
+    // Keep the trainer after the run: the event ring and histograms live
+    // in its workspace, and `run_with_trainer_ref` borrows instead of
+    // consuming exactly so post-run telemetry can be dumped here.
+    let mut trainer = NativeTrainer::new(&cfg)?;
+    trainer.set_obs(ObsConfig::with_trace_capacity(events));
+    let r = experiment::run_with_trainer_ref(&cfg, &mut trainer, &mut |_| true)?;
+
+    let tele = trainer.telemetry();
+    let rollup = tele.rollup();
+    let mut rows = Vec::new();
+    for ps in &rollup.phases {
+        if ps.count == 0 {
+            continue;
+        }
+        rows.push(vec![
+            ps.phase.name().to_string(),
+            format!("{}", ps.count),
+            fmt_ns(ps.total_ns),
+            fmt_ns(ps.p50_ns),
+            fmt_ns(ps.p99_ns),
+        ]);
+    }
+    println!(
+        "traced {} steps ({} / {}, K={}/{}, {} epochs, threads={})",
+        rollup.steps,
+        cfg.task.name(),
+        cfg.label(),
+        cfg.k.name(),
+        cfg.m(),
+        cfg.epochs,
+        cfg.threads
+    );
+    print_table(&["phase", "count", "total", "p50", "p99"], &rows);
+    let mut lrows = Vec::new();
+    for (i, ls) in rollup.layers.iter().enumerate() {
+        lrows.push(vec![
+            format!("{i}"),
+            format!("{}", ls.k_sum),
+            format!("{:.3e}", ls.backward_flops as f64),
+        ]);
+    }
+    print_table(&["layer", "K realized", "bwd FLOPs"], &lrows);
+
+    if let Some(dir) = out.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, tele.chrome_trace_json().dump())?;
+    let ring = tele.trace();
+    println!(
+        "wrote {} trace events ({} recorded, ring capacity {}) to {} — open in \
+         chrome://tracing or Perfetto",
+        ring.total().min(ring.capacity() as u64),
+        ring.total(),
+        ring.capacity(),
+        out.display()
+    );
+    println!("final val loss {:.6}", r.final_val_loss());
+    Ok(())
+}
+
+/// Human-readable nanosecond duration for the rollup table.
+fn fmt_ns(ns: u64) -> String {
+    if ns < 10_000 {
+        format!("{ns} ns")
+    } else if ns < 10_000_000 {
+        format!("{:.1} µs", ns as f64 / 1e3)
+    } else if ns < 10_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
 }
 
 fn cmd_inspect() -> Result<()> {

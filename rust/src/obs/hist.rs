@@ -1,0 +1,259 @@
+//! Fixed-bucket latency histograms — the pre-allocated recording
+//! primitives behind `obs`.
+//!
+//! Buckets are powers of two in nanoseconds: bucket `i` counts samples
+//! with `2^i ≤ ns < 2^(i+1)` (bucket 0 also absorbs 0 ns), and the last
+//! bucket absorbs everything from `2^(BUCKETS-1)` ns up. 40 buckets
+//! span 1 ns to ~9 minutes, which covers any phase of any training
+//! step or serve request. The scheme has multiplicative resolution by
+//! construction (every bucket is a 2× band), so quantile estimates
+//! carry at most a 2× quantization error — plenty for "where does the
+//! step spend its time", and it makes `record` a `leading_zeros` plus
+//! three adds: cheap enough for hot paths, with **zero allocations**
+//! (the bucket array is a fixed-size inline array).
+//!
+//! Two variants share the scheme: [`Histogram`] (plain `u64` counts,
+//! for single-writer paths like the step telemetry) and
+//! [`AtomicHistogram`] (relaxed atomics, for the serve tier's
+//! concurrent request accounting). `AtomicHistogram::snapshot` bridges
+//! the two for rendering.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of power-of-two buckets (`2^0` .. `2^39` ns ≈ 9.2 minutes).
+pub const BUCKETS: usize = 40;
+
+/// Bucket index for a sample of `ns` nanoseconds.
+#[inline]
+pub fn bucket_of(ns: u64) -> usize {
+    if ns < 2 {
+        0
+    } else {
+        (63 - ns.leading_zeros() as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i` in nanoseconds (`u64::MAX` for
+/// the overflow bucket).
+pub fn bucket_upper_ns(i: usize) -> u64 {
+    if i + 1 >= BUCKETS {
+        u64::MAX
+    } else {
+        (1u64 << (i + 1)) - 1
+    }
+}
+
+/// Single-writer power-of-two-ns latency histogram. Fixed size, never
+/// allocates; `record` is safe on the zero-allocation step hot path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        Histogram { counts: [0; BUCKETS], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+
+    #[inline]
+    pub fn record(&mut self, ns: u64) {
+        self.counts[bucket_of(ns)] += 1;
+        self.count += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        if ns > self.max_ns {
+            self.max_ns = ns;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Raw per-bucket counts (bucket `i` covers `[2^i, 2^(i+1))` ns).
+    pub fn counts(&self) -> &[u64; BUCKETS] {
+        &self.counts
+    }
+
+    /// Upper-bound estimate of the `q`-quantile (`0 ≤ q ≤ 1`) in ns:
+    /// the upper edge of the first bucket whose cumulative count
+    /// reaches `q·count`, clamped to the observed maximum. 0 when
+    /// empty. At most 2× above the true quantile (bucket scheme).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return bucket_upper_ns(i).min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn reset(&mut self) {
+        *self = Histogram::new();
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// Shared-writer variant for the serve tier: same buckets, relaxed
+/// atomics. Recording takes `&self`, so per-op request histograms can
+/// live behind the shared `ServerState` with no lock.
+pub struct AtomicHistogram {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl AtomicHistogram {
+    pub const fn new() -> AtomicHistogram {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        AtomicHistogram {
+            counts: [ZERO; BUCKETS],
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, ns: u64) {
+        self.counts[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy for rendering. Relaxed loads: totals can
+    /// momentarily lag bucket increments mid-record under concurrent
+    /// writers, and are exact once writers are quiescent.
+    pub fn snapshot(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for (dst, src) in h.counts.iter_mut().zip(self.counts.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        h.count = self.count.load(Ordering::Relaxed);
+        h.sum_ns = self.sum_ns.load(Ordering::Relaxed);
+        h.max_ns = self.max_ns.load(Ordering::Relaxed);
+        h
+    }
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> AtomicHistogram {
+        AtomicHistogram::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        // overflow clamps to the last bucket
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_upper_ns(0), 1);
+        assert_eq!(bucket_upper_ns(9), 1023);
+        assert_eq!(bucket_upper_ns(BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn record_and_summaries() {
+        let mut h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile_ns(0.5), 0);
+        for ns in [1u64, 3, 5, 100, 1000] {
+            h.record(ns);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum_ns(), 1109);
+        assert_eq!(h.max_ns(), 1000);
+        assert!((h.mean_ns() - 221.8).abs() < 1e-9);
+        assert_eq!(h.counts()[bucket_of(100)], 1);
+        // p50 lands in the bucket of the 3rd sample (5 ns → bucket 2,
+        // upper edge 7)
+        assert_eq!(h.quantile_ns(0.5), 7);
+        // p100 clamps to the observed max, not the bucket edge
+        assert_eq!(h.quantile_ns(1.0), 1000);
+        h.reset();
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(10);
+        b.record(1000);
+        b.record(2000);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.sum_ns(), 3010);
+        assert_eq!(a.max_ns(), 2000);
+    }
+
+    #[test]
+    fn atomic_snapshot_matches_plain() {
+        let ah = AtomicHistogram::new();
+        let mut h = Histogram::new();
+        for ns in [7u64, 70, 700, 7000] {
+            ah.record(ns);
+            h.record(ns);
+        }
+        assert_eq!(ah.count(), 4);
+        assert_eq!(ah.snapshot(), h);
+    }
+}

@@ -1,0 +1,92 @@
+//! `obs` — zero-allocation observability for the training and serve
+//! tiers (ISSUE 6 tentpole).
+//!
+//! The paper's claim is a *tradeoff curve* — loss versus backward
+//! computation saved by sub-sampling outer products — so the repo needs
+//! first-class visibility into where step time actually goes and what
+//! budget each layer realized, without perturbing a single curve bit or
+//! allocating on the hot path. This module provides the primitives and
+//! the step-level handle:
+//!
+//! * [`hist`] — pre-allocated, fixed-bucket (power-of-two ns) latency
+//!   histograms, plain and atomic;
+//! * [`telemetry`] — [`StepTelemetry`], the per-run handle owned by
+//!   `GraphWorkspace`/`NativeTrainer`: per-phase timings (`fwd`,
+//!   `score`, `select`, `apply`, shard `dispatch`/`reduce`) plus
+//!   per-layer realized-K / backward-FLOP counters, and frozen
+//!   [`PhaseRollup`] summaries for serve job views;
+//! * [`trace`] — a bounded ring-buffer event trace rendered as Chrome
+//!   trace-event JSON (`repro trace`, chrome://tracing);
+//! * [`prom`] — Prometheus text-format rendering used by the serve
+//!   tier's `metrics` op (protocol v5 `format: "prometheus"`).
+//!
+//! Design contract (asserted by tests and BENCH_6):
+//! [`ObsConfig::off`] means **no timer reads** on the hot path;
+//! enabled telemetry performs **zero heap allocations** in steady
+//! state (everything is pre-sized at workspace construction); and
+//! observability reads clocks but never feeds them back into
+//! execution, so the exec determinism contract (bit-identical curves
+//! at any thread count) holds with obs on and off.
+
+pub mod hist;
+pub mod prom;
+pub mod telemetry;
+pub mod trace;
+
+pub use hist::{AtomicHistogram, Histogram, BUCKETS};
+pub use prom::PromBuf;
+pub use telemetry::{LayerStat, Phase, PhaseRollup, PhaseStat, StepTelemetry};
+pub use trace::{TraceEvent, TraceRing};
+
+/// Default trace-ring capacity when obs is enabled.
+pub const DEFAULT_TRACE_CAPACITY: usize = 1024;
+
+/// Observability configuration for one telemetry handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Master switch: `false` ⇒ no clock reads, nothing recorded.
+    pub enabled: bool,
+    /// Ring-buffer slots for the event trace (0 ⇒ no trace retained;
+    /// histograms and counters still record when enabled).
+    pub trace_capacity: usize,
+}
+
+impl ObsConfig {
+    /// Telemetry fully off — the hot path performs no timer reads.
+    pub const fn off() -> ObsConfig {
+        ObsConfig { enabled: false, trace_capacity: 0 }
+    }
+
+    /// Telemetry on with the default trace capacity.
+    pub const fn on() -> ObsConfig {
+        ObsConfig { enabled: true, trace_capacity: DEFAULT_TRACE_CAPACITY }
+    }
+
+    /// Telemetry on with an explicit trace-ring capacity.
+    pub const fn with_trace_capacity(trace_capacity: usize) -> ObsConfig {
+        ObsConfig { enabled: true, trace_capacity }
+    }
+}
+
+impl Default for ObsConfig {
+    fn default() -> ObsConfig {
+        ObsConfig::off()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_presets() {
+        assert!(!ObsConfig::off().enabled);
+        assert_eq!(ObsConfig::off().trace_capacity, 0);
+        assert!(ObsConfig::on().enabled);
+        assert_eq!(ObsConfig::on().trace_capacity, DEFAULT_TRACE_CAPACITY);
+        let c = ObsConfig::with_trace_capacity(64);
+        assert!(c.enabled);
+        assert_eq!(c.trace_capacity, 64);
+        assert_eq!(ObsConfig::default(), ObsConfig::off());
+    }
+}

@@ -1,0 +1,143 @@
+//! Minimal Prometheus text-format (exposition format 0.0.4) rendering
+//! over `obs` counters, gauges and histograms.
+//!
+//! Render-at-scrape: these helpers allocate freely — they run on the
+//! serve tier when a client asks for `{"op":"metrics",
+//! "format":"prometheus"}`, never on the step hot path. Durations are
+//! rendered in **seconds** (the Prometheus base-unit convention); the
+//! power-of-two-ns buckets of [`Histogram`] become `le` edges of
+//! `2^(i+1) / 1e9` seconds.
+//!
+//! Metric names emitted through this module are a **stable interface**
+//! (see README "Observability"): names and label keys only ever get
+//! added, never renamed or removed.
+
+use crate::obs::hist::{Histogram, BUCKETS};
+
+/// Incremental Prometheus text-format builder.
+pub struct PromBuf {
+    out: String,
+}
+
+impl PromBuf {
+    pub fn new() -> PromBuf {
+        PromBuf { out: String::new() }
+    }
+
+    /// `# HELP` + `# TYPE` header; `kind` ∈ `counter|gauge|histogram`.
+    pub fn header(&mut self, name: &str, kind: &str, help: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    /// One sample line `name{labels} value`.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(&render_name(name, labels));
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(value));
+        self.out.push('\n');
+    }
+
+    /// A full histogram family (`_bucket`/`_sum`/`_count`) from a
+    /// nanosecond histogram, rendered in seconds. Cumulative bucket
+    /// counts; the overflow bucket maps to `le="+Inf"`.
+    pub fn histogram_ns(&mut self, name: &str, labels: &[(&str, &str)], h: &Histogram) {
+        let mut cum = 0u64;
+        for i in 0..BUCKETS - 1 {
+            cum += h.counts()[i];
+            let le = fmt_value((1u64 << (i + 1)) as f64 / 1e9);
+            self.bucket_line(name, labels, &le, cum);
+        }
+        self.bucket_line(name, labels, "+Inf", h.count());
+        self.sample(&format!("{name}_sum"), labels, h.sum_ns() as f64 / 1e9);
+        self.sample(&format!("{name}_count"), labels, h.count() as f64);
+    }
+
+    fn bucket_line(&mut self, name: &str, labels: &[(&str, &str)], le: &str, cum: u64) {
+        let mut all: Vec<(&str, &str)> = labels.to_vec();
+        all.push(("le", le));
+        self.out.push_str(&render_name(&format!("{name}_bucket"), &all));
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(cum as f64));
+        self.out.push('\n');
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+impl Default for PromBuf {
+    fn default() -> PromBuf {
+        PromBuf::new()
+    }
+}
+
+fn render_name(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let body: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    format!("{name}{{{}}}", body.join(","))
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Prometheus value formatting: integral values render without a
+/// fraction, everything else as shortest-roundtrip decimal.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render() {
+        let mut p = PromBuf::new();
+        p.header("repro_requests_total", "counter", "Requests handled.");
+        p.sample("repro_requests_total", &[], 42.0);
+        p.sample("repro_jobs_total", &[("state", "done")], 7.0);
+        let text = p.finish();
+        assert!(text.contains("# TYPE repro_requests_total counter\n"));
+        assert!(text.contains("\nrepro_requests_total 42\n"));
+        assert!(text.contains("repro_jobs_total{state=\"done\"} 7\n"));
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_buckets_in_seconds() {
+        let mut h = Histogram::new();
+        h.record(1_000);   // 1 µs  → bucket 9, le 2^10 ns ≈ 1.024e-6 s
+        h.record(1_000_000); // 1 ms
+        let mut p = PromBuf::new();
+        p.histogram_ns("repro_req", &[("op", "ping")], &h);
+        let text = p.finish();
+        assert!(text.contains("repro_req_bucket{op=\"ping\",le=\"+Inf\"} 2\n"));
+        assert!(text.contains("repro_req_count{op=\"ping\"} 2\n"));
+        assert!(text.contains(&format!("repro_req_sum{{op=\"ping\"}} {}", 1_001_000.0 / 1e9)));
+        // cumulative: every bucket line's count is non-decreasing
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket")) {
+            let v: f64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v as u64 >= last, "{line}");
+            last = v as u64;
+        }
+        // 1 µs sample is included from its bucket's edge on
+        let edge = fmt_value((1u64 << 10) as f64 / 1e9);
+        assert!(text.contains(&format!("le=\"{edge}\"}} 1\n")), "{text}");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut p = PromBuf::new();
+        p.sample("x", &[("tag", "a\"b\\c\nd")], 1.0);
+        assert_eq!(p.finish(), "x{tag=\"a\\\"b\\\\c\\nd\"} 1\n");
+    }
+}

@@ -1,0 +1,376 @@
+//! [`StepTelemetry`] — the per-run handle recording where step time
+//! goes, owned by `GraphWorkspace` (and through it `NativeTrainer`).
+//!
+//! Phases ([`Phase`]): the two halves of the split step (`fwd` =
+//! forward trace + head loss, `score` = the backward fold/score/chain
+//! sweep), the policy draw (`select`), the update (`apply`), and — as
+//! sub-phases *nested inside* `apply` — the per-layer outer-product
+//! shard dispatch (`dispatch`) and fixed-order reduction (`reduce`).
+//! `dispatch`/`reduce` totals therefore overlap `apply`, not add to it.
+//!
+//! Hard constraints (ISSUE 6), and how they are met:
+//!
+//! * **disabled ⇒ free**: [`StepTelemetry::start`] returns `None`
+//!   without reading any clock when the config is off; every recording
+//!   method is an early-return branch. The hot path's entire obs cost
+//!   when disabled is a handful of predictable branches.
+//! * **enabled ⇒ zero allocations**: histograms are fixed inline
+//!   arrays, the trace ring and per-layer counters are pre-sized at
+//!   construction (workspace build time). Steady-state steps with
+//!   telemetry on allocate nothing — asserted by the counting
+//!   allocator in `benches/kernels.rs` (BENCH_6).
+//! * **determinism**: telemetry reads clocks but never feeds them back
+//!   into execution; the `threads {1,7}` bit-identity grid in
+//!   `rust/tests/exec.rs` runs with obs on and off.
+
+use std::time::Instant;
+
+use crate::obs::hist::Histogram;
+use crate::obs::trace::{TraceEvent, TraceRing};
+use crate::obs::ObsConfig;
+use crate::util::json::{self, Json};
+
+/// A timed phase of the training step (see the module docs for how
+/// `dispatch`/`reduce` nest inside `apply`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Fwd,
+    Score,
+    Select,
+    Apply,
+    Dispatch,
+    Reduce,
+}
+
+impl Phase {
+    pub const COUNT: usize = 6;
+    pub const ALL: [Phase; Phase::COUNT] = [
+        Phase::Fwd,
+        Phase::Score,
+        Phase::Select,
+        Phase::Apply,
+        Phase::Dispatch,
+        Phase::Reduce,
+    ];
+
+    /// Stable wire name (Prometheus labels, trace events, rollups).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Fwd => "fwd",
+            Phase::Score => "score",
+            Phase::Select => "select",
+            Phase::Apply => "apply",
+            Phase::Dispatch => "dispatch",
+            Phase::Reduce => "reduce",
+        }
+    }
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+#[inline]
+fn saturating_ns(ns: u128) -> u64 {
+    ns.min(u64::MAX as u128) as u64
+}
+
+/// Pre-allocated per-run step telemetry: one latency histogram per
+/// phase, monotonic step/per-layer counters, and a bounded event trace.
+pub struct StepTelemetry {
+    cfg: ObsConfig,
+    /// Time origin for trace timestamps (construction instant).
+    origin: Instant,
+    steps: u64,
+    phases: [Histogram; Phase::COUNT],
+    /// Cumulative realized K (distinct outer products) per layer.
+    layer_k_sum: Vec<u64>,
+    /// Cumulative backward weight-gradient FLOPs per layer.
+    layer_flops: Vec<u64>,
+    trace: TraceRing,
+}
+
+impl StepTelemetry {
+    pub fn new(cfg: ObsConfig, n_layers: usize) -> StepTelemetry {
+        let trace_cap = if cfg.enabled { cfg.trace_capacity } else { 0 };
+        StepTelemetry {
+            cfg,
+            origin: Instant::now(),
+            steps: 0,
+            phases: std::array::from_fn(|_| Histogram::new()),
+            layer_k_sum: vec![0; n_layers],
+            layer_flops: vec![0; n_layers],
+            trace: TraceRing::with_capacity(trace_cap),
+        }
+    }
+
+    pub fn config(&self) -> ObsConfig {
+        self.cfg
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// Open a phase timer. Returns `None` — with **no clock read** —
+    /// when telemetry is disabled.
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        if self.cfg.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a timer opened by [`Self::start`]: record the elapsed ns
+    /// into the phase histogram and the trace ring. No-op (and no
+    /// clock read) for `None`.
+    #[inline]
+    pub fn finish(&mut self, phase: Phase, started: Option<Instant>) {
+        let Some(t0) = started else { return };
+        let dur_ns = saturating_ns(t0.elapsed().as_nanos());
+        let start_ns = saturating_ns(t0.duration_since(self.origin).as_nanos());
+        self.phases[phase.index()].record(dur_ns);
+        self.trace.push(TraceEvent { phase, start_ns, dur_ns, step: self.steps });
+    }
+
+    /// Record an externally-timed phase duration (the experiment loop
+    /// times `select` outside the workspace on the trait path).
+    pub fn record_ns(&mut self, phase: Phase, dur_ns: u64) {
+        if !self.cfg.enabled {
+            return;
+        }
+        self.phases[phase.index()].record(dur_ns);
+        let end_ns = saturating_ns(self.origin.elapsed().as_nanos());
+        self.trace.push(TraceEvent {
+            phase,
+            start_ns: end_ns.saturating_sub(dur_ns),
+            dur_ns,
+            step: self.steps,
+        });
+    }
+
+    /// Count one completed step (called at the end of `apply`).
+    #[inline]
+    pub fn record_step(&mut self) {
+        if self.cfg.enabled {
+            self.steps += 1;
+        }
+    }
+
+    /// Accumulate one layer's realized budget for the applied step.
+    #[inline]
+    pub fn record_layer(&mut self, li: usize, k: usize, backward_flops: u64) {
+        if !self.cfg.enabled {
+            return;
+        }
+        if let Some(s) = self.layer_k_sum.get_mut(li) {
+            *s += k as u64;
+        }
+        if let Some(f) = self.layer_flops.get_mut(li) {
+            *f += backward_flops;
+        }
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    pub fn phase(&self, p: Phase) -> &Histogram {
+        &self.phases[p.index()]
+    }
+
+    pub fn layer_k_sum(&self) -> &[u64] {
+        &self.layer_k_sum
+    }
+
+    pub fn layer_flops(&self) -> &[u64] {
+        &self.layer_flops
+    }
+
+    pub fn trace(&self) -> &TraceRing {
+        &self.trace
+    }
+
+    /// Chrome trace-event JSON of the retained events (see
+    /// [`TraceRing::chrome_trace_json`]).
+    pub fn chrome_trace_json(&self) -> Json {
+        self.trace.chrome_trace_json()
+    }
+
+    /// Compact summary for job views and CLI reporting.
+    pub fn rollup(&self) -> PhaseRollup {
+        PhaseRollup {
+            steps: self.steps,
+            phases: Phase::ALL
+                .iter()
+                .map(|&p| {
+                    let h = &self.phases[p.index()];
+                    PhaseStat {
+                        phase: p,
+                        count: h.count(),
+                        total_ns: h.sum_ns(),
+                        p50_ns: h.quantile_ns(0.5),
+                        p99_ns: h.quantile_ns(0.99),
+                    }
+                })
+                .collect(),
+            layers: self
+                .layer_k_sum
+                .iter()
+                .zip(self.layer_flops.iter())
+                .map(|(&k_sum, &backward_flops)| LayerStat { k_sum, backward_flops })
+                .collect(),
+        }
+    }
+}
+
+/// One phase's summary inside a [`PhaseRollup`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseStat {
+    pub phase: Phase,
+    pub count: u64,
+    pub total_ns: u64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+}
+
+/// One layer's cumulative realized budget inside a [`PhaseRollup`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerStat {
+    /// Cumulative realized K (distinct outer products) across steps.
+    pub k_sum: u64,
+    /// Cumulative backward weight-gradient FLOPs.
+    pub backward_flops: u64,
+}
+
+/// Frozen summary of a run's [`StepTelemetry`]: steps, per-phase
+/// count/total/percentiles, per-layer realized K and backward FLOPs.
+/// Attached to `RunResult` and rendered into serve `JobView`s
+/// (protocol v5). Timings describe the run that happened — they never
+/// feed back into execution, so two runs of one seed may differ here
+/// while agreeing bit-for-bit on every curve.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseRollup {
+    pub steps: u64,
+    pub phases: Vec<PhaseStat>,
+    pub layers: Vec<LayerStat>,
+}
+
+impl PhaseRollup {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("steps", json::num(self.steps as f64)),
+            (
+                "phases",
+                Json::Arr(
+                    self.phases
+                        .iter()
+                        .map(|p| {
+                            json::obj(vec![
+                                ("phase", json::s(p.phase.name())),
+                                ("count", json::num(p.count as f64)),
+                                ("total_ns", json::num(p.total_ns as f64)),
+                                ("p50_ns", json::num(p.p50_ns as f64)),
+                                ("p99_ns", json::num(p.p99_ns as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "layers",
+                Json::Arr(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            json::obj(vec![
+                                ("k_sum", json::num(l.k_sum as f64)),
+                                ("backward_flops", json::num(l.backward_flops as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing_and_reads_no_timer() {
+        let mut t = StepTelemetry::new(ObsConfig::off(), 2);
+        assert!(!t.enabled());
+        let started = t.start();
+        assert!(started.is_none(), "off ⇒ no timer handle");
+        t.finish(Phase::Fwd, started);
+        t.record_ns(Phase::Select, 500);
+        t.record_step();
+        t.record_layer(0, 7, 1000);
+        assert_eq!(t.steps(), 0);
+        assert!(t.phase(Phase::Fwd).is_empty());
+        assert!(t.phase(Phase::Select).is_empty());
+        assert_eq!(t.layer_k_sum(), &[0, 0]);
+        assert!(t.trace().is_empty());
+    }
+
+    #[test]
+    fn enabled_records_phases_steps_and_layers() {
+        let mut t = StepTelemetry::new(ObsConfig::on(), 2);
+        assert!(t.enabled());
+        for _ in 0..3 {
+            let s = t.start();
+            assert!(s.is_some());
+            t.finish(Phase::Fwd, s);
+            t.record_ns(Phase::Select, 250);
+            t.record_layer(0, 6, 100);
+            t.record_layer(1, 12, 400);
+            t.record_step();
+        }
+        assert_eq!(t.steps(), 3);
+        assert_eq!(t.phase(Phase::Fwd).count(), 3);
+        assert_eq!(t.phase(Phase::Select).count(), 3);
+        assert_eq!(t.phase(Phase::Select).sum_ns(), 750);
+        assert_eq!(t.phase(Phase::Apply).count(), 0);
+        assert_eq!(t.layer_k_sum(), &[18, 36]);
+        assert_eq!(t.layer_flops(), &[300, 1200]);
+        assert_eq!(t.trace().total(), 6, "one event per finish/record_ns");
+    }
+
+    #[test]
+    fn rollup_summarizes_every_phase_and_layer() {
+        let mut t = StepTelemetry::new(ObsConfig::on(), 1);
+        t.record_ns(Phase::Apply, 1000);
+        t.record_ns(Phase::Apply, 3000);
+        t.record_layer(0, 9, 5000);
+        t.record_step();
+        let r = t.rollup();
+        assert_eq!(r.steps, 1);
+        assert_eq!(r.phases.len(), Phase::COUNT);
+        let apply = r.phases.iter().find(|p| p.phase == Phase::Apply).unwrap();
+        assert_eq!(apply.count, 2);
+        assert_eq!(apply.total_ns, 4000);
+        assert!(apply.p50_ns >= 1000 && apply.p50_ns <= 2047, "{}", apply.p50_ns);
+        assert_eq!(r.layers, vec![LayerStat { k_sum: 9, backward_flops: 5000 }]);
+        // JSON render keeps the stable phase names
+        let j = r.to_json();
+        let phases = j.get("phases").and_then(|p| p.as_arr()).unwrap();
+        let names: Vec<&str> =
+            phases.iter().filter_map(|p| p.get("phase").and_then(|n| n.as_str())).collect();
+        assert_eq!(names, vec!["fwd", "score", "select", "apply", "dispatch", "reduce"]);
+    }
+
+    #[test]
+    fn phase_names_are_stable() {
+        // these names are a wire-format promise (Prometheus labels,
+        // trace events, job views) — changing one is a breaking change
+        let names: Vec<&str> = Phase::ALL.iter().map(|p| p.name()).collect();
+        assert_eq!(names, vec!["fwd", "score", "select", "apply", "dispatch", "reduce"]);
+    }
+}

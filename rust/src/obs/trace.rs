@@ -1,0 +1,157 @@
+//! Bounded ring-buffer event trace + Chrome trace-event rendering.
+//!
+//! [`TraceRing`] retains the most recent `capacity` phase events in a
+//! pre-allocated buffer: pushes write into reserved slots (`Vec::push`
+//! within capacity, then wrapping overwrites of the oldest slot), so
+//! recording on the step hot path performs **zero heap allocations**.
+//! Events are fixed-size [`TraceEvent`] values — no strings; the phase
+//! name is resolved only at render time.
+//!
+//! [`TraceRing::chrome_trace_json`] renders the retained events as a
+//! Chrome trace-event JSON array (complete `"X"` events, microsecond
+//! timestamps) — load the dump of `repro trace` straight into
+//! chrome://tracing or Perfetto.
+
+use crate::obs::telemetry::Phase;
+use crate::util::json::{self, Json};
+
+/// One recorded phase interval. `start_ns` is relative to the owning
+/// telemetry's time origin (its construction instant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub phase: Phase,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Step counter at record time (the serve tier reuses this slot as
+    /// a request counter).
+    pub step: u64,
+}
+
+/// Fixed-capacity ring of recent [`TraceEvent`]s, oldest-overwriting.
+pub struct TraceRing {
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    /// Next slot to write (== `buf.len()` until the first wrap).
+    next: usize,
+    total: u64,
+}
+
+impl TraceRing {
+    pub fn with_capacity(cap: usize) -> TraceRing {
+        TraceRing { buf: Vec::with_capacity(cap), cap, next: 0, total: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Events currently retained (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events ever pushed (> `len()` once the ring has wrapped).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Record one event. Never allocates: the buffer only grows within
+    /// its pre-reserved capacity, then wraps over the oldest slot. A
+    /// zero-capacity ring drops everything (the disabled configuration).
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.next] = ev;
+        }
+        self.next = (self.next + 1) % self.cap;
+        self.total += 1;
+    }
+
+    /// Retained events, oldest first.
+    pub fn iter_in_order(&self) -> impl Iterator<Item = &TraceEvent> {
+        let split = if self.buf.len() < self.cap { 0 } else { self.next };
+        self.buf[split..].iter().chain(self.buf[..split].iter())
+    }
+
+    /// Render the retained events as a Chrome trace-event JSON array:
+    /// complete (`"ph":"X"`) events with microsecond `ts`/`dur`, one
+    /// track (`pid`/`tid` 1), the step counter in `args.step`.
+    pub fn chrome_trace_json(&self) -> Json {
+        Json::Arr(
+            self.iter_in_order()
+                .map(|ev| {
+                    json::obj(vec![
+                        ("name", json::s(ev.phase.name())),
+                        ("cat", json::s("repro")),
+                        ("ph", json::s("X")),
+                        ("ts", json::num(ev.start_ns as f64 / 1000.0)),
+                        ("dur", json::num(ev.dur_ns as f64 / 1000.0)),
+                        ("pid", json::num(1.0)),
+                        ("tid", json::num(1.0)),
+                        ("args", json::obj(vec![("step", json::num(ev.step as f64))])),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(phase: Phase, start_ns: u64) -> TraceEvent {
+        TraceEvent { phase, start_ns, dur_ns: 10, step: start_ns / 100 }
+    }
+
+    #[test]
+    fn wraps_over_oldest() {
+        let mut r = TraceRing::with_capacity(3);
+        assert!(r.is_empty());
+        for i in 0..5u64 {
+            r.push(ev(Phase::Fwd, i * 100));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.capacity(), 3);
+        assert_eq!(r.total(), 5);
+        let starts: Vec<u64> = r.iter_in_order().map(|e| e.start_ns).collect();
+        assert_eq!(starts, vec![200, 300, 400], "oldest two evicted, order kept");
+    }
+
+    #[test]
+    fn zero_capacity_drops_everything() {
+        let mut r = TraceRing::with_capacity(0);
+        r.push(ev(Phase::Apply, 0));
+        assert!(r.is_empty());
+        assert_eq!(r.total(), 0);
+        assert!(matches!(r.chrome_trace_json(), Json::Arr(a) if a.is_empty()));
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_through_json() {
+        let mut r = TraceRing::with_capacity(8);
+        r.push(ev(Phase::Fwd, 1000));
+        r.push(ev(Phase::Score, 2500));
+        let dumped = r.chrome_trace_json().dump();
+        let parsed = json::parse(&dumped).unwrap();
+        let arr = parsed.as_arr().expect("array of events");
+        assert_eq!(arr.len(), 2);
+        let first = &arr[0];
+        assert_eq!(first.get("name").and_then(|v| v.as_str()), Some("fwd"));
+        assert_eq!(first.get("ph").and_then(|v| v.as_str()), Some("X"));
+        assert_eq!(first.get("ts").and_then(|v| v.as_f64()), Some(1.0)); // 1000 ns = 1 µs
+        assert_eq!(
+            first.get("args").and_then(|a| a.get("step")).and_then(|v| v.as_usize()),
+            Some(10)
+        );
+        assert_eq!(arr[1].get("name").and_then(|v| v.as_str()), Some("score"));
+    }
+}

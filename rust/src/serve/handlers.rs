@@ -11,10 +11,35 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::serve::protocol::{self, err_response, ok_response, Request, PROTOCOL_VERSION};
+use crate::obs::{AtomicHistogram, PromBuf};
+use crate::serve::protocol::{
+    self, err_response, ok_response, MetricsFormat, Request, PROTOCOL_VERSION,
+};
 use crate::serve::queue::Scheduler;
 use crate::serve::registry::Registry;
 use crate::util::json::{self, Json};
+
+/// Stable op labels for the per-op request accounting (protocol v5;
+/// Prometheus `op` label values). `error` collects frames that fail to
+/// parse into any op. These are a wire-format promise — only ever
+/// extended, never renamed.
+const OP_NAMES: [&str; 9] = [
+    "submit", "status", "result", "list", "cancel", "metrics", "ping", "shutdown", "error",
+];
+const OP_ERROR: usize = OP_NAMES.len() - 1;
+
+fn op_index(req: &Request) -> usize {
+    match req {
+        Request::Submit { .. } => 0,
+        Request::Status { .. } => 1,
+        Request::Result { .. } => 2,
+        Request::List { .. } => 3,
+        Request::Cancel { .. } => 4,
+        Request::Metrics { .. } => 5,
+        Request::Ping => 6,
+        Request::Shutdown => 7,
+    }
+}
 
 /// Everything a connection handler needs, shared via `Arc` across the
 /// accept loop and every connection thread.
@@ -23,6 +48,10 @@ pub struct ServerState {
     pub scheduler: Scheduler,
     started: Instant,
     requests: AtomicU64,
+    /// Per-op request latency (and, via its count, per-op request
+    /// totals): every handled frame records exactly one sample, so
+    /// `Σ_op count == requests_total` whenever no request is in flight.
+    op_lat: [AtomicHistogram; OP_NAMES.len()],
     shutdown: AtomicBool,
 }
 
@@ -33,6 +62,7 @@ impl ServerState {
             scheduler,
             started: Instant::now(),
             requests: AtomicU64::new(0),
+            op_lat: std::array::from_fn(|_| AtomicHistogram::new()),
             shutdown: AtomicBool::new(false),
         }
     }
@@ -50,76 +80,172 @@ impl ServerState {
     /// encoded as an `ok:false` response.
     pub fn handle(&self, frame: &Json) -> Json {
         self.requests.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
         let req = match Request::from_json(frame) {
             Ok(r) => r,
-            Err(e) => return err_response(&format!("{e:#}")),
-        };
-        match req {
-            Request::Submit { config, tag } => match self.scheduler.submit(config, &tag) {
-                Ok(id) => ok_response(vec![("id", json::num(id as f64))]),
-                Err(e) => err_response(&format!("{e:#}")),
-            },
-            Request::Status { id } => match self.registry.view(id) {
-                Some(v) => ok_response(vec![("job", v.to_json())]),
-                None => err_response(&format!("no job {id}")),
-            },
-            Request::Result { id } => {
-                let Some(view) = self.registry.view(id) else {
-                    return err_response(&format!("no job {id}"));
-                };
-                match self.registry.result_of(id) {
-                    Some((cfg, curve)) => ok_response(vec![
-                        ("job", view.to_json()),
-                        ("config", cfg.to_json()),
-                        ("curve", curve.to_json()),
-                    ]),
-                    None => err_response(&format!(
-                        "job {id} has no result yet (state '{}')",
-                        view.state.name()
-                    )),
-                }
+            Err(e) => {
+                let resp = err_response(&format!("{e:#}"));
+                self.record_op(OP_ERROR, t0);
+                return resp;
             }
-            Request::List => ok_response(vec![(
-                "jobs",
-                Json::Arr(self.registry.views().iter().map(|v| v.to_json()).collect()),
-            )]),
-            Request::Cancel { id } => match self.registry.cancel(id) {
-                // Queued jobs finalize immediately; running jobs stop at
-                // the next epoch boundary.
-                Ok(state) => ok_response(vec![(
-                    "state",
-                    json::s(match state {
-                        crate::serve::registry::JobState::Cancelled => "cancelled",
-                        _ => "cancelling",
-                    }),
-                )]),
-                Err(e) => err_response(&format!("{e:#}")),
-            },
-            Request::Metrics => self.metrics_response(),
-            Request::Ping => ok_response(vec![
-                ("protocol", json::num(PROTOCOL_VERSION as f64)),
-                ("uptime_s", json::num(self.uptime_s())),
-            ]),
+        };
+        let op = op_index(&req);
+        match req {
+            Request::Submit { config, tag } => {
+                let resp = match self.scheduler.submit(config, &tag) {
+                    Ok(id) => ok_response(vec![("id", json::num(id as f64))]),
+                    Err(e) => err_response(&format!("{e:#}")),
+                };
+                self.record_op(op, t0);
+                resp
+            }
+            Request::Status { id, compact } => {
+                let resp = match self.registry.view(id) {
+                    Some(v) => ok_response(vec![(
+                        "job",
+                        if compact { v.to_json_compact() } else { v.to_json() },
+                    )]),
+                    None => err_response(&format!("no job {id}")),
+                };
+                self.record_op(op, t0);
+                resp
+            }
+            Request::Result { id } => {
+                let resp = match self.registry.view(id) {
+                    None => err_response(&format!("no job {id}")),
+                    Some(view) => match self.registry.result_of(id) {
+                        Some((cfg, curve)) => ok_response(vec![
+                            ("job", view.to_json()),
+                            ("config", cfg.to_json()),
+                            ("curve", curve.to_json()),
+                        ]),
+                        None => err_response(&format!(
+                            "job {id} has no result yet (state '{}')",
+                            view.state.name()
+                        )),
+                    },
+                };
+                self.record_op(op, t0);
+                resp
+            }
+            Request::List { compact } => {
+                let resp = ok_response(vec![(
+                    "jobs",
+                    Json::Arr(
+                        self.registry
+                            .views()
+                            .iter()
+                            .map(|v| if compact { v.to_json_compact() } else { v.to_json() })
+                            .collect(),
+                    ),
+                )]);
+                self.record_op(op, t0);
+                resp
+            }
+            Request::Cancel { id } => {
+                let resp = match self.registry.cancel(id) {
+                    // Queued jobs finalize immediately; running jobs stop
+                    // at the next epoch boundary.
+                    Ok(state) => ok_response(vec![(
+                        "state",
+                        json::s(match state {
+                            crate::serve::registry::JobState::Cancelled => "cancelled",
+                            _ => "cancelling",
+                        }),
+                    )]),
+                    Err(e) => err_response(&format!("{e:#}")),
+                };
+                self.record_op(op, t0);
+                resp
+            }
+            Request::Metrics { format } => {
+                // record this request BEFORE rendering, so the snapshot
+                // it returns satisfies `Σ_op hist counts ==
+                // requests_total` exactly (the metrics op's own sample
+                // covers parse + dispatch, not render time)
+                self.record_op(op, t0);
+                self.metrics_response(format)
+            }
+            Request::Ping => {
+                let resp = ok_response(vec![
+                    ("protocol", json::num(PROTOCOL_VERSION as f64)),
+                    ("uptime_s", json::num(self.uptime_s())),
+                ]);
+                self.record_op(op, t0);
+                resp
+            }
             Request::Shutdown => {
                 self.shutdown.store(true, Ordering::SeqCst);
-                ok_response(vec![("state", json::s("shutting-down"))])
+                let resp = ok_response(vec![("state", json::s("shutting-down"))]);
+                self.record_op(op, t0);
+                resp
             }
         }
     }
 
-    /// The `metrics` payload: queue/job counters, throughput, and the
-    /// per-policy FLOP-savings rollup from `aop::flops`.
-    fn metrics_response(&self) -> Json {
+    fn record_op(&self, op: usize, t0: Instant) {
+        let ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        self.op_lat[op].record(ns);
+    }
+
+    /// The `metrics` payload in the requested rendering: queue/slot/pool
+    /// gauges, job counters, per-op request latency, and the per-policy
+    /// FLOP-savings rollup from `aop::flops`.
+    fn metrics_response(&self, format: MetricsFormat) -> Json {
+        let g = self.gauges();
+        match format {
+            MetricsFormat::Json => self.metrics_json(&g),
+            MetricsFormat::Compact => self.metrics_compact(&g),
+            MetricsFormat::Prometheus => ok_response(vec![
+                ("format", json::s("prometheus")),
+                ("text", json::s(&self.prometheus_text(&g))),
+            ]),
+        }
+    }
+
+    /// One consistent read of every scalar the renderings share.
+    fn gauges(&self) -> Gauges {
         let counts = self.registry.counts();
         let uptime = self.uptime_s();
         // throughput of *this* process: jobs restored from a previous
         // lifetime don't count toward the current uptime's rate
         let done_here = counts.done.saturating_sub(self.registry.restored_count());
-        let jobs_per_sec = if uptime > 0.0 {
-            done_here as f64 / uptime
-        } else {
-            0.0
-        };
+        let slots_total = self.scheduler.worker_count();
+        let slots_busy = self.scheduler.slots_busy();
+        Gauges {
+            uptime,
+            requests_total: self.requests.load(Ordering::Relaxed),
+            queue_depth: self.scheduler.queue_depth(),
+            slots_total,
+            slots_busy,
+            slots_free: self.scheduler.slots_free(),
+            // slot (thread) utilization, not job count / worker count:
+            // a threads=4 job on a 4-slot server is 100% utilization
+            // even though one pool worker drives it
+            utilization: if slots_total > 0 {
+                slots_busy as f64 / slots_total as f64
+            } else {
+                0.0
+            },
+            pool_busy: self.scheduler.pool_busy(),
+            pool_pending: self.scheduler.pool_pending(),
+            jobs_per_sec: if uptime > 0.0 { done_here as f64 / uptime } else { 0.0 },
+            counts,
+        }
+    }
+
+    fn jobs_obj(counts: &crate::serve::registry::StateCounts) -> Json {
+        json::obj(vec![
+            ("queued", json::num(counts.queued as f64)),
+            ("running", json::num(counts.running as f64)),
+            ("done", json::num(counts.done as f64)),
+            ("failed", json::num(counts.failed as f64)),
+            ("cancelled", json::num(counts.cancelled as f64)),
+            ("total", json::num(counts.total() as f64)),
+        ])
+    }
+
+    fn metrics_json(&self, g: &Gauges) -> Json {
         let policies: Vec<Json> = self
             .registry
             .rollup()
@@ -134,29 +260,162 @@ impl ServerState {
                 ])
             })
             .collect();
+        let ops: Vec<Json> = OP_NAMES
+            .iter()
+            .zip(self.op_lat.iter())
+            .filter_map(|(name, h)| {
+                let h = h.snapshot();
+                if h.is_empty() {
+                    return None;
+                }
+                Some(json::obj(vec![
+                    ("op", json::s(name)),
+                    ("count", json::num(h.count() as f64)),
+                    ("total_ns", json::num(h.sum_ns() as f64)),
+                    ("p50_ns", json::num(h.quantile_ns(0.5) as f64)),
+                    ("p99_ns", json::num(h.quantile_ns(0.99) as f64)),
+                    ("max_ns", json::num(h.max_ns() as f64)),
+                ]))
+            })
+            .collect();
         ok_response(vec![
-            ("uptime_s", json::num(uptime)),
-            ("requests_total", json::num(self.requests.load(Ordering::Relaxed) as f64)),
-            ("queue_depth", json::num(self.scheduler.queue_depth() as f64)),
-            ("workers", json::num(self.scheduler.worker_count() as f64)),
+            ("uptime_s", json::num(g.uptime)),
+            ("requests_total", json::num(g.requests_total as f64)),
+            ("queue_depth", json::num(g.queue_depth as f64)),
+            ("workers", json::num(g.slots_total as f64)),
             // thread-slot budget: a running job holds `threads` slots
-            ("slots_total", json::num(self.scheduler.worker_count() as f64)),
-            ("slots_free", json::num(self.scheduler.slots_free() as f64)),
-            ("jobs_per_sec", json::num(jobs_per_sec)),
+            ("slots_total", json::num(g.slots_total as f64)),
+            ("slots_busy", json::num(g.slots_busy as f64)),
+            ("slots_free", json::num(g.slots_free as f64)),
+            ("utilization", json::num(g.utilization)),
             (
-                "jobs",
+                "pool",
                 json::obj(vec![
-                    ("queued", json::num(counts.queued as f64)),
-                    ("running", json::num(counts.running as f64)),
-                    ("done", json::num(counts.done as f64)),
-                    ("failed", json::num(counts.failed as f64)),
-                    ("cancelled", json::num(counts.cancelled as f64)),
-                    ("total", json::num(counts.total() as f64)),
+                    ("workers_busy", json::num(g.pool_busy as f64)),
+                    ("tasks_pending", json::num(g.pool_pending as f64)),
                 ]),
             ),
+            ("jobs_per_sec", json::num(g.jobs_per_sec)),
+            ("jobs", Self::jobs_obj(&g.counts)),
+            ("ops", Json::Arr(ops)),
             ("policies", Json::Arr(policies)),
         ])
     }
+
+    /// Compact mode: only the gauges pollers scrape — no policy rollup
+    /// (which walks every completed curve) and no op histograms.
+    fn metrics_compact(&self, g: &Gauges) -> Json {
+        ok_response(vec![
+            ("uptime_s", json::num(g.uptime)),
+            ("requests_total", json::num(g.requests_total as f64)),
+            ("queue_depth", json::num(g.queue_depth as f64)),
+            ("slots_total", json::num(g.slots_total as f64)),
+            ("slots_busy", json::num(g.slots_busy as f64)),
+            ("slots_free", json::num(g.slots_free as f64)),
+            ("utilization", json::num(g.utilization)),
+            ("jobs", Self::jobs_obj(&g.counts)),
+        ])
+    }
+
+    /// Prometheus text exposition. Metric names and label keys here are
+    /// a stability promise (README §Observability): extended, never
+    /// renamed or removed.
+    fn prometheus_text(&self, g: &Gauges) -> String {
+        let mut p = PromBuf::new();
+        p.header("repro_uptime_seconds", "gauge", "Server uptime in seconds.");
+        p.sample("repro_uptime_seconds", &[], g.uptime);
+        p.header("repro_requests_total", "counter", "Protocol requests handled, all ops.");
+        p.sample("repro_requests_total", &[], g.requests_total as f64);
+        p.header("repro_queue_depth", "gauge", "Jobs accepted but not yet running.");
+        p.sample("repro_queue_depth", &[], g.queue_depth as f64);
+        p.header("repro_slots_total", "gauge", "Training-thread slot budget (--workers).");
+        p.sample("repro_slots_total", &[], g.slots_total as f64);
+        p.header("repro_slots_busy", "gauge", "Slots held by running jobs (threads, not jobs).");
+        p.sample("repro_slots_busy", &[], g.slots_busy as f64);
+        p.header("repro_slots_free", "gauge", "Slots not held by running jobs.");
+        p.sample("repro_slots_free", &[], g.slots_free as f64);
+        p.header("repro_utilization_ratio", "gauge", "Busy fraction of the slot budget.");
+        p.sample("repro_utilization_ratio", &[], g.utilization);
+        p.header("repro_pool_workers_busy", "gauge", "Pool workers currently driving a job.");
+        p.sample("repro_pool_workers_busy", &[], g.pool_busy as f64);
+        p.header("repro_pool_tasks_pending", "gauge", "Jobs queued in the worker pool.");
+        p.sample("repro_pool_tasks_pending", &[], g.pool_pending as f64);
+        p.header("repro_jobs_total", "gauge", "Jobs by lifecycle state.");
+        for (state, n) in [
+            ("queued", g.counts.queued),
+            ("running", g.counts.running),
+            ("done", g.counts.done),
+            ("failed", g.counts.failed),
+            ("cancelled", g.counts.cancelled),
+        ] {
+            p.sample("repro_jobs_total", &[("state", state)], n as f64);
+        }
+        p.header(
+            "repro_request_latency_seconds",
+            "histogram",
+            "Request handling latency by op.",
+        );
+        for (name, h) in OP_NAMES.iter().zip(self.op_lat.iter()) {
+            let h = h.snapshot();
+            if !h.is_empty() {
+                p.histogram_ns("repro_request_latency_seconds", &[("op", *name)], &h);
+            }
+        }
+        let rollup = self.registry.rollup();
+        p.header("repro_policy_jobs_total", "counter", "Completed jobs touching each policy.");
+        for r in &rollup {
+            p.sample("repro_policy_jobs_total", &[("policy", r.policy.name())], r.jobs as f64);
+        }
+        p.header(
+            "repro_policy_backward_flops_total",
+            "counter",
+            "Backward weight-gradient FLOPs actually spent, by policy.",
+        );
+        for r in &rollup {
+            p.sample(
+                "repro_policy_backward_flops_total",
+                &[("policy", r.policy.name())],
+                r.backward_flops as f64,
+            );
+        }
+        p.header(
+            "repro_policy_exact_flops_total",
+            "counter",
+            "What exact back-propagation would have spent, by policy.",
+        );
+        for r in &rollup {
+            p.sample(
+                "repro_policy_exact_flops_total",
+                &[("policy", r.policy.name())],
+                r.exact_flops as f64,
+            );
+        }
+        p.header(
+            "repro_policy_saved_ratio",
+            "gauge",
+            "Fraction of exact backward FLOPs saved, by policy.",
+        );
+        for r in &rollup {
+            p.sample("repro_policy_saved_ratio", &[("policy", r.policy.name())], r.saved_frac());
+        }
+        p.finish()
+    }
+}
+
+/// One consistent read of the scalar gauges shared by all three
+/// `metrics` renderings.
+struct Gauges {
+    uptime: f64,
+    requests_total: u64,
+    queue_depth: usize,
+    slots_total: usize,
+    slots_busy: usize,
+    slots_free: usize,
+    utilization: f64,
+    pool_busy: usize,
+    pool_pending: usize,
+    jobs_per_sec: f64,
+    counts: crate::serve::registry::StateCounts,
 }
 
 /// Convenience used by the TCP layer: format a protocol-level read error
@@ -351,6 +610,118 @@ mod tests {
         assert!(is_ok(&m));
         assert_eq!(m.get("slots_total").unwrap().as_usize().unwrap(), 2);
         assert_eq!(m.get("slots_free").unwrap().as_usize().unwrap(), 2);
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn per_op_accounting_and_metric_formats() {
+        let st = state();
+        // a known request mix: 3 pings, 1 unparseable frame, 1 bad-id
+        // status (parses fine — counts as a status op, not an error)
+        for _ in 0..3 {
+            assert!(is_ok(&st.handle(&json::obj(vec![("op", json::s("ping"))]))));
+        }
+        assert!(!is_ok(&st.handle(&json::obj(vec![("op", json::s("explode"))]))));
+        assert!(!is_ok(&st.handle(&json::obj(vec![
+            ("op", json::s("status")),
+            ("id", json::num(404.0)),
+        ]))));
+
+        // full JSON: the metrics request records itself before rendering,
+        // so op counts sum exactly to requests_total
+        let m = st.handle(&json::obj(vec![("op", json::s("metrics"))]));
+        assert!(is_ok(&m), "{}", m.dump());
+        let total = m.get("requests_total").unwrap().as_usize().unwrap();
+        assert_eq!(total, 6);
+        let ops = m.get("ops").unwrap().as_arr().unwrap();
+        let count_of = |name: &str| {
+            ops.iter()
+                .find(|o| o.get("op").unwrap().as_str().unwrap() == name)
+                .map(|o| o.get("count").unwrap().as_usize().unwrap())
+                .unwrap_or(0)
+        };
+        assert_eq!(count_of("ping"), 3);
+        assert_eq!(count_of("error"), 1);
+        assert_eq!(count_of("status"), 1);
+        assert_eq!(count_of("metrics"), 1);
+        let sum: usize = ops
+            .iter()
+            .map(|o| o.get("count").unwrap().as_usize().unwrap())
+            .sum();
+        assert_eq!(sum, total);
+        assert_eq!(m.get("slots_busy").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(m.get("utilization").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(
+            m.get("pool").unwrap().get("tasks_pending").unwrap().as_usize().unwrap(),
+            0
+        );
+
+        // compact: gauges only
+        let c = st.handle(&json::obj(vec![
+            ("op", json::s("metrics")),
+            ("format", json::s("compact")),
+        ]));
+        assert!(is_ok(&c), "{}", c.dump());
+        assert!(c.get("ops").is_none());
+        assert!(c.get("policies").is_none());
+        assert!(c.get("pool").is_none());
+        assert_eq!(c.get("requests_total").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(c.get("slots_total").unwrap().as_usize().unwrap(), 2);
+
+        // prometheus: text exposition in the envelope
+        let pr = st.handle(&json::obj(vec![
+            ("op", json::s("metrics")),
+            ("format", json::s("prometheus")),
+        ]));
+        assert!(is_ok(&pr), "{}", pr.dump());
+        assert_eq!(pr.get("format").unwrap().as_str().unwrap(), "prometheus");
+        let text = pr.get("text").unwrap().as_str().unwrap();
+        assert!(text.contains("# TYPE repro_requests_total counter\n"), "{text}");
+        assert!(text.contains("repro_requests_total 8\n"), "{text}");
+        assert!(text.contains("repro_slots_total 2\n"), "{text}");
+        assert!(text.contains("repro_jobs_total{state=\"done\"} 0\n"), "{text}");
+        assert!(
+            text.contains("repro_request_latency_seconds_count{op=\"ping\"} 3\n"),
+            "{text}"
+        );
+        // histogram family is complete: buckets end at +Inf with the count
+        assert!(
+            text.contains("repro_request_latency_seconds_bucket{op=\"ping\",le=\"+Inf\"} 3\n"),
+            "{text}"
+        );
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn compact_status_and_list_drop_the_config_echo() {
+        let st = state();
+        let resp = st.handle(&submit_req(9));
+        let id = resp.get("id").unwrap().as_f64().unwrap() as u64;
+        wait_done(&st, id);
+        let full = st.handle(&json::obj(vec![
+            ("op", json::s("status")),
+            ("id", json::num(id as f64)),
+        ]));
+        let job = full.get("job").unwrap();
+        assert!(job.get("layers").is_some());
+        assert!(job.get("phases").map(|p| !matches!(p, Json::Null)).unwrap_or(false));
+        let compact = st.handle(&json::obj(vec![
+            ("op", json::s("status")),
+            ("id", json::num(id as f64)),
+            ("compact", Json::Bool(true)),
+        ]));
+        let job = compact.get("job").unwrap();
+        assert!(job.get("layers").is_none());
+        assert!(job.get("phases").is_none());
+        assert_eq!(job.get("state").unwrap().as_str().unwrap(), "done");
+        assert_eq!(job.get("epochs_done").unwrap().as_usize().unwrap(), 2);
+        let list = st.handle(&json::obj(vec![
+            ("op", json::s("list")),
+            ("compact", Json::Bool(true)),
+        ]));
+        let jobs = list.get("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert!(jobs[0].get("layers").is_none());
         st.scheduler.shutdown();
     }
 

@@ -8,11 +8,11 @@
 //! |------------|-----------------------------|------------------------------------|
 //! | `submit`   | `config` (experiment JSON), | `id` — job id                      |
 //! |            | `tag` (optional)            |                                    |
-//! | `status`   | `id`                        | `job` — job view                   |
+//! | `status`   | `id`, `compact` (optional)  | `job` — job view                   |
 //! | `result`   | `id`                        | `job`, `config`, `curve`           |
-//! | `list`     | —                           | `jobs` — array of job views        |
+//! | `list`     | `compact` (optional)        | `jobs` — array of job views        |
 //! | `cancel`   | `id`                        | `state` — `cancelled`/`cancelling` |
-//! | `metrics`  | —                           | queue/job/FLOP metrics             |
+//! | `metrics`  | `format` (optional)         | queue/job/FLOP/latency metrics     |
 //! | `ping`     | —                           | `protocol`, `uptime_s`             |
 //! | `shutdown` | —                           | `state: shutting-down`             |
 //!
@@ -50,6 +50,21 @@
 //! min_frac outside [0, 1], zero budgets) are rejected at submit with an
 //! `ok:false` protocol error.
 //!
+//! Protocol v5 is the observability surface (`obs` subsystem). `status`
+//! and `list` accept an optional `compact: true` flag returning only the
+//! fields pollers watch (id/tag/state/epochs/error/cancel) — no config
+//! echo, resolved layer plan, or phase rollup. Full job views of
+//! finished jobs carry a `phases` object (per-phase count/total-ns/
+//! p50/p99 plus per-layer realized-K and backward-FLOP sums; `null`
+//! until done and for jobs restored from disk). `metrics` accepts
+//! `format`: `"json"` (default, the full v2+ object extended with
+//! `slots_busy`, `utilization`, pool gauges and a per-op `ops` block),
+//! `"compact"` (the handful of gauges pollers scrape, no policy
+//! rollups or op histograms), or `"prometheus"` (text exposition in
+//! the response's `text` field — metric names are a stability promise,
+//! see README §Observability). Older frames remain accepted and mean
+//! the non-compact JSON forms.
+//!
 //! [`Client`] is a small blocking client used by `examples/serve_client.rs`
 //! and the integration tests.
 
@@ -69,18 +84,46 @@ use crate::util::json::{self, Json};
 /// (`config.layers`), resolved per-layer config in job views, and
 /// per-layer `k_effective`/FLOPs in curve epochs. v4: `k` fields accept
 /// K-schedule strings (numbers still mean constants) and job views echo
-/// resolved `k_first`/`k_last` per layer. Older frames remain accepted.
-pub const PROTOCOL_VERSION: u64 = 4;
+/// resolved `k_first`/`k_last` per layer. v5: observability — `compact`
+/// views on `status`/`list`, `phases` rollups in full job views, and
+/// `metrics` format selection (json/compact/prometheus) with per-op
+/// latency histograms. Older frames remain accepted.
+pub const PROTOCOL_VERSION: u64 = 5;
+
+/// Rendering of the `metrics` response (protocol v5 `format` field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MetricsFormat {
+    /// Full JSON object (the historical shape, extended).
+    #[default]
+    Json,
+    /// Only the gauges pollers scrape — no rollups or op histograms.
+    Compact,
+    /// Prometheus text exposition carried in the `text` field.
+    Prometheus,
+}
+
+impl MetricsFormat {
+    pub fn parse(name: &str) -> Result<MetricsFormat> {
+        match name {
+            "json" => Ok(MetricsFormat::Json),
+            "compact" => Ok(MetricsFormat::Compact),
+            "prometheus" => Ok(MetricsFormat::Prometheus),
+            other => bail!(
+                "unknown metrics format '{other}' (expected json, compact or prometheus)"
+            ),
+        }
+    }
+}
 
 /// A parsed client request.
 #[derive(Debug, Clone)]
 pub enum Request {
     Submit { config: ExperimentConfig, tag: String },
-    Status { id: u64 },
+    Status { id: u64, compact: bool },
     Result { id: u64 },
-    List,
+    List { compact: bool },
     Cancel { id: u64 },
-    Metrics,
+    Metrics { format: MetricsFormat },
     Ping,
     Shutdown,
 }
@@ -100,6 +143,8 @@ impl Request {
                 .map(|n| n as u64)
                 .ok_or_else(|| anyhow!("op '{op}' requires an integer 'id' field"))
         };
+        // v5 optional flags; absent fields mean the historical forms
+        let compact = || v.get("compact").and_then(|b| b.as_bool()).unwrap_or(false);
         Ok(match op {
             "submit" => {
                 let cfg = v
@@ -114,11 +159,17 @@ impl Request {
                     .to_string();
                 Request::Submit { config, tag }
             }
-            "status" => Request::Status { id: id()? },
+            "status" => Request::Status { id: id()?, compact: compact() },
             "result" => Request::Result { id: id()? },
-            "list" => Request::List,
+            "list" => Request::List { compact: compact() },
             "cancel" => Request::Cancel { id: id()? },
-            "metrics" => Request::Metrics,
+            "metrics" => {
+                let format = match v.get("format").and_then(|f| f.as_str()) {
+                    Some(name) => MetricsFormat::parse(name)?,
+                    None => MetricsFormat::Json,
+                };
+                Request::Metrics { format }
+            }
             "ping" => Request::Ping,
             "shutdown" => Request::Shutdown,
             other => bail!(
@@ -238,6 +289,19 @@ impl Client {
             .ok_or_else(|| anyhow!("status response missing 'job'"))
     }
 
+    /// Compact job view (protocol v5): only the polled fields.
+    pub fn status_compact(&mut self, id: u64) -> Result<Json> {
+        let req = json::obj(vec![
+            ("op", json::s("status")),
+            ("id", json::num(id as f64)),
+            ("compact", Json::Bool(true)),
+        ]);
+        let resp = self.call_ok(&req)?;
+        resp.get("job")
+            .cloned()
+            .ok_or_else(|| anyhow!("status response missing 'job'"))
+    }
+
     /// Poll until the job reaches a terminal state; returns the final view.
     pub fn wait(&mut self, id: u64, timeout: Duration) -> Result<Json> {
         let deadline = Instant::now() + timeout;
@@ -300,6 +364,27 @@ impl Client {
         self.call_ok(&json::obj(vec![("op", json::s("metrics"))]))
     }
 
+    /// Compact metrics snapshot (protocol v5): gauges only.
+    pub fn metrics_compact(&mut self) -> Result<Json> {
+        self.call_ok(&json::obj(vec![
+            ("op", json::s("metrics")),
+            ("format", json::s("compact")),
+        ]))
+    }
+
+    /// Prometheus text exposition (protocol v5): the rendered scrape
+    /// body carried in the response's `text` field.
+    pub fn metrics_prometheus(&mut self) -> Result<String> {
+        let resp = self.call_ok(&json::obj(vec![
+            ("op", json::s("metrics")),
+            ("format", json::s("prometheus")),
+        ]))?;
+        resp.get("text")
+            .and_then(|t| t.as_str())
+            .map(|t| t.to_string())
+            .ok_or_else(|| anyhow!("prometheus metrics response missing 'text'"))
+    }
+
     /// Ask the server to shut down gracefully.
     pub fn shutdown(&mut self) -> Result<()> {
         self.call_ok(&json::obj(vec![("op", json::s("shutdown"))]))?;
@@ -345,6 +430,46 @@ mod tests {
                 "op {op} failed"
             );
         }
+    }
+
+    #[test]
+    fn parses_v5_observability_fields() {
+        // absent flags mean the historical forms
+        let st = json::obj(vec![("op", json::s("status")), ("id", json::num(1.0))]);
+        assert!(matches!(
+            Request::from_json(&st).unwrap(),
+            Request::Status { compact: false, .. }
+        ));
+        let st = json::obj(vec![
+            ("op", json::s("status")),
+            ("id", json::num(1.0)),
+            ("compact", Json::Bool(true)),
+        ]);
+        assert!(matches!(
+            Request::from_json(&st).unwrap(),
+            Request::Status { id: 1, compact: true }
+        ));
+        let ls = json::obj(vec![("op", json::s("list")), ("compact", Json::Bool(true))]);
+        assert!(matches!(Request::from_json(&ls).unwrap(), Request::List { compact: true }));
+        for (name, want) in [
+            ("json", MetricsFormat::Json),
+            ("compact", MetricsFormat::Compact),
+            ("prometheus", MetricsFormat::Prometheus),
+        ] {
+            let m = json::obj(vec![("op", json::s("metrics")), ("format", json::s(name))]);
+            match Request::from_json(&m).unwrap() {
+                Request::Metrics { format } => assert_eq!(format, want),
+                other => panic!("{other:?}"),
+            }
+        }
+        assert!(matches!(
+            Request::from_json(&json::obj(vec![("op", json::s("metrics"))])).unwrap(),
+            Request::Metrics { format: MetricsFormat::Json }
+        ));
+        // unknown formats are protocol errors, not silently defaulted
+        let bad = json::obj(vec![("op", json::s("metrics")), ("format", json::s("xml"))]);
+        let err = Request::from_json(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown metrics format"), "{err:#}");
     }
 
     #[test]

@@ -158,6 +158,25 @@ impl Scheduler {
         self.shared.slots.lock().unwrap().free
     }
 
+    /// Slots held by running jobs (`slots_total - slots_free`; a
+    /// `threads = t` job holds `t`, so this counts **slots**, not jobs —
+    /// the honest utilization numerator under multi-thread jobs).
+    pub fn slots_busy(&self) -> usize {
+        let st = self.shared.slots.lock().unwrap();
+        self.shared.slots_total.saturating_sub(st.free)
+    }
+
+    /// Pool workers currently driving a job (obs gauge; each running job
+    /// occupies one pool worker regardless of its `threads`).
+    pub fn pool_busy(&self) -> usize {
+        self.pool.busy()
+    }
+
+    /// Jobs queued in the pool but not yet picked up by a worker.
+    pub fn pool_pending(&self) -> usize {
+        self.pool.pending()
+    }
+
     /// Graceful shutdown: refuse new submissions, drain every queued job,
     /// join the workers. Idempotent.
     pub fn shutdown(&self) {

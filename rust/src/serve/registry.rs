@@ -20,6 +20,7 @@ use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::experiment::RunResult;
 use crate::metrics::RunCurve;
+use crate::obs::PhaseRollup;
 use crate::util::json::{self, Json};
 
 /// Lifecycle state of one job.
@@ -56,6 +57,9 @@ struct Job {
     epochs_done: usize,
     error: Option<String>,
     curve: Option<RunCurve>,
+    /// Per-phase telemetry rollup from the finished run (protocol v5).
+    /// In-memory only — not persisted, so restored jobs carry `None`.
+    phases: Option<PhaseRollup>,
     cancel: Arc<AtomicBool>,
     restored: bool,
 }
@@ -72,6 +76,9 @@ pub struct JobView {
     pub cancel_requested: bool,
     pub restored: bool,
     pub config: ExperimentConfig,
+    /// Phase-timing rollup of the finished run (protocol v5; `None`
+    /// while the job is pending and for restored jobs).
+    pub phases: Option<PhaseRollup>,
 }
 
 impl JobView {
@@ -116,6 +123,35 @@ impl JobView {
             ("epochs_total", json::num(self.epochs_total as f64)),
             ("cancel_requested", Json::Bool(self.cancel_requested)),
             ("restored", Json::Bool(self.restored)),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => json::s(e),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "phases",
+                match &self.phases {
+                    Some(p) => p.to_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Compact snapshot (protocol v5 `compact: true`): only the fields
+    /// pollers actually watch — no config echo, no resolved layer plan,
+    /// no phase rollup. Cuts the per-poll frame to a fraction of the
+    /// full view for clients driving progress bars.
+    pub fn to_json_compact(&self) -> Json {
+        json::obj(vec![
+            ("id", json::num(self.id as f64)),
+            ("tag", json::s(&self.tag)),
+            ("state", json::s(self.state.name())),
+            ("epochs_done", json::num(self.epochs_done as f64)),
+            ("epochs_total", json::num(self.epochs_total as f64)),
+            ("cancel_requested", Json::Bool(self.cancel_requested)),
             (
                 "error",
                 match &self.error {
@@ -220,6 +256,7 @@ impl Registry {
             epochs_done: 0,
             error: None,
             curve: None,
+            phases: None,
             cancel: Arc::new(AtomicBool::new(false)),
             restored: false,
         };
@@ -288,6 +325,7 @@ impl Registry {
             job.state = JobState::Done;
             job.epochs_done = r.curve.epochs.len();
             job.curve = Some(r.curve.clone());
+            job.phases = r.phases.clone();
             job.error = None;
             self.dir
                 .as_ref()
@@ -316,6 +354,7 @@ impl Registry {
             if let Some(r) = partial {
                 job.epochs_done = r.curve.epochs.len();
                 job.curve = Some(r.curve.clone());
+                job.phases = r.phases.clone();
             }
         }
     }
@@ -453,6 +492,7 @@ fn view_of(id: u64, j: &Job) -> JobView {
         cancel_requested: j.cancel.load(Ordering::Relaxed),
         restored: j.restored,
         config: j.config.clone(),
+        phases: j.phases.clone(),
     }
 }
 
@@ -500,6 +540,7 @@ fn load_job_file(path: &Path) -> Result<Job> {
         epochs_done: curve.epochs.len(),
         error: None,
         curve: Some(curve),
+        phases: None,
         cancel: Arc::new(AtomicBool::new(false)),
         restored: true,
     })
@@ -542,6 +583,33 @@ mod tests {
         assert_eq!(reg.counts().done, 1);
         // terminal jobs can't be cancelled
         assert!(reg.cancel(id).is_err());
+    }
+
+    #[test]
+    fn finished_jobs_carry_phase_rollups_and_compact_views_drop_them() {
+        let reg = Registry::new(None).unwrap();
+        let id = reg.submit(quick_cfg(2), "obs");
+        let (cfg, _) = reg.mark_running(id).unwrap();
+        let r = experiment::run(&cfg).unwrap();
+        assert!(r.phases.is_some(), "native runs record telemetry by default");
+        reg.finish_ok(id, &r);
+        let v = reg.view(id).unwrap();
+        let roll = v.phases.as_ref().expect("done job keeps its rollup");
+        assert!(roll.steps > 0);
+        assert_eq!(roll.layers.len(), 1);
+        assert!(roll.layers[0].k_sum > 0);
+        // full view renders the rollup; compact view drops it along
+        // with the config echo and layer plan
+        let full = v.to_json();
+        assert!(full.get("phases").map(|p| !matches!(p, Json::Null)).unwrap_or(false));
+        assert!(full.get("layers").is_some());
+        let compact = v.to_json_compact();
+        assert!(compact.get("phases").is_none());
+        assert!(compact.get("layers").is_none());
+        assert!(compact.get("label").is_none());
+        assert_eq!(compact.get("id").unwrap().as_usize().unwrap(), id as usize);
+        assert_eq!(compact.get("state").unwrap().as_str().unwrap(), "done");
+        assert_eq!(compact.get("epochs_done").unwrap().as_usize().unwrap(), 3);
     }
 
     #[test]

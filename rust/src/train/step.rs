@@ -37,11 +37,13 @@
 //! bit-identical at every thread count, for every activation × policy ×
 //! per-layer-K combination, whether the workspace is fresh or reused.
 
+use crate::aop::flops;
 use crate::aop::policy::{self, Policy, SelectScratch, Selection};
 use crate::exec::plan::ShardPlan;
 use crate::exec::{shard, Executor};
 use crate::model::activations::Activation;
 use crate::model::loss::correct_rows;
+use crate::obs::Phase;
 use crate::tensor::{ops, rng::Rng, Matrix};
 
 use crate::train::graph::{Graph, GraphState};
@@ -90,6 +92,10 @@ pub fn fwd_score(
     let n_shards = plan.len();
     debug_assert_eq!(n_shards, ws.n_shards, "plan vs workspace shard count");
     let se = eta.sqrt();
+    // obs (ISSUE 6): timers read clocks but never feed execution, so
+    // curves stay bit-identical with telemetry on or off; `start` is
+    // None (no clock read) when disabled
+    let t_fwd = ws.obs.start();
 
     // Forward trace: acts[i] = act_i(acts[i-1] W_i + b_i). The input
     // batch stays borrowed (never cloned), and pre-activations are not
@@ -153,6 +159,8 @@ pub fn fwd_score(
     }
     let loss = graph.loss.finish_loss(loss_total, m, p_out);
     let acc = correct as f32 / m as f32;
+    ws.obs.finish(Phase::Fwd, t_fwd);
+    let t_score = ws.obs.start();
 
     // Backward sweep: per-layer fold/scores/db, then chain G down with
     // the pre-update weights (eq. (2a)).
@@ -225,6 +233,7 @@ pub fn fwd_score(
             });
         }
     }
+    ws.obs.finish(Phase::Score, t_score);
     ws.fwd = Some((loss, acc));
     (loss, acc)
 }
@@ -280,6 +289,7 @@ pub fn select_with_configs(
 pub fn select_layers_ws(state: &GraphState, ws: &mut GraphWorkspace, rng: &mut Rng) {
     let n = state.layers.len();
     assert_eq!(ws.sels.len(), n, "workspace selections vs layers");
+    let t_sel = ws.obs.start();
     for i in (0..n).rev() {
         select_one_into(
             &state.layers[i].cfg,
@@ -289,6 +299,7 @@ pub fn select_layers_ws(state: &GraphState, ws: &mut GraphWorkspace, rng: &mut R
             &mut ws.sels[i],
         );
     }
+    ws.obs.finish(Phase::Select, t_sel);
 }
 
 /// Phase 2: apply the per-layer selections — AOP weight update, exact
@@ -312,6 +323,7 @@ pub fn apply(
     let m = ws.batch;
     let plan = exec.plan(m);
     debug_assert_eq!(plan.len(), ws.n_shards, "plan vs workspace shard count");
+    let t_apply = ws.obs.start();
     let mut fro_sq = 0.0f64;
     let mut k_total = 0usize;
     ws.layer_k.clear();
@@ -347,9 +359,17 @@ pub fn apply(
                 shard::keep_rows(ghat, &sel.keep, rows, mg);
             });
         }
-        ws.layer_k.push(sel.k_effective());
-        k_total += sel.k_effective();
+        let k = sel.k_effective();
+        ws.layer_k.push(k);
+        k_total += k;
+        // realized-budget counters — FLOPs computed only when enabled
+        if ws.obs.enabled() {
+            let bf = flops::aop_step(m, nf, pf, k).backward_only();
+            ws.obs.record_layer(i, k, bf);
+        }
     }
+    ws.obs.finish(Phase::Apply, t_apply);
+    ws.obs.record_step();
     StepOutcome {
         loss,
         acc,
@@ -379,6 +399,7 @@ fn reduce_wstar_into_ws(
     let n_shards = plan.len();
     let (la, lb) = ops::aop_layout(nf, pf);
     let shard_rows = ShardPlan::with_granularity(n_shards, 1);
+    let t_disp = ws.obs.start();
     {
         let xhat = &ws.xhat[li];
         let ghat = &ws.ghat[li];
@@ -401,23 +422,28 @@ fn reduce_wstar_into_ws(
             }
         });
     }
-    let wstar = &mut ws.wstar[li];
-    wstar.data_mut().fill(0.0);
-    let parts = ws.wstar_parts[li].data();
-    for si in 0..n_shards {
-        if compact {
-            let rows = plan.range(si);
-            let lo = sel.indices.partition_point(|&r| r < rows.start);
-            let hi = sel.indices.partition_point(|&r| r < rows.end);
-            if lo == hi {
-                continue;
+    ws.obs.finish(Phase::Dispatch, t_disp);
+    let t_red = ws.obs.start();
+    {
+        let wstar = &mut ws.wstar[li];
+        wstar.data_mut().fill(0.0);
+        let parts = ws.wstar_parts[li].data();
+        for si in 0..n_shards {
+            if compact {
+                let rows = plan.range(si);
+                let lo = sel.indices.partition_point(|&r| r < rows.start);
+                let hi = sel.indices.partition_point(|&r| r < rows.end);
+                if lo == hi {
+                    continue;
+                }
+            }
+            let part = &parts[si * la * lb..(si + 1) * la * lb];
+            for (o, &v) in wstar.data_mut().iter_mut().zip(part.iter()) {
+                *o += v;
             }
         }
-        let part = &parts[si * la * lb..(si + 1) * la * lb];
-        for (o, &v) in wstar.data_mut().iter_mut().zip(part.iter()) {
-            *o += v;
-        }
     }
+    ws.obs.finish(Phase::Reduce, t_red);
 }
 
 /// One layer's reduced AOP weight gradient `Ŵ*` as an owned `n × p`
@@ -592,6 +618,50 @@ mod tests {
             assert_eq!(la.w.data(), lb.w.data());
             assert_eq!(la.b, lb.b);
         }
+    }
+
+    #[test]
+    fn obs_on_step_is_bit_identical_and_records_phases() {
+        use crate::obs::ObsConfig;
+        let mut mk = || {
+            let mut rng = Rng::new(21);
+            let g = Graph::relu_mlp(&mut rng, &[6, 9, 3], LossKind::Mse);
+            let st = GraphState::uniform(&g, 16, Policy::TopK, 5, true);
+            (g, st)
+        };
+        let mut rng = Rng::new(6);
+        let (x, y) = toy_data(&mut rng, 16, 6, 3);
+        let exec = Executor::serial();
+        let (mut ga, mut sta) = mk();
+        let (mut gb, mut stb) = mk();
+        let mut ra = Rng::new(44);
+        let mut rb = Rng::new(44);
+        let mut wa = GraphWorkspace::with_obs(&ga, 16, ObsConfig::on());
+        let mut wb = GraphWorkspace::new(&gb, 16);
+        for _ in 0..5 {
+            let a = train_step_ws(&mut ga, &mut sta, &x, &y, 0.05, &mut ra, &exec, true, &mut wa);
+            let b = train_step_ws(&mut gb, &mut stb, &x, &y, 0.05, &mut rb, &exec, true, &mut wb);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.wstar_fro.to_bits(), b.wstar_fro.to_bits());
+        }
+        for (la, lb) in ga.layers.iter().zip(gb.layers.iter()) {
+            assert_eq!(la.w.data(), lb.w.data(), "obs must never change the math");
+            assert_eq!(la.b, lb.b);
+        }
+        let t = wa.obs();
+        assert_eq!(t.steps(), 5);
+        for p in [Phase::Fwd, Phase::Score, Phase::Select, Phase::Apply] {
+            assert_eq!(t.phase(p).count(), 5, "{}", p.name());
+        }
+        // dispatch/reduce fire once per layer per step (nested in apply)
+        assert_eq!(t.phase(Phase::Dispatch).count(), 10);
+        assert_eq!(t.phase(Phase::Reduce).count(), 10);
+        assert_eq!(t.layer_k_sum(), &[25, 25], "k=5 × 5 steps per layer");
+        assert!(t.layer_flops().iter().all(|&f| f > 0));
+        assert_eq!(t.trace().total(), 5 * (4 + 2 * 2) as u64);
+        // and the obs-off workspace recorded nothing
+        assert_eq!(wb.obs().steps(), 0);
+        assert!(wb.obs().phase(Phase::Fwd).is_empty());
     }
 
     #[test]

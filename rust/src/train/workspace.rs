@@ -35,6 +35,7 @@ use std::sync::Mutex;
 
 use crate::aop::policy::{SelectScratch, Selection};
 use crate::exec::plan::ShardPlan;
+use crate::obs::{ObsConfig, StepTelemetry};
 use crate::tensor::{ops, Matrix};
 use crate::train::graph::Graph;
 
@@ -83,11 +84,25 @@ pub struct GraphWorkspace {
     /// Set by `fwd_score` (loss, acc), consumed by `apply` — the pairing
     /// guard behind the "apply called without fwd_score" panic.
     pub(crate) fwd: Option<(f32, f32)>,
+
+    /// Step telemetry (ISSUE 6): per-phase timing histograms, per-layer
+    /// realized-K/FLOP counters and the bounded event trace — pre-sized
+    /// here so recording on the hot path allocates nothing. Off by
+    /// default for raw workspaces; `NativeTrainer` turns it on.
+    pub(crate) obs: StepTelemetry,
 }
 
 impl GraphWorkspace {
-    /// Allocate every buffer for `graph` at `batch` rows.
+    /// Allocate every buffer for `graph` at `batch` rows, telemetry off
+    /// (no timer reads on the step path).
     pub fn new(graph: &Graph, batch: usize) -> GraphWorkspace {
+        GraphWorkspace::with_obs(graph, batch, ObsConfig::off())
+    }
+
+    /// [`GraphWorkspace::new`] with an explicit [`ObsConfig`] — the
+    /// telemetry's histograms, counters and trace ring are sized here,
+    /// up front, so enabled telemetry stays zero-allocation per step.
+    pub fn with_obs(graph: &Graph, batch: usize, obs: ObsConfig) -> GraphWorkspace {
         assert!(batch > 0, "workspace needs a non-empty batch");
         let widths = graph.widths();
         let n = graph.layers.len();
@@ -140,6 +155,7 @@ impl GraphWorkspace {
             scratch: SelectScratch::with_capacity(batch),
             layer_k: Vec::with_capacity(n),
             fwd: None,
+            obs: StepTelemetry::new(obs, n),
             widths,
         }
     }
@@ -160,10 +176,12 @@ impl GraphWorkspace {
     }
 
     /// Re-key (reallocate everything) iff the key changed — a cheap
-    /// width-chain comparison in steady state.
+    /// width-chain comparison in steady state. The obs *configuration*
+    /// survives a re-key (the telemetry buffers are rebuilt for the new
+    /// layer count, resetting recorded data like every other buffer).
     pub fn ensure(&mut self, graph: &Graph, batch: usize) {
         if !self.matches(graph, batch) {
-            *self = GraphWorkspace::new(graph, batch);
+            *self = GraphWorkspace::with_obs(graph, batch, self.obs.config());
         }
     }
 
@@ -201,6 +219,24 @@ impl GraphWorkspace {
     /// The per-layer selections drawn by the last `select_layers_ws`.
     pub fn selections(&self) -> &[Selection] {
         &self.sels
+    }
+
+    /// The step telemetry handle (histograms, counters, trace).
+    pub fn obs(&self) -> &StepTelemetry {
+        &self.obs
+    }
+
+    /// Mutable telemetry handle (external phase recording).
+    pub fn obs_mut(&mut self) -> &mut StepTelemetry {
+        &mut self.obs
+    }
+
+    /// Reconfigure telemetry in place. A config-time operation: rebuilds
+    /// the telemetry buffers (allocates) and resets recorded data —
+    /// never call mid-step.
+    pub fn set_obs(&mut self, cfg: ObsConfig) {
+        let n = self.widths.len() - 1;
+        self.obs = StepTelemetry::new(cfg, n);
     }
 
     /// Move the selection vector out (so `apply` can borrow the
@@ -260,6 +296,21 @@ mod tests {
         assert!(ops::aop_transposed(784, 10));
         assert_eq!(ws.wstar[0].shape(), (10, 784));
         assert_eq!(ws.wstar_parts[0].shape(), (4 * 10, 784));
+    }
+
+    #[test]
+    fn obs_config_survives_ensure_rekey() {
+        let mut rng = Rng::new(3);
+        let g = Graph::relu_mlp(&mut rng, &[6, 10, 3], LossKind::Mse);
+        let mut ws = GraphWorkspace::with_obs(&g, 32, ObsConfig::with_trace_capacity(16));
+        assert!(ws.obs().enabled());
+        ws.ensure(&g, 48); // re-key: buffers rebuilt, config preserved
+        assert!(ws.obs().enabled(), "obs config must survive a re-key");
+        assert_eq!(ws.obs().config().trace_capacity, 16);
+        ws.set_obs(ObsConfig::off());
+        assert!(!ws.obs().enabled());
+        // plain construction defaults to off (no timer reads)
+        assert!(!GraphWorkspace::new(&g, 16).obs().enabled());
     }
 
     #[test]

@@ -86,6 +86,9 @@ struct TaskShared {
     queue: Mutex<VecDeque<Task>>,
     cv: Condvar,
     shutdown: AtomicBool,
+    /// Workers currently executing a task (obs gauge; relaxed — a
+    /// metrics scrape may be one task off, never wrong by more).
+    busy: AtomicUsize,
 }
 
 /// Long-lived FIFO worker pool: `workers` threads block on a condvar and
@@ -111,6 +114,7 @@ impl TaskPool {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            busy: AtomicUsize::new(0),
         });
         let handles = (0..workers)
             .map(|i| {
@@ -135,6 +139,11 @@ impl TaskPool {
     /// Tasks queued but not yet picked up by a worker.
     pub fn pending(&self) -> usize {
         self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Workers currently executing a task (`0..=workers`).
+    pub fn busy(&self) -> usize {
+        self.shared.busy.load(Ordering::Relaxed)
     }
 
     pub fn is_shutdown(&self) -> bool {
@@ -197,9 +206,11 @@ fn task_loop(sh: &TaskShared) {
         let Some(task) = task else { return };
         // AssertUnwindSafe: the task owns its captures; a panicked task's
         // state is discarded with it, nothing half-mutated is observed.
+        sh.busy.fetch_add(1, Ordering::Relaxed);
         if std::panic::catch_unwind(std::panic::AssertUnwindSafe(task)).is_err() {
             eprintln!("[pool] task panicked (worker continues)");
         }
+        sh.busy.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -258,6 +269,32 @@ mod tests {
         // post-shutdown submissions are refused
         assert!(!pool.submit(|| {}));
         assert!(pool.is_shutdown());
+    }
+
+    #[test]
+    fn task_pool_busy_gauge_tracks_running_tasks() {
+        let pool = TaskPool::new("busy", 2);
+        assert_eq!(pool.busy(), 0);
+        let release = Arc::new(AtomicBool::new(false));
+        let r = release.clone();
+        pool.submit(move || {
+            while !r.load(Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        });
+        // the gauge must reach 1 while the task is parked
+        let mut saw_busy = false;
+        for _ in 0..2000 {
+            if pool.busy() == 1 {
+                saw_busy = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(saw_busy, "busy gauge never observed the running task");
+        release.store(true, Ordering::Relaxed);
+        pool.shutdown();
+        assert_eq!(pool.busy(), 0);
     }
 
     #[test]

@@ -133,6 +133,132 @@ fn concurrent_jobs_across_policies_and_backends() {
 }
 
 #[test]
+fn concurrent_load_metrics_accounting_is_exact_and_monotone() {
+    // ISSUE 6 satellite: hammer the server from 8 concurrent clients
+    // with a known request mix, then read the per-op accounting. Each
+    // request records exactly one latency sample, so the op histogram
+    // totals must sum to `requests_total` exactly — even though the
+    // `wait` polls make the status count itself nondeterministic.
+    use mem_aop_gd::util::json::{self, Json};
+
+    let (addr, handle) = spawn_server(3, None);
+    const CLIENTS: usize = 8;
+    std::thread::scope(|scope| {
+        for i in 0..CLIENTS {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut c = Client::connect(&addr).expect("connect");
+                for _ in 0..3 {
+                    c.ping().expect("ping");
+                }
+                let id = c.submit(&native_cfg(i), &format!("load-{i}")).expect("submit");
+                let job = c.wait(id, Duration::from_secs(120)).expect("wait");
+                assert_eq!(job.get("state").and_then(|s| s.as_str()), Some("done"));
+                c.list().expect("list");
+            });
+        }
+    });
+
+    let mut c = Client::connect(&addr).expect("connect");
+    let m = c.metrics().expect("metrics");
+    let total = m.get("requests_total").and_then(|n| n.as_usize()).unwrap();
+    let op_count = |m: &Json, op: &str| -> usize {
+        m.get("ops")
+            .and_then(|a| a.as_arr())
+            .unwrap()
+            .iter()
+            .find(|o| o.get("op").and_then(|s| s.as_str()) == Some(op))
+            .and_then(|o| o.get("count"))
+            .and_then(|n| n.as_usize())
+            .unwrap_or(0)
+    };
+    // deterministic slices of the mix
+    assert_eq!(op_count(&m, "ping"), 3 * CLIENTS, "{}", m.dump());
+    assert_eq!(op_count(&m, "submit"), CLIENTS);
+    assert_eq!(op_count(&m, "list"), CLIENTS);
+    assert_eq!(op_count(&m, "error"), 0);
+    assert_eq!(op_count(&m, "metrics"), 1, "records itself before rendering");
+    // the accounting invariant: every request left exactly one sample
+    let sum: usize = m
+        .get("ops")
+        .and_then(|a| a.as_arr())
+        .unwrap()
+        .iter()
+        .map(|o| o.get("count").and_then(|n| n.as_usize()).unwrap())
+        .sum();
+    assert_eq!(sum, total, "op histogram totals must equal requests_total");
+    // the work itself is fully accounted: no dropped or stuck jobs
+    let jobs = m.get("jobs").expect("jobs block");
+    assert_eq!(jobs.get("done").and_then(|n| n.as_usize()), Some(CLIENTS));
+    assert_eq!(jobs.get("queued").and_then(|n| n.as_usize()), Some(0));
+    assert_eq!(jobs.get("running").and_then(|n| n.as_usize()), Some(0));
+    assert_eq!(m.get("queue_depth").and_then(|n| n.as_usize()), Some(0));
+    let pool = m.get("pool").expect("pool block");
+    assert_eq!(pool.get("workers_busy").and_then(|n| n.as_usize()), Some(0));
+    assert_eq!(pool.get("tasks_pending").and_then(|n| n.as_usize()), Some(0));
+
+    // counters are monotone across scrapes, and the second scrape sees
+    // the first one's sample
+    let m2 = c.metrics().expect("metrics again");
+    let total2 = m2.get("requests_total").and_then(|n| n.as_usize()).unwrap();
+    assert!(total2 > total);
+    assert_eq!(op_count(&m2, "metrics"), 2);
+    for op in ["ping", "submit", "status", "list"] {
+        assert!(op_count(&m2, op) >= op_count(&m, op), "{op} went backwards");
+    }
+
+    // Prometheus exposition round-trips through the wire format
+    let text = c.metrics_prometheus().expect("prometheus");
+    assert!(text.contains("# TYPE repro_requests_total counter"), "{text}");
+    assert!(text.contains("# TYPE repro_request_latency_seconds histogram"));
+    assert!(text.contains("repro_jobs_total{state=\"done\"} 8"), "{text}");
+    assert!(text.contains("{op=\"ping\""), "{text}");
+    assert!(text.contains("le=\"+Inf\""), "{text}");
+    assert!(text.contains("repro_slots_total"));
+    assert!(text.contains("repro_policy_jobs_total"));
+
+    // compact metrics: gauges only — no per-op, policy, or pool blocks
+    let mc = c.metrics_compact().expect("compact metrics");
+    assert!(mc.get("requests_total").is_some());
+    assert!(mc.get("ops").is_none(), "{}", mc.dump());
+    assert!(mc.get("policies").is_none());
+    assert!(mc.get("pool").is_none());
+
+    // compact job views: the polled fields without the config echo;
+    // the full view carries the per-job phase rollup (protocol v5)
+    let done_id = {
+        let listed = c.list().expect("list");
+        listed[0].get("id").and_then(|n| n.as_usize()).unwrap() as u64
+    };
+    let full = c.status(done_id).expect("status");
+    assert!(full.get("config").is_some());
+    let phases = full.get("phases").expect("done native job carries phases");
+    assert!(!matches!(phases, Json::Null), "{}", full.dump());
+    assert!(phases.get("steps").and_then(|n| n.as_usize()).unwrap() > 0);
+    let compact = c.status_compact(done_id).expect("compact status");
+    assert!(compact.get("config").is_none(), "{}", compact.dump());
+    assert!(compact.get("phases").is_none());
+    assert!(compact.get("layers").is_none());
+    assert_eq!(
+        compact.get("state").and_then(|s| s.as_str()),
+        Some("done"),
+        "compact view still answers the polling question"
+    );
+    // compact list drops the echo from every element
+    let resp = c
+        .call(&json::obj(vec![
+            ("op", json::s("list")),
+            ("compact", Json::Bool(true)),
+        ]))
+        .expect("compact list");
+    for v in resp.get("jobs").and_then(|a| a.as_arr()).unwrap() {
+        assert!(v.get("config").is_none(), "{}", v.dump());
+    }
+
+    shutdown(&addr, handle);
+}
+
+#[test]
 fn registry_survives_server_restart() {
     let dir = std::env::temp_dir().join(format!("memaop_serve_restart_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);

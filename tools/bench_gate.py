@@ -2,7 +2,7 @@
 """Bench trajectory recorder + regression gate (ROADMAP: BENCH trajectory).
 
 Run from the repo root after `cargo bench --bench kernels` has written
-BENCH_2.json / BENCH_3.json / BENCH_4.json:
+BENCH_2.json ... BENCH_6.json:
 
   * appends each record (stamped with UTC time + git rev + host) to
     `bench/history/BENCH_N.jsonl` — the committed machine-readable
@@ -28,7 +28,7 @@ import subprocess
 import sys
 import time
 
-RECORDS = ["BENCH_2.json", "BENCH_3.json", "BENCH_4.json", "BENCH_5.json"]
+RECORDS = ["BENCH_2.json", "BENCH_3.json", "BENCH_4.json", "BENCH_5.json", "BENCH_6.json"]
 # keys holding a {"rows_per_sec": ...} object we track
 SERIES = ["serial", "threads4"]
 REGRESSION_FRAC = 0.15
@@ -61,6 +61,8 @@ def main():
     rev = git_rev()
     stamp = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
     failures = []
+    compared = 0
+    recorded = 0
 
     for name in RECORDS:
         if not os.path.exists(name):
@@ -78,6 +80,7 @@ def main():
             continue
 
         entry = dict(record)
+        recorded += 1
         entry["_recorded_at"] = stamp
         entry["_git_rev"] = rev
         entry["_host"] = host
@@ -115,6 +118,7 @@ def main():
                 continue
             if base <= 0:
                 continue
+            compared += 1
             ratio = cur / base
             verdict = "ok"
             if ratio < 1.0 - REGRESSION_FRAC:
@@ -133,6 +137,21 @@ def main():
             print(f"[bench-gate] FAILED: {msg}")
             print("[bench-gate] (set BENCH_NO_GATE=1 to record without gating)")
             sys.exit(1)
+    if recorded and compared == 0:
+        # freshly-initialized (or series-less) baselines mean this run
+        # gated NOTHING — say so loudly instead of printing a quiet
+        # success that reads like a passed regression check
+        print("[bench-gate] " + "!" * 64)
+        print(
+            f"[bench-gate] !! NO BASELINE COMPARISONS RAN on host '{host}': "
+            f"{recorded} record(s) written, 0 series gated."
+        )
+        print(
+            "[bench-gate] !! This run initialized baselines only — commit the "
+            "generated bench/ directory to pin this box's trajectory, or "
+            "every future run keeps passing vacuously."
+        )
+        print("[bench-gate] " + "!" * 64)
     print("[bench-gate] trajectory recorded")
 
 
