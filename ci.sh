@@ -103,6 +103,72 @@ EOF
   wait "$SERVE_PID"
 fi
 
+# Gradient-fidelity smoke (PR 7): one audited run through the real CLI —
+# the per-layer cosine/rel-err/mem-bias table must render with finite
+# values — and one live `watch` subscriber against `repro serve`
+# receiving at least one streamed epoch frame with audit records.
+if [ "$fast" -eq 0 ] && command -v python3 >/dev/null 2>&1; then
+  echo "==> audit smoke: repro audit (gradient-fidelity table)"
+  mkdir -p results
+  ./target/release/repro audit --task energy --policy topk --k 18 \
+    --epochs 2 --every every:1 --threads 2 | tee results/audit_ci.txt
+  grep -q "gradient fidelity" results/audit_ci.txt
+  grep -q "mem bias" results/audit_ci.txt
+
+  echo "==> watch smoke: live epoch streaming against a live serve"
+  ./target/release/repro serve --addr 127.0.0.1:17072 --workers 2 &
+  SERVE_PID=$!
+  python3 - <<'EOF'
+import json, socket, time
+for _ in range(100):
+    try:
+        s = socket.create_connection(("127.0.0.1", 17072), timeout=1)
+        break
+    except OSError:
+        time.sleep(0.1)
+else:
+    raise SystemExit("serve never came up on 17072")
+f = s.makefile("rw")
+
+def call(req):
+    f.write(json.dumps(req) + "\n")
+    f.flush()
+    resp = json.loads(f.readline())
+    assert resp.get("ok"), resp
+    return resp
+
+cfg = call({"op": "ping"})
+assert cfg["protocol"] >= 6, cfg
+job = call({"op": "submit", "label": "ci-watch", "config": {
+    "task": "energy", "policy": "topk", "k": "18", "epochs": 3,
+    "lr": 0.01, "seed": 0, "backend": "native", "memory": True,
+    "data_scale": 1.0, "audit": "every:1",
+}})
+jid = job["id"]
+frames, cursor = [], 0
+deadline = time.time() + 120
+while time.time() < deadline:
+    r = call({"op": "watch", "id": jid, "cursor": cursor, "wait_ms": 2000})
+    batch = r["epochs"]
+    frames.extend(batch)
+    cursor = r["cursor"]
+    if not batch and r["state"] in ("done", "failed", "cancelled"):
+        assert r["state"] == "done", r
+        break
+else:
+    raise SystemExit("watched job never finished")
+assert len(frames) >= 1, "watch streamed no epochs"
+for fr in frames:
+    audits = fr.get("audit", [])
+    assert audits, fr
+    for a in audits:
+        assert all(a[k] == a[k] for k in ("cosine", "rel_err", "mem_bias")), a
+call({"op": "shutdown"})
+print(f"[ci] watch smoke ok: {len(frames)} epoch frames with audit records")
+EOF
+  wait "$SERVE_PID"
+fi
+
 # Perf smoke: a quick run of the kernels bench so every CI pass leaves
 # machine-readable throughput data points (BENCH_2.json: flat engine;
 # BENCH_3.json: layer-graph core; BENCH_4.json: wide-layer
@@ -111,16 +177,20 @@ fi
 # allocations; BENCH_5.json: annealed-K step, k ramping mid-run on one
 # workspace, also asserted allocation-free; BENCH_6.json: the graph step
 # with telemetry ON — per-phase percentiles, still asserted
-# allocation-free) for the perf trajectory.
-echo "==> kernels bench smoke (BENCH_2/3/4/5/6.json)"
+# allocation-free; BENCH_8.json: the audited step — audit-on vs
+# audit-off rows/sec with the K=M re-reduction every few steps, audits
+# included in the 0-allocations assertion) for the perf trajectory.
+echo "==> kernels bench smoke (BENCH_2/3/4/5/6/8.json)"
 BENCH_QUICK=1 cargo bench --bench kernels
 test -f BENCH_3.json
 test -f BENCH_4.json
 test -f BENCH_5.json
 test -f BENCH_6.json
+test -f BENCH_8.json
 echo "BENCH_4.json: $(cat BENCH_4.json | head -c 200)..."
 echo "BENCH_5.json: $(cat BENCH_5.json | head -c 200)..."
 echo "BENCH_6.json: $(cat BENCH_6.json | head -c 200)..."
+echo "BENCH_8.json: $(cat BENCH_8.json | head -c 200)..."
 
 # BENCH trajectory (ROADMAP): append this run to the committed bench/
 # history and fail on a >15% rows/sec regression vs the recorded

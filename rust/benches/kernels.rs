@@ -11,8 +11,12 @@
 //! workspace — the K-schedule tentpole), written to `BENCH_5.json`, and
 //! the **telemetry-on** graph step (obs tentpole: phase histograms +
 //! event ring recording, allocs/step still asserted 0, per-phase
-//! percentiles reported), written to `BENCH_6.json` — so the repo's
-//! perf trajectory is machine-readable.
+//! percentiles reported), written to `BENCH_6.json`, and the
+//! **audited** step (PR 7: the exact K=M re-reduction of
+//! `train::audit_into` interleaved every few steps, audit-on vs
+//! audit-off rows/sec, allocs/step asserted 0 with audits included),
+//! written to `BENCH_8.json` (`BENCH_7` is reserved for the conv
+//! workload) — so the repo's perf trajectory is machine-readable.
 //!
 //! Work metric = FLOPs of the compaction-regime cost model, so the
 //! reported work-rate is directly comparable across K (who computes the
@@ -710,6 +714,157 @@ fn bench_obs_and_write_bench6() {
         .and_then(|_| std::fs::write("results/bench/obs_throughput.json", text));
 }
 
+/// Steps between audits in the BENCH_8 audit-on cell — models the
+/// per-epoch cadence (one `audit_into` per audited epoch) at bench
+/// scale so the overhead number covers steady state, not just the
+/// audit step itself.
+const AUDIT_EVERY: u64 = 8;
+
+/// The BENCH_8 workload (gradient-fidelity auditor): the BENCH_6
+/// obs-on graph, with `train::audit_into` re-reducing the exact K=M
+/// memory-corrected gradient every [`AUDIT_EVERY`] steps when `audit`
+/// is on. The audit scratch is sized during warmup, so the timed
+/// window — audits included — must stay allocation-free.
+fn audit_graph_run(audit: bool, threads: usize, measure: Duration) -> (f64, f64) {
+    use mem_aop_gd::obs::ObsConfig;
+    let m = GRAPH_BATCH;
+    let (n, p) = (GRAPH_WIDTHS[0], GRAPH_WIDTHS[3]);
+    let mut rng = Rng::new(0);
+    let x = Matrix::from_fn(m, n, |_, _| rng.normal());
+    let y = Matrix::from_fn(m, p, |r, c| ((r % p) == c) as u32 as f32);
+    let mut wrng = Rng::new(1);
+    let mut graph = Graph::relu_mlp(&mut wrng, &GRAPH_WIDTHS, LossKind::SoftmaxCrossEntropy);
+    let cfgs: Vec<AopLayerConfig> = GRAPH_KS
+        .iter()
+        .map(|&k| AopLayerConfig {
+            k,
+            policy: Policy::TopK,
+            memory: true,
+        })
+        .collect();
+    let mut state = GraphState::from_configs(&graph, m, &cfgs);
+    let mut ws = GraphWorkspace::with_obs(&graph, m, ObsConfig::on());
+    let exec = Executor::new(threads);
+    let mut srng = Rng::new(2);
+    let mut recs = Vec::new();
+    for _ in 0..10 {
+        black_box(train::train_step_ws(
+            &mut graph, &mut state, &x, &y, 0.01, &mut srng, &exec, true, &mut ws,
+        ));
+    }
+    if audit {
+        // size the audit scratch (and the record vec) before the window
+        train::audit_into(&graph, &state, &x, 0.01, &exec, true, &mut ws, &mut recs);
+    }
+    ws.set_obs(ObsConfig::on());
+    let a0 = alloc_calls();
+    let t0 = Instant::now();
+    let mut steps = 0u64;
+    while steps < 2 || t0.elapsed() < measure {
+        black_box(train::train_step_ws(
+            &mut graph, &mut state, &x, &y, 0.01, &mut srng, &exec, true, &mut ws,
+        ));
+        steps += 1;
+        if audit && steps % AUDIT_EVERY == 0 {
+            train::audit_into(&graph, &state, &x, 0.01, &exec, true, &mut ws, &mut recs);
+            black_box(&recs);
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let allocs = (alloc_calls() - a0) as f64 / steps as f64;
+    (steps as f64 * m as f64 / elapsed, allocs)
+}
+
+/// Measure the auditor's cost and write `BENCH_8.json` (BENCH_7 is
+/// reserved for the conv workload): audit-off vs audit-on rows/sec at
+/// threads 1 and 4, the audit-on overhead ratio, and allocations/step
+/// across the audited window (serial cells asserted **0** — the PR 7
+/// observation-only contract extends the ISSUE 6 zero-allocation
+/// guarantee through `audit_into`; same `BENCH_ALLOW_ALLOCS=1` hatch).
+fn bench_audit_and_write_bench8() {
+    let quick = std::env::var("BENCH_QUICK").ok().as_deref() == Some("1");
+    let measure = if quick {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_secs(2)
+    };
+    let (off1, off1_allocs) = audit_graph_run(false, 1, measure);
+    let (on1, on1_allocs) = audit_graph_run(true, 1, measure);
+    let (on4, on4_allocs) = audit_graph_run(true, 4, measure);
+    let overhead = off1 / on1;
+    eprintln!(
+        "{:44} {:>12.0} rows/s  ({off1_allocs:.1} allocs/step)",
+        "audit-off/exec/train-step threads=1", off1
+    );
+    eprintln!(
+        "{:44} {:>12.0} rows/s  ({:.2}x of audit-off, {on1_allocs:.1} allocs/step)",
+        format!("audit-on(every {AUDIT_EVERY})/train-step threads=1"),
+        on1,
+        on1 / off1
+    );
+    eprintln!(
+        "{:44} {:>12.0} rows/s  ({on4_allocs:.1} allocs/step)",
+        format!("audit-on(every {AUDIT_EVERY})/train-step threads=4"),
+        on4
+    );
+    for (cell, allocs) in [("audit-off serial", off1_allocs), ("audit-on serial", on1_allocs)] {
+        if allocs != 0.0 {
+            let msg = format!(
+                "{cell} steady state performed {allocs} allocations/step \
+                 (expected 0 — audit scratch must be pre-sized)"
+            );
+            if std::env::var("BENCH_ALLOW_ALLOCS").ok().as_deref() == Some("1") {
+                eprintln!("[kernels] WARNING: {msg}");
+            } else {
+                panic!("{msg}");
+            }
+        }
+    }
+    let out = json::obj(vec![
+        (
+            "workload",
+            json::s("graph-784x128x64x10 topk K=[32,16,8] mem train-step + K=M audit"),
+        ),
+        ("m", json::num(GRAPH_BATCH as f64)),
+        ("audit_every_steps", json::num(AUDIT_EVERY as f64)),
+        (
+            "audit_off",
+            json::obj(vec![
+                ("threads", json::num(1.0)),
+                ("rows_per_sec", json::num(off1)),
+                ("allocs_per_step", json::num(off1_allocs)),
+            ]),
+        ),
+        (
+            "audit_on",
+            json::obj(vec![
+                ("threads", json::num(1.0)),
+                ("rows_per_sec", json::num(on1)),
+                ("allocs_per_step", json::num(on1_allocs)),
+            ]),
+        ),
+        (
+            "audit_on_threads4",
+            json::obj(vec![
+                ("threads", json::num(4.0)),
+                ("rows_per_sec", json::num(on4)),
+                ("allocs_per_step", json::num(on4_allocs)),
+            ]),
+        ),
+        ("audit_overhead", json::num(overhead)),
+    ]);
+    let mut text = out.dump();
+    text.push('\n');
+    if std::fs::write("BENCH_8.json", &text).is_ok() {
+        eprintln!(
+            "[kernels] wrote BENCH_8.json (audit overhead {overhead:.2}x, \
+             serial allocs/step {on1_allocs:.1}, audit every {AUDIT_EVERY} steps)"
+        );
+    }
+    let _ = std::fs::create_dir_all("results/bench")
+        .and_then(|_| std::fs::write("results/bench/audit_throughput.json", text));
+}
+
 fn main() {
     let mut b = Bencher::new("kernels");
     let mut rng = Rng::new(0);
@@ -719,6 +874,7 @@ fn main() {
     bench_wide_and_write_bench4();
     bench_annealed_and_write_bench5();
     bench_obs_and_write_bench6();
+    bench_audit_and_write_bench8();
 
     for (task, m, n, p, ks) in [
         ("energy", 144usize, 16usize, 1usize, vec![144usize, 18, 9, 3]),

@@ -713,6 +713,14 @@ pub struct ExperimentConfig {
     /// at the task's output width, each optionally overriding the flat
     /// selection knobs (native backend only).
     pub layers: Option<Vec<LayerSpec>>,
+    /// Gradient-fidelity audit cadence in epochs (protocol v6, the
+    /// `every:<n>` grammar on the wire): `Some(n)` audits epoch 1 and
+    /// then every `n`-th epoch after it, re-reducing the last step's
+    /// mini-batch exactly (K=M, memory folded) and recording per-layer
+    /// cosine/relative-error/memory-bias. Strictly observation-only —
+    /// auditing never changes a curve (native backend; the HLO path
+    /// reports nothing).
+    pub audit: Option<usize>,
 }
 
 /// Upper bound on [`ExperimentConfig::threads`] (sanity cap, far above
@@ -735,6 +743,7 @@ impl ExperimentConfig {
             data_scale: 1.0,
             threads: 1,
             layers: None,
+            audit: None,
         }
     }
 
@@ -753,6 +762,7 @@ impl ExperimentConfig {
             data_scale: 1.0,
             threads: 1,
             layers: None,
+            audit: None,
         }
     }
 
@@ -886,6 +896,9 @@ impl ExperimentConfig {
                 check_k_range(&rl.k, self.m(), self.epochs, &format!("layers[{i}]: "))?;
             }
         }
+        if self.audit == Some(0) {
+            bail!("audit cadence every:0 is invalid (want every:<n> with n >= 1)");
+        }
         Ok(())
     }
 
@@ -908,6 +921,11 @@ impl ExperimentConfig {
         if let Some(specs) = &self.layers {
             // emitted only when present, so flat frames stay v1/v2-shaped
             pairs.push(("layers", Json::Arr(specs.iter().map(|s| s.to_json()).collect())));
+        }
+        if let Some(n) = self.audit {
+            // emitted only when auditing is on, so pre-v6 frames and run
+            // files keep their historical shape
+            pairs.push(("audit", json::s(&format!("every:{n}"))));
         }
         json::obj(pairs)
     }
@@ -971,10 +989,33 @@ impl ExperimentConfig {
                 }
                 None => None,
             },
+            // optional (protocol v6): pre-audit frames carry no cadence
+            audit: match v.get("audit") {
+                Some(a) => {
+                    let s = a
+                        .as_str()
+                        .ok_or_else(|| anyhow!("config: audit not a string"))?;
+                    Some(parse_audit(s)?)
+                }
+                None => None,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
     }
+}
+
+/// Parse the audit cadence grammar `every:<n>` (epochs, `n >= 1`) used
+/// by the config wire field and the `--audit` CLI flag.
+pub fn parse_audit(s: &str) -> Result<usize> {
+    let n = s
+        .strip_prefix("every:")
+        .and_then(|n| n.parse::<usize>().ok())
+        .ok_or_else(|| anyhow!("bad audit cadence {s:?} (want every:<n>)"))?;
+    if n == 0 {
+        bail!("bad audit cadence {s:?} (n must be >= 1)");
+    }
+    Ok(n)
 }
 
 /// Print Tab. I (the paper's hyperparameter table) from the presets.
@@ -1068,6 +1109,36 @@ mod tests {
         assert!(bad.validate().is_err());
         bad.threads = 1;
         assert!(bad.validate().is_ok());
+    }
+
+    #[test]
+    fn audit_field_roundtrips_and_is_optional() {
+        // off by default, and omitted from the frame when off (pre-v6
+        // shape preserved)
+        let mut c = ExperimentConfig::energy_preset();
+        assert_eq!(c.audit, None);
+        assert!(c.to_json().get("audit").is_none());
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.audit, None);
+        // on: emitted as the every:<n> grammar and parsed back
+        c.audit = Some(3);
+        let j = c.to_json();
+        assert_eq!(j.get("audit").and_then(|a| a.as_str()), Some("every:3"));
+        assert_eq!(ExperimentConfig::from_json(&j).unwrap().audit, Some(3));
+    }
+
+    #[test]
+    fn audit_grammar_rejects_malformed_cadences() {
+        assert_eq!(parse_audit("every:1").unwrap(), 1);
+        assert_eq!(parse_audit("every:12").unwrap(), 12);
+        for bad in ["every:0", "every:", "every:x", "3", "each:3", ""] {
+            assert!(parse_audit(bad).is_err(), "{bad:?}");
+        }
+        let mut c = ExperimentConfig::energy_preset();
+        c.audit = Some(0);
+        assert!(c.validate().is_err());
+        c.audit = Some(1);
+        assert!(c.validate().is_ok());
     }
 
     #[test]

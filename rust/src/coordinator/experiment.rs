@@ -18,13 +18,13 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::aop::{flops, policy};
+use crate::aop::{flops, policy, Policy};
 use crate::coordinator::config::{Backend, ExperimentConfig, Task};
 use crate::coordinator::hlo_trainer::HloTrainer;
 use crate::coordinator::native_trainer::NativeTrainer;
 use crate::data::{batcher::Batcher, digits, energy, Dataset};
 use crate::metrics::{EpochMetrics, LayerEpochMetrics, RunCurve};
-use crate::obs::PhaseRollup;
+use crate::obs::{jaccard, score_entropy, AuditLayerRecord, PhaseRollup};
 use crate::runtime::Runtime;
 use crate::tensor::{rng::Rng, Matrix};
 use crate::train::{self, AopLayerConfig};
@@ -68,6 +68,24 @@ pub trait Trainer {
     /// `StepTelemetry`). `None` when telemetry is off or unsupported.
     fn phase_rollup(&self) -> Option<PhaseRollup> {
         None
+    }
+
+    /// Per-layer deferred-memory Frobenius norms, input-to-output. The
+    /// epoch loop records them alongside the global [`Trainer::mem_fro`]
+    /// (which stays the quadrature sum `sqrt(Σ layer²)`). Backends
+    /// without per-layer access return empty (the loop fills zeros).
+    fn layer_mem_fro(&self) -> Vec<f32> {
+        Vec::new()
+    }
+
+    /// Gradient-fidelity audit hook (ISSUE 7): called immediately after
+    /// the **last** `apply` of an audited epoch, with that step's
+    /// mini-batch input, while the step's buffers are still resident.
+    /// Implementations must be strictly observation-only — no RNG
+    /// consumption, no state writes (see `train::audit_into`). The
+    /// default reports nothing (HLO path, test doubles).
+    fn audit(&mut self, _x: &Matrix) -> Result<Vec<AuditLayerRecord>> {
+        Ok(Vec::new())
     }
 }
 
@@ -182,6 +200,11 @@ pub fn run_with_trainer_ref<T: Trainer>(
     let mut curve = RunCurve::new(&cfg.label());
     let mut cum_backward_flops: u64 = 0;
     let mut cum_layer_flops: Vec<u64> = vec![0; nl];
+    // selection-churn diagnostics: previous step's per-layer selected
+    // indices, run-continuous across epoch boundaries. The very first
+    // step of the run has no predecessor and is skipped.
+    let mut prev_sel: Vec<Vec<usize>> = vec![Vec::new(); nl];
+    let mut have_prev = false;
 
     for epoch in 1..=cfg.epochs {
         let t0 = Instant::now();
@@ -197,9 +220,16 @@ pub fn run_with_trainer_ref<T: Trainer>(
             .collect();
         let batches = batcher.epoch_batches(&train, &mut shuffle_rng);
         curve.steps_per_epoch = batches.len();
+        // `audit: every:<n>` cadence — epoch 1 is always audited so every
+        // run with auditing on produces at least one fidelity record.
+        let audited = cfg.audit.is_some_and(|n| (epoch - 1) % n == 0);
+        let mut audit_records: Vec<AuditLayerRecord> = Vec::new();
         let mut loss_sum = 0.0f64;
         let mut fro_sum = 0.0f64;
         let mut k_eff_sums: Vec<u64> = vec![0; nl];
+        let mut jac_sums: Vec<f64> = vec![0.0; nl];
+        let mut jac_steps: u64 = 0;
+        let mut ent_sums: Vec<f64> = vec![0.0; nl];
         for (step, b) in batches.iter().enumerate() {
             let (loss, scores) = trainer.fwd_score(&b.x, &b.y)?;
             anyhow::ensure!(scores.len() == nl, "trainer scores vs layer plan");
@@ -220,6 +250,30 @@ pub fn run_with_trainer_ref<T: Trainer>(
                 trainer.record_select_ns(t.elapsed().as_nanos().min(u64::MAX as u128) as u64);
             }
             let fro = trainer.apply(&sels)?;
+            if audited && step + 1 == batches.len() {
+                // last step of an audited epoch: the step's buffers are
+                // still resident, so the auditor can re-reduce the exact
+                // same mini-batch. Strictly observation-only (asserted by
+                // the exec bit-identity grid).
+                audit_records = trainer.audit(&b.x)?;
+            }
+            // selection diagnostics: consecutive-step index overlap and
+            // score mass concentration, averaged per epoch. Exact layers
+            // have no score pass, so their entropy is reported as 0.
+            if have_prev {
+                for (li, sel) in sels.iter().enumerate() {
+                    jac_sums[li] += jaccard(&sel.indices, &prev_sel[li]);
+                }
+                jac_steps += 1;
+            }
+            for (li, sel) in sels.iter().enumerate() {
+                if !matches!(layer_cfgs[li].policy, Policy::Exact) {
+                    ent_sums[li] += score_entropy(&scores[li]);
+                }
+                prev_sel[li].clear();
+                prev_sel[li].extend_from_slice(&sel.indices);
+            }
+            have_prev = true;
             loss_sum += loss as f64;
             fro_sum += fro as f64;
             for (li, sel) in sels.iter().enumerate() {
@@ -238,6 +292,7 @@ pub fn run_with_trainer_ref<T: Trainer>(
         let train_s = t0.elapsed().as_secs_f64();
         let rows_done = (batches.len() * m) as f64;
         let (val_loss, val_acc) = evaluate_chunked(trainer, &val, cfg.task.eval_batch())?;
+        let layer_mem = trainer.layer_mem_fro();
         let metrics = EpochMetrics {
             epoch,
             train_loss: (loss_sum / batches.len() as f64) as f32,
@@ -252,9 +307,18 @@ pub fn run_with_trainer_ref<T: Trainer>(
                 .map(|li| LayerEpochMetrics {
                     k_effective: k_eff_sums[li] as f64 / batches.len() as f64,
                     backward_flops: cum_layer_flops[li],
+                    sel_jaccard: if jac_steps > 0 {
+                        jac_sums[li] / jac_steps as f64
+                    } else {
+                        0.0
+                    },
+                    score_entropy: ent_sums[li] / batches.len() as f64,
+                    mem_fro: layer_mem.get(li).copied().unwrap_or(0.0),
                 })
                 .collect(),
+            audit: audit_records,
         };
+        check_finite(&metrics)?;
         let keep_going = on_epoch(&metrics);
         curve.push(metrics);
         if !keep_going {
@@ -268,6 +332,36 @@ pub fn run_with_trainer_ref<T: Trainer>(
         final_layers: trainer.weight_snapshot(),
         phases: trainer.phase_rollup(),
     })
+}
+
+/// Epoch-boundary divergence guard: a NaN/Inf in the loss or in an
+/// update/memory norm fails the run (and hence the serve job) with a
+/// structured diagnostic naming the offending metric, the epoch, and —
+/// for per-layer norms — the layer index, instead of silently streaming
+/// garbage curves.
+fn check_finite(m: &EpochMetrics) -> Result<()> {
+    let globals: [(&str, f64); 4] = [
+        ("train_loss", m.train_loss as f64),
+        ("val_loss", m.val_loss as f64),
+        ("wstar_fro", m.wstar_fro as f64),
+        ("mem_fro", m.mem_fro as f64),
+    ];
+    for (name, v) in globals {
+        anyhow::ensure!(
+            v.is_finite(),
+            "non-finite metric '{name}' = {v} at epoch {}: run diverged",
+            m.epoch
+        );
+    }
+    for (li, l) in m.layers.iter().enumerate() {
+        anyhow::ensure!(
+            l.mem_fro.is_finite(),
+            "non-finite metric 'mem_fro' = {} at epoch {}, layer {li}: run diverged",
+            l.mem_fro,
+            m.epoch
+        );
+    }
+    Ok(())
 }
 
 /// Validation in fixed-size chunks (drop-tail), matching the static batch
@@ -435,6 +529,97 @@ mod tests {
         let r = run_with(&cfg, &mut |m| m.epoch < 5).unwrap();
         assert_eq!(r.curve.epochs.len(), 5);
         assert!(r.final_w().is_finite());
+    }
+
+    #[test]
+    fn audit_cadence_is_config_driven_and_observation_only() {
+        let mut cfg = quick_energy(Policy::TopK, true, 18);
+        cfg.epochs = 5;
+        let base = run(&cfg).unwrap();
+        assert!(base.curve.epochs.iter().all(|e| e.audit.is_empty()));
+        cfg.audit = Some(2);
+        let audited = run(&cfg).unwrap();
+        // observation-only: auditing must not perturb the curve at all
+        for (ma, mb) in audited.curve.epochs.iter().zip(base.curve.epochs.iter()) {
+            assert_eq!(ma.train_loss.to_bits(), mb.train_loss.to_bits());
+            assert_eq!(ma.val_loss.to_bits(), mb.val_loss.to_bits());
+            assert_eq!(ma.wstar_fro.to_bits(), mb.wstar_fro.to_bits());
+        }
+        // every:2 over 5 epochs → audited at epochs 1, 3, 5
+        for ep in &audited.curve.epochs {
+            let want = (ep.epoch - 1) % 2 == 0;
+            assert_eq!(!ep.audit.is_empty(), want, "epoch {}", ep.epoch);
+            for a in &ep.audit {
+                assert!(a.cosine.is_finite() && a.cosine.abs() <= 1.0 + 1e-9, "{a:?}");
+                assert!(a.rel_err.is_finite() && a.rel_err >= 0.0, "{a:?}");
+                assert!(a.mem_bias.is_finite() && a.mem_bias >= 0.0, "{a:?}");
+            }
+            // K=18 of M=144 is genuinely approximate — the auditor must
+            // see a nonzero deviation somewhere
+            if want {
+                assert!(ep.audit.iter().any(|a| a.rel_err > 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn selection_diagnostics_and_layer_memory_are_recorded() {
+        let r = run(&quick_energy(Policy::TopK, true, 18)).unwrap();
+        let last = r.curve.epochs.last().unwrap();
+        for l in &last.layers {
+            assert!((0.0..=1.0).contains(&l.sel_jaccard), "jaccard {}", l.sel_jaccard);
+            assert!(l.score_entropy > 0.0, "entropy {}", l.score_entropy);
+            assert!(l.mem_fro >= 0.0 && l.mem_fro.is_finite());
+        }
+        // the global mem_fro is the quadrature sum of the per-layer norms
+        let sum_sq: f64 = last.layers.iter().map(|l| (l.mem_fro as f64).powi(2)).sum();
+        let g = last.mem_fro as f64;
+        let scale = (g * g).max(1e-12);
+        assert!((g * g - sum_sq).abs() <= 1e-5 * scale, "{g} vs sqrt({sum_sq})");
+
+        // exact selection has no score pass, keeps every index, and
+        // defers nothing: the diagnostics must report exactly that
+        let ex = run(&quick_energy(Policy::Exact, false, 144)).unwrap();
+        for l in &ex.curve.epochs.last().unwrap().layers {
+            assert_eq!(l.score_entropy, 0.0);
+            assert_eq!(l.sel_jaccard, 1.0);
+            assert_eq!(l.mem_fro, 0.0);
+        }
+    }
+
+    struct NanTrainer {
+        nl: usize,
+    }
+
+    impl Trainer for NanTrainer {
+        fn set_lr(&mut self, _eta: f32) {}
+        fn fwd_score(&mut self, x: &Matrix, _y: &Matrix) -> Result<(f32, Vec<Vec<f32>>)> {
+            Ok((f32::NAN, vec![vec![1.0; x.rows()]; self.nl]))
+        }
+        fn apply(&mut self, _sels: &[policy::Selection]) -> Result<f32> {
+            Ok(0.0)
+        }
+        fn evaluate(&mut self, _x: &Matrix, _y: &Matrix) -> Result<(f32, f32)> {
+            Ok((0.0, 0.0))
+        }
+        fn mem_fro(&self) -> f32 {
+            0.0
+        }
+        fn weight_snapshot(&self) -> Vec<(Matrix, Vec<f32>)> {
+            Vec::new()
+        }
+    }
+
+    #[test]
+    fn non_finite_loss_fails_with_structured_diagnostic() {
+        let cfg = quick_energy(Policy::TopK, true, 18);
+        let mut t = NanTrainer {
+            nl: cfg.layer_plan().len(),
+        };
+        let err = run_with_trainer_ref(&cfg, &mut t, &mut |_| true).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("non-finite metric 'train_loss'"), "{msg}");
+        assert!(msg.contains("epoch 1"), "{msg}");
     }
 
     #[test]

@@ -268,6 +268,7 @@ pub fn train_mlp(
                     rows_per_sec: 0.0, // HLO driver: not instrumented
                     wall_s: t0.elapsed().as_secs_f64(),
                     layers: Vec::new(), // in-graph selection: not observable
+                    audit: Vec::new(),  // no auditor on the HLO path
                 });
                 t0 = Instant::now();
                 loss_acc = 0.0;

@@ -15,7 +15,7 @@ use crate::aop::policy::Selection;
 use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::experiment::Trainer;
 use crate::exec::Executor;
-use crate::obs::{ObsConfig, Phase, PhaseRollup, StepTelemetry};
+use crate::obs::{AuditLayerRecord, ObsConfig, Phase, PhaseRollup, StepTelemetry};
 use crate::tensor::{rng::Rng, Matrix};
 use crate::train::{self, Dense, Graph, GraphState, GraphWorkspace};
 
@@ -159,6 +159,31 @@ impl Trainer for NativeTrainer {
             None
         }
     }
+
+    fn layer_mem_fro(&self) -> Vec<f32> {
+        // per-layer norms; `Trainer::mem_fro` stays their quadrature sum
+        // (`GraphState::deferred_mass`), pinned by the experiment tests
+        self.state
+            .layers
+            .iter()
+            .map(|l| l.mem.deferred_mass())
+            .collect()
+    }
+
+    fn audit(&mut self, x: &Matrix) -> Result<Vec<AuditLayerRecord>> {
+        let mut out = Vec::new();
+        train::audit_into(
+            &self.graph,
+            &self.state,
+            x,
+            self.eta,
+            &self.exec,
+            true,
+            &mut self.ws,
+            &mut out,
+        );
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -222,6 +247,31 @@ mod tests {
         assert_eq!(snap.len(), 2);
         assert_eq!(snap[0].0.shape(), (16, 8));
         assert_eq!(snap[1].0.shape(), (8, 1));
+    }
+
+    #[test]
+    fn audit_hook_reports_per_layer_fidelity() {
+        let mut cfg = ExperimentConfig::energy_preset();
+        cfg.policy = Policy::TopK;
+        cfg.k = KSchedule::Constant(18);
+        cfg.memory = true;
+        let mut t = NativeTrainer::new(&cfg).unwrap();
+        let mut rng = Rng::new(7);
+        let x = Matrix::from_fn(144, 16, |_, _| rng.normal());
+        let y = Matrix::from_fn(144, 1, |_, _| rng.normal());
+        let (_, scores) = t.fwd_score(&x, &y).unwrap();
+        let sel = policy::select(Policy::TopK, &scores[0], 18, true, &mut rng);
+        t.apply(std::slice::from_ref(&sel)).unwrap();
+        let recs = t.audit(&x).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].layer, 0);
+        assert!(recs[0].cosine.is_finite() && recs[0].cosine.abs() <= 1.0 + 1e-9);
+        // K=18 of M=144: the kept-K update genuinely deviates from exact
+        assert!(recs[0].rel_err > 0.0);
+        // single layer: the quadrature sum degenerates to the layer norm
+        let lm = t.layer_mem_fro();
+        assert_eq!(lm.len(), 1);
+        assert_eq!(lm[0], t.mem_fro());
     }
 
     #[test]

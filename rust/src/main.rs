@@ -18,7 +18,11 @@
 //! * `trace`              — run a short native experiment with the obs
 //!                          event ring enabled and dump a Chrome
 //!                          trace-event JSON (chrome://tracing /
-//!                          Perfetto) plus a per-phase latency rollup.
+//!                          Perfetto) plus a per-phase latency rollup;
+//! * `audit`              — run a native experiment with the gradient-
+//!                          fidelity auditor enabled and print the
+//!                          per-layer cosine / relative-error / memory-
+//!                          bias table for every audited epoch.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -73,6 +77,12 @@ fn app() -> App {
                      (native backend; empty = flat single layer)",
                 )
                 .opt("save", "", "write final weights+memories to this checkpoint path")
+                .opt(
+                    "audit",
+                    "",
+                    "gradient-fidelity audit cadence `every:<n>` (native backend; \
+                     observation-only, empty = off)",
+                )
                 .flag("no-memory", "disable error-feedback memory")
                 .flag("quiet", "suppress per-epoch output"),
             Command::new("figure", "regenerate a paper figure into results/")
@@ -121,6 +131,16 @@ fn app() -> App {
                 .opt("seed", "0", "RNG seed")
                 .opt("events", "4096", "trace-ring capacity (oldest events overwritten)")
                 .opt("out", "results/trace.json", "Chrome trace-event JSON output path"),
+            Command::new("audit", "gradient-fidelity audit of one native run")
+                .opt("task", "energy", "energy | mnist")
+                .opt("policy", "topk", policy_help())
+                .opt("k", "18", "outer-product budget per update (same grammar as train --k)")
+                .opt("epochs", "3", "epochs to run (0 = Tab. I preset)")
+                .opt("every", "every:1", "audit cadence `every:<n>` (epoch 1, then every n-th)")
+                .opt("threads", "1", "data-parallel training threads")
+                .opt("data-scale", "1.0", "fraction of Tab. I dataset size (mnist)")
+                .opt("seed", "0", "RNG seed")
+                .flag("no-memory", "disable error-feedback memory"),
         ],
     }
 }
@@ -161,6 +181,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "inspect-artifacts" => cmd_inspect(),
         "serve" => cmd_serve(args),
         "trace" => cmd_trace(args),
+        "audit" => cmd_audit(args),
         _ => bail!("unhandled command {cmd}"),
     }
 }
@@ -196,6 +217,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(spec) = args.get("layers").filter(|s| !s.is_empty()) {
         use mem_aop_gd::coordinator::config::LayerSpec;
         cfg.layers = Some(LayerSpec::parse_list(spec).map_err(|e| anyhow!("--layers: {e}"))?);
+    }
+    if let Some(spec) = args.get("audit").filter(|s| !s.is_empty()) {
+        cfg.audit = Some(
+            mem_aop_gd::coordinator::config::parse_audit(spec)
+                .map_err(|e| anyhow!("--audit: {e}"))?,
+        );
     }
     cfg.validate()?;
 
@@ -238,6 +265,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             ]);
         }
         print_table(&["epoch", "train", "val", "acc", "mem_fro", "s"], &rows);
+        print_audit_table(&r.curve.epochs);
     }
     println!(
         "final val loss {:.6} (best {:.6}); backward FLOPs {:.3e} ({:.3e}/s); {:.0} rows/s",
@@ -513,6 +541,80 @@ fn cmd_trace(args: &Args) -> Result<()> {
     );
     println!("final val loss {:.6}", r.final_val_loss());
     Ok(())
+}
+
+fn cmd_audit(args: &Args) -> Result<()> {
+    use mem_aop_gd::coordinator::config::{self, KSchedule};
+
+    let task = Task::parse(args.get("task").unwrap_or("energy"))
+        .ok_or_else(|| anyhow!("bad --task"))?;
+    let mut cfg = ExperimentConfig::preset(task);
+    cfg.policy = Policy::parse_or_suggest(args.get("policy").unwrap_or("topk"))
+        .map_err(|e| anyhow!("--policy: {e}"))?;
+    cfg.k = KSchedule::parse(args.get("k").unwrap_or("18")).map_err(|e| anyhow!("--k: {e}"))?;
+    if cfg.policy == Policy::Exact {
+        cfg.k = KSchedule::constant(cfg.m());
+        cfg.memory = false;
+    }
+    let epochs: usize = args.get_parse("epochs")?;
+    if epochs > 0 {
+        cfg.epochs = epochs;
+    }
+    cfg.seed = args.get_parse("seed")?;
+    cfg.threads = args.get_parse("threads")?;
+    cfg.data_scale = args.get_parse("data-scale")?;
+    if args.flag("no-memory") {
+        cfg.memory = false;
+    }
+    cfg.backend = Backend::Native;
+    cfg.audit = Some(
+        config::parse_audit(args.get("every").unwrap_or("every:1"))
+            .map_err(|e| anyhow!("--every: {e}"))?,
+    );
+    cfg.validate()?;
+
+    println!(
+        "auditing {} / {} (K={}/{}, {} epochs, cadence every:{}, seed={}, threads={})",
+        cfg.task.name(),
+        cfg.label(),
+        cfg.k.name(),
+        cfg.m(),
+        cfg.epochs,
+        cfg.audit.unwrap(),
+        cfg.seed,
+        cfg.threads
+    );
+    let r = experiment::run(&cfg)?;
+    print_audit_table(&r.curve.epochs);
+    println!(
+        "final val loss {:.6} (best {:.6})",
+        r.final_val_loss(),
+        r.curve.best_val_loss()
+    );
+    Ok(())
+}
+
+/// Per-layer fidelity table for every audited epoch in a curve. No-op
+/// when the run carried no auditor (keeps `train` output unchanged for
+/// audit-off runs).
+fn print_audit_table(epochs: &[mem_aop_gd::metrics::EpochMetrics]) {
+    let mut rows = Vec::new();
+    for m in epochs {
+        for a in &m.audit {
+            rows.push(vec![
+                format!("{}", m.epoch),
+                format!("{}", a.layer),
+                format!("{:.6}", a.cosine),
+                format!("{:.3e}", a.rel_err),
+                format!("{:.3e}", a.mem_bias),
+            ]);
+        }
+    }
+    if rows.is_empty() {
+        return;
+    }
+    println!("\ngradient fidelity (exact same-batch gradient vs applied Mem-AOP update):");
+    print_table(&["epoch", "layer", "cosine", "rel err", "mem bias"], &rows);
 }
 
 /// Human-readable nanosecond duration for the rollup table.

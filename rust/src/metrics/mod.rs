@@ -6,16 +6,30 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
+use crate::obs::AuditLayerRecord;
 use crate::util::json::{self, Json};
 
-/// Per-layer record within one epoch (protocol v3): how much of the
-/// approximation budget each layer actually used, and what it cost.
+/// Per-layer record within one epoch (protocol v3; selection
+/// diagnostics and per-layer memory mass since protocol v6): how much
+/// of the approximation budget each layer actually used, what it cost,
+/// and how the policy behaved.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LayerEpochMetrics {
     /// Mean distinct outer products evaluated per step at this layer.
     pub k_effective: f64,
     /// Cumulative backward weight-gradient FLOPs spent at this layer.
     pub backward_flops: u64,
+    /// Mean consecutive-step selection-index Jaccard overlap across the
+    /// epoch's steps (1 = the policy keeps picking the same rows;
+    /// 0 = disjoint picks, or unknown for pre-v6 records).
+    pub sel_jaccard: f64,
+    /// Mean Shannon entropy (nats) of the normalized per-step policy
+    /// score distribution (0 for Exact layers and pre-v6 records).
+    pub score_entropy: f64,
+    /// This layer's deferred-memory Frobenius norm at epoch end. The
+    /// epoch-level `mem_fro` is the quadrature sum of these
+    /// (`global² = Σ layer²`, pinned in `rust/tests/exec.rs`).
+    pub mem_fro: f32,
 }
 
 /// One epoch's record for a training run.
@@ -39,9 +53,104 @@ pub struct EpochMetrics {
     pub rows_per_sec: f64,
     /// Wall-clock seconds spent on this epoch (training + validation).
     pub wall_s: f64,
-    /// Per-layer k_effective/FLOPs (one entry per graph layer; empty for
-    /// curves recorded before the layer-graph core or built by hand).
+    /// Per-layer k_effective/FLOPs/diagnostics (one entry per graph
+    /// layer; empty for curves recorded before the layer-graph core or
+    /// built by hand).
     pub layers: Vec<LayerEpochMetrics>,
+    /// Gradient-fidelity audit records for this epoch (protocol v6):
+    /// one entry per layer on audited epochs, empty otherwise — the
+    /// `audit` key is omitted from the wire frame when empty, so
+    /// un-audited runs keep the exact pre-v6 frame shape.
+    pub audit: Vec<AuditLayerRecord>,
+}
+
+impl EpochMetrics {
+    /// The per-epoch wire frame (one element of a curve's `epochs`
+    /// array, and the streaming unit of the serve `watch` op).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("epoch", json::num(self.epoch as f64)),
+            ("train_loss", json::num(self.train_loss as f64)),
+            ("val_loss", json::num(self.val_loss as f64)),
+            ("val_acc", json::num(self.val_acc as f64)),
+            ("wstar_fro", json::num(self.wstar_fro as f64)),
+            ("mem_fro", json::num(self.mem_fro as f64)),
+            ("backward_flops", json::num(self.backward_flops as f64)),
+            ("rows_per_sec", json::num(self.rows_per_sec)),
+            ("wall_s", json::num(self.wall_s)),
+            (
+                "layers",
+                Json::Arr(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            json::obj(vec![
+                                ("k_effective", json::num(l.k_effective)),
+                                ("backward_flops", json::num(l.backward_flops as f64)),
+                                ("sel_jaccard", json::num(l.sel_jaccard)),
+                                ("score_entropy", json::num(l.score_entropy)),
+                                ("mem_fro", json::num(l.mem_fro as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ];
+        if !self.audit.is_empty() {
+            pairs.push(("audit", Json::Arr(self.audit.iter().map(|a| a.to_json()).collect())));
+        }
+        json::obj(pairs)
+    }
+
+    /// Inverse of [`EpochMetrics::to_json`]. Fields added after v1 are
+    /// optional with zero-ish defaults, so records persisted by older
+    /// builds keep decoding.
+    pub fn from_json(e: &Json) -> Result<EpochMetrics> {
+        let num = |k: &str| -> Result<f64> {
+            e.get(k)
+                .and_then(|n| n.as_f64())
+                .ok_or_else(|| anyhow!("epoch record: missing '{k}'"))
+        };
+        let mut audit = Vec::new();
+        if let Some(arr) = e.get("audit").and_then(|a| a.as_arr()) {
+            for a in arr {
+                audit.push(AuditLayerRecord::from_json(a)?);
+            }
+        }
+        Ok(EpochMetrics {
+            epoch: num("epoch")? as usize,
+            train_loss: num("train_loss")? as f32,
+            val_loss: num("val_loss")? as f32,
+            val_acc: num("val_acc")? as f32,
+            wstar_fro: num("wstar_fro")? as f32,
+            mem_fro: num("mem_fro")? as f32,
+            backward_flops: num("backward_flops")? as u64,
+            // optional: absent from pre-exec persisted runs
+            rows_per_sec: e.get("rows_per_sec").and_then(|n| n.as_f64()).unwrap_or(0.0),
+            wall_s: num("wall_s")?,
+            // optional (protocol v3): absent from pre-layer-graph runs;
+            // the diagnostics inside each entry are optional too (v6)
+            layers: e
+                .get("layers")
+                .and_then(|a| a.as_arr())
+                .map(|arr| {
+                    arr.iter()
+                        .map(|l| {
+                            let f = |k: &str| l.get(k).and_then(|n| n.as_f64()).unwrap_or(0.0);
+                            LayerEpochMetrics {
+                                k_effective: f("k_effective"),
+                                backward_flops: f("backward_flops") as u64,
+                                sel_jaccard: f("sel_jaccard"),
+                                score_entropy: f("score_entropy"),
+                                mem_fro: f("mem_fro") as f32,
+                            }
+                        })
+                        .collect()
+                })
+                .unwrap_or_default(),
+            audit,
+        })
+    }
 }
 
 /// A full training curve plus identification.
@@ -141,49 +250,14 @@ impl RunCurve {
         json::obj(vec![
             ("label", json::s(&self.label)),
             ("steps_per_epoch", json::num(self.steps_per_epoch as f64)),
-            (
-                "epochs",
-                Json::Arr(
-                    self.epochs
-                        .iter()
-                        .map(|m| {
-                            json::obj(vec![
-                                ("epoch", json::num(m.epoch as f64)),
-                                ("train_loss", json::num(m.train_loss as f64)),
-                                ("val_loss", json::num(m.val_loss as f64)),
-                                ("val_acc", json::num(m.val_acc as f64)),
-                                ("wstar_fro", json::num(m.wstar_fro as f64)),
-                                ("mem_fro", json::num(m.mem_fro as f64)),
-                                ("backward_flops", json::num(m.backward_flops as f64)),
-                                ("rows_per_sec", json::num(m.rows_per_sec)),
-                                ("wall_s", json::num(m.wall_s)),
-                                (
-                                    "layers",
-                                    Json::Arr(
-                                        m.layers
-                                            .iter()
-                                            .map(|l| {
-                                                json::obj(vec![
-                                                    ("k_effective", json::num(l.k_effective)),
-                                                    (
-                                                        "backward_flops",
-                                                        json::num(l.backward_flops as f64),
-                                                    ),
-                                                ])
-                                            })
-                                            .collect(),
-                                    ),
-                                ),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
+            ("epochs", Json::Arr(self.epochs.iter().map(|m| m.to_json()).collect())),
         ])
     }
 
     /// Inverse of [`RunCurve::to_json`] — used by the serve registry when
     /// reloading persisted runs and by protocol clients decoding results.
+    /// Per-epoch frames delegate to [`EpochMetrics::from_json`] (the
+    /// same decoder `watch` subscribers use on streamed epochs).
     pub fn from_json(v: &Json) -> Result<RunCurve> {
         let label = v
             .get("label")
@@ -202,46 +276,9 @@ impl RunCurve {
             .iter()
             .enumerate()
         {
-            let num = |k: &str| -> Result<f64> {
-                e.get(k)
-                    .and_then(|n| n.as_f64())
-                    .ok_or_else(|| anyhow!("curve epoch {i}: missing '{k}'"))
-            };
-            epochs.push(EpochMetrics {
-                epoch: num("epoch")? as usize,
-                train_loss: num("train_loss")? as f32,
-                val_loss: num("val_loss")? as f32,
-                val_acc: num("val_acc")? as f32,
-                wstar_fro: num("wstar_fro")? as f32,
-                mem_fro: num("mem_fro")? as f32,
-                backward_flops: num("backward_flops")? as u64,
-                // optional: absent from pre-exec persisted runs
-                rows_per_sec: e
-                    .get("rows_per_sec")
-                    .and_then(|n| n.as_f64())
-                    .unwrap_or(0.0),
-                wall_s: num("wall_s")?,
-                // optional (protocol v3): absent from pre-layer-graph runs
-                layers: e
-                    .get("layers")
-                    .and_then(|a| a.as_arr())
-                    .map(|arr| {
-                        arr.iter()
-                            .map(|l| LayerEpochMetrics {
-                                k_effective: l
-                                    .get("k_effective")
-                                    .and_then(|n| n.as_f64())
-                                    .unwrap_or(0.0),
-                                backward_flops: l
-                                    .get("backward_flops")
-                                    .and_then(|n| n.as_f64())
-                                    .unwrap_or(0.0)
-                                    as u64,
-                            })
-                            .collect()
-                    })
-                    .unwrap_or_default(),
-            });
+            epochs.push(
+                EpochMetrics::from_json(e).map_err(|err| anyhow!("curve epoch {i}: {err}"))?,
+            );
         }
         Ok(RunCurve {
             label,
@@ -331,12 +368,19 @@ mod tests {
                 LayerEpochMetrics {
                     k_effective: 4.5,
                     backward_flops: (epoch as u64) * 60,
+                    sel_jaccard: 0.75,
+                    score_entropy: 1.25,
+                    mem_fro: 0.08,
                 },
                 LayerEpochMetrics {
                     k_effective: 2.0,
                     backward_flops: (epoch as u64) * 40,
+                    sel_jaccard: 0.5,
+                    score_entropy: 0.0,
+                    mem_fro: 0.06,
                 },
             ],
+            audit: Vec::new(),
         }
     }
 
@@ -362,6 +406,41 @@ mod tests {
         assert_eq!(r.epochs[0].layers.len(), 2);
         assert_eq!(r.epochs[0].layers[0].k_effective, 4.5);
         assert_eq!(r.epochs[0].layers[1].backward_flops, 40);
+        // the v6 selection diagnostics ride along per layer
+        assert_eq!(r.epochs[0].layers[0].sel_jaccard, 0.75);
+        assert_eq!(r.epochs[0].layers[0].score_entropy, 1.25);
+        assert_eq!(r.epochs[0].layers[1].mem_fro, 0.06);
+        // v3-v5 layer entries (no diagnostics keys) decode to zeros
+        let mut j5 = c.to_json();
+        if let Json::Obj(pairs) = &mut j5 {
+            for (k, v) in pairs.iter_mut() {
+                if k == "epochs" {
+                    if let Json::Arr(arr) = v {
+                        for e in arr.iter_mut() {
+                            if let Json::Obj(ep) = e {
+                                for (ek, ev) in ep.iter_mut() {
+                                    if ek == "layers" {
+                                        if let Json::Arr(ls) = ev {
+                                            for l in ls.iter_mut() {
+                                                if let Json::Obj(lp) = l {
+                                                    lp.retain(|(k, _)| {
+                                                        k == "k_effective" || k == "backward_flops"
+                                                    });
+                                                }
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let v5 = RunCurve::from_json(&j5).unwrap();
+        assert_eq!(v5.epochs[0].layers[0].k_effective, 4.5);
+        assert_eq!(v5.epochs[0].layers[0].sel_jaccard, 0.0);
+        assert_eq!(v5.epochs[0].layers[0].mem_fro, 0.0);
         // pre-layer-graph records (no `layers` key) decode to empty
         let mut j = c.to_json();
         if let Json::Obj(pairs) = &mut j {
@@ -403,6 +482,29 @@ mod tests {
         let r = RunCurve::from_json(&j).unwrap();
         assert_eq!(r.epochs[0].rows_per_sec, 0.0);
         assert!(r.mean_rows_per_sec().is_nan());
+    }
+
+    #[test]
+    fn audit_records_roundtrip_and_are_omitted_when_empty() {
+        use crate::obs::AuditLayerRecord;
+        let mut c = RunCurve::new("audited");
+        let mut e1 = m(1, 2.0);
+        e1.audit = vec![
+            AuditLayerRecord { layer: 0, cosine: 0.98, rel_err: 0.12, mem_bias: 0.04 },
+            AuditLayerRecord { layer: 1, cosine: 0.95, rel_err: 0.2, mem_bias: 0.0 },
+        ];
+        c.push(e1);
+        c.push(m(2, 1.5)); // un-audited epoch
+        let j = c.to_json();
+        let eps = j.get("epochs").and_then(|a| a.as_arr()).unwrap();
+        assert!(eps[0].get("audit").is_some());
+        assert!(eps[1].get("audit").is_none(), "empty audit must not emit a key");
+        let r = RunCurve::from_json(&j).unwrap();
+        assert_eq!(r.epochs[0].audit.len(), 2);
+        assert_eq!(r.epochs[0].audit[1].layer, 1);
+        assert_eq!(r.epochs[0].audit[0].cosine, 0.98);
+        assert!(r.epochs[1].audit.is_empty());
+        assert_eq!(r.epochs[0], c.epochs[0]);
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! Gradient-fidelity audit records + selection diagnostics (ISSUE 7).
+//!
+//! The paper's whole argument is that the error-feedback memory makes
+//! K-of-M outer-product subsampling *unbiased in the long run* — this
+//! module holds the vocabulary for measuring that claim on a live run:
+//!
+//! * [`AuditLayerRecord`] — one layer's fidelity snapshot from the
+//!   auditor in `train::step::audit_into` (cosine similarity and
+//!   relative Frobenius error of the applied update against the exact
+//!   K=M gradient, plus the memory-corrected-vs-raw bias), carried in
+//!   `EpochMetrics` and streamed over the serve `watch` op;
+//! * [`jaccard`] — consecutive-step selection-index overlap, the
+//!   stability of the policy's choices;
+//! * [`score_entropy`] — Shannon entropy (nats) of the normalized
+//!   policy score distribution, the concentration of the selection
+//!   signal.
+//!
+//! Everything here is pure arithmetic over caller-owned slices: no
+//! allocation, no RNG, no clocks — safe to call from the observation
+//! path without touching the determinism contract.
+
+use crate::util::json::{self, Json};
+
+/// One layer's gradient-fidelity audit: the applied Mem-AOP update
+/// compared against the exact same-mini-batch K=M weight gradient.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AuditLayerRecord {
+    /// Layer index in the graph (0 = input layer).
+    pub layer: usize,
+    /// Cosine similarity of applied update vs exact (memory-folded)
+    /// gradient; 1.0 means perfectly aligned.
+    pub cosine: f64,
+    /// Relative Frobenius error ‖approx − exact‖ / ‖exact‖.
+    pub rel_err: f64,
+    /// ‖exact(memory-folded) − exact(raw)‖ / ‖exact(raw)‖ — how much
+    /// the banked residual bends the exact gradient this step.
+    pub mem_bias: f64,
+}
+
+impl AuditLayerRecord {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("layer", json::num(self.layer as f64)),
+            ("cosine", json::num(self.cosine)),
+            ("rel_err", json::num(self.rel_err)),
+            ("mem_bias", json::num(self.mem_bias)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<AuditLayerRecord> {
+        let num = |k: &str| -> anyhow::Result<f64> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("audit record missing numeric '{k}'"))
+        };
+        Ok(AuditLayerRecord {
+            layer: num("layer")? as usize,
+            cosine: num("cosine")?,
+            rel_err: num("rel_err")?,
+            mem_bias: num("mem_bias")?,
+        })
+    }
+}
+
+/// Jaccard overlap |a ∩ b| / |a ∪ b| of two selection-index sets.
+///
+/// Inputs are the per-step `Selection::indices` slices — distinct
+/// within each slice but in arbitrary order, and small (≤ M ≤ a few
+/// hundred), so the quadratic scan beats sorting or hashing and
+/// allocates nothing. Two empty selections count as identical (1.0).
+pub fn jaccard(a: &[usize], b: &[usize]) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    let inter = a.iter().filter(|x| b.contains(x)).count();
+    let union = a.len() + b.len() - inter;
+    if union == 0 {
+        1.0
+    } else {
+        inter as f64 / union as f64
+    }
+}
+
+/// Shannon entropy (nats) of the policy score distribution,
+/// normalized to probabilities. Scores are the per-row importance
+/// weights (non-negative); non-finite or non-positive mass — and the
+/// empty slice the Exact policy produces — report 0.0 rather than
+/// poisoning downstream means.
+pub fn score_entropy(scores: &[f32]) -> f64 {
+    let mut sum = 0.0f64;
+    for &s in scores {
+        let s = s as f64;
+        if !s.is_finite() || s < 0.0 {
+            return 0.0;
+        }
+        sum += s;
+    }
+    if sum <= 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0f64;
+    for &s in scores {
+        let p = s as f64 / sum;
+        if p > 0.0 {
+            h -= p * p.ln();
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jaccard_overlap_cases() {
+        assert_eq!(jaccard(&[], &[]), 1.0);
+        assert_eq!(jaccard(&[1, 2, 3], &[]), 0.0);
+        assert_eq!(jaccard(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(jaccard(&[3, 1, 2], &[2, 3, 1]), 1.0, "order-insensitive");
+        assert_eq!(jaccard(&[1, 2], &[2, 3]), 1.0 / 3.0);
+        assert_eq!(jaccard(&[0, 1], &[2, 3]), 0.0);
+    }
+
+    #[test]
+    fn entropy_of_uniform_and_point_masses() {
+        let h4 = score_entropy(&[1.0, 1.0, 1.0, 1.0]);
+        assert!((h4 - (4.0f64).ln()).abs() < 1e-12, "uniform over 4 = ln 4, got {h4}");
+        assert_eq!(score_entropy(&[0.0, 5.0, 0.0]), 0.0, "point mass has zero entropy");
+        assert_eq!(score_entropy(&[]), 0.0, "exact policy produces no scores");
+        assert_eq!(score_entropy(&[0.0, 0.0]), 0.0, "zero mass");
+        assert_eq!(score_entropy(&[f32::NAN, 1.0]), 0.0, "non-finite scores report 0");
+        assert_eq!(score_entropy(&[-1.0, 2.0]), 0.0, "negative mass reports 0");
+    }
+
+    #[test]
+    fn audit_record_json_roundtrip() {
+        let r = AuditLayerRecord { layer: 2, cosine: 0.987, rel_err: 0.125, mem_bias: 0.03 };
+        let back = AuditLayerRecord::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, back);
+        assert!(AuditLayerRecord::from_json(&json::obj(vec![])).is_err());
+    }
+}

@@ -18,7 +18,11 @@
 //! * [`trace`] — a bounded ring-buffer event trace rendered as Chrome
 //!   trace-event JSON (`repro trace`, chrome://tracing);
 //! * [`prom`] — Prometheus text-format rendering used by the serve
-//!   tier's `metrics` op (protocol v5 `format: "prometheus"`).
+//!   tier's `metrics` op (protocol v5 `format: "prometheus"`);
+//! * [`audit`] — gradient-fidelity audit records and selection
+//!   diagnostics (Jaccard overlap, score entropy) for the
+//!   training-dynamics layer (ISSUE 7): measure how faithful the
+//!   K-of-M update is to the exact gradient, without perturbing it.
 //!
 //! Design contract (asserted by tests and BENCH_6):
 //! [`ObsConfig::off`] means **no timer reads** on the hot path;
@@ -28,14 +32,16 @@
 //! execution, so the exec determinism contract (bit-identical curves
 //! at any thread count) holds with obs on and off.
 
+pub mod audit;
 pub mod hist;
 pub mod prom;
 pub mod telemetry;
 pub mod trace;
 
+pub use audit::{jaccard, score_entropy, AuditLayerRecord};
 pub use hist::{AtomicHistogram, Histogram, BUCKETS};
 pub use prom::PromBuf;
-pub use telemetry::{LayerStat, Phase, PhaseRollup, PhaseStat, StepTelemetry};
+pub use telemetry::{LayerAudit, LayerStat, Phase, PhaseRollup, PhaseStat, StepTelemetry};
 pub use trace::{TraceEvent, TraceRing};
 
 /// Default trace-ring capacity when obs is enabled.

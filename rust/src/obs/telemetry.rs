@@ -7,6 +7,9 @@
 //! sub-phases *nested inside* `apply` — the per-layer outer-product
 //! shard dispatch (`dispatch`) and fixed-order reduction (`reduce`).
 //! `dispatch`/`reduce` totals therefore overlap `apply`, not add to it.
+//! The gradient-fidelity auditor (ISSUE 7) runs after `apply` on
+//! audited epochs only and times under its own `audit` phase, so
+//! non-audited steps record exactly the six historical phases.
 //!
 //! Hard constraints (ISSUE 6), and how they are met:
 //!
@@ -40,10 +43,11 @@ pub enum Phase {
     Apply,
     Dispatch,
     Reduce,
+    Audit,
 }
 
 impl Phase {
-    pub const COUNT: usize = 6;
+    pub const COUNT: usize = 7;
     pub const ALL: [Phase; Phase::COUNT] = [
         Phase::Fwd,
         Phase::Score,
@@ -51,6 +55,7 @@ impl Phase {
         Phase::Apply,
         Phase::Dispatch,
         Phase::Reduce,
+        Phase::Audit,
     ];
 
     /// Stable wire name (Prometheus labels, trace events, rollups).
@@ -62,6 +67,7 @@ impl Phase {
             Phase::Apply => "apply",
             Phase::Dispatch => "dispatch",
             Phase::Reduce => "reduce",
+            Phase::Audit => "audit",
         }
     }
 
@@ -88,6 +94,8 @@ pub struct StepTelemetry {
     layer_k_sum: Vec<u64>,
     /// Cumulative backward weight-gradient FLOPs per layer.
     layer_flops: Vec<u64>,
+    /// Most recent gradient-fidelity audit per layer (ISSUE 7).
+    layer_audit: Vec<LayerAudit>,
     trace: TraceRing,
 }
 
@@ -101,6 +109,7 @@ impl StepTelemetry {
             phases: std::array::from_fn(|_| Histogram::new()),
             layer_k_sum: vec![0; n_layers],
             layer_flops: vec![0; n_layers],
+            layer_audit: vec![LayerAudit::default(); n_layers],
             trace: TraceRing::with_capacity(trace_cap),
         }
     }
@@ -175,6 +184,21 @@ impl StepTelemetry {
         }
     }
 
+    /// Record one layer's gradient-fidelity audit (latest wins; the
+    /// count is cumulative). Pre-sized at construction — no allocation.
+    #[inline]
+    pub fn record_audit(&mut self, li: usize, cosine: f64, rel_err: f64, mem_bias: f64) {
+        if !self.cfg.enabled {
+            return;
+        }
+        if let Some(a) = self.layer_audit.get_mut(li) {
+            a.audits += 1;
+            a.cosine = cosine;
+            a.rel_err = rel_err;
+            a.mem_bias = mem_bias;
+        }
+    }
+
     pub fn steps(&self) -> u64 {
         self.steps
     }
@@ -222,10 +246,32 @@ impl StepTelemetry {
                 .layer_k_sum
                 .iter()
                 .zip(self.layer_flops.iter())
-                .map(|(&k_sum, &backward_flops)| LayerStat { k_sum, backward_flops })
+                .zip(self.layer_audit.iter())
+                .map(|((&k_sum, &backward_flops), &audit)| LayerStat {
+                    k_sum,
+                    backward_flops,
+                    audit,
+                })
                 .collect(),
         }
     }
+}
+
+/// The most recent gradient-fidelity audit of one layer (ISSUE 7):
+/// how the applied Mem-AOP update compared against the exact K=M
+/// same-mini-batch gradient. `audits == 0` means the layer was never
+/// audited and the float fields are meaningless.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LayerAudit {
+    /// Number of audits recorded for this layer.
+    pub audits: u64,
+    /// Cosine similarity of applied update vs exact gradient.
+    pub cosine: f64,
+    /// Relative Frobenius error ‖approx − exact‖ / ‖exact‖.
+    pub rel_err: f64,
+    /// ‖exact(memory-folded) − exact(raw)‖ / ‖exact(raw)‖ — how much
+    /// the error-feedback memory bends the exact gradient.
+    pub mem_bias: f64,
 }
 
 /// One phase's summary inside a [`PhaseRollup`].
@@ -239,12 +285,15 @@ pub struct PhaseStat {
 }
 
 /// One layer's cumulative realized budget inside a [`PhaseRollup`].
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct LayerStat {
     /// Cumulative realized K (distinct outer products) across steps.
     pub k_sum: u64,
     /// Cumulative backward weight-gradient FLOPs.
     pub backward_flops: u64,
+    /// Latest gradient-fidelity audit (ISSUE 7); `audits == 0` when
+    /// the run never audited.
+    pub audit: LayerAudit,
 }
 
 /// Frozen summary of a run's [`StepTelemetry`]: steps, per-phase
@@ -253,7 +302,7 @@ pub struct LayerStat {
 /// (protocol v5). Timings describe the run that happened — they never
 /// feed back into execution, so two runs of one seed may differ here
 /// while agreeing bit-for-bit on every curve.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PhaseRollup {
     pub steps: u64,
     pub phases: Vec<PhaseStat>,
@@ -287,10 +336,20 @@ impl PhaseRollup {
                     self.layers
                         .iter()
                         .map(|l| {
-                            json::obj(vec![
+                            let mut pairs = vec![
                                 ("k_sum", json::num(l.k_sum as f64)),
                                 ("backward_flops", json::num(l.backward_flops as f64)),
-                            ])
+                            ];
+                            // audit fields ride along only when the run
+                            // actually audited — un-audited rollups keep
+                            // the exact v5 frame shape
+                            if l.audit.audits > 0 {
+                                pairs.push(("audits", json::num(l.audit.audits as f64)));
+                                pairs.push(("audit_cosine", json::num(l.audit.cosine)));
+                                pairs.push(("audit_rel_err", json::num(l.audit.rel_err)));
+                                pairs.push(("audit_mem_bias", json::num(l.audit.mem_bias)));
+                            }
+                            json::obj(pairs)
                         })
                         .collect(),
                 ),
@@ -357,13 +416,19 @@ mod tests {
         assert_eq!(apply.count, 2);
         assert_eq!(apply.total_ns, 4000);
         assert!(apply.p50_ns >= 1000 && apply.p50_ns <= 2047, "{}", apply.p50_ns);
-        assert_eq!(r.layers, vec![LayerStat { k_sum: 9, backward_flops: 5000 }]);
+        assert_eq!(
+            r.layers,
+            vec![LayerStat { k_sum: 9, backward_flops: 5000, audit: LayerAudit::default() }]
+        );
         // JSON render keeps the stable phase names
         let j = r.to_json();
         let phases = j.get("phases").and_then(|p| p.as_arr()).unwrap();
         let names: Vec<&str> =
             phases.iter().filter_map(|p| p.get("phase").and_then(|n| n.as_str())).collect();
-        assert_eq!(names, vec!["fwd", "score", "select", "apply", "dispatch", "reduce"]);
+        assert_eq!(names, vec!["fwd", "score", "select", "apply", "dispatch", "reduce", "audit"]);
+        // un-audited layers keep the exact v5 layer frame shape
+        let layers = j.get("layers").and_then(|l| l.as_arr()).unwrap();
+        assert!(layers[0].get("audit_cosine").is_none());
     }
 
     #[test]
@@ -371,6 +436,28 @@ mod tests {
         // these names are a wire-format promise (Prometheus labels,
         // trace events, job views) — changing one is a breaking change
         let names: Vec<&str> = Phase::ALL.iter().map(|p| p.name()).collect();
-        assert_eq!(names, vec!["fwd", "score", "select", "apply", "dispatch", "reduce"]);
+        assert_eq!(names, vec!["fwd", "score", "select", "apply", "dispatch", "reduce", "audit"]);
+    }
+
+    #[test]
+    fn audit_records_latest_per_layer_and_renders_in_rollup() {
+        let mut t = StepTelemetry::new(ObsConfig::on(), 2);
+        t.record_audit(0, 0.5, 0.9, 0.1);
+        t.record_audit(0, 0.99, 0.05, 0.02);
+        let r = t.rollup();
+        let a0 = r.layers[0].audit;
+        assert_eq!(a0.audits, 2, "count is cumulative");
+        assert_eq!(a0.cosine, 0.99, "latest audit wins");
+        assert_eq!(r.layers[1].audit.audits, 0, "layer 1 never audited");
+        let j = r.to_json();
+        let layers = j.get("layers").and_then(|l| l.as_arr()).unwrap();
+        assert_eq!(layers[0].get("audit_cosine").and_then(|v| v.as_f64()), Some(0.99));
+        assert_eq!(layers[0].get("audit_rel_err").and_then(|v| v.as_f64()), Some(0.05));
+        assert_eq!(layers[0].get("audit_mem_bias").and_then(|v| v.as_f64()), Some(0.02));
+        assert!(layers[1].get("audit_cosine").is_none());
+        // disabled telemetry drops audits like every other record
+        let mut off = StepTelemetry::new(ObsConfig::off(), 1);
+        off.record_audit(0, 1.0, 0.0, 0.0);
+        assert_eq!(off.rollup().layers[0].audit.audits, 0);
     }
 }

@@ -23,10 +23,15 @@ use crate::util::json::{self, Json};
 /// Prometheus `op` label values). `error` collects frames that fail to
 /// parse into any op. These are a wire-format promise — only ever
 /// extended, never renamed.
-const OP_NAMES: [&str; 9] = [
-    "submit", "status", "result", "list", "cancel", "metrics", "ping", "shutdown", "error",
+const OP_NAMES: [&str; 10] = [
+    "submit", "status", "result", "list", "cancel", "metrics", "watch", "ping", "shutdown",
+    "error",
 ];
 const OP_ERROR: usize = OP_NAMES.len() - 1;
+
+/// Server-side clamp on a `watch` long-poll (protocol v6): bounds how
+/// long one request can hold a connection thread.
+const MAX_WATCH_WAIT_MS: u64 = 30_000;
 
 fn op_index(req: &Request) -> usize {
     match req {
@@ -36,8 +41,9 @@ fn op_index(req: &Request) -> usize {
         Request::List { .. } => 3,
         Request::Cancel { .. } => 4,
         Request::Metrics { .. } => 5,
-        Request::Ping => 6,
-        Request::Shutdown => 7,
+        Request::Watch { .. } => 6,
+        Request::Ping => 7,
+        Request::Shutdown => 8,
     }
 }
 
@@ -165,6 +171,21 @@ impl ServerState {
                 // covers parse + dispatch, not render time)
                 self.record_op(op, t0);
                 self.metrics_response(format)
+            }
+            Request::Watch { id, cursor, wait_ms } => {
+                let wait = std::time::Duration::from_millis(wait_ms.min(MAX_WATCH_WAIT_MS));
+                let resp = match self.registry.watch(id, cursor, wait) {
+                    Ok((epochs, next, state)) => ok_response(vec![
+                        ("epochs", Json::Arr(epochs)),
+                        ("cursor", json::num(next as f64)),
+                        ("state", json::s(state.name())),
+                    ]),
+                    Err(e) => err_response(&format!("{e:#}")),
+                };
+                // the sample includes the long-poll block — that IS this
+                // request's latency
+                self.record_op(op, t0);
+                resp
             }
             Request::Ping => {
                 let resp = ok_response(vec![
@@ -398,6 +419,46 @@ impl ServerState {
         for r in &rollup {
             p.sample("repro_policy_saved_ratio", &[("policy", r.policy.name())], r.saved_frac());
         }
+        // gradient-fidelity gauges (protocol v6): each job's most recent
+        // audit, one sample per layer. Jobs that never audited (no
+        // `audit` cadence in their config) export nothing.
+        let audits = self.registry.audit_snapshots();
+        p.header(
+            "repro_audit_epoch",
+            "gauge",
+            "Epoch of the job's most recent gradient-fidelity audit.",
+        );
+        for (id, epoch, _) in &audits {
+            p.sample("repro_audit_epoch", &[("job", &id.to_string())], *epoch as f64);
+        }
+        let audit_family = |p: &mut PromBuf, name: &str, help: &str, get: &dyn Fn(&crate::obs::AuditLayerRecord) -> f64| {
+            p.header(name, "gauge", help);
+            for (id, _, recs) in &audits {
+                let jid = id.to_string();
+                for r in recs {
+                    let layer = r.layer.to_string();
+                    p.sample(name, &[("job", &jid), ("layer", &layer)], get(r));
+                }
+            }
+        };
+        audit_family(
+            &mut p,
+            "repro_audit_cosine",
+            "Cosine similarity of the Mem-AOP update vs the exact same-batch gradient, per layer.",
+            &|r| r.cosine,
+        );
+        audit_family(
+            &mut p,
+            "repro_audit_rel_err",
+            "Relative Frobenius error of the Mem-AOP update vs the exact gradient, per layer.",
+            &|r| r.rel_err,
+        );
+        audit_family(
+            &mut p,
+            "repro_audit_mem_bias",
+            "Relative deviation of the memory-corrected update from the raw outer product, per layer.",
+            &|r| r.mem_bias,
+        );
         p.finish()
     }
 }
@@ -689,6 +750,117 @@ mod tests {
             text.contains("repro_request_latency_seconds_bucket{op=\"ping\",le=\"+Inf\"} 3\n"),
             "{text}"
         );
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn watch_op_streams_epochs_and_exports_audit_gauges() {
+        let st = state();
+        let mut cfg = quick_cfg(3);
+        cfg.audit = Some(1); // audit every epoch
+        let resp = st.handle(&json::obj(vec![
+            ("op", json::s("submit")),
+            ("config", cfg.to_json()),
+            ("tag", json::s("w")),
+        ]));
+        assert!(is_ok(&resp), "{}", resp.dump());
+        let id = resp.get("id").unwrap().as_f64().unwrap() as u64;
+        let mut cursor = 0usize;
+        let mut seen: Vec<Json> = Vec::new();
+        loop {
+            let r = st.handle(&json::obj(vec![
+                ("op", json::s("watch")),
+                ("id", json::num(id as f64)),
+                ("cursor", json::num(cursor as f64)),
+                ("wait_ms", json::num(1000.0)),
+            ]));
+            assert!(is_ok(&r), "{}", r.dump());
+            let batch = r.get("epochs").unwrap().as_arr().unwrap().to_vec();
+            cursor = r.get("cursor").unwrap().as_usize().unwrap();
+            let state = r.get("state").unwrap().as_str().unwrap().to_string();
+            let terminal = matches!(state.as_str(), "done" | "failed" | "cancelled");
+            let empty = batch.is_empty();
+            seen.extend(batch);
+            if terminal && empty {
+                break;
+            }
+            assert!(seen.len() <= 2, "watch delivered duplicate epochs");
+        }
+        assert_eq!(seen.len(), 2);
+        for (i, ep) in seen.iter().enumerate() {
+            assert_eq!(ep.get("epoch").unwrap().as_usize().unwrap(), i + 1);
+            let audit = ep.get("audit").unwrap().as_arr().unwrap();
+            assert_eq!(audit.len(), 1, "one record per layer");
+            let cos = audit[0].get("cosine").unwrap().as_f64().unwrap();
+            let rel = audit[0].get("rel_err").unwrap().as_f64().unwrap();
+            assert!(cos.is_finite() && cos.abs() <= 1.0 + 1e-9);
+            assert!(rel.is_finite() && rel > 0.0, "K=18 of 144 is approximate");
+        }
+        // watching an unknown job is an envelope error, not a hang
+        let r = st.handle(&json::obj(vec![
+            ("op", json::s("watch")),
+            ("id", json::num(404.0)),
+        ]));
+        assert!(!is_ok(&r));
+        // the job's last audit is exported as labelled gauges
+        let pr = st.handle(&json::obj(vec![
+            ("op", json::s("metrics")),
+            ("format", json::s("prometheus")),
+        ]));
+        let text = pr.get("text").unwrap().as_str().unwrap();
+        assert!(text.contains("# TYPE repro_audit_cosine gauge\n"), "{text}");
+        assert!(
+            text.contains(&format!("repro_audit_epoch{{job=\"{id}\"}} 2\n")),
+            "{text}"
+        );
+        for fam in ["repro_audit_cosine", "repro_audit_rel_err", "repro_audit_mem_bias"] {
+            assert!(
+                text.contains(&format!("{fam}{{job=\"{id}\",layer=\"0\"}}")),
+                "missing {fam} sample\n{text}"
+            );
+        }
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn every_prometheus_sample_family_has_help_and_type_headers() {
+        use std::collections::BTreeSet;
+        let st = state();
+        let resp = st.handle(&submit_req(5));
+        let id = resp.get("id").unwrap().as_f64().unwrap() as u64;
+        wait_done(&st, id); // populate job/policy/op families
+        let pr = st.handle(&json::obj(vec![
+            ("op", json::s("metrics")),
+            ("format", json::s("prometheus")),
+        ]));
+        assert!(is_ok(&pr), "{}", pr.dump());
+        let text = pr.get("text").unwrap().as_str().unwrap();
+        let mut typed = BTreeSet::new();
+        let mut helped = BTreeSet::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                typed.insert(rest.split(' ').next().unwrap().to_string());
+            } else if let Some(rest) = line.strip_prefix("# HELP ") {
+                helped.insert(rest.split(' ').next().unwrap().to_string());
+            }
+        }
+        assert_eq!(typed, helped, "HELP and TYPE must come in pairs");
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let name = line.split(['{', ' ']).next().unwrap();
+            let family = name
+                .strip_suffix("_bucket")
+                .or_else(|| name.strip_suffix("_sum"))
+                .or_else(|| name.strip_suffix("_count"))
+                .unwrap_or(name);
+            assert!(
+                typed.contains(family) || typed.contains(name),
+                "sample '{name}' has no # TYPE header"
+            );
+        }
+        // the v6 audit families are declared even with no audited jobs
+        for fam in ["repro_audit_epoch", "repro_audit_cosine", "repro_audit_rel_err", "repro_audit_mem_bias"] {
+            assert!(typed.contains(fam), "missing header for {fam}");
+        }
         st.scheduler.shutdown();
     }
 

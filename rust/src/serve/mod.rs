@@ -7,11 +7,14 @@
 //! CLI coordinator into that shared service:
 //!
 //! * [`protocol`] — newline-delimited JSON over TCP (`submit` / `status` /
-//!   `result` / `list` / `cancel` / `metrics` / `ping` / `shutdown`),
-//!   plus the blocking [`Client`] used by `examples/serve_client.rs`;
+//!   `result` / `list` / `cancel` / `metrics` / `watch` / `ping` /
+//!   `shutdown`), plus the blocking [`Client`] used by
+//!   `examples/serve_client.rs`;
 //! * [`registry`] — the authoritative job table
 //!   (`queued → running → done | failed | cancelled`), persisted through
-//!   `coordinator::checkpoint` so completed runs survive restarts;
+//!   `coordinator::checkpoint` so completed runs survive restarts; holds
+//!   each live job's bounded per-epoch frame ring behind the `watch`
+//!   long-poll (protocol v6) and the `repro_audit_*` gauge snapshots;
 //! * [`queue`] — bounded FIFO over the shared `util::pool::TaskPool`
 //!   driving `experiment::run_with` with per-epoch progress streaming,
 //!   epoch-boundary cancellation, and thread-slot accounting for

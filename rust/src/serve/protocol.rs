@@ -13,6 +13,8 @@
 //! | `list`     | `compact` (optional)        | `jobs` — array of job views        |
 //! | `cancel`   | `id`                        | `state` — `cancelled`/`cancelling` |
 //! | `metrics`  | `format` (optional)         | queue/job/FLOP/latency metrics     |
+//! | `watch`    | `id`, `cursor` (optional),  | `epochs`, `cursor`, `state`        |
+//! |            | `wait_ms` (optional)        |                                    |
 //! | `ping`     | —                           | `protocol`, `uptime_s`             |
 //! | `shutdown` | —                           | `state: shutting-down`             |
 //!
@@ -65,6 +67,21 @@
 //! see README §Observability). Older frames remain accepted and mean
 //! the non-compact JSON forms.
 //!
+//! Protocol v6 is the training-dynamics streaming surface. `watch` is a
+//! long-poll: it returns every epoch record of job `id` with epoch
+//! number > `cursor` (default 0 = from the start) as soon as at least
+//! one exists, blocking up to `wait_ms` (default 10s, server-clamped)
+//! when none do yet; the response carries `epochs` (full per-epoch
+//! metric objects, including per-layer selection diagnostics and —
+//! when the job's config set an `audit` cadence — per-layer
+//! gradient-fidelity `audit` records), the `cursor` to pass next, and
+//! the job's current `state` so clients stop cleanly on
+//! `done`/`failed`/`cancelled`. Epoch records are held in a bounded
+//! per-job ring: a cursor older than the ring's tail resumes from the
+//! oldest retained epoch (no error, no duplicates). Audit fidelity for
+//! the last audited epoch of each job is also exported as
+//! `repro_audit_*` Prometheus gauges.
+//!
 //! [`Client`] is a small blocking client used by `examples/serve_client.rs`
 //! and the integration tests.
 
@@ -87,8 +104,12 @@ use crate::util::json::{self, Json};
 /// resolved `k_first`/`k_last` per layer. v5: observability — `compact`
 /// views on `status`/`list`, `phases` rollups in full job views, and
 /// `metrics` format selection (json/compact/prometheus) with per-op
-/// latency histograms. Older frames remain accepted.
-pub const PROTOCOL_VERSION: u64 = 5;
+/// latency histograms. v6: training-dynamics streaming — the `watch`
+/// long-poll op (per-epoch metric frames with selection diagnostics and
+/// gradient-fidelity audit records, cursor-resumable), the config
+/// `audit` cadence field, and `repro_audit_*` Prometheus gauges. Older
+/// frames remain accepted.
+pub const PROTOCOL_VERSION: u64 = 6;
 
 /// Rendering of the `metrics` response (protocol v5 `format` field).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -124,6 +145,7 @@ pub enum Request {
     List { compact: bool },
     Cancel { id: u64 },
     Metrics { format: MetricsFormat },
+    Watch { id: u64, cursor: usize, wait_ms: u64 },
     Ping,
     Shutdown,
 }
@@ -170,11 +192,28 @@ impl Request {
                 };
                 Request::Metrics { format }
             }
+            "watch" => {
+                // v6 long-poll; optional fields keep the frame minimal
+                let opt_int = |k: &str, default: f64| -> Result<f64> {
+                    match v.get(k) {
+                        None => Ok(default),
+                        Some(n) => n
+                            .as_f64()
+                            .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+                            .ok_or_else(|| anyhow!("watch field '{k}' must be a non-negative integer")),
+                    }
+                };
+                Request::Watch {
+                    id: id()?,
+                    cursor: opt_int("cursor", 0.0)? as usize,
+                    wait_ms: opt_int("wait_ms", 10_000.0)? as u64,
+                }
+            }
             "ping" => Request::Ping,
             "shutdown" => Request::Shutdown,
             other => bail!(
                 "unknown op '{other}' (expected one of: submit, status, result, \
-                 list, cancel, metrics, ping, shutdown)"
+                 list, cancel, metrics, watch, ping, shutdown)"
             ),
         })
     }
@@ -359,6 +398,40 @@ impl Client {
             .to_string())
     }
 
+    /// Long-poll one batch of epoch records past `cursor` (protocol v6).
+    /// Returns `(epochs, next_cursor, state)`; an empty batch after
+    /// `wait_ms` of quiet is not an error. Stop once `state` is
+    /// terminal (`done`/`failed`/`cancelled`) and the batch is empty.
+    pub fn watch(
+        &mut self,
+        id: u64,
+        cursor: usize,
+        wait_ms: u64,
+    ) -> Result<(Vec<Json>, usize, String)> {
+        let req = json::obj(vec![
+            ("op", json::s("watch")),
+            ("id", json::num(id as f64)),
+            ("cursor", json::num(cursor as f64)),
+            ("wait_ms", json::num(wait_ms as f64)),
+        ]);
+        let resp = self.call_ok(&req)?;
+        let epochs = resp
+            .get("epochs")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("watch response missing 'epochs'"))?
+            .to_vec();
+        let next = resp
+            .get("cursor")
+            .and_then(|n| n.as_usize())
+            .ok_or_else(|| anyhow!("watch response missing 'cursor'"))?;
+        let state = resp
+            .get("state")
+            .and_then(|s| s.as_str())
+            .ok_or_else(|| anyhow!("watch response missing 'state'"))?
+            .to_string();
+        Ok((epochs, next, state))
+    }
+
     /// Server metrics snapshot.
     pub fn metrics(&mut self) -> Result<Json> {
         self.call_ok(&json::obj(vec![("op", json::s("metrics"))]))
@@ -416,6 +489,7 @@ mod tests {
             ("status", true),
             ("result", true),
             ("cancel", true),
+            ("watch", true),
             ("list", false),
             ("metrics", false),
             ("ping", false),
@@ -470,6 +544,36 @@ mod tests {
         let bad = json::obj(vec![("op", json::s("metrics")), ("format", json::s("xml"))]);
         let err = Request::from_json(&bad).unwrap_err();
         assert!(format!("{err:#}").contains("unknown metrics format"), "{err:#}");
+    }
+
+    #[test]
+    fn parses_v6_watch_fields() {
+        // minimal frame: cursor defaults to 0, wait_ms to the 10s default
+        let w = json::obj(vec![("op", json::s("watch")), ("id", json::num(3.0))]);
+        assert!(matches!(
+            Request::from_json(&w).unwrap(),
+            Request::Watch { id: 3, cursor: 0, wait_ms: 10_000 }
+        ));
+        let w = json::obj(vec![
+            ("op", json::s("watch")),
+            ("id", json::num(3.0)),
+            ("cursor", json::num(5.0)),
+            ("wait_ms", json::num(250.0)),
+        ]);
+        assert!(matches!(
+            Request::from_json(&w).unwrap(),
+            Request::Watch { id: 3, cursor: 5, wait_ms: 250 }
+        ));
+        // id stays mandatory; malformed optionals are protocol errors
+        assert!(Request::from_json(&json::obj(vec![("op", json::s("watch"))])).is_err());
+        for (k, v) in [("cursor", -1.0), ("cursor", 1.5), ("wait_ms", -2.0)] {
+            let bad = json::obj(vec![
+                ("op", json::s("watch")),
+                ("id", json::num(3.0)),
+                (k, json::num(v)),
+            ]);
+            assert!(Request::from_json(&bad).is_err(), "{k}={v}");
+        }
     }
 
     #[test]

@@ -250,7 +250,9 @@ fn run_job(registry: &Arc<Registry>, id: u64) {
     // sit in `running` forever while clients poll it.
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         experiment::run_with(&cfg, &mut |m| {
-            registry.update_progress(id, m.epoch);
+            // full epoch frame (protocol v6): advances progress, feeds
+            // the watch ring, and refreshes the audit gauges
+            registry.record_epoch(id, m);
             if cancel.load(Ordering::Relaxed) {
                 stopped_early = true;
                 return false;

@@ -8,10 +8,11 @@
 //! rank-3 JSON bytes entries) next to the final weights — so a restarted
 //! server reloads its history and keeps allocating fresh ids above it.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -19,9 +20,14 @@ use crate::aop::{flops, Policy};
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::experiment::RunResult;
-use crate::metrics::RunCurve;
-use crate::obs::PhaseRollup;
+use crate::metrics::{EpochMetrics, RunCurve};
+use crate::obs::{AuditLayerRecord, PhaseRollup};
 use crate::util::json::{self, Json};
+
+/// Epoch frames retained per job for `watch` (protocol v6). A cursor
+/// older than the ring's tail resumes from the oldest retained epoch —
+/// bounded memory per job, no error for slow subscribers.
+pub const EPOCH_RING_CAP: usize = 256;
 
 /// Lifecycle state of one job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -60,8 +66,40 @@ struct Job {
     /// Per-phase telemetry rollup from the finished run (protocol v5).
     /// In-memory only — not persisted, so restored jobs carry `None`.
     phases: Option<PhaseRollup>,
+    /// Rendered per-epoch metric frames for `watch` (protocol v6):
+    /// `ring[i]` is epoch `ring_first + i`. Bounded at
+    /// [`EPOCH_RING_CAP`]; in-memory only (restored jobs stream nothing).
+    ring: VecDeque<Json>,
+    ring_first: usize,
+    /// Last audited epoch's per-layer fidelity records — the source of
+    /// the `repro_audit_*` Prometheus gauges.
+    last_audit: Option<(usize, Vec<AuditLayerRecord>)>,
     cancel: Arc<AtomicBool>,
     restored: bool,
+}
+
+impl Job {
+    /// Append one epoch frame to the watch ring (evicting the oldest
+    /// past [`EPOCH_RING_CAP`]) and refresh the audit snapshot.
+    fn push_epoch(&mut self, m: &EpochMetrics) {
+        if self.ring.is_empty() {
+            self.ring_first = m.epoch;
+        } else if m.epoch != self.ring_first + self.ring.len() {
+            // out-of-order or duplicate epoch (defensive; the observer
+            // delivers them sequentially) — ignore rather than corrupt
+            // the ring's epoch arithmetic
+            return;
+        }
+        if self.ring.len() == EPOCH_RING_CAP {
+            self.ring.pop_front();
+            self.ring_first += 1;
+        }
+        self.ring.push_back(m.to_json());
+        self.epochs_done = self.epochs_done.max(m.epoch);
+        if !m.audit.is_empty() {
+            self.last_audit = Some((m.epoch, m.audit.clone()));
+        }
+    }
 }
 
 /// Read-only snapshot of a job, served to protocol clients.
@@ -204,6 +242,9 @@ impl PolicyRollup {
 /// it shareable across the scheduler and connection threads via `Arc`.
 pub struct Registry {
     jobs: Mutex<BTreeMap<u64, Job>>,
+    /// Signalled (paired with `jobs`) whenever a job gains an epoch
+    /// frame or reaches a terminal state — wakes `watch` long-polls.
+    epoch_cv: Condvar,
     next_id: AtomicU64,
     dir: Option<PathBuf>,
 }
@@ -241,6 +282,7 @@ impl Registry {
         }
         Ok(Registry {
             jobs: Mutex::new(jobs),
+            epoch_cv: Condvar::new(),
             next_id: AtomicU64::new(max_id + 1),
             dir,
         })
@@ -257,6 +299,9 @@ impl Registry {
             error: None,
             curve: None,
             phases: None,
+            ring: VecDeque::new(),
+            ring_first: 1,
+            last_audit: None,
             cancel: Arc::new(AtomicBool::new(false)),
             restored: false,
         };
@@ -275,6 +320,9 @@ impl Registry {
         }
         if job.cancel.load(Ordering::Relaxed) {
             job.state = JobState::Cancelled;
+            drop(jobs);
+            // terminal transition: release any watch long-polls
+            self.epoch_cv.notify_all();
             return None;
         }
         job.state = JobState::Running;
@@ -295,6 +343,69 @@ impl Registry {
         }
     }
 
+    /// Record one finished epoch's full metric frame (protocol v6;
+    /// called from the worker's observer). Advances `epochs_done`,
+    /// appends to the job's watch ring, refreshes the audit gauges, and
+    /// wakes every long-polling `watch`.
+    pub fn record_epoch(&self, id: u64, m: &EpochMetrics) {
+        {
+            let mut jobs = self.jobs.lock().unwrap();
+            let Some(job) = jobs.get_mut(&id) else { return };
+            job.push_epoch(m);
+        }
+        self.epoch_cv.notify_all();
+    }
+
+    /// Long-poll epoch frames with epoch number > `cursor` (protocol v6
+    /// `watch`): returns `(frames, next_cursor, state)` as soon as at
+    /// least one frame is available or the job is terminal, else blocks
+    /// up to `timeout` and returns an empty batch. Cursors older than
+    /// the ring's tail resume from the oldest retained epoch.
+    pub fn watch(
+        &self,
+        id: u64,
+        cursor: usize,
+        timeout: Duration,
+    ) -> Result<(Vec<Json>, usize, JobState)> {
+        let deadline = Instant::now() + timeout;
+        let mut jobs = self.jobs.lock().unwrap();
+        loop {
+            let job = jobs.get(&id).ok_or_else(|| anyhow!("no job {id}"))?;
+            let mut out = Vec::new();
+            let mut next = cursor;
+            for (i, frame) in job.ring.iter().enumerate() {
+                let ep = job.ring_first + i;
+                if ep > cursor {
+                    out.push(frame.clone());
+                    next = ep;
+                }
+            }
+            if !out.is_empty() || job.state.is_terminal() {
+                return Ok((out, next, job.state));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok((out, next, job.state));
+            }
+            let (guard, _) = self
+                .epoch_cv
+                .wait_timeout(jobs, deadline - now)
+                .unwrap();
+            jobs = guard;
+        }
+    }
+
+    /// Last audited epoch per job, for the `repro_audit_*` Prometheus
+    /// gauges: `(job id, epoch, per-layer records)`.
+    pub fn audit_snapshots(&self) -> Vec<(u64, usize, Vec<AuditLayerRecord>)> {
+        let jobs = self.jobs.lock().unwrap();
+        jobs.iter()
+            .filter_map(|(id, j)| {
+                j.last_audit.as_ref().map(|(e, r)| (*id, *e, r.clone()))
+            })
+            .collect()
+    }
+
     /// Request cancellation. Queued jobs are finalized immediately;
     /// running jobs stop at the next epoch boundary. Terminal jobs error.
     pub fn cancel(&self, id: u64) -> Result<JobState> {
@@ -306,6 +417,8 @@ impl Registry {
             JobState::Queued => {
                 job.cancel.store(true, Ordering::Relaxed);
                 job.state = JobState::Cancelled;
+                drop(jobs);
+                self.epoch_cv.notify_all();
                 Ok(JobState::Cancelled)
             }
             JobState::Running => {
@@ -324,6 +437,12 @@ impl Registry {
             let Some(job) = jobs.get_mut(&id) else { return };
             job.state = JobState::Done;
             job.epochs_done = r.curve.epochs.len();
+            // backfill the watch ring for epochs the observer never
+            // delivered (callers driving finish_ok directly); already
+            // recorded epochs dedupe inside push_epoch
+            for m in &r.curve.epochs {
+                job.push_epoch(m);
+            }
             job.curve = Some(r.curve.clone());
             job.phases = r.phases.clone();
             job.error = None;
@@ -331,6 +450,7 @@ impl Registry {
                 .as_ref()
                 .map(|d| (d.join(job_file_name(id)), job.tag.clone()))
         };
+        self.epoch_cv.notify_all();
         if let Some((path, tag)) = persist {
             if let Err(e) = persist_job(&path, id, &tag, r) {
                 eprintln!("[serve] persisting job {id} failed: {e:#}");
@@ -344,6 +464,7 @@ impl Registry {
             job.state = JobState::Failed;
             job.error = Some(msg);
         }
+        self.epoch_cv.notify_all();
     }
 
     /// Finalize a cancelled run; a partial curve (epochs completed before
@@ -353,10 +474,14 @@ impl Registry {
             job.state = JobState::Cancelled;
             if let Some(r) = partial {
                 job.epochs_done = r.curve.epochs.len();
+                for m in &r.curve.epochs {
+                    job.push_epoch(m);
+                }
                 job.curve = Some(r.curve.clone());
                 job.phases = r.phases.clone();
             }
         }
+        self.epoch_cv.notify_all();
     }
 
     /// Snapshot of one job.
@@ -541,6 +666,9 @@ fn load_job_file(path: &Path) -> Result<Job> {
         error: None,
         curve: Some(curve),
         phases: None,
+        ring: VecDeque::new(),
+        ring_first: 1,
+        last_audit: None,
         cancel: Arc::new(AtomicBool::new(false)),
         restored: true,
     })
@@ -610,6 +738,77 @@ mod tests {
         assert_eq!(compact.get("id").unwrap().as_usize().unwrap(), id as usize);
         assert_eq!(compact.get("state").unwrap().as_str().unwrap(), "done");
         assert_eq!(compact.get("epochs_done").unwrap().as_usize().unwrap(), 3);
+    }
+
+    #[test]
+    fn watch_streams_epochs_and_resumes_from_cursor() {
+        let reg = Registry::new(None).unwrap();
+        let id = reg.submit(quick_cfg(4), "w");
+        let (cfg, _) = reg.mark_running(id).unwrap();
+        // no frames yet: zero-timeout watch returns an empty live batch
+        let (e0, c0, s0) = reg.watch(id, 0, Duration::from_millis(0)).unwrap();
+        assert!(e0.is_empty());
+        assert_eq!(c0, 0);
+        assert_eq!(s0, JobState::Running);
+        let r = experiment::run_with(&cfg, &mut |m| {
+            reg.record_epoch(id, m);
+            true
+        })
+        .unwrap();
+        let (e1, c1, _) = reg.watch(id, 0, Duration::from_millis(0)).unwrap();
+        assert_eq!(e1.len(), 3);
+        assert_eq!(c1, 3);
+        // frames are full epoch metric objects
+        assert_eq!(e1[0].get("epoch").unwrap().as_usize().unwrap(), 1);
+        assert!(e1[0].get("train_loss").is_some());
+        // mid-stream cursor resume
+        let (e3, c3, _) = reg.watch(id, 1, Duration::from_millis(0)).unwrap();
+        assert_eq!(e3.len(), 2);
+        assert_eq!(c3, 3);
+        // finish_ok backfill dedupes against already-recorded epochs
+        reg.finish_ok(id, &r);
+        let (e2, c2, s2) = reg.watch(id, c1, Duration::from_millis(0)).unwrap();
+        assert!(e2.is_empty());
+        assert_eq!(c2, 3);
+        assert_eq!(s2, JobState::Done);
+        // unknown jobs are an error, not a hang
+        assert!(reg.watch(999, 0, Duration::from_millis(0)).is_err());
+    }
+
+    #[test]
+    fn watch_long_poll_wakes_on_terminal_transition() {
+        let reg = Arc::new(Registry::new(None).unwrap());
+        let id = reg.submit(quick_cfg(6), "");
+        let r2 = reg.clone();
+        let h = std::thread::spawn(move || r2.watch(id, 0, Duration::from_secs(10)).unwrap());
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(reg.cancel(id).unwrap(), JobState::Cancelled);
+        let (frames, _, state) = h.join().unwrap();
+        assert!(frames.is_empty());
+        assert_eq!(state, JobState::Cancelled);
+    }
+
+    #[test]
+    fn audit_snapshots_track_the_last_audited_epoch() {
+        let reg = Registry::new(None).unwrap();
+        let mut cfg = quick_cfg(9);
+        cfg.audit = Some(2); // 3 epochs → audited at 1 and 3
+        let id = reg.submit(cfg, "");
+        let (cfg, _) = reg.mark_running(id).unwrap();
+        let r = experiment::run_with(&cfg, &mut |m| {
+            reg.record_epoch(id, m);
+            true
+        })
+        .unwrap();
+        reg.finish_ok(id, &r);
+        let snaps = reg.audit_snapshots();
+        assert_eq!(snaps.len(), 1);
+        let (sid, epoch, recs) = &snaps[0];
+        assert_eq!(*sid, id);
+        assert_eq!(*epoch, 3);
+        assert_eq!(recs.len(), 1);
+        assert!(recs[0].cosine.is_finite());
+        assert!(recs[0].rel_err > 0.0);
     }
 
     #[test]

@@ -32,7 +32,7 @@ pub mod workspace;
 pub use graph::{Graph, GraphState, LayerState};
 pub use layer::{AopLayerConfig, Dense};
 pub use step::{
-    aop_weight_grad_ws, apply, fwd_score, select_layers_ws, select_with_configs, train_step,
-    train_step_exact, train_step_exact_ws, train_step_ws, StepOutcome,
+    aop_weight_grad_ws, apply, audit_into, fwd_score, select_layers_ws, select_with_configs,
+    train_step, train_step_exact, train_step_exact_ws, train_step_ws, StepOutcome,
 };
 pub use workspace::GraphWorkspace;

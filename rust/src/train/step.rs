@@ -43,7 +43,7 @@ use crate::exec::plan::ShardPlan;
 use crate::exec::{shard, Executor};
 use crate::model::activations::Activation;
 use crate::model::loss::correct_rows;
-use crate::obs::Phase;
+use crate::obs::{AuditLayerRecord, Phase};
 use crate::tensor::{ops, rng::Rng, Matrix};
 
 use crate::train::graph::{Graph, GraphState};
@@ -446,6 +446,143 @@ fn reduce_wstar_into_ws(
     ws.obs.finish(Phase::Reduce, t_red);
 }
 
+/// Gradient-fidelity audit (ISSUE 7 tentpole): measure the update
+/// [`apply`] just made against the exact same-mini-batch gradient,
+/// **without touching the run**. Must be called immediately after
+/// [`apply`], while the step's buffers are still resident:
+///
+/// * `ws.wstar[li]` holds the applied approximate update — it is set
+///   aside into audit scratch (nothing reads it again until the next
+///   `apply`, which zeroes it first);
+/// * `ws.xhat/ghat` still hold `fwd_score`'s memory-folded `X̂/Ĝ` —
+///   re-running the fixed-order reduction with the deterministic K=M
+///   selection ([`policy::select_exact_into`]: no RNG consumed) yields
+///   the exact memory-corrected gradient the policy was subsampling;
+/// * for memory-enabled layers, the dead `xhat/ghat` buffers are then
+///   overwritten with the raw √η-scaled inputs and reduced once more,
+///   giving the exact *raw* gradient — the distance between the two
+///   exacts is how much the banked residual bends this step's gradient.
+///
+/// Per layer, `out` receives cosine similarity and relative Frobenius
+/// error of approx-vs-exact plus that memory bias (f64 accumulation).
+/// Observation-only contract: no RNG stream is consumed, no graph or
+/// state value is written, only dead workspace buffers are clobbered —
+/// audit-on curves are bit-identical to audit-off (asserted in
+/// `rust/tests/exec.rs`) and steady-state audited steps allocate
+/// nothing once the audit scratch exists (BENCH_8). Timed under
+/// [`Phase::Audit`]; results are also recorded into the telemetry's
+/// per-layer last-audit slots for job-view rollups.
+#[allow(clippy::too_many_arguments)]
+pub fn audit_into(
+    graph: &Graph,
+    state: &GraphState,
+    x: &Matrix,
+    eta: f32,
+    exec: &Executor,
+    compact: bool,
+    ws: &mut GraphWorkspace,
+    out: &mut Vec<AuditLayerRecord>,
+) {
+    let n = graph.layers.len();
+    assert_eq!(state.layers.len(), n, "state layers vs graph layers");
+    assert_eq!(ws.layer_k.len(), n, "audit_into must follow a completed apply");
+    let m = ws.batch;
+    assert_eq!(x.rows(), m, "audit batch vs workspace key");
+    let se = eta.sqrt();
+    let plan = exec.plan(m);
+    ws.ensure_audit();
+    out.clear();
+    let t_audit = ws.obs.start();
+    // the K=M selection is deterministic: every row, unit scale, no RNG
+    let mut sel = std::mem::replace(&mut ws.audit_sel, Selection::with_capacity(0));
+    policy::select_exact_into(m, &mut sel);
+    for li in 0..n {
+        // set the applied update aside — wstar is dead until next apply
+        ws.audit_approx[li].data_mut().copy_from_slice(ws.wstar[li].data());
+        // exact memory-corrected gradient from the resident foldings
+        reduce_wstar_into_ws(ws, li, &sel, compact, exec);
+        ws.audit_exact[li].data_mut().copy_from_slice(ws.wstar[li].data());
+        let (cosine, rel_err) =
+            cosine_and_rel_err(ws.audit_approx[li].data(), ws.audit_exact[li].data());
+        // memory-off layers fold nothing: folded == raw, bias is 0 by
+        // construction — skip the second reduction
+        let mem_bias = if state.layers[li].mem.enabled {
+            let xin: &Matrix = if li == 0 { x } else { &ws.acts[li - 1] };
+            let g = &ws.grads[li];
+            let xh_blocks = shard::RowBlocks::of(&mut ws.xhat[li], &plan);
+            let gh_blocks = shard::RowBlocks::of(&mut ws.ghat[li], &plan);
+            exec.run_each(&plan, |si, rows| {
+                // SAFETY (×2): run_each claims each shard index exactly once
+                let xh = unsafe { xh_blocks.block(si) };
+                shard::scale_rows(xin, se, rows.clone(), xh);
+                let gh = unsafe { gh_blocks.block(si) };
+                shard::scale_rows(g, se, rows, gh);
+            });
+            reduce_wstar_into_ws(ws, li, &sel, compact, exec);
+            rel_norm_diff(ws.audit_exact[li].data(), ws.wstar[li].data())
+        } else {
+            0.0
+        };
+        ws.obs.record_audit(li, cosine, rel_err, mem_bias);
+        out.push(AuditLayerRecord { layer: li, cosine, rel_err, mem_bias });
+    }
+    ws.audit_sel = sel;
+    ws.obs.finish(Phase::Audit, t_audit);
+}
+
+/// Cosine similarity and relative Frobenius error of `approx` against
+/// the `exact` reference, accumulated in f64. Degenerate conventions:
+/// two zero vectors are identical (cosine 1, error 0); one zero vector
+/// has cosine 0; a zero reference with a non-zero approx has infinite
+/// relative error.
+fn cosine_and_rel_err(approx: &[f32], exact: &[f32]) -> (f64, f64) {
+    debug_assert_eq!(approx.len(), exact.len());
+    let (mut dot, mut na, mut nb, mut dd) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for (&a, &e) in approx.iter().zip(exact.iter()) {
+        let (a, e) = (a as f64, e as f64);
+        dot += a * e;
+        na += a * a;
+        nb += e * e;
+        let d = a - e;
+        dd += d * d;
+    }
+    let cosine = if na > 0.0 && nb > 0.0 {
+        dot / (na.sqrt() * nb.sqrt())
+    } else if na == 0.0 && nb == 0.0 {
+        1.0
+    } else {
+        0.0
+    };
+    let rel_err = if nb > 0.0 {
+        dd.sqrt() / nb.sqrt()
+    } else if dd == 0.0 {
+        0.0
+    } else {
+        f64::INFINITY
+    };
+    (cosine, rel_err)
+}
+
+/// `‖a − b‖ / ‖b‖` in f64 (same degenerate conventions as
+/// [`cosine_and_rel_err`]'s relative error).
+fn rel_norm_diff(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let (mut nb, mut dd) = (0.0f64, 0.0f64);
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        let y64 = y as f64;
+        nb += y64 * y64;
+        let d = x as f64 - y64;
+        dd += d * d;
+    }
+    if nb > 0.0 {
+        dd.sqrt() / nb.sqrt()
+    } else if dd == 0.0 {
+        0.0
+    } else {
+        f64::INFINITY
+    }
+}
+
 /// One layer's reduced AOP weight gradient `Ŵ*` as an owned `n × p`
 /// matrix, recomputed from the workspace's last `fwd_score` buffers —
 /// the optimizer path (Remark 1), which hands the raw gradient to an
@@ -662,6 +799,90 @@ mod tests {
         // and the obs-off workspace recorded nothing
         assert_eq!(wb.obs().steps(), 0);
         assert!(wb.obs().phase(Phase::Fwd).is_empty());
+    }
+
+    #[test]
+    fn audit_of_exact_memory_off_step_is_perfect() {
+        // K=M with no memory: the "approximate" update IS the exact
+        // gradient, so the auditor must report zero error bit-for-bit
+        let mut rng = Rng::new(13);
+        let mut g = Graph::relu_mlp(&mut rng, &[5, 7, 2], LossKind::Mse);
+        let (x, y) = toy_data(&mut rng, 16, 5, 2);
+        let mut state = GraphState::exact(&g, 16);
+        let exec = Executor::serial();
+        let mut ws = GraphWorkspace::new(&g, 16);
+        train_step_exact_ws(&mut g, &mut state, &x, &y, 0.05, &exec, &mut ws);
+        let mut recs = Vec::new();
+        audit_into(&g, &state, &x, 0.05, &exec, true, &mut ws, &mut recs);
+        assert_eq!(recs.len(), 2);
+        for r in &recs {
+            assert_eq!(r.rel_err, 0.0, "layer {}: K=M is the exact gradient", r.layer);
+            assert!((r.cosine - 1.0).abs() < 1e-12, "layer {} cosine {}", r.layer, r.cosine);
+            assert_eq!(r.mem_bias, 0.0, "no memory ⇒ no bias");
+        }
+    }
+
+    #[test]
+    fn audit_is_observation_only_and_detects_memory_bias() {
+        let mk = || {
+            let mut rng = Rng::new(23);
+            let g = Graph::relu_mlp(&mut rng, &[6, 9, 3], LossKind::Mse);
+            let st = GraphState::uniform(&g, 16, Policy::TopK, 4, true);
+            (g, st)
+        };
+        let mut rng = Rng::new(31);
+        let (x, y) = toy_data(&mut rng, 16, 6, 3);
+        let exec = Executor::serial();
+        let (mut ga, mut sta) = mk();
+        let (mut gb, mut stb) = mk();
+        let mut ra = Rng::new(55);
+        let mut rb = Rng::new(55);
+        let mut wa = GraphWorkspace::new(&ga, 16);
+        let mut wb = GraphWorkspace::new(&gb, 16);
+        let mut recs = Vec::new();
+        for step in 0..4 {
+            let a = train_step_ws(&mut ga, &mut sta, &x, &y, 0.05, &mut ra, &exec, true, &mut wa);
+            audit_into(&ga, &sta, &x, 0.05, &exec, true, &mut wa, &mut recs);
+            let b = train_step_ws(&mut gb, &mut stb, &x, &y, 0.05, &mut rb, &exec, true, &mut wb);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step}");
+            assert_eq!(a.wstar_fro.to_bits(), b.wstar_fro.to_bits(), "step {step}");
+            assert_eq!(recs.len(), 2);
+            for r in &recs {
+                assert!(
+                    r.cosine.is_finite() && r.cosine.abs() <= 1.0 + 1e-9,
+                    "cosine {}",
+                    r.cosine
+                );
+                assert!(
+                    r.rel_err.is_finite() && r.rel_err > 0.0,
+                    "k=4 of m=16 must show approximation error, got {}",
+                    r.rel_err
+                );
+                assert!(r.mem_bias.is_finite());
+            }
+            if step > 0 {
+                // after one retention the banked residual must bend the
+                // exact gradient somewhere
+                assert!(recs.iter().any(|r| r.mem_bias > 0.0), "step {step}: {recs:?}");
+            }
+        }
+        // the audited run's weights are bit-identical to the unaudited one
+        for (la, lb) in ga.layers.iter().zip(gb.layers.iter()) {
+            assert_eq!(la.w.data(), lb.w.data(), "audit must never change the math");
+            assert_eq!(la.b, lb.b);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "completed apply")]
+    fn audit_without_apply_panics() {
+        let mut rng = Rng::new(14);
+        let g = Graph::relu_mlp(&mut rng, &[4, 2], LossKind::Mse);
+        let state = GraphState::exact(&g, 8);
+        let mut ws = GraphWorkspace::new(&g, 8);
+        let x = Matrix::from_fn(8, 4, |_, _| 0.5);
+        let mut recs = Vec::new();
+        audit_into(&g, &state, &x, 0.1, &Executor::serial(), true, &mut ws, &mut recs);
     }
 
     #[test]

@@ -90,6 +90,14 @@ pub struct GraphWorkspace {
     /// here so recording on the hot path allocates nothing. Off by
     /// default for raw workspaces; `NativeTrainer` turns it on.
     pub(crate) obs: StepTelemetry,
+
+    /// Audit scratch (ISSUE 7), sized lazily by [`Self::ensure_audit`]
+    /// so audit-off runs pay nothing: per-layer copies of the applied
+    /// update and the exact folded gradient (both in the layer's
+    /// [`ops::aop_layout`]), plus one reusable K=M selection.
+    pub(crate) audit_approx: Vec<Matrix>,
+    pub(crate) audit_exact: Vec<Matrix>,
+    pub(crate) audit_sel: Selection,
 }
 
 impl GraphWorkspace {
@@ -156,8 +164,38 @@ impl GraphWorkspace {
             layer_k: Vec::with_capacity(n),
             fwd: None,
             obs: StepTelemetry::new(obs, n),
+            audit_approx: Vec::new(),
+            audit_exact: Vec::new(),
+            audit_sel: Selection::with_capacity(0),
             widths,
         }
+    }
+
+    /// Size the audit scratch for this workspace's key. Cheap when
+    /// already sized (a length check), so the auditor calls it every
+    /// time; a re-key drops the scratch and the next audit rebuilds it.
+    pub(crate) fn ensure_audit(&mut self) {
+        let n = self.widths.len() - 1;
+        if self.audit_approx.len() == n {
+            return;
+        }
+        self.audit_approx = self
+            .wstar
+            .iter()
+            .map(|w| {
+                let (a, b) = w.shape();
+                Matrix::zeros(a, b)
+            })
+            .collect();
+        self.audit_exact = self
+            .wstar
+            .iter()
+            .map(|w| {
+                let (a, b) = w.shape();
+                Matrix::zeros(a, b)
+            })
+            .collect();
+        self.audit_sel = Selection::with_capacity(self.batch);
     }
 
     /// Whether this workspace is keyed for (`graph`, `batch`).
@@ -311,6 +349,22 @@ mod tests {
         assert!(!ws.obs().enabled());
         // plain construction defaults to off (no timer reads)
         assert!(!GraphWorkspace::new(&g, 16).obs().enabled());
+    }
+
+    #[test]
+    fn audit_scratch_is_lazy_and_dropped_on_rekey() {
+        let mut rng = Rng::new(5);
+        let g = Graph::relu_mlp(&mut rng, &[6, 10, 3], LossKind::Mse);
+        let mut ws = GraphWorkspace::new(&g, 32);
+        assert!(ws.audit_approx.is_empty(), "audit-off runs pay nothing");
+        ws.ensure_audit();
+        assert_eq!(ws.audit_approx.len(), 2);
+        assert_eq!(ws.audit_approx[0].shape(), ws.wstar[0].shape());
+        assert_eq!(ws.audit_exact[1].shape(), ws.wstar[1].shape());
+        ws.ensure_audit(); // idempotent
+        assert_eq!(ws.audit_approx.len(), 2);
+        ws.ensure(&g, 48);
+        assert!(ws.audit_approx.is_empty(), "re-key drops the scratch");
     }
 
     #[test]

@@ -564,6 +564,121 @@ fn obs_enabled_training_bit_identical_across_threads_and_workspaces() {
 }
 
 #[test]
+fn audit_enabled_experiment_bit_identical_to_audit_off_across_threads() {
+    // PR 7 acceptance: the gradient-fidelity auditor is observation-only.
+    // The audit-off serial run is the baseline; audit-on at threads
+    // {1, 7} must reproduce losses, weights, and per-layer metrics bit
+    // for bit — the auditor consumes no RNG and mutates no model state.
+    let baseline = experiment::run(&layered_energy_cfg(1)).unwrap();
+    assert!(
+        baseline.curve.epochs.iter().all(|m| m.audit.is_empty()),
+        "audit-off runs must carry no audit records"
+    );
+    for threads in [1usize, 7] {
+        let mut cfg = layered_energy_cfg(threads);
+        cfg.audit = Some(2); // epochs 1 and 3 of 4
+        let audited = experiment::run(&cfg).unwrap();
+        assert_runs_identical(
+            &baseline,
+            &audited,
+            &format!("audit-on threads={threads}"),
+        );
+        for m in &audited.curve.epochs {
+            if (m.epoch - 1) % 2 == 0 {
+                assert_eq!(m.audit.len(), 2, "epoch {}: one record per layer", m.epoch);
+                for a in &m.audit {
+                    assert!(a.cosine.is_finite() && (-1.0..=1.0).contains(&a.cosine));
+                    assert!(a.rel_err.is_finite() && a.rel_err >= 0.0);
+                    assert!(a.mem_bias.is_finite());
+                }
+                // K=36/144 and K=18/144 genuinely approximate: the
+                // audited fidelity gap is real, not a degenerate zero
+                assert!(m.audit.iter().any(|a| a.rel_err > 0.0), "epoch {}", m.epoch);
+            } else {
+                assert!(m.audit.is_empty(), "epoch {} off-cadence", m.epoch);
+            }
+        }
+    }
+    // audit records themselves are deterministic across thread counts
+    let runs: Vec<RunResult> = [1usize, 7]
+        .iter()
+        .map(|&t| {
+            let mut cfg = layered_energy_cfg(t);
+            cfg.audit = Some(2);
+            experiment::run(&cfg).unwrap()
+        })
+        .collect();
+    for (a, b) in runs[0].curve.epochs.iter().zip(runs[1].curve.epochs.iter()) {
+        assert_eq!(a.audit, b.audit, "epoch {} audit records", a.epoch);
+    }
+}
+
+#[test]
+fn audit_step_bit_identical_fresh_vs_reused_workspace() {
+    // step-level version: interleaving `audit_into` after every apply
+    // must not perturb the training trajectory, whether the audit runs
+    // in the resident workspace or a fresh one per step, at threads
+    // {1, 7}. The no-audit serial fresh-workspace run is the baseline.
+    use mem_aop_gd::obs::AuditLayerRecord;
+
+    let steps = 8usize;
+    let (m, n, p) = (24usize, 6usize, 3usize);
+    let run = |threads: usize, reuse: bool, audit: bool| -> (Vec<u32>, Vec<Vec<AuditLayerRecord>>, Graph) {
+        let (x, y) = synth_data(83, m, n, p);
+        let mut wrng = Rng::new(53);
+        let mut g = Graph::relu_mlp(&mut wrng, &[n, 10, 8, p], LossKind::Mse);
+        let cfgs = vec![AopLayerConfig { k: 6, policy: Policy::WeightedK, memory: true }; 3];
+        let mut state = GraphState::from_configs(&g, m, &cfgs);
+        let exec = Executor::new(threads);
+        let mut rng = Rng::new(37);
+        let mut resident = GraphWorkspace::new(&g, m);
+        let mut losses = Vec::with_capacity(steps);
+        let mut audits = Vec::new();
+        for _ in 0..steps {
+            let mut ws = if reuse {
+                None
+            } else {
+                Some(GraphWorkspace::new(&g, m))
+            };
+            let w = ws.as_mut().unwrap_or(&mut resident);
+            let out = train::train_step_ws(
+                &mut g, &mut state, &x, &y, 0.02, &mut rng, &exec, true, w,
+            );
+            assert!(out.loss.is_finite());
+            losses.push(out.loss.to_bits());
+            if audit {
+                let mut recs = Vec::new();
+                train::audit_into(&g, &state, &x, 0.02, &exec, true, w, &mut recs);
+                assert_eq!(recs.len(), 3, "one record per layer");
+                for a in &recs {
+                    assert!(a.cosine.is_finite() && (-1.0..=1.0).contains(&a.cosine));
+                    assert!(a.rel_err.is_finite() && a.rel_err >= 0.0);
+                }
+                audits.push(recs);
+            }
+        }
+        (losses, audits, g)
+    };
+
+    let (l0, _, g0) = run(1, false, false);
+    let mut audit_cells: Vec<Vec<Vec<AuditLayerRecord>>> = Vec::new();
+    for (threads, reuse) in [(1usize, false), (7, false), (1, true), (7, true)] {
+        let what = format!("audit threads={threads} reuse={reuse}");
+        let (lt, at, gt) = run(threads, reuse, true);
+        assert_eq!(l0, lt, "{what}: losses");
+        for (a, b) in g0.layers.iter().zip(gt.layers.iter()) {
+            assert_eq!(a.w.data(), b.w.data(), "{what}: weights");
+            assert_eq!(a.b, b.b, "{what}: bias");
+        }
+        audit_cells.push(at);
+    }
+    // the fidelity records agree across every cell of the grid
+    for cell in &audit_cells[1..] {
+        assert_eq!(&audit_cells[0], cell, "audit records differ across grid cells");
+    }
+}
+
+#[test]
 fn experiment_rollup_reports_phases_without_perturbing_the_curve() {
     // the native trainer runs with telemetry on by default; the rollup
     // rides along on RunResult while the curve stays bit-identical to

@@ -408,6 +408,57 @@ fn prop_weighted_sampling_never_selects_zero_weight() {
 }
 
 #[test]
+fn prop_audit_of_exact_memoryless_step_is_lossless() {
+    // PR 7 invariant: when the applied update already IS the exact K=M
+    // gradient (exact policy, memory off), the gradient-fidelity
+    // auditor must report it as such — rel_err ≈ 0, cosine ≈ 1, and a
+    // memory bias of exactly 0 (nothing was folded, nothing to re-fold).
+    use mem_aop_gd::exec::Executor;
+    use mem_aop_gd::model::LossKind;
+    use mem_aop_gd::train::{self, AopLayerConfig, Graph, GraphState, GraphWorkspace};
+
+    property("exact audit lossless", 25, |g| {
+        let m = g.usize_range(2, 24);
+        let n = g.usize_range(1, 10);
+        let h = g.usize_range(1, 12);
+        let p = g.usize_range(1, 4);
+        let x = randm(g, m, n);
+        let y = randm(g, m, p);
+        let mut wrng = g.rng().fork(3);
+        let mut graph = Graph::relu_mlp(&mut wrng, &[n, h, p], LossKind::Mse);
+        let cfgs = vec![AopLayerConfig { k: m, policy: Policy::Exact, memory: false }; 2];
+        let mut state = GraphState::from_configs(&graph, m, &cfgs);
+        let exec = Executor::new(1);
+        let mut rng = g.rng().fork(11);
+        let mut ws = GraphWorkspace::new(&graph, m);
+        for step in 0..3 {
+            let out = train::train_step_ws(
+                &mut graph, &mut state, &x, &y, 0.02, &mut rng, &exec, true, &mut ws,
+            );
+            assert!(out.loss.is_finite());
+            let mut recs = Vec::new();
+            train::audit_into(&graph, &state, &x, 0.02, &exec, true, &mut ws, &mut recs);
+            assert_eq!(recs.len(), 2, "one record per layer");
+            for a in &recs {
+                assert!(
+                    a.rel_err <= 1e-6,
+                    "step {step} layer {}: rel_err {}",
+                    a.layer,
+                    a.rel_err
+                );
+                assert!(
+                    (a.cosine - 1.0).abs() <= 1e-9,
+                    "step {step} layer {}: cosine {}",
+                    a.layer,
+                    a.cosine
+                );
+                assert_eq!(a.mem_bias, 0.0, "memory off folds nothing");
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_engine_step_keeps_weights_finite() {
     use mem_aop_gd::aop::AopEngine;
     use mem_aop_gd::model::LossKind;

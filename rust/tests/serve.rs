@@ -304,6 +304,117 @@ fn registry_survives_server_restart() {
 }
 
 #[test]
+fn watch_streams_audited_epochs_over_tcp() {
+    // PR 7 acceptance: a live `watch` subscriber receives every epoch
+    // frame of an audited job, each audited frame carries finite
+    // per-layer fidelity records, and the stream agrees bit-for-bit
+    // with the job's final result and phase rollup.
+    use std::time::Instant;
+
+    let (addr, handle) = spawn_server(2, None);
+    let mut c = Client::connect(&addr).expect("connect");
+
+    let mut cfg = native_cfg(0);
+    cfg.policy = Policy::TopK;
+    cfg.memory = true;
+    cfg.k = KSchedule::Constant(18);
+    cfg.audit = Some(1); // audit every epoch
+    let id = c.submit(&cfg, "watched").expect("submit");
+
+    // long-poll until the job is terminal and the stream has drained
+    let mut frames = Vec::new();
+    let mut cursor = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (batch, next, state) = c.watch(id, cursor, 2_000).expect("watch");
+        assert!(next >= cursor, "cursor went backwards");
+        let drained = batch.is_empty();
+        frames.extend(batch);
+        cursor = next;
+        if drained && matches!(state.as_str(), "done" | "failed" | "cancelled") {
+            assert_eq!(state, "done", "watched job must complete");
+            break;
+        }
+        assert!(Instant::now() < deadline, "watch never drained");
+    }
+
+    // every epoch arrived exactly once, in order, with audit records
+    assert_eq!(frames.len(), cfg.epochs);
+    for (i, f) in frames.iter().enumerate() {
+        assert_eq!(f.get("epoch").and_then(|n| n.as_usize()), Some(i + 1));
+        let audit = f.get("audit").and_then(|a| a.as_arr()).expect("audited frame");
+        assert_eq!(audit.len(), 1, "flat config = one layer");
+        let a = &audit[0];
+        let cosine = a.get("cosine").and_then(|v| v.as_f64()).unwrap();
+        let rel_err = a.get("rel_err").and_then(|v| v.as_f64()).unwrap();
+        let mem_bias = a.get("mem_bias").and_then(|v| v.as_f64()).unwrap();
+        assert!(cosine.is_finite() && (-1.0..=1.0).contains(&cosine));
+        assert!(rel_err.is_finite() && rel_err > 0.0, "K=18/144 approximates");
+        assert!(mem_bias.is_finite());
+    }
+
+    // the stream agrees with the stored result bit-for-bit
+    let (_, curve) = c.result(id).expect("result");
+    assert_eq!(curve.epochs.len(), frames.len());
+    for (f, m) in frames.iter().zip(curve.epochs.iter()) {
+        let streamed = f.get("train_loss").and_then(|v| v.as_f64()).unwrap() as f32;
+        assert_eq!(streamed.to_bits(), m.train_loss.to_bits());
+        assert_eq!(m.audit.len(), 1, "result curve keeps the audit records");
+    }
+
+    // ...and with the job view's phase rollup (latest audit wins)
+    let view = c.status(id).expect("status");
+    let layers = view
+        .get("phases")
+        .and_then(|p| p.get("layers"))
+        .and_then(|l| l.as_arr())
+        .expect("phase rollup layers")
+        .to_vec();
+    let last = frames.last().unwrap().get("audit").and_then(|a| a.as_arr()).unwrap().to_vec();
+    assert_eq!(
+        layers[0].get("audits").and_then(|n| n.as_usize()),
+        Some(cfg.epochs),
+        "one audit per epoch at cadence every:1"
+    );
+    assert_eq!(
+        layers[0].get("audit_cosine").and_then(|v| v.as_f64()),
+        last[0].get("cosine").and_then(|v| v.as_f64()),
+    );
+    assert_eq!(
+        layers[0].get("audit_rel_err").and_then(|v| v.as_f64()),
+        last[0].get("rel_err").and_then(|v| v.as_f64()),
+    );
+
+    // cursor resume: re-watching from epoch 1 replays only 2..=N
+    let (tail, _, state) = c.watch(id, 1, 0).expect("resume");
+    assert_eq!(state, "done");
+    assert_eq!(tail.len(), cfg.epochs - 1);
+    assert_eq!(tail[0].get("epoch").and_then(|n| n.as_usize()), Some(2));
+    // a cursor past the end streams nothing
+    let (empty, _, _) = c.watch(id, cursor, 0).expect("past-end watch");
+    assert!(empty.is_empty());
+
+    // watching an unknown job is a clean protocol error
+    assert!(c.watch(999_999, 0, 0).is_err());
+
+    // a cancelled job's watch returns promptly — terminal state short-
+    // circuits the long-poll instead of burning the full wait_ms
+    let victim = c.submit(&native_cfg(1), "victim").expect("submit victim");
+    let _ = c.cancel(victim); // may already be running; wait either way
+    let v = c.wait(victim, Duration::from_secs(120)).expect("wait victim");
+    let vstate = v.get("state").and_then(|s| s.as_str()).unwrap().to_string();
+    let t0 = Instant::now();
+    let (_, _, wstate) = c.watch(victim, 1_000, 10_000).expect("watch terminal");
+    assert_eq!(wstate, vstate);
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "terminal watch must not block for wait_ms"
+    );
+
+    shutdown(&addr, handle);
+}
+
+#[test]
 fn cancellation_and_queue_ordering() {
     // one worker ⇒ jobs run strictly in submission order
     let (addr, handle) = spawn_server(1, None);

@@ -2,7 +2,7 @@
 """Bench trajectory recorder + regression gate (ROADMAP: BENCH trajectory).
 
 Run from the repo root after `cargo bench --bench kernels` has written
-BENCH_2.json ... BENCH_6.json:
+BENCH_2.json ... BENCH_6.json and BENCH_8.json:
 
   * appends each record (stamped with UTC time + git rev + host) to
     `bench/history/BENCH_N.jsonl` — the committed machine-readable
@@ -28,9 +28,18 @@ import subprocess
 import sys
 import time
 
-RECORDS = ["BENCH_2.json", "BENCH_3.json", "BENCH_4.json", "BENCH_5.json", "BENCH_6.json"]
-# keys holding a {"rows_per_sec": ...} object we track
-SERIES = ["serial", "threads4"]
+RECORDS = [
+    "BENCH_2.json",
+    "BENCH_3.json",
+    "BENCH_4.json",
+    "BENCH_5.json",
+    "BENCH_6.json",
+    "BENCH_8.json",
+]
+# keys holding a {"rows_per_sec": ...} object we track; records missing
+# a series simply skip it (BENCH_8 carries the audit_* series instead
+# of serial/threads4)
+SERIES = ["serial", "threads4", "audit_off", "audit_on", "audit_on_threads4"]
 REGRESSION_FRAC = 0.15
 
 
