@@ -54,6 +54,17 @@ if [ "$fast" -eq 0 ]; then
     --epochs 6 --backend native --threads 2 --quiet
 fi
 
+# Mixed-precision smoke (ISSUE 8): one short end-to-end training with
+# bf16 forward traces + f64 accumulation through the real CLI, plus a
+# per-layer q8 override via the --layers grammar — the quantized-trace
+# tentpole's cheapest end-to-end proof.
+if [ "$fast" -eq 0 ]; then
+  echo "==> mixed-precision CLI smoke (repro train --trace bf16 --accum f64)"
+  ./target/release/repro train --task energy --policy topk --k 18 \
+    --epochs 2 --backend native --threads 2 \
+    --trace bf16 --accum f64 --layers "8:tanh:18:q8,1" --quiet
+fi
+
 # Observability smoke (ISSUE 6): one traced run through the real CLI —
 # the Chrome trace-event dump must be valid JSON with the step phases —
 # and one Prometheus scrape against a live `repro serve`. Uses the
@@ -179,18 +190,23 @@ fi
 # with telemetry ON — per-phase percentiles, still asserted
 # allocation-free; BENCH_8.json: the audited step — audit-on vs
 # audit-off rows/sec with the K=M re-reduction every few steps, audits
-# included in the 0-allocations assertion) for the perf trajectory.
-echo "==> kernels bench smoke (BENCH_2/3/4/5/6/8.json)"
+# included in the 0-allocations assertion; BENCH_9.json: the
+# mixed-precision trace/accum grid — rows/sec, backward-read trace
+# bytes, and fixed-step loss drift per cell, quantized cells asserted
+# allocation-free) for the perf trajectory.
+echo "==> kernels bench smoke (BENCH_2/3/4/5/6/8/9.json)"
 BENCH_QUICK=1 cargo bench --bench kernels
 test -f BENCH_3.json
 test -f BENCH_4.json
 test -f BENCH_5.json
 test -f BENCH_6.json
 test -f BENCH_8.json
+test -f BENCH_9.json
 echo "BENCH_4.json: $(cat BENCH_4.json | head -c 200)..."
 echo "BENCH_5.json: $(cat BENCH_5.json | head -c 200)..."
 echo "BENCH_6.json: $(cat BENCH_6.json | head -c 200)..."
 echo "BENCH_8.json: $(cat BENCH_8.json | head -c 200)..."
+echo "BENCH_9.json: $(cat BENCH_9.json | head -c 200)..."
 
 # BENCH trajectory (ROADMAP): append this run to the committed bench/
 # history and fail on a >15% rows/sec regression vs the recorded

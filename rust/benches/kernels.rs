@@ -16,7 +16,11 @@
 //! `train::audit_into` interleaved every few steps, audit-on vs
 //! audit-off rows/sec, allocs/step asserted 0 with audits included),
 //! written to `BENCH_8.json` (`BENCH_7` is reserved for the conv
-//! workload) — so the repo's perf trajectory is machine-readable.
+//! workload), and the **mixed-precision** trace/accum grid (quantized
+//! forward traces + widened lane accumulation: rows/sec, backward-read
+//! trace bytes, fixed-step loss drift per (trace, accum) cell), written
+//! to `BENCH_9.json` — so the repo's perf trajectory is
+//! machine-readable.
 //!
 //! Work metric = FLOPs of the compaction-regime cost model, so the
 //! reported work-rate is directly comparable across K (who computes the
@@ -865,6 +869,182 @@ fn bench_audit_and_write_bench8() {
         .and_then(|_| std::fs::write("results/bench/audit_throughput.json", text));
 }
 
+/// Fixed step count of the BENCH_9 curve-drift probe: every precision
+/// cell trains exactly this many deterministic steps before the timed
+/// window, so final losses are comparable across (trace, accum).
+const PRECISION_DRIFT_STEPS: usize = 40;
+
+/// One BENCH_9 precision cell: train a graph with the given per-layer
+/// (trace, accum) on one resident workspace. Returns (rows/sec,
+/// allocs/step, backward-read trace bytes total, trace bytes of the
+/// compressible hidden layers, final drift-probe loss). Serial only —
+/// the grid measures memory traffic and drift, not thread scaling (the
+/// exec suite pins thread-invariance per precision config).
+fn precision_cell(
+    widths: &[usize],
+    ks: &[usize],
+    m: usize,
+    trace: mem_aop_gd::tensor::quant::TraceMode,
+    accum: mem_aop_gd::tensor::quant::AccumMode,
+    measure: Duration,
+) -> (f64, f64, usize, usize, f32) {
+    use mem_aop_gd::tensor::quant::LayerPrecision;
+    let (n, p) = (widths[0], widths[widths.len() - 1]);
+    let mut rng = Rng::new(0);
+    let x = Matrix::from_fn(m, n, |_, _| rng.normal());
+    let y = Matrix::from_fn(m, p, |r, c| ((r % p) == c) as u32 as f32);
+    let mut wrng = Rng::new(1);
+    let mut graph = Graph::relu_mlp(&mut wrng, widths, LossKind::SoftmaxCrossEntropy);
+    let cfgs: Vec<AopLayerConfig> = ks
+        .iter()
+        .map(|&k| AopLayerConfig { k, policy: Policy::TopK, memory: true })
+        .collect();
+    let mut state = GraphState::from_configs(&graph, m, &cfgs);
+    let mut ws = GraphWorkspace::new(&graph, m);
+    ws.set_precision(&graph, &vec![LayerPrecision { trace, accum }; ks.len()]);
+    let exec = Executor::new(1);
+    let mut srng = Rng::new(2);
+    // drift probe doubles as warmup: deterministic steps, same seeds in
+    // every cell, so final losses differ only by the precision knobs
+    let mut last = f32::NAN;
+    for _ in 0..PRECISION_DRIFT_STEPS {
+        let out = train::train_step_ws(
+            &mut graph, &mut state, &x, &y, 0.01, &mut srng, &exec, true, &mut ws,
+        );
+        last = out.loss;
+    }
+    let hidden: usize = (0..ks.len() - 1).map(|li| ws.layer_trace_bytes(li)).sum();
+    let total = ws.trace_bytes();
+    let a0 = alloc_calls();
+    let t0 = Instant::now();
+    let mut steps = 0u64;
+    while steps < 2 || t0.elapsed() < measure {
+        black_box(train::train_step_ws(
+            &mut graph, &mut state, &x, &y, 0.01, &mut srng, &exec, true, &mut ws,
+        ));
+        steps += 1;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let allocs = (alloc_calls() - a0) as f64 / steps as f64;
+    (steps as f64 * m as f64 / elapsed, allocs, total, hidden, last)
+}
+
+/// The BENCH_9 workload (mixed-precision tentpole): the wide 784→4096→10
+/// and deep 784→128→64→10 graphs stepped through every (trace, accum) ∈
+/// {f32, bf16, q8} × {f32, f64} cell on one resident workspace each.
+/// Reports rows/sec, backward-read trace bytes (with the reduction vs
+/// the f32 baseline), and the fixed-step final-loss drift. Asserted:
+/// the quantized serial steady state allocates **zero** (same
+/// `BENCH_ALLOW_ALLOCS=1` hatch as BENCH_4..8), and the compressible
+/// hidden-layer trace footprint shrinks ≥2× under bf16 (exactly 2×:
+/// 2 bytes/element) and ≥3.9× under q8. Overall reduction is slightly
+/// lower because the head trace is pinned f32 (it feeds the loss head).
+fn bench_precision_and_write_bench9() {
+    use mem_aop_gd::tensor::quant::{AccumMode, TraceMode};
+    let quick = std::env::var("BENCH_QUICK").ok().as_deref() == Some("1");
+    // 12 cells: keep each window shorter than the single-workload suites
+    let measure = if quick {
+        Duration::from_millis(200)
+    } else {
+        Duration::from_secs(1)
+    };
+    let allow_allocs = std::env::var("BENCH_ALLOW_ALLOCS").ok().as_deref() == Some("1");
+    let mut graph_json = Vec::new();
+    for (label, widths, ks, m) in [
+        ("wide-784x4096x10", &WIDE_WIDTHS[..], vec![WIDE_K; 2], WIDE_BATCH),
+        ("deep-784x128x64x10", &GRAPH_WIDTHS[..], GRAPH_KS.to_vec(), GRAPH_BATCH),
+    ] {
+        let (base_rows, base_allocs, base_bytes, base_hidden, base_loss) =
+            precision_cell(widths, &ks, m, TraceMode::F32, AccumMode::F32, measure);
+        let mut cell_json = Vec::new();
+        for trace in [TraceMode::F32, TraceMode::Bf16, TraceMode::Q8] {
+            for accum in [AccumMode::F32, AccumMode::F64] {
+                let (rows, allocs, bytes, hidden, loss) =
+                    if trace == TraceMode::F32 && accum == AccumMode::F32 {
+                        (base_rows, base_allocs, base_bytes, base_hidden, base_loss)
+                    } else {
+                        precision_cell(widths, &ks, m, trace, accum, measure)
+                    };
+                let reduction = base_bytes as f64 / bytes as f64;
+                let hidden_reduction = base_hidden as f64 / hidden as f64;
+                let drift = (loss - base_loss).abs() as f64 / base_loss.abs().max(1e-9) as f64;
+                eprintln!(
+                    "{:44} {:>12.0} rows/s  (trace {:.2}x smaller, drift {:.2e}, {allocs:.1} allocs/step)",
+                    format!("{label}/trace={}/accum={}", trace.name(), accum.name()),
+                    rows,
+                    reduction,
+                    drift
+                );
+                if allocs != 0.0 {
+                    let msg = format!(
+                        "{label} trace={} accum={} steady state performed {allocs} \
+                         allocations/step (expected 0 — quantized traces must be pre-sized)",
+                        trace.name(),
+                        accum.name()
+                    );
+                    if allow_allocs {
+                        eprintln!("[kernels] WARNING: {msg}");
+                    } else {
+                        panic!("{msg}");
+                    }
+                }
+                cell_json.push(json::obj(vec![
+                    ("trace", json::s(trace.name())),
+                    ("accum", json::s(accum.name())),
+                    ("rows_per_sec", json::num(rows)),
+                    ("allocs_per_step", json::num(allocs)),
+                    ("trace_bytes", json::num(bytes as f64)),
+                    ("trace_reduction", json::num(reduction)),
+                    ("hidden_trace_reduction", json::num(hidden_reduction)),
+                    ("final_loss", json::num(loss as f64)),
+                    ("loss_drift", json::num(drift)),
+                ]));
+                // the acceptance arithmetic, asserted where it is exact:
+                // the hidden (non-pinned) traces shrink 2x under bf16;
+                // q8 approaches 4x, less the 4-byte/row step overhead
+                // (4c/(c+4) per layer — ~3.76x at the 64-wide hidden)
+                if trace == TraceMode::Bf16 {
+                    assert!(
+                        hidden_reduction >= 2.0,
+                        "{label}: bf16 hidden-trace reduction {hidden_reduction} < 2x"
+                    );
+                }
+                if trace == TraceMode::Q8 {
+                    assert!(
+                        hidden_reduction >= 3.5,
+                        "{label}: q8 hidden-trace reduction {hidden_reduction} < 3.5x"
+                    );
+                }
+            }
+        }
+        graph_json.push(json::obj(vec![
+            ("graph", json::s(label)),
+            ("m", json::num(m as f64)),
+            (
+                "k",
+                Json::Arr(ks.iter().map(|&k| json::num(k as f64)).collect()),
+            ),
+            ("drift_steps", json::num(PRECISION_DRIFT_STEPS as f64)),
+            ("f32_trace_bytes", json::num(base_bytes as f64)),
+            ("cells", Json::Arr(cell_json)),
+        ]));
+    }
+    let out = json::obj(vec![
+        (
+            "workload",
+            json::s("mixed-precision trace/accum grid (workspace-resident train-step)"),
+        ),
+        ("graphs", Json::Arr(graph_json)),
+    ]);
+    let mut text = out.dump();
+    text.push('\n');
+    if std::fs::write("BENCH_9.json", &text).is_ok() {
+        eprintln!("[kernels] wrote BENCH_9.json (trace/accum precision grid)");
+    }
+    let _ = std::fs::create_dir_all("results/bench")
+        .and_then(|_| std::fs::write("results/bench/precision_throughput.json", text));
+}
+
 fn main() {
     let mut b = Bencher::new("kernels");
     let mut rng = Rng::new(0);
@@ -875,6 +1055,7 @@ fn main() {
     bench_annealed_and_write_bench5();
     bench_obs_and_write_bench6();
     bench_audit_and_write_bench8();
+    bench_precision_and_write_bench9();
 
     for (task, m, n, p, ks) in [
         ("energy", 144usize, 16usize, 1usize, vec![144usize, 18, 9, 3]),

@@ -13,12 +13,19 @@
 //! Every K is a [`KSchedule`] — the paper's outer-product budget as a
 //! per-layer, per-epoch annealing knob (constants behave, serialize,
 //! and train exactly like the historical plain integers).
+//!
+//! Protocol v7 adds the mixed-precision knobs: a flat `trace`/`accum`
+//! pair plus an optional per-layer trace override in the layer grammar
+//! (`w[:act[:ksched[:trace]]]`), resolved with f32 pins for the head
+//! layer and exact-policy inputs. All-f32 configs serialize without
+//! the new keys — pre-v7 frames and run files keep their exact shape.
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::aop::Policy;
 use crate::model::activations::Activation;
 use crate::model::LossKind;
+use crate::tensor::quant::{AccumMode, LayerPrecision, TraceMode};
 use crate::train::AopLayerConfig;
 use crate::util::json::{self, Json};
 
@@ -540,6 +547,12 @@ pub struct LayerSpec {
     pub policy: Option<Policy>,
     /// Per-layer memory override.
     pub memory: Option<bool>,
+    /// Per-layer forward-trace storage override (§Mixed precision):
+    /// how this layer's *output* activations are stored for the
+    /// backward pass. Absent falls back to the flat config's `trace`;
+    /// the head layer and traces feeding an exact-policy layer are
+    /// pinned to f32 at resolution regardless of the request.
+    pub trace: Option<TraceMode>,
 }
 
 impl LayerSpec {
@@ -551,20 +564,28 @@ impl LayerSpec {
             k: None,
             policy: None,
             memory: None,
+            trace: None,
         }
     }
 
-    /// Parse one CLI layer item `width[:activation[:ksched]]`, e.g.
-    /// `32`, `32:relu`, `32:tanh:16`, `32:relu:linear:8:32` — everything
-    /// after the second `:` is one [`KSchedule`] spec (schedules contain
-    /// `:` themselves).
+    /// Parse one CLI layer item `width[:activation[:ksched[:trace]]]`,
+    /// e.g. `32`, `32:relu`, `32:tanh:16`, `32:relu:linear:8:32`,
+    /// `4096:relu:32:bf16` — everything after the second `:` is one
+    /// [`KSchedule`] spec (schedules contain `:` themselves), except
+    /// that a *recognized* trailing trace token (`f32`/`bf16`/`q8`) is
+    /// split off first. The trace token is unambiguous: no valid
+    /// K-schedule segment spells a trace mode, and `32:relu:q8` (trace
+    /// override with an inherited K) parses because a bare trace token
+    /// is accepted where a K-schedule would be.
     pub fn parse(s: &str) -> Result<LayerSpec> {
         let mut it = s.trim().splitn(3, ':');
         let width: usize = it
             .next()
             .filter(|w| !w.is_empty())
             .and_then(|w| w.parse().ok())
-            .ok_or_else(|| anyhow!("layer '{s}': expected width[:activation[:ksched]]"))?;
+            .ok_or_else(|| {
+                anyhow!("layer '{s}': expected width[:activation[:ksched[:trace]]]")
+            })?;
         let activation = match it.next() {
             None | Some("") => None,
             Some(a) => Some(
@@ -572,11 +593,23 @@ impl LayerSpec {
                     .ok_or_else(|| anyhow!("layer '{s}': unknown activation '{a}'"))?,
             ),
         };
-        let k = match it.next() {
-            None | Some("") => None,
-            Some(kv) => Some(
-                KSchedule::parse(kv).map_err(|e| anyhow!("layer '{s}': {e}"))?,
-            ),
+        let (k, trace) = match it.next() {
+            None | Some("") => (None, None),
+            // the whole tail is a bare trace token: trace-only override
+            Some(tail) if TraceMode::parse(tail).is_some() => {
+                (None, Some(TraceMode::parse(tail).unwrap()))
+            }
+            Some(tail) => {
+                // split a recognized `:trace` suffix off the K-schedule
+                let (kv, trace) = match tail.rsplit_once(':') {
+                    Some((head, last)) if TraceMode::parse(last).is_some() => {
+                        (head, Some(TraceMode::parse(last).unwrap()))
+                    }
+                    _ => (tail, None),
+                };
+                let k = KSchedule::parse(kv).map_err(|e| anyhow!("layer '{s}': {e}"))?;
+                (Some(k), trace)
+            }
         };
         Ok(LayerSpec {
             width,
@@ -584,6 +617,7 @@ impl LayerSpec {
             k,
             policy: None,
             memory: None,
+            trace,
         })
     }
 
@@ -609,6 +643,10 @@ impl LayerSpec {
         }
         if let Some(m) = self.memory {
             pairs.push(("memory", Json::Bool(m)));
+        }
+        if let Some(t) = self.trace {
+            // emitted only when overridden, so pre-v7 frames keep shape
+            pairs.push(("trace", json::s(t.name())));
         }
         json::obj(pairs)
     }
@@ -644,12 +682,19 @@ impl LayerSpec {
             ),
             None => None,
         };
+        let trace = match v.get("trace").and_then(|t| t.as_str()) {
+            Some(t) => Some(
+                TraceMode::parse_or_suggest(t).map_err(|e| anyhow!("layers[{i}]: {e}"))?,
+            ),
+            None => None,
+        };
         Ok(LayerSpec {
             width,
             activation,
             k,
             policy,
             memory,
+            trace,
         })
     }
 }
@@ -666,6 +711,15 @@ pub struct ResolvedLayer {
     pub k: KSchedule,
     pub policy: Policy,
     pub memory: bool,
+    /// Effective forward-trace storage for this layer's output
+    /// activations (§Mixed precision) — the requested mode after the
+    /// resolution pins: the head layer's output (loss-head input) and
+    /// any trace feeding an exact-policy layer stay `F32` so exact
+    /// means bit-exact.
+    pub trace: TraceMode,
+    /// Effective accumulation width for this layer's backward
+    /// reductions (flat knob, uniform across layers).
+    pub accum: AccumMode,
 }
 
 impl ResolvedLayer {
@@ -678,6 +732,14 @@ impl ResolvedLayer {
             k: self.k.k_at(epoch, total_epochs, batch),
             policy: self.policy,
             memory: self.memory,
+        }
+    }
+
+    /// The workspace-facing precision pair for this layer.
+    pub fn precision(&self) -> LayerPrecision {
+        LayerPrecision {
+            trace: self.trace,
+            accum: self.accum,
         }
     }
 }
@@ -713,6 +775,20 @@ pub struct ExperimentConfig {
     /// at the task's output width, each optionally overriding the flat
     /// selection knobs (native backend only).
     pub layers: Option<Vec<LayerSpec>>,
+    /// Forward-trace storage precision for backward-pass activations
+    /// (§Mixed precision, protocol v7): `F32` reproduces the historical
+    /// bit-exact path; `Bf16`/`Q8` store the traces compressed (2×/~4×
+    /// less backward memory traffic), dequantized block-wise inside the
+    /// shard kernels. Per-layer `LayerSpec::trace` overrides this;
+    /// the head layer and exact-policy inputs are pinned to f32 at
+    /// resolution. Native backend only.
+    pub trace: TraceMode,
+    /// Accumulation width for backward reductions (score dots, bias
+    /// column sums, cross-shard gradient reduction): `F32` is the
+    /// historical bit-exact path; `F64`/`Kahan` widen or compensate the
+    /// persistent accumulator chains in the same 8-lane kernel shape.
+    /// Native backend only.
+    pub accum: AccumMode,
     /// Gradient-fidelity audit cadence in epochs (protocol v6, the
     /// `every:<n>` grammar on the wire): `Some(n)` audits epoch 1 and
     /// then every `n`-th epoch after it, re-reducing the last step's
@@ -743,6 +819,8 @@ impl ExperimentConfig {
             data_scale: 1.0,
             threads: 1,
             layers: None,
+            trace: TraceMode::F32,
+            accum: AccumMode::F32,
             audit: None,
         }
     }
@@ -762,6 +840,8 @@ impl ExperimentConfig {
             data_scale: 1.0,
             threads: 1,
             layers: None,
+            trace: TraceMode::F32,
+            accum: AccumMode::F32,
             audit: None,
         }
     }
@@ -802,6 +882,9 @@ impl ExperimentConfig {
     pub fn layer_plan(&self) -> Vec<ResolvedLayer> {
         let (n_in, n_out) = self.task.dims();
         let Some(specs) = &self.layers else {
+            // a flat single layer IS the head: its output feeds the loss
+            // head directly, so its trace is always pinned f32 (the
+            // backward input is the raw f32 batch — nothing to compress)
             return vec![ResolvedLayer {
                 fan_in: n_in,
                 fan_out: n_out,
@@ -809,15 +892,26 @@ impl ExperimentConfig {
                 k: self.k,
                 policy: self.policy,
                 memory: self.memory,
+                trace: TraceMode::F32,
+                accum: self.accum,
             }];
         };
         let nl = specs.len();
+        // policies resolved up front: layer i's stored trace feeds the
+        // X̂ fold of layer i+1's backward, so an exact-policy consumer
+        // pins its *input* trace (layer i's output) to f32 — `exact`
+        // must keep meaning bit-exact K=M
+        let policies: Vec<Policy> = specs
+            .iter()
+            .map(|s| s.policy.unwrap_or(self.policy))
+            .collect();
         let mut fan_in = n_in;
         specs
             .iter()
             .enumerate()
             .map(|(i, s)| {
                 let last = i + 1 == nl;
+                let pinned = last || policies[i + 1] == Policy::Exact;
                 let rl = ResolvedLayer {
                     fan_in,
                     fan_out: s.width,
@@ -827,13 +921,25 @@ impl ExperimentConfig {
                         Activation::Relu
                     }),
                     k: s.k.unwrap_or(self.k),
-                    policy: s.policy.unwrap_or(self.policy),
+                    policy: policies[i],
                     memory: s.memory.unwrap_or(self.memory),
+                    trace: if pinned {
+                        TraceMode::F32
+                    } else {
+                        s.trace.unwrap_or(self.trace)
+                    },
+                    accum: self.accum,
                 };
                 fan_in = s.width;
                 rl
             })
             .collect()
+    }
+
+    /// The per-layer workspace precision pairs of [`Self::layer_plan`] —
+    /// what `GraphWorkspace::set_precision` takes.
+    pub fn precision_plan(&self) -> Vec<LayerPrecision> {
+        self.layer_plan().iter().map(|rl| rl.precision()).collect()
     }
 
     /// `(fan_in, fan_out)` of every resolved layer.
@@ -869,6 +975,17 @@ impl ExperimentConfig {
             bail!(
                 "threads={} requires the native backend (the hlo path runs one thread per job)",
                 self.threads
+            );
+        }
+        if self.backend == Backend::Hlo
+            && (self.trace != TraceMode::F32 || self.accum != AccumMode::F32)
+        {
+            // the compiled artifacts are all-f32; a precision knob the
+            // backend would silently ignore must be rejected, not echoed
+            bail!(
+                "trace={}/accum={} require the native backend (the hlo artifacts are f32-only)",
+                self.trace.name(),
+                self.accum.name()
             );
         }
         if let Some(specs) = &self.layers {
@@ -921,6 +1038,14 @@ impl ExperimentConfig {
         if let Some(specs) = &self.layers {
             // emitted only when present, so flat frames stay v1/v2-shaped
             pairs.push(("layers", Json::Arr(specs.iter().map(|s| s.to_json()).collect())));
+        }
+        // emitted only when non-default, so all-f32 frames and run files
+        // keep their pre-v7 shape bit-for-bit
+        if self.trace != TraceMode::F32 {
+            pairs.push(("trace", json::s(self.trace.name())));
+        }
+        if self.accum != AccumMode::F32 {
+            pairs.push(("accum", json::s(self.accum.name())));
         }
         if let Some(n) = self.audit {
             // emitted only when auditing is on, so pre-v6 frames and run
@@ -988,6 +1113,18 @@ impl ExperimentConfig {
                     )
                 }
                 None => None,
+            },
+            // optional (protocol v7): pre-precision frames are all-f32;
+            // unknown mode strings are rejected with a suggestion
+            trace: match v.get("trace").and_then(|t| t.as_str()) {
+                Some(t) => TraceMode::parse_or_suggest(t)
+                    .map_err(|e| anyhow!("config: {e}"))?,
+                None => TraceMode::F32,
+            },
+            accum: match v.get("accum").and_then(|a| a.as_str()) {
+                Some(a) => AccumMode::parse_or_suggest(a)
+                    .map_err(|e| anyhow!("config: {e}"))?,
+                None => AccumMode::F32,
             },
             // optional (protocol v6): pre-audit frames carry no cadence
             audit: match v.get("audit") {
@@ -1548,6 +1685,123 @@ mod tests {
         // empty segments are rejected, never silently dropped
         assert!(LayerSpec::parse_list("128:relu,,10").is_err());
         assert!(LayerSpec::parse_list("128:relu,10,").is_err());
+    }
+
+    #[test]
+    fn layer_spec_trace_grammar() {
+        // trace suffix after a K-schedule
+        let s = LayerSpec::parse("4096:relu:32:bf16").unwrap();
+        assert_eq!(s.k, Some(KSchedule::Constant(32)));
+        assert_eq!(s.trace, Some(TraceMode::Bf16));
+        // ...including annealed schedules (the suffix is split first)
+        let s = LayerSpec::parse("8:tanh:step:36:2:0.5:q8").unwrap();
+        assert_eq!(s.k, Some(KSchedule::Step { k0: 36, every: 2, gamma: 0.5 }));
+        assert_eq!(s.trace, Some(TraceMode::Q8));
+        // bare trace token where a K-schedule would be: trace-only
+        let s = LayerSpec::parse("128:relu:q8").unwrap();
+        assert_eq!(s.k, None);
+        assert_eq!(s.trace, Some(TraceMode::Q8));
+        // explicit f32 round-trips too
+        assert_eq!(LayerSpec::parse("128:relu:f32").unwrap().trace, Some(TraceMode::F32));
+        // no trace: unchanged historical grammar
+        let s = LayerSpec::parse("32:tanh:16").unwrap();
+        assert_eq!(s.k, Some(KSchedule::Constant(16)));
+        assert_eq!(s.trace, None);
+        // an unknown tail is still a K-schedule error, not a trace
+        assert!(LayerSpec::parse("32:relu:bf17").is_err());
+    }
+
+    #[test]
+    fn precision_knobs_roundtrip_and_default_to_f32() {
+        // defaults emit no keys at all (pre-v7 frame shape preserved)
+        let c = ExperimentConfig::energy_preset();
+        assert_eq!((c.trace, c.accum), (TraceMode::F32, AccumMode::F32));
+        let j = c.to_json();
+        assert!(j.get("trace").is_none() && j.get("accum").is_none());
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!((back.trace, back.accum), (TraceMode::F32, AccumMode::F32));
+        // non-defaults round-trip as strings
+        let mut c = layered_cfg();
+        c.trace = TraceMode::Bf16;
+        c.accum = AccumMode::Kahan;
+        if let Some(specs) = &mut c.layers {
+            specs[0].trace = Some(TraceMode::Q8);
+        }
+        c.validate().unwrap();
+        let j = c.to_json();
+        assert_eq!(j.get("trace").and_then(|v| v.as_str()), Some("bf16"));
+        assert_eq!(j.get("accum").and_then(|v| v.as_str()), Some("kahan"));
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.trace, TraceMode::Bf16);
+        assert_eq!(back.accum, AccumMode::Kahan);
+        assert_eq!(back.layers, c.layers);
+        // unknown strings are rejected with a suggestion
+        let mut bad = c.to_json();
+        if let Json::Obj(pairs) = &mut bad {
+            pairs.retain(|(k, _)| k != "trace");
+            pairs.push(("trace".to_string(), json::s("bf166")));
+        }
+        let err = ExperimentConfig::from_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("bf16"), "suggestion missing from: {err}");
+    }
+
+    #[test]
+    fn layer_plan_resolves_and_pins_precision() {
+        // flat config: the single layer is the head — trace pinned f32
+        // even if the flat knob asks for q8; accum passes through
+        let mut flat = ExperimentConfig::energy_preset();
+        flat.trace = TraceMode::Q8;
+        flat.accum = AccumMode::F64;
+        let plan = flat.layer_plan();
+        assert_eq!(plan[0].trace, TraceMode::F32);
+        assert_eq!(plan[0].accum, AccumMode::F64);
+        assert_eq!(
+            flat.precision_plan(),
+            vec![LayerPrecision { trace: TraceMode::F32, accum: AccumMode::F64 }]
+        );
+        // layered: hidden layers inherit the flat trace, per-layer
+        // overrides win, head stays pinned
+        let mut c = ExperimentConfig::mnist_preset();
+        c.policy = Policy::TopK;
+        c.k = KSchedule::Constant(16);
+        c.trace = TraceMode::Bf16;
+        c.accum = AccumMode::Kahan;
+        c.layers = Some(vec![
+            LayerSpec::plain(128),
+            LayerSpec { trace: Some(TraceMode::Q8), ..LayerSpec::plain(64) },
+            LayerSpec::plain(10),
+        ]);
+        c.validate().unwrap();
+        let plan = c.layer_plan();
+        assert_eq!(plan[0].trace, TraceMode::Bf16, "inherits the flat knob");
+        assert_eq!(plan[1].trace, TraceMode::Q8, "per-layer override wins");
+        assert_eq!(plan[2].trace, TraceMode::F32, "head output pinned");
+        assert!(plan.iter().all(|rl| rl.accum == AccumMode::Kahan));
+        // an exact-policy consumer pins its *input* trace: layer 1
+        // exact → layer 0's stored output must stay f32
+        if let Some(specs) = &mut c.layers {
+            specs[1].policy = Some(Policy::Exact);
+        }
+        let plan = c.layer_plan();
+        assert_eq!(plan[0].trace, TraceMode::F32, "exact consumer pins input");
+        assert_eq!(plan[1].trace, TraceMode::Q8, "layer 1's own output untouched");
+    }
+
+    #[test]
+    fn precision_knobs_are_native_only() {
+        let mut c = ExperimentConfig::energy_preset();
+        c.backend = Backend::Hlo;
+        c.trace = TraceMode::Bf16;
+        assert!(c.validate().is_err());
+        c.trace = TraceMode::F32;
+        c.accum = AccumMode::F64;
+        assert!(c.validate().is_err());
+        c.accum = AccumMode::F32;
+        assert!(c.validate().is_ok());
+        c.backend = Backend::Native;
+        c.trace = TraceMode::Q8;
+        c.accum = AccumMode::Kahan;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

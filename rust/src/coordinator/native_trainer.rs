@@ -35,6 +35,12 @@ pub struct NativeTrainer {
     /// marker enforces the fwd_score→apply ordering), and steady-state
     /// steps allocate only the trait-mandated score clones.
     ws: GraphWorkspace,
+    /// Dedicated evaluation workspace, keyed at the task's eval batch.
+    /// Separate from `ws` on purpose: `Graph::evaluate_ws` writes the
+    /// exact staging buffers, which would clobber the training trace
+    /// pending between `fwd_score` and `apply`. All-f32 — evaluation is
+    /// forward-exact regardless of the training trace modes.
+    ws_eval: GraphWorkspace,
 }
 
 impl NativeTrainer {
@@ -73,25 +79,47 @@ impl NativeTrainer {
         // grid passes with it on or off (rust/tests/exec.rs).
         let mut ws = GraphWorkspace::new(&graph, cfg.m());
         ws.set_obs(ObsConfig::on());
+        // §Mixed precision: the resolved per-layer trace/accum pairs
+        // (head + exact-policy pins already applied by layer_plan)
+        ws.set_precision(&graph, &cfg.precision_plan());
+        record_trace_footprint(&mut ws);
+        let ws_eval = GraphWorkspace::new(&graph, cfg.task.eval_batch());
         Ok(NativeTrainer {
             graph,
             state,
             eta: cfg.lr,
             exec: Executor::new(cfg.threads),
             ws,
+            ws_eval,
         })
     }
 
     /// Reconfigure telemetry (e.g. `repro trace` raising the event-ring
     /// capacity, or benches switching it off). Resets any counts
-    /// recorded so far.
+    /// recorded so far (the trace-footprint gauge is re-recorded).
     pub fn set_obs(&mut self, cfg: ObsConfig) {
         self.ws.set_obs(cfg);
+        record_trace_footprint(&mut self.ws);
     }
 
     /// The trainer's step telemetry (histograms, counters, event ring).
     pub fn telemetry(&self) -> &StepTelemetry {
         self.ws.obs()
+    }
+}
+
+/// Seed the rollup's per-layer trace-bytes gauge (§Mixed precision)
+/// from the workspace's resolved precision: compressed layers report
+/// their backward-read footprint, f32 layers stay at 0 so all-f32
+/// rollups keep the pre-v7 frame shape.
+fn record_trace_footprint(ws: &mut GraphWorkspace) {
+    use crate::tensor::quant::TraceMode;
+    let prec: Vec<TraceMode> = ws.precision().iter().map(|p| p.trace).collect();
+    for (li, trace) in prec.into_iter().enumerate() {
+        if trace != TraceMode::F32 {
+            let bytes = ws.layer_trace_bytes(li) as u64;
+            ws.obs_mut().record_trace_bytes(li, bytes);
+        }
     }
 }
 
@@ -128,7 +156,9 @@ impl Trainer for NativeTrainer {
     }
 
     fn evaluate(&mut self, x: &Matrix, y: &Matrix) -> Result<(f32, f32)> {
-        Ok(self.graph.evaluate_exec(x, y, &self.exec))
+        // resident eval buffers (bitwise the throwaway evaluate_exec
+        // path); the training workspace is untouched
+        Ok(self.graph.evaluate_ws(x, y, &self.exec, &mut self.ws_eval))
     }
 
     fn mem_fro(&self) -> f32 {
@@ -226,8 +256,7 @@ mod tests {
                 width: 8,
                 activation: Some(crate::model::Activation::Tanh),
                 k: Some(KSchedule::Constant(36)),
-                policy: None,
-                memory: None,
+                ..LayerSpec::plain(8)
             },
             LayerSpec::plain(1),
         ]);
@@ -272,6 +301,46 @@ mod tests {
         let lm = t.layer_mem_fro();
         assert_eq!(lm.len(), 1);
         assert_eq!(lm[0], t.mem_fro());
+    }
+
+    #[test]
+    fn precision_config_threads_through_to_training_and_eval() {
+        use crate::tensor::quant::{AccumMode, TraceMode};
+        let mut cfg = ExperimentConfig::energy_preset();
+        cfg.policy = Policy::TopK;
+        cfg.k = KSchedule::Constant(18);
+        cfg.memory = true;
+        cfg.trace = TraceMode::Q8;
+        cfg.accum = AccumMode::F64;
+        cfg.layers = Some(vec![LayerSpec::plain(8), LayerSpec::plain(1)]);
+        let mut t = NativeTrainer::new(&cfg).unwrap();
+        let mut rng = Rng::new(3);
+        let x = Matrix::from_fn(144, 16, |_, _| rng.normal());
+        let y = Matrix::from_fn(144, 1, |_, _| rng.normal());
+        for _ in 0..4 {
+            let (loss, scores) = t.fwd_score(&x, &y).unwrap();
+            assert!(loss.is_finite());
+            let sels: Vec<_> = (0..2)
+                .map(|li| policy::select(Policy::TopK, &scores[li], 18, true, &mut rng))
+                .collect();
+            t.apply(&sels).unwrap();
+        }
+        // evaluation is forward-exact and must not disturb the pending-
+        // trace invariants (dedicated eval workspace)
+        let (vl, _) = t.evaluate(&x, &y).unwrap();
+        assert!(vl.is_finite());
+        // the audit reports the resolved input trace per layer: layer 0
+        // reads the raw f32 batch, layer 1 reads the q8 trace
+        let recs = t.audit(&x).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].trace, TraceMode::F32);
+        assert_eq!(recs[1].trace, TraceMode::Q8);
+        // the rollup carries the compressed footprint: layer 0 stores
+        // its output in q8 (144×8 codes + per-row steps); the pinned
+        // f32 head reports nothing
+        let roll = t.phase_rollup().unwrap();
+        assert_eq!(roll.layers[0].trace_bytes, (144 * 8 + 4 * 144) as u64);
+        assert_eq!(roll.layers[1].trace_bytes, 0);
     }
 
     #[test]

@@ -14,6 +14,7 @@ use std::marker::PhantomData;
 use std::ops::Range;
 
 use crate::exec::plan::ShardPlan;
+use crate::tensor::quant::{self, AccumMode, TraceRef};
 use crate::tensor::{ops, Matrix};
 
 /// Disjoint per-shard mutable views over one output buffer, indexable by
@@ -33,21 +34,25 @@ use crate::tensor::{ops, Matrix};
 /// > dispatch — each closure invocation touches only its own `i`, so
 /// > blocks are never aliased. (Sequential test loops that take one
 /// > block at a time satisfy the contract trivially.)
-pub struct RowBlocks<'a> {
-    ptr: *mut f32,
+/// Generic over the element type (`f32` by default): the quantized
+/// forward traces shard-encode into `u16`/`i8` code buffers through the
+/// same claim-once splitter.
+pub struct RowBlocks<'a, T = f32> {
+    ptr: *mut T,
     len: usize,
-    /// f32s per block (`granularity * per_row`); the last block may be
-    /// short.
+    /// elements per block (`granularity * per_row`); the last block may
+    /// be short.
     stride: usize,
     n_blocks: usize,
-    _borrow: PhantomData<&'a mut [f32]>,
+    _borrow: PhantomData<&'a mut [T]>,
 }
 
 // SAFETY: RowBlocks hands out disjoint sub-slices of one exclusively
 // borrowed buffer (see the `block` contract above); the pointer itself
-// carries no thread affinity.
-unsafe impl Send for RowBlocks<'_> {}
-unsafe impl Sync for RowBlocks<'_> {}
+// carries no thread affinity. `T: Send` because blocks (`&mut [T]`)
+// cross into worker threads.
+unsafe impl<T: Send> Send for RowBlocks<'_, T> {}
+unsafe impl<T: Send> Sync for RowBlocks<'_, T> {}
 
 impl<'a> RowBlocks<'a> {
     /// Split a matrix into the plan's row blocks (block `i` holds rows
@@ -57,9 +62,11 @@ impl<'a> RowBlocks<'a> {
         assert_eq!(m.rows(), plan.rows(), "matrix rows vs plan rows");
         RowBlocks::of_slice(m.data_mut(), cols, plan)
     }
+}
 
+impl<'a, T> RowBlocks<'a, T> {
     /// Split a flat row-major buffer with `per_row` entries per row.
-    pub fn of_slice(v: &'a mut [f32], per_row: usize, plan: &ShardPlan) -> RowBlocks<'a> {
+    pub fn of_slice(v: &'a mut [T], per_row: usize, plan: &ShardPlan) -> RowBlocks<'a, T> {
         assert!(per_row > 0, "per_row must be positive");
         assert_eq!(v.len(), plan.rows() * per_row, "buffer vs plan size");
         RowBlocks {
@@ -79,7 +86,7 @@ impl<'a> RowBlocks<'a> {
     /// contract). Distinct indices are disjoint by construction, so
     /// concurrent access to *different* indices is always sound.
     #[allow(clippy::mut_from_ref)] // &mut from & is the point: disjoint blocks behind one borrow
-    pub unsafe fn block(&self, i: usize) -> &'a mut [f32] {
+    pub unsafe fn block(&self, i: usize) -> &'a mut [T] {
         assert!(i < self.n_blocks, "block {i} out of {}", self.n_blocks);
         let start = i * self.stride;
         let end = (start + self.stride).min(self.len);
@@ -202,6 +209,164 @@ pub fn scale_rows(src: &Matrix, scale: f32, rows: Range<usize>, out: &mut [f32])
     }
 }
 
+/// [`fold_rows`] reading a dequant-on-read trace view (§Mixed
+/// precision): `out[r] = scale * deq(src[r]) + mem[r]`, with the decode
+/// fused into the same 8-lane elementwise loop. The `F32` variant
+/// delegates to [`fold_rows`] — bit-identical to the seed path. The
+/// decode is a pure per-row function of the stored codes (never of the
+/// row range or thread count), so shard position changes no bits.
+pub fn fold_trace_rows(
+    src: TraceRef<'_>,
+    mem: &Matrix,
+    scale: f32,
+    rows: Range<usize>,
+    out: &mut [f32],
+) {
+    match src {
+        TraceRef::F32(m) => fold_rows(m, mem, scale, rows, out),
+        TraceRef::Bf16 { cols, codes } => {
+            let src_block = &codes[rows.start * cols..rows.end * cols];
+            let mem_block = rows_of(mem, rows);
+            assert_eq!(src_block.len(), out.len());
+            assert_eq!(mem_block.len(), out.len());
+            let split = out.len() - out.len() % ops::LANES;
+            let (o8, o_tail) = out.split_at_mut(split);
+            let (s8, s_tail) = src_block.split_at(split);
+            let (m8, m_tail) = mem_block.split_at(split);
+            for ((oc, sc), mc) in o8
+                .chunks_exact_mut(ops::LANES)
+                .zip(s8.chunks_exact(ops::LANES))
+                .zip(m8.chunks_exact(ops::LANES))
+            {
+                for l in 0..ops::LANES {
+                    oc[l] = scale * quant::bf16_decode(sc[l]) + mc[l];
+                }
+            }
+            for ((o, &s), &m) in o_tail.iter_mut().zip(s_tail.iter()).zip(m_tail.iter()) {
+                *o = scale * quant::bf16_decode(s) + m;
+            }
+        }
+        TraceRef::Q8 { cols, steps, codes } => {
+            assert_eq!(out.len(), rows.len() * cols);
+            for (local, r) in rows.enumerate() {
+                let step = steps[r];
+                let crow = &codes[r * cols..(r + 1) * cols];
+                let mrow = mem.row(r);
+                let orow = &mut out[local * cols..(local + 1) * cols];
+                for ((o, &c), &m) in orow.iter_mut().zip(crow.iter()).zip(mrow.iter()) {
+                    *o = scale * quant::q8_decode(c, step) + m;
+                }
+            }
+        }
+    }
+}
+
+/// [`scale_rows`] reading a dequant-on-read trace view:
+/// `out[r] = scale * deq(src[r])` — the memory-off fold. `F32`
+/// delegates to [`scale_rows`] (bit-identical to the seed path).
+pub fn scale_trace_rows(src: TraceRef<'_>, scale: f32, rows: Range<usize>, out: &mut [f32]) {
+    match src {
+        TraceRef::F32(m) => scale_rows(m, scale, rows, out),
+        TraceRef::Bf16 { cols, codes } => {
+            let src_block = &codes[rows.start * cols..rows.end * cols];
+            assert_eq!(src_block.len(), out.len());
+            let split = out.len() - out.len() % ops::LANES;
+            let (o8, o_tail) = out.split_at_mut(split);
+            let (s8, s_tail) = src_block.split_at(split);
+            for (oc, sc) in o8
+                .chunks_exact_mut(ops::LANES)
+                .zip(s8.chunks_exact(ops::LANES))
+            {
+                for l in 0..ops::LANES {
+                    oc[l] = scale * quant::bf16_decode(sc[l]);
+                }
+            }
+            for (o, &s) in o_tail.iter_mut().zip(s_tail.iter()) {
+                *o = scale * quant::bf16_decode(s);
+            }
+        }
+        TraceRef::Q8 { cols, steps, codes } => {
+            assert_eq!(out.len(), rows.len() * cols);
+            for (local, r) in rows.enumerate() {
+                let step = steps[r];
+                let crow = &codes[r * cols..(r + 1) * cols];
+                let orow = &mut out[local * cols..(local + 1) * cols];
+                for (o, &c) in orow.iter_mut().zip(crow.iter()) {
+                    *o = scale * quant::q8_decode(c, step);
+                }
+            }
+        }
+    }
+}
+
+/// Auditor helper (§Mixed precision): add the scaled quantization
+/// residual of a trace to a folded block in place —
+/// `out[r] += scale * (exact[r] - deq(approx[r]))` — turning a resident
+/// `X̂ = scale·deq(x) + mem` into the f32-trace-exact
+/// `scale·x + mem` without needing the (already-overwritten) pre-step
+/// memory. A no-op for `F32` traces, so all-f32 audits are bit-identical
+/// to the seed auditor.
+pub fn trace_residual_rows(
+    exact: &Matrix,
+    approx: TraceRef<'_>,
+    scale: f32,
+    rows: Range<usize>,
+    out: &mut [f32],
+) {
+    let cols = exact.cols();
+    assert_eq!(approx.cols(), cols, "trace vs exact width");
+    assert_eq!(out.len(), rows.len() * cols);
+    match approx {
+        TraceRef::F32(_) => {}
+        TraceRef::Bf16 { codes, .. } => {
+            let exact_block = rows_of(exact, rows.clone());
+            let code_block = &codes[rows.start * cols..rows.end * cols];
+            for ((o, &e), &c) in out
+                .iter_mut()
+                .zip(exact_block.iter())
+                .zip(code_block.iter())
+            {
+                *o += scale * (e - quant::bf16_decode(c));
+            }
+        }
+        TraceRef::Q8 { steps, codes, .. } => {
+            for (local, r) in rows.enumerate() {
+                let step = steps[r];
+                let erow = exact.row(r);
+                let crow = &codes[r * cols..(r + 1) * cols];
+                let orow = &mut out[local * cols..(local + 1) * cols];
+                for ((o, &e), &c) in orow.iter_mut().zip(erow.iter()).zip(crow.iter()) {
+                    *o += scale * (e - quant::q8_decode(c, step));
+                }
+            }
+        }
+    }
+}
+
+/// Shard-encode a just-computed exact block into a trace's code rows
+/// (the quantize-on-write half of the mixed-precision trace): `block`
+/// holds the shard's exact activations, `codes` the matching code
+/// sub-slice. Pure per-element encode — sharded and serial encodes
+/// produce the same codes.
+pub fn encode_trace_rows_bf16(block: &[f32], codes: &mut [u16]) {
+    quant::bf16_encode_block(block, codes);
+}
+
+/// The q8 half of [`encode_trace_rows_bf16`]: per-row symmetric scales
+/// into `steps` (one per block row), codes into `codes`.
+pub fn encode_trace_rows_q8(block: &[f32], cols: usize, steps: &mut [f32], codes: &mut [i8]) {
+    assert!(cols > 0 && block.len() % cols == 0);
+    assert_eq!(block.len(), codes.len());
+    assert_eq!(steps.len(), block.len() / cols);
+    for ((srow, crow), st) in block
+        .chunks_exact(cols)
+        .zip(codes.chunks_exact_mut(cols))
+        .zip(steps.iter_mut())
+    {
+        *st = quant::q8_encode_row(srow, crow);
+    }
+}
+
 /// Policy scores for a shard: `out[r] = ||xhat[r]|| * ||ghat[r]||` over
 /// the block-local rows (`xhat` is `rows × n`, `ghat` is `rows × p`).
 /// Same per-row ops as `ops::norm_product_scores` (8-lane dot).
@@ -215,6 +380,32 @@ pub fn score_rows(xhat: &[f32], ghat: &[f32], n: usize, p: usize, out: &mut [f32
         .zip(ghat.chunks_exact(p))
     {
         *o = ops::dot(xr, xr).sqrt() * ops::dot(gr, gr).sqrt();
+    }
+}
+
+/// [`score_rows`] under an accumulation mode: the row-norm dots run
+/// with f64 or Kahan-compensated lanes (`tensor::ops::dot_acc`).
+/// `AccumMode::F32` is bit-identical to [`score_rows`].
+pub fn score_rows_acc(
+    xhat: &[f32],
+    ghat: &[f32],
+    n: usize,
+    p: usize,
+    out: &mut [f32],
+    mode: AccumMode,
+) {
+    if mode == AccumMode::F32 {
+        return score_rows(xhat, ghat, n, p, out);
+    }
+    let rows = out.len();
+    assert_eq!(xhat.len(), rows * n);
+    assert_eq!(ghat.len(), rows * p);
+    for ((o, xr), gr) in out
+        .iter_mut()
+        .zip(xhat.chunks_exact(n))
+        .zip(ghat.chunks_exact(p))
+    {
+        *o = ops::dot_acc(xr, xr, mode).sqrt() * ops::dot_acc(gr, gr, mode).sqrt();
     }
 }
 
@@ -238,6 +429,52 @@ pub fn col_sums_rows_into(block: &[f32], cols: usize, out: &mut [f32]) {
         for (o, &v) in out.iter_mut().zip(row.iter()) {
             *o += v;
         }
+    }
+}
+
+/// [`col_sums_rows_into`] under an accumulation mode: widened (f64 or
+/// Kahan) per-column accumulators in [`ops::LANES`]-wide column chunks,
+/// rows innermost — same fixed accumulation order per column, widened
+/// carry. `AccumMode::F32` is bit-identical to [`col_sums_rows_into`].
+pub fn col_sums_rows_into_acc(block: &[f32], cols: usize, out: &mut [f32], mode: AccumMode) {
+    if mode == AccumMode::F32 {
+        return col_sums_rows_into(block, cols, out);
+    }
+    assert!(cols > 0 && block.len() % cols == 0);
+    assert_eq!(out.len(), cols);
+    let mut c0 = 0usize;
+    while c0 < cols {
+        let w = (cols - c0).min(ops::LANES);
+        match mode {
+            AccumMode::F64 => {
+                let mut acc = [0.0f64; ops::LANES];
+                for row in block.chunks_exact(cols) {
+                    for l in 0..w {
+                        acc[l] += row[c0 + l] as f64;
+                    }
+                }
+                for l in 0..w {
+                    out[c0 + l] = acc[l] as f32;
+                }
+            }
+            AccumMode::Kahan => {
+                let mut acc = [0.0f32; ops::LANES];
+                let mut comp = [0.0f32; ops::LANES];
+                for row in block.chunks_exact(cols) {
+                    for l in 0..w {
+                        let y = row[c0 + l] - comp[l];
+                        let t = acc[l] + y;
+                        comp[l] = (t - acc[l]) - y;
+                        acc[l] = t;
+                    }
+                }
+                for l in 0..w {
+                    out[c0 + l] = acc[l];
+                }
+            }
+            AccumMode::F32 => unreachable!(),
+        }
+        c0 += w;
     }
 }
 
@@ -426,5 +663,173 @@ mod tests {
             keep_rows(&src, &keep, range, unsafe { blocks.block(i) });
         }
         assert_eq!(out.data(), serial.data());
+    }
+
+    #[test]
+    fn generic_row_blocks_split_code_buffers() {
+        let plan = ShardPlan::with_granularity(10, 4);
+        let mut codes = vec![0u16; 10 * 3];
+        let blocks = RowBlocks::of_slice(codes.as_mut_slice(), 3, &plan);
+        assert_eq!(blocks.len(), 3);
+        // SAFETY: one block live at a time (sequential loop)
+        unsafe {
+            assert_eq!(blocks.block(0).len(), 12);
+            assert_eq!(blocks.block(2).len(), 6);
+            for i in 0..blocks.len() {
+                for v in blocks.block(i).iter_mut() {
+                    *v = i as u16 + 1;
+                }
+            }
+        }
+        drop(blocks);
+        assert!(codes.iter().all(|&v| v > 0));
+    }
+
+    /// Quantize a matrix the way the forward trace does (serial).
+    fn quantize_q8(m: &Matrix) -> (Vec<f32>, Vec<i8>) {
+        let mut steps = vec![0.0f32; m.rows()];
+        let mut codes = vec![0i8; m.rows() * m.cols()];
+        encode_trace_rows_q8(m.data(), m.cols(), &mut steps, &mut codes);
+        (steps, codes)
+    }
+
+    #[test]
+    fn sharded_q8_encode_matches_serial_bitwise() {
+        let mut rng = Rng::new(21);
+        let src = randm(&mut rng, 19, 7);
+        let (serial_steps, serial_codes) = quantize_q8(&src);
+        let plan = ShardPlan::with_granularity(19, 6);
+        let mut steps = vec![f32::NAN; 19];
+        let mut codes = vec![0i8; 19 * 7];
+        for (i, range) in plan.iter().enumerate() {
+            let sb = RowBlocks::of_slice(steps.as_mut_slice(), 1, &plan);
+            let cb = RowBlocks::of_slice(codes.as_mut_slice(), 7, &plan);
+            // SAFETY: one block live at a time per splitter
+            let (sblk, cblk) = unsafe { (sb.block(i), cb.block(i)) };
+            encode_trace_rows_q8(rows_of(&src, range), 7, sblk, cblk);
+        }
+        assert_eq!(steps, serial_steps);
+        assert_eq!(codes, serial_codes);
+    }
+
+    #[test]
+    fn trace_fold_f32_view_is_bitwise_fold_rows() {
+        let mut rng = Rng::new(22);
+        let (m, n) = (17, 6);
+        let src = randm(&mut rng, m, n);
+        let mem = randm(&mut rng, m, n);
+        let plan = ShardPlan::with_granularity(m, 5);
+        let mut a = Matrix::zeros(m, n);
+        let mut b = Matrix::zeros(m, n);
+        for (i, range) in plan.iter().enumerate() {
+            let ab = RowBlocks::of(&mut a, &plan);
+            // SAFETY: one block live at a time
+            fold_rows(&src, &mem, 0.2, range.clone(), unsafe { ab.block(i) });
+            let bb = RowBlocks::of(&mut b, &plan);
+            // SAFETY: one block live at a time
+            fold_trace_rows(TraceRef::F32(&src), &mem, 0.2, range.clone(), unsafe {
+                bb.block(i)
+            });
+        }
+        assert_eq!(a.data(), b.data());
+        // scale (memory-off) twin
+        let mut c = Matrix::zeros(m, n);
+        let mut d = Matrix::zeros(m, n);
+        for (i, range) in plan.iter().enumerate() {
+            let cb = RowBlocks::of(&mut c, &plan);
+            // SAFETY: one block live at a time
+            scale_rows(&src, 0.2, range.clone(), unsafe { cb.block(i) });
+            let db = RowBlocks::of(&mut d, &plan);
+            // SAFETY: one block live at a time
+            scale_trace_rows(TraceRef::F32(&src), 0.2, range, unsafe { db.block(i) });
+        }
+        assert_eq!(c.data(), d.data());
+    }
+
+    #[test]
+    fn trace_fold_quantized_views_match_dequantized_reference() {
+        let mut rng = Rng::new(23);
+        let (m, n) = (13, 9);
+        let src = randm(&mut rng, m, n);
+        let mem = randm(&mut rng, m, n);
+        let se = 0.22f32;
+        let (steps, codes) = quantize_q8(&src);
+        let bcodes: Vec<u16> = src.data().iter().map(|&v| quant::bf16_encode(v)).collect();
+        for (tr, max_err) in [
+            (TraceRef::Bf16 { cols: n, codes: &bcodes }, 1.0 / 256.0),
+            (TraceRef::Q8 { cols: n, steps: &steps, codes: &codes }, 1.0 / 254.0),
+        ] {
+            let mut out = vec![f32::NAN; m * n];
+            fold_trace_rows(tr, &mem, se, 0..m, &mut out);
+            for r in 0..m {
+                let row_scale = src.row(r).iter().fold(0.0f32, |a, v| a.max(v.abs()));
+                for c in 0..n {
+                    // fold of the decoded value, exactly
+                    let exact_of_deq = se * tr.at(r, c) + mem[(r, c)];
+                    assert_eq!(out[r * n + c], exact_of_deq, "({r},{c})");
+                    // and the decoded value is within the codec bound
+                    let drift = (out[r * n + c] - (se * src[(r, c)] + mem[(r, c)])).abs();
+                    assert!(drift <= se * row_scale.max(src[(r, c)].abs()) * max_err * 1.01);
+                }
+            }
+            // residual correction recovers the exact fold to f32 tolerance
+            let mut fixed = out.clone();
+            trace_residual_rows(&src, tr, se, 0..m, &mut fixed);
+            for r in 0..m {
+                for c in 0..n {
+                    let exact = se * src[(r, c)] + mem[(r, c)];
+                    assert!((fixed[r * n + c] - exact).abs() <= 1e-6 + exact.abs() * 1e-6);
+                }
+            }
+        }
+        // the F32 view's residual is a strict no-op
+        let mut out = vec![7.0f32; m * n];
+        trace_residual_rows(&src, TraceRef::F32(&src), se, 0..m, &mut out);
+        assert!(out.iter().all(|&v| v == 7.0));
+    }
+
+    #[test]
+    fn widened_score_and_col_sum_variants() {
+        let mut rng = Rng::new(24);
+        let (m, n, p) = (15, 33, 5);
+        let xhat = randm(&mut rng, m, n);
+        let ghat = randm(&mut rng, m, p);
+        let mut base = vec![0.0f32; m];
+        score_rows(rows_of(&xhat, 0..m), rows_of(&ghat, 0..m), n, p, &mut base);
+        let mut acc = vec![0.0f32; m];
+        score_rows_acc(
+            rows_of(&xhat, 0..m),
+            rows_of(&ghat, 0..m),
+            n,
+            p,
+            &mut acc,
+            AccumMode::F32,
+        );
+        assert_eq!(base, acc, "F32 dispatch is bitwise the seed kernel");
+        for mode in [AccumMode::F64, AccumMode::Kahan] {
+            score_rows_acc(
+                rows_of(&xhat, 0..m),
+                rows_of(&ghat, 0..m),
+                n,
+                p,
+                &mut acc,
+                mode,
+            );
+            for r in 0..m {
+                assert!((acc[r] - base[r]).abs() <= 1e-4 * (1.0 + base[r].abs()), "{mode:?}");
+            }
+        }
+        let g = randm(&mut rng, 40, 11);
+        let mut cs = vec![0.0f32; 11];
+        col_sums_rows_into_acc(rows_of(&g, 0..40), 11, &mut cs, AccumMode::F32);
+        assert_eq!(cs, g.col_sums(), "F32 dispatch is bitwise the seed kernel");
+        for mode in [AccumMode::F64, AccumMode::Kahan] {
+            col_sums_rows_into_acc(rows_of(&g, 0..40), 11, &mut cs, mode);
+            // f64 column sums, rounded once
+            for c in 0..11 {
+                let refd: f64 = (0..40).map(|r| g[(r, c)] as f64).sum();
+                assert!((cs[c] as f64 - refd).abs() <= 1e-5 * (1.0 + refd.abs()), "{mode:?}");
+            }
+        }
     }
 }

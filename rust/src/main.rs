@@ -72,9 +72,21 @@ fn app() -> App {
                 .opt(
                     "layers",
                     "",
-                    "layer-graph spec `width[:activation[:ksched]],...` ending at the task \
-                     output width, e.g. `32:tanh:16,10` or `32:relu:linear:8:32,10` \
+                    "layer-graph spec `width[:activation[:ksched[:trace]]],...` ending at the \
+                     task output width, e.g. `32:tanh:16,10` or `4096:relu:32:bf16,10` \
                      (native backend; empty = flat single layer)",
+                )
+                .opt(
+                    "trace",
+                    "f32",
+                    "forward-trace storage: f32 | bf16 | q8 (native backend; default for \
+                     every layer, per-layer override via --layers; head and exact-policy \
+                     inputs stay f32)",
+                )
+                .opt(
+                    "accum",
+                    "f32",
+                    "backward accumulation width: f32 | f64 | kahan (native backend)",
                 )
                 .opt("save", "", "write final weights+memories to this checkpoint path")
                 .opt(
@@ -140,6 +152,8 @@ fn app() -> App {
                 .opt("threads", "1", "data-parallel training threads")
                 .opt("data-scale", "1.0", "fraction of Tab. I dataset size (mnist)")
                 .opt("seed", "0", "RNG seed")
+                .opt("trace", "f32", "forward-trace storage: f32 | bf16 | q8")
+                .opt("accum", "f32", "backward accumulation width: f32 | f64 | kahan")
                 .flag("no-memory", "disable error-feedback memory"),
         ],
     }
@@ -210,6 +224,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("bad --backend"))?;
     cfg.data_scale = args.get_parse("data-scale")?;
     cfg.threads = args.get_parse("threads")?;
+    cfg.trace = mem_aop_gd::tensor::quant::TraceMode::parse_or_suggest(
+        args.get("trace").unwrap_or("f32"),
+    )
+    .map_err(|e| anyhow!("--trace: {e}"))?;
+    cfg.accum = mem_aop_gd::tensor::quant::AccumMode::parse_or_suggest(
+        args.get("accum").unwrap_or("f32"),
+    )
+    .map_err(|e| anyhow!("--accum: {e}"))?;
     cfg.memory = !args.flag("no-memory");
     if cfg.policy == Policy::Exact {
         cfg.memory = false;
@@ -239,9 +261,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.threads
     );
     if cfg.layers.is_some() {
+        use mem_aop_gd::tensor::quant::{AccumMode, TraceMode};
         for (i, rl) in cfg.layer_plan().iter().enumerate() {
+            // Precision suffix only when some knob left f32, so the
+            // historical all-f32 echo stays byte-identical.
+            let mut prec = String::new();
+            if rl.trace != TraceMode::F32 {
+                prec.push_str(&format!(", trace={}", rl.trace.name()));
+            }
+            if rl.accum != AccumMode::F32 {
+                prec.push_str(&format!(", accum={}", rl.accum.name()));
+            }
             println!(
-                "  layer {i}: {}x{} {} (K={}, policy={}, memory={})",
+                "  layer {i}: {}x{} {} (K={}, policy={}, memory={}{prec})",
                 rl.fan_in,
                 rl.fan_out,
                 rl.activation.name(),
@@ -563,6 +595,14 @@ fn cmd_audit(args: &Args) -> Result<()> {
     cfg.seed = args.get_parse("seed")?;
     cfg.threads = args.get_parse("threads")?;
     cfg.data_scale = args.get_parse("data-scale")?;
+    cfg.trace = mem_aop_gd::tensor::quant::TraceMode::parse_or_suggest(
+        args.get("trace").unwrap_or("f32"),
+    )
+    .map_err(|e| anyhow!("--trace: {e}"))?;
+    cfg.accum = mem_aop_gd::tensor::quant::AccumMode::parse_or_suggest(
+        args.get("accum").unwrap_or("f32"),
+    )
+    .map_err(|e| anyhow!("--accum: {e}"))?;
     if args.flag("no-memory") {
         cfg.memory = false;
     }
@@ -604,6 +644,7 @@ fn print_audit_table(epochs: &[mem_aop_gd::metrics::EpochMetrics]) {
             rows.push(vec![
                 format!("{}", m.epoch),
                 format!("{}", a.layer),
+                a.trace.name().to_string(),
                 format!("{:.6}", a.cosine),
                 format!("{:.3e}", a.rel_err),
                 format!("{:.3e}", a.mem_bias),
@@ -614,7 +655,10 @@ fn print_audit_table(epochs: &[mem_aop_gd::metrics::EpochMetrics]) {
         return;
     }
     println!("\ngradient fidelity (exact same-batch gradient vs applied Mem-AOP update):");
-    print_table(&["epoch", "layer", "cosine", "rel err", "mem bias"], &rows);
+    print_table(
+        &["epoch", "layer", "trace", "cosine", "rel err", "mem bias"],
+        &rows,
+    );
 }
 
 /// Human-readable nanosecond duration for the rollup table.

@@ -489,9 +489,22 @@ mod tests {
         use crate::obs::AuditLayerRecord;
         let mut c = RunCurve::new("audited");
         let mut e1 = m(1, 2.0);
+        use crate::tensor::quant::TraceMode;
         e1.audit = vec![
-            AuditLayerRecord { layer: 0, cosine: 0.98, rel_err: 0.12, mem_bias: 0.04 },
-            AuditLayerRecord { layer: 1, cosine: 0.95, rel_err: 0.2, mem_bias: 0.0 },
+            AuditLayerRecord {
+                layer: 0,
+                cosine: 0.98,
+                rel_err: 0.12,
+                mem_bias: 0.04,
+                trace: TraceMode::F32,
+            },
+            AuditLayerRecord {
+                layer: 1,
+                cosine: 0.95,
+                rel_err: 0.2,
+                mem_bias: 0.0,
+                trace: TraceMode::Bf16,
+            },
         ];
         c.push(e1);
         c.push(m(2, 1.5)); // un-audited epoch

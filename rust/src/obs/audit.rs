@@ -19,6 +19,7 @@
 //! allocation, no RNG, no clocks — safe to call from the observation
 //! path without touching the determinism contract.
 
+use crate::tensor::quant::TraceMode;
 use crate::util::json::{self, Json};
 
 /// One layer's gradient-fidelity audit: the applied Mem-AOP update
@@ -35,16 +36,28 @@ pub struct AuditLayerRecord {
     /// ‖exact(memory-folded) − exact(raw)‖ / ‖exact(raw)‖ — how much
     /// the banked residual bends the exact gradient this step.
     pub mem_bias: f64,
+    /// Storage precision of the trace this layer's `X̂` was folded from
+    /// (§Mixed precision) — the *input* trace, i.e. the previous layer's
+    /// activation storage; `F32` for the first layer (raw input batch)
+    /// and for all-f32 runs. When quantized, `rel_err`/`cosine` compare
+    /// the applied update against the f32-trace exact gradient, so they
+    /// include the quantization drift.
+    pub trace: TraceMode,
 }
 
 impl AuditLayerRecord {
     pub fn to_json(&self) -> Json {
-        json::obj(vec![
+        let mut fields = vec![
             ("layer", json::num(self.layer as f64)),
             ("cosine", json::num(self.cosine)),
             ("rel_err", json::num(self.rel_err)),
             ("mem_bias", json::num(self.mem_bias)),
-        ])
+        ];
+        // wire back-compat: all-f32 records serialize exactly as before
+        if self.trace != TraceMode::F32 {
+            fields.push(("trace", json::s(self.trace.name())));
+        }
+        json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<AuditLayerRecord> {
@@ -53,11 +66,16 @@ impl AuditLayerRecord {
                 .and_then(|v| v.as_f64())
                 .ok_or_else(|| anyhow::anyhow!("audit record missing numeric '{k}'"))
         };
+        let trace = match j.get("trace").and_then(|v| v.as_str()) {
+            Some(s) => TraceMode::parse_or_suggest(s).map_err(|e| anyhow::anyhow!(e))?,
+            None => TraceMode::F32,
+        };
         Ok(AuditLayerRecord {
             layer: num("layer")? as usize,
             cosine: num("cosine")?,
             rel_err: num("rel_err")?,
             mem_bias: num("mem_bias")?,
+            trace,
         })
     }
 }
@@ -135,9 +153,20 @@ mod tests {
 
     #[test]
     fn audit_record_json_roundtrip() {
-        let r = AuditLayerRecord { layer: 2, cosine: 0.987, rel_err: 0.125, mem_bias: 0.03 };
+        let r = AuditLayerRecord {
+            layer: 2,
+            cosine: 0.987,
+            rel_err: 0.125,
+            mem_bias: 0.03,
+            trace: TraceMode::F32,
+        };
         let back = AuditLayerRecord::from_json(&r.to_json()).unwrap();
         assert_eq!(r, back);
+        // all-f32 records serialize without a trace key (wire back-compat)
+        assert!(r.to_json().get("trace").is_none());
+        let q = AuditLayerRecord { trace: TraceMode::Q8, ..r };
+        assert_eq!(q.to_json().get("trace").and_then(|v| v.as_str()), Some("q8"));
+        assert_eq!(AuditLayerRecord::from_json(&q.to_json()).unwrap(), q);
         assert!(AuditLayerRecord::from_json(&json::obj(vec![])).is_err());
     }
 }

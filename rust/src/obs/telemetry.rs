@@ -96,6 +96,9 @@ pub struct StepTelemetry {
     layer_flops: Vec<u64>,
     /// Most recent gradient-fidelity audit per layer (ISSUE 7).
     layer_audit: Vec<LayerAudit>,
+    /// Backward-read bytes of each layer's stored forward trace
+    /// (§Mixed precision); 0 for uncompressed (f32) layers.
+    layer_trace_bytes: Vec<u64>,
     trace: TraceRing,
 }
 
@@ -110,6 +113,7 @@ impl StepTelemetry {
             layer_k_sum: vec![0; n_layers],
             layer_flops: vec![0; n_layers],
             layer_audit: vec![LayerAudit::default(); n_layers],
+            layer_trace_bytes: vec![0; n_layers],
             trace: TraceRing::with_capacity(trace_cap),
         }
     }
@@ -199,6 +203,20 @@ impl StepTelemetry {
         }
     }
 
+    /// Record one layer's compressed-trace footprint (§Mixed precision):
+    /// the bytes the backward pass re-reads for its stored forward
+    /// trace. Latest wins — it is a gauge, not a counter; callers
+    /// record once per (re)configuration, leaving f32 layers at 0.
+    #[inline]
+    pub fn record_trace_bytes(&mut self, li: usize, bytes: u64) {
+        if !self.cfg.enabled {
+            return;
+        }
+        if let Some(b) = self.layer_trace_bytes.get_mut(li) {
+            *b = bytes;
+        }
+    }
+
     pub fn steps(&self) -> u64 {
         self.steps
     }
@@ -213,6 +231,10 @@ impl StepTelemetry {
 
     pub fn layer_flops(&self) -> &[u64] {
         &self.layer_flops
+    }
+
+    pub fn layer_trace_bytes(&self) -> &[u64] {
+        &self.layer_trace_bytes
     }
 
     pub fn trace(&self) -> &TraceRing {
@@ -247,10 +269,12 @@ impl StepTelemetry {
                 .iter()
                 .zip(self.layer_flops.iter())
                 .zip(self.layer_audit.iter())
-                .map(|((&k_sum, &backward_flops), &audit)| LayerStat {
+                .zip(self.layer_trace_bytes.iter())
+                .map(|(((&k_sum, &backward_flops), &audit), &trace_bytes)| LayerStat {
                     k_sum,
                     backward_flops,
                     audit,
+                    trace_bytes,
                 })
                 .collect(),
         }
@@ -294,6 +318,9 @@ pub struct LayerStat {
     /// Latest gradient-fidelity audit (ISSUE 7); `audits == 0` when
     /// the run never audited.
     pub audit: LayerAudit,
+    /// Backward-read bytes of this layer's compressed forward trace
+    /// (§Mixed precision); 0 when the layer stores f32.
+    pub trace_bytes: u64,
 }
 
 /// Frozen summary of a run's [`StepTelemetry`]: steps, per-phase
@@ -348,6 +375,11 @@ impl PhaseRollup {
                                 pairs.push(("audit_cosine", json::num(l.audit.cosine)));
                                 pairs.push(("audit_rel_err", json::num(l.audit.rel_err)));
                                 pairs.push(("audit_mem_bias", json::num(l.audit.mem_bias)));
+                            }
+                            // same pattern for the compressed-trace
+                            // footprint: all-f32 runs keep the v5 shape
+                            if l.trace_bytes > 0 {
+                                pairs.push(("trace_bytes", json::num(l.trace_bytes as f64)));
                             }
                             json::obj(pairs)
                         })
@@ -418,7 +450,7 @@ mod tests {
         assert!(apply.p50_ns >= 1000 && apply.p50_ns <= 2047, "{}", apply.p50_ns);
         assert_eq!(
             r.layers,
-            vec![LayerStat { k_sum: 9, backward_flops: 5000, audit: LayerAudit::default() }]
+            vec![LayerStat { k_sum: 9, backward_flops: 5000, ..LayerStat::default() }]
         );
         // JSON render keeps the stable phase names
         let j = r.to_json();
@@ -459,5 +491,23 @@ mod tests {
         let mut off = StepTelemetry::new(ObsConfig::off(), 1);
         off.record_audit(0, 1.0, 0.0, 0.0);
         assert_eq!(off.rollup().layers[0].audit.audits, 0);
+    }
+
+    #[test]
+    fn trace_bytes_gauge_is_latest_wins_and_renders_only_when_compressed() {
+        let mut t = StepTelemetry::new(ObsConfig::on(), 2);
+        t.record_trace_bytes(1, 4096);
+        t.record_trace_bytes(1, 2048); // re-key: latest wins
+        let r = t.rollup();
+        assert_eq!(r.layers[0].trace_bytes, 0);
+        assert_eq!(r.layers[1].trace_bytes, 2048);
+        let j = r.to_json();
+        let layers = j.get("layers").and_then(|l| l.as_arr()).unwrap();
+        assert!(layers[0].get("trace_bytes").is_none(), "f32 layers keep the v5 shape");
+        assert_eq!(layers[1].get("trace_bytes").and_then(|v| v.as_usize()), Some(2048));
+        // disabled telemetry drops the gauge like every other record
+        let mut off = StepTelemetry::new(ObsConfig::off(), 1);
+        off.record_trace_bytes(0, 999);
+        assert_eq!(off.rollup().layers[0].trace_bytes, 0);
     }
 }

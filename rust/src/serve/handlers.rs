@@ -17,6 +17,7 @@ use crate::serve::protocol::{
 };
 use crate::serve::queue::Scheduler;
 use crate::serve::registry::Registry;
+use crate::tensor::quant::TraceMode;
 use crate::util::json::{self, Json};
 
 /// Stable op labels for the per-op request accounting (protocol v5;
@@ -459,6 +460,24 @@ impl ServerState {
             "Relative deviation of the memory-corrected update from the raw outer product, per layer.",
             &|r| r.mem_bias,
         );
+        // mixed-precision footprint (protocol v7): backward-read bytes
+        // of each job's stored forward traces at batch M, summed over
+        // the resolved (post-pin) layer plan. All-f32 jobs export
+        // nothing — they are the uncompressed baseline.
+        p.header(
+            "repro_trace_bytes",
+            "gauge",
+            "Backward-read forward-trace bytes per job (quantized-trace jobs only).",
+        );
+        for v in self.registry.views() {
+            let plan = v.config.layer_plan();
+            if plan.iter().any(|rl| rl.trace != TraceMode::F32) {
+                let m = v.config.m();
+                let bytes: usize =
+                    plan.iter().map(|rl| rl.trace.trace_bytes(m, rl.fan_out)).sum();
+                p.sample("repro_trace_bytes", &[("job", &v.id.to_string())], bytes as f64);
+            }
+        }
         p.finish()
     }
 }
@@ -857,10 +876,57 @@ mod tests {
                 "sample '{name}' has no # TYPE header"
             );
         }
-        // the v6 audit families are declared even with no audited jobs
-        for fam in ["repro_audit_epoch", "repro_audit_cosine", "repro_audit_rel_err", "repro_audit_mem_bias"] {
+        // the v6 audit families are declared even with no audited jobs,
+        // as is the v7 trace-footprint gauge with no quantized jobs
+        for fam in [
+            "repro_audit_epoch",
+            "repro_audit_cosine",
+            "repro_audit_rel_err",
+            "repro_audit_mem_bias",
+            "repro_trace_bytes",
+        ] {
             assert!(typed.contains(fam), "missing header for {fam}");
         }
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn quantized_trace_jobs_export_their_footprint_gauge() {
+        use crate::coordinator::config::LayerSpec;
+        use crate::tensor::quant::TraceMode;
+        let st = state();
+        // all-f32 job: no repro_trace_bytes sample
+        let a = st.handle(&submit_req(11));
+        let ida = a.get("id").unwrap().as_f64().unwrap() as u64;
+        wait_done(&st, ida);
+        // bf16-trace job over a layered graph: 16→8→1 at M=144; only
+        // layer 0's output is compressible (the head is pinned f32)
+        let mut cfg = quick_cfg(12);
+        cfg.trace = TraceMode::Bf16;
+        cfg.layers = Some(vec![LayerSpec::plain(8), LayerSpec::plain(1)]);
+        let r = st.handle(&json::obj(vec![
+            ("op", json::s("submit")),
+            ("config", cfg.to_json()),
+            ("tag", json::s("bf16")),
+        ]));
+        assert!(is_ok(&r), "{}", r.dump());
+        let idb = r.get("id").unwrap().as_f64().unwrap() as u64;
+        wait_done(&st, idb);
+        let pr = st.handle(&json::obj(vec![
+            ("op", json::s("metrics")),
+            ("format", json::s("prometheus")),
+        ]));
+        let text = pr.get("text").unwrap().as_str().unwrap();
+        // bf16 layer 0 (144×8 halves to 2 B/elt) + pinned-f32 head (144×1)
+        let want = 2 * 144 * 8 + 4 * 144;
+        assert!(
+            text.contains(&format!("repro_trace_bytes{{job=\"{idb}\"}} {want}\n")),
+            "{text}"
+        );
+        assert!(
+            !text.contains(&format!("repro_trace_bytes{{job=\"{ida}\"}}")),
+            "all-f32 job must not export a footprint\n{text}"
+        );
         st.scheduler.shutdown();
     }
 

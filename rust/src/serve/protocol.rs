@@ -82,6 +82,19 @@
 //! the last audited epoch of each job is also exported as
 //! `repro_audit_*` Prometheus gauges.
 //!
+//! Protocol v7 is the mixed-precision surface. `config` may carry flat
+//! `trace` (`f32` | `bf16` | `q8` forward-trace storage) and `accum`
+//! (`f32` | `f64` | `kahan` backward accumulation) fields, and each
+//! `layers[]` entry an optional `trace` override (native backend only;
+//! unknown mode strings are `ok:false` protocol errors with the valid
+//! spellings listed). Job views echo the *resolved* per-layer precision
+//! — `trace`/`accum` plus the backward-read `trace_bytes` footprint —
+//! after the head/exact-policy f32 pins, and audit records carry the
+//! input-trace mode they measured under. The total footprint is
+//! exported as the `repro_trace_bytes` Prometheus gauge. All-f32
+//! configs and their job views serialize without any of the new keys:
+//! pre-v7 frames remain accepted and byte-identical.
+//!
 //! [`Client`] is a small blocking client used by `examples/serve_client.rs`
 //! and the integration tests.
 
@@ -107,9 +120,12 @@ use crate::util::json::{self, Json};
 /// latency histograms. v6: training-dynamics streaming — the `watch`
 /// long-poll op (per-epoch metric frames with selection diagnostics and
 /// gradient-fidelity audit records, cursor-resumable), the config
-/// `audit` cadence field, and `repro_audit_*` Prometheus gauges. Older
-/// frames remain accepted.
-pub const PROTOCOL_VERSION: u64 = 6;
+/// `audit` cadence field, and `repro_audit_*` Prometheus gauges. v7:
+/// mixed precision — config `trace`/`accum` knobs (flat + per-layer
+/// trace overrides), resolved per-layer `trace`/`accum`/`trace_bytes`
+/// in job views, the `trace` field on audit records, and the
+/// `repro_trace_bytes` Prometheus gauge. Older frames remain accepted.
+pub const PROTOCOL_VERSION: u64 = 7;
 
 /// Rendering of the `metrics` response (protocol v5 `format` field).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -605,6 +621,18 @@ mod tests {
         let bad = json::obj(vec![("op", json::s("submit")), ("config", j)]);
         let err = Request::from_json(&bad).unwrap_err();
         assert!(format!("{err:#}").contains("bad config"), "{err:#}");
+        // submit with an unknown precision mode (protocol v7): rejected
+        // with the valid spellings listed, not silently defaulted
+        for (key, val) in [("trace", "int8"), ("accum", "f128")] {
+            let mut j = ExperimentConfig::preset(Task::Energy).to_json();
+            if let Json::Obj(pairs) = &mut j {
+                pairs.push((key.to_string(), json::s(val)));
+            }
+            let bad = json::obj(vec![("op", json::s("submit")), ("config", j)]);
+            let err = format!("{:#}", Request::from_json(&bad).unwrap_err());
+            assert!(err.contains("bad config"), "{err}");
+            assert!(err.contains("expected one of"), "{err}");
+        }
     }
 
     #[test]

@@ -22,6 +22,7 @@ use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::experiment::RunResult;
 use crate::metrics::{EpochMetrics, RunCurve};
 use crate::obs::{AuditLayerRecord, PhaseRollup};
+use crate::tensor::quant::{AccumMode, TraceMode};
 use crate::util::json::{self, Json};
 
 /// Epoch frames retained per job for `watch` (protocol v6). A cursor
@@ -134,7 +135,7 @@ impl JobView {
             .layer_plan()
             .iter()
             .map(|rl| {
-                json::obj(vec![
+                let mut pairs = vec![
                     ("width", json::num(rl.fan_out as f64)),
                     ("activation", json::s(rl.activation.name())),
                     ("k", rl.k.to_json()),
@@ -142,7 +143,24 @@ impl JobView {
                     ("k_last", json::num(rl.k.k_at(total, total, m) as f64)),
                     ("policy", json::s(rl.policy.name())),
                     ("memory", Json::Bool(rl.memory)),
-                ])
+                ];
+                // resolved precision (protocol v7), emitted only when
+                // non-default so all-f32 views keep the pre-v7 shape:
+                // `trace` is post-pin (head/exact-input layers echo
+                // nothing even if the spec asked for compression), and
+                // `trace_bytes` is the backward-read footprint of this
+                // layer's stored output activations at batch M
+                if rl.trace != TraceMode::F32 {
+                    pairs.push(("trace", json::s(rl.trace.name())));
+                    pairs.push((
+                        "trace_bytes",
+                        json::num(rl.trace.trace_bytes(m, rl.fan_out) as f64),
+                    ));
+                }
+                if rl.accum != AccumMode::F32 {
+                    pairs.push(("accum", json::s(rl.accum.name())));
+                }
+                json::obj(pairs)
             })
             .collect();
         json::obj(vec![
@@ -738,6 +756,38 @@ mod tests {
         assert_eq!(compact.get("id").unwrap().as_usize().unwrap(), id as usize);
         assert_eq!(compact.get("state").unwrap().as_str().unwrap(), "done");
         assert_eq!(compact.get("epochs_done").unwrap().as_usize().unwrap(), 3);
+    }
+
+    #[test]
+    fn job_views_echo_resolved_precision_only_when_nondefault() {
+        use crate::coordinator::config::LayerSpec;
+        let reg = Registry::new(None).unwrap();
+        // all-f32 job: the layer entries carry none of the v7 keys
+        let id = reg.submit(quick_cfg(0), "f32");
+        let full = reg.view(id).unwrap().to_json();
+        let layers = full.get("layers").and_then(|a| a.as_arr()).unwrap();
+        assert!(layers[0].get("trace").is_none());
+        assert!(layers[0].get("accum").is_none());
+        assert!(layers[0].get("trace_bytes").is_none());
+        // mixed-precision job: resolved (post-pin) precision per layer
+        let mut cfg = quick_cfg(1);
+        cfg.trace = TraceMode::Q8;
+        cfg.accum = AccumMode::F64;
+        cfg.layers = Some(vec![LayerSpec::plain(8), LayerSpec::plain(1)]);
+        let id = reg.submit(cfg, "q8");
+        let full = reg.view(id).unwrap().to_json();
+        let layers = full.get("layers").and_then(|a| a.as_arr()).unwrap();
+        assert_eq!(layers[0].get("trace").and_then(|v| v.as_str()), Some("q8"));
+        // M=144 rows of 8 cols: codes + one f32 step per row
+        assert_eq!(
+            layers[0].get("trace_bytes").and_then(|v| v.as_usize()),
+            Some(144 * 8 + 4 * 144)
+        );
+        assert_eq!(layers[0].get("accum").and_then(|v| v.as_str()), Some("f64"));
+        // the head is pinned f32 at resolution: no trace echo, but the
+        // accum knob (uniform) still shows
+        assert!(layers[1].get("trace").is_none());
+        assert_eq!(layers[1].get("accum").and_then(|v| v.as_str()), Some("f64"));
     }
 
     #[test]

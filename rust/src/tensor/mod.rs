@@ -8,6 +8,7 @@
 
 pub mod init;
 pub mod ops;
+pub mod quant;
 pub mod rng;
 
 use std::fmt;

@@ -35,6 +35,7 @@
 //! transpose through [`matmul_rows_bt`] so the per-call `transpose()` of
 //! the historical narrow path disappears from steady-state steps.
 
+use super::quant::AccumMode;
 use super::Matrix;
 
 /// Lane width of the split loops (f32 lanes of one AVX2 register; two
@@ -69,6 +70,147 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         s += av * bv;
     }
     s
+}
+
+/// [`dot`] with f64 accumulator lanes (§Mixed precision, `accum: f64`):
+/// the **same 8-lane loop shape** — eight independent lanes over
+/// `chunks_exact(8)`, pairwise combine, scalar tail — with every
+/// accumulator widened to f64 and one rounding to f32 at the end. The
+/// grouping is still a pure function of the operand length, so the
+/// exec bit-identity contract holds per config.
+#[inline]
+pub fn dot_f64(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; LANES];
+    let (a8, a_tail) = a.split_at(a.len() - a.len() % LANES);
+    let (b8, b_tail) = b.split_at(a8.len());
+    for (ai, bi) in a8.chunks_exact(LANES).zip(b8.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            acc[l] += ai[l] as f64 * bi[l] as f64;
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (av, bv) in a_tail.iter().zip(b_tail.iter()) {
+        s += *av as f64 * *bv as f64;
+    }
+    s as f32
+}
+
+/// [`dot`] with Kahan-compensated f32 lanes (`accum: kahan`): eight
+/// accumulator lanes each carrying a compensation term, combined
+/// pairwise (sums then compensations) at the end. Same loop shape,
+/// same determinism contract as [`dot_f64`].
+#[inline]
+pub fn dot_kahan(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let mut comp = [0.0f32; LANES];
+    let (a8, a_tail) = a.split_at(a.len() - a.len() % LANES);
+    let (b8, b_tail) = b.split_at(a8.len());
+    for (ai, bi) in a8.chunks_exact(LANES).zip(b8.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            let y = ai[l] * bi[l] - comp[l];
+            let t = acc[l] + y;
+            comp[l] = (t - acc[l]) - y;
+            acc[l] = t;
+        }
+    }
+    let s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    let c = (comp[0] + comp[1]) + (comp[2] + comp[3]) + ((comp[4] + comp[5]) + (comp[6] + comp[7]));
+    let mut sum = s - c;
+    let mut tail_comp = 0.0f32;
+    for (av, bv) in a_tail.iter().zip(b_tail.iter()) {
+        let y = av * bv - tail_comp;
+        let t = sum + y;
+        tail_comp = (t - sum) - y;
+        sum = t;
+    }
+    sum
+}
+
+/// Accumulation-mode dispatch for the dot kernels. `F32` is byte-for-
+/// byte the seed [`dot`] — selecting it changes nothing.
+#[inline]
+pub fn dot_acc(a: &[f32], b: &[f32], mode: AccumMode) -> f32 {
+    match mode {
+        AccumMode::F32 => dot(a, b),
+        AccumMode::F64 => dot_f64(a, b),
+        AccumMode::Kahan => dot_kahan(a, b),
+    }
+}
+
+/// Fixed-order reduction of stacked row-major partials with **f64**
+/// accumulators: `dst[e] = Σ_part parts[part*stride + e]`, parts taken
+/// in ascending index order (the exec shard-reduction order), elements
+/// processed in [`LANES`]-wide chunks with a persistent f64 accumulator
+/// per element and a single rounding to f32 at the end. `use_part`
+/// gates each partial (the compaction regime skips empty shards).
+///
+/// Note the widening only matters because the accumulator *persists*
+/// across the whole partial chain — adding one f32 to an f64 and
+/// rounding immediately would reproduce f32 bits exactly.
+pub fn sum_parts_f64(
+    dst: &mut [f32],
+    parts: &[f32],
+    stride: usize,
+    use_part: impl Fn(usize) -> bool,
+) {
+    assert_eq!(dst.len(), stride, "destination is one stride");
+    assert_eq!(parts.len() % stride.max(1), 0, "parts are whole strides");
+    let n_parts = if stride == 0 { 0 } else { parts.len() / stride };
+    let mut e = 0usize;
+    while e < stride {
+        let w = (stride - e).min(LANES);
+        let mut acc = [0.0f64; LANES];
+        for si in 0..n_parts {
+            if !use_part(si) {
+                continue;
+            }
+            let p = &parts[si * stride + e..si * stride + e + w];
+            for l in 0..w {
+                acc[l] += p[l] as f64;
+            }
+        }
+        for l in 0..w {
+            dst[e + l] = acc[l] as f32;
+        }
+        e += w;
+    }
+}
+
+/// [`sum_parts_f64`] with Kahan-compensated f32 accumulators instead of
+/// f64 — same fixed part order, same lane chunking.
+pub fn sum_parts_kahan(
+    dst: &mut [f32],
+    parts: &[f32],
+    stride: usize,
+    use_part: impl Fn(usize) -> bool,
+) {
+    assert_eq!(dst.len(), stride, "destination is one stride");
+    assert_eq!(parts.len() % stride.max(1), 0, "parts are whole strides");
+    let n_parts = if stride == 0 { 0 } else { parts.len() / stride };
+    let mut e = 0usize;
+    while e < stride {
+        let w = (stride - e).min(LANES);
+        let mut acc = [0.0f32; LANES];
+        let mut comp = [0.0f32; LANES];
+        for si in 0..n_parts {
+            if !use_part(si) {
+                continue;
+            }
+            let p = &parts[si * stride + e..si * stride + e + w];
+            for l in 0..w {
+                let y = p[l] - comp[l];
+                let t = acc[l] + y;
+                comp[l] = (t - acc[l]) - y;
+                acc[l] = t;
+            }
+        }
+        for l in 0..w {
+            dst[e + l] = acc[l];
+        }
+        e += w;
+    }
 }
 
 /// Contiguous `y += alpha * x`, 8-lane split + scalar tail. Elementwise
@@ -460,6 +602,54 @@ mod tests {
             let d = (dot(&a, &b) as f64 - refd).abs();
             let tol = 1e-4 * (1.0 + refd.abs()) * (len.max(1) as f64).sqrt();
             assert!(d < tol, "len={len}: {d}");
+        }
+    }
+
+    #[test]
+    fn widened_dots_track_f64_reference_tighter() {
+        let mut rng = Rng::new(12);
+        for len in [1usize, 8, 9, 64, 1000, 4096] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let refd: f64 = a
+                .iter()
+                .zip(b.iter())
+                .map(|(&x, &y)| x as f64 * y as f64)
+                .sum();
+            // the f64-lane kernel is within one f32 rounding of the
+            // serial f64 sum (only the final cast and lane grouping
+            // differ); kahan stays within a few ulps of it too
+            let d64 = (dot_f64(&a, &b) as f64 - refd).abs();
+            assert!(d64 <= 1e-5 * (1.0 + refd.abs()), "len={len}: {d64}");
+            let dk = (dot_kahan(&a, &b) as f64 - refd).abs();
+            assert!(dk <= 1e-4 * (1.0 + refd.abs()), "len={len}: {dk}");
+            // plain-f32 dispatch is bit-identical to the seed kernel
+            assert_eq!(dot_acc(&a, &b, AccumMode::F32).to_bits(), dot(&a, &b).to_bits());
+        }
+    }
+
+    #[test]
+    fn sum_parts_widened_match_f64_reference() {
+        let mut rng = Rng::new(13);
+        let (n_parts, stride) = (7usize, 83usize);
+        let parts: Vec<f32> = (0..n_parts * stride).map(|_| rng.normal()).collect();
+        let skip = |si: usize| si != 2; // exercise the compaction gate
+        let mut refd = vec![0.0f64; stride];
+        for si in 0..n_parts {
+            if !skip(si) {
+                continue;
+            }
+            for e in 0..stride {
+                refd[e] += parts[si * stride + e] as f64;
+            }
+        }
+        let mut d64 = vec![0.0f32; stride];
+        sum_parts_f64(&mut d64, &parts, stride, skip);
+        let mut dk = vec![0.0f32; stride];
+        sum_parts_kahan(&mut dk, &parts, stride, skip);
+        for e in 0..stride {
+            assert_eq!(d64[e], refd[e] as f32, "e={e}");
+            assert!((dk[e] as f64 - refd[e]).abs() <= 1e-5 * (1.0 + refd[e].abs()), "e={e}");
         }
     }
 

@@ -1,0 +1,424 @@
+//! Mixed-precision forward traces (§Mixed precision): the bf16 / q8
+//! codecs behind [`TraceBuf`], plus the `trace` / `accum` precision
+//! knobs threaded from `ExperimentConfig` down to the shard kernels.
+//!
+//! The memory-axis approximation (Chakrabarti & Moseley, *Backprop with
+//! Approximate Activations*) complements Mem-AOP-GD's compute-axis
+//! subsampling: the **forward stays exact**, but the activation trace
+//! the backward pass re-reads is stored low-precision. Two codecs:
+//!
+//! * `bf16` — pure truncation of the f32 bit pattern (`bits >> 16`).
+//!   2 bytes/element, exact on any value with an 8-bit mantissa.
+//! * `q8` — per-row symmetric linear quantization: one f32 step per row
+//!   (`max_abs / 127`) plus an `i8` code per element. 1 byte/element
+//!   (+4 per row), absolute error ≤ `max_abs / 254` per element.
+//!
+//! Determinism contract: both codecs are pure per-row functions of the
+//! data — never of thread count or shard position — so encoding inside
+//! a sharded forward produces the same bits as a serial encode, and the
+//! exec bit-identity grid holds under every precision config
+//! (`rust/tests/exec.rs`).
+
+use crate::tensor::Matrix;
+
+/// Storage precision of one layer's activation trace (the buffer the
+/// backward pass re-reads). Selected per layer via
+/// `--layers "w[:act[:ksched[:trace]]]"` or flat via `--trace`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TraceMode {
+    /// Full-precision trace — the seed behavior, bit-identical to it.
+    F32,
+    /// Truncated bfloat16 codes: 2 bytes/element, exactly 2× smaller.
+    Bf16,
+    /// Per-row symmetric int8: 1 byte/element + one f32 step per row.
+    Q8,
+}
+
+impl TraceMode {
+    pub const ALL: [TraceMode; 3] = [TraceMode::F32, TraceMode::Bf16, TraceMode::Q8];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceMode::F32 => "f32",
+            TraceMode::Bf16 => "bf16",
+            TraceMode::Q8 => "q8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TraceMode> {
+        match s {
+            "f32" => Some(TraceMode::F32),
+            "bf16" => Some(TraceMode::Bf16),
+            "q8" => Some(TraceMode::Q8),
+            _ => None,
+        }
+    }
+
+    /// Parse with the config-surface error contract: unknown strings
+    /// come back as a message listing the valid spellings, so CLI and
+    /// serve submits fail structured instead of panicking downstream.
+    pub fn parse_or_suggest(s: &str) -> Result<TraceMode, String> {
+        TraceMode::parse(s)
+            .ok_or_else(|| format!("unknown trace mode '{s}' (expected one of: f32, bf16, q8)"))
+    }
+
+    /// Bytes the backward pass reads for an `rows × cols` trace in this
+    /// mode (codes + per-row steps; the reported `trace_bytes`).
+    pub fn trace_bytes(self, rows: usize, cols: usize) -> usize {
+        match self {
+            TraceMode::F32 => 4 * rows * cols,
+            TraceMode::Bf16 => 2 * rows * cols,
+            TraceMode::Q8 => rows * cols + 4 * rows,
+        }
+    }
+}
+
+/// Accumulator width of the lane kernels (scores, column sums, and the
+/// fixed-order shard reductions). Same 8-lane loop shape in every mode;
+/// only the accumulator type changes — a drift-measurement knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccumMode {
+    /// f32 lanes — the seed behavior, bit-identical to it.
+    F32,
+    /// f64 lanes, rounded to f32 once at the end.
+    F64,
+    /// Kahan-compensated f32 lanes (one compensation term per lane).
+    Kahan,
+}
+
+impl AccumMode {
+    pub const ALL: [AccumMode; 3] = [AccumMode::F32, AccumMode::F64, AccumMode::Kahan];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AccumMode::F32 => "f32",
+            AccumMode::F64 => "f64",
+            AccumMode::Kahan => "kahan",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AccumMode> {
+        match s {
+            "f32" => Some(AccumMode::F32),
+            "f64" => Some(AccumMode::F64),
+            "kahan" => Some(AccumMode::Kahan),
+            _ => None,
+        }
+    }
+
+    pub fn parse_or_suggest(s: &str) -> Result<AccumMode, String> {
+        AccumMode::parse(s).ok_or_else(|| {
+            format!("unknown accumulation mode '{s}' (expected one of: f32, f64, kahan)")
+        })
+    }
+}
+
+/// One layer's resolved precision pair, as the workspace carries it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerPrecision {
+    pub trace: TraceMode,
+    pub accum: AccumMode,
+}
+
+impl LayerPrecision {
+    /// The seed precision: f32 traces, f32 accumulation.
+    pub fn exact() -> LayerPrecision {
+        LayerPrecision { trace: TraceMode::F32, accum: AccumMode::F32 }
+    }
+}
+
+impl Default for LayerPrecision {
+    fn default() -> Self {
+        LayerPrecision::exact()
+    }
+}
+
+// ---------------------------------------------------------------------
+// bf16 codec
+// ---------------------------------------------------------------------
+
+/// Truncate to bfloat16 (round-toward-zero on the mantissa — matches
+/// the classic "top half of an f32" storage format).
+#[inline(always)]
+pub fn bf16_encode(v: f32) -> u16 {
+    (v.to_bits() >> 16) as u16
+}
+
+#[inline(always)]
+pub fn bf16_decode(c: u16) -> f32 {
+    f32::from_bits((c as u32) << 16)
+}
+
+/// Encode one row (or any contiguous block) of f32 values.
+pub fn bf16_encode_block(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len(), "bf16 encode length mismatch");
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        *d = bf16_encode(s);
+    }
+}
+
+// ---------------------------------------------------------------------
+// q8 codec
+// ---------------------------------------------------------------------
+
+/// Quantize one row symmetrically: returns the dequantization step
+/// (`max_abs / 127`; 0.0 for an all-zero row) and fills `dst` with
+/// codes in `[-127, 127]`. Pure function of the row's data.
+pub fn q8_encode_row(src: &[f32], dst: &mut [i8]) -> f32 {
+    assert_eq!(src.len(), dst.len(), "q8 encode length mismatch");
+    let mut max_abs = 0.0f32;
+    for &v in src {
+        max_abs = max_abs.max(v.abs());
+    }
+    if max_abs == 0.0 {
+        dst.fill(0);
+        return 0.0;
+    }
+    let step = max_abs / 127.0;
+    let inv = 1.0 / step;
+    for (d, &v) in dst.iter_mut().zip(src.iter()) {
+        *d = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    step
+}
+
+#[inline(always)]
+pub fn q8_decode(code: i8, step: f32) -> f32 {
+    code as f32 * step
+}
+
+// ---------------------------------------------------------------------
+// TraceBuf — one layer's owned activation trace
+// ---------------------------------------------------------------------
+
+/// One layer's activation-trace storage, pre-sized at workspace build
+/// (zero allocations in steady state — re-keyed only on shape change).
+///
+/// `F32` *is* the seed buffer: the forward writes it directly and every
+/// reader reads it, bit-identical to the pre-quantization step. The
+/// quantized variants keep an f32 `stage` alongside the codes: the
+/// forward is computed exactly into `stage` (the next layer's forward
+/// and the loss head read exact activations — the paper's forward stays
+/// exact), the codes are encoded from it per shard row-block, and the
+/// **backward** pass reads only the codes through [`TraceRef`] — that
+/// read path is the 2–4× memory-traffic reduction, and `trace_bytes`
+/// reports its footprint. (Dropping the stage would require the next
+/// layer's forward to consume requantized inputs; see ROADMAP.)
+#[derive(Debug, Clone)]
+pub enum TraceBuf {
+    F32(Matrix),
+    Bf16 {
+        rows: usize,
+        cols: usize,
+        codes: Vec<u16>,
+        stage: Matrix,
+    },
+    Q8 {
+        rows: usize,
+        cols: usize,
+        /// Per-row dequantization step (`max_abs / 127`).
+        steps: Vec<f32>,
+        codes: Vec<i8>,
+        stage: Matrix,
+    },
+}
+
+impl TraceBuf {
+    pub fn new(mode: TraceMode, rows: usize, cols: usize) -> TraceBuf {
+        match mode {
+            TraceMode::F32 => TraceBuf::F32(Matrix::zeros(rows, cols)),
+            TraceMode::Bf16 => TraceBuf::Bf16 {
+                rows,
+                cols,
+                codes: vec![0; rows * cols],
+                stage: Matrix::zeros(rows, cols),
+            },
+            TraceMode::Q8 => TraceBuf::Q8 {
+                rows,
+                cols,
+                steps: vec![0.0; rows],
+                codes: vec![0; rows * cols],
+                stage: Matrix::zeros(rows, cols),
+            },
+        }
+    }
+
+    pub fn mode(&self) -> TraceMode {
+        match self {
+            TraceBuf::F32(_) => TraceMode::F32,
+            TraceBuf::Bf16 { .. } => TraceMode::Bf16,
+            TraceBuf::Q8 { .. } => TraceMode::Q8,
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            TraceBuf::F32(m) => m.shape(),
+            TraceBuf::Bf16 { rows, cols, .. } | TraceBuf::Q8 { rows, cols, .. } => (*rows, *cols),
+        }
+    }
+
+    /// Bytes the backward pass reads from this trace (codes + per-row
+    /// steps; the forward-only `stage` is excluded — it is never read
+    /// after the next layer's forward consumes it).
+    pub fn trace_bytes(&self) -> usize {
+        let (r, c) = self.shape();
+        self.mode().trace_bytes(r, c)
+    }
+
+    /// The exact (f32) activations from the last forward — the `F32`
+    /// matrix itself, or the quantized variants' staging buffer. Read
+    /// by the next layer's forward, the loss head, and the auditor.
+    pub fn exact(&self) -> &Matrix {
+        match self {
+            TraceBuf::F32(m) => m,
+            TraceBuf::Bf16 { stage, .. } | TraceBuf::Q8 { stage, .. } => stage,
+        }
+    }
+
+    /// Mutable exact buffer — the forward-only eval path
+    /// (`Graph::evaluate_ws`) writes activations here without touching
+    /// the codes (nothing reads them back in an eval).
+    pub fn exact_mut(&mut self) -> &mut Matrix {
+        match self {
+            TraceBuf::F32(m) => m,
+            TraceBuf::Bf16 { stage, .. } | TraceBuf::Q8 { stage, .. } => stage,
+        }
+    }
+
+    /// Borrowed dequant-on-read view for the backward shard kernels.
+    pub fn as_ref(&self) -> TraceRef<'_> {
+        match self {
+            TraceBuf::F32(m) => TraceRef::F32(m),
+            TraceBuf::Bf16 { cols, codes, .. } => TraceRef::Bf16 { cols: *cols, codes },
+            TraceBuf::Q8 { cols, steps, codes, .. } => {
+                TraceRef::Q8 { cols: *cols, steps, codes }
+            }
+        }
+    }
+}
+
+/// Borrowed view of a trace: what the backward shard kernels consume.
+/// `F32` wraps any plain matrix (including the step's input batch), so
+/// one kernel signature covers both the exact and quantized paths.
+#[derive(Debug, Clone, Copy)]
+pub enum TraceRef<'a> {
+    F32(&'a Matrix),
+    Bf16 { cols: usize, codes: &'a [u16] },
+    Q8 { cols: usize, steps: &'a [f32], codes: &'a [i8] },
+}
+
+impl TraceRef<'_> {
+    pub fn cols(&self) -> usize {
+        match self {
+            TraceRef::F32(m) => m.cols(),
+            TraceRef::Bf16 { cols, .. } | TraceRef::Q8 { cols, .. } => *cols,
+        }
+    }
+
+    /// Dequantized element access — convenience for tests and cold
+    /// paths; the hot kernels match on the variant and stream rows.
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        match self {
+            TraceRef::F32(m) => m[(r, c)],
+            TraceRef::Bf16 { cols, codes } => bf16_decode(codes[r * cols + c]),
+            TraceRef::Q8 { cols, steps, codes } => q8_decode(codes[r * cols + c], steps[r]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    #[test]
+    fn mode_names_round_trip() {
+        for m in TraceMode::ALL {
+            assert_eq!(TraceMode::parse(m.name()), Some(m));
+        }
+        for a in AccumMode::ALL {
+            assert_eq!(AccumMode::parse(a.name()), Some(a));
+        }
+        assert!(TraceMode::parse_or_suggest("fp16").unwrap_err().contains("bf16"));
+        assert!(AccumMode::parse_or_suggest("f128").unwrap_err().contains("kahan"));
+    }
+
+    #[test]
+    fn bf16_truncation_is_exact_on_short_mantissas() {
+        // 8-bit-mantissa values survive bf16 exactly
+        for v in [0.0f32, 1.0, -2.5, 0.15625, 384.0, -0.0078125] {
+            assert_eq!(bf16_decode(bf16_encode(v)), v);
+        }
+        // relative truncation error strictly under one bf16 ulp (2^-7)
+        // for normal values: the dropped mantissa bits are < 2^(e-7) and
+        // |v| >= 2^e
+        let mut rng = Rng::new(11);
+        for _ in 0..1000 {
+            let v = rng.normal();
+            let d = bf16_decode(bf16_encode(v));
+            assert!((v - d).abs() <= v.abs() / 128.0, "v={v} d={d}");
+        }
+    }
+
+    #[test]
+    fn q8_round_trip_error_bounded_by_half_step() {
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let row: Vec<f32> = (0..37).map(|_| rng.normal() * 3.0).collect();
+            let mut codes = vec![0i8; row.len()];
+            let step = q8_encode_row(&row, &mut codes);
+            let max_abs = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            assert!((step - max_abs / 127.0).abs() <= f32::EPSILON * max_abs);
+            for (&v, &c) in row.iter().zip(codes.iter()) {
+                let err = (v - q8_decode(c, step)).abs();
+                // half a step = max_abs / 254, padded one ulp for the
+                // division rounding in the encoder
+                assert!(err <= max_abs / 254.0 * (1.0 + 1e-5), "v={v} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn q8_zero_row_encodes_to_zero_step() {
+        let row = [0.0f32; 9];
+        let mut codes = [1i8; 9];
+        let step = q8_encode_row(&row, &mut codes);
+        assert_eq!(step, 0.0);
+        assert!(codes.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn trace_buf_bytes_match_mode_arithmetic() {
+        let (r, c) = (64, 4096);
+        let f = TraceBuf::new(TraceMode::F32, r, c);
+        let b = TraceBuf::new(TraceMode::Bf16, r, c);
+        let q = TraceBuf::new(TraceMode::Q8, r, c);
+        assert_eq!(f.trace_bytes(), 4 * r * c);
+        assert_eq!(b.trace_bytes(), 2 * r * c);
+        assert_eq!(q.trace_bytes(), r * c + 4 * r);
+        // the acceptance arithmetic: bf16 is exactly 2x, q8 just under 4x
+        assert_eq!(f.trace_bytes() / b.trace_bytes(), 2);
+        assert!(f.trace_bytes() as f64 / q.trace_bytes() as f64 > 3.9);
+    }
+
+    #[test]
+    fn trace_ref_at_matches_codec() {
+        let mut rng = Rng::new(3);
+        let m = Matrix::from_fn(5, 8, |_, _| rng.normal());
+        let mut buf = TraceBuf::new(TraceMode::Q8, 5, 8);
+        if let TraceBuf::Q8 { steps, codes, stage, .. } = &mut buf {
+            stage.data_mut().copy_from_slice(m.data());
+            for r in 0..5 {
+                steps[r] = q8_encode_row(m.row(r), &mut codes[r * 8..(r + 1) * 8]);
+            }
+        }
+        let tr = buf.as_ref();
+        for r in 0..5 {
+            for c in 0..8 {
+                assert!((tr.at(r, c) - m[(r, c)]).abs() <= m.row(r).iter().fold(0.0f32, |a, v| a.max(v.abs())) / 254.0 * 1.01);
+            }
+        }
+        assert_eq!(buf.exact().data(), m.data());
+    }
+}

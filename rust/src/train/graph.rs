@@ -8,12 +8,13 @@
 //! coordinator builds graphs straight from `ExperimentConfig`.
 
 use crate::aop::{MemoryState, Policy};
-use crate::exec::{reduce, shard, Executor};
+use crate::exec::{shard, Executor};
 use crate::model::activations::Activation;
 use crate::model::loss::{self, LossKind};
 use crate::tensor::{rng::Rng, Matrix};
 
 use crate::train::layer::{AopLayerConfig, Dense};
+use crate::train::workspace::GraphWorkspace;
 
 /// A feed-forward chain of dense layers trained with Mem-AOP-GD.
 #[derive(Debug, Clone)]
@@ -90,48 +91,86 @@ impl Graph {
         self.evaluate_exec(x, y, &Executor::serial())
     }
 
-    /// Validation, data-parallel: row-sharded forward through every
-    /// layer, then per-shard partial losses and (integer, hence exactly
-    /// order-free) argmax-agreement counts reduced in fixed shard order.
+    /// Validation, data-parallel, with a throwaway workspace — the cold
+    /// path. Long-lived surfaces call [`Graph::evaluate_ws`] on a
+    /// persistent workspace instead (same code, zero steady-state
+    /// allocations); the two are bit-identical by construction.
     pub fn evaluate_exec(&self, x: &Matrix, y: &Matrix, exec: &Executor) -> (f32, f32) {
+        let mut ws = GraphWorkspace::new(self, x.rows());
+        self.evaluate_ws(x, y, exec, &mut ws)
+    }
+
+    /// Validation on a caller-owned workspace (§Perf pass): row-sharded
+    /// forward through every layer into the workspace's activation
+    /// buffers, then per-shard partial losses and (integer, hence
+    /// exactly order-free) argmax-agreement counts reduced in fixed
+    /// shard order. Zero allocations in steady state for any
+    /// `m ≤ ws.batch()` — smaller eval batches run on a prefix of the
+    /// buffers and shard slots; a larger batch (or a different graph
+    /// shape) re-keys the workspace once.
+    ///
+    /// Evaluation is forward-only and always exact: activations land in
+    /// each trace buffer's exact (staging) matrix and no codes are
+    /// encoded. That **clobbers the training forward trace**, so
+    /// long-lived trainers keep a dedicated eval workspace
+    /// (`NativeTrainer`) rather than sharing the step workspace.
+    pub fn evaluate_ws(
+        &self,
+        x: &Matrix,
+        y: &Matrix,
+        exec: &Executor,
+        ws: &mut GraphWorkspace,
+    ) -> (f32, f32) {
         let m = x.rows();
+        assert!(m > 0, "evaluate needs a non-empty batch");
+        assert_eq!(x.cols(), self.layers[0].fan_in(), "input dim vs first layer");
+        ws.ensure(self, m.max(ws.batch()));
         let plan = exec.plan(m);
-        // rolling buffer: evaluation needs only the previous layer's
-        // output (unlike the training trace, which keeps every layer's
-        // activation for the backward sweep)
-        let mut prev: Option<Matrix> = None;
-        for layer in &self.layers {
-            let mut h = Matrix::zeros(m, layer.fan_out());
-            {
-                let pin: &Matrix = prev.as_ref().unwrap_or(x);
-                // warm the transpose cache outside the dispatch (narrow
-                // shapes only — wide layers never read it), so the
-                // narrow-B forward never transposes per shard
-                let w_t = layer.warmed_w_t();
-                let hb = shard::RowBlocks::of(&mut h, &plan);
-                exec.run_each(&plan, |i, rows| {
-                    // SAFETY: run_each claims each shard index exactly once
-                    let blk = unsafe { hb.block(i) };
-                    match w_t {
-                        Some(t) => shard::forward_rows_bt(pin, &layer.w, t, &layer.b, rows, blk),
-                        None => shard::forward_rows(pin, &layer.w, &layer.b, rows, blk),
-                    }
-                    layer.activation.apply_block(blk);
-                });
-            }
-            prev = Some(h);
+        let n_shards = plan.len();
+        let n = self.layers.len();
+        for (li, layer) in self.layers.iter().enumerate() {
+            // warm the transpose cache outside the dispatch (narrow
+            // shapes only — wide layers never read it), so the
+            // narrow-B forward never transposes per shard
+            let w_t = layer.warmed_w_t();
+            let (before, rest) = ws.acts.split_at_mut(li);
+            // rows m.. of the buffers are never written or read — the
+            // forward and the loss head both stop at the eval batch
+            let prev: &Matrix = if li == 0 { x } else { before[li - 1].exact() };
+            let h = rest[0].exact_mut();
+            let cols = h.cols();
+            let hb = shard::RowBlocks::of_slice(&mut h.data_mut()[..m * cols], cols, &plan);
+            exec.run_each(&plan, |i, rows| {
+                // SAFETY: run_each claims each shard index exactly once
+                let blk = unsafe { hb.block(i) };
+                match w_t {
+                    Some(t) => shard::forward_rows_bt(prev, &layer.w, t, &layer.b, rows, blk),
+                    None => shard::forward_rows(prev, &layer.w, &layer.b, rows, blk),
+                }
+                layer.activation.apply_block(blk);
+            });
         }
-        let out = &prev.expect("graph has at least one layer");
+        let out = ws.acts[n - 1].exact();
         let p = out.cols();
-        let parts: Vec<(f32, usize)> = exec.map(&plan, |_, rows| {
-            let ob = shard::rows_of(out, rows.clone());
-            (
-                self.loss.partial_loss(ob, y, rows.clone()),
-                loss::correct_rows(ob, y, rows),
-            )
-        });
-        let loss_total = reduce::sum_f32(parts.iter().map(|(l, _)| *l));
-        let correct = reduce::sum_usize(parts.iter().map(|(_, c)| *c));
+        assert_eq!(y.shape(), (m, p), "target shape");
+        {
+            let loss_parts = &ws.loss_parts;
+            exec.run_each(&plan, |i, rows| {
+                let ob = shard::rows_of(out, rows.clone());
+                let lp = self.loss.partial_loss(ob, y, rows.clone());
+                *loss_parts[i].lock().unwrap() = (lp, loss::correct_rows(ob, y, rows));
+            });
+        }
+        // fixed shard-order reduction — the same order the historical
+        // `exec.map` + `reduce::sum_f32` pipeline produced, so results
+        // stay bitwise identical to the pre-workspace eval
+        let mut loss_total = 0.0f32;
+        let mut correct = 0usize;
+        for slot in ws.loss_parts.iter().take(n_shards) {
+            let (l, c) = *slot.lock().unwrap();
+            loss_total += l;
+            correct += c;
+        }
         (
             self.loss.finish_loss(loss_total, m, p),
             correct as f32 / m as f32,
@@ -239,6 +278,50 @@ mod tests {
         let (l4, a4) = g.evaluate_exec(&x, &y, &ex);
         assert_eq!(l1.to_bits(), l4.to_bits());
         assert_eq!(a1, a4);
+    }
+
+    #[test]
+    fn evaluate_ws_reuses_buffers_and_matches_throwaway_bitwise() {
+        use crate::tensor::quant::{AccumMode, LayerPrecision, TraceMode};
+        let mut rng = Rng::new(4);
+        let g = Graph::relu_mlp(&mut rng, &[6, 11, 3], LossKind::SoftmaxCrossEntropy);
+        let mk_batch = |rng: &mut Rng, m: usize| {
+            let x = Matrix::from_fn(m, 6, |_, _| rng.normal());
+            let y = Matrix::from_fn(m, 3, |r, c| ((r % 3) == c) as u32 as f32);
+            (x, y)
+        };
+        let (x33, y33) = mk_batch(&mut rng, 33);
+        let (x17, y17) = mk_batch(&mut rng, 17);
+        let exec = Executor::serial();
+        let mut ws = GraphWorkspace::new(&g, 33);
+        // full-batch eval on the workspace == throwaway path bitwise
+        let (le, ae) = g.evaluate_exec(&x33, &y33, &exec);
+        let (lw, aw) = g.evaluate_ws(&x33, &y33, &exec, &mut ws);
+        assert_eq!(le.to_bits(), lw.to_bits());
+        assert_eq!(ae, aw);
+        // a smaller batch runs on a prefix without re-keying
+        assert_eq!(ws.batch(), 33);
+        let (ls, asr) = g.evaluate_ws(&x17, &y17, &exec, &mut ws);
+        assert_eq!(ws.batch(), 33, "prefix eval must not re-key");
+        let (lse, ase) = g.evaluate_exec(&x17, &y17, &exec);
+        assert_eq!(ls.to_bits(), lse.to_bits());
+        assert_eq!(asr, ase);
+        // quantized trace buffers evaluate through their exact staging
+        // matrices — eval is forward-exact, so results don't move
+        ws.set_precision(
+            &g,
+            &[LayerPrecision { trace: TraceMode::Q8, accum: AccumMode::F32 }; 2],
+        );
+        let (lq, aq) = g.evaluate_ws(&x33, &y33, &exec, &mut ws);
+        assert_eq!(lq.to_bits(), le.to_bits(), "eval ignores trace quantization");
+        assert_eq!(aq, ae);
+        // a larger batch re-keys once and still matches
+        let (x48, y48) = mk_batch(&mut rng, 48);
+        let (ll, al) = g.evaluate_ws(&x48, &y48, &exec, &mut ws);
+        assert_eq!(ws.batch(), 48);
+        let (lle, ale) = g.evaluate_exec(&x48, &y48, &exec);
+        assert_eq!(ll.to_bits(), lle.to_bits());
+        assert_eq!(al, ale);
     }
 
     #[test]

@@ -30,6 +30,21 @@
 //! bit-identical to the resident-workspace path — there is exactly one
 //! implementation.
 //!
+//! **Mixed precision (§Mixed precision)**: the workspace's per-layer
+//! [`LayerPrecision`](crate::tensor::quant::LayerPrecision) steers two
+//! orthogonal knobs through the same step. *Quantized traces* — a
+//! layer's forward still computes exact f32 activations (into the trace
+//! buffer's staging matrix), but the codes the **backward** pass
+//! re-reads (`X̂` folding and the `act'` chain factor) are stored
+//! bf16/q8, encoded per shard row-block during the forward; the f32
+//! trace mode is bitwise the seed path. *Widened accumulation* — the
+//! score dots, bias column sums, and the fixed-order shard reductions
+//! run with f64 or Kahan-compensated accumulators in the same 8-lane
+//! loop shape; `AccumMode::F32` dispatches to the seed kernels
+//! unchanged. Both knobs are pure functions of data and config — never
+//! of thread count or shard position — so the determinism contract
+//! below holds in every precision cell.
+//!
 //! Determinism contract (inherited from `exec` and asserted by
 //! `rust/tests/exec.rs`): every float quantity is computed on the fixed
 //! shard grid and reduced in fixed shard order, and selections are made
@@ -44,6 +59,7 @@ use crate::exec::{shard, Executor};
 use crate::model::activations::Activation;
 use crate::model::loss::correct_rows;
 use crate::obs::{AuditLayerRecord, Phase};
+use crate::tensor::quant::{self, AccumMode, TraceBuf, TraceMode, TraceRef};
 use crate::tensor::{ops, rng::Rng, Matrix};
 
 use crate::train::graph::{Graph, GraphState};
@@ -109,18 +125,58 @@ pub fn fwd_score(
         // stays cold and costs nothing here or in `apply`'s refresh
         let w_t = layer.warmed_w_t();
         let (before, rest) = ws.acts.split_at_mut(li);
-        let h = &mut rest[0];
-        let prev: &Matrix = if li == 0 { x } else { &before[li - 1] };
-        let hb = shard::RowBlocks::of(h, &plan);
-        exec.run_each(&plan, |i, rows| {
-            // SAFETY: run_each claims each shard index exactly once
-            let blk = unsafe { hb.block(i) };
+        // the next layer's forward always reads exact activations (the
+        // paper's forward stays exact); quantization only changes what
+        // the *backward* pass re-reads
+        let prev: &Matrix = if li == 0 { x } else { before[li - 1].exact() };
+        let fwd = |rows: std::ops::Range<usize>, blk: &mut [f32]| {
             match w_t {
                 Some(t) => shard::forward_rows_bt(prev, &layer.w, t, &layer.b, rows, blk),
                 None => shard::forward_rows(prev, &layer.w, &layer.b, rows, blk),
             }
             layer.activation.apply_block(blk);
-        });
+        };
+        match &mut rest[0] {
+            TraceBuf::F32(h) => {
+                let hb = shard::RowBlocks::of(h, &plan);
+                exec.run_each(&plan, |i, rows| {
+                    // SAFETY: run_each claims each shard index exactly once
+                    let blk = unsafe { hb.block(i) };
+                    fwd(rows, blk);
+                });
+            }
+            // quantize-on-write: each shard encodes its own just-computed
+            // exact rows — a pure per-row encode, so sharded and serial
+            // encodes produce identical codes (determinism contract)
+            TraceBuf::Bf16 { cols, codes, stage, .. } => {
+                let cols = *cols;
+                let hb = shard::RowBlocks::of(stage, &plan);
+                let cb = shard::RowBlocks::of_slice(codes.as_mut_slice(), cols, &plan);
+                exec.run_each(&plan, |i, rows| {
+                    // SAFETY (×2): run_each claims each shard index
+                    // exactly once, so each splitter hands out `i` once
+                    let blk = unsafe { hb.block(i) };
+                    fwd(rows, blk);
+                    let cblk = unsafe { cb.block(i) };
+                    shard::encode_trace_rows_bf16(blk, cblk);
+                });
+            }
+            TraceBuf::Q8 { cols, steps, codes, stage, .. } => {
+                let cols = *cols;
+                let hb = shard::RowBlocks::of(stage, &plan);
+                let sb = shard::RowBlocks::of_slice(steps.as_mut_slice(), 1, &plan);
+                let cb = shard::RowBlocks::of_slice(codes.as_mut_slice(), cols, &plan);
+                exec.run_each(&plan, |i, rows| {
+                    // SAFETY (×3): run_each claims each shard index
+                    // exactly once, so each splitter hands out `i` once
+                    let blk = unsafe { hb.block(i) };
+                    fwd(rows, blk);
+                    let sblk = unsafe { sb.block(i) };
+                    let cblk = unsafe { cb.block(i) };
+                    shard::encode_trace_rows_q8(blk, cols, sblk, cblk);
+                });
+            }
+        }
     }
 
     // Head loss + output gradient (+ integer accuracy counts),
@@ -128,7 +184,9 @@ pub fn fwd_score(
     // activation the loss sees `h = act(z)`, so the head's G picks up
     // the chain factor `act'(h)` — identity heads (the flat engine, the
     // MLP default) skip the multiply entirely.
-    let out = &ws.acts[n - 1];
+    // head trace is pinned f32 at workspace build, so `exact()` is the
+    // matrix the forward just wrote (no staging indirection)
+    let out = ws.acts[n - 1].exact();
     let p_out = out.cols();
     assert_eq!(y.shape(), (m, p_out), "target shape");
     let act_out = graph.layers[n - 1].activation;
@@ -173,8 +231,16 @@ pub fn fwd_score(
         // row) — skip the per-row norm products for those layers
         let need_scores = state.layers[i].cfg.policy != Policy::Exact;
         let (nf, pf) = (layer.fan_in(), layer.fan_out());
+        let accum = ws.prec[i].accum;
         {
-            let xin: &Matrix = if i == 0 { x } else { &ws.acts[i - 1] };
+            // the X̂ folding reads the stored (possibly quantized) trace
+            // — this dequant-on-read is the backward memory-traffic win;
+            // the raw input batch is always an exact f32 view
+            let xin: TraceRef<'_> = if i == 0 {
+                TraceRef::F32(x)
+            } else {
+                ws.acts[i - 1].as_ref()
+            };
             let g = &ws.grads[i];
             let xh_blocks = shard::RowBlocks::of(&mut ws.xhat[i], &plan);
             let gh_blocks = shard::RowBlocks::of(&mut ws.ghat[i], &plan);
@@ -186,27 +252,54 @@ pub fn fwd_score(
                 let xh = unsafe { xh_blocks.block(si) };
                 let gh = unsafe { gh_blocks.block(si) };
                 if mem.enabled {
-                    shard::fold_rows(xin, &mem.mem_x, se, rows.clone(), xh);
+                    shard::fold_trace_rows(xin, &mem.mem_x, se, rows.clone(), xh);
                     shard::fold_rows(g, &mem.mem_g, se, rows.clone(), gh);
                 } else {
-                    shard::scale_rows(xin, se, rows.clone(), xh);
+                    shard::scale_trace_rows(xin, se, rows.clone(), xh);
                     shard::scale_rows(g, se, rows.clone(), gh);
                 }
                 if need_scores {
                     let sc = unsafe { sc_blocks.block(si) };
-                    shard::score_rows(xh, gh, nf, pf, sc);
+                    shard::score_rows_acc(xh, gh, nf, pf, sc, accum);
                 }
                 let db_blk = unsafe { db_blocks.block(si) };
-                shard::col_sums_rows_into(shard::rows_of(g, rows), pf, &mut db_blk[..pf]);
+                shard::col_sums_rows_into_acc(shard::rows_of(g, rows), pf, &mut db_blk[..pf], accum);
             });
         }
-        // reduce the bias-gradient partials in fixed shard order
+        // reduce the bias-gradient partials in fixed shard order —
+        // widened modes carry the cross-shard chain in f64/Kahan
+        // (element-outer, shard-inner, same fixed order)
         {
             let db = &mut ws.db[i];
-            db.fill(0.0);
-            for si in 0..n_shards {
-                for (d, &v) in db.iter_mut().zip(ws.db_parts.row(si)[..pf].iter()) {
-                    *d += v;
+            match accum {
+                AccumMode::F32 => {
+                    db.fill(0.0);
+                    for si in 0..n_shards {
+                        for (d, &v) in db.iter_mut().zip(ws.db_parts.row(si)[..pf].iter()) {
+                            *d += v;
+                        }
+                    }
+                }
+                AccumMode::F64 => {
+                    for (e, d) in db.iter_mut().enumerate() {
+                        let mut acc = 0.0f64;
+                        for si in 0..n_shards {
+                            acc += ws.db_parts[(si, e)] as f64;
+                        }
+                        *d = acc as f32;
+                    }
+                }
+                AccumMode::Kahan => {
+                    for (e, d) in db.iter_mut().enumerate() {
+                        let (mut acc, mut comp) = (0.0f32, 0.0f32);
+                        for si in 0..n_shards {
+                            let y = ws.db_parts[(si, e)] - comp;
+                            let t = acc + y;
+                            comp = (t - acc) - y;
+                            acc = t;
+                        }
+                        *d = acc;
+                    }
                 }
             }
         }
@@ -215,10 +308,12 @@ pub fn fwd_score(
             // eq. (2a): G_{i-1} = G_i W_i^T ⊙ act'(h_{i-1}) — row-local,
             // so sharding is bitwise-free. The cached w_t IS the matmul
             // operand here, and `w` itself is its transpose — so the
-            // narrow-B path needs no extra transpose either.
+            // narrow-B path needs no extra transpose either. The act'
+            // chain factor reads the *stored* trace (dequant-on-read for
+            // quantized layers), like every other backward trace read.
             let w_t = layer.w_t();
             let act_prev = graph.layers[i - 1].activation;
-            let h_prev = &ws.acts[i - 1];
+            let h_prev = ws.acts[i - 1].as_ref();
             let (gl, gr) = ws.grads.split_at_mut(i);
             let g_cur = &gr[0];
             let gn_blocks = shard::RowBlocks::of(&mut gl[i - 1], &plan);
@@ -226,9 +321,29 @@ pub fn fwd_score(
                 // SAFETY: run_each claims each shard index exactly once
                 let blk = unsafe { gn_blocks.block(si) };
                 ops::matmul_rows_bt(g_cur, w_t, &layer.w, rows.clone(), blk);
-                let hb = shard::rows_of(h_prev, rows);
-                for (v, &h) in blk.iter_mut().zip(hb.iter()) {
-                    *v *= act_prev.grad_from_output(h);
+                match h_prev {
+                    TraceRef::F32(m) => {
+                        let hb = shard::rows_of(m, rows);
+                        for (v, &h) in blk.iter_mut().zip(hb.iter()) {
+                            *v *= act_prev.grad_from_output(h);
+                        }
+                    }
+                    TraceRef::Bf16 { cols, codes } => {
+                        let cb = &codes[rows.start * cols..rows.end * cols];
+                        for (v, &c) in blk.iter_mut().zip(cb.iter()) {
+                            *v *= act_prev.grad_from_output(quant::bf16_decode(c));
+                        }
+                    }
+                    TraceRef::Q8 { cols, steps, codes } => {
+                        for (local, r) in rows.enumerate() {
+                            let step = steps[r];
+                            let crow = &codes[r * cols..(r + 1) * cols];
+                            let vrow = &mut blk[local * cols..(local + 1) * cols];
+                            for (v, &c) in vrow.iter_mut().zip(crow.iter()) {
+                                *v *= act_prev.grad_from_output(quant::q8_decode(c, step));
+                            }
+                        }
+                    }
                 }
             });
         }
@@ -425,22 +540,36 @@ fn reduce_wstar_into_ws(
     ws.obs.finish(Phase::Dispatch, t_disp);
     let t_red = ws.obs.start();
     {
+        let accum = ws.prec[li].accum;
         let wstar = &mut ws.wstar[li];
-        wstar.data_mut().fill(0.0);
         let parts = ws.wstar_parts[li].data();
-        for si in 0..n_shards {
-            if compact {
-                let rows = plan.range(si);
-                let lo = sel.indices.partition_point(|&r| r < rows.start);
-                let hi = sel.indices.partition_point(|&r| r < rows.end);
-                if lo == hi {
-                    continue;
+        // whether a shard contributes depends only on the selection,
+        // never on scheduling — shared by all three accumulation modes
+        let use_part = |si: usize| {
+            if !compact {
+                return true;
+            }
+            let rows = plan.range(si);
+            let lo = sel.indices.partition_point(|&r| r < rows.start);
+            let hi = sel.indices.partition_point(|&r| r < rows.end);
+            lo != hi
+        };
+        match accum {
+            AccumMode::F32 => {
+                wstar.data_mut().fill(0.0);
+                for si in 0..n_shards {
+                    if !use_part(si) {
+                        continue;
+                    }
+                    let part = &parts[si * la * lb..(si + 1) * la * lb];
+                    for (o, &v) in wstar.data_mut().iter_mut().zip(part.iter()) {
+                        *o += v;
+                    }
                 }
             }
-            let part = &parts[si * la * lb..(si + 1) * la * lb];
-            for (o, &v) in wstar.data_mut().iter_mut().zip(part.iter()) {
-                *o += v;
-            }
+            // widened carry across the shard chain, same ascending order
+            AccumMode::F64 => ops::sum_parts_f64(wstar.data_mut(), parts, la * lb, use_part),
+            AccumMode::Kahan => ops::sum_parts_kahan(wstar.data_mut(), parts, la * lb, use_part),
         }
     }
     ws.obs.finish(Phase::Reduce, t_red);
@@ -465,6 +594,11 @@ fn reduce_wstar_into_ws(
 ///
 /// Per layer, `out` receives cosine similarity and relative Frobenius
 /// error of approx-vs-exact plus that memory bias (f64 accumulation).
+/// Under quantized traces (§Mixed precision) the resident `X̂` is first
+/// corrected by the stored quantization residual, so the exact
+/// reference is the **f32-trace** gradient and `rel_err` surfaces the
+/// quantization drift itself (the `repro audit` fidelity read-out for
+/// bf16/q8 runs); each record carries the input-trace mode it measured.
 /// Observation-only contract: no RNG stream is consumed, no graph or
 /// state value is written, only dead workspace buffers are clobbered —
 /// audit-on curves are bit-identical to audit-off (asserted in
@@ -499,7 +633,36 @@ pub fn audit_into(
     for li in 0..n {
         // set the applied update aside — wstar is dead until next apply
         ws.audit_approx[li].data_mut().copy_from_slice(ws.wstar[li].data());
-        // exact memory-corrected gradient from the resident foldings
+        // the trace this layer's X̂ was folded from: the raw f32 input
+        // batch for the first layer, the previous layer's stored trace
+        // otherwise — reported on the record so quantized drift is
+        // attributable
+        let in_trace = if li == 0 { TraceMode::F32 } else { ws.acts[li - 1].mode() };
+        // §Mixed precision: correct the resident X̂ to the f32-trace
+        // reference in place — X̂ += √η·(stage − deq(codes)) — so the
+        // exact gradient below is the one an f32-trace run would apply
+        // and rel_err includes the quantization drift. The pre-step
+        // memory is gone (retention overwrote it in `apply`), which is
+        // why the residual is added rather than re-folding from scratch.
+        // A strict no-op for f32 traces (all-f32 audits stay bitwise the
+        // seed auditor); X̂ is dead after this audit (the next fwd_score
+        // rewrites it), so the clobber is observation-safe.
+        if in_trace != TraceMode::F32 {
+            let tb = &ws.acts[li - 1];
+            let exact = tb.exact();
+            let tr = tb.as_ref();
+            let xh_blocks = shard::RowBlocks::of(&mut ws.xhat[li], &plan);
+            exec.run_each(&plan, |si, rows| {
+                // SAFETY: run_each claims each shard index exactly once
+                let xh = unsafe { xh_blocks.block(si) };
+                shard::trace_residual_rows(exact, tr, se, rows, xh);
+            });
+        }
+        // exact memory-corrected gradient from the (corrected) foldings.
+        // Ĝ stays as the step computed it — the chained gradient through
+        // the quantized act' factors — so the reference is exact along
+        // the X̂ axis; disentangling the G-side chain would need a full
+        // exact re-backprop (see ROADMAP).
         reduce_wstar_into_ws(ws, li, &sel, compact, exec);
         ws.audit_exact[li].data_mut().copy_from_slice(ws.wstar[li].data());
         let (cosine, rel_err) =
@@ -507,7 +670,9 @@ pub fn audit_into(
         // memory-off layers fold nothing: folded == raw, bias is 0 by
         // construction — skip the second reduction
         let mem_bias = if state.layers[li].mem.enabled {
-            let xin: &Matrix = if li == 0 { x } else { &ws.acts[li - 1] };
+            // raw re-fold reads the exact staging activations, matching
+            // the f32-trace reference the corrected X̂ now carries
+            let xin: &Matrix = if li == 0 { x } else { ws.acts[li - 1].exact() };
             let g = &ws.grads[li];
             let xh_blocks = shard::RowBlocks::of(&mut ws.xhat[li], &plan);
             let gh_blocks = shard::RowBlocks::of(&mut ws.ghat[li], &plan);
@@ -524,7 +689,7 @@ pub fn audit_into(
             0.0
         };
         ws.obs.record_audit(li, cosine, rel_err, mem_bias);
-        out.push(AuditLayerRecord { layer: li, cosine, rel_err, mem_bias });
+        out.push(AuditLayerRecord { layer: li, cosine, rel_err, mem_bias, trace: in_trace });
     }
     ws.audit_sel = sel;
     ws.obs.finish(Phase::Audit, t_audit);
@@ -869,6 +1034,75 @@ mod tests {
         // the audited run's weights are bit-identical to the unaudited one
         for (la, lb) in ga.layers.iter().zip(gb.layers.iter()) {
             assert_eq!(la.w.data(), lb.w.data(), "audit must never change the math");
+            assert_eq!(la.b, lb.b);
+        }
+    }
+
+    #[test]
+    fn quantized_traces_train_and_audit_reports_input_trace() {
+        use crate::tensor::quant::{AccumMode, LayerPrecision, TraceMode};
+        for trace in [TraceMode::Bf16, TraceMode::Q8] {
+            let mut rng = Rng::new(33);
+            let mut g = Graph::relu_mlp(&mut rng, &[6, 12, 3], LossKind::SoftmaxCrossEntropy);
+            let (x, y) = toy_data(&mut rng, 16, 6, 3);
+            let mut state = GraphState::uniform(&g, 16, Policy::TopK, 6, true);
+            let exec = Executor::serial();
+            let mut ws = GraphWorkspace::new(&g, 16);
+            ws.set_precision(&g, &[LayerPrecision { trace, accum: AccumMode::F64 }; 2]);
+            let before = g.evaluate(&x, &y).0;
+            for _ in 0..60 {
+                train_step_ws(&mut g, &mut state, &x, &y, 0.1, &mut rng, &exec, true, &mut ws);
+            }
+            let mut recs = Vec::new();
+            audit_into(&g, &state, &x, 0.1, &exec, true, &mut ws, &mut recs);
+            let after = g.evaluate(&x, &y).0;
+            assert!(after < before * 0.8, "{trace:?}: before={before} after={after}");
+            assert!(g.layers.iter().all(|l| l.w.is_finite()), "{trace:?}");
+            // layer 0's X̂ comes from the raw f32 input batch; layer 1's
+            // from the quantized hidden trace
+            assert_eq!(recs[0].trace, TraceMode::F32);
+            assert_eq!(recs[1].trace, trace);
+            for r in &recs {
+                assert!(
+                    r.cosine > 0.9 && r.cosine.is_finite(),
+                    "{trace:?} layer {} cosine {}",
+                    r.layer,
+                    r.cosine
+                );
+                assert!(r.rel_err.is_finite() && r.mem_bias.is_finite(), "{trace:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_precision_knobs_are_bitwise_the_seed_step() {
+        // explicit all-f32 precision (the default) through set_precision
+        // must not perturb a single bit vs an untouched workspace
+        use crate::tensor::quant::LayerPrecision;
+        let mut mk = || {
+            let mut rng = Rng::new(41);
+            let g = Graph::relu_mlp(&mut rng, &[6, 9, 3], LossKind::Mse);
+            let st = GraphState::uniform(&g, 16, Policy::WeightedK, 5, true);
+            (g, st)
+        };
+        let mut rng = Rng::new(42);
+        let (x, y) = toy_data(&mut rng, 16, 6, 3);
+        let exec = Executor::serial();
+        let (mut ga, mut sta) = mk();
+        let (mut gb, mut stb) = mk();
+        let mut ra = Rng::new(7);
+        let mut rb = Rng::new(7);
+        let mut wa = GraphWorkspace::new(&ga, 16);
+        wa.set_precision(&ga, &[LayerPrecision::exact(); 2]);
+        let mut wb = GraphWorkspace::new(&gb, 16);
+        for _ in 0..8 {
+            let a = train_step_ws(&mut ga, &mut sta, &x, &y, 0.05, &mut ra, &exec, true, &mut wa);
+            let b = train_step_ws(&mut gb, &mut stb, &x, &y, 0.05, &mut rb, &exec, true, &mut wb);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.wstar_fro.to_bits(), b.wstar_fro.to_bits());
+        }
+        for (la, lb) in ga.layers.iter().zip(gb.layers.iter()) {
+            assert_eq!(la.w.data(), lb.w.data());
             assert_eq!(la.b, lb.b);
         }
     }

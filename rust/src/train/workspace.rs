@@ -36,6 +36,7 @@ use std::sync::Mutex;
 use crate::aop::policy::{SelectScratch, Selection};
 use crate::exec::plan::ShardPlan;
 use crate::obs::{ObsConfig, StepTelemetry};
+use crate::tensor::quant::{LayerPrecision, TraceBuf, TraceMode};
 use crate::tensor::{ops, Matrix};
 use crate::train::graph::Graph;
 
@@ -49,8 +50,18 @@ pub struct GraphWorkspace {
     /// Shards of the canonical plan for `batch` rows.
     pub(crate) n_shards: usize,
 
-    /// Forward trace: `acts[i]` is layer i's activated output (batch × fan_out_i).
-    pub(crate) acts: Vec<Matrix>,
+    /// Forward trace: `acts[i]` is layer i's activated output
+    /// (batch × fan_out_i), stored at the layer's resolved trace
+    /// precision (§Mixed precision) — `F32` buffers are written directly
+    /// by the forward; quantized buffers are encoded per shard from
+    /// their exact staging matrix and dequantized on read by the
+    /// backward kernels.
+    pub(crate) acts: Vec<TraceBuf>,
+    /// Per-layer resolved precision (trace mode + accumulation mode).
+    /// Not part of the (widths, batch) key — changed via
+    /// [`Self::set_precision`], preserved across [`Self::ensure`]
+    /// re-keys like the obs config.
+    pub(crate) prec: Vec<LayerPrecision>,
     /// Backward chain: `grads[i]` is ∂L/∂acts\[i\] (batch × fan_out_i).
     pub(crate) grads: Vec<Matrix>,
     /// Folded `X̂` per layer (batch × fan_in_i).
@@ -110,8 +121,35 @@ impl GraphWorkspace {
     /// [`GraphWorkspace::new`] with an explicit [`ObsConfig`] — the
     /// telemetry's histograms, counters and trace ring are sized here,
     /// up front, so enabled telemetry stays zero-allocation per step.
+    /// All-f32 precision (the seed behavior).
     pub fn with_obs(graph: &Graph, batch: usize, obs: ObsConfig) -> GraphWorkspace {
+        let prec = vec![LayerPrecision::exact(); graph.layers.len()];
+        GraphWorkspace::with_precision(graph, batch, obs, &prec)
+    }
+
+    /// Fully-keyed constructor: per-layer precision decides each trace
+    /// buffer's storage (and pre-sizes the quantized variants' code +
+    /// staging buffers, keeping steady-state steps allocation-free).
+    ///
+    /// Pinned choice: the **last (head) layer's trace is always stored
+    /// f32** — its activations feed only the loss head (exact by
+    /// design), never a backward trace read, so quantizing it would
+    /// cost encode time and buy nothing. A quantized mode requested for
+    /// the head is silently resolved to `F32` here (the config layer
+    /// applies the same pin at `layer_plan()` resolution, so a resolved
+    /// plan round-trips unchanged).
+    pub fn with_precision(
+        graph: &Graph,
+        batch: usize,
+        obs: ObsConfig,
+        prec: &[LayerPrecision],
+    ) -> GraphWorkspace {
         assert!(batch > 0, "workspace needs a non-empty batch");
+        assert_eq!(prec.len(), graph.layers.len(), "one LayerPrecision per layer");
+        let mut prec = prec.to_vec();
+        if let Some(last) = prec.last_mut() {
+            last.trace = TraceMode::F32;
+        }
         let widths = graph.widths();
         let n = graph.layers.len();
         let n_shards = ShardPlan::for_rows(batch).len();
@@ -129,7 +167,8 @@ impl GraphWorkspace {
             acts: graph
                 .layers
                 .iter()
-                .map(|l| Matrix::zeros(batch, l.fan_out()))
+                .zip(prec.iter())
+                .map(|(l, p)| TraceBuf::new(p.trace, batch, l.fan_out()))
                 .collect(),
             grads: graph
                 .layers
@@ -167,6 +206,7 @@ impl GraphWorkspace {
             audit_approx: Vec::new(),
             audit_exact: Vec::new(),
             audit_sel: Selection::with_capacity(0),
+            prec,
             widths,
         }
     }
@@ -216,11 +256,53 @@ impl GraphWorkspace {
     /// Re-key (reallocate everything) iff the key changed — a cheap
     /// width-chain comparison in steady state. The obs *configuration*
     /// survives a re-key (the telemetry buffers are rebuilt for the new
-    /// layer count, resetting recorded data like every other buffer).
+    /// layer count, resetting recorded data like every other buffer),
+    /// and so does the per-layer precision — as long as the layer count
+    /// is unchanged (a different layer count has no meaningful mapping
+    /// from the old precision vector, so it resets to all-f32).
     pub fn ensure(&mut self, graph: &Graph, batch: usize) {
         if !self.matches(graph, batch) {
-            *self = GraphWorkspace::with_obs(graph, batch, self.obs.config());
+            let prec = if self.prec.len() == graph.layers.len() {
+                std::mem::take(&mut self.prec)
+            } else {
+                vec![LayerPrecision::exact(); graph.layers.len()]
+            };
+            *self = GraphWorkspace::with_precision(graph, batch, self.obs.config(), &prec);
         }
+    }
+
+    /// Reconfigure per-layer precision in place. A config-time
+    /// operation: rebuilds the workspace when the precision actually
+    /// changes (trace buffers are storage-typed), no-op otherwise —
+    /// never call mid-step.
+    pub fn set_precision(&mut self, graph: &Graph, prec: &[LayerPrecision]) {
+        assert_eq!(prec.len(), self.widths.len() - 1, "one LayerPrecision per layer");
+        // apply the head pin before comparing, so passing an unpinned
+        // vector repeatedly never re-keys twice (config-time alloc only)
+        let mut want = prec.to_vec();
+        if let Some(last) = want.last_mut() {
+            last.trace = TraceMode::F32;
+        }
+        if self.prec != want {
+            *self = GraphWorkspace::with_precision(graph, self.batch, self.obs.config(), &want);
+        }
+    }
+
+    /// The per-layer resolved precision this workspace was built with
+    /// (head trace pinned to `F32` — see [`Self::with_precision`]).
+    pub fn precision(&self) -> &[LayerPrecision] {
+        &self.prec
+    }
+
+    /// Bytes the backward pass reads from layer `li`'s activation trace.
+    pub fn layer_trace_bytes(&self, li: usize) -> usize {
+        self.acts[li].trace_bytes()
+    }
+
+    /// Total backward-read trace footprint across all layers — the
+    /// number BENCH_9 and the `repro_trace_bytes` gauge report.
+    pub fn trace_bytes(&self) -> usize {
+        self.acts.iter().map(|t| t.trace_bytes()).sum()
     }
 
     /// The batch size this workspace is keyed for.
@@ -365,6 +447,37 @@ mod tests {
         assert_eq!(ws.audit_approx.len(), 2);
         ws.ensure(&g, 48);
         assert!(ws.audit_approx.is_empty(), "re-key drops the scratch");
+    }
+
+    #[test]
+    fn precision_shapes_trace_buffers_and_survives_rekey() {
+        let mut rng = Rng::new(7);
+        let g = Graph::relu_mlp(&mut rng, &[6, 10, 3], LossKind::Mse);
+        let mut ws = GraphWorkspace::new(&g, 32);
+        // default: all f32, seed footprint
+        assert_eq!(ws.trace_bytes(), 4 * 32 * 10 + 4 * 32 * 3);
+        let prec = [
+            LayerPrecision { trace: TraceMode::Bf16, accum: crate::tensor::quant::AccumMode::F64 },
+            // head: quantized request is pinned back to f32
+            LayerPrecision { trace: TraceMode::Q8, accum: crate::tensor::quant::AccumMode::F64 },
+        ];
+        ws.set_precision(&g, &prec);
+        assert_eq!(ws.precision()[0].trace, TraceMode::Bf16);
+        assert_eq!(ws.precision()[1].trace, TraceMode::F32, "head trace pinned to f32");
+        assert_eq!(ws.layer_trace_bytes(0), 2 * 32 * 10);
+        assert_eq!(ws.layer_trace_bytes(1), 4 * 32 * 3);
+        // idempotent: same precision does not re-key (acts keep identity)
+        let before = ws.acts[0].exact().data().as_ptr();
+        ws.set_precision(&g, &prec);
+        assert_eq!(ws.acts[0].exact().data().as_ptr(), before);
+        // precision survives a batch re-key, like the obs config
+        ws.ensure(&g, 48);
+        assert_eq!(ws.precision()[0].trace, TraceMode::Bf16);
+        assert_eq!(ws.layer_trace_bytes(0), 2 * 48 * 10);
+        // a layer-count change resets precision to all-f32
+        let g2 = Graph::relu_mlp(&mut rng, &[6, 8, 8, 3], LossKind::Mse);
+        ws.ensure(&g2, 48);
+        assert!(ws.precision().iter().all(|p| *p == LayerPrecision::exact()));
     }
 
     #[test]

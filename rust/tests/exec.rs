@@ -679,6 +679,109 @@ fn audit_step_bit_identical_fresh_vs_reused_workspace() {
 }
 
 #[test]
+fn precision_grid_bit_identical_across_threads_and_workspaces() {
+    // ISSUE 8 acceptance grid: trace {f32, bf16, q8} × accum {f32, f64}
+    // × threads {1, 7} × fresh-vs-reused workspace. Quantized traces and
+    // widened lanes change the *numbers*; within each precision cell the
+    // thread count and workspace lifetime must still be invisible —
+    // every cell collapses to one bit-exact trajectory.
+    use mem_aop_gd::tensor::quant::{AccumMode, LayerPrecision, TraceMode};
+
+    let steps = 10usize;
+    let (m, n, p) = (24usize, 6usize, 3usize);
+    let run = |trace: TraceMode,
+               accum: AccumMode,
+               threads: usize,
+               reuse: bool|
+     -> (Vec<u32>, Graph) {
+        let (x, y) = synth_data(91, m, n, p);
+        let mut wrng = Rng::new(59);
+        let mut g = Graph::relu_mlp(&mut wrng, &[n, 10, 8, p], LossKind::Mse);
+        let cfgs = vec![AopLayerConfig { k: 6, policy: Policy::TopK, memory: true }; 3];
+        let mut state = GraphState::from_configs(&g, m, &cfgs);
+        let exec = Executor::new(threads);
+        let mut rng = Rng::new(61);
+        let prec = vec![LayerPrecision { trace, accum }; 3];
+        let mut resident = GraphWorkspace::new(&g, m);
+        resident.set_precision(&g, &prec);
+        let mut losses = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let out = if reuse {
+                train::train_step_ws(
+                    &mut g, &mut state, &x, &y, 0.02, &mut rng, &exec, true, &mut resident,
+                )
+            } else {
+                let mut fresh = GraphWorkspace::new(&g, m);
+                fresh.set_precision(&g, &prec);
+                train::train_step_ws(
+                    &mut g, &mut state, &x, &y, 0.02, &mut rng, &exec, true, &mut fresh,
+                )
+            };
+            assert!(out.loss.is_finite());
+            losses.push(out.loss.to_bits());
+        }
+        (losses, g)
+    };
+
+    for trace in [TraceMode::F32, TraceMode::Bf16, TraceMode::Q8] {
+        for accum in [AccumMode::F32, AccumMode::F64] {
+            let (l1, g1) = run(trace, accum, 1, false);
+            for (threads, reuse) in [(7usize, false), (1, true), (7, true)] {
+                let what = format!(
+                    "trace={} accum={} threads={threads} reuse={reuse}",
+                    trace.name(),
+                    accum.name()
+                );
+                let (lt, gt) = run(trace, accum, threads, reuse);
+                assert_eq!(l1, lt, "{what}: losses");
+                for (a, b) in g1.layers.iter().zip(gt.layers.iter()) {
+                    assert_eq!(a.w.data(), b.w.data(), "{what}: weights");
+                    assert_eq!(a.b, b.b, "{what}: bias");
+                }
+            }
+        }
+    }
+    // q8 traces must genuinely perturb the update relative to the f32
+    // baseline — otherwise the knob quietly became a no-op
+    let (base, _) = run(TraceMode::F32, AccumMode::F32, 1, false);
+    let (q8, _) = run(TraceMode::Q8, AccumMode::F32, 1, false);
+    assert_ne!(base, q8, "q8 traces left the trajectory bit-identical to f32");
+}
+
+#[test]
+fn precision_experiment_bit_identical_across_threads() {
+    // end-to-end: quantized traces + widened accumulation through the
+    // whole experiment loop (layered config, memory on) stay bit-exact
+    // across thread counts, including the per-layer metrics
+    use mem_aop_gd::tensor::quant::{AccumMode, TraceMode};
+
+    for (trace, accum) in [
+        (TraceMode::Bf16, AccumMode::Kahan),
+        (TraceMode::Q8, AccumMode::F64),
+    ] {
+        let mk = |threads: usize| {
+            let mut cfg = layered_energy_cfg(threads);
+            cfg.trace = trace;
+            cfg.accum = accum;
+            cfg
+        };
+        let serial = experiment::run(&mk(1)).unwrap();
+        for threads in [4usize, 7] {
+            let par = experiment::run(&mk(threads)).unwrap();
+            assert_runs_identical(
+                &serial,
+                &par,
+                &format!(
+                    "trace={} accum={} threads={threads}",
+                    trace.name(),
+                    accum.name()
+                ),
+            );
+        }
+    }
+}
+
+#[test]
 fn experiment_rollup_reports_phases_without_perturbing_the_curve() {
     // the native trainer runs with telemetry on by default; the rollup
     // rides along on RunResult while the curve stays bit-identical to

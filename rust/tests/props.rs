@@ -458,6 +458,92 @@ fn prop_audit_of_exact_memoryless_step_is_lossless() {
     });
 }
 
+// ---------------------------------------------------------------------
+// Mixed-precision trace codecs + widened lane accumulation (§Mixed
+// precision): quantization error bounds and accumulator fidelity.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_q8_round_trip_error_bounded_by_half_step() {
+    use mem_aop_gd::tensor::quant::{q8_decode, q8_encode_row};
+    property("q8 round trip", 80, |g| {
+        let len = g.usize_range(1, 200);
+        let scale = g.f32_range(0.001, 100.0);
+        let row: Vec<f32> = g.vec_normal(len).iter().map(|v| v * scale).collect();
+        let mut codes = vec![0i8; len];
+        let step = q8_encode_row(&row, &mut codes);
+        let max_abs = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        if max_abs == 0.0 {
+            assert_eq!(step, 0.0);
+            assert!(codes.iter().all(|&c| c == 0));
+            return;
+        }
+        // the advertised per-element bound: half a quantization step
+        // (max_abs / 254), padded one ulp for the encoder's division
+        for (&v, &c) in row.iter().zip(codes.iter()) {
+            let err = (v - q8_decode(c, step)).abs();
+            assert!(
+                err <= max_abs / 254.0 * (1.0 + 1e-5),
+                "len={len} v={v} err={err} max_abs={max_abs}"
+            );
+        }
+        // codes never escape the symmetric range
+        assert!(codes.iter().all(|&c| (-127..=127).contains(&(c as i32))));
+    });
+}
+
+#[test]
+fn prop_bf16_exact_on_short_mantissas_and_relatively_bounded() {
+    use mem_aop_gd::tensor::quant::{bf16_decode, bf16_encode};
+    property("bf16 round trip", 80, |g| {
+        // any value that already fits an 8-bit mantissa is a fixed point
+        // of the codec: truncating once and truncating twice agree
+        let v = g.f32_range(-1e6, 1e6);
+        let short = bf16_decode(bf16_encode(v));
+        assert_eq!(
+            bf16_decode(bf16_encode(short)).to_bits(),
+            short.to_bits(),
+            "v={v}"
+        );
+        // and the single truncation is strictly inside one bf16 ulp
+        // (2^-7 relative: dropped bits < 2^(e-7), |v| >= 2^e)
+        assert!((v - short).abs() <= v.abs() / 128.0, "v={v} short={short}");
+    });
+}
+
+#[test]
+fn prop_widened_dot_tracks_f64_reference_tighter_than_f32() {
+    property("widened dot vs f64", 80, |g| {
+        use mem_aop_gd::tensor::quant::AccumMode;
+        let len = g.usize_range(1, 400);
+        let a = g.vec_normal(len);
+        let b = g.vec_normal(len);
+        let refd: f64 = a
+            .iter()
+            .zip(b.iter())
+            .map(|(&x, &y)| x as f64 * y as f64)
+            .sum();
+        let scale: f64 = a
+            .iter()
+            .zip(b.iter())
+            .map(|(&x, &y)| (x as f64 * y as f64).abs())
+            .sum::<f64>()
+            .max(1.0);
+        // f64 lanes round to f32 exactly once: error is one f32 ulp of
+        // the result, far inside 1e-6 relative at these magnitudes
+        let wide = ops::dot_acc(&a, &b, AccumMode::F64) as f64;
+        assert!((wide - refd).abs() <= 1e-6 * scale, "len={len}: {wide} vs {refd}");
+        // Kahan compensation holds the same tightened bound
+        let kah = ops::dot_acc(&a, &b, AccumMode::Kahan) as f64;
+        assert!((kah - refd).abs() <= 1e-6 * scale, "len={len}: {kah} vs {refd}");
+        // and the f32 mode is the seed kernel, bit for bit
+        assert_eq!(
+            ops::dot_acc(&a, &b, AccumMode::F32).to_bits(),
+            ops::dot(&a, &b).to_bits()
+        );
+    });
+}
+
 #[test]
 fn prop_engine_step_keeps_weights_finite() {
     use mem_aop_gd::aop::AopEngine;

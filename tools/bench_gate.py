@@ -2,7 +2,7 @@
 """Bench trajectory recorder + regression gate (ROADMAP: BENCH trajectory).
 
 Run from the repo root after `cargo bench --bench kernels` has written
-BENCH_2.json ... BENCH_6.json and BENCH_8.json:
+BENCH_2.json ... BENCH_6.json, BENCH_8.json and BENCH_9.json:
 
   * appends each record (stamped with UTC time + git rev + host) to
     `bench/history/BENCH_N.jsonl` — the committed machine-readable
@@ -35,12 +35,33 @@ RECORDS = [
     "BENCH_5.json",
     "BENCH_6.json",
     "BENCH_8.json",
+    "BENCH_9.json",
 ]
 # keys holding a {"rows_per_sec": ...} object we track; records missing
 # a series simply skip it (BENCH_8 carries the audit_* series instead
 # of serial/threads4)
 SERIES = ["serial", "threads4", "audit_off", "audit_on", "audit_on_threads4"]
 REGRESSION_FRAC = 0.15
+
+
+def series_items(record):
+    """Yield every tracked (series_name, rows_per_sec) pair of a record.
+
+    Top-level SERIES objects cover BENCH_2..8; BENCH_9-style precision
+    grids nest their cells under graphs[].cells[], keyed here as
+    "<graph>:trace=<t>/accum=<a>" so each precision cell gates
+    independently.
+    """
+    for series in SERIES:
+        obj = record.get(series)
+        if isinstance(obj, dict) and "rows_per_sec" in obj:
+            yield series, obj["rows_per_sec"]
+    for g in record.get("graphs") or []:
+        label = g.get("graph", "graph")
+        for cell in g.get("cells") or []:
+            if isinstance(cell, dict) and "rows_per_sec" in cell:
+                name = f"{label}:trace={cell.get('trace')}/accum={cell.get('accum')}"
+                yield name, cell["rows_per_sec"]
 
 
 def git_rev():
@@ -119,10 +140,11 @@ def main():
                 json.dump(entry, f, indent=2, sort_keys=True)
                 f.write("\n")
             continue
-        for series in SERIES:
+        base_series = dict(series_items(baseline))
+        for series, cur_raw in series_items(record):
             try:
-                base = float(baseline[series]["rows_per_sec"])
-                cur = float(record[series]["rows_per_sec"])
+                base = float(base_series[series])
+                cur = float(cur_raw)
             except (KeyError, TypeError, ValueError):
                 continue
             if base <= 0:
