@@ -180,6 +180,96 @@ EOF
   wait "$SERVE_PID"
 fi
 
+# Resilience smoke (PR 9): a live `repro serve` with fault injection ON
+# (worker panics + dropped connections, seed-keyed so the run is
+# reproducible) must still land every submitted job in a terminal state
+# through client-side retry/reconnect, answer the `health` op, and
+# export the v8 rejection/health Prometheus families. The chaos chain's
+# cheapest end-to-end proof that the serve tier degrades by failing
+# jobs, never by wedging them.
+if [ "$fast" -eq 0 ] && command -v python3 >/dev/null 2>&1; then
+  echo "==> chaos smoke: faulted serve stays live and leaves no stuck jobs"
+  ./target/release/repro serve --addr 127.0.0.1:17073 --workers 2 \
+    --queue-cap 8 --faults "seed=7,panic=150,drop=80" &
+  SERVE_PID=$!
+  python3 - <<'EOF'
+import json, socket, time
+
+ADDR = ("127.0.0.1", 17073)
+
+def connect():
+    for _ in range(100):
+        try:
+            return socket.create_connection(ADDR, timeout=5).makefile("rw")
+        except OSError:
+            time.sleep(0.1)
+    raise SystemExit("serve never came up on 17073")
+
+f = connect()
+
+def call(req, retries=20):
+    # the server drops connections on purpose: reconnect and retry, and
+    # back off briefly on queue_full/rate_limited rejections
+    global f
+    for attempt in range(retries):
+        try:
+            f.write(json.dumps(req) + "\n")
+            f.flush()
+            line = f.readline()
+            if not line:
+                raise OSError("connection dropped")
+            resp = json.loads(line)
+        except OSError:
+            f = connect()
+            continue
+        if resp.get("ok"):
+            return resp
+        if resp.get("reason") in ("queue_full", "rate_limited"):
+            time.sleep(resp.get("retry_after_ms", 100) / 1000.0)
+            continue
+        raise SystemExit(f"unexpected rejection: {resp}")
+    raise SystemExit(f"request never succeeded: {req}")
+
+ping = call({"op": "ping"})
+assert ping["protocol"] >= 8, ping
+
+cfg = {"task": "energy", "policy": "topk", "k": "18", "epochs": 2,
+       "lr": 0.01, "seed": 0, "backend": "native", "memory": True,
+       "data_scale": 1.0}
+ids = []
+for i in range(12):
+    c = dict(cfg)
+    c["seed"] = i
+    ids.append(call({"op": "submit", "label": f"chaos-{i}", "config": c})["id"])
+
+deadline = time.time() + 120
+states = {}
+while time.time() < deadline:
+    states = {i: call({"op": "status", "id": i})["state"] for i in ids}
+    if all(s in ("done", "failed") for s in states.values()):
+        break
+    time.sleep(0.2)
+else:
+    raise SystemExit(f"stuck jobs after 120s: {states}")
+done = sum(1 for s in states.values() if s == "done")
+failed = len(ids) - done
+
+health = call({"op": "health", "wait_ms": 2000})
+assert health["status"] in ("ok", "degraded"), health
+assert health["pool_alive"], health
+
+m = call({"op": "metrics", "format": "prometheus"})["text"]
+assert "# TYPE repro_health_status gauge" in m, m[:400]
+assert "# TYPE repro_rejected_total counter" in m, m[:400]
+assert "repro_connections_open" in m, m[:400]
+
+call({"op": "shutdown"})
+print(f"[ci] chaos smoke ok: {done} done + {failed} failed of {len(ids)}, "
+      f"none stuck, health={health['status']}")
+EOF
+  wait "$SERVE_PID"
+fi
+
 # Perf smoke: a quick run of the kernels bench so every CI pass leaves
 # machine-readable throughput data points (BENCH_2.json: flat engine;
 # BENCH_3.json: layer-graph core; BENCH_4.json: wide-layer
@@ -193,8 +283,10 @@ fi
 # included in the 0-allocations assertion; BENCH_9.json: the
 # mixed-precision trace/accum grid — rows/sec, backward-read trace
 # bytes, and fixed-step loss drift per cell, quantized cells asserted
-# allocation-free) for the perf trajectory.
-echo "==> kernels bench smoke (BENCH_2/3/4/5/6/8/9.json)"
+# allocation-free; BENCH_10.json: the serve-burst workload — jobs/sec
+# and submit-latency percentiles through submit_with_retry against a
+# small admission queue) for the perf trajectory.
+echo "==> kernels bench smoke (BENCH_2/3/4/5/6/8/9/10.json)"
 BENCH_QUICK=1 cargo bench --bench kernels
 test -f BENCH_3.json
 test -f BENCH_4.json
@@ -202,11 +294,13 @@ test -f BENCH_5.json
 test -f BENCH_6.json
 test -f BENCH_8.json
 test -f BENCH_9.json
+test -f BENCH_10.json
 echo "BENCH_4.json: $(cat BENCH_4.json | head -c 200)..."
 echo "BENCH_5.json: $(cat BENCH_5.json | head -c 200)..."
 echo "BENCH_6.json: $(cat BENCH_6.json | head -c 200)..."
 echo "BENCH_8.json: $(cat BENCH_8.json | head -c 200)..."
 echo "BENCH_9.json: $(cat BENCH_9.json | head -c 200)..."
+echo "BENCH_10.json: $(cat BENCH_10.json | head -c 200)..."
 
 # BENCH trajectory (ROADMAP): append this run to the committed bench/
 # history and fail on a >15% rows/sec regression vs the recorded

@@ -23,7 +23,7 @@ use mem_aop_gd::aop::Policy;
 use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig, KSchedule};
 use mem_aop_gd::coordinator::experiment;
 use mem_aop_gd::metrics::RunCurve;
-use mem_aop_gd::serve::{Client, ServeOptions, Server};
+use mem_aop_gd::serve::{Client, RetryPolicy, ServeOptions, Server};
 use mem_aop_gd::util::cli::Command;
 
 /// Deterministic job mix: cycle through every policy, vary K and seed
@@ -80,7 +80,7 @@ fn main() -> Result<()> {
                 addr: "127.0.0.1:0".to_string(),
                 workers: 0,
                 queue_capacity: jobs.max(64),
-                registry_dir: None,
+                ..ServeOptions::default()
             })?;
             let addr = server.local_addr()?.to_string();
             spawned = Some(std::thread::spawn(move || server.run()));
@@ -92,16 +92,29 @@ fn main() -> Result<()> {
     // fan out: connection t submits and polls jobs i with i % conns == t
     let t0 = Instant::now();
     let mut completed: Vec<(usize, String, Option<RunCurve>)> = Vec::with_capacity(jobs);
+    let mut retries_total: u32 = 0;
     std::thread::scope(|scope| -> Result<()> {
         let mut handles = Vec::new();
         for t in 0..conns.min(jobs) {
             let addr = addr.clone();
-            handles.push(scope.spawn(move || -> Result<Vec<(usize, String, Option<RunCurve>)>> {
+            handles.push(scope.spawn(move || -> Result<(Vec<(usize, String, Option<RunCurve>)>, u32)> {
                 let mut client = Client::connect(&addr)?;
+                // resilient submission (protocol v8): a full queue or a
+                // rate limiter answers with `retry_after_ms`, and
+                // submit_with_retry backs off deterministically instead
+                // of failing the burst
+                let policy = RetryPolicy { seed: t as u64, ..RetryPolicy::default() };
                 let mine: Vec<usize> = (0..jobs).filter(|i| i % conns == t).collect();
                 let mut ids = Vec::with_capacity(mine.len());
+                let mut retries: u32 = 0;
                 for &i in &mine {
-                    ids.push((i, client.submit(&job_config(i), &format!("burst-{i}"))?));
+                    let (id, r) = client.submit_with_retry(
+                        &job_config(i),
+                        &format!("burst-{i}"),
+                        &policy,
+                    )?;
+                    retries += r;
+                    ids.push((i, id));
                 }
                 let mut out = Vec::with_capacity(mine.len());
                 for (i, id) in ids {
@@ -118,11 +131,13 @@ fn main() -> Result<()> {
                     };
                     out.push((i, state, curve));
                 }
-                Ok(out)
+                Ok((out, retries))
             }));
         }
         for h in handles {
-            completed.extend(h.join().expect("client thread panicked")?);
+            let (out, retries) = h.join().expect("client thread panicked")?;
+            completed.extend(out);
+            retries_total += retries;
         }
         Ok(())
     })?;
@@ -136,7 +151,8 @@ fn main() -> Result<()> {
     let done = completed.iter().filter(|(_, s, _)| s == "done").count();
     ensure!(done == jobs, "{} of {jobs} jobs did not finish 'done'", jobs - done);
     println!(
-        "{jobs} jobs done in {elapsed:.2}s ({:.1} jobs/s end-to-end), none dropped",
+        "{jobs} jobs done in {elapsed:.2}s ({:.1} jobs/s end-to-end), none dropped, \
+         {retries_total} submit retries",
         jobs as f64 / elapsed
     );
 

@@ -19,8 +19,13 @@
 //! workload), and the **mixed-precision** trace/accum grid (quantized
 //! forward traces + widened lane accumulation: rows/sec, backward-read
 //! trace bytes, fixed-step loss drift per (trace, accum) cell), written
-//! to `BENCH_9.json` — so the repo's perf trajectory is
-//! machine-readable.
+//! to `BENCH_9.json`, and the **serve-burst** workload (PR 9
+//! resilience: a many-connection submit burst through
+//! `submit_with_retry` against an in-process server whose admission
+//! queue is deliberately small, reporting end-to-end jobs/sec plus
+//! submit-latency percentiles and the retry/rejection counts the burst
+//! absorbed), written to `BENCH_10.json` — so the repo's perf
+//! trajectory is machine-readable.
 //!
 //! Work metric = FLOPs of the compaction-regime cost model, so the
 //! reported work-rate is directly comparable across K (who computes the
@@ -40,10 +45,11 @@ use std::time::{Duration, Instant};
 
 use mem_aop_gd::aop::engine::AopEngine;
 use mem_aop_gd::aop::{flops, Policy};
-use mem_aop_gd::coordinator::config::KSchedule;
+use mem_aop_gd::coordinator::config::{Backend, ExperimentConfig, KSchedule, Task};
 use mem_aop_gd::exec::Executor;
 use mem_aop_gd::model::loss::LossKind;
 use mem_aop_gd::runtime::{Manifest, Runtime, Value};
+use mem_aop_gd::serve::{Client, RetryPolicy, ServeOptions, Server};
 use mem_aop_gd::tensor::{init, ops, rng::Rng, Matrix};
 use mem_aop_gd::train::{self, AopLayerConfig, Graph, GraphState, GraphWorkspace};
 use mem_aop_gd::util::bench::{black_box, Bencher};
@@ -1045,6 +1051,138 @@ fn bench_precision_and_write_bench9() {
         .and_then(|_| std::fs::write("results/bench/precision_throughput.json", text));
 }
 
+/// The BENCH_10 workload (serve-tier resilience, PR 9): a
+/// many-connection submit burst through `submit_with_retry` against an
+/// in-process server whose admission queue is deliberately small
+/// (2 workers, 8 pending slots), so the burst actually exercises
+/// `queue_full` rejections and the client backoff path. Reports
+/// end-to-end jobs/sec as the gated `serve_submit` rows_per_sec series,
+/// p50/p99 per-submit wire latency (backoff included), the retry count
+/// the burst absorbed, and the server's own `queue_full` rejection
+/// counter. Unlike BENCH_4..9 there is no zero-alloc assertion here:
+/// the serve path allocates by design (framing, job state); the gated
+/// contract is that admission control does not collapse throughput.
+fn bench_serve_and_write_bench10() {
+    let quick = std::env::var("BENCH_QUICK").ok().as_deref() == Some("1");
+    let (jobs, conns) = if quick { (16usize, 4usize) } else { (48usize, 8usize) };
+
+    let server = Server::bind(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        queue_capacity: 8,
+        ..ServeOptions::default()
+    })
+    .expect("bind");
+    let addr = server.local_addr().expect("addr").to_string();
+    let handle = std::thread::spawn(move || server.run());
+
+    // same quick job mix as the serve_throughput macro-bench: 2-epoch
+    // energy jobs cycling through every policy
+    let cfg = |i: usize| {
+        let policies = Policy::all();
+        let p = policies[i % policies.len()];
+        let mut c = ExperimentConfig::preset(Task::Energy);
+        c.policy = p;
+        c.memory = p != Policy::Exact;
+        c.k = KSchedule::constant(if p == Policy::Exact { c.m() } else { 18 });
+        c.epochs = 2;
+        c.seed = i as u64;
+        c.backend = Backend::Native;
+        c
+    };
+
+    let t0 = Instant::now();
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(jobs);
+    let mut retries_total = 0u32;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..conns {
+            let addr = addr.clone();
+            let cfg = &cfg;
+            handles.push(scope.spawn(move || {
+                let mut c = Client::connect(&addr).expect("connect");
+                let policy = RetryPolicy {
+                    attempts: 12,
+                    seed: t as u64,
+                    ..RetryPolicy::default()
+                };
+                let mut lats = Vec::new();
+                let mut retries = 0u32;
+                let mut ids = Vec::new();
+                for i in (0..jobs).filter(|i| i % conns == t) {
+                    let s0 = Instant::now();
+                    let (id, r) = c
+                        .submit_with_retry(&cfg(i), "bench10", &policy)
+                        .expect("submit_with_retry");
+                    lats.push(s0.elapsed().as_secs_f64() * 1e3);
+                    retries += r;
+                    ids.push(id);
+                }
+                for id in ids {
+                    let job = c.wait(id, Duration::from_secs(600)).expect("wait");
+                    assert_eq!(job.get("state").and_then(|s| s.as_str()), Some("done"));
+                }
+                (lats, retries)
+            }));
+        }
+        for h in handles {
+            let (lats, retries) = h.join().expect("client thread panicked");
+            latencies_ms.extend(lats);
+            retries_total += retries;
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let jobs_per_sec = jobs as f64 / elapsed;
+
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+    let pct = |p: f64| latencies_ms[((latencies_ms.len() - 1) as f64 * p).round() as usize];
+
+    // the server's own view: every queue_full the burst rode through
+    let mut c = Client::connect(&addr).expect("connect");
+    let m = c.metrics().expect("metrics");
+    let queue_full = m
+        .get("rejected")
+        .and_then(|r| r.get("queue_full"))
+        .and_then(|n| n.as_f64())
+        .unwrap_or(0.0);
+    c.shutdown().expect("shutdown");
+    handle.join().expect("server thread panicked").expect("server run");
+
+    eprintln!(
+        "serve-burst: {jobs} jobs over {conns} conns in {elapsed:.2}s ({jobs_per_sec:.1} jobs/s), \
+         submit p50 {:.1}ms p99 {:.1}ms, {retries_total} retries, {queue_full:.0} queue_full \
+         rejections",
+        pct(0.50),
+        pct(0.99),
+    );
+
+    let out = json::obj(vec![
+        (
+            "workload",
+            json::s("serve-tier submit burst under admission control (2 workers, 8-slot queue)"),
+        ),
+        ("jobs", json::num(jobs as f64)),
+        ("conns", json::num(conns as f64)),
+        (
+            "serve_submit",
+            json::obj(vec![
+                ("rows_per_sec", json::num(jobs_per_sec)),
+                ("submit_p50_ms", json::num(pct(0.50))),
+                ("submit_p99_ms", json::num(pct(0.99))),
+                ("retries", json::num(retries_total as f64)),
+                ("queue_full_rejections", json::num(queue_full)),
+            ]),
+        ),
+    ]);
+    let mut text = out.dump();
+    text.push('\n');
+    if std::fs::write("BENCH_10.json", &text).is_ok() {
+        eprintln!("[kernels] wrote BENCH_10.json (serve-burst under admission control)");
+    }
+    let _ = std::fs::create_dir_all("results/bench")
+        .and_then(|_| std::fs::write("results/bench/serve_submit.json", text));
+}
+
 fn main() {
     let mut b = Bencher::new("kernels");
     let mut rng = Rng::new(0);
@@ -1056,6 +1194,7 @@ fn main() {
     bench_obs_and_write_bench6();
     bench_audit_and_write_bench8();
     bench_precision_and_write_bench9();
+    bench_serve_and_write_bench10();
 
     for (task, m, n, p, ks) in [
         ("energy", 144usize, 16usize, 1usize, vec![144usize, 18, 9, 3]),

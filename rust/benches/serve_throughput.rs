@@ -38,7 +38,7 @@ fn main() {
         addr: "127.0.0.1:0".to_string(),
         workers: 0,
         queue_capacity: 256,
-        registry_dir: None,
+        ..ServeOptions::default()
     })
     .expect("bind");
     let addr = server.local_addr().expect("addr").to_string();

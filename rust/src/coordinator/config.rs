@@ -797,6 +797,14 @@ pub struct ExperimentConfig {
     /// auditing never changes a curve (native backend; the HLO path
     /// reports nothing).
     pub audit: Option<usize>,
+    /// Per-job wall-clock budget in seconds (protocol v8). `Some(s)`
+    /// lets the serve tier finalize a run exceeding `s` seconds as
+    /// `failed: timeout` at the next epoch boundary instead of letting
+    /// it occupy worker slots indefinitely; `None` (the default) keeps
+    /// the historical unlimited behavior. Purely a lifecycle bound —
+    /// it is checked *between* epochs and never alters the math of the
+    /// epochs that do run.
+    pub timeout_s: Option<f64>,
 }
 
 /// Upper bound on [`ExperimentConfig::threads`] (sanity cap, far above
@@ -822,6 +830,7 @@ impl ExperimentConfig {
             trace: TraceMode::F32,
             accum: AccumMode::F32,
             audit: None,
+            timeout_s: None,
         }
     }
 
@@ -843,6 +852,7 @@ impl ExperimentConfig {
             trace: TraceMode::F32,
             accum: AccumMode::F32,
             audit: None,
+            timeout_s: None,
         }
     }
 
@@ -1016,6 +1026,11 @@ impl ExperimentConfig {
         if self.audit == Some(0) {
             bail!("audit cadence every:0 is invalid (want every:<n> with n >= 1)");
         }
+        if let Some(t) = self.timeout_s {
+            if !t.is_finite() || t <= 0.0 {
+                bail!("timeout_s must be a finite number > 0 (got {t})");
+            }
+        }
         Ok(())
     }
 
@@ -1051,6 +1066,11 @@ impl ExperimentConfig {
             // emitted only when auditing is on, so pre-v6 frames and run
             // files keep their historical shape
             pairs.push(("audit", json::s(&format!("every:{n}"))));
+        }
+        if let Some(t) = self.timeout_s {
+            // emitted only when a wall-clock budget is set, so untimed
+            // frames keep their pre-v8 shape
+            pairs.push(("timeout_s", json::num(t)));
         }
         json::obj(pairs)
     }
@@ -1134,6 +1154,15 @@ impl ExperimentConfig {
                         .ok_or_else(|| anyhow!("config: audit not a string"))?;
                     Some(parse_audit(s)?)
                 }
+                None => None,
+            },
+            // optional (protocol v8): pre-resilience frames carry no
+            // wall-clock budget; validate() bounds it below
+            timeout_s: match v.get("timeout_s") {
+                Some(t) => Some(
+                    t.as_f64()
+                        .ok_or_else(|| anyhow!("config: timeout_s not a number"))?,
+                ),
                 None => None,
             },
         };
@@ -1262,6 +1291,29 @@ mod tests {
         let j = c.to_json();
         assert_eq!(j.get("audit").and_then(|a| a.as_str()), Some("every:3"));
         assert_eq!(ExperimentConfig::from_json(&j).unwrap().audit, Some(3));
+    }
+
+    #[test]
+    fn timeout_field_roundtrips_and_is_optional() {
+        // off by default, and omitted from the frame when off (pre-v8
+        // shape preserved)
+        let mut c = ExperimentConfig::energy_preset();
+        assert_eq!(c.timeout_s, None);
+        assert!(c.to_json().get("timeout_s").is_none());
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.timeout_s, None);
+        // on: emitted as a plain number and parsed back
+        c.timeout_s = Some(2.5);
+        let j = c.to_json();
+        assert_eq!(j.get("timeout_s").and_then(|t| t.as_f64()), Some(2.5));
+        assert_eq!(ExperimentConfig::from_json(&j).unwrap().timeout_s, Some(2.5));
+        // degenerate budgets are rejected at validation
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            c.timeout_s = Some(bad);
+            assert!(c.validate().is_err(), "timeout_s = {bad}");
+        }
+        c.timeout_s = Some(0.001);
+        assert!(c.validate().is_ok());
     }
 
     #[test]

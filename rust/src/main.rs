@@ -132,7 +132,13 @@ fn app() -> App {
                 .opt("addr", "127.0.0.1:7070", "listen address (host:port; port 0 = ephemeral)")
                 .opt("workers", "0", "training worker threads (0 = auto)")
                 .opt("queue-cap", "256", "max queued jobs before submissions are rejected")
-                .opt("registry-dir", "", "persist completed runs here (empty = in-memory only)"),
+                .opt("registry-dir", "", "persist completed runs here (empty = in-memory only)")
+                .opt("max-conns", "256", "max simultaneous client connections")
+                .opt("rate-limit", "0", "max submits/s per client IP (0 = unlimited)")
+                .opt("rate-burst", "8", "submit burst allowed per client after idle")
+                .opt("frame-timeout-s", "30", "close a connection stuck mid-frame this long (0 = never)")
+                .opt("idle-timeout-s", "0", "close a connection idle this long (0 = never)")
+                .opt("faults", "", "inject faults, e.g. seed=7,panic=50,torn=100,drop=25 (per-mille rates; chaos testing)"),
             Command::new("trace", "dump a Chrome trace of one native run (obs event ring)")
                 .opt("task", "energy", "energy | mnist")
                 .opt("policy", "topk", policy_help())
@@ -455,7 +461,12 @@ fn cmd_approx_error(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use mem_aop_gd::serve::{ServeOptions, Server};
+    use mem_aop_gd::serve::{FaultPlan, ServeOptions, Server};
+    use std::time::Duration;
+    let faults = match args.get("faults").filter(|s| !s.is_empty()) {
+        Some(spec) => FaultPlan::parse(spec).map_err(|e| anyhow!("--faults: {e}"))?,
+        None => FaultPlan::off(),
+    };
     let opts = ServeOptions {
         addr: args.get("addr").unwrap_or("127.0.0.1:7070").to_string(),
         workers: args.get_parse("workers")?,
@@ -464,15 +475,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .get("registry-dir")
             .filter(|s| !s.is_empty())
             .map(std::path::PathBuf::from),
+        max_connections: args.get_parse("max-conns")?,
+        rate_limit_per_sec: args.get_parse("rate-limit")?,
+        rate_limit_burst: args.get_parse("rate-burst")?,
+        frame_timeout: Duration::from_secs_f64(args.get_parse::<f64>("frame-timeout-s")?),
+        idle_timeout: Duration::from_secs_f64(args.get_parse::<f64>("idle-timeout-s")?),
+        faults,
     };
     let server = Server::bind(&opts)?;
     let state = server.state();
     let restored = state.registry.counts().done;
     println!(
-        "repro serve listening on {} ({} workers, queue capacity {}, registry {}{})",
+        "repro serve listening on {} ({} workers, queue capacity {}, max conns {}, registry {}{})",
         server.local_addr()?,
         state.scheduler.worker_count(),
         opts.queue_capacity,
+        opts.max_connections,
         match &opts.registry_dir {
             Some(d) => d.display().to_string(),
             None => "in-memory".to_string(),
@@ -483,6 +501,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             String::new()
         }
     );
+    if opts.rate_limit_per_sec > 0.0 {
+        println!(
+            "rate limit: {} submits/s per client (burst {})",
+            opts.rate_limit_per_sec, opts.rate_limit_burst
+        );
+    }
+    if !opts.faults.is_off() {
+        println!("fault injection ACTIVE: {} (chaos mode — expect failures)", opts.faults);
+    }
     println!("protocol: one JSON object per line; try {{\"op\":\"ping\"}} — see README.md");
     server.run()
 }

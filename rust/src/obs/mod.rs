@@ -18,7 +18,10 @@
 //! * [`trace`] — a bounded ring-buffer event trace rendered as Chrome
 //!   trace-event JSON (`repro trace`, chrome://tracing);
 //! * [`prom`] — Prometheus text-format rendering used by the serve
-//!   tier's `metrics` op (protocol v5 `format: "prometheus"`);
+//!   tier's `metrics` op (protocol v5 `format: "prometheus"`); the
+//!   serve handler also renders the v8 resilience families through it
+//!   (`repro_health_status`, `repro_rejected_total{reason}`,
+//!   `repro_connections_open`);
 //! * [`audit`] — gradient-fidelity audit records and selection
 //!   diagnostics (Jaccard overlap, score entropy) for the
 //!   training-dynamics layer (ISSUE 7): measure how faithful the

@@ -1,0 +1,215 @@
+//! Deterministic, seed-keyed fault injection for chaos-testing the
+//! serve tier (ISSUE 9 tentpole).
+//!
+//! A [`FaultPlan`] describes *where the serve tier is allowed to break*:
+//! worker panics at epoch boundaries, torn registry writes (a file
+//! persisted corrupt, as if the process died mid-write before the
+//! atomic rename landed), and dropped client connections. Every fault
+//! decision is a **pure function** of the plan's seed and the stable
+//! identity of the event (job id + epoch, job id, connection id +
+//! frame index) via the same counter-based [`Rng::for_stream`] streams
+//! the trainer uses — so a chaos run is exactly reproducible, and a
+//! test can rerun the identical fault schedule against a fix.
+//!
+//! Contract (mirrors `ObsConfig::off()`): [`FaultPlan::off`] means the
+//! predicates short-circuit to `false` without constructing an RNG —
+//! fault injection costs nothing when disabled, and production builds
+//! never pay for it.
+//!
+//! Faults never touch the math. They kill jobs, connections, and
+//! files, but a job that *completes* under faults ran the exact same
+//! deterministic training loop as its fault-free twin — which is what
+//! lets the chaos soak assert bit-identical curves rather than
+//! probabilistic health.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::rng::Rng;
+
+/// Stream-domain tags keeping the three fault families statistically
+/// independent of each other (and of every trainer RNG stream).
+const STREAM_PANIC: u64 = 0x464C_545F_50414E49; // "FLT_PANI"
+const STREAM_TORN: u64 = 0x464C_545F_544F524E; // "FLT_TORN"
+const STREAM_DROP: u64 = 0x464C_545F_4452_4F50; // "FLT_DROP"
+
+/// A deterministic fault-injection schedule. Rates are per-mille
+/// (0..=1000) per opportunity: `panic` per (job, epoch boundary),
+/// `torn` per persisted job file, `drop` per (connection, response).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed keying every fault roll; two runs with the same seed and
+    /// the same event identities inject the same faults.
+    pub seed: u64,
+    /// Probability (per mille) a worker panics at an epoch boundary.
+    pub panic_per_mille: u32,
+    /// Probability (per mille) a registry persist writes a torn file.
+    pub torn_per_mille: u32,
+    /// Probability (per mille) a connection drops before a response.
+    pub drop_per_mille: u32,
+}
+
+impl FaultPlan {
+    /// No faults — every predicate returns `false` without touching an
+    /// RNG. This is the production default.
+    pub const fn off() -> FaultPlan {
+        FaultPlan { seed: 0, panic_per_mille: 0, torn_per_mille: 0, drop_per_mille: 0 }
+    }
+
+    /// True when no fault family is armed (the fast path).
+    pub const fn is_off(&self) -> bool {
+        self.panic_per_mille == 0 && self.torn_per_mille == 0 && self.drop_per_mille == 0
+    }
+
+    /// Parse a CLI spec like `"seed=7,panic=50,torn=100,drop=25"`.
+    /// Omitted keys default to 0; an empty spec is [`FaultPlan::off`].
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::off();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((key, value)) = part.split_once('=') else {
+                bail!("bad fault spec part {part:?} (expected key=value)");
+            };
+            let (key, value) = (key.trim(), value.trim());
+            match key {
+                "seed" => {
+                    plan.seed = value
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad fault seed {value:?}"))?;
+                }
+                "panic" | "torn" | "drop" => {
+                    let rate: u32 = value.parse().map_err(|_| {
+                        anyhow::anyhow!("bad fault rate {value:?} for {key} (per mille, 0..=1000)")
+                    })?;
+                    if rate > 1000 {
+                        bail!("fault rate {key}={rate} out of range (per mille, 0..=1000)");
+                    }
+                    match key {
+                        "panic" => plan.panic_per_mille = rate,
+                        "torn" => plan.torn_per_mille = rate,
+                        _ => plan.drop_per_mille = rate,
+                    }
+                }
+                _ => bail!(
+                    "unknown fault key {key:?} (expected one of: seed, panic, torn, drop)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// One deterministic per-mille roll on an independent stream.
+    fn roll(&self, domain: u64, a: u64, b: u64, per_mille: u32) -> bool {
+        if per_mille == 0 {
+            return false; // compiled-out fast path: no RNG construction
+        }
+        let mut rng = Rng::for_stream(self.seed ^ domain, a, b);
+        rng.next_u64() % 1000 < u64::from(per_mille)
+    }
+
+    /// Should the worker running `job_id` panic at the end of `epoch`?
+    pub fn worker_panic(&self, job_id: u64, epoch: u64) -> bool {
+        self.roll(STREAM_PANIC, job_id, epoch, self.panic_per_mille)
+    }
+
+    /// Should the registry persist of `job_id` write a torn file?
+    pub fn torn_write(&self, job_id: u64) -> bool {
+        self.roll(STREAM_TORN, job_id, 0, self.torn_per_mille)
+    }
+
+    /// Should connection `conn_id` drop before writing response `frame`?
+    pub fn drop_connection(&self, conn_id: u64, frame: u64) -> bool {
+        self.roll(STREAM_DROP, conn_id, frame, self.drop_per_mille)
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan::off()
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_off() {
+            return write!(f, "off");
+        }
+        write!(
+            f,
+            "seed={},panic={},torn={},drop={}",
+            self.seed, self.panic_per_mille, self.torn_per_mille, self.drop_per_mille
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_plan_never_fires_and_needs_no_rng() {
+        let plan = FaultPlan::off();
+        assert!(plan.is_off());
+        for id in 0..64 {
+            assert!(!plan.worker_panic(id, id * 3));
+            assert!(!plan.torn_write(id));
+            assert!(!plan.drop_connection(id, id + 1));
+        }
+    }
+
+    #[test]
+    fn rolls_are_pure_functions_of_seed_and_identity() {
+        let plan = FaultPlan { seed: 7, panic_per_mille: 500, torn_per_mille: 500, drop_per_mille: 500 };
+        let twin = plan;
+        let mut fired = 0;
+        for job in 0..200u64 {
+            for epoch in 0..4u64 {
+                assert_eq!(plan.worker_panic(job, epoch), twin.worker_panic(job, epoch));
+                fired += usize::from(plan.worker_panic(job, epoch));
+            }
+            assert_eq!(plan.torn_write(job), twin.torn_write(job));
+            assert_eq!(plan.drop_connection(job, 0), twin.drop_connection(job, 0));
+        }
+        // ~50% rate over 800 independent rolls: loose bounds, no flake.
+        assert!(fired > 250 && fired < 550, "panic rolls wildly off rate: {fired}/800");
+    }
+
+    #[test]
+    fn fault_families_are_independent_streams() {
+        let plan = FaultPlan { seed: 3, panic_per_mille: 500, torn_per_mille: 500, drop_per_mille: 500 };
+        // If the streams were shared, these three vectors would agree
+        // everywhere; distinct domains must decorrelate them.
+        let n = 256u64;
+        let panics: Vec<bool> = (0..n).map(|i| plan.worker_panic(i, 0)).collect();
+        let torns: Vec<bool> = (0..n).map(|i| plan.torn_write(i)).collect();
+        let drops: Vec<bool> = (0..n).map(|i| plan.drop_connection(i, 0)).collect();
+        assert_ne!(panics, torns);
+        assert_ne!(panics, drops);
+        assert_ne!(torns, drops);
+    }
+
+    #[test]
+    fn seed_changes_the_schedule() {
+        let a = FaultPlan { seed: 1, panic_per_mille: 500, ..FaultPlan::off() };
+        let b = FaultPlan { seed: 2, panic_per_mille: 500, ..FaultPlan::off() };
+        let fa: Vec<bool> = (0..256u64).map(|i| a.worker_panic(i, 0)).collect();
+        let fb: Vec<bool> = (0..256u64).map(|i| b.worker_panic(i, 0)).collect();
+        assert_ne!(fa, fb);
+    }
+
+    #[test]
+    fn parse_grammar_roundtrips_and_rejects_malformed_specs() {
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::off());
+        assert_eq!(FaultPlan::parse("off").is_err(), true);
+        let plan = FaultPlan::parse("seed=7,panic=50,torn=100,drop=25").unwrap();
+        assert_eq!(
+            plan,
+            FaultPlan { seed: 7, panic_per_mille: 50, torn_per_mille: 100, drop_per_mille: 25 }
+        );
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+        assert_eq!(FaultPlan::off().to_string(), "off");
+        assert!(FaultPlan::parse("panic=1001").is_err());
+        assert!(FaultPlan::parse("panic=-1").is_err());
+        assert!(FaultPlan::parse("jitter=5").is_err());
+        assert!(FaultPlan::parse("panic").is_err());
+        assert!(FaultPlan::parse("seed=x").is_err());
+    }
+}

@@ -7,13 +7,15 @@
 //! mistakes (unknown job id, malformed config, full queue) become
 //! `ok:false` envelopes, never a closed connection or a panic.
 
+use std::collections::HashMap;
+use std::net::IpAddr;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::obs::{AtomicHistogram, PromBuf};
 use crate::serve::protocol::{
-    self, err_response, ok_response, MetricsFormat, Request, PROTOCOL_VERSION,
+    self, err_rejection, err_response, ok_response, MetricsFormat, Request, PROTOCOL_VERSION,
 };
 use crate::serve::queue::Scheduler;
 use crate::serve::registry::Registry;
@@ -24,15 +26,24 @@ use crate::util::json::{self, Json};
 /// Prometheus `op` label values). `error` collects frames that fail to
 /// parse into any op. These are a wire-format promise — only ever
 /// extended, never renamed.
-const OP_NAMES: [&str; 10] = [
+const OP_NAMES: [&str; 11] = [
     "submit", "status", "result", "list", "cancel", "metrics", "watch", "ping", "shutdown",
-    "error",
+    "health", "error",
 ];
 const OP_ERROR: usize = OP_NAMES.len() - 1;
+
+/// Rejection reason labels (protocol v8): the `reason` field of a
+/// rejection envelope and the `reason` label on `repro_rejected_total`.
+/// Same stability promise as [`OP_NAMES`]: extended, never renamed.
+pub const REJECT_REASONS: [&str; 4] =
+    ["queue_full", "rate_limited", "shutting_down", "oversized"];
 
 /// Server-side clamp on a `watch` long-poll (protocol v6): bounds how
 /// long one request can hold a connection thread.
 const MAX_WATCH_WAIT_MS: u64 = 30_000;
+
+/// Server-side clamp on a `health` probe wait (protocol v8).
+const MAX_HEALTH_WAIT_MS: u64 = 10_000;
 
 fn op_index(req: &Request) -> usize {
     match req {
@@ -45,7 +56,33 @@ fn op_index(req: &Request) -> usize {
         Request::Watch { .. } => 6,
         Request::Ping => 7,
         Request::Shutdown => 8,
+        Request::Health { .. } => 9,
     }
+}
+
+/// Admission-control knobs the TCP layer passes down from
+/// `ServeOptions` (protocol v8). The defaults disable rate limiting,
+/// so in-process `ServerState`s behave exactly as before.
+#[derive(Debug, Clone, Copy)]
+pub struct Limits {
+    /// Sustained `submit` rate allowed per client IP (tokens/second);
+    /// `0.0` disables the limiter entirely.
+    pub rate_limit_per_sec: f64,
+    /// Token-bucket capacity: how many submits a client may burst
+    /// after sitting idle.
+    pub rate_limit_burst: f64,
+}
+
+impl Default for Limits {
+    fn default() -> Limits {
+        Limits { rate_limit_per_sec: 0.0, rate_limit_burst: 8.0 }
+    }
+}
+
+/// Token-bucket state for one client IP.
+struct Bucket {
+    tokens: f64,
+    last: Instant,
 }
 
 /// Everything a connection handler needs, shared via `Arc` across the
@@ -59,17 +96,37 @@ pub struct ServerState {
     /// totals): every handled frame records exactly one sample, so
     /// `Σ_op count == requests_total` whenever no request is in flight.
     op_lat: [AtomicHistogram; OP_NAMES.len()],
+    /// Rejected submits by reason, indexed parallel to
+    /// [`REJECT_REASONS`].
+    rejected: [AtomicU64; REJECT_REASONS.len()],
+    limits: Limits,
+    buckets: Mutex<HashMap<IpAddr, Bucket>>,
+    /// Open client connections; the accept loop's RAII guard maintains
+    /// this so `repro_connections_open` is honest.
+    connections: AtomicU64,
     shutdown: AtomicBool,
 }
 
 impl ServerState {
     pub fn new(registry: Arc<Registry>, scheduler: Scheduler) -> ServerState {
+        ServerState::with_limits(registry, scheduler, Limits::default())
+    }
+
+    pub fn with_limits(
+        registry: Arc<Registry>,
+        scheduler: Scheduler,
+        limits: Limits,
+    ) -> ServerState {
         ServerState {
             registry,
             scheduler,
             started: Instant::now(),
             requests: AtomicU64::new(0),
             op_lat: std::array::from_fn(|_| AtomicHistogram::new()),
+            rejected: std::array::from_fn(|_| AtomicU64::new(0)),
+            limits,
+            buckets: Mutex::new(HashMap::new()),
+            connections: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
         }
     }
@@ -83,9 +140,29 @@ impl ServerState {
         self.started.elapsed().as_secs_f64()
     }
 
-    /// Dispatch one request frame. Infallible by design: every error is
-    /// encoded as an `ok:false` response.
+    /// Connection-count bookkeeping for the TCP layer's RAII guard.
+    pub fn connection_opened(&self) {
+        self.connections.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn connection_closed(&self) {
+        self.connections.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    pub fn connections_open(&self) -> u64 {
+        self.connections.load(Ordering::SeqCst)
+    }
+
+    /// Dispatch one request frame from an in-process caller (no peer
+    /// address, so the per-client rate limiter never applies).
     pub fn handle(&self, frame: &Json) -> Json {
+        self.handle_from(frame, None)
+    }
+
+    /// Dispatch one request frame. Infallible by design: every error is
+    /// encoded as an `ok:false` response. `peer` is the client IP the
+    /// TCP layer saw; submit-rate limiting is keyed on it.
+    pub fn handle_from(&self, frame: &Json, peer: Option<IpAddr>) -> Json {
         self.requests.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
         let req = match Request::from_json(frame) {
@@ -99,9 +176,24 @@ impl ServerState {
         let op = op_index(&req);
         match req {
             Request::Submit { config, tag } => {
-                let resp = match self.scheduler.submit(config, &tag) {
-                    Ok(id) => ok_response(vec![("id", json::num(id as f64))]),
-                    Err(e) => err_response(&format!("{e:#}")),
+                let resp = if let Some(retry_ms) = self.rate_limited(peer) {
+                    self.count_rejection("rate_limited");
+                    err_rejection(
+                        &format!(
+                            "rate limit: this client exceeded {:.1} submits/s (burst {})",
+                            self.limits.rate_limit_per_sec, self.limits.rate_limit_burst
+                        ),
+                        "rate_limited",
+                        Some(retry_ms),
+                    )
+                } else {
+                    match self.scheduler.submit(config, &tag) {
+                        Ok(id) => ok_response(vec![("id", json::num(id as f64))]),
+                        Err(rej) => {
+                            self.count_rejection(rej.reason);
+                            err_rejection(&rej.to_string(), rej.reason, rej.retry_after_ms)
+                        }
+                    }
                 };
                 self.record_op(op, t0);
                 resp
@@ -202,7 +294,71 @@ impl ServerState {
                 self.record_op(op, t0);
                 resp
             }
+            Request::Health { wait_ms } => {
+                // the probe is a real round-trip through the scheduler
+                // pool: a wedged pool shows up as pool_alive=false, not
+                // as a cheerful gauge read
+                let wait = Duration::from_millis(wait_ms.min(MAX_HEALTH_WAIT_MS));
+                let probe = self.scheduler.probe(wait);
+                let queue_depth = self.scheduler.queue_depth();
+                let capacity = self.scheduler.capacity();
+                let alive = probe.is_some();
+                let healthy =
+                    alive && !self.scheduler.is_shutting_down() && queue_depth < capacity;
+                let mut pairs = vec![
+                    ("status", json::s(if healthy { "ok" } else { "degraded" })),
+                    ("pool_alive", Json::Bool(alive)),
+                    ("queue_depth", json::num(queue_depth as f64)),
+                    ("queue_capacity", json::num(capacity as f64)),
+                    ("slots_free", json::num(self.scheduler.slots_free() as f64)),
+                    ("slots_total", json::num(self.scheduler.worker_count() as f64)),
+                ];
+                if let Some(d) = probe {
+                    pairs.push(("probe_ms", json::num(d.as_secs_f64() * 1000.0)));
+                }
+                let resp = ok_response(pairs);
+                self.record_op(op, t0);
+                resp
+            }
         }
+    }
+
+    /// Token-bucket check for one submit from `peer`. `Some(ms)` means
+    /// reject with that retry hint; `None` admits. Disabled (rate 0.0)
+    /// and in-process (peer-less) submits always admit.
+    fn rate_limited(&self, peer: Option<IpAddr>) -> Option<u64> {
+        let rate = self.limits.rate_limit_per_sec;
+        if rate <= 0.0 {
+            return None;
+        }
+        let ip = peer?;
+        let mut buckets = self.buckets.lock().unwrap();
+        let now = Instant::now();
+        let b = buckets
+            .entry(ip)
+            .or_insert(Bucket { tokens: self.limits.rate_limit_burst, last: now });
+        b.tokens = (b.tokens + now.duration_since(b.last).as_secs_f64() * rate)
+            .min(self.limits.rate_limit_burst);
+        b.last = now;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            None
+        } else {
+            Some((((1.0 - b.tokens) / rate) * 1000.0).ceil() as u64)
+        }
+    }
+
+    fn count_rejection(&self, reason: &str) {
+        if let Some(i) = REJECT_REASONS.iter().position(|r| *r == reason) {
+            self.rejected[i].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The scrape-time liveness bit behind `repro_health_status`: cheap
+    /// on purpose (no pool probe) so `metrics` stays fast.
+    fn healthy_now(&self) -> bool {
+        !self.scheduler.is_shutting_down()
+            && self.scheduler.queue_depth() < self.scheduler.capacity()
     }
 
     fn record_op(&self, op: usize, t0: Instant) {
@@ -319,6 +475,16 @@ impl ServerState {
             ),
             ("jobs_per_sec", json::num(g.jobs_per_sec)),
             ("jobs", Self::jobs_obj(&g.counts)),
+            (
+                "rejected",
+                json::obj(
+                    REJECT_REASONS
+                        .iter()
+                        .zip(self.rejected.iter())
+                        .map(|(r, n)| (*r, json::num(n.load(Ordering::Relaxed) as f64)))
+                        .collect(),
+                ),
+            ),
             ("ops", Json::Arr(ops)),
             ("policies", Json::Arr(policies)),
         ])
@@ -362,6 +528,25 @@ impl ServerState {
         p.sample("repro_pool_workers_busy", &[], g.pool_busy as f64);
         p.header("repro_pool_tasks_pending", "gauge", "Jobs queued in the worker pool.");
         p.sample("repro_pool_tasks_pending", &[], g.pool_pending as f64);
+        // resilience families (protocol v8): always headered and fully
+        // sampled (zeros included) so alerting rules never see a family
+        // appear out of nowhere
+        p.header(
+            "repro_health_status",
+            "gauge",
+            "1 when the server is accepting submits and the queue has headroom, else 0.",
+        );
+        p.sample("repro_health_status", &[], if self.healthy_now() { 1.0 } else { 0.0 });
+        p.header("repro_rejected_total", "counter", "Rejected submits by reason.");
+        for (reason, n) in REJECT_REASONS.iter().zip(self.rejected.iter()) {
+            p.sample(
+                "repro_rejected_total",
+                &[("reason", reason)],
+                n.load(Ordering::Relaxed) as f64,
+            );
+        }
+        p.header("repro_connections_open", "gauge", "Open client connections.");
+        p.sample("repro_connections_open", &[], self.connections_open() as f64);
         p.header("repro_jobs_total", "gauge", "Jobs by lifecycle state.");
         for (state, n) in [
             ("queued", g.counts.queued),
@@ -961,6 +1146,107 @@ mod tests {
         assert_eq!(jobs.len(), 1);
         assert!(jobs[0].get("layers").is_none());
         st.scheduler.shutdown();
+    }
+
+    fn state_with_limits(l: Limits) -> ServerState {
+        let reg = Arc::new(Registry::new(None).unwrap());
+        let sched = Scheduler::start(reg.clone(), 2, 32);
+        ServerState::with_limits(reg, sched, l)
+    }
+
+    #[test]
+    fn health_op_reports_ok_then_degraded() {
+        let st = state();
+        let h = st.handle(&json::obj(vec![("op", json::s("health"))]));
+        assert!(is_ok(&h), "{}", h.dump());
+        assert_eq!(h.get("status").unwrap().as_str().unwrap(), "ok");
+        assert_eq!(h.get("pool_alive").unwrap().as_bool().unwrap(), true);
+        assert!(h.get("probe_ms").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(h.get("queue_capacity").unwrap().as_usize().unwrap(), 32);
+        assert_eq!(h.get("slots_total").unwrap().as_usize().unwrap(), 2);
+        // a stopped pool can't answer the probe: degraded, no probe_ms
+        st.scheduler.shutdown();
+        let h = st.handle(&json::obj(vec![
+            ("op", json::s("health")),
+            ("wait_ms", json::num(50.0)),
+        ]));
+        assert!(is_ok(&h), "{}", h.dump());
+        assert_eq!(h.get("status").unwrap().as_str().unwrap(), "degraded");
+        assert_eq!(h.get("pool_alive").unwrap().as_bool().unwrap(), false);
+        assert!(h.get("probe_ms").is_none());
+    }
+
+    #[test]
+    fn rate_limiter_rejects_bursts_per_client_and_recovers() {
+        let st = state_with_limits(Limits { rate_limit_per_sec: 5.0, rate_limit_burst: 2.0 });
+        let peer: IpAddr = "10.0.0.1".parse().unwrap();
+        let other: IpAddr = "10.0.0.2".parse().unwrap();
+        let a = st.handle_from(&submit_req(21), Some(peer));
+        let b = st.handle_from(&submit_req(22), Some(peer));
+        assert!(is_ok(&a) && is_ok(&b), "a burst of 2 is admitted");
+        let r = st.handle_from(&submit_req(23), Some(peer));
+        assert!(!is_ok(&r), "{}", r.dump());
+        assert_eq!(r.get("reason").unwrap().as_str().unwrap(), "rate_limited");
+        let hint = r.get("retry_after_ms").unwrap().as_usize().unwrap();
+        assert!(hint >= 1 && hint <= 200, "hint {hint}ms at 5 tokens/s");
+        // other clients and in-process callers have their own budget
+        assert!(is_ok(&st.handle_from(&submit_req(24), Some(other))));
+        assert!(is_ok(&st.handle(&submit_req(25))));
+        // the bucket refills: at 5 tokens/s a ~300ms wait covers the hint
+        std::thread::sleep(Duration::from_millis(300));
+        let r = st.handle_from(&submit_req(26), Some(peer));
+        assert!(is_ok(&r), "{}", r.dump());
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn rejections_export_reason_counters_and_health_gauge() {
+        let st = state();
+        let scrape = |st: &ServerState| -> String {
+            let pr = st.handle(&json::obj(vec![
+                ("op", json::s("metrics")),
+                ("format", json::s("prometheus")),
+            ]));
+            assert!(is_ok(&pr), "{}", pr.dump());
+            pr.get("text").unwrap().as_str().unwrap().to_string()
+        };
+        // families are fully sampled (zeros included) from the start
+        let text = scrape(&st);
+        assert!(text.contains("# TYPE repro_rejected_total counter\n"), "{text}");
+        for reason in REJECT_REASONS {
+            assert!(
+                text.contains(&format!("repro_rejected_total{{reason=\"{reason}\"}} 0\n")),
+                "{text}"
+            );
+        }
+        assert!(text.contains("repro_health_status 1\n"), "{text}");
+        assert!(text.contains("repro_connections_open 0\n"), "{text}");
+        // an oversized submit is counted under its reason
+        let mut cfg = quick_cfg(31);
+        cfg.threads = 8;
+        let r = st.handle(&json::obj(vec![
+            ("op", json::s("submit")),
+            ("config", cfg.to_json()),
+        ]));
+        assert!(!is_ok(&r));
+        assert_eq!(r.get("reason").unwrap().as_str().unwrap(), "oversized");
+        // a shutdown drops the health gauge and counts its rejections
+        st.scheduler.shutdown();
+        let r = st.handle(&submit_req(32));
+        assert!(!is_ok(&r));
+        assert_eq!(r.get("reason").unwrap().as_str().unwrap(), "shutting_down");
+        let text = scrape(&st);
+        assert!(text.contains("repro_rejected_total{reason=\"oversized\"} 1\n"), "{text}");
+        assert!(
+            text.contains("repro_rejected_total{reason=\"shutting_down\"} 1\n"),
+            "{text}"
+        );
+        assert!(text.contains("repro_health_status 0\n"), "{text}");
+        // the JSON rendering carries the same counters
+        let m = st.handle(&json::obj(vec![("op", json::s("metrics"))]));
+        let rej = m.get("rejected").unwrap();
+        assert_eq!(rej.get("oversized").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(rej.get("queue_full").unwrap().as_usize().unwrap(), 0);
     }
 
     #[test]

@@ -22,24 +22,40 @@
 //!   `--workers` slots; oversized jobs are rejected, never deadlocked);
 //!   graceful shutdown drains every accepted job;
 //! * [`handlers`] — socket-free request dispatch ([`ServerState`]);
-//! * [`server`] — the accept loop ([`Server`] / [`ServeOptions`]).
+//! * [`server`] — the accept loop ([`Server`] / [`ServeOptions`]);
+//! * [`faults`] — deterministic, seed-keyed fault injection
+//!   ([`FaultPlan`]: worker panics, torn registry writes, dropped
+//!   connections) for the chaos tests; compiled down to nothing on the
+//!   hot path when off.
+//!
+//! Resilience (protocol v8): submissions are admission-controlled — a
+//! bounded queue and an optional per-client token bucket reject with
+//! typed reasons and `retry_after_ms` hints instead of hanging; stalled
+//! connections hit read deadlines; jobs can carry a wall-clock
+//! `timeout_s` budget; a `health` op round-trips a probe through the
+//! worker pool. The [`Client`]'s `submit_with_retry` honors the hints
+//! with deterministic seeded backoff.
 //!
 //! Determinism is preserved end-to-end: a job's curve is bit-identical to
 //! a direct [`experiment::run`](crate::coordinator::experiment::run) of
-//! the same config, which `rust/tests/serve.rs` asserts seed-for-seed.
+//! the same config, which `rust/tests/serve.rs` asserts seed-for-seed —
+//! including under injected faults, where every *completed* job's curve
+//! still matches its fault-free twin.
 //!
 //! Start one with `repro serve --addr 127.0.0.1:7070 --registry-dir runs`
 //! and drive it with `cargo run --example serve_client` (see README.md
 //! for the wire schema and an example session).
 
+pub mod faults;
 pub mod handlers;
 pub mod protocol;
 pub mod queue;
 pub mod registry;
 pub mod server;
 
-pub use handlers::ServerState;
-pub use protocol::{Client, PROTOCOL_VERSION};
-pub use queue::Scheduler;
+pub use faults::FaultPlan;
+pub use handlers::{Limits, ServerState};
+pub use protocol::{Client, RetryPolicy, PROTOCOL_VERSION};
+pub use queue::{Reject, Scheduler};
 pub use registry::{JobState, JobView, Registry};
 pub use server::{ServeOptions, Server};

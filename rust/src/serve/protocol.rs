@@ -15,6 +15,7 @@
 //! | `metrics`  | `format` (optional)         | queue/job/FLOP/latency metrics     |
 //! | `watch`    | `id`, `cursor` (optional),  | `epochs`, `cursor`, `state`        |
 //! |            | `wait_ms` (optional)        |                                    |
+//! | `health`   | `wait_ms` (optional)        | `status`, pool/queue gauges        |
 //! | `ping`     | —                           | `protocol`, `uptime_s`             |
 //! | `shutdown` | —                           | `state: shutting-down`             |
 //!
@@ -95,6 +96,22 @@
 //! configs and their job views serialize without any of the new keys:
 //! pre-v7 frames remain accepted and byte-identical.
 //!
+//! Protocol v8 is the resilience surface. Rejections become
+//! *structured*: an admission-control refusal (`queue_full`,
+//! `rate_limited`, `shutting_down`, `oversized`) still carries the
+//! human-readable `error` but adds a machine-readable `reason` and —
+//! when the condition is transient — a `retry_after_ms` hint that
+//! well-behaved clients honor before retrying ([`Client::submit_with_retry`]
+//! implements bounded exponential backoff with deterministic seeded
+//! jitter around it). `config` may carry a `timeout_s` wall-clock
+//! budget finalizing overrunning jobs as `failed: timeout`. The new
+//! `health` op round-trips a probe task through the worker pool and
+//! reports `status` (`"ok"`/`"degraded"`), pool liveness, and queue
+//! depth; the same signals are exported as the `repro_health_status`
+//! gauge and `repro_rejected_total{reason}` counters. Pre-v8 frames
+//! remain accepted and byte-identical: successful responses carry no
+//! new keys, and `reason`/`retry_after_ms` appear only on rejections.
+//!
 //! [`Client`] is a small blocking client used by `examples/serve_client.rs`
 //! and the integration tests.
 
@@ -124,8 +141,12 @@ use crate::util::json::{self, Json};
 /// mixed precision — config `trace`/`accum` knobs (flat + per-layer
 /// trace overrides), resolved per-layer `trace`/`accum`/`trace_bytes`
 /// in job views, the `trace` field on audit records, and the
-/// `repro_trace_bytes` Prometheus gauge. Older frames remain accepted.
-pub const PROTOCOL_VERSION: u64 = 7;
+/// `repro_trace_bytes` Prometheus gauge. v8: resilience — structured
+/// rejections (`reason` + `retry_after_ms` on admission refusals), the
+/// config `timeout_s` wall-clock budget, the `health` probe op, and
+/// the `repro_health_status`/`repro_rejected_total` Prometheus
+/// families. Older frames remain accepted.
+pub const PROTOCOL_VERSION: u64 = 8;
 
 /// Rendering of the `metrics` response (protocol v5 `format` field).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -162,6 +183,7 @@ pub enum Request {
     Cancel { id: u64 },
     Metrics { format: MetricsFormat },
     Watch { id: u64, cursor: usize, wait_ms: u64 },
+    Health { wait_ms: u64 },
     Ping,
     Shutdown,
 }
@@ -225,11 +247,24 @@ impl Request {
                     wait_ms: opt_int("wait_ms", 10_000.0)? as u64,
                 }
             }
+            "health" => {
+                // v8 probe; wait_ms bounds the pool round-trip wait
+                let wait_ms = match v.get("wait_ms") {
+                    None => 1_000.0,
+                    Some(n) => n
+                        .as_f64()
+                        .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+                        .ok_or_else(|| {
+                            anyhow!("health field 'wait_ms' must be a non-negative integer")
+                        })?,
+                };
+                Request::Health { wait_ms: wait_ms as u64 }
+            }
             "ping" => Request::Ping,
             "shutdown" => Request::Shutdown,
             other => bail!(
                 "unknown op '{other}' (expected one of: submit, status, result, \
-                 list, cancel, metrics, watch, ping, shutdown)"
+                 list, cancel, metrics, watch, health, ping, shutdown)"
             ),
         })
     }
@@ -245,6 +280,21 @@ pub fn ok_response(mut fields: Vec<(&str, Json)>) -> Json {
 /// `{"ok": false, "error": msg}`.
 pub fn err_response(msg: &str) -> Json {
     json::obj(vec![("ok", Json::Bool(false)), ("error", json::s(msg))])
+}
+
+/// Structured admission rejection (protocol v8): the plain error
+/// envelope plus a machine-readable `reason` and, for transient
+/// conditions, a `retry_after_ms` hint clients back off by.
+pub fn err_rejection(msg: &str, reason: &str, retry_after_ms: Option<u64>) -> Json {
+    let mut pairs = vec![
+        ("ok", Json::Bool(false)),
+        ("error", json::s(msg)),
+        ("reason", json::s(reason)),
+    ];
+    if let Some(ms) = retry_after_ms {
+        pairs.push(("retry_after_ms", json::num(ms as f64)));
+    }
+    json::obj(pairs)
 }
 
 /// Whether a response frame reports success.
@@ -279,8 +329,58 @@ pub fn read_json<R: BufRead>(r: &mut R) -> Result<Option<Json>> {
     }
 }
 
+/// Client-side retry policy for [`Client::submit_with_retry`] (protocol
+/// v8): bounded exponential backoff with deterministic seeded jitter.
+/// The server's `retry_after_ms` hint, when present, replaces the
+/// exponential base for that attempt — the jitter still applies so a
+/// burst of identical clients doesn't re-collide on the hinted instant.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Maximum retries after the first attempt before giving up.
+    pub attempts: u32,
+    /// First backoff delay; doubles per retry up to `max_ms`.
+    pub base_ms: u64,
+    /// Backoff ceiling.
+    pub max_ms: u64,
+    /// Seed for the deterministic jitter stream (counter-based, so
+    /// retry N of a given client always jitters identically).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { attempts: 6, base_ms: 50, max_ms: 2_000, seed: 0 }
+    }
+}
+
+/// Stream-domain tag for retry jitter (independent of trainer streams).
+const STREAM_RETRY: u64 = 0x434C_545F_5254_5259; // "CLT_RTRY"
+
+/// Delay before retry number `attempt` (1-based): the server's
+/// `retry_after_ms` hint when given, else exponential backoff from
+/// `base_ms`, capped at `max_ms`, plus deterministic jitter in
+/// `[0, delay/2]`. Pure function of `(policy, attempt, hint)`.
+pub fn retry_delay(policy: &RetryPolicy, attempt: u32, retry_after_ms: Option<u64>) -> Duration {
+    let exp = policy
+        .base_ms
+        .saturating_mul(1u64 << attempt.saturating_sub(1).min(20))
+        .min(policy.max_ms);
+    let base = retry_after_ms.unwrap_or(exp).min(policy.max_ms.max(exp));
+    let jitter = if base == 0 {
+        0
+    } else {
+        let mut rng =
+            crate::tensor::rng::Rng::for_stream(policy.seed ^ STREAM_RETRY, 0, u64::from(attempt));
+        rng.next_u64() % (base / 2 + 1)
+    };
+    Duration::from_millis(base + jitter)
+}
+
 /// Blocking protocol client (one TCP connection, serial request/response).
+/// Remembers its address so [`Client::reconnect`] and the retrying
+/// submit path can re-dial after a dropped connection.
 pub struct Client {
+    addr: String,
     writer: TcpStream,
     reader: BufReader<TcpStream>,
 }
@@ -292,9 +392,16 @@ impl Client {
         stream.set_nodelay(true).ok();
         let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
         Ok(Client {
+            addr: addr.to_string(),
             writer: stream,
             reader,
         })
+    }
+
+    /// Drop the current connection and dial the same address again.
+    pub fn reconnect(&mut self) -> Result<()> {
+        *self = Client::connect(&self.addr)?;
+        Ok(())
     }
 
     /// Send one frame and read the response (no `ok` check).
@@ -333,6 +440,74 @@ impl Client {
             .and_then(|n| n.as_f64())
             .map(|n| n as u64)
             .ok_or_else(|| anyhow!("submit response missing 'id'"))
+    }
+
+    /// Submit with client-side resilience (protocol v8): transient
+    /// rejections (`queue_full`, `rate_limited`) back off per `policy`
+    /// honoring the server's `retry_after_ms` hint; a dropped
+    /// connection re-dials and retries (deterministic configs make a
+    /// duplicate submit harmless — the twin trains the same curve).
+    /// Permanent rejections (bad config, oversized threads) fail
+    /// immediately. Returns `(job_id, retries_used)`.
+    pub fn submit_with_retry(
+        &mut self,
+        cfg: &ExperimentConfig,
+        tag: &str,
+        policy: &RetryPolicy,
+    ) -> Result<(u64, u32)> {
+        let req = json::obj(vec![
+            ("op", json::s("submit")),
+            ("config", cfg.to_json()),
+            ("tag", json::s(tag)),
+        ]);
+        let mut retries = 0u32;
+        loop {
+            let mut hint = None;
+            match self.call(&req) {
+                Ok(resp) if is_ok(&resp) => {
+                    let id = resp
+                        .get("id")
+                        .and_then(|n| n.as_f64())
+                        .map(|n| n as u64)
+                        .ok_or_else(|| anyhow!("submit response missing 'id'"))?;
+                    return Ok((id, retries));
+                }
+                Ok(resp) => {
+                    let reason = resp.get("reason").and_then(|r| r.as_str()).unwrap_or("");
+                    if !matches!(reason, "queue_full" | "rate_limited") {
+                        bail!(
+                            "server error: {}",
+                            resp.get("error")
+                                .and_then(|e| e.as_str())
+                                .unwrap_or("<no message>")
+                        );
+                    }
+                    hint = resp
+                        .get("retry_after_ms")
+                        .and_then(|n| n.as_f64())
+                        .map(|n| n as u64);
+                }
+                Err(e) => {
+                    // io-level failure (dropped/reset connection):
+                    // re-dial before the next attempt
+                    if retries >= policy.attempts {
+                        return Err(e.context(format!("submit gave up after {retries} retries")));
+                    }
+                    self.reconnect()?;
+                }
+            }
+            if retries >= policy.attempts {
+                bail!("submit gave up after {retries} retries (server still rejecting)");
+            }
+            retries += 1;
+            std::thread::sleep(retry_delay(policy, retries, hint));
+        }
+    }
+
+    /// Health probe (protocol v8): round-trips a no-op task through the
+    /// worker pool. Returns the full response (`status`, gauges).
+    pub fn health(&mut self) -> Result<Json> {
+        self.call_ok(&json::obj(vec![("op", json::s("health"))]))
     }
 
     /// Job view for one id.
@@ -508,6 +683,7 @@ mod tests {
             ("watch", true),
             ("list", false),
             ("metrics", false),
+            ("health", false),
             ("ping", false),
             ("shutdown", false),
         ] {
@@ -643,6 +819,61 @@ mod tests {
         let err = err_response("nope");
         assert!(!is_ok(&err));
         assert_eq!(err.get("error").unwrap().as_str().unwrap(), "nope");
+    }
+
+    #[test]
+    fn parses_v8_health_fields() {
+        let h = json::obj(vec![("op", json::s("health"))]);
+        assert!(matches!(
+            Request::from_json(&h).unwrap(),
+            Request::Health { wait_ms: 1_000 }
+        ));
+        let h = json::obj(vec![("op", json::s("health")), ("wait_ms", json::num(50.0))]);
+        assert!(matches!(
+            Request::from_json(&h).unwrap(),
+            Request::Health { wait_ms: 50 }
+        ));
+        let bad = json::obj(vec![("op", json::s("health")), ("wait_ms", json::num(-1.0))]);
+        assert!(Request::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn rejection_envelopes_carry_reason_and_retry_hint() {
+        let r = err_rejection("queue full", "queue_full", Some(250));
+        assert!(!is_ok(&r));
+        assert_eq!(r.get("error").unwrap().as_str().unwrap(), "queue full");
+        assert_eq!(r.get("reason").unwrap().as_str().unwrap(), "queue_full");
+        assert_eq!(r.get("retry_after_ms").unwrap().as_usize().unwrap(), 250);
+        // no hint for permanent rejections: the key is simply absent
+        let r = err_rejection("too wide", "oversized", None);
+        assert_eq!(r.get("reason").unwrap().as_str().unwrap(), "oversized");
+        assert!(r.get("retry_after_ms").is_none());
+    }
+
+    #[test]
+    fn retry_delay_is_bounded_deterministic_and_honors_the_hint() {
+        let p = RetryPolicy { attempts: 6, base_ms: 50, max_ms: 2_000, seed: 9 };
+        // deterministic: same (policy, attempt) → same delay
+        for attempt in 1..=6 {
+            assert_eq!(retry_delay(&p, attempt, None), retry_delay(&p, attempt, None));
+        }
+        // exponential base with jitter in [0, base/2]: delay ∈ [base, 1.5*base]
+        let mut prev_base = 0;
+        for attempt in 1..=6u32 {
+            let base = (50u64 << (attempt - 1)).min(2_000);
+            let d = retry_delay(&p, attempt, None).as_millis() as u64;
+            assert!(d >= base && d <= base + base / 2, "attempt {attempt}: {d}ms");
+            assert!(base >= prev_base);
+            prev_base = base;
+        }
+        // the ceiling holds for late attempts
+        assert!(retry_delay(&p, 30, None).as_millis() as u64 <= 3_000);
+        // a server hint replaces the exponential base
+        let d = retry_delay(&p, 1, Some(400)).as_millis() as u64;
+        assert!((400..=600).contains(&d), "{d}ms");
+        // different seeds jitter differently somewhere in the schedule
+        let q = RetryPolicy { seed: 10, ..p };
+        assert!((1..=6).any(|a| retry_delay(&p, a, None) != retry_delay(&q, a, None)));
     }
 
     #[test]

@@ -16,16 +16,50 @@
 //! without limit — and [`Scheduler::shutdown`] is graceful: it drains
 //! every queued job, then joins the workers, so no accepted job is ever
 //! dropped.
+//!
+//! Rejections are **typed** (protocol v8): [`Scheduler::submit`] returns
+//! a [`Reject`] carrying a stable machine-readable `reason`
+//! (`queue_full` / `shutting_down` / `oversized`) and, for transient
+//! conditions, a `retry_after_ms` backoff hint scaled by queue depth —
+//! the handler forwards both on the wire and feeds the
+//! `repro_rejected_total{reason}` counters. The scheduler also enforces
+//! each job's optional `timeout_s` wall-clock budget at epoch
+//! boundaries (overruns finalize as `failed: timeout`, releasing the
+//! slots) and injects [`FaultPlan`] worker panics for chaos testing.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-
-use anyhow::{bail, Result};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::experiment;
+use crate::serve::faults::FaultPlan;
 use crate::serve::registry::Registry;
 use crate::util::pool::TaskPool;
+
+/// A typed admission rejection (protocol v8). `reason` is the stable
+/// wire/metrics label; `retry_after_ms` is `Some` only for transient
+/// conditions a client should back off and retry.
+#[derive(Debug, Clone)]
+pub struct Reject {
+    pub reason: &'static str,
+    pub message: String,
+    pub retry_after_ms: Option<u64>,
+}
+
+impl Reject {
+    fn permanent(reason: &'static str, message: String) -> Reject {
+        Reject { reason, message, retry_after_ms: None }
+    }
+}
+
+impl std::fmt::Display for Reject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for Reject {}
 
 /// Worker pool + bounded FIFO of job ids + slot accounting.
 pub struct Scheduler {
@@ -40,6 +74,9 @@ struct Shared {
     slots: Mutex<SlotState>,
     slot_cv: Condvar,
     slots_total: usize,
+    /// Chaos schedule ([`FaultPlan::off`] in production): worker panics
+    /// injected at epoch boundaries, keyed by (job id, epoch).
+    faults: FaultPlan,
 }
 
 struct SlotState {
@@ -66,6 +103,16 @@ impl Scheduler {
     /// Spawn a pool of `workers` (≥1) threads over `registry` — also the
     /// slot budget — with at most `capacity` (≥1) jobs queued at a time.
     pub fn start(registry: Arc<Registry>, workers: usize, capacity: usize) -> Scheduler {
+        Self::start_with_faults(registry, workers, capacity, FaultPlan::off())
+    }
+
+    /// [`Scheduler::start`] with a chaos schedule (tests / `--faults`).
+    pub fn start_with_faults(
+        registry: Arc<Registry>,
+        workers: usize,
+        capacity: usize,
+        faults: FaultPlan,
+    ) -> Scheduler {
         let slots_total = workers.max(1);
         let shared = Arc::new(Shared {
             registry,
@@ -77,6 +124,7 @@ impl Scheduler {
             }),
             slot_cv: Condvar::new(),
             slots_total,
+            faults,
         });
         Scheduler {
             shared,
@@ -89,28 +137,39 @@ impl Scheduler {
     /// queue is full, or when the job's `threads` exceeds the pool's
     /// slot budget (it could never be scheduled — failing fast here is
     /// the fix for the historical queue deadlock).
-    pub fn submit(&self, config: ExperimentConfig, tag: &str) -> Result<u64> {
+    pub fn submit(&self, config: ExperimentConfig, tag: &str) -> Result<u64, Reject> {
         if self.pool.is_shutdown() {
-            bail!("server is shutting down, not accepting jobs");
+            return Err(Reject::permanent(
+                "shutting_down",
+                "server is shutting down, not accepting jobs".into(),
+            ));
         }
         let threads = config.threads.max(1);
         if threads > self.shared.slots_total {
-            bail!(
-                "job requires threads={threads} but the server pool has only {} slot(s); \
-                 lower the config's 'threads' or restart the server with more --workers",
-                self.shared.slots_total
-            );
+            return Err(Reject::permanent(
+                "oversized",
+                format!(
+                    "job requires threads={threads} but the server pool has only {} slot(s); \
+                     lower the config's 'threads' or restart the server with more --workers",
+                    self.shared.slots_total
+                ),
+            ));
         }
         {
             // check-and-admit atomically: concurrent submits cannot both
             // squeeze into the last capacity slot
             let mut st = self.shared.slots.lock().unwrap();
             if st.admitted >= self.capacity {
-                bail!(
-                    "job queue full ({} queued, capacity {})",
-                    st.admitted,
-                    self.capacity
-                );
+                return Err(Reject {
+                    reason: "queue_full",
+                    message: format!(
+                        "job queue full ({} queued, capacity {})",
+                        st.admitted, self.capacity
+                    ),
+                    // deeper queue → longer hint, so a retrying burst
+                    // spreads out instead of hammering a full server
+                    retry_after_ms: Some((100 + 25 * st.admitted as u64).min(5_000)),
+                });
             }
             st.admitted += 1;
         }
@@ -128,7 +187,7 @@ impl Scheduler {
             let Some(_slots) = SlotGuard::acquire(&sh, threads, &cancel) else {
                 return;
             };
-            run_job(&sh.registry, id);
+            run_job(&sh.registry, id, &sh.faults);
         });
         if !accepted {
             // shutdown raced the entry check: the job was registered but
@@ -137,7 +196,10 @@ impl Scheduler {
             self.shared
                 .registry
                 .finish_err(id, "server shut down before the job could start".into());
-            bail!("server is shutting down, not accepting jobs");
+            return Err(Reject::permanent(
+                "shutting_down",
+                "server is shutting down, not accepting jobs".into(),
+            ));
         }
         Ok(id)
     }
@@ -175,6 +237,24 @@ impl Scheduler {
     /// Jobs queued in the pool but not yet picked up by a worker.
     pub fn pool_pending(&self) -> usize {
         self.pool.pending()
+    }
+
+    /// The admission bound: max jobs queued at a time.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Whether the scheduler has begun (or finished) shutting down.
+    pub fn is_shutting_down(&self) -> bool {
+        self.pool.is_shutdown()
+    }
+
+    /// Health probe (protocol v8): round-trip a no-op task through the
+    /// worker pool, waiting up to `timeout`. `Some(latency)` proves a
+    /// worker picked work up; `None` means the pool is shut down or so
+    /// saturated/stuck that nothing drained the probe in time.
+    pub fn probe(&self, timeout: Duration) -> Option<Duration> {
+        self.pool.probe(timeout)
     }
 
     /// Graceful shutdown: refuse new submissions, drain every queued job,
@@ -235,7 +315,7 @@ impl Drop for SlotGuard<'_> {
 }
 
 /// Execute one job end-to-end, streaming progress into the registry.
-fn run_job(registry: &Arc<Registry>, id: u64) {
+fn run_job(registry: &Arc<Registry>, id: u64, faults: &FaultPlan) {
     // Cancelled-while-queued jobs are finalized inside mark_running.
     let Some((cfg, cancel)) = registry.mark_running(id) else {
         return;
@@ -245,6 +325,13 @@ fn run_job(registry: &Arc<Registry>, id: u64) {
     // epoch arrived too late — the run completed and must be recorded
     // (and persisted) as done, and a genuine failure keeps its error.
     let mut stopped_early = false;
+    // Wall-clock budget (protocol v8): checked between epochs only, so
+    // the budget bounds slot occupancy without ever touching the math
+    // of the epochs that complete.
+    let deadline = cfg
+        .timeout_s
+        .map(|s| (s, Instant::now() + Duration::from_secs_f64(s)));
+    let mut timed_out = false;
     // A panicking run must still finalize the job: TaskPool's worker
     // survives a panic, so without this catch the registry entry would
     // sit in `running` forever while clients poll it.
@@ -253,6 +340,15 @@ fn run_job(registry: &Arc<Registry>, id: u64) {
             // full epoch frame (protocol v6): advances progress, feeds
             // the watch ring, and refreshes the audit gauges
             registry.record_epoch(id, m);
+            if faults.worker_panic(id, m.epoch as u64) {
+                panic!("injected worker panic (job {id}, epoch {})", m.epoch);
+            }
+            if let Some((_, dl)) = deadline {
+                if Instant::now() >= dl {
+                    timed_out = true;
+                    return false;
+                }
+            }
             if cancel.load(Ordering::Relaxed) {
                 stopped_early = true;
                 return false;
@@ -261,6 +357,13 @@ fn run_job(registry: &Arc<Registry>, id: u64) {
         })
     }));
     match result {
+        Ok(Ok(_)) if timed_out => {
+            let (budget, _) = deadline.unwrap();
+            registry.finish_err(
+                id,
+                format!("timeout: exceeded the wall-clock budget of {budget}s"),
+            );
+        }
         Ok(Ok(r)) if stopped_early => registry.finish_cancelled(id, Some(&r)),
         Ok(Ok(r)) => registry.finish_ok(id, &r),
         Ok(Err(e)) => registry.finish_err(id, format!("{e:#}")),
@@ -402,6 +505,88 @@ mod tests {
         }
         assert_eq!(sched.queue_depth(), 0, "admitted count leaked");
         assert_eq!(sched.slots_free(), 2, "slots leaked");
+    }
+
+    #[test]
+    fn rejections_are_typed_with_retry_hints() {
+        let reg = Arc::new(Registry::new(None).unwrap());
+        let sched = Scheduler::start(reg.clone(), 1, 2);
+        // oversized: permanent, no retry hint
+        let mut cfg = quick_cfg(0, Policy::TopK);
+        cfg.threads = 3;
+        let rej = sched.submit(cfg, "big").unwrap_err();
+        assert_eq!(rej.reason, "oversized");
+        assert!(rej.retry_after_ms.is_none());
+        // queue_full: transient, hint present and bounded
+        let mut slow = quick_cfg(0, Policy::TopK);
+        slow.task = Task::Mnist;
+        slow.k = crate::coordinator::config::KSchedule::Constant(16);
+        slow.data_scale = 0.05;
+        slow.epochs = 10;
+        sched.submit(slow, "slow").unwrap();
+        let mut full = None;
+        for i in 0..8 {
+            if let Err(rej) = sched.submit(quick_cfg(i, Policy::RandK), "") {
+                full = Some(rej);
+                break;
+            }
+        }
+        let rej = full.expect("queue never filled");
+        assert_eq!(rej.reason, "queue_full");
+        let hint = rej.retry_after_ms.expect("queue_full must carry retry_after_ms");
+        assert!((1..=5_000).contains(&hint), "{hint}");
+        assert!(rej.to_string().contains("queue full"), "{rej}");
+        sched.shutdown();
+        // shutting_down: permanent
+        let rej = sched.submit(quick_cfg(9, Policy::TopK), "").unwrap_err();
+        assert_eq!(rej.reason, "shutting_down");
+        assert!(rej.retry_after_ms.is_none());
+    }
+
+    #[test]
+    fn wall_clock_timeout_finalizes_as_failed() {
+        let reg = Arc::new(Registry::new(None).unwrap());
+        let sched = Scheduler::start(reg.clone(), 1, 8);
+        // a multi-epoch job with a budget no epoch count can meet: the
+        // first epoch-boundary check after 1ms must finalize it
+        let mut cfg = quick_cfg(0, Policy::TopK);
+        cfg.epochs = 50;
+        cfg.timeout_s = Some(0.001);
+        let id = sched.submit(cfg, "budgeted").unwrap();
+        sched.shutdown();
+        let v = reg.view(id).unwrap();
+        assert_eq!(v.state, JobState::Failed, "{:?}", v.error);
+        let err = v.error.expect("failed job must carry an error");
+        assert!(err.contains("timeout"), "{err}");
+        assert!(err.contains("0.001"), "{err}");
+        // the timed-out job released its slot
+        assert_eq!(sched.slots_free(), 1);
+        // an untimed twin still completes: the budget is opt-in
+        let reg2 = Arc::new(Registry::new(None).unwrap());
+        let sched2 = Scheduler::start(reg2.clone(), 1, 8);
+        let id2 = sched2.submit(quick_cfg(0, Policy::TopK), "untimed").unwrap();
+        sched2.shutdown();
+        assert_eq!(reg2.view(id2).unwrap().state, JobState::Done);
+    }
+
+    #[test]
+    fn injected_panics_finalize_jobs_and_spare_the_pool() {
+        let reg = Arc::new(Registry::new(None).unwrap());
+        let always = FaultPlan { seed: 1, panic_per_mille: 1000, ..FaultPlan::off() };
+        let sched = Scheduler::start_with_faults(reg.clone(), 2, 16, always);
+        let ids: Vec<u64> = (0..4)
+            .map(|i| sched.submit(quick_cfg(i, Policy::TopK), "chaos").unwrap())
+            .collect();
+        sched.shutdown();
+        for id in ids {
+            let v = reg.view(id).unwrap();
+            assert_eq!(v.state, JobState::Failed, "job {id}");
+            let err = v.error.expect("panicked job must carry an error");
+            assert!(err.contains("injected worker panic"), "{err}");
+        }
+        // the panics killed jobs, not workers: every slot came back
+        assert_eq!(sched.slots_free(), 2, "slots leaked across injected panics");
+        assert_eq!(sched.queue_depth(), 0);
     }
 
     #[test]

@@ -22,6 +22,7 @@ use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::experiment::RunResult;
 use crate::metrics::{EpochMetrics, RunCurve};
 use crate::obs::{AuditLayerRecord, PhaseRollup};
+use crate::serve::faults::FaultPlan;
 use crate::tensor::quant::{AccumMode, TraceMode};
 use crate::util::json::{self, Json};
 
@@ -265,12 +266,22 @@ pub struct Registry {
     epoch_cv: Condvar,
     next_id: AtomicU64,
     dir: Option<PathBuf>,
+    /// Chaos schedule ([`FaultPlan::off`] in production): torn persist
+    /// writes injected per job id, exercising the startup
+    /// skip-and-recover path the atomic rename normally makes
+    /// unreachable.
+    faults: FaultPlan,
 }
 
 impl Registry {
     /// In-memory registry, optionally persisted under `dir` (created if
     /// missing; existing `job_*.maop` files are reloaded as done jobs).
     pub fn new(dir: Option<PathBuf>) -> Result<Registry> {
+        Self::with_faults(dir, FaultPlan::off())
+    }
+
+    /// [`Registry::new`] with a chaos schedule (tests / `--faults`).
+    pub fn with_faults(dir: Option<PathBuf>, faults: FaultPlan) -> Result<Registry> {
         let mut jobs = BTreeMap::new();
         let mut max_id = 0u64;
         if let Some(d) = &dir {
@@ -303,6 +314,7 @@ impl Registry {
             epoch_cv: Condvar::new(),
             next_id: AtomicU64::new(max_id + 1),
             dir,
+            faults,
         })
     }
 
@@ -470,7 +482,7 @@ impl Registry {
         };
         self.epoch_cv.notify_all();
         if let Some((path, tag)) = persist {
-            if let Err(e) = persist_job(&path, id, &tag, r) {
+            if let Err(e) = persist_job(&path, id, &tag, r, self.faults.torn_write(id)) {
                 eprintln!("[serve] persisting job {id} failed: {e:#}");
             }
         }
@@ -652,7 +664,7 @@ fn job_id_of(path: &Path) -> Option<u64> {
         .ok()
 }
 
-fn persist_job(path: &Path, id: u64, tag: &str, r: &RunResult) -> Result<()> {
+fn persist_job(path: &Path, id: u64, tag: &str, r: &RunResult, torn: bool) -> Result<()> {
     let mut cp = Checkpoint::new();
     cp.put_scalar("id", id as f32);
     cp.put_str("tag", tag);
@@ -668,6 +680,17 @@ fn persist_job(path: &Path, id: u64, tag: &str, r: &RunResult) -> Result<()> {
     // don't match the `job_<id>.maop` pattern)
     let tmp = path.with_extension("maop.tmp");
     cp.save(&tmp)?;
+    if torn {
+        // injected fault: publish the first half of the entry directly
+        // to the final path, as a crashed pre-rename writer (or external
+        // corruption) would — startup must skip-and-log this file while
+        // recovering every healthy sibling
+        let bytes = std::fs::read(&tmp)?;
+        std::fs::write(path, &bytes[..bytes.len() / 2])?;
+        let _ = std::fs::remove_file(&tmp);
+        eprintln!("[serve] fault: tore the persisted entry for job {id}");
+        return Ok(());
+    }
     std::fs::rename(&tmp, path)
         .with_context(|| format!("publishing {}", path.display()))
 }
@@ -900,6 +923,66 @@ mod tests {
         // new ids continue above the restored ones
         let next = reg2.submit(quick_cfg(8), "");
         assert!(next > first_id);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_entries_are_skipped_and_the_rest_recovered() {
+        let dir = std::env::temp_dir().join(format!("memaop_torn_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = quick_cfg(5);
+        let r = experiment::run(&cfg).unwrap();
+        let (healthy_id, torn_id);
+        {
+            let reg = Registry::new(Some(dir.clone())).unwrap();
+            healthy_id = reg.submit(cfg.clone(), "healthy");
+            reg.mark_running(healthy_id).unwrap();
+            reg.finish_ok(healthy_id, &r);
+            torn_id = reg.submit(cfg.clone(), "torn");
+            reg.mark_running(torn_id).unwrap();
+            reg.finish_ok(torn_id, &r);
+        }
+        // tear the second entry as a mid-write crash would have: keep
+        // only half the bytes at the final path
+        let torn_path = dir.join(format!("job_{torn_id:08}.maop"));
+        let bytes = std::fs::read(&torn_path).unwrap();
+        std::fs::write(&torn_path, &bytes[..bytes.len() / 2]).unwrap();
+        // restart: the healthy entry loads, the torn one is skipped —
+        // the whole registry must NOT fail over one bad file
+        let reg2 = Registry::new(Some(dir.clone())).unwrap();
+        assert_eq!(reg2.view(healthy_id).unwrap().state, JobState::Done);
+        assert!(reg2.view(torn_id).is_none(), "torn entry must not load");
+        assert_eq!(reg2.restored_count(), 1);
+        // the torn id is still counted: a new job can never reuse it
+        // (and silently overwrite the corpse)
+        let next = reg2.submit(cfg.clone(), "after");
+        assert!(next > torn_id, "id {next} reused under the torn id {torn_id}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_torn_writes_reproduce_the_skip_path() {
+        let dir = std::env::temp_dir().join(format!("memaop_fault_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        // torn=1000: every persist is torn, deterministically
+        let plan = FaultPlan { seed: 2, torn_per_mille: 1000, ..FaultPlan::off() };
+        let cfg = quick_cfg(6);
+        let r = experiment::run(&cfg).unwrap();
+        let id;
+        {
+            let reg = Registry::with_faults(Some(dir.clone()), plan).unwrap();
+            id = reg.submit(cfg.clone(), "chaos");
+            reg.mark_running(id).unwrap();
+            reg.finish_ok(id, &r);
+            // in-memory lifecycle is untouched by the torn persist
+            assert_eq!(reg.view(id).unwrap().state, JobState::Done);
+            assert_eq!(reg.result_of(id).unwrap().1.epochs.len(), 3);
+        }
+        // the on-disk entry is torn; restart skips it without failing
+        let reg2 = Registry::new(Some(dir.clone())).unwrap();
+        assert!(reg2.view(id).is_none());
+        assert_eq!(reg2.restored_count(), 0);
+        assert!(reg2.submit(cfg, "next") > id);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -2,26 +2,42 @@
 //! shutdown.
 //!
 //! One thread per connection reads newline-delimited JSON frames and
-//! answers through [`ServerState::handle`]; a malformed line gets an
-//! `ok:false` response and the connection stays open (framing is
+//! answers through [`ServerState::handle_from`]; a malformed line gets
+//! an `ok:false` response and the connection stays open (framing is
 //! line-based, so the stream re-synchronizes at the next newline). The
 //! listener runs non-blocking so the accept loop can poll the shutdown
 //! flag set by the `shutdown` op; on shutdown it stops accepting, drains
 //! every queued job through [`Scheduler::shutdown`], and returns.
+//!
+//! Resilience (protocol v8): the accept loop stops accepting at
+//! `max_connections` open sockets instead of spawning unboundedly;
+//! connection reads tick on a short timeout so a stalled client cannot
+//! pin its thread forever (`frame_timeout` abandons a half-sent frame,
+//! `idle_timeout` optionally closes quiet keep-alives) and so idle
+//! connections notice a graceful shutdown and close themselves. A
+//! [`FaultPlan`] can deterministically drop connections before a reply
+//! is written, for chaos testing the client retry path.
 
-use std::io::BufReader;
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::io::{BufReader, ErrorKind};
+use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::serve::handlers::{frame_error, ServerState};
+use crate::serve::faults::FaultPlan;
+use crate::serve::handlers::{Limits, ServerState};
 use crate::serve::protocol;
 use crate::serve::queue::Scheduler;
 use crate::serve::registry::Registry;
+use crate::util::json;
 use crate::util::pool;
+
+/// How often a blocked connection read wakes up to check the shutdown
+/// flag and the frame/idle deadlines.
+const READ_TICK: Duration = Duration::from_millis(200);
 
 /// Configuration of one server instance.
 #[derive(Debug, Clone)]
@@ -37,6 +53,23 @@ pub struct ServeOptions {
     pub queue_capacity: usize,
     /// Persist completed runs here (None = in-memory registry only).
     pub registry_dir: Option<PathBuf>,
+    /// Max simultaneous client connections; at the cap the accept loop
+    /// pauses instead of spawning more threads (TCP backlog applies
+    /// the backpressure).
+    pub max_connections: usize,
+    /// Sustained `submit` rate allowed per client IP (0.0 = unlimited).
+    pub rate_limit_per_sec: f64,
+    /// Submits a client may burst after sitting idle.
+    pub rate_limit_burst: f64,
+    /// Close a connection whose frame stays half-sent this long
+    /// (slow-loris defense; `Duration::ZERO` disables).
+    pub frame_timeout: Duration,
+    /// Close a connection with no traffic at all for this long
+    /// (`Duration::ZERO`, the default, keeps idle connections forever).
+    pub idle_timeout: Duration,
+    /// Deterministic fault injection (chaos tests); `FaultPlan::off()`
+    /// costs nothing on the hot path.
+    pub faults: FaultPlan,
 }
 
 impl Default for ServeOptions {
@@ -46,6 +79,12 @@ impl Default for ServeOptions {
             workers: 0,
             queue_capacity: 256,
             registry_dir: None,
+            max_connections: 256,
+            rate_limit_per_sec: 0.0,
+            rate_limit_burst: 8.0,
+            frame_timeout: Duration::from_secs(30),
+            idle_timeout: Duration::ZERO,
+            faults: FaultPlan::off(),
         }
     }
 }
@@ -54,26 +93,43 @@ impl Default for ServeOptions {
 pub struct Server {
     listener: TcpListener,
     state: Arc<ServerState>,
+    max_connections: usize,
+    frame_timeout: Duration,
+    idle_timeout: Duration,
+    faults: FaultPlan,
 }
 
 impl Server {
     /// Bind the listener, load/create the registry, start the scheduler.
     pub fn bind(opts: &ServeOptions) -> Result<Server> {
-        let registry = Arc::new(Registry::new(opts.registry_dir.clone())?);
+        let registry = Arc::new(Registry::with_faults(opts.registry_dir.clone(), opts.faults)?);
         let workers = if opts.workers == 0 {
             pool::default_workers()
         } else {
             opts.workers
         };
-        let scheduler = Scheduler::start(registry.clone(), workers, opts.queue_capacity.max(1));
+        let scheduler = Scheduler::start_with_faults(
+            registry.clone(),
+            workers,
+            opts.queue_capacity.max(1),
+            opts.faults,
+        );
         let listener = TcpListener::bind(&opts.addr)
             .with_context(|| format!("binding {}", opts.addr))?;
         listener
             .set_nonblocking(true)
             .context("setting listener non-blocking")?;
+        let limits = Limits {
+            rate_limit_per_sec: opts.rate_limit_per_sec,
+            rate_limit_burst: opts.rate_limit_burst,
+        };
         Ok(Server {
             listener,
-            state: Arc::new(ServerState::new(registry, scheduler)),
+            state: Arc::new(ServerState::with_limits(registry, scheduler, limits)),
+            max_connections: opts.max_connections.max(1),
+            frame_timeout: opts.frame_timeout,
+            idle_timeout: opts.idle_timeout,
+            faults: opts.faults,
         })
     }
 
@@ -89,23 +145,39 @@ impl Server {
 
     /// Serve until a client sends `shutdown`. Graceful: stops accepting,
     /// then drains every queued job before returning — no accepted job is
-    /// ever dropped. Connection threads exit on client EOF.
+    /// ever dropped. Connection threads exit on client EOF, on their
+    /// read deadlines, or when they notice the shutdown flag.
     pub fn run(self) -> Result<()> {
+        let open = Arc::new(AtomicUsize::new(0));
+        let mut conn_id: u64 = 0;
         loop {
             if self.state.shutdown_requested() {
                 break;
             }
+            if open.load(Ordering::SeqCst) >= self.max_connections {
+                // at the cap: let the kernel backlog hold new clients
+                // instead of spawning a thread per socket
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
             match self.listener.accept() {
-                Ok((stream, _peer)) => {
-                    // accepted sockets must block: connection threads do
-                    // plain line-buffered reads
+                Ok((stream, peer)) => {
+                    // accepted sockets block with a short read timeout:
+                    // connection threads poll shutdown + deadlines
                     stream
                         .set_nonblocking(false)
                         .context("setting connection blocking")?;
+                    conn_id += 1;
+                    let guard = ConnGuard::open(&open, &self.state);
                     let state = self.state.clone();
+                    let (ft, it, faults) = (self.frame_timeout, self.idle_timeout, self.faults);
+                    let id = conn_id;
                     std::thread::Builder::new()
                         .name("serve-conn".to_string())
-                        .spawn(move || serve_connection(&state, stream))
+                        .spawn(move || {
+                            let _guard = guard;
+                            serve_connection(&state, stream, peer.ip(), id, ft, it, &faults);
+                        })
                         .context("spawning connection thread")?;
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -115,39 +187,121 @@ impl Server {
             }
         }
         // Drain: every accepted job completes before we return. Open
-        // connections see submission errors and EOF once the process (or
-        // the caller holding the listener) goes away.
+        // connections notice the shutdown flag at their next read tick
+        // and close; late submits get `shutting_down` rejections.
         self.state.scheduler.shutdown();
         Ok(())
     }
 }
 
-/// Serve one connection until EOF. Never panics; I/O failures close the
-/// connection, request-level failures are `ok:false` responses.
-fn serve_connection(state: &ServerState, stream: TcpStream) {
+/// RAII connection accounting: decrements the accept-loop cap counter
+/// and the `repro_connections_open` gauge however the thread exits.
+struct ConnGuard {
+    open: Arc<AtomicUsize>,
+    state: Arc<ServerState>,
+}
+
+impl ConnGuard {
+    fn open(open: &Arc<AtomicUsize>, state: &Arc<ServerState>) -> ConnGuard {
+        open.fetch_add(1, Ordering::SeqCst);
+        state.connection_opened();
+        ConnGuard { open: open.clone(), state: state.clone() }
+    }
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.open.fetch_sub(1, Ordering::SeqCst);
+        self.state.connection_closed();
+    }
+}
+
+/// Serve one connection until EOF, deadline, or shutdown. Never panics;
+/// I/O failures close the connection, request-level failures are
+/// `ok:false` responses.
+///
+/// Frames are accumulated with `read_until`, which keeps partial bytes
+/// in the buffer across read timeouts — a slow sender loses nothing at
+/// a tick, but a sender that stalls past `frame_timeout` is cut off.
+fn serve_connection(
+    state: &ServerState,
+    stream: TcpStream,
+    peer: IpAddr,
+    conn_id: u64,
+    frame_timeout: Duration,
+    idle_timeout: Duration,
+    faults: &FaultPlan,
+) {
+    use std::io::BufRead;
     stream.set_nodelay(true).ok();
+    if stream.set_read_timeout(Some(READ_TICK)).is_err() {
+        return;
+    }
     let Ok(read_half) = stream.try_clone() else {
         return;
     };
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut frames: u64 = 0;
+    let mut idle_t0 = Instant::now();
+    // set at the first read tick that sees a partial frame; cleared
+    // when the frame completes
+    let mut frame_t0: Option<Instant> = None;
     loop {
-        match protocol::read_json(&mut reader) {
-            Ok(Some(frame)) => {
-                let resp = state.handle(&frame);
+        match reader.read_until(b'\n', &mut buf) {
+            // clean EOF: the client hung up
+            Ok(0) => return,
+            Ok(_) if buf.ends_with(b"\n") => {
+                frames += 1;
+                let line = String::from_utf8_lossy(&buf).into_owned();
+                buf.clear();
+                frame_t0 = None;
+                idle_t0 = Instant::now();
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                // bad JSON on one line: report and keep the connection —
+                // the next line is a fresh frame
+                let resp = match json::parse(trimmed) {
+                    Ok(frame) => state.handle_from(&frame, Some(peer)),
+                    Err(e) => protocol::err_response(&format!("parsing frame: {e}")),
+                };
+                // injected drop: vanish before replying, so the client
+                // exercises its reconnect-and-retry path
+                if faults.drop_connection(conn_id, frames) {
+                    eprintln!("[serve] fault: dropping connection {conn_id} before reply");
+                    return;
+                }
                 if protocol::write_json(&mut writer, &resp).is_err() {
                     return;
                 }
             }
-            // clean EOF: the client hung up
-            Ok(None) => return,
-            // bad JSON on one line: report and keep the connection — the
-            // next line is a fresh frame
-            Err(e) => {
-                if protocol::write_json(&mut writer, &frame_error(&e)).is_err() {
+            // EOF mid-frame (no trailing newline): nothing to answer
+            Ok(_) => return,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                // read tick: partial bytes (if any) stayed in `buf`
+                if state.shutdown_requested() {
                     return;
                 }
+                if buf.is_empty() {
+                    frame_t0 = None;
+                    if idle_timeout > Duration::ZERO && idle_t0.elapsed() >= idle_timeout {
+                        return;
+                    }
+                } else {
+                    let t0 = *frame_t0.get_or_insert_with(Instant::now);
+                    if frame_timeout > Duration::ZERO && t0.elapsed() >= frame_timeout {
+                        let resp = protocol::err_response(
+                            "frame timeout: partial frame abandoned, closing connection",
+                        );
+                        let _ = protocol::write_json(&mut writer, &resp);
+                        return;
+                    }
+                }
             }
+            Err(_) => return,
         }
     }
 }
@@ -158,7 +312,6 @@ mod tests {
     use crate::aop::Policy;
     use crate::coordinator::config::{ExperimentConfig, Task};
     use crate::serve::protocol::Client;
-    use crate::util::json;
 
     fn quick_cfg(seed: u64) -> ExperimentConfig {
         let mut cfg = ExperimentConfig::preset(Task::Energy);
@@ -171,12 +324,17 @@ mod tests {
     }
 
     fn spawn_server() -> (String, std::thread::JoinHandle<Result<()>>) {
-        let opts = ServeOptions {
+        spawn_server_with(ServeOptions {
             addr: "127.0.0.1:0".to_string(),
             workers: 2,
             queue_capacity: 16,
-            registry_dir: None,
-        };
+            ..ServeOptions::default()
+        })
+    }
+
+    fn spawn_server_with(
+        opts: ServeOptions,
+    ) -> (String, std::thread::JoinHandle<Result<()>>) {
         let server = Server::bind(&opts).unwrap();
         let addr = server.local_addr().unwrap().to_string();
         let handle = std::thread::spawn(move || server.run());
@@ -228,6 +386,102 @@ mod tests {
 
         let mut c = Client::connect(&addr).unwrap();
         c.shutdown().unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn stalled_partial_frame_is_cut_off_but_slow_complete_frames_survive() {
+        use std::io::{BufRead, Write};
+        let (addr, handle) = spawn_server_with(ServeOptions {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            queue_capacity: 16,
+            frame_timeout: Duration::from_millis(600),
+            ..ServeOptions::default()
+        });
+
+        // a frame split across writes — but finished well inside the
+        // deadline — must not lose its first half at a read tick
+        let mut slow = TcpStream::connect(&addr).unwrap();
+        slow.write_all(b"{\"op\":").unwrap();
+        std::thread::sleep(Duration::from_millis(450));
+        slow.write_all(b"\"ping\"}\n").unwrap();
+        let mut reader = BufReader::new(slow.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(
+            crate::serve::protocol::is_ok(&json::parse(line.trim()).unwrap()),
+            "split frame must reassemble: {line}"
+        );
+
+        // a slow-loris sender that never finishes the frame is told off
+        // and disconnected
+        let mut loris = TcpStream::connect(&addr).unwrap();
+        loris.write_all(b"{\"op\":\"pi").unwrap();
+        let mut reader = BufReader::new(loris.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = json::parse(line.trim()).unwrap();
+        assert!(!crate::serve::protocol::is_ok(&resp));
+        assert!(
+            resp.get("error").unwrap().as_str().unwrap().contains("frame timeout"),
+            "{line}"
+        );
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "connection must be closed");
+
+        let mut c = Client::connect(&addr).unwrap();
+        c.shutdown().unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn shutdown_closes_idle_keepalive_connections() {
+        use std::io::BufRead;
+        let (addr, handle) = spawn_server();
+        // an idle keep-alive connection that never sends anything
+        let idle = TcpStream::connect(&addr).unwrap();
+        let mut c = Client::connect(&addr).unwrap();
+        c.shutdown().unwrap();
+        // run() returns even though `idle` never hung up: the connection
+        // thread noticed the flag at its next read tick
+        handle.join().unwrap().unwrap();
+        // and the idle socket sees EOF shortly after
+        idle.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut reader = BufReader::new(idle);
+        let mut line = String::new();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "idle conn must get EOF");
+    }
+
+    #[test]
+    fn connection_cap_applies_accept_backpressure() {
+        let (addr, handle) = spawn_server_with(ServeOptions {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            queue_capacity: 16,
+            max_connections: 1,
+            ..ServeOptions::default()
+        });
+        // first client occupies the only slot
+        let mut a = Client::connect(&addr).unwrap();
+        a.ping().unwrap();
+        // a second TCP connect succeeds (kernel backlog) but the server
+        // won't answer it until the first connection closes
+        let mut b = Client::connect(&addr).unwrap();
+        let t0 = Instant::now();
+        let release = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(700));
+            drop(a);
+        });
+        let pong = b.ping().unwrap();
+        assert!(pong.get("protocol").is_some());
+        assert!(
+            t0.elapsed() >= Duration::from_millis(300),
+            "second client was served before the cap freed up ({:?})",
+            t0.elapsed()
+        );
+        release.join().unwrap();
+        b.shutdown().unwrap();
         handle.join().unwrap().unwrap();
     }
 }

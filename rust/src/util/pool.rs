@@ -167,6 +167,37 @@ impl TaskPool {
         true
     }
 
+    /// Liveness probe (serve health op): submit a no-op task and wait up
+    /// to `timeout` for a worker to run it. `Some(latency)` proves the
+    /// pool is alive and draining; `None` means it is shut down, or so
+    /// saturated or wedged that nothing picked the probe up in time —
+    /// the serve tier reports that as `degraded`. The probe task is a
+    /// plain FIFO entry: it never jumps the queue, so the latency is an
+    /// honest sample of current queue delay.
+    pub fn probe(&self, timeout: std::time::Duration) -> Option<std::time::Duration> {
+        let t0 = std::time::Instant::now();
+        let done = Arc::new((Mutex::new(false), Condvar::new()));
+        let signal = done.clone();
+        if !self.submit(move || {
+            let (flag, cv) = &*signal;
+            *flag.lock().unwrap() = true;
+            cv.notify_all();
+        }) {
+            return None;
+        }
+        let (flag, cv) = &*done;
+        let mut ran = flag.lock().unwrap();
+        while !*ran {
+            let elapsed = t0.elapsed();
+            if elapsed >= timeout {
+                return None;
+            }
+            let (guard, _) = cv.wait_timeout(ran, timeout - elapsed).unwrap();
+            ran = guard;
+        }
+        Some(t0.elapsed())
+    }
+
     /// Refuse new tasks, drain the queue, join the workers. Idempotent.
     pub fn shutdown(&self) {
         {
@@ -326,6 +357,29 @@ mod tests {
         });
         pool.shutdown();
         assert_eq!(hits.load(Ordering::Relaxed), 1, "worker died with the panic");
+    }
+
+    #[test]
+    fn probe_round_trips_an_idle_pool_and_times_out_a_wedged_one() {
+        use std::time::Duration;
+        let pool = TaskPool::new("probe", 1);
+        // idle pool: the probe comes back quickly
+        let latency = pool.probe(Duration::from_secs(5)).expect("idle pool must answer");
+        assert!(latency < Duration::from_secs(5));
+        // wedge the single worker: the probe queues behind it and the
+        // bounded wait reports the pool degraded instead of hanging
+        let release = Arc::new(AtomicBool::new(false));
+        let r = release.clone();
+        pool.submit(move || {
+            while !r.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+        assert!(pool.probe(Duration::from_millis(50)).is_none(), "wedged pool answered");
+        release.store(true, Ordering::Relaxed);
+        pool.shutdown();
+        // a shut-down pool refuses the probe outright
+        assert!(pool.probe(Duration::from_millis(10)).is_none());
     }
 
     #[test]

@@ -20,13 +20,19 @@ fn spawn_server(
     workers: usize,
     dir: Option<PathBuf>,
 ) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
-    let server = Server::bind(&ServeOptions {
+    spawn_server_opts(ServeOptions {
         addr: "127.0.0.1:0".to_string(),
         workers,
         queue_capacity: 128,
         registry_dir: dir,
+        ..ServeOptions::default()
     })
-    .expect("bind server");
+}
+
+fn spawn_server_opts(
+    opts: ServeOptions,
+) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let server = Server::bind(&opts).expect("bind server");
     let addr = server.local_addr().expect("local addr").to_string();
     (addr, std::thread::spawn(move || server.run()))
 }
@@ -457,4 +463,358 @@ fn cancellation_and_queue_ordering() {
     assert!(c.cancel(victim).is_err());
 
     shutdown(&addr, handle);
+}
+
+/// A deliberately slower config that holds a worker for a while.
+fn slow_cfg(seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset(Task::Mnist);
+    cfg.policy = Policy::TopK;
+    cfg.k = KSchedule::Constant(16);
+    cfg.memory = true;
+    cfg.data_scale = 0.05;
+    cfg.epochs = 15;
+    cfg.seed = seed;
+    cfg.backend = Backend::Native;
+    cfg
+}
+
+fn submit_frame(cfg: &ExperimentConfig, tag: &str) -> mem_aop_gd::util::json::Json {
+    use mem_aop_gd::util::json::{self};
+    json::obj(vec![
+        ("op", json::s("submit")),
+        ("config", cfg.to_json()),
+        ("tag", json::s(tag)),
+    ])
+}
+
+#[test]
+fn queue_saturation_degrades_health_and_rejects_with_retry_hints() {
+    use mem_aop_gd::serve::RetryPolicy;
+    use mem_aop_gd::util::json::{self};
+
+    // one worker, one queue slot: saturation is two submits away
+    let (addr, handle) = spawn_server_opts(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        queue_capacity: 1,
+        ..ServeOptions::default()
+    });
+    let mut c = Client::connect(&addr).expect("connect");
+
+    // a fresh server is healthy, and the probe round-trips the pool
+    let h = c.health().expect("health");
+    assert_eq!(h.get("status").and_then(|s| s.as_str()), Some("ok"));
+    assert_eq!(h.get("pool_alive").and_then(|b| b.as_bool()), Some(true));
+    assert!(h.get("probe_ms").and_then(|n| n.as_f64()).unwrap() >= 0.0);
+    assert_eq!(h.get("queue_capacity").and_then(|n| n.as_usize()), Some(1));
+
+    // hold the worker, then fill the single queue slot
+    let slow_id = c.submit(&slow_cfg(99), "slow").expect("submit slow");
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    loop {
+        let s = c.status(slow_id).expect("status");
+        if s.get("state").and_then(|v| v.as_str()) == Some("running") {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "slow job never started");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let queued_id = c.submit(&native_cfg(1), "queued").expect("submit queued");
+
+    // the queue is at capacity: health degrades...
+    let h = c
+        .call(&json::obj(vec![("op", json::s("health")), ("wait_ms", json::num(500.0))]))
+        .expect("health at capacity");
+    assert_eq!(h.get("status").and_then(|s| s.as_str()), Some("degraded"), "{}", h.dump());
+    assert_eq!(h.get("queue_depth").and_then(|n| n.as_usize()), Some(1));
+
+    // ...and the next submit is a structured queue_full rejection with a
+    // usable retry hint, not a hang or a bare error string
+    let r = c.call(&submit_frame(&native_cfg(2), "overflow")).expect("call");
+    assert_eq!(r.get("ok").and_then(|b| b.as_bool()), Some(false));
+    assert_eq!(r.get("reason").and_then(|s| s.as_str()), Some("queue_full"), "{}", r.dump());
+    let hint = r.get("retry_after_ms").and_then(|n| n.as_usize()).expect("retry hint");
+    assert!(hint > 0 && hint <= 5_000, "hint {hint}ms");
+    assert!(
+        r.get("error").and_then(|e| e.as_str()).unwrap().contains("queue full"),
+        "{}",
+        r.dump()
+    );
+
+    // a retrying client rides out the saturation: cancel the *running*
+    // job shortly after the retries start — it stops at the next epoch
+    // boundary, the worker drains the queued job, and the queue frees up
+    let addr2 = addr.clone();
+    let canceller = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(300));
+        let mut c2 = Client::connect(&addr2).expect("connect canceller");
+        let _ = c2.cancel(slow_id);
+    });
+    let policy = RetryPolicy { attempts: 12, base_ms: 50, max_ms: 500, seed: 42 };
+    let (retried_id, retries) = c
+        .submit_with_retry(&native_cfg(3), "retried", &policy)
+        .expect("retrying submit must eventually land");
+    assert!(retries >= 1, "the first attempt hit a full queue");
+    canceller.join().unwrap();
+
+    // everything drains: the quick jobs complete, the slow one stopped
+    // at an epoch boundary (or finished just before the cancel landed)
+    for id in [queued_id, retried_id] {
+        let job = c.wait(id, Duration::from_secs(300)).expect("wait");
+        assert_eq!(job.get("state").and_then(|s| s.as_str()), Some("done"), "{}", job.dump());
+    }
+    let slow = c.wait(slow_id, Duration::from_secs(300)).expect("wait slow");
+    assert!(
+        matches!(slow.get("state").and_then(|s| s.as_str()), Some("cancelled") | Some("done")),
+        "{}",
+        slow.dump()
+    );
+    let h = c.health().expect("health after drain");
+    assert_eq!(h.get("status").and_then(|s| s.as_str()), Some("ok"));
+
+    // the rejection surfaced in the Prometheus scrape
+    let text = c.metrics_prometheus().expect("prometheus");
+    assert!(text.contains("# TYPE repro_rejected_total counter"), "{text}");
+    assert!(!text.contains("repro_rejected_total{reason=\"queue_full\"} 0\n"), "{text}");
+    assert!(text.contains("repro_health_status 1\n"), "{text}");
+
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn rate_limited_submits_carry_hints_and_the_client_retries_through() {
+    use mem_aop_gd::serve::RetryPolicy;
+
+    let (addr, handle) = spawn_server_opts(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        queue_capacity: 128,
+        rate_limit_per_sec: 2.0,
+        rate_limit_burst: 2.0,
+        ..ServeOptions::default()
+    });
+    let mut c = Client::connect(&addr).expect("connect");
+
+    // the burst budget admits two, the third bounces with a hint
+    c.submit(&native_cfg(0), "rl-0").expect("submit 0");
+    c.submit(&native_cfg(1), "rl-1").expect("submit 1");
+    let r = c.call(&submit_frame(&native_cfg(2), "rl-2")).expect("call");
+    assert_eq!(r.get("ok").and_then(|b| b.as_bool()), Some(false), "{}", r.dump());
+    assert_eq!(r.get("reason").and_then(|s| s.as_str()), Some("rate_limited"));
+    let hint = r.get("retry_after_ms").and_then(|n| n.as_usize()).expect("hint");
+    assert!(hint >= 1 && hint <= 500, "hint {hint}ms at 2 tokens/s");
+
+    // non-submit ops are never rate limited
+    c.ping().expect("ping");
+    c.list().expect("list");
+
+    // the retrying client honors the hint and lands once a token refills
+    let policy = RetryPolicy { seed: 7, ..RetryPolicy::default() };
+    let (id, retries) =
+        c.submit_with_retry(&native_cfg(2), "rl-2", &policy).expect("retry through");
+    assert!(retries >= 1, "the limiter must have pushed back at least once");
+    let job = c.wait(id, Duration::from_secs(120)).expect("wait");
+    assert_eq!(job.get("state").and_then(|s| s.as_str()), Some("done"));
+
+    let text = c.metrics_prometheus().expect("prometheus");
+    assert!(!text.contains("repro_rejected_total{reason=\"rate_limited\"} 0\n"), "{text}");
+
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn stalled_client_hits_the_frame_deadline_without_blocking_others() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let (addr, handle) = spawn_server_opts(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        queue_capacity: 16,
+        frame_timeout: Duration::from_millis(500),
+        ..ServeOptions::default()
+    });
+
+    // a client that sends half a frame and stalls forever
+    let mut loris = TcpStream::connect(&addr).expect("connect stalled");
+    loris.write_all(b"{\"op\":\"sub").expect("partial write");
+
+    // a healthy client on another connection is completely unaffected
+    let mut c = Client::connect(&addr).expect("connect healthy");
+    let id = c.submit(&native_cfg(0), "healthy").expect("submit");
+    let job = c.wait(id, Duration::from_secs(120)).expect("wait");
+    assert_eq!(job.get("state").and_then(|s| s.as_str()), Some("done"));
+
+    // the stalled connection was told off and closed
+    let mut reader = BufReader::new(loris.try_clone().expect("clone"));
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("read deadline response");
+    assert!(line.contains("frame timeout"), "{line}");
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).expect("read eof"), 0, "must be closed");
+
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn wall_clock_timeout_fails_the_job_and_frees_its_slot() {
+    let (addr, handle) = spawn_server(1, None);
+    let mut c = Client::connect(&addr).expect("connect");
+
+    // a budget far below what 15 mnist epochs need: the job must be
+    // finalized as failed at an epoch boundary, not run to completion
+    let mut cfg = slow_cfg(5);
+    cfg.timeout_s = Some(0.02);
+    let id = c.submit(&cfg, "budgeted").expect("submit");
+    let job = c.wait(id, Duration::from_secs(120)).expect("wait");
+    assert_eq!(job.get("state").and_then(|s| s.as_str()), Some("failed"), "{}", job.dump());
+    let err = job.get("error").and_then(|e| e.as_str()).unwrap_or("");
+    assert!(err.contains("timeout") && err.contains("0.02"), "{err}");
+
+    // the single worker slot was released: an untimed job runs to done
+    let id2 = c.submit(&native_cfg(0), "after").expect("submit after");
+    let job2 = c.wait(id2, Duration::from_secs(120)).expect("wait after");
+    assert_eq!(job2.get("state").and_then(|s| s.as_str()), Some("done"));
+
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn chaos_soak_leaves_no_stuck_jobs_and_completions_stay_bit_identical() {
+    use mem_aop_gd::serve::{FaultPlan, RetryPolicy};
+    use mem_aop_gd::util::json::Json;
+    use std::time::Instant;
+
+    let dir = std::env::temp_dir().join(format!("memaop_serve_chaos_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // every fault family at once: worker panics at epoch boundaries,
+    // torn registry writes, connections dropped before replies
+    let faults = FaultPlan::parse("seed=7,panic=150,torn=250,drop=60").expect("fault spec");
+    let (addr, handle) = spawn_server_opts(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 4,
+        queue_capacity: 128,
+        registry_dir: Some(dir.clone()),
+        faults,
+        ..ServeOptions::default()
+    });
+
+    // a 64-job burst over 8 connections, submitted with the retrying
+    // client (dropped connections re-dial; duplicate submits are fine —
+    // determinism makes the twin train the identical curve)
+    const JOBS: usize = 64;
+    const CONNS: usize = 8;
+    std::thread::scope(|scope| {
+        for t in 0..CONNS {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let policy = RetryPolicy { seed: t as u64, ..RetryPolicy::default() };
+                let mut c = Client::connect(&addr).expect("connect");
+                for i in (0..JOBS).filter(|i| i % CONNS == t) {
+                    c.submit_with_retry(&native_cfg(i), &format!("chaos-{i}"), &policy)
+                        .expect("submit under chaos");
+                }
+            });
+        }
+    });
+
+    // drain resiliently: list until nothing is queued or running (a
+    // dropped reply just means reconnect and ask again)
+    let mut c = Client::connect(&addr).expect("connect");
+    let deadline = Instant::now() + Duration::from_secs(300);
+    let views: Vec<Json> = loop {
+        let views = match c.list() {
+            Ok(v) => v,
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(50));
+                c = Client::connect(&addr).expect("reconnect");
+                continue;
+            }
+        };
+        let live = views
+            .iter()
+            .filter(|v| {
+                matches!(
+                    v.get("state").and_then(|s| s.as_str()),
+                    Some("queued") | Some("running")
+                )
+            })
+            .count();
+        if live == 0 && views.len() >= JOBS {
+            break views;
+        }
+        assert!(Instant::now() < deadline, "jobs stuck under chaos ({live} live)");
+        std::thread::sleep(Duration::from_millis(100));
+    };
+
+    // zero stuck jobs; every job is done or failed-by-injection, and
+    // every completed job's curve is bit-identical to its fault-free twin
+    let mut done = 0usize;
+    let mut failed = 0usize;
+    let mut verified = std::collections::BTreeSet::new();
+    for v in &views {
+        let id = v.get("id").and_then(|n| n.as_usize()).unwrap() as u64;
+        let tag = v.get("tag").and_then(|s| s.as_str()).unwrap_or("").to_string();
+        let i: usize = tag.strip_prefix("chaos-").expect("chaos tag").parse().unwrap();
+        match v.get("state").and_then(|s| s.as_str()).unwrap_or("?") {
+            "done" => {
+                done += 1;
+                if verified.insert(i) {
+                    let (cfg, curve) = loop {
+                        match c.result(id) {
+                            Ok(r) => break r,
+                            Err(_) => c = Client::connect(&addr).expect("reconnect"),
+                        }
+                    };
+                    assert_eq!(cfg.seed, i as u64);
+                    let direct = experiment::run(&native_cfg(i)).expect("direct twin");
+                    assert_bit_identical(&curve, &direct.curve, &format!("chaos job {id}"));
+                }
+            }
+            "failed" => {
+                failed += 1;
+                let err = v.get("error").and_then(|e| e.as_str()).unwrap_or("");
+                assert!(
+                    err.contains("injected worker panic"),
+                    "job {id} failed for a non-injected reason: {err}"
+                );
+            }
+            other => panic!("job {id} left in state {other}"),
+        }
+    }
+    assert!(done > 0, "no jobs completed under chaos");
+    assert!(failed > 0, "panic rate 150/1000 per epoch should fail some of {JOBS} jobs");
+
+    // shut down resiliently (the shutdown reply itself can be dropped)
+    loop {
+        match Client::connect(&addr) {
+            Ok(mut sc) => {
+                if sc.shutdown().is_ok() {
+                    break;
+                }
+            }
+            Err(_) => break, // listener already gone: the flag landed
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    handle.join().expect("server thread").expect("server run");
+
+    // restart over the same registry, faults off: torn entries were
+    // skipped at load, every restored job is a healthy completion
+    let (addr2, handle2) = spawn_server(2, Some(dir.clone()));
+    let mut c2 = Client::connect(&addr2).expect("connect restarted");
+    let restored = c2.list().expect("list restored");
+    assert!(
+        restored.len() <= done,
+        "restored {} jobs but only {done} completed",
+        restored.len()
+    );
+    for v in &restored {
+        assert_eq!(v.get("state").and_then(|s| s.as_str()), Some("done"), "{}", v.dump());
+        assert_eq!(v.get("restored").and_then(|b| b.as_bool()), Some(true));
+    }
+    shutdown(&addr2, handle2);
+
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -2,7 +2,7 @@
 """Bench trajectory recorder + regression gate (ROADMAP: BENCH trajectory).
 
 Run from the repo root after `cargo bench --bench kernels` has written
-BENCH_2.json ... BENCH_6.json, BENCH_8.json and BENCH_9.json:
+BENCH_2.json ... BENCH_6.json and BENCH_8.json ... BENCH_10.json:
 
   * appends each record (stamped with UTC time + git rev + host) to
     `bench/history/BENCH_N.jsonl` — the committed machine-readable
@@ -36,11 +36,20 @@ RECORDS = [
     "BENCH_6.json",
     "BENCH_8.json",
     "BENCH_9.json",
+    "BENCH_10.json",
 ]
 # keys holding a {"rows_per_sec": ...} object we track; records missing
 # a series simply skip it (BENCH_8 carries the audit_* series instead
-# of serial/threads4)
-SERIES = ["serial", "threads4", "audit_off", "audit_on", "audit_on_threads4"]
+# of serial/threads4, BENCH_10 carries serve_submit — end-to-end
+# jobs/sec of the admission-controlled submit burst)
+SERIES = [
+    "serial",
+    "threads4",
+    "audit_off",
+    "audit_on",
+    "audit_on_threads4",
+    "serve_submit",
+]
 REGRESSION_FRAC = 0.15
 
 
