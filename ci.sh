@@ -16,8 +16,16 @@ fast=0
 echo "==> cargo fmt --check"
 cargo fmt --check
 
+# Determinism-contract lints (README "Static analysis"): RNG stream-domain
+# registry, hot-path purity, wire-output ordering, SAFETY coverage,
+# metric-name registry. Runs before the build — a contract violation
+# should fail in seconds, not after a release compile.
+echo "==> repro-lint (determinism-contract static analysis)"
+cargo run -q -p repro-lint -- rust/src
+
 echo "==> cargo clippy -- -D warnings"
 cargo clippy --all-targets -- -D warnings
+cargo clippy -p repro-lint --all-targets -- -D warnings
 
 # the PJRT client only compiles under the `hlo` feature (against the
 # vendor/xla stub) — keep it from bit-rotting even though the default
@@ -32,6 +40,12 @@ fi
 
 echo "==> cargo test -q"
 cargo test -q
+
+# The linter's own suite: fixture-backed rule tests plus the
+# self-clean run over rust/src (the root package's `cargo test` does
+# not cover workspace members).
+echo "==> cargo test -q -p repro-lint"
+cargo test -q -p repro-lint
 
 # Multi-thread determinism gate: the exec test suite asserts bit-identical
 # curves/weights for threads ∈ {1,2,4,7}; running it under two different
@@ -310,6 +324,58 @@ if command -v python3 >/dev/null 2>&1; then
   python3 tools/bench_gate.py
 else
   echo "python3 not found — bench trajectory skipped"
+fi
+
+# -- Opt-in dynamic-analysis lanes (README "Static analysis") ---------------
+#
+# MIRI=1  — interpret the raw-pointer-heavy unit tests under Miri: the
+#           RowBlocks disjoint-block splitter (exec::shard) and the
+#           TraceBuf quantized-trace codecs (tensor::quant). Catches UB
+#           the type system can't: aliasing violations, OOB, invalid
+#           values.
+# SAN=1   — ThreadSanitizer over the condvar-driven worker pools
+#           (util::pool, exec::pool): data races in the
+#           park/wake/generation logic. Needs -Zbuild-std, so the
+#           std used by the test is itself instrumented.
+#
+# Both need a nightly toolchain with the right components; the offline
+# CI box may not have one, so a missing toolchain skips loudly instead
+# of failing.
+if [ "${MIRI:-0}" = "1" ]; then
+  if command -v rustup >/dev/null 2>&1 \
+    && rustup toolchain list 2>/dev/null | grep -q nightly \
+    && rustup component list --toolchain nightly 2>/dev/null \
+       | grep -q "miri.*(installed)"; then
+    echo "==> MIRI lane: exec::shard + tensor::quant under Miri"
+    cargo +nightly miri test --lib -- exec::shard tensor::quant
+  else
+    echo "############################################################"
+    echo "# MIRI=1 requested but no nightly toolchain with the miri  #"
+    echo "# component is installed — LANE SKIPPED, NOT PASSED.       #"
+    echo "#   rustup toolchain install nightly                       #"
+    echo "#   rustup +nightly component add miri                     #"
+    echo "############################################################"
+  fi
+fi
+
+if [ "${SAN:-0}" = "1" ]; then
+  if command -v rustup >/dev/null 2>&1 \
+    && rustup toolchain list 2>/dev/null | grep -q nightly \
+    && rustup component list --toolchain nightly 2>/dev/null \
+       | grep -q "rust-src.*(installed)"; then
+    host="$(rustc -vV | sed -n 's/^host: //p')"
+    echo "==> SAN lane: ThreadSanitizer over util::pool + exec::pool ($host)"
+    RUSTFLAGS="-Zsanitizer=thread" RUSTDOCFLAGS="-Zsanitizer=thread" \
+      cargo +nightly test -Zbuild-std --target "$host" --lib -- \
+      util::pool exec::pool
+  else
+    echo "############################################################"
+    echo "# SAN=1 requested but no nightly toolchain with rust-src   #"
+    echo "# is installed — LANE SKIPPED, NOT PASSED.                 #"
+    echo "#   rustup toolchain install nightly                       #"
+    echo "#   rustup +nightly component add rust-src                 #"
+    echo "############################################################"
+  fi
 fi
 
 echo "CI green."

@@ -16,6 +16,9 @@
 //! make artifacts && cargo run --release --example e2e_train
 //! ```
 
+// Clock reads are deliberate here (wall-clock run duration reporting) — see clippy.toml.
+#![allow(clippy::disallowed_methods)]
+
 use anyhow::Result;
 use mem_aop_gd::coordinator::mlp_driver::{train_mlp, MlpVariant};
 use mem_aop_gd::data::digits;

@@ -15,6 +15,9 @@
 //! Point `--addr` at a running `repro serve` instance to hammer that
 //! instead (the in-process server is then skipped).
 
+// Clock reads are deliberate here (client-side latency measurement) — see clippy.toml.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Result};

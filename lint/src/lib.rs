@@ -1,0 +1,1164 @@
+//! repro-lint — determinism-contract static analysis for the
+//! Mem-AOP-GD tree (README "Static analysis").
+//!
+//! The reproduction's auditability story rests on invariants no
+//! compiler checks: RNG stream domains must never collide (R1), the
+//! step hot path must not read clocks, allocate, or hash (R2),
+//! wire-visible iteration must be explicitly ordered (R3), every
+//! `unsafe` must carry a `// SAFETY:` argument (R4), and every
+//! exported `repro_*` metric name must come from one registry (R5).
+//! This crate enforces all five as hard CI failures.
+//!
+//! It is deliberately **lexical**, not syntactic: the build
+//! environment is offline (no syn), and every rule here is about
+//! tokens-in-files, not type information. A small state machine
+//! ([`lex`]) strips comments, blanks string/char literals out of the
+//! code channel (recording string contents separately for R5), tracks
+//! `#[cfg(test)]` regions by brace matching, and parses the
+//! allow-escape grammar:
+//!
+//! ```text
+//! // lint: allow(<rule-id>) <mandatory reason>
+//! ```
+//!
+//! A comment-only allow line escapes the next code line; a trailing
+//! comment escapes its own line. An allow without a reason is itself
+//! a violation (`allow-syntax`) — escapes are part of the audit
+//! trail, not a mute button.
+//!
+//! Known heuristic edges, documented rather than hidden:
+//!
+//! * R2's `.clone()` check exempts receivers named `rows`/`range` (or
+//!   ending `_rows`/`_range`) — cloning a `Range` is a stack copy, and
+//!   flooding the shard code with escapes would teach people to paste
+//!   them.
+//! * R4 accepts any comment containing "safety" (case-insensitive) on
+//!   the same line or within the 8 preceding lines, so `# Safety` doc
+//!   sections and one comment covering a short cluster of unsafe
+//!   blocks both count.
+//! * R1 skips `#[cfg(test)]` regions and the registry file itself
+//!   (`tensor/rng.rs`) — tests there exercise raw stream keys on
+//!   purpose.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Rule identifiers, as written in allow escapes and printed reports.
+pub mod rules {
+    pub const RNG_DOMAIN: &str = "rng-domain";
+    pub const HOT_PATH_CLOCK: &str = "hot-path-clock";
+    pub const HOT_PATH_ALLOC: &str = "hot-path-alloc";
+    pub const HOT_PATH_HASH: &str = "hot-path-hash";
+    pub const WIRE_ORDER: &str = "wire-order";
+    pub const SAFETY_COMMENT: &str = "safety-comment";
+    pub const METRIC_NAME: &str = "metric-name";
+    pub const ALLOW_SYNTAX: &str = "allow-syntax";
+
+    /// Every rule an allow escape may name.
+    pub const ALL: &[&str] = &[
+        RNG_DOMAIN,
+        HOT_PATH_CLOCK,
+        HOT_PATH_ALLOC,
+        HOT_PATH_HASH,
+        WIRE_ORDER,
+        SAFETY_COMMENT,
+        METRIC_NAME,
+    ];
+}
+
+/// Which files each path-scoped rule applies to, matched by `/`-path
+/// suffix against the path relative to the scanned root.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// R2 hot-path purity files.
+    pub hot_paths: Vec<&'static str>,
+    /// R3 wire-rendering files.
+    pub wire_paths: Vec<&'static str>,
+    /// R4 SAFETY-coverage files.
+    pub safety_paths: Vec<&'static str>,
+    /// R1 stream-domain registry (also the one file exempt from R1).
+    pub registry_path: &'static str,
+    /// R5 metric-family registry.
+    pub metrics_path: &'static str,
+}
+
+impl Config {
+    /// The repository's contract, mirroring README "Static analysis".
+    pub fn repo_default() -> Config {
+        Config {
+            hot_paths: vec![
+                "train/step.rs",
+                "exec/shard.rs",
+                "tensor/ops.rs",
+                "tensor/quant.rs",
+                "aop/policy.rs",
+            ],
+            wire_paths: vec!["serve/handlers.rs"],
+            safety_paths: vec![
+                "exec/pool.rs",
+                "exec/shard.rs",
+                "train/graph.rs",
+                "train/step.rs",
+            ],
+            registry_path: "tensor/rng.rs",
+            metrics_path: "obs/prom.rs",
+        }
+    }
+}
+
+/// One source line after lexing: the code channel (comments stripped,
+/// string/char contents blanked), the comment channel, the string
+/// literals that *start* on this line, and test-region membership.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    pub num: usize,
+    pub code: String,
+    pub comment: String,
+    pub strings: Vec<String>,
+    pub in_test: bool,
+}
+
+/// A lexed file: normalized relative path + lines + per-line effective
+/// allow escapes (rule-id sets).
+#[derive(Debug)]
+pub struct FileLex {
+    pub path: String,
+    pub lines: Vec<Line>,
+    pub allows: Vec<BTreeSet<String>>,
+}
+
+impl FileLex {
+    fn allowed(&self, idx: usize, rule: &str) -> bool {
+        self.allows.get(idx).is_some_and(|s| s.contains(rule))
+    }
+}
+
+/// One finding. Sorted by (file, line, rule) in the report.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// A full run over one tree.
+#[derive(Debug)]
+pub struct Report {
+    pub files: usize,
+    pub violations: Vec<Violation>,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------------
+
+/// Lex Rust source into per-line channels. Handles line/nested block
+/// comments, plain and raw strings (`r"…"`, `r#"…"#`, byte variants),
+/// char literals vs lifetimes, and multi-line strings (contents attach
+/// to the starting line).
+pub fn lex(src: &str) -> Vec<Line> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+        CharLit,
+    }
+
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut cur = Line { num: 1, ..Line::default() };
+    // (line index the string started on, contents so far)
+    let mut str_buf: Option<(usize, String)> = None;
+    let mut side_strings: Vec<(usize, String)> = Vec::new();
+    let mut st = St::Code;
+    let mut i = 0usize;
+
+    macro_rules! flush_line {
+        () => {{
+            let num = cur.num;
+            lines.push(std::mem::take(&mut cur));
+            cur.num = num + 1;
+        }};
+    }
+
+    macro_rules! peek {
+        ($k:expr) => {
+            chars.get(i + $k).copied()
+        };
+    }
+
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            if let Some((_, buf)) = str_buf.as_mut() {
+                buf.push('\n');
+            }
+            flush_line!();
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && peek!(1) == Some('/') {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && peek!(1) == Some('*') {
+                    st = St::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    cur.code.push_str("\"\"");
+                    str_buf = Some((lines.len(), String::new()));
+                    i += 1;
+                } else if (c == 'r' || c == 'b')
+                    && !prev_is_ident(&chars, i)
+                    && raw_str_hashes(&chars, i).is_some()
+                {
+                    let (skip, hashes) = raw_str_hashes(&chars, i).unwrap();
+                    st = St::RawStr(hashes);
+                    cur.code.push_str("\"\"");
+                    str_buf = Some((lines.len(), String::new()));
+                    i += skip;
+                } else if c == 'b' && peek!(1) == Some('"') && !prev_is_ident(&chars, i) {
+                    st = St::Str;
+                    cur.code.push_str("\"\"");
+                    str_buf = Some((lines.len(), String::new()));
+                    i += 2;
+                } else if c == '\'' {
+                    // Lifetime vs char literal: `'a` followed by
+                    // neither `'` nor an escape is a lifetime.
+                    let is_char = match peek!(1) {
+                        Some('\\') => true,
+                        Some(_) => peek!(2) == Some('\''),
+                        None => false,
+                    };
+                    if is_char {
+                        st = St::CharLit;
+                        cur.code.push_str("' '");
+                        i += 1;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                if c == '*' && peek!(1) == Some('/') {
+                    if depth == 1 {
+                        st = St::Code;
+                    } else {
+                        st = St::BlockComment(depth - 1);
+                    }
+                    i += 2;
+                } else if c == '/' && peek!(1) == Some('*') {
+                    st = St::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    if let Some((_, buf)) = str_buf.as_mut() {
+                        buf.push(c);
+                        if let Some(n) = peek!(1) {
+                            buf.push(n);
+                        }
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    if let Some((start, buf)) = str_buf.take() {
+                        side_strings.push((start, buf));
+                    }
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    if let Some((_, buf)) = str_buf.as_mut() {
+                        buf.push(c);
+                    }
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' && hashes_follow(&chars, i + 1, hashes) {
+                    if let Some((start, buf)) = str_buf.take() {
+                        side_strings.push((start, buf));
+                    }
+                    st = St::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    if let Some((_, buf)) = str_buf.as_mut() {
+                        buf.push(c);
+                    }
+                    i += 1;
+                }
+            }
+            St::CharLit => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    flush_line!();
+
+    for (idx, s) in side_strings {
+        if let Some(line) = lines.get_mut(idx) {
+            line.strings.push(s);
+        }
+    }
+    mark_tests(&mut lines);
+    lines
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// If `chars[i..]` opens a raw string (`r"`, `r#"`, `br"`, …), return
+/// (chars to skip past the opening quote, hash count).
+fn raw_str_hashes(chars: &[char], i: usize) -> Option<(usize, u32)> {
+    let mut j = i + 1;
+    if chars[i] == 'b' {
+        if chars.get(j) != Some(&'r') {
+            return None;
+        }
+        j += 1;
+    }
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((j + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+fn hashes_follow(chars: &[char], from: usize, hashes: u32) -> bool {
+    (0..hashes as usize).all(|k| chars.get(from + k) == Some(&'#'))
+}
+
+/// Mark every line inside a `#[cfg(test)] { … }` region by brace
+/// matching on the code channel (strings are already blanked, so
+/// braces in literals cannot desync the depth count).
+fn mark_tests(lines: &mut [Line]) {
+    let mut depth: i32 = 0;
+    let mut close_at: Vec<i32> = Vec::new();
+    let mut pending = false;
+    for line in lines.iter_mut() {
+        let mut active = !close_at.is_empty();
+        if line.code.contains("#[cfg(test)]") {
+            pending = true;
+            active = true;
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    if pending {
+                        close_at.push(depth);
+                        pending = false;
+                        active = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if close_at.last() == Some(&depth) {
+                        close_at.pop();
+                    }
+                }
+                _ => {}
+            }
+        }
+        line.in_test = active || pending;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Allow escapes
+// ---------------------------------------------------------------------------
+
+const ALLOW_MARKER: &str = "lint: allow(";
+
+/// Parse the escapes in one line's comment channel. Returns
+/// `(rule, has_reason)` pairs.
+fn parse_allows(comment: &str) -> Vec<(String, bool)> {
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(pos) = rest.find(ALLOW_MARKER) {
+        let after = &rest[pos + ALLOW_MARKER.len()..];
+        let Some(close) = after.find(')') else {
+            out.push((String::from("?"), false));
+            break;
+        };
+        let rule = after[..close].trim().to_string();
+        let tail = &after[close + 1..];
+        let reason_end = tail.find(ALLOW_MARKER).unwrap_or(tail.len());
+        let has_reason = !tail[..reason_end].trim().is_empty();
+        out.push((rule, has_reason));
+        rest = &tail[reason_end..];
+    }
+    out
+}
+
+/// Build per-line effective allow sets and report malformed escapes.
+fn build_allows(path: &str, lines: &[Line], out: &mut Vec<Violation>) -> Vec<BTreeSet<String>> {
+    let mut allows: Vec<BTreeSet<String>> = vec![BTreeSet::new(); lines.len()];
+    let mut carry: BTreeSet<String> = BTreeSet::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let mut here: BTreeSet<String> = BTreeSet::new();
+        for (rule, has_reason) in parse_allows(&line.comment) {
+            if !has_reason {
+                out.push(Violation {
+                    file: path.to_string(),
+                    line: line.num,
+                    rule: rules::ALLOW_SYNTAX,
+                    msg: format!(
+                        "allow({rule}) needs a reason: `// lint: allow({rule}) <why>`"
+                    ),
+                });
+                continue;
+            }
+            if !rules::ALL.contains(&rule.as_str()) {
+                out.push(Violation {
+                    file: path.to_string(),
+                    line: line.num,
+                    rule: rules::ALLOW_SYNTAX,
+                    msg: format!(
+                        "allow({rule}) names no known rule (known: {})",
+                        rules::ALL.join(", ")
+                    ),
+                });
+                continue;
+            }
+            here.insert(rule);
+        }
+        if line.code.trim().is_empty() {
+            // Comment-only line: escapes apply to the next code line.
+            carry.extend(here);
+        } else {
+            let mut eff = std::mem::take(&mut carry);
+            eff.extend(here);
+            allows[idx] = eff;
+        }
+    }
+    allows
+}
+
+// ---------------------------------------------------------------------------
+// Tree walking
+// ---------------------------------------------------------------------------
+
+fn walk(root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> =
+            fs::read_dir(&dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    let rel = p.strip_prefix(root).unwrap_or(p);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+fn path_matches(rel: &str, suffix: &str) -> bool {
+    rel == suffix || rel.ends_with(&format!("/{suffix}"))
+}
+
+// ---------------------------------------------------------------------------
+// R1: RNG stream-domain registry
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct DomainRegistry {
+    /// (name, parsed literal value if it was one, defining line)
+    entries: Vec<(String, Option<u64>, usize)>,
+}
+
+impl DomainRegistry {
+    fn contains(&self, name: &str) -> bool {
+        self.entries.iter().any(|(n, _, _)| n == name)
+    }
+}
+
+fn parse_u64_literal(s: &str) -> Option<u64> {
+    let t: String = s.trim().chars().filter(|&c| c != '_').collect();
+    if let Some(hex) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        t.parse().ok()
+    }
+}
+
+/// Extract `pub const NAME: u64 = <literal>;` entries from the
+/// `pub mod domains { … }` region of the registry file.
+fn parse_domain_registry(f: &FileLex) -> DomainRegistry {
+    let mut reg = DomainRegistry::default();
+    let mut depth_opened: Option<i32> = None;
+    let mut depth: i32 = 0;
+    let mut pending_mod = false;
+    for line in &f.lines {
+        if line.code.contains("pub mod domains") {
+            pending_mod = true;
+        }
+        let inside = depth_opened.is_some();
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    if pending_mod && depth_opened.is_none() {
+                        depth_opened = Some(depth);
+                        pending_mod = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if depth_opened == Some(depth) {
+                        depth_opened = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if !inside {
+            continue;
+        }
+        let code = line.code.trim();
+        if let Some(rest) = code.strip_prefix("pub const ") {
+            let Some((name, tail)) = rest.split_once(':') else { continue };
+            let name = name.trim();
+            if !tail.trim_start().starts_with("u64") {
+                continue;
+            }
+            let value = tail
+                .split_once('=')
+                .and_then(|(_, v)| v.split(';').next().map(str::trim))
+                .and_then(parse_u64_literal);
+            reg.entries.push((name.to_string(), value, line.num));
+        }
+    }
+    reg
+}
+
+fn check_registry_unique(path: &str, reg: &DomainRegistry, out: &mut Vec<Violation>) {
+    let mut seen: BTreeMap<u64, &str> = BTreeMap::new();
+    for (name, value, num) in &reg.entries {
+        let Some(v) = value else { continue };
+        if let Some(prev) = seen.get(v) {
+            out.push(Violation {
+                file: path.to_string(),
+                line: *num,
+                rule: rules::RNG_DOMAIN,
+                msg: format!(
+                    "domain {name} reuses stream key {v:#x} already taken by {prev} — \
+                     colliding domains would draw correlated streams"
+                ),
+            });
+        } else {
+            seen.insert(*v, name);
+        }
+    }
+}
+
+/// Extract the first argument of a `for_stream(` call starting at
+/// (line idx, byte offset just past the open paren), following
+/// continuation lines.
+fn first_arg(lines: &[Line], start: usize, from: usize) -> String {
+    let mut depth = 0i32;
+    let mut arg = String::new();
+    for (k, line) in lines.iter().enumerate().skip(start) {
+        let code: &str = if k == start { &line.code[from..] } else { &line.code };
+        for c in code.chars() {
+            match c {
+                '(' | '[' => depth += 1,
+                ')' | ']' if depth == 0 => return arg,
+                ')' | ']' => depth -= 1,
+                ',' if depth == 0 => return arg,
+                _ => arg.push(c),
+            }
+        }
+        arg.push(' ');
+    }
+    arg
+}
+
+fn is_screaming_const(tok: &str) -> bool {
+    tok.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+        && tok.chars().any(|c| c.is_ascii_uppercase())
+}
+
+fn check_rng_domains(f: &FileLex, reg: &DomainRegistry, out: &mut Vec<Violation>) {
+    for (idx, line) in f.lines.iter().enumerate() {
+        if line.in_test || f.allowed(idx, rules::RNG_DOMAIN) {
+            continue;
+        }
+        // Domain-tag constants may only be declared in the registry.
+        let code = line.code.trim();
+        if (code.contains("const STREAM_") || code.contains("const FLT_"))
+            && code.contains('=')
+        {
+            out.push(Violation {
+                file: f.path.clone(),
+                line: line.num,
+                rule: rules::RNG_DOMAIN,
+                msg: "stream-domain constants live in tensor::rng::domains, \
+                      not in per-module consts (collision check needs one table)"
+                    .to_string(),
+            });
+        }
+        let mut search = 0usize;
+        while let Some(pos) = line.code[search..].find("for_stream(") {
+            let open = search + pos + "for_stream(".len();
+            let arg = first_arg(&f.lines, idx, open);
+            check_stream_key_expr(f, line.num, &arg, reg, out);
+            search = open;
+        }
+    }
+}
+
+/// Validate one seed-key expression (`cfg.seed ^ STREAM_POLICY`, …):
+/// no bare numeric literals, and every SCREAMING_CASE operand must be
+/// a registered domain.
+fn check_stream_key_expr(
+    f: &FileLex,
+    num: usize,
+    arg: &str,
+    reg: &DomainRegistry,
+    out: &mut Vec<Violation>,
+) {
+    for operand in arg.split('^') {
+        let operand = operand.trim();
+        if operand.is_empty() {
+            continue;
+        }
+        let last_seg = operand.rsplit("::").next().unwrap_or(operand).trim();
+        let tok: String = last_seg
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        if tok.is_empty() {
+            continue;
+        }
+        if tok.starts_with(|c: char| c.is_ascii_digit()) {
+            out.push(Violation {
+                file: f.path.clone(),
+                line: num,
+                rule: rules::RNG_DOMAIN,
+                msg: format!(
+                    "bare stream key `{tok}` in for_stream — name it in \
+                     tensor::rng::domains so collisions are checked"
+                ),
+            });
+        } else if is_screaming_const(&tok) && !reg.contains(&tok) {
+            out.push(Violation {
+                file: f.path.clone(),
+                line: num,
+                rule: rules::RNG_DOMAIN,
+                msg: format!(
+                    "stream domain `{tok}` is not registered in tensor::rng::domains"
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// R2: hot-path purity
+// ---------------------------------------------------------------------------
+
+/// Receivers whose `.clone()` is a stack copy (`Range`), exempted to
+/// keep the shard code free of boilerplate escapes.
+fn clone_receiver_exempt(recv: &str) -> bool {
+    recv == "rows" || recv == "range" || recv.ends_with("_rows") || recv.ends_with("_range")
+}
+
+fn check_hot_path(f: &FileLex, out: &mut Vec<Violation>) {
+    for (idx, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        let mut flag = |rule: &'static str, what: &str| {
+            if !f.allowed(idx, rule) {
+                out.push(Violation {
+                    file: f.path.clone(),
+                    line: line.num,
+                    rule,
+                    msg: format!("{what} on a hot path (escape: `// lint: allow({rule}) <why>`)"),
+                });
+            }
+        };
+        if code.contains("Instant::now") || code.contains("SystemTime::now") {
+            flag(rules::HOT_PATH_CLOCK, "clock read");
+        }
+        if contains_word(code, "HashMap") || contains_word(code, "HashSet") {
+            flag(rules::HOT_PATH_HASH, "randomized-order hash collection");
+        }
+        let alloc_tokens =
+            ["Vec::new(", "vec!", ".to_vec()", ".collect()", ".collect::<", "format!", "Box::new("];
+        for pat in alloc_tokens {
+            if code.contains(pat) {
+                let what = format!("allocation (`{}`)", pat.trim_end_matches('('));
+                flag(rules::HOT_PATH_ALLOC, &what);
+            }
+        }
+        let mut search = 0usize;
+        while let Some(pos) = code[search..].find(".clone()") {
+            let at = search + pos;
+            let recv: String = code[..at]
+                .chars()
+                .rev()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect::<Vec<_>>()
+                .into_iter()
+                .rev()
+                .collect();
+            if !clone_receiver_exempt(&recv) {
+                flag(rules::HOT_PATH_ALLOC, "owned-buffer clone");
+            }
+            search = at + ".clone()".len();
+        }
+    }
+}
+
+fn contains_word(code: &str, word: &str) -> bool {
+    let mut search = 0usize;
+    while let Some(pos) = code[search..].find(word) {
+        let at = search + pos;
+        let before = code[..at].chars().next_back();
+        let after = code[at + word.len()..].chars().next();
+        let bounded = |c: Option<char>| !c.is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if bounded(before) && bounded(after) {
+            return true;
+        }
+        search = at + word.len();
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// R3: unordered iteration feeding wire output
+// ---------------------------------------------------------------------------
+
+fn check_wire_order(f: &FileLex, out: &mut Vec<Violation>) {
+    // Pass 1: names lexically bound to hash collections.
+    let mut maps: BTreeSet<String> = BTreeSet::new();
+    for line in &f.lines {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.trim();
+        if !(code.contains("HashMap") || code.contains("HashSet")) {
+            continue;
+        }
+        if let Some(rest) = code.strip_prefix("let ") {
+            let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+            let name: String =
+                rest.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+            if !name.is_empty() {
+                maps.insert(name);
+            }
+        } else if let Some((field, _)) = code.split_once(':') {
+            let name: String = field
+                .trim()
+                .trim_start_matches("pub ")
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() && code.contains('<') {
+                maps.insert(name);
+            }
+        }
+    }
+    // Pass 2: iteration over those names must sort before rendering.
+    for (idx, line) in f.lines.iter().enumerate() {
+        if line.in_test || f.allowed(idx, rules::WIRE_ORDER) {
+            continue;
+        }
+        for m in &maps {
+            let iterated = ["iter()", "values()", "keys()", "into_iter()", "drain("]
+                .iter()
+                .any(|call| line.code.contains(&format!("{m}.{call}")))
+                || line.code.contains(&format!(" in &{m}"))
+                || line.code.contains(&format!(" in &mut {m}"))
+                || line.code.contains(&format!(" in {m} "));
+            if !iterated {
+                continue;
+            }
+            // Escape hatch: an explicit sort on the same line or
+            // within the next two code lines makes the order defined.
+            let sorted_nearby = f.lines[idx..]
+                .iter()
+                .filter(|l| !l.code.trim().is_empty())
+                .take(3)
+                .any(|l| l.code.contains(".sort"));
+            if !sorted_nearby {
+                out.push(Violation {
+                    file: f.path.clone(),
+                    line: line.num,
+                    rule: rules::WIRE_ORDER,
+                    msg: format!(
+                        "iteration over hash collection `{m}` reaches wire output \
+                         without an explicit sort — scrape diffs would churn"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// R4: SAFETY-comment coverage
+// ---------------------------------------------------------------------------
+
+/// How far back (in lines) a safety comment may sit from its `unsafe`.
+const SAFETY_WINDOW: usize = 8;
+
+fn check_safety_comments(f: &FileLex, out: &mut Vec<Violation>) {
+    for (idx, line) in f.lines.iter().enumerate() {
+        if !contains_word(&line.code, "unsafe") || f.allowed(idx, rules::SAFETY_COMMENT) {
+            continue;
+        }
+        let covered = f.lines[idx.saturating_sub(SAFETY_WINDOW)..=idx]
+            .iter()
+            .any(|l| l.comment.to_ascii_lowercase().contains("safety"));
+        if !covered {
+            out.push(Violation {
+                file: f.path.clone(),
+                line: line.num,
+                rule: rules::SAFETY_COMMENT,
+                msg: "unsafe without a `// SAFETY:` argument on this line or the \
+                      8 lines above it"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// R5: metric-name registry
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct MetricRegistry {
+    names: Vec<String>,
+    /// Line span of the `METRIC_FAMILIES` table (definitions exempt).
+    table_lines: (usize, usize),
+}
+
+fn parse_metric_registry(f: &FileLex, out: &mut Vec<Violation>) -> MetricRegistry {
+    let mut reg = MetricRegistry::default();
+    let mut strings: Vec<(usize, String)> = Vec::new();
+    let mut inside = false;
+    for line in &f.lines {
+        if !inside && line.code.contains("METRIC_FAMILIES") && line.code.contains("const") {
+            inside = true;
+            reg.table_lines.0 = line.num;
+        }
+        if inside {
+            for s in &line.strings {
+                strings.push((line.num, s.clone()));
+            }
+            if line.code.contains("];") {
+                reg.table_lines.1 = line.num;
+                break;
+            }
+        }
+    }
+    for chunk in strings.chunks(3) {
+        let [(num, name), (_, kind), (_, _help)] = chunk else {
+            out.push(Violation {
+                file: f.path.clone(),
+                line: chunk[0].0,
+                rule: rules::METRIC_NAME,
+                msg: "METRIC_FAMILIES entry is not a (name, kind, help) triple".to_string(),
+            });
+            continue;
+        };
+        if !matches!(kind.as_str(), "counter" | "gauge" | "histogram") {
+            out.push(Violation {
+                file: f.path.clone(),
+                line: *num,
+                rule: rules::METRIC_NAME,
+                msg: format!("family {name} has unknown kind {kind:?}"),
+            });
+        }
+        if reg.names.contains(name) {
+            out.push(Violation {
+                file: f.path.clone(),
+                line: *num,
+                rule: rules::METRIC_NAME,
+                msg: format!("duplicate metric family {name}"),
+            });
+        }
+        reg.names.push(name.clone());
+    }
+    reg
+}
+
+fn metric_name_of(literal: &str) -> Option<&str> {
+    if !literal.starts_with("repro_") {
+        return None;
+    }
+    let end = literal
+        .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+        .unwrap_or(literal.len());
+    // The bare namespace prefix is a prefix *check*, not a family name.
+    Some(&literal[..end]).filter(|n| *n != "repro_")
+}
+
+fn check_metric_names(
+    f: &FileLex,
+    reg: &MetricRegistry,
+    is_registry_file: bool,
+    out: &mut Vec<Violation>,
+) {
+    for (idx, line) in f.lines.iter().enumerate() {
+        if is_registry_file && (reg.table_lines.0..=reg.table_lines.1).contains(&line.num) {
+            continue;
+        }
+        if f.allowed(idx, rules::METRIC_NAME) {
+            continue;
+        }
+        for s in &line.strings {
+            let Some(name) = metric_name_of(s) else { continue };
+            let base = name
+                .strip_suffix("_bucket")
+                .or_else(|| name.strip_suffix("_sum"))
+                .or_else(|| name.strip_suffix("_count"))
+                .unwrap_or(name);
+            if !reg.names.iter().any(|n| n == name || n == base) {
+                out.push(Violation {
+                    file: f.path.clone(),
+                    line: line.num,
+                    rule: rules::METRIC_NAME,
+                    msg: format!(
+                        "metric name `{name}` is not declared in obs::prom::METRIC_FAMILIES \
+                         — exported families are a stable interface"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runner
+// ---------------------------------------------------------------------------
+
+/// Lint `root` with the repository contract.
+pub fn run(root: &Path) -> io::Result<Report> {
+    run_with(root, &Config::repo_default())
+}
+
+/// Lint `root` with an explicit [`Config`] (fixtures use mini-trees).
+pub fn run_with(root: &Path, cfg: &Config) -> io::Result<Report> {
+    let mut violations: Vec<Violation> = Vec::new();
+    let mut files: Vec<FileLex> = Vec::new();
+    for p in walk(root)? {
+        let src = fs::read_to_string(&p)?;
+        let path = rel_path(root, &p);
+        let lines = lex(&src);
+        let allows = build_allows(&path, &lines, &mut violations);
+        files.push(FileLex { path, lines, allows });
+    }
+
+    let domain_reg = files
+        .iter()
+        .find(|f| path_matches(&f.path, cfg.registry_path))
+        .map(parse_domain_registry)
+        .unwrap_or_default();
+    if let Some(f) = files.iter().find(|f| path_matches(&f.path, cfg.registry_path)) {
+        check_registry_unique(&f.path, &domain_reg, &mut violations);
+    }
+    let metric_reg = files
+        .iter()
+        .find(|f| path_matches(&f.path, cfg.metrics_path))
+        .map(|f| parse_metric_registry(f, &mut violations))
+        .unwrap_or_default();
+
+    for f in &files {
+        if !path_matches(&f.path, cfg.registry_path) {
+            check_rng_domains(f, &domain_reg, &mut violations);
+        }
+        if cfg.hot_paths.iter().any(|p| path_matches(&f.path, p)) {
+            check_hot_path(f, &mut violations);
+        }
+        if cfg.wire_paths.iter().any(|p| path_matches(&f.path, p)) {
+            check_wire_order(f, &mut violations);
+        }
+        if cfg.safety_paths.iter().any(|p| path_matches(&f.path, p)) {
+            check_safety_comments(f, &mut violations);
+        }
+        let is_metrics = path_matches(&f.path, cfg.metrics_path);
+        check_metric_names(f, &metric_reg, is_metrics, &mut violations);
+    }
+
+    violations.sort();
+    violations.dedup();
+    Ok(Report { files: files.len(), violations })
+}
+
+// ---------------------------------------------------------------------------
+// Lexer + rule unit tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexer_strips_comments_and_blanks_strings() {
+        let src = "let a = 1; // trailing note\nlet s = \"repro_x { }\"; /* block */ let b = 2;\n";
+        let lines = lex(src);
+        assert_eq!(lines[0].code.trim(), "let a = 1;");
+        assert_eq!(lines[0].comment.trim(), "trailing note");
+        assert!(!lines[1].code.contains("repro_x"), "{:?}", lines[1].code);
+        assert_eq!(lines[1].strings, vec!["repro_x { }".to_string()]);
+        assert!(lines[1].code.contains("let b = 2;"));
+        assert_eq!(lines[1].comment.trim(), "block");
+    }
+
+    #[test]
+    fn lexer_handles_lifetimes_char_literals_and_raw_strings() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = '}'; let r = r#\"{\"#; c }\n";
+        let lines = lex(src);
+        assert!(lines[0].code.contains("<'a>"));
+        assert!(!lines[0].code.contains('}') || lines[0].code.matches('}').count() == 1);
+        assert_eq!(lines[0].strings, vec!["{".to_string()]);
+    }
+
+    #[test]
+    fn lexer_marks_cfg_test_regions() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn live2() {}\n";
+        let lines = lex(src);
+        assert!(!lines[0].in_test);
+        assert!(lines[1].in_test && lines[2].in_test && lines[3].in_test && lines[4].in_test);
+        assert!(!lines[5].in_test);
+    }
+
+    #[test]
+    fn lexer_handles_nested_block_comments_and_multiline_strings() {
+        let src = "/* a /* b */ still */ let x = 1;\nlet s = \"two\nlines\";\n";
+        let lines = lex(src);
+        assert_eq!(lines[0].code.trim(), "let x = 1;");
+        assert_eq!(lines[1].strings, vec!["two\nlines".to_string()]);
+    }
+
+    #[test]
+    fn allow_escapes_need_reasons_and_known_rules() {
+        let lines = lex(
+            "// lint: allow(hot-path-alloc) warmup only\nlet v = Vec::new();\n\
+             // lint: allow(hot-path-alloc)\nlet w = Vec::new();\n\
+             // lint: allow(no-such-rule) because\nlet z = 1;\n",
+        );
+        let mut v = Vec::new();
+        let allows = build_allows("x.rs", &lines, &mut v);
+        assert!(allows[1].contains(rules::HOT_PATH_ALLOC));
+        assert!(allows[3].is_empty(), "reason-less escape must not apply");
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().all(|x| x.rule == rules::ALLOW_SYNTAX));
+    }
+
+    #[test]
+    fn trailing_allow_applies_to_its_own_line() {
+        let lines = lex("let v = Vec::new(); // lint: allow(hot-path-alloc) init only\n");
+        let mut v = Vec::new();
+        let allows = build_allows("x.rs", &lines, &mut v);
+        assert!(allows[0].contains(rules::HOT_PATH_ALLOC));
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn first_arg_spans_continuation_lines() {
+        let lines = lex("Rng::for_stream(\n    seed ^ STREAM_X,\n    0,\n    1,\n);\n");
+        let pos = lines[0].code.find("for_stream(").unwrap() + "for_stream(".len();
+        let arg = first_arg(&lines, 0, pos);
+        assert_eq!(arg.trim(), "seed ^ STREAM_X");
+    }
+
+    #[test]
+    fn stream_key_expr_flags_literals_and_unregistered_consts() {
+        let f = FileLex { path: "m.rs".into(), lines: vec![], allows: vec![] };
+        let reg = DomainRegistry {
+            entries: vec![("STREAM_OK".into(), Some(1), 1)],
+        };
+        let mut out = Vec::new();
+        check_stream_key_expr(&f, 1, "seed ^ 0x1234", &reg, &mut out);
+        check_stream_key_expr(&f, 2, "seed ^ STREAM_BAD", &reg, &mut out);
+        let qualified = "cfg.seed ^ crate::tensor::rng::domains::STREAM_OK";
+        check_stream_key_expr(&f, 3, qualified, &reg, &mut out);
+        check_stream_key_expr(&f, 4, "self.seed ^ domain", &reg, &mut out);
+        assert_eq!(out.len(), 2, "{out:?}");
+        assert!(out[0].msg.contains("0x1234"));
+        assert!(out[1].msg.contains("STREAM_BAD"));
+    }
+
+    #[test]
+    fn clone_exemption_is_for_ranges_only() {
+        assert!(clone_receiver_exempt("rows"));
+        assert!(clone_receiver_exempt("shard_range"));
+        assert!(!clone_receiver_exempt("matrix"));
+        assert!(!clone_receiver_exempt(""));
+    }
+
+    #[test]
+    fn metric_name_extraction_handles_label_suffixes() {
+        assert_eq!(metric_name_of("repro_jobs_total{state=\"done\"}"), Some("repro_jobs_total"));
+        assert_eq!(metric_name_of("repro_x"), Some("repro_x"));
+        assert_eq!(metric_name_of("# TYPE repro_x"), None);
+    }
+}

@@ -1,0 +1,39 @@
+//! CLI: `cargo run -p repro-lint -- [root]` (default `rust/src`).
+//!
+//! Exit codes: 0 clean, 1 violations, 2 usage/IO error — ci.sh treats
+//! any non-zero as a failed lint stage.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let root = args.next().unwrap_or_else(|| "rust/src".to_string());
+    if root == "-h" || root == "--help" || args.next().is_some() {
+        eprintln!("usage: repro-lint [root-dir]   (default: rust/src)");
+        return ExitCode::from(2);
+    }
+    match repro_lint::run(Path::new(&root)) {
+        Ok(report) => {
+            for v in &report.violations {
+                eprintln!("{v}");
+            }
+            if report.is_clean() {
+                println!("repro-lint: {} files clean under {root}", report.files);
+                ExitCode::SUCCESS
+            } else {
+                eprintln!(
+                    "repro-lint: {} violation(s) across {} files — see README \
+                     \"Static analysis\"",
+                    report.violations.len(),
+                    report.files
+                );
+                ExitCode::from(1)
+            }
+        }
+        Err(e) => {
+            eprintln!("repro-lint: cannot scan {root}: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

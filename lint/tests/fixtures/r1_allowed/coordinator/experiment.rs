@@ -1,0 +1,9 @@
+//! Fixture: the same bare key, escaped with a reasoned allow.
+pub fn draw(seed: u64, epoch: u64, step: u64) -> u64 {
+    // lint: allow(rng-domain) fixture: pinned historical key, migration tracked elsewhere
+    for_stream(seed ^ 0x9011C4, epoch, step)
+}
+
+fn for_stream(key: u64, a: u64, b: u64) -> u64 {
+    key ^ a ^ b
+}

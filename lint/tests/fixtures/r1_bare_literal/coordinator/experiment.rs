@@ -1,0 +1,8 @@
+//! Fixture: a bare stream key must trip rng-domain.
+pub fn draw(seed: u64, epoch: u64, step: u64) -> u64 {
+    for_stream(seed ^ 0x9011C4, epoch, step)
+}
+
+fn for_stream(key: u64, a: u64, b: u64) -> u64 {
+    key ^ a ^ b
+}

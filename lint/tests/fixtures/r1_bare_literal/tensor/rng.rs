@@ -1,0 +1,6 @@
+//! Fixture registry: one healthy domain.
+pub mod domains {
+    pub const STREAM_POLICY: u64 = 0x9011C4;
+
+    pub const ALL: &[(&str, u64)] = &[("STREAM_POLICY", STREAM_POLICY)];
+}

@@ -1,0 +1,5 @@
+//! Fixture: two domains sharing a stream key must trip rng-domain.
+pub mod domains {
+    pub const STREAM_A: u64 = 0x1234;
+    pub const STREAM_B: u64 = 0x1234;
+}

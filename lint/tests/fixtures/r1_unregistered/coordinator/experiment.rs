@@ -1,0 +1,8 @@
+//! Fixture: a SCREAMING_CASE domain missing from the registry.
+pub fn draw(seed: u64, epoch: u64, step: u64) -> u64 {
+    for_stream(seed ^ STREAM_GHOST, epoch, step)
+}
+
+fn for_stream(key: u64, a: u64, b: u64) -> u64 {
+    key ^ a ^ b
+}

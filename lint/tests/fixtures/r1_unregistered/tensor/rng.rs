@@ -1,0 +1,4 @@
+//! Fixture registry: one healthy domain.
+pub mod domains {
+    pub const STREAM_POLICY: u64 = 0x9011C4;
+}

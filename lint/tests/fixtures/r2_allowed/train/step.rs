@@ -1,0 +1,13 @@
+//! Fixture: the same tokens, each behind a reasoned allow escape,
+//! plus a Range clone (exempt by receiver name).
+pub fn step(rows: std::ops::Range<usize>) -> usize {
+    // lint: allow(hot-path-clock) fixture: measured region is diagnostics-only
+    let t = std::time::Instant::now();
+    // lint: allow(hot-path-alloc) fixture: one-time setup buffer
+    let v: Vec<u32> = Vec::new();
+    // lint: allow(hot-path-hash) fixture: bounded id set, never iterated to wire
+    let m: std::collections::HashMap<u32, u32> = Default::default();
+    let r = rows.clone();
+    drop(t);
+    v.len() + m.len() + r.len()
+}

@@ -1,0 +1,8 @@
+//! Fixture: clock read, allocation, and hashing on the hot path.
+pub fn step() -> usize {
+    let t = std::time::Instant::now();
+    let v: Vec<u32> = Vec::new();
+    let m: std::collections::HashMap<u32, u32> = Default::default();
+    drop(t);
+    v.len() + m.len()
+}

@@ -1,0 +1,12 @@
+//! Fixture: the same map, but sorted before rendering.
+use std::collections::HashMap;
+
+pub fn render(out: &mut String) {
+    let mut counts: HashMap<String, u64> = HashMap::new();
+    counts.insert("a".to_string(), 1);
+    let mut pairs: Vec<_> = counts.iter().collect();
+    pairs.sort();
+    for (k, v) in pairs {
+        out.push_str(&format!("{k} {v}\n"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Fixture: HashMap iteration rendered to wire text without a sort.
+use std::collections::HashMap;
+
+pub fn render(out: &mut String) {
+    let mut counts: HashMap<String, u64> = HashMap::new();
+    counts.insert("a".to_string(), 1);
+    for (k, v) in &counts {
+        out.push_str(&format!("{k} {v}\n"));
+    }
+}

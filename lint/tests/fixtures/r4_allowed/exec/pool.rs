@@ -1,0 +1,6 @@
+//! Fixture: the same unsafe, justified.
+pub fn read_first(v: &[u8]) -> u8 {
+    assert!(!v.is_empty());
+    // SAFETY: asserted non-empty above, so the pointer is valid to read
+    unsafe { *v.as_ptr() }
+}

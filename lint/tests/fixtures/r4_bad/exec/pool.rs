@@ -1,0 +1,5 @@
+//! Fixture: an unjustified unsafe block must trip rule R4.
+pub fn read_first(v: &[u8]) -> u8 {
+    assert!(!v.is_empty());
+    unsafe { *v.as_ptr() }
+}

@@ -1,0 +1,4 @@
+//! Fixture metric registry with a single family.
+pub const METRIC_FAMILIES: &[(&str, &str, &str)] = &[
+    ("repro_requests_total", "counter", "Requests handled."),
+];

@@ -1,0 +1,6 @@
+//! Fixture: a registered name plus an escaped experimental one.
+pub fn render(out: &mut String) {
+    out.push_str("repro_requests_total 1\n");
+    // lint: allow(metric-name) fixture: experimental family, not yet a stable promise
+    out.push_str("repro_experimental_total 1\n");
+}

@@ -1,0 +1,4 @@
+//! Fixture: an unregistered repro_* family name.
+pub fn render(out: &mut String) {
+    out.push_str("repro_bogus_total 1\n");
+}

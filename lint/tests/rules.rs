@@ -1,0 +1,110 @@
+//! Fixture-backed rule tests: each rule has a known-bad mini-tree that
+//! must trip it (and only it), and an allow-escaped / corrected twin
+//! that must come back clean. The fixtures live under
+//! `tests/fixtures/<case>/` and mirror the repo layout so the
+//! path-scoped rules fire.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use repro_lint::{rules, Report};
+
+fn lint_fixture(name: &str) -> Report {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name);
+    repro_lint::run(&root).unwrap_or_else(|e| panic!("scanning fixture {name}: {e}"))
+}
+
+fn rule_set(report: &Report) -> BTreeSet<&'static str> {
+    report.violations.iter().map(|v| v.rule).collect()
+}
+
+fn assert_clean(name: &str) {
+    let report = lint_fixture(name);
+    assert!(
+        report.is_clean(),
+        "fixture {name} should be clean, got:\n{}",
+        report.violations.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+}
+
+#[test]
+fn r1_bare_literal_trips_rng_domain() {
+    let report = lint_fixture("r1_bare_literal");
+    assert_eq!(rule_set(&report), BTreeSet::from([rules::RNG_DOMAIN]), "{:?}", report.violations);
+    assert!(report.violations[0].msg.contains("bare stream key"), "{:?}", report.violations);
+    assert!(report.violations[0].file.ends_with("coordinator/experiment.rs"));
+}
+
+#[test]
+fn r1_colliding_domains_trip_rng_domain() {
+    let report = lint_fixture("r1_collision");
+    assert_eq!(rule_set(&report), BTreeSet::from([rules::RNG_DOMAIN]), "{:?}", report.violations);
+    assert!(report.violations[0].msg.contains("reuses stream key"), "{:?}", report.violations);
+}
+
+#[test]
+fn r1_unregistered_domain_trips_rng_domain() {
+    let report = lint_fixture("r1_unregistered");
+    assert_eq!(rule_set(&report), BTreeSet::from([rules::RNG_DOMAIN]), "{:?}", report.violations);
+    assert!(report.violations[0].msg.contains("not registered"), "{:?}", report.violations);
+}
+
+#[test]
+fn r1_allow_escape_silences_rng_domain() {
+    assert_clean("r1_allowed");
+}
+
+#[test]
+fn r2_hot_path_impurities_all_trip() {
+    let report = lint_fixture("r2_bad");
+    assert_eq!(
+        rule_set(&report),
+        BTreeSet::from([rules::HOT_PATH_CLOCK, rules::HOT_PATH_ALLOC, rules::HOT_PATH_HASH]),
+        "{:?}",
+        report.violations
+    );
+}
+
+#[test]
+fn r2_allow_escapes_and_range_clone_exemption_hold() {
+    assert_clean("r2_allowed");
+}
+
+#[test]
+fn r3_unsorted_map_iteration_trips_wire_order() {
+    let report = lint_fixture("r3_bad");
+    assert_eq!(rule_set(&report), BTreeSet::from([rules::WIRE_ORDER]), "{:?}", report.violations);
+}
+
+#[test]
+fn r3_sort_before_render_is_clean() {
+    assert_clean("r3_allowed");
+}
+
+#[test]
+fn r4_uncommented_unsafe_trips_safety_comment() {
+    let report = lint_fixture("r4_bad");
+    assert_eq!(
+        rule_set(&report),
+        BTreeSet::from([rules::SAFETY_COMMENT]),
+        "{:?}",
+        report.violations
+    );
+}
+
+#[test]
+fn r4_safety_comment_within_window_is_clean() {
+    assert_clean("r4_allowed");
+}
+
+#[test]
+fn r5_unregistered_metric_name_trips() {
+    let report = lint_fixture("r5_bad");
+    assert_eq!(rule_set(&report), BTreeSet::from([rules::METRIC_NAME]), "{:?}", report.violations);
+    assert!(report.violations[0].msg.contains("repro_bogus_total"), "{:?}", report.violations);
+}
+
+#[test]
+fn r5_registered_and_escaped_names_are_clean() {
+    assert_clean("r5_allowed");
+}

@@ -1,0 +1,19 @@
+//! The linter's own acceptance gate: the real tree under `rust/src`
+//! must be violation-free. Running this as a cargo test (in addition
+//! to the ci.sh `repro-lint` stage) means `cargo test -p repro-lint`
+//! alone catches a contract regression.
+
+use std::path::PathBuf;
+
+#[test]
+fn repo_tree_is_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("rust").join("src");
+    let report = repro_lint::run(&root).expect("scanning rust/src");
+    assert!(report.files > 30, "suspiciously few files scanned: {}", report.files);
+    assert!(
+        report.is_clean(),
+        "rust/src has {} lint violation(s):\n{}",
+        report.violations.len(),
+        report.violations.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+}

@@ -39,6 +39,9 @@
 //! is reported rather than asserted so a platform whose std primitives
 //! allocate under contention cannot fail CI.
 
+// Clock reads are deliberate here (benchmark harness timing) — see clippy.toml.
+#![allow(clippy::disallowed_methods)]
+
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};

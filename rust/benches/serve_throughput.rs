@@ -14,6 +14,9 @@
 //! cargo bench --bench serve_throughput
 //! ```
 
+// Clock reads are deliberate here (benchmark harness timing) — see clippy.toml.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::{Duration, Instant};
 
 use mem_aop_gd::aop::Policy;

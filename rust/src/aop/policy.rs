@@ -62,6 +62,7 @@ impl Policy {
         Policy::all()
             .iter()
             .map(|p| p.name())
+            // lint: allow(hot-path-alloc) help/error-text helper, never on the step path
             .collect::<Vec<_>>()
             .join(sep)
     }
@@ -70,6 +71,7 @@ impl Policy {
     /// accepted names — used by the CLI and the serve protocol.
     pub fn parse_or_suggest(s: &str) -> Result<Policy, String> {
         Policy::parse(s).ok_or_else(|| {
+            // lint: allow(hot-path-alloc) config-parse error path, runs once per submit
             format!(
                 "unknown policy '{s}' (expected one of: {})",
                 Policy::names_joined(", ")
@@ -129,6 +131,7 @@ impl Selection {
         self.indices
             .iter()
             .map(|&i| (i, self.sel_scale[i]))
+            // lint: allow(hot-path-alloc) analysis/test convenience; the compaction step iterates indices directly
             .collect()
     }
 
@@ -302,8 +305,8 @@ fn keep_vector_into(indices: &[usize], m: usize, memory: bool, policy: Policy, k
 /// per-shard filtering in `exec`) is reproducible across shard
 /// boundaries and platforms.
 pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
-    let mut scratch = Vec::new();
-    let mut out = Vec::new();
+    // lint: allow(hot-path-alloc) allocating wrapper; the step path uses top_k_indices_into with workspace buffers
+    let (mut scratch, mut out) = (Vec::new(), Vec::new());
     top_k_indices_into(scores, k, &mut scratch, &mut out);
     out
 }

@@ -14,6 +14,9 @@
 //! one of the invariants behind the `exec` subsystem's guarantee that
 //! `cfg.threads` never changes a curve (`rust/tests/exec.rs`).
 
+// Clock reads are deliberate here (wall-clock run duration reporting) — see clippy.toml.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -26,6 +29,7 @@ use crate::data::{batcher::Batcher, digits, energy, Dataset};
 use crate::metrics::{EpochMetrics, LayerEpochMetrics, RunCurve};
 use crate::obs::{jaccard, score_entropy, AuditLayerRecord, PhaseRollup};
 use crate::runtime::Runtime;
+use crate::tensor::rng::domains::STREAM_POLICY;
 use crate::tensor::{rng::Rng, Matrix};
 use crate::train::{self, AopLayerConfig};
 
@@ -239,7 +243,7 @@ pub fn run_with_trainer_ref<T: Trainer>(
             // once, in `train::select_with_configs` — for flat configs
             // this is the historical single draw.
             let mut policy_rng =
-                Rng::for_stream(cfg.seed ^ 0x9011C4, epoch as u64, step as u64);
+                Rng::for_stream(cfg.seed ^ STREAM_POLICY, epoch as u64, step as u64);
             let score_refs: Vec<&[f32]> = scores.iter().map(|s| s.as_slice()).collect();
             // the caller owns selection on the trait path, so the loop
             // times it on the trainer's behalf; no clock is read unless

@@ -9,6 +9,9 @@
 //! * [`complexity`] — the Sec. I computational-reduction claim: FLOP
 //!   ratios and measured wall-clock of the AOP gradient vs K.
 
+// Clock reads are deliberate here (wall-clock harness progress reporting) — see clippy.toml.
+#![allow(clippy::disallowed_methods)]
+
 use std::path::PathBuf;
 
 use anyhow::Result;

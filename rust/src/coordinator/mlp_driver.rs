@@ -8,6 +8,9 @@
 //! learning-rate schedule, and metric logging. Used by
 //! `examples/e2e_train.rs` and the e2e integration tests.
 
+// Clock reads are deliberate here (wall-clock run duration reporting) — see clippy.toml.
+#![allow(clippy::disallowed_methods)]
+
 use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};

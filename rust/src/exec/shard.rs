@@ -413,6 +413,7 @@ pub fn score_rows_acc(
 /// row order — the shard partial of `Matrix::col_sums`. Allocating
 /// wrapper over [`col_sums_rows_into`].
 pub fn col_sums_rows(block: &[f32], cols: usize) -> Vec<f32> {
+    // lint: allow(hot-path-alloc) allocating wrapper; the step path runs col_sums_rows_into on workspace buffers
     let mut out = vec![0.0f32; cols];
     col_sums_rows_into(block, cols, &mut out);
     out

@@ -14,6 +14,76 @@
 
 use crate::obs::hist::{Histogram, BUCKETS};
 
+/// Registry of every exported `repro_*` Prometheus family (repro-lint
+/// rule R5): `(name, kind, help)`. This table is the single source of
+/// truth for metric-name stability — handlers render headers through
+/// [`PromBuf::family`], which panics on an unregistered name, and the
+/// linter statically rejects any `repro_*` string literal in the tree
+/// that is not declared here (suffixes `_bucket`/`_sum`/`_count` derive
+/// from the histogram family). Entries are only ever added, never
+/// renamed or removed (README §Observability).
+pub const METRIC_FAMILIES: &[(&str, &str, &str)] = &[
+    ("repro_uptime_seconds", "gauge", "Server uptime in seconds."),
+    ("repro_requests_total", "counter", "Protocol requests handled, all ops."),
+    ("repro_queue_depth", "gauge", "Jobs accepted but not yet running."),
+    ("repro_slots_total", "gauge", "Training-thread slot budget (--workers)."),
+    ("repro_slots_busy", "gauge", "Slots held by running jobs (threads, not jobs)."),
+    ("repro_slots_free", "gauge", "Slots not held by running jobs."),
+    ("repro_utilization_ratio", "gauge", "Busy fraction of the slot budget."),
+    ("repro_pool_workers_busy", "gauge", "Pool workers currently driving a job."),
+    ("repro_pool_tasks_pending", "gauge", "Jobs queued in the worker pool."),
+    (
+        "repro_health_status",
+        "gauge",
+        "1 when the server is accepting submits and the queue has headroom, else 0.",
+    ),
+    ("repro_rejected_total", "counter", "Rejected submits by reason."),
+    ("repro_connections_open", "gauge", "Open client connections."),
+    ("repro_jobs_total", "gauge", "Jobs by lifecycle state."),
+    ("repro_request_latency_seconds", "histogram", "Request handling latency by op."),
+    ("repro_policy_jobs_total", "counter", "Completed jobs touching each policy."),
+    (
+        "repro_policy_backward_flops_total",
+        "counter",
+        "Backward weight-gradient FLOPs actually spent, by policy.",
+    ),
+    (
+        "repro_policy_exact_flops_total",
+        "counter",
+        "What exact back-propagation would have spent, by policy.",
+    ),
+    ("repro_policy_saved_ratio", "gauge", "Fraction of exact backward FLOPs saved, by policy."),
+    ("repro_audit_epoch", "gauge", "Epoch of the job's most recent gradient-fidelity audit."),
+    (
+        "repro_audit_cosine",
+        "gauge",
+        "Cosine similarity of the Mem-AOP update vs the exact same-batch gradient, per layer.",
+    ),
+    (
+        "repro_audit_rel_err",
+        "gauge",
+        "Relative Frobenius error of the Mem-AOP update vs the exact gradient, per layer.",
+    ),
+    (
+        "repro_audit_mem_bias",
+        "gauge",
+        "Relative deviation of the memory-corrected update from the raw outer product, per layer.",
+    ),
+    (
+        "repro_trace_bytes",
+        "gauge",
+        "Backward-read forward-trace bytes per job (quantized-trace jobs only).",
+    ),
+];
+
+/// Look up a registered family; `None` for names outside the table.
+pub fn metric_family(name: &str) -> Option<(&'static str, &'static str)> {
+    METRIC_FAMILIES
+        .iter()
+        .find(|(n, _, _)| *n == name)
+        .map(|(_, kind, help)| (*kind, *help))
+}
+
 /// Incremental Prometheus text-format builder.
 pub struct PromBuf {
     out: String,
@@ -27,6 +97,15 @@ impl PromBuf {
     /// `# HELP` + `# TYPE` header; `kind` ∈ `counter|gauge|histogram`.
     pub fn header(&mut self, name: &str, kind: &str, help: &str) {
         self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    /// Header for a family registered in [`METRIC_FAMILIES`] — the only
+    /// way serve handlers emit `repro_*` headers, so an unregistered
+    /// name fails loudly at scrape time (and statically via repro-lint).
+    pub fn family(&mut self, name: &str) {
+        let (kind, help) = metric_family(name)
+            .unwrap_or_else(|| panic!("metric family {name} is not in obs::prom::METRIC_FAMILIES"));
+        self.header(name, kind, help);
     }
 
     /// One sample line `name{labels} value`.
@@ -117,11 +196,11 @@ mod tests {
         h.record(1_000);   // 1 µs  → bucket 9, le 2^10 ns ≈ 1.024e-6 s
         h.record(1_000_000); // 1 ms
         let mut p = PromBuf::new();
-        p.histogram_ns("repro_req", &[("op", "ping")], &h);
+        p.histogram_ns("req_seconds", &[("op", "ping")], &h);
         let text = p.finish();
-        assert!(text.contains("repro_req_bucket{op=\"ping\",le=\"+Inf\"} 2\n"));
-        assert!(text.contains("repro_req_count{op=\"ping\"} 2\n"));
-        assert!(text.contains(&format!("repro_req_sum{{op=\"ping\"}} {}", 1_001_000.0 / 1e9)));
+        assert!(text.contains("req_seconds_bucket{op=\"ping\",le=\"+Inf\"} 2\n"));
+        assert!(text.contains("req_seconds_count{op=\"ping\"} 2\n"));
+        assert!(text.contains(&format!("req_seconds_sum{{op=\"ping\"}} {}", 1_001_000.0 / 1e9)));
         // cumulative: every bucket line's count is non-decreasing
         let mut last = 0u64;
         for line in text.lines().filter(|l| l.contains("_bucket")) {
@@ -139,5 +218,36 @@ mod tests {
         let mut p = PromBuf::new();
         p.sample("x", &[("tag", "a\"b\\c\nd")], 1.0);
         assert_eq!(p.finish(), "x{tag=\"a\\\"b\\\\c\\nd\"} 1\n");
+    }
+
+    #[test]
+    fn metric_family_registry_is_unique_and_well_kinded() {
+        for (i, (name, kind, help)) in METRIC_FAMILIES.iter().enumerate() {
+            assert!(name.starts_with("repro_"), "family {name} outside the repro_ namespace");
+            assert!(
+                matches!(*kind, "counter" | "gauge" | "histogram"),
+                "family {name} has unknown kind {kind}"
+            );
+            assert!(!help.is_empty(), "family {name} has empty help");
+            for (other, _, _) in &METRIC_FAMILIES[i + 1..] {
+                assert_ne!(name, other, "duplicate metric family {name}");
+            }
+        }
+    }
+
+    #[test]
+    fn family_renders_registered_headers() {
+        let mut p = PromBuf::new();
+        p.family("repro_requests_total");
+        let text = p.finish();
+        assert!(text.contains("# TYPE repro_requests_total counter\n"), "{text}");
+        assert!(text.contains("# HELP repro_requests_total "), "{text}");
+    }
+
+    #[test]
+    #[should_panic(expected = "not in obs::prom::METRIC_FAMILIES")]
+    fn family_panics_on_unregistered_name() {
+        // lint: allow(metric-name) deliberately unregistered: this test pins the panic path
+        PromBuf::new().family("repro_not_a_family");
     }
 }

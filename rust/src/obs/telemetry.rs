@@ -26,6 +26,9 @@
 //!   into execution; the `threads {1,7}` bit-identity grid in
 //!   `rust/tests/exec.rs` runs with obs on and off.
 
+// Clock reads are deliberate here (phase timing is this module's purpose) — see clippy.toml.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use crate::obs::hist::Histogram;

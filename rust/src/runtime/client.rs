@@ -9,6 +9,9 @@
 //! typed values, accumulating wall-clock stats per artifact (surfaced by
 //! `repro inspect-artifacts` and the §Perf pass).
 
+// Clock reads are deliberate here (compile/execute timing diagnostics) — see clippy.toml.
+#![allow(clippy::disallowed_methods)]
+
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;

@@ -24,13 +24,13 @@
 
 use anyhow::{bail, Result};
 
+use crate::tensor::rng::domains::{FLT_DROP, FLT_PANIC, FLT_TORN};
 use crate::tensor::rng::Rng;
 
-/// Stream-domain tags keeping the three fault families statistically
-/// independent of each other (and of every trainer RNG stream).
-const STREAM_PANIC: u64 = 0x464C_545F_50414E49; // "FLT_PANI"
-const STREAM_TORN: u64 = 0x464C_545F_544F524E; // "FLT_TORN"
-const STREAM_DROP: u64 = 0x464C_545F_4452_4F50; // "FLT_DROP"
+// The three fault-family stream-domain tags live in the central
+// registry (`tensor::rng::domains`, repro-lint rule R1) — the same
+// values as the historical local constants, now collision-checked
+// against every trainer stream.
 
 /// A deterministic fault-injection schedule. Rates are per-mille
 /// (0..=1000) per opportunity: `panic` per (job, epoch boundary),
@@ -107,17 +107,17 @@ impl FaultPlan {
 
     /// Should the worker running `job_id` panic at the end of `epoch`?
     pub fn worker_panic(&self, job_id: u64, epoch: u64) -> bool {
-        self.roll(STREAM_PANIC, job_id, epoch, self.panic_per_mille)
+        self.roll(FLT_PANIC, job_id, epoch, self.panic_per_mille)
     }
 
     /// Should the registry persist of `job_id` write a torn file?
     pub fn torn_write(&self, job_id: u64) -> bool {
-        self.roll(STREAM_TORN, job_id, 0, self.torn_per_mille)
+        self.roll(FLT_TORN, job_id, 0, self.torn_per_mille)
     }
 
     /// Should connection `conn_id` drop before writing response `frame`?
     pub fn drop_connection(&self, conn_id: u64, frame: u64) -> bool {
-        self.roll(STREAM_DROP, conn_id, frame, self.drop_per_mille)
+        self.roll(FLT_DROP, conn_id, frame, self.drop_per_mille)
     }
 }
 

@@ -7,6 +7,9 @@
 //! mistakes (unknown job id, malformed config, full queue) become
 //! `ok:false` envelopes, never a closed connection or a panic.
 
+// Clock reads are deliberate here (request timing/uptime for the metrics op) — see clippy.toml.
+#![allow(clippy::disallowed_methods)]
+
 use std::collections::HashMap;
 use std::net::IpAddr;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -510,34 +513,30 @@ impl ServerState {
     /// renamed or removed.
     fn prometheus_text(&self, g: &Gauges) -> String {
         let mut p = PromBuf::new();
-        p.header("repro_uptime_seconds", "gauge", "Server uptime in seconds.");
+        p.family("repro_uptime_seconds");
         p.sample("repro_uptime_seconds", &[], g.uptime);
-        p.header("repro_requests_total", "counter", "Protocol requests handled, all ops.");
+        p.family("repro_requests_total");
         p.sample("repro_requests_total", &[], g.requests_total as f64);
-        p.header("repro_queue_depth", "gauge", "Jobs accepted but not yet running.");
+        p.family("repro_queue_depth");
         p.sample("repro_queue_depth", &[], g.queue_depth as f64);
-        p.header("repro_slots_total", "gauge", "Training-thread slot budget (--workers).");
+        p.family("repro_slots_total");
         p.sample("repro_slots_total", &[], g.slots_total as f64);
-        p.header("repro_slots_busy", "gauge", "Slots held by running jobs (threads, not jobs).");
+        p.family("repro_slots_busy");
         p.sample("repro_slots_busy", &[], g.slots_busy as f64);
-        p.header("repro_slots_free", "gauge", "Slots not held by running jobs.");
+        p.family("repro_slots_free");
         p.sample("repro_slots_free", &[], g.slots_free as f64);
-        p.header("repro_utilization_ratio", "gauge", "Busy fraction of the slot budget.");
+        p.family("repro_utilization_ratio");
         p.sample("repro_utilization_ratio", &[], g.utilization);
-        p.header("repro_pool_workers_busy", "gauge", "Pool workers currently driving a job.");
+        p.family("repro_pool_workers_busy");
         p.sample("repro_pool_workers_busy", &[], g.pool_busy as f64);
-        p.header("repro_pool_tasks_pending", "gauge", "Jobs queued in the worker pool.");
+        p.family("repro_pool_tasks_pending");
         p.sample("repro_pool_tasks_pending", &[], g.pool_pending as f64);
         // resilience families (protocol v8): always headered and fully
         // sampled (zeros included) so alerting rules never see a family
         // appear out of nowhere
-        p.header(
-            "repro_health_status",
-            "gauge",
-            "1 when the server is accepting submits and the queue has headroom, else 0.",
-        );
+        p.family("repro_health_status");
         p.sample("repro_health_status", &[], if self.healthy_now() { 1.0 } else { 0.0 });
-        p.header("repro_rejected_total", "counter", "Rejected submits by reason.");
+        p.family("repro_rejected_total");
         for (reason, n) in REJECT_REASONS.iter().zip(self.rejected.iter()) {
             p.sample(
                 "repro_rejected_total",
@@ -545,9 +544,9 @@ impl ServerState {
                 n.load(Ordering::Relaxed) as f64,
             );
         }
-        p.header("repro_connections_open", "gauge", "Open client connections.");
+        p.family("repro_connections_open");
         p.sample("repro_connections_open", &[], self.connections_open() as f64);
-        p.header("repro_jobs_total", "gauge", "Jobs by lifecycle state.");
+        p.family("repro_jobs_total");
         for (state, n) in [
             ("queued", g.counts.queued),
             ("running", g.counts.running),
@@ -557,11 +556,7 @@ impl ServerState {
         ] {
             p.sample("repro_jobs_total", &[("state", state)], n as f64);
         }
-        p.header(
-            "repro_request_latency_seconds",
-            "histogram",
-            "Request handling latency by op.",
-        );
+        p.family("repro_request_latency_seconds");
         for (name, h) in OP_NAMES.iter().zip(self.op_lat.iter()) {
             let h = h.snapshot();
             if !h.is_empty() {
@@ -569,15 +564,11 @@ impl ServerState {
             }
         }
         let rollup = self.registry.rollup();
-        p.header("repro_policy_jobs_total", "counter", "Completed jobs touching each policy.");
+        p.family("repro_policy_jobs_total");
         for r in &rollup {
             p.sample("repro_policy_jobs_total", &[("policy", r.policy.name())], r.jobs as f64);
         }
-        p.header(
-            "repro_policy_backward_flops_total",
-            "counter",
-            "Backward weight-gradient FLOPs actually spent, by policy.",
-        );
+        p.family("repro_policy_backward_flops_total");
         for r in &rollup {
             p.sample(
                 "repro_policy_backward_flops_total",
@@ -585,11 +576,7 @@ impl ServerState {
                 r.backward_flops as f64,
             );
         }
-        p.header(
-            "repro_policy_exact_flops_total",
-            "counter",
-            "What exact back-propagation would have spent, by policy.",
-        );
+        p.family("repro_policy_exact_flops_total");
         for r in &rollup {
             p.sample(
                 "repro_policy_exact_flops_total",
@@ -597,11 +584,7 @@ impl ServerState {
                 r.exact_flops as f64,
             );
         }
-        p.header(
-            "repro_policy_saved_ratio",
-            "gauge",
-            "Fraction of exact backward FLOPs saved, by policy.",
-        );
+        p.family("repro_policy_saved_ratio");
         for r in &rollup {
             p.sample("repro_policy_saved_ratio", &[("policy", r.policy.name())], r.saved_frac());
         }
@@ -609,51 +592,30 @@ impl ServerState {
         // audit, one sample per layer. Jobs that never audited (no
         // `audit` cadence in their config) export nothing.
         let audits = self.registry.audit_snapshots();
-        p.header(
-            "repro_audit_epoch",
-            "gauge",
-            "Epoch of the job's most recent gradient-fidelity audit.",
-        );
+        p.family("repro_audit_epoch");
         for (id, epoch, _) in &audits {
             p.sample("repro_audit_epoch", &[("job", &id.to_string())], *epoch as f64);
         }
-        let audit_family = |p: &mut PromBuf, name: &str, help: &str, get: &dyn Fn(&crate::obs::AuditLayerRecord) -> f64| {
-            p.header(name, "gauge", help);
-            for (id, _, recs) in &audits {
-                let jid = id.to_string();
-                for r in recs {
-                    let layer = r.layer.to_string();
-                    p.sample(name, &[("job", &jid), ("layer", &layer)], get(r));
+        // HELP/TYPE text lives in `obs::prom::METRIC_FAMILIES` (rule R5)
+        let audit_family =
+            |p: &mut PromBuf, name: &str, get: &dyn Fn(&crate::obs::AuditLayerRecord) -> f64| {
+                p.family(name);
+                for (id, _, recs) in &audits {
+                    let jid = id.to_string();
+                    for r in recs {
+                        let layer = r.layer.to_string();
+                        p.sample(name, &[("job", &jid), ("layer", &layer)], get(r));
+                    }
                 }
-            }
-        };
-        audit_family(
-            &mut p,
-            "repro_audit_cosine",
-            "Cosine similarity of the Mem-AOP update vs the exact same-batch gradient, per layer.",
-            &|r| r.cosine,
-        );
-        audit_family(
-            &mut p,
-            "repro_audit_rel_err",
-            "Relative Frobenius error of the Mem-AOP update vs the exact gradient, per layer.",
-            &|r| r.rel_err,
-        );
-        audit_family(
-            &mut p,
-            "repro_audit_mem_bias",
-            "Relative deviation of the memory-corrected update from the raw outer product, per layer.",
-            &|r| r.mem_bias,
-        );
+            };
+        audit_family(&mut p, "repro_audit_cosine", &|r| r.cosine);
+        audit_family(&mut p, "repro_audit_rel_err", &|r| r.rel_err);
+        audit_family(&mut p, "repro_audit_mem_bias", &|r| r.mem_bias);
         // mixed-precision footprint (protocol v7): backward-read bytes
         // of each job's stored forward traces at batch M, summed over
         // the resolved (post-pin) layer plan. All-f32 jobs export
         // nothing — they are the uncompressed baseline.
-        p.header(
-            "repro_trace_bytes",
-            "gauge",
-            "Backward-read forward-trace bytes per job (quantized-trace jobs only).",
-        );
+        p.family("repro_trace_bytes");
         for v in self.registry.views() {
             let plan = v.config.layer_plan();
             if plan.iter().any(|rl| rl.trace != TraceMode::F32) {

@@ -115,6 +115,9 @@
 //! [`Client`] is a small blocking client used by `examples/serve_client.rs`
 //! and the integration tests.
 
+// Clock reads are deliberate here (client-side retry backoff timing) — see clippy.toml.
+#![allow(clippy::disallowed_methods)]
+
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
@@ -353,8 +356,9 @@ impl Default for RetryPolicy {
     }
 }
 
-/// Stream-domain tag for retry jitter (independent of trainer streams).
-const STREAM_RETRY: u64 = 0x434C_545F_5254_5259; // "CLT_RTRY"
+// The retry-jitter stream-domain tag lives in the central registry
+// (`tensor::rng::domains::STREAM_RETRY`, repro-lint rule R1) — same
+// value as the historical local constant, now collision-checked.
 
 /// Delay before retry number `attempt` (1-based): the server's
 /// `retry_after_ms` hint when given, else exponential backoff from
@@ -369,8 +373,11 @@ pub fn retry_delay(policy: &RetryPolicy, attempt: u32, retry_after_ms: Option<u6
     let jitter = if base == 0 {
         0
     } else {
-        let mut rng =
-            crate::tensor::rng::Rng::for_stream(policy.seed ^ STREAM_RETRY, 0, u64::from(attempt));
+        let mut rng = crate::tensor::rng::Rng::for_stream(
+            policy.seed ^ crate::tensor::rng::domains::STREAM_RETRY,
+            0,
+            u64::from(attempt),
+        );
         rng.next_u64() % (base / 2 + 1)
     };
     Duration::from_millis(base + jitter)

@@ -27,6 +27,9 @@
 //! boundaries (overruns finalize as `failed: timeout`, releasing the
 //! slots) and injects [`FaultPlan`] worker panics for chaos testing.
 
+// Clock reads are deliberate here (queue-wait accounting) — see clippy.toml.
+#![allow(clippy::disallowed_methods)]
+
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};

@@ -8,6 +8,9 @@
 //! rank-3 JSON bytes entries) next to the final weights — so a restarted
 //! server reloads its history and keeps allocating fresh ids above it.
 
+// Clock reads are deliberate here (job lifecycle timestamps) — see clippy.toml.
+#![allow(clippy::disallowed_methods)]
+
 use std::collections::{BTreeMap, VecDeque};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};

@@ -18,6 +18,9 @@
 //! [`FaultPlan`] can deterministically drop connections before a reply
 //! is written, for chaos testing the client retry path.
 
+// Clock reads are deliberate here (connection deadlines and graceful-shutdown timing) — see clippy.toml.
+#![allow(clippy::disallowed_methods)]
+
 use std::io::{BufReader, ErrorKind};
 use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;

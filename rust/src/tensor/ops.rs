@@ -531,6 +531,7 @@ pub fn masked_outer_compact(x: &Matrix, g: &Matrix, selected: &[(usize, f32)]) -
 pub fn row_scale(a: &Matrix, keep: &[f32]) -> Matrix {
     let (m, _) = a.shape();
     assert_eq!(keep.len(), m);
+    // lint: allow(hot-path-alloc) Pallas-twin reference path; the step updates memory in place via keep_rows workspace kernels
     let mut out = a.clone();
     for r in 0..m {
         let k = keep[r];
@@ -549,6 +550,7 @@ pub fn norm_product_scores(x: &Matrix, g: &Matrix) -> Vec<f32> {
         .into_iter()
         .zip(g.row_norms())
         .map(|(a, b)| a * b)
+        // lint: allow(hot-path-alloc) Pallas-twin reference path; the step scores rows into workspace buffers via score_rows_acc
         .collect()
 }
 

@@ -59,6 +59,7 @@ impl TraceMode {
     /// serve submits fail structured instead of panicking downstream.
     pub fn parse_or_suggest(s: &str) -> Result<TraceMode, String> {
         TraceMode::parse(s)
+            // lint: allow(hot-path-alloc) config-parse error path, runs once per submit
             .ok_or_else(|| format!("unknown trace mode '{s}' (expected one of: f32, bf16, q8)"))
     }
 
@@ -108,6 +109,7 @@ impl AccumMode {
 
     pub fn parse_or_suggest(s: &str) -> Result<AccumMode, String> {
         AccumMode::parse(s).ok_or_else(|| {
+            // lint: allow(hot-path-alloc) config-parse error path, runs once per submit
             format!("unknown accumulation mode '{s}' (expected one of: f32, f64, kahan)")
         })
     }
@@ -230,13 +232,16 @@ impl TraceBuf {
             TraceMode::Bf16 => TraceBuf::Bf16 {
                 rows,
                 cols,
+                // lint: allow(hot-path-alloc) workspace constructor, runs once at build time; steps reuse the buffers
                 codes: vec![0; rows * cols],
                 stage: Matrix::zeros(rows, cols),
             },
             TraceMode::Q8 => TraceBuf::Q8 {
                 rows,
                 cols,
+                // lint: allow(hot-path-alloc) workspace constructor, runs once at build time; steps reuse the buffers
                 steps: vec![0.0; rows],
+                // lint: allow(hot-path-alloc) workspace constructor, runs once at build time; steps reuse the buffers
                 codes: vec![0; rows * cols],
                 stage: Matrix::zeros(rows, cols),
             },

@@ -10,6 +10,47 @@
 //! in `rust/tests/native_vs_hlo.rs`, so every stochastic choice flows
 //! through this generator with an explicit seed.
 
+/// Registry of RNG stream-domain constants (repro-lint rule R1).
+///
+/// Every [`Rng::for_stream`] call site that XORs a domain tag into its
+/// seed must take that tag from this table: `for_stream(seed ^ DOMAIN,
+/// stream, counter)`. The table is the *whole* domain space — a
+/// collision here would silently correlate two components' draws (e.g.
+/// policy selection with fault injection), breaking the determinism
+/// contract without failing a single test. Uniqueness is enforced twice:
+/// by the `domain_values_are_unique` unit test below, and statically by
+/// `cargo run -p repro-lint -- rust/src`, which also rejects bare
+/// numeric domains and `STREAM_*`/`FLT_*` constants declared anywhere
+/// else in the tree.
+///
+/// This file (including its unit tests, which construct raw streams on
+/// purpose) is the one place raw stream keys are legal.
+pub mod domains {
+    /// Per-step policy-selection draws: keyed `(seed ^ STREAM_POLICY,
+    /// epoch, step)` by the experiment loop. The value is the historical
+    /// bare constant from `coordinator/experiment.rs`, registered
+    /// bit-identically.
+    pub const STREAM_POLICY: u64 = 0x9011C4;
+    /// Client-side submit-retry jitter (serve protocol `retry_delay`).
+    pub const STREAM_RETRY: u64 = 0x434C_545F_5254_5259; // "CLT_RTRY"
+    /// Fault injection: worker panic at an epoch boundary.
+    pub const FLT_PANIC: u64 = 0x464C_545F_50414E49; // "FLT_PANI"
+    /// Fault injection: torn (half-written) registry persist.
+    pub const FLT_TORN: u64 = 0x464C_545F_544F524E; // "FLT_TORN"
+    /// Fault injection: connection dropped before the response.
+    pub const FLT_DROP: u64 = 0x464C_545F_4452_4F50; // "FLT_DROP"
+
+    /// The full table, in declaration order — what the uniqueness test
+    /// and any future introspection (MEM-DFA feedback streams) walk.
+    pub const ALL: &[(&str, u64)] = &[
+        ("STREAM_POLICY", STREAM_POLICY),
+        ("STREAM_RETRY", STREAM_RETRY),
+        ("FLT_PANIC", FLT_PANIC),
+        ("FLT_TORN", FLT_TORN),
+        ("FLT_DROP", FLT_DROP),
+    ];
+}
+
 /// xoshiro256++ generator.
 #[derive(Debug, Clone)]
 pub struct Rng {
@@ -421,5 +462,36 @@ mod tests {
         let mut a = r.fork(1);
         let mut b = r.fork(2);
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn domain_values_are_unique() {
+        // the runtime twin of repro-lint rule R1: a duplicate value in
+        // the registry correlates two components' stream domains
+        for (i, (name_a, val_a)) in domains::ALL.iter().enumerate() {
+            for (name_b, val_b) in &domains::ALL[i + 1..] {
+                assert_ne!(
+                    val_a, val_b,
+                    "stream domains {name_a} and {name_b} collide on {val_a:#x}"
+                );
+                assert_ne!(name_a, name_b, "duplicate domain name {name_a}");
+            }
+        }
+    }
+
+    #[test]
+    fn registered_domains_yield_distinct_streams() {
+        // XOR-ing any two distinct registered domains into the same base
+        // seed must produce decorrelated first draws
+        let vals: Vec<u64> = domains::ALL.iter().map(|(_, v)| *v).collect();
+        for (i, &a) in vals.iter().enumerate() {
+            for &b in &vals[i + 1..] {
+                assert_ne!(
+                    Rng::for_stream(7 ^ a, 0, 0).next_u64(),
+                    Rng::for_stream(7 ^ b, 0, 0).next_u64(),
+                    "domains {a:#x} and {b:#x} produced identical streams"
+                );
+            }
+        }
     }
 }

@@ -259,9 +259,11 @@ pub fn fwd_score(
                     shard::scale_rows(g, se, rows.clone(), gh);
                 }
                 if need_scores {
+                    // SAFETY: same claim — run_each hands out `si` once
                     let sc = unsafe { sc_blocks.block(si) };
                     shard::score_rows_acc(xh, gh, nf, pf, sc, accum);
                 }
+                // SAFETY: same claim — run_each hands out `si` once
                 let db_blk = unsafe { db_blocks.block(si) };
                 shard::col_sums_rows_into_acc(shard::rows_of(g, rows), pf, &mut db_blk[..pf], accum);
             });
@@ -391,6 +393,7 @@ pub fn select_with_configs(
     let mut sels: Vec<Selection> = scores
         .iter()
         .map(|s| Selection::with_capacity(s.len()))
+        // lint: allow(hot-path-alloc) trait-path wrapper: the zero-alloc step draws into workspace-owned selections via select_layers_ws
         .collect();
     for i in (0..n).rev() {
         select_one_into(&cfgs[i], scores[i], rng, &mut scratch, &mut sels[i]);
@@ -766,6 +769,7 @@ pub fn aop_weight_grad_ws(
     if ops::aop_transposed(nf, pf) {
         ws.wstar[li].transpose()
     } else {
+        // lint: allow(hot-path-alloc) optimizer path returns an owned gradient by contract (see doc comment); the steady-state step applies in place
         ws.wstar[li].clone()
     }
 }

@@ -6,6 +6,9 @@
 //! machine-readable JSONL sink under `results/bench/` so the figure
 //! harness and EXPERIMENTS.md can quote numbers verbatim.
 
+// Clock reads are deliberate here (benchmark timing is this module's purpose) — see clippy.toml.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::{Duration, Instant};
 
 use crate::util::json::{self, Json};

@@ -15,6 +15,9 @@
 //!   pass removed. Shutdown is graceful: the queue is drained before
 //!   the workers exit.
 
+// Clock reads are deliberate here (condvar wait deadlines) — see clippy.toml.
+#![allow(clippy::disallowed_methods)]
+
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};

@@ -7,6 +7,9 @@
 //! same configs, and the persistent run registry survives a full server
 //! restart.
 
+// Clock reads are deliberate here (test deadlines and polling timeouts) — see clippy.toml.
+#![allow(clippy::disallowed_methods)]
+
 use std::path::PathBuf;
 use std::time::Duration;
 
